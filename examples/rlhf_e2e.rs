@@ -1,0 +1,174 @@
+//! End-to-end RLHF training driver — the full-system validation run.
+//!
+//! Trains a transformer from scratch with the complete RLHFSpec stack:
+//! LM pretraining → SSM distillation → reward-model training → RLHF
+//! iterations (speculative generation → inference → PPO training), with
+//! per-iteration loss/reward curves logged and written to
+//! `runs/rlhf_e2e_<config>.json`. The recorded runs live in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! make artifacts                                        # tiny + small
+//! cargo run --release --example rlhf_e2e                # small config
+//! cargo run --release --example rlhf_e2e -- --artifacts artifacts/tiny --iters 4
+//! ```
+
+use std::path::PathBuf;
+
+use rlhfspec::config::RunConfig;
+use rlhfspec::coordinator::instance::DecodeMode;
+use rlhfspec::rlhf::RlhfPipeline;
+use rlhfspec::utils::cli::Args;
+use rlhfspec::utils::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts/small"));
+    let corpus = args.get_or("corpus", "gsm8k");
+    let iters = args.usize_or("iters", 12);
+    let pretrain = args.usize_or("pretrain", 150);
+    let distill = args.usize_or("distill", 120);
+    let reward_steps = args.usize_or("reward-steps", 40);
+    let seed = args.u64_or("seed", 7);
+
+    let mut cfg = RunConfig::default();
+    cfg.seed = seed;
+    cfg.rlhf.instances = args.usize_or("instances", 2);
+    cfg.rlhf.samples_per_iter = args.usize_or("samples", 16);
+    cfg.rlhf.max_new_tokens = args.usize_or("max-new", 48);
+    cfg.rlhf.lr = 2e-4;
+    cfg.spec.max_depth = 4;
+    cfg.spec.max_draft = 16;
+    cfg.realloc.cooldown = 6;
+    cfg.realloc.threshold = 3;
+    let mode = match args.get_or("mode", "adaptive").as_str() {
+        "ar" => DecodeMode::Ar,
+        m if m.starts_with("static") => DecodeMode::StaticSpec(8),
+        _ => DecodeMode::Adaptive,
+    };
+
+    let mut p = RlhfPipeline::new(&dir, cfg, &corpus, seed)?;
+    println!(
+        "== RLHFSpec e2e: config={} corpus={corpus} actor={} params draft={} params ==",
+        p.manifest.config_name,
+        p.manifest.target.n_params(),
+        p.manifest.draft.n_params()
+    );
+
+    // Warm-up checkpoints: reuse across runs unless --fresh.
+    std::fs::create_dir_all("runs").ok();
+    let cfg_name = p.manifest.config_name.clone();
+    let corpus_name = corpus.clone();
+    let ck = move |m: &str| format!("runs/ckpt_{cfg_name}_{corpus_name}_{m}.bin");
+    let have_ckpt = ["actor", "draft", "reward"]
+        .iter()
+        .all(|m| std::path::Path::new(&ck(m)).exists());
+    let mut lm = Vec::new();
+    let mut dl = Vec::new();
+    if have_ckpt && !args.flag("fresh") {
+        println!("[warmup  ] loading checkpoints from runs/ (use --fresh to retrain)");
+        p.actor.load(std::path::Path::new(&ck("actor")))?;
+        p.draft.load(std::path::Path::new(&ck("draft")))?;
+        p.reward.load(std::path::Path::new(&ck("reward")))?;
+        p.freeze_reference()?;
+    } else {
+        // Phase 1: LM pretraining (stands in for a pretrained ckpt).
+        let t0 = std::time::Instant::now();
+        lm = p.pretrain_actor(pretrain, 3e-3)?;
+        println!(
+            "[pretrain] {} steps, loss {:.3} → {:.3} ({:.1}s)",
+            lm.len(),
+            lm[0],
+            lm.last().unwrap(),
+            t0.elapsed().as_secs_f64()
+        );
+        p.freeze_reference()?;
+
+        // Phase 2: distill the draft SSM (earns the Fig-7 correlation).
+        let t0 = std::time::Instant::now();
+        dl = p.distill_draft(distill, 3e-3)?;
+        println!(
+            "[distill ] {} steps, KL {:.3} → {:.3} ({:.1}s)",
+            dl.len(),
+            dl[0],
+            dl.last().unwrap(),
+            t0.elapsed().as_secs_f64()
+        );
+
+        // Phase 3: Bradley-Terry reward model.
+        let rl = p.train_reward(reward_steps, 3e-3)?;
+        println!("[reward  ] {} steps, BT loss {:.3} → {:.3}", rl.len(), rl[0], rl.last().unwrap());
+        p.actor.save(std::path::Path::new(&ck("actor")))?;
+        p.draft.save(std::path::Path::new(&ck("draft")))?;
+        p.reward.save(std::path::Path::new(&ck("reward")))?;
+    }
+
+    // Phase 4: the RLHF loop.
+    p.start_generation(mode)?;
+    println!(
+        "\n{:>4} {:>8} {:>9} {:>9} {:>6} {:>8} {:>8} {:>8} {:>7} {:>5}",
+        "iter", "gen(s)", "infer(s)", "train(s)", "gen%", "reward", "resp-len", "ppoloss", "accept", "mig"
+    );
+    let mut history = Vec::new();
+    for _ in 0..iters {
+        let (st, report) = p.iteration()?;
+        println!(
+            "{:>4} {:>8.2} {:>9.2} {:>9.2} {:>5.1}% {:>8.3} {:>8.1} {:>8.4} {:>6.1}% {:>5}",
+            st.iter,
+            st.gen_secs,
+            st.infer_secs,
+            st.train_secs,
+            100.0 * st.gen_fraction(),
+            st.mean_reward,
+            st.mean_response_len,
+            st.ppo_loss,
+            100.0 * st.accept_rate,
+            report.migrations,
+        );
+        history.push(st);
+    }
+    p.stop_generation();
+
+    // Reward trend over the run.
+    let k = (history.len() / 3).max(1);
+    let early: f64 = history.iter().take(k).map(|s| s.mean_reward).sum::<f64>() / k as f64;
+    let late: f64 =
+        history.iter().rev().take(k).map(|s| s.mean_reward).sum::<f64>() / k as f64;
+    println!("\nmean reward: first third {early:.3} → last third {late:.3}");
+    let gen_share: f64 =
+        history.iter().map(|s| s.gen_fraction()).sum::<f64>() / history.len() as f64;
+    println!("mean generation share of iteration: {:.1}%", 100.0 * gen_share);
+
+    // Persist the run record.
+    std::fs::create_dir_all("runs").ok();
+    let rows: Vec<Json> = history
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("iter", Json::num(s.iter as f64)),
+                ("gen_secs", Json::num(s.gen_secs)),
+                ("infer_secs", Json::num(s.infer_secs)),
+                ("train_secs", Json::num(s.train_secs)),
+                ("mean_reward", Json::num(s.mean_reward)),
+                ("resp_len", Json::num(s.mean_response_len)),
+                ("ppo_loss", Json::num(s.ppo_loss)),
+                ("kl", Json::num(s.kl)),
+                ("value_loss", Json::num(s.value_loss)),
+                ("accept_rate", Json::num(s.accept_rate)),
+            ])
+        })
+        .collect();
+    let record = Json::obj(vec![
+        ("config", Json::str(&p.manifest.config_name)),
+        ("corpus", Json::str(&corpus)),
+        ("seed", Json::num(seed as f64)),
+        ("actor_params", Json::num(p.manifest.target.n_params() as f64)),
+        ("pretrain_loss", Json::arr_f64(&lm.iter().map(|&x| x as f64).collect::<Vec<_>>())),
+        ("distill_loss", Json::arr_f64(&dl.iter().map(|&x| x as f64).collect::<Vec<_>>())),
+        ("iterations", Json::Arr(rows)),
+    ]);
+    let path = format!("runs/rlhf_e2e_{}.json", p.manifest.config_name);
+    std::fs::write(&path, record.to_string())?;
+    println!("run record written to {path}");
+    Ok(())
+}

@@ -1,0 +1,346 @@
+"""AOT pipeline: lower every L2 step function to HLO **text** artifacts.
+
+Runs ONCE at build time (``make artifacts``); the rust coordinator then
+loads ``artifacts/<config>/*.hlo.txt`` via ``HloModuleProto::from_text_file``
+and never touches python again.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Alongside the HLO files we emit ``manifest.json`` describing, for every
+artifact, the exact positional argument list (weights are symbolic groups
+expanded from the per-model weight spec) and output shapes, so the rust
+runtime can marshal literals generically.
+
+Artifact inventory per config (see DESIGN.md §4):
+
+* ``{target,draft}_tree_b{B}_t{T}``  — speculative tree forward (prefill /
+  decode / verify).  The KV *cache* is an input only; the new tree-token
+  KV rows are returned and committed host-side by rust (saves shipping the
+  whole cache back every step).
+* ``target_logits``      — distill targets, [B,S] → [B,S,V].
+* ``target_logprobs``    — reference/actor per-token log-probs.
+* ``critic_value``       — value per position.
+* ``reward_score``       — scalar reward per sequence.
+* ``target_train_lm``    — LM pretrain step (Adam).
+* ``draft_distill``      — KL distillation step (Adam).
+* ``target_ppo``         — PPO-clip actor step (Adam).
+* ``critic_train``       — value MSE step (Adam).
+* ``reward_train``       — Bradley-Terry step (Adam).
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import get_config, SystemConfig, TransformerConfig
+from . import model as M
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _ws_specs(cfg: TransformerConfig, head: str):
+    return [_spec(s) for _, s in M.weight_spec(cfg, head)]
+
+
+class Builder:
+    """Collects artifacts + manifest entries for one SystemConfig."""
+
+    def __init__(self, sys_cfg: SystemConfig, out_dir: str, attn: str):
+        self.cfg = sys_cfg
+        self.out = out_dir
+        self.attn = attn
+        self.manifest = {
+            "config": sys_cfg.to_dict(),
+            "attn": attn,
+            "weights": {},
+            "artifacts": {},
+        }
+        for mdl, tcfg, head in [
+            ("target", sys_cfg.target, "lm"),
+            ("draft", sys_cfg.draft, "lm"),
+            ("critic", sys_cfg.critic, "value"),
+            ("reward", sys_cfg.reward, "reward"),
+        ]:
+            self.manifest["weights"][mdl] = [
+                {"name": n, "shape": list(s)} for n, s in M.weight_spec(tcfg, head)
+            ]
+
+    def emit(self, name: str, fn, arg_specs, arg_desc):
+        """Lower ``fn`` at ``arg_specs`` and record a manifest entry."""
+        path = os.path.join(self.out, f"{name}.hlo.txt")
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.tree_util.tree_leaves(lowered.out_info)
+        out_desc = [{"shape": list(o.shape), "dtype": str(o.dtype)} for o in outs]
+        self.manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": arg_desc,
+            "outs": out_desc,
+        }
+        print(f"  {name}: {len(text)/1e6:.2f} MB, {len(arg_desc)} arg groups, "
+              f"{len(out_desc)} outs")
+
+    # ---- argument-description helpers (symbolic groups keep json small) --
+
+    @staticmethod
+    def g_weights(mdl):
+        return {"kind": "weights", "model": mdl}
+
+    @staticmethod
+    def g_array(name, shape, dtype="float32"):
+        return {"kind": "array", "name": name, "shape": list(shape), "dtype": dtype}
+
+    @staticmethod
+    def g_scalar(name, dtype="float32"):
+        return {"kind": "scalar", "name": name, "dtype": dtype}
+
+    # ----------------------------------------------------------------- tree
+
+    def build_tree(self, mdl: str, tcfg: TransformerConfig):
+        L, H, Dh, S = tcfg.n_layers, tcfg.n_heads, tcfg.d_head, tcfg.max_seq
+        for B in self.cfg.batch_buckets:
+            for T in self.cfg.tree_buckets:
+                name = f"{mdl}_tree_b{B}_t{T}"
+                fn = functools.partial(
+                    M.fwd_tree, tcfg, attn=self.attn, blk_k=self.cfg.blk_k
+                )
+
+                def wrapped(ws, kc, vc, tokens, positions, prefix_len, tree_mask,
+                            _fn=fn):
+                    return _fn(ws, kc, vc, tokens, positions, prefix_len, tree_mask)
+
+                specs = [
+                    _ws_specs(tcfg, "lm"),
+                    _spec((L, B, H, S, Dh)),
+                    _spec((L, B, H, S, Dh)),
+                    _spec((B, T), I32),
+                    _spec((B, T), I32),
+                    _spec((B,), I32),
+                    _spec((B, T, T)),
+                ]
+                desc = [
+                    self.g_weights(mdl),
+                    self.g_array("kc", (L, B, H, S, Dh)),
+                    self.g_array("vc", (L, B, H, S, Dh)),
+                    self.g_array("tokens", (B, T), "int32"),
+                    self.g_array("positions", (B, T), "int32"),
+                    self.g_array("prefix_len", (B,), "int32"),
+                    self.g_array("tree_mask", (B, T, T)),
+                ]
+                self.emit(name, wrapped, specs, desc)
+
+    # ------------------------------------------------------------ forwards
+
+    def build_forwards(self):
+        c = self.cfg
+        B, S = c.train_batch, c.train_seq
+
+        self.emit(
+            "target_logits",
+            functools.partial(M.logits_fwd, c.target),
+            [_ws_specs(c.target, "lm"), _spec((B, S), I32)],
+            [self.g_weights("target"), self.g_array("tokens", (B, S), "int32")],
+        )
+        self.emit(
+            "target_logprobs",
+            functools.partial(M.logprobs_fwd, c.target),
+            [_ws_specs(c.target, "lm"), _spec((B, S), I32)],
+            [self.g_weights("target"), self.g_array("tokens", (B, S), "int32")],
+        )
+        self.emit(
+            "critic_value",
+            functools.partial(M.value_fwd, c.critic),
+            [_ws_specs(c.critic, "value"), _spec((B, S), I32)],
+            [self.g_weights("critic"), self.g_array("tokens", (B, S), "int32")],
+        )
+        self.emit(
+            "reward_score",
+            functools.partial(M.reward_fwd, c.reward),
+            [_ws_specs(c.reward, "reward"), _spec((B, S), I32), _spec((B,), I32)],
+            [
+                self.g_weights("reward"),
+                self.g_array("tokens", (B, S), "int32"),
+                self.g_array("last_pos", (B,), "int32"),
+            ],
+        )
+
+    # ------------------------------------------------------------ training
+
+    def _train_args(self, mdl, tcfg, head, extra_specs, extra_desc):
+        ws = _ws_specs(tcfg, head)
+        specs = [ws, ws, ws, _spec(())] + extra_specs
+        desc = (
+            [
+                self.g_weights(mdl),
+                {"kind": "adam_m", "model": mdl},
+                {"kind": "adam_v", "model": mdl},
+                self.g_scalar("step"),
+            ]
+            + extra_desc
+        )
+        return specs, desc
+
+    def build_training(self):
+        c = self.cfg
+        B, S = c.train_batch, c.train_seq
+        V = c.target.vocab
+
+        specs, desc = self._train_args(
+            "target", c.target, "lm",
+            [_spec((B, S), I32), _spec((B, S)), _spec(())],
+            [self.g_array("tokens", (B, S), "int32"),
+             self.g_array("loss_mask", (B, S)),
+             self.g_scalar("lr")],
+        )
+        self.emit("target_train_lm",
+                  functools.partial(M.train_lm_step, c.target), specs, desc)
+
+        specs, desc = self._train_args(
+            "draft", c.draft, "lm",
+            [_spec((B, S), I32), _spec((B, S, V)), _spec((B, S)), _spec(())],
+            [self.g_array("tokens", (B, S), "int32"),
+             self.g_array("target_logits", (B, S, V)),
+             self.g_array("loss_mask", (B, S)),
+             self.g_scalar("lr")],
+        )
+        self.emit("draft_distill",
+                  functools.partial(M.distill_step, c.draft), specs, desc)
+
+        specs, desc = self._train_args(
+            "target", c.target, "lm",
+            [_spec((B, S), I32), _spec((B, S - 1)), _spec((B, S - 1)),
+             _spec((B, S)), _spec((B, S - 1)), _spec(()), _spec(()), _spec(()),
+             _spec(())],
+            [self.g_array("tokens", (B, S), "int32"),
+             self.g_array("old_logp", (B, S - 1)),
+             self.g_array("adv", (B, S - 1)),
+             self.g_array("mask", (B, S)),
+             self.g_array("ref_logp", (B, S - 1)),
+             self.g_scalar("lr"), self.g_scalar("clip_eps"),
+             self.g_scalar("kl_coef"), self.g_scalar("ent_coef")],
+        )
+        self.emit("target_ppo",
+                  functools.partial(M.ppo_step, c.target), specs, desc)
+
+        specs, desc = self._train_args(
+            "critic", c.critic, "value",
+            [_spec((B, S), I32), _spec((B, S)), _spec((B, S)), _spec(())],
+            [self.g_array("tokens", (B, S), "int32"),
+             self.g_array("returns", (B, S)),
+             self.g_array("mask", (B, S)),
+             self.g_scalar("lr")],
+        )
+        self.emit("critic_train",
+                  functools.partial(M.value_step, c.critic), specs, desc)
+
+        specs, desc = self._train_args(
+            "reward", c.reward, "reward",
+            [_spec((B, S), I32), _spec((B, S), I32), _spec((B,), I32),
+             _spec((B,), I32), _spec(())],
+            [self.g_array("tok_chosen", (B, S), "int32"),
+             self.g_array("tok_rejected", (B, S), "int32"),
+             self.g_array("last_c", (B,), "int32"),
+             self.g_array("last_r", (B,), "int32"),
+             self.g_scalar("lr")],
+        )
+        self.emit("reward_train",
+                  functools.partial(M.reward_bt_step, c.reward), specs, desc)
+
+    def finish(self):
+        path = os.path.join(self.out, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"  manifest.json: {len(self.manifest['artifacts'])} artifacts")
+
+
+def config_fingerprint(cfg: SystemConfig, attn: str) -> str:
+    """Hash of everything that determines artifact content (config + code)."""
+    h = hashlib.sha256()
+    h.update(json.dumps(cfg.to_dict(), sort_keys=True).encode())
+    h.update(attn.encode())
+    here = os.path.dirname(os.path.abspath(__file__))
+    for fname in ["model.py", "aot.py", "configs.py",
+                  os.path.join("kernels", "tree_attention.py"),
+                  os.path.join("kernels", "ref.py")]:
+        with open(os.path.join(here, fname), "rb") as f:
+            h.update(f.read())
+    return h.hexdigest()
+
+
+def build(config_name: str, out_root: str, attn: str = "pallas",
+          force: bool = False, only=None) -> str:
+    cfg = get_config(config_name)
+    out_dir = os.path.join(out_root, config_name)
+    os.makedirs(out_dir, exist_ok=True)
+    fp = config_fingerprint(cfg, attn)
+    stamp = os.path.join(out_dir, "build_info.json")
+    if not force and os.path.exists(stamp):
+        with open(stamp) as f:
+            if json.load(f).get("fingerprint") == fp:
+                print(f"[aot] {config_name}: up to date ({out_dir})")
+                return out_dir
+
+    print(f"[aot] building config={config_name} attn={attn} → {out_dir}")
+    b = Builder(cfg, out_dir, attn)
+    if only is None or "tree" in only:
+        b.build_tree("target", cfg.target)
+        b.build_tree("draft", cfg.draft)
+    if only is None or "fwd" in only:
+        b.build_forwards()
+    if only is None or "train" in only:
+        b.build_training()
+    b.finish()
+    with open(stamp, "w") as f:
+        json.dump({"fingerprint": fp, "config": config_name, "attn": attn}, f)
+    return out_dir
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--config", default="tiny,small",
+                   help="comma-separated config names (tiny|small|base)")
+    p.add_argument("--out", default=None,
+                   help="output root (default: <repo>/artifacts)")
+    p.add_argument("--attn", default="pallas", choices=["pallas", "ref"],
+                   help="attention impl for the generation hot path")
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--only", default=None,
+                   help="subset: comma of tree,fwd,train")
+    args = p.parse_args()
+
+    out_root = args.out
+    if out_root is None:
+        here = os.path.dirname(os.path.abspath(__file__))
+        out_root = os.path.normpath(os.path.join(here, "..", "..", "artifacts"))
+    only = args.only.split(",") if args.only else None
+    for name in args.config.split(","):
+        build(name.strip(), out_root, attn=args.attn, force=args.force, only=only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Model-size configurations for the RLHFSpec reproduction.
+
+Each named config describes the *target* (actor / reference) transformer,
+the *draft* (SSM) transformer distilled from it, and the critic / reward
+models, plus the static shape buckets the AOT pipeline compiles
+executables for.
+
+The paper's testbed uses Llama-3.1-8B + an EAGLE draft head; we substitute
+from-scratch transformers (see DESIGN.md §2).  ``tiny`` keeps the pytest
+cycle fast, ``small`` is the default real-path config, ``base`` is the
+~100M-class config for the headline e2e run.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import List
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    """Hyper-parameters of one GPT-style transformer."""
+
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int  # KV-cache capacity S (static executable shape)
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        """Parameter count (embedding + blocks + head, untied)."""
+        per_layer = 4 * self.d_model * self.d_model + 2 * self.d_model * self.d_ff
+        norms = self.n_layers * 2 * self.d_model + self.d_model
+        return (
+            2 * self.vocab * self.d_model
+            + self.n_layers * per_layer
+            + norms
+        )
+
+
+@dataclass(frozen=True)
+class SystemConfig:
+    """One full AOT build: all four RLHF models + shape buckets."""
+
+    name: str
+    target: TransformerConfig
+    draft: TransformerConfig
+    critic: TransformerConfig
+    reward: TransformerConfig
+    # Static shape buckets compiled as separate executables.
+    batch_buckets: List[int] = field(default_factory=lambda: [1, 2, 4, 8])
+    # T buckets for tree/prefill steps (number of tokens fed per call).
+    tree_buckets: List[int] = field(default_factory=lambda: [1, 8, 16, 32, 64, 96])
+    # A buckets for KV commits (tokens committed per call).
+    commit_buckets: List[int] = field(default_factory=lambda: [16, 96])
+    # Training-step static shapes.
+    train_batch: int = 4
+    train_seq: int = 256
+    # Pallas kernel K-tile along the cache axis (max_seq must divide).
+    blk_k: int = 128
+
+    def to_dict(self):
+        d = asdict(self)
+        d["target"]["d_head"] = self.target.d_head
+        d["draft"]["d_head"] = self.draft.d_head
+        d["critic"]["d_head"] = self.critic.d_head
+        d["reward"]["d_head"] = self.reward.d_head
+        return d
+
+
+def _tiny() -> SystemConfig:
+    t = TransformerConfig(vocab=64, d_model=32, n_layers=2, n_heads=2, d_ff=64, max_seq=64)
+    d = TransformerConfig(vocab=64, d_model=16, n_layers=1, n_heads=2, d_ff=32, max_seq=64)
+    return SystemConfig(
+        name="tiny",
+        target=t,
+        draft=d,
+        critic=d,
+        reward=d,
+        batch_buckets=[1, 2],
+        tree_buckets=[1, 4, 8, 16],
+        commit_buckets=[8, 16],
+        train_batch=2,
+        train_seq=32,
+        blk_k=32,
+    )
+
+
+def _small() -> SystemConfig:
+    t = TransformerConfig(vocab=512, d_model=256, n_layers=6, n_heads=8, d_ff=1024, max_seq=384)
+    d = TransformerConfig(vocab=512, d_model=128, n_layers=2, n_heads=4, d_ff=512, max_seq=384)
+    c = TransformerConfig(vocab=512, d_model=128, n_layers=2, n_heads=4, d_ff=512, max_seq=384)
+    return SystemConfig(
+        name="small",
+        target=t,
+        draft=d,
+        critic=c,
+        reward=c,
+        batch_buckets=[1, 2, 4, 8],
+        tree_buckets=[1, 8, 16, 32, 64, 96],
+        commit_buckets=[16, 96],
+        train_batch=4,
+        train_seq=256,
+        blk_k=128,
+    )
+
+
+def _base() -> SystemConfig:
+    """~100M-class target (85.6M blocks + 0.8M embeddings)."""
+    t = TransformerConfig(vocab=512, d_model=768, n_layers=12, n_heads=12, d_ff=3072, max_seq=512)
+    d = TransformerConfig(vocab=512, d_model=192, n_layers=3, n_heads=6, d_ff=768, max_seq=512)
+    c = TransformerConfig(vocab=512, d_model=192, n_layers=3, n_heads=6, d_ff=768, max_seq=512)
+    return SystemConfig(
+        name="base",
+        target=t,
+        draft=d,
+        critic=c,
+        reward=c,
+        batch_buckets=[1, 2, 4],
+        tree_buckets=[1, 8, 16, 32, 64, 96],
+        commit_buckets=[16, 96],
+        train_batch=2,
+        train_seq=256,
+        blk_k=128,
+    )
+
+
+CONFIGS = {
+    "tiny": _tiny(),
+    "small": _small(),
+    "base": _base(),
+}
+
+
+def get_config(name: str) -> SystemConfig:
+    if name not in CONFIGS:
+        raise KeyError(f"unknown config {name!r}; have {sorted(CONFIGS)}")
+    return CONFIGS[name]

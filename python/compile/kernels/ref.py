@@ -1,0 +1,64 @@
+"""Pure-jnp oracle for the tree-attention verification kernel.
+
+This is the dense, obviously-correct implementation the Pallas kernel is
+checked against (pytest + hypothesis sweeps in ``python/tests``).  It is
+also the attention used inside *training* step functions, where gradients
+must flow (``pallas_call`` has no autodiff rule).
+
+Semantics
+---------
+Query tokens are the ``T`` speculative-tree tokens of each sample.  Keys
+come from two places:
+
+* the committed KV cache ``kc/vc`` (positions ``[0, prefix_len)`` valid),
+* the tree tokens themselves, gated by ``tree_mask[b, i, j] == 1``
+  (``j`` is an ancestor-or-self of ``i`` in the draft tree).
+
+A single softmax runs over the concatenation, matching autoregressive
+attention when the tree degenerates to a causal chain.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def tree_attention_ref(q, kc, vc, kt, vt, prefix_len, tree_mask):
+    """Dense tree attention.
+
+    Args:
+      q:   [B, H, T, Dh] query projections of the tree tokens (RoPE applied).
+      kc:  [B, H, S, Dh] committed key cache (RoPE applied at commit time).
+      vc:  [B, H, S, Dh] committed value cache.
+      kt:  [B, H, T, Dh] keys of the tree tokens (RoPE applied).
+      vt:  [B, H, T, Dh] values of the tree tokens.
+      prefix_len: [B] int32, number of valid cache positions per sample.
+      tree_mask:  [B, T, T] float 0/1, ``[b, i, j] = 1`` iff tree token j is
+        visible to tree token i (ancestor-or-self).
+
+    Returns:
+      [B, H, T, Dh] attention outputs.
+    """
+    B, H, T, Dh = q.shape
+    S = kc.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, dtype=q.dtype))
+
+    # [B, H, T, S] scores against the cache.
+    sc = jnp.einsum("bhtd,bhsd->bhts", q, kc) * scale
+    pos = jnp.arange(S, dtype=jnp.int32)[None, None, None, :]
+    cache_ok = pos < prefix_len[:, None, None, None].astype(jnp.int32)
+    sc = jnp.where(cache_ok, sc, NEG_INF)
+
+    # [B, H, T, T] scores against the tree tokens.
+    st = jnp.einsum("bhtd,bhud->bhtu", q, kt) * scale
+    st = jnp.where(tree_mask[:, None, :, :] > 0.5, st, NEG_INF)
+
+    s = jnp.concatenate([sc, st], axis=-1)  # [B, H, T, S+T]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    # Zero out fully-masked entries so padding rows stay finite.
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    denom = jnp.maximum(denom, 1e-30)
+    v = jnp.concatenate([vc, vt], axis=2)  # [B, H, S+T, Dh]
+    return jnp.einsum("bhts,bhsd->bhtd", p / denom, v)

@@ -1,0 +1,137 @@
+"""L1 Pallas kernel: tree-masked flash attention for LLM verification.
+
+This is the paper's compute hot-spot (§5.2: verification cost =
+KV-cache-bound attention + draft-token-bound FFN).  The kernel fuses the
+two key sources of speculative verification into a single online-softmax
+attention pass per (batch, head):
+
+* **prefix phase** — the committed KV cache is streamed HBM→VMEM in
+  ``blk_k``-sized tiles along the sequence axis (flash-style running
+  max / denominator / accumulator), masked by ``prefix_len``;
+* **tree phase** — a final tile over the ``T`` speculative tokens,
+  masked by the ancestor matrix ``tree_mask`` so every tree branch
+  attends exactly to its own path.
+
+Hardware adaptation (CUDA paper → TPU, see DESIGN.md §3): the paper's
+threadblock KV-loading schedule becomes the BlockSpec grid + in-kernel
+tile loop; the per-tile VMEM footprint is ``O(T·Dh + blk_k·Dh)``
+independent of sequence length; all contractions are [T,Dh]×[Dh,blk_k]
+matmuls, which map onto the MXU systolic array.
+
+The kernel MUST run with ``interpret=True`` on this image: real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _tree_attn_kernel(
+    prefix_ref,  # [1] int32 (this sample's valid cache length)
+    q_ref,       # [1, 1, T, Dh]
+    kc_ref,      # [1, 1, S, Dh]
+    vc_ref,      # [1, 1, S, Dh]
+    kt_ref,      # [1, 1, T, Dh]
+    vt_ref,      # [1, 1, T, Dh]
+    mask_ref,    # [1, T, T] float 0/1 ancestor mask
+    o_ref,       # [1, 1, T, Dh]
+    *,
+    blk_k: int,
+):
+    T = q_ref.shape[2]
+    S = kc_ref.shape[2]
+    Dh = q_ref.shape[3]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, dtype=jnp.float32))
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32) * scale  # [T, Dh]
+    prefix_len = prefix_ref[0]
+
+    num_tiles = S // blk_k
+
+    def prefix_tile(i, carry):
+        """One HBM→VMEM K/V tile of the committed cache."""
+        m_i, l_i, acc = carry
+        k = pl.load(kc_ref, (0, 0, pl.dslice(i * blk_k, blk_k), slice(None)))
+        v = pl.load(vc_ref, (0, 0, pl.dslice(i * blk_k, blk_k), slice(None)))
+        s = jnp.dot(q, k.astype(jnp.float32).T)  # [T, blk_k] — MXU matmul
+        pos = i * blk_k + jax.lax.iota(jnp.int32, blk_k)
+        s = jnp.where((pos < prefix_len)[None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + jnp.dot(p, v.astype(jnp.float32))
+        return m_new, l_new, acc
+
+    m0 = jnp.full((T,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((T,), dtype=jnp.float32)
+    acc0 = jnp.zeros((T, Dh), dtype=jnp.float32)
+    m_i, l_i, acc = jax.lax.fori_loop(0, num_tiles, prefix_tile, (m0, l0, acc0))
+
+    # Tree phase: the T speculative tokens, gated by the ancestor mask.
+    kt = kt_ref[0, 0, :, :].astype(jnp.float32)  # [T, Dh]
+    vt = vt_ref[0, 0, :, :].astype(jnp.float32)
+    mask = mask_ref[0, :, :]  # [T, T]
+    st = jnp.dot(q, kt.T)
+    st = jnp.where(mask > 0.5, st, NEG_INF)
+    m_new = jnp.maximum(m_i, jnp.max(st, axis=1))
+    p = jnp.exp(st - m_new[:, None])
+    p = jnp.where(st <= NEG_INF / 2, 0.0, p)
+    alpha = jnp.exp(m_i - m_new)
+    l_new = l_i * alpha + jnp.sum(p, axis=1)
+    acc = acc * alpha[:, None] + jnp.dot(p, vt)
+
+    denom = jnp.maximum(l_new, 1e-30)
+    o_ref[0, 0, :, :] = (acc / denom[:, None]).astype(o_ref.dtype)
+
+
+def tree_attention(q, kc, vc, kt, vt, prefix_len, tree_mask, *, blk_k=128,
+                   interpret=True):
+    """Pallas tree attention; drop-in for ``ref.tree_attention_ref``.
+
+    Shapes as in the reference oracle.  ``S`` (cache capacity) must be a
+    multiple of ``blk_k``.  Runs one grid cell per (batch, head); the
+    committed cache is consumed in ``blk_k`` tiles with an online softmax.
+    """
+    B, H, T, Dh = q.shape
+    S = kc.shape[2]
+    if S % blk_k != 0:
+        raise ValueError(f"cache length {S} not a multiple of blk_k {blk_k}")
+
+    kernel = functools.partial(_tree_attn_kernel, blk_k=blk_k)
+    grid = (B, H)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+            pl.BlockSpec((1, 1, T, Dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, S, Dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, S, Dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, T, Dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, T, Dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, T, T), lambda b, h: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, T, Dh), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, T, Dh), q.dtype),
+        interpret=interpret,
+    )(prefix_len.astype(jnp.int32), q, kc, vc, kt, vt, tree_mask)
+
+
+def vmem_bytes(T: int, S: int, Dh: int, blk_k: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set per grid cell (see DESIGN.md §Perf).
+
+    q + one K tile + one V tile + kt + vt + mask + accumulators.
+    """
+    q = T * Dh
+    tile = 2 * blk_k * Dh
+    tree = 2 * T * Dh
+    mask = T * T
+    acc = T * Dh + 2 * T
+    return dtype_bytes * (q + tile + tree + mask + acc)

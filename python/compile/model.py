@@ -1,0 +1,400 @@
+"""L2: the JAX model family for the RLHFSpec reproduction.
+
+Everything here is *pure* (weights in → weights out) so each step function
+lowers to a single self-contained HLO module the rust coordinator executes
+via PJRT.  Four models (paper §2.1):
+
+* **target / actor**  — generates responses; also the reference model
+  (rust keeps a frozen weight copy).
+* **draft (SSM)**     — a smaller transformer distilled from the target;
+  drives tree-based speculative drafting.
+* **critic**          — value model (transformer + scalar head per token).
+* **reward**          — scalar-per-sequence head trained with Bradley-Terry.
+
+Weight layout is a *flat list* with deterministic ordering (see
+``weight_spec``); the rust side initializes/loads weights positionally
+from the manifest emitted by ``aot.py``.
+
+The speculative-verification hot path (``fwd_tree``) calls the Pallas
+tree-attention kernel (L1); training paths use the dense jnp oracle since
+``pallas_call`` has no autodiff rule.
+"""
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import TransformerConfig
+from .kernels.ref import tree_attention_ref
+from .kernels.tree_attention import tree_attention
+
+# ---------------------------------------------------------------------------
+# Weight layout
+# ---------------------------------------------------------------------------
+
+# Per-layer weight names, in order.
+LAYER_WEIGHTS = ["attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "w_in", "w_out"]
+
+
+def weight_spec(cfg: TransformerConfig, head: str = "lm") -> List[Tuple[str, Tuple[int, ...]]]:
+    """Flat (name, shape) list defining the positional weight layout.
+
+    ``head`` is one of ``lm`` (logits over vocab), ``value`` (scalar per
+    token) or ``reward`` (scalar per token, pooled at the last valid
+    position by the caller).
+    """
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.vocab
+    spec = [("embedding", (V, D))]
+    for i in range(cfg.n_layers):
+        spec += [
+            (f"l{i}.attn_norm", (D,)),
+            (f"l{i}.wq", (D, D)),
+            (f"l{i}.wk", (D, D)),
+            (f"l{i}.wv", (D, D)),
+            (f"l{i}.wo", (D, D)),
+            (f"l{i}.ffn_norm", (D,)),
+            (f"l{i}.w_in", (D, F)),
+            (f"l{i}.w_out", (F, D)),
+        ]
+    spec.append(("final_norm", (D,)))
+    if head == "lm":
+        spec.append(("lm_head", (D, V)))
+    elif head in ("value", "reward"):
+        spec.append(("head", (D, 1)))
+    else:
+        raise ValueError(head)
+    return spec
+
+
+def n_weights(cfg: TransformerConfig) -> int:
+    return 2 + 8 * cfg.n_layers + 1
+
+
+def init_weights(cfg: TransformerConfig, key, head: str = "lm"):
+    """Reference initializer (python-side tests only; rust has its own
+    seeded init and the two never need to agree bit-for-bit)."""
+    ws = []
+    for name, shape in weight_spec(cfg, head):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            ws.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            std = fan_in ** -0.5
+            ws.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return ws
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding.  x: [B, T, H, Dh], positions: [B, T] int32."""
+    B, T, H, Dh = x.shape
+    half = Dh // 2
+    freq = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, :, None, None] * freq[None, None, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _unpack(cfg: TransformerConfig, ws):
+    """Split flat weight list into (embedding, layers, final_norm, head)."""
+    emb = ws[0]
+    layers = []
+    idx = 1
+    for _ in range(cfg.n_layers):
+        layers.append(ws[idx : idx + 8])
+        idx += 8
+    final_norm = ws[idx]
+    head = ws[idx + 1]
+    return emb, layers, final_norm, head
+
+
+# ---------------------------------------------------------------------------
+# Tree forward (prefill / decode / verification) with KV cache
+# ---------------------------------------------------------------------------
+
+
+def fwd_tree(cfg: TransformerConfig, ws, kc, vc, tokens, positions, prefix_len,
+             tree_mask, *, attn: str = "pallas", blk_k: int = 128,
+             head_mode: str = "lm"):
+    """Forward the ``T`` tree tokens against the committed KV cache.
+
+    Args:
+      ws: flat weight list per ``weight_spec``.
+      kc/vc: [L, B, H, S, Dh] committed KV cache (RoPE already applied to kc).
+      tokens: [B, T] int32.
+      positions: [B, T] int32 absolute positions (prefix_len + tree depth).
+      prefix_len: [B] int32 valid cache length.
+      tree_mask: [B, T, T] float 0/1 ancestor-or-self visibility.
+      attn: "pallas" (L1 kernel) or "ref" (dense jnp, differentiable).
+
+    Returns:
+      logits [B, T, V] (or values [B, T] for value/reward heads),
+      k_new [L, B, H, T, Dh], v_new [L, B, H, T, Dh] — the *uncommitted*
+      KV rows of the tree tokens (rust commits accepted ones).
+    """
+    emb, layers, final_norm, head = _unpack(cfg, ws)
+    B, T = tokens.shape
+    H, Dh = cfg.n_heads, cfg.d_head
+
+    x = jnp.take(emb, tokens, axis=0)  # [B, T, D]
+    k_all, v_all = [], []
+    for li in range(cfg.n_layers):
+        attn_norm, wq, wk, wv, wo, ffn_norm, w_in, w_out = layers[li]
+        h = rms_norm(x, attn_norm)
+        q = (h @ wq).reshape(B, T, H, Dh)
+        k = (h @ wk).reshape(B, T, H, Dh)
+        v = (h @ wv).reshape(B, T, H, Dh)
+        q = rope(q, positions)
+        k = rope(k, positions)
+        qh = q.transpose(0, 2, 1, 3)  # [B, H, T, Dh]
+        kh = k.transpose(0, 2, 1, 3)
+        vh = v.transpose(0, 2, 1, 3)
+        if attn == "pallas":
+            o = tree_attention(qh, kc[li], vc[li], kh, vh, prefix_len,
+                               tree_mask, blk_k=blk_k)
+        else:
+            o = tree_attention_ref(qh, kc[li], vc[li], kh, vh, prefix_len,
+                                   tree_mask)
+        o = o.transpose(0, 2, 1, 3).reshape(B, T, cfg.d_model)
+        x = x + o @ wo
+        h2 = rms_norm(x, ffn_norm)
+        x = x + (jax.nn.silu(h2 @ w_in)) @ w_out
+        k_all.append(kh)
+        v_all.append(vh)
+
+    xf = rms_norm(x, final_norm)
+    if head_mode == "lm":
+        out = xf @ head  # [B, T, V]
+    else:
+        out = (xf @ head)[..., 0]  # [B, T]
+    return out, jnp.stack(k_all), jnp.stack(v_all)
+
+
+def commit(cfg: TransformerConfig, kc, vc, k_new, v_new, src_idx, dest_pos, valid):
+    """Scatter accepted tree-token KV rows into the cache.
+
+    Args:
+      kc/vc: [L, B, H, S, Dh] cache.
+      k_new/v_new: [L, B, H, T, Dh] tree rows from ``fwd_tree``.
+      src_idx:  [B, A] int32 — which tree rows to commit.
+      dest_pos: [B, A] int32 — cache positions to write them to.
+      valid:    [B, A] float 0/1 — entry a is a real commit.
+
+    Returns updated (kc, vc).
+    """
+    A = src_idx.shape[1]
+
+    def per_batch(kc_b, vc_b, kn_b, vn_b, src_b, dst_b, val_b):
+        # kc_b: [L, H, S, Dh]; kn_b: [L, H, T, Dh]
+        for a in range(A):
+            s, d, ok = src_b[a], dst_b[a], val_b[a]
+            row_k = jax.lax.dynamic_slice_in_dim(kn_b, s, 1, axis=2)  # [L,H,1,Dh]
+            row_v = jax.lax.dynamic_slice_in_dim(vn_b, s, 1, axis=2)
+            old_k = jax.lax.dynamic_slice_in_dim(kc_b, d, 1, axis=2)
+            old_v = jax.lax.dynamic_slice_in_dim(vc_b, d, 1, axis=2)
+            new_k = jnp.where(ok > 0.5, row_k, old_k)
+            new_v = jnp.where(ok > 0.5, row_v, old_v)
+            kc_b = jax.lax.dynamic_update_slice_in_dim(kc_b, new_k, d, axis=2)
+            vc_b = jax.lax.dynamic_update_slice_in_dim(vc_b, new_v, d, axis=2)
+        return kc_b, vc_b
+
+    # vmap over the batch axis (axis 1 of the cache, axis 0 of indices).
+    kc2, vc2 = jax.vmap(per_batch, in_axes=(1, 1, 1, 1, 0, 0, 0), out_axes=(1, 1))(
+        kc, vc, k_new, v_new, src_idx, dest_pos, valid
+    )
+    return kc2, vc2
+
+
+def fwd_tree_commit(cfg, ws, kc, vc, tokens, positions, prefix_len, tree_mask,
+                    src_idx, dest_pos, valid, **kw):
+    """Fused prefill: forward a causal chunk AND commit all its KV rows.
+
+    Used for prompt prefill where every token is accepted by construction;
+    saves one host round-trip of the tree KV per chunk.
+    """
+    out, k_new, v_new = fwd_tree(cfg, ws, kc, vc, tokens, positions,
+                                 prefix_len, tree_mask, **kw)
+    kc2, vc2 = commit(cfg, kc, vc, k_new, v_new, src_idx, dest_pos, valid)
+    return out, kc2, vc2
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forwards (training / inference stage)
+# ---------------------------------------------------------------------------
+
+
+def _causal_logits(cfg, ws, tokens, head_mode="lm"):
+    """Dense causal forward without KV cache (differentiable)."""
+    B, S = tokens.shape
+    H, Dh, L = cfg.n_heads, cfg.d_head, cfg.n_layers
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    mask = jnp.broadcast_to(jnp.tril(jnp.ones((S, S), jnp.float32))[None], (B, S, S))
+    # Zero-capacity cache: zeros with prefix_len = 0 (fully masked).
+    kc = jnp.zeros((L, B, H, S, Dh), jnp.float32)
+    vc = jnp.zeros((L, B, H, S, Dh), jnp.float32)
+    prefix = jnp.zeros((B,), jnp.int32)
+    out, _, _ = fwd_tree(cfg, ws, kc, vc, tokens, positions, prefix, mask,
+                         attn="ref", head_mode=head_mode)
+    return out
+
+
+def logits_fwd(cfg, ws, tokens):
+    """[B, S] tokens → [B, S, V] logits (reference-model / distill targets)."""
+    return (_causal_logits(cfg, ws, tokens, "lm"),)
+
+
+def logprobs_fwd(cfg, ws, tokens):
+    """Per-token log-prob of the *next* token: returns [B, S-1]."""
+    logits = _causal_logits(cfg, ws, tokens, "lm")
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    nxt = tokens[:, 1:]
+    out = jnp.take_along_axis(logp, nxt[..., None], axis=-1)[..., 0]
+    return (out,)
+
+
+def value_fwd(cfg, ws, tokens):
+    """Critic values per position: [B, S]."""
+    return (_causal_logits(cfg, ws, tokens, "value"),)
+
+
+def reward_fwd(cfg, ws, tokens, last_pos):
+    """Sequence reward: value-head output at the last valid position.
+
+    last_pos: [B] int32 index of the final real token.
+    Returns ([B] rewards,).
+    """
+    vals = _causal_logits(cfg, ws, tokens, "reward")  # [B, S]
+    r = jnp.take_along_axis(vals, last_pos[:, None], axis=1)[:, 0]
+    return (r,)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer (Adam) and training steps
+# ---------------------------------------------------------------------------
+
+
+def adam_update(ws, grads, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    """One Adam step over flat weight lists."""
+    step = step + 1.0
+    out_w, out_m, out_v = [], [], []
+    for w, g, mi, vi in zip(ws, grads, m, v):
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * jnp.square(g)
+        mhat = mi / (1 - b1 ** step)
+        vhat = vi / (1 - b2 ** step)
+        out_w.append(w - lr * mhat / (jnp.sqrt(vhat) + eps))
+        out_m.append(mi)
+        out_v.append(vi)
+    return out_w, out_m, out_v, step
+
+
+def _lm_loss(cfg, ws, tokens, loss_mask):
+    logits = _causal_logits(cfg, ws, tokens, "lm")
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    nxt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, nxt[..., None], axis=-1)[..., 0]
+    msk = loss_mask[:, 1:]
+    return jnp.sum(nll * msk) / jnp.maximum(jnp.sum(msk), 1.0)
+
+
+def train_lm_step(cfg, ws, m, v, step, tokens, loss_mask, lr):
+    """Next-token cross-entropy step (target pretraining).
+
+    Returns (loss, ws'…, m'…, v'…, step').
+    """
+    loss, grads = jax.value_and_grad(lambda w: _lm_loss(cfg, w, tokens, loss_mask))(ws)
+    ws2, m2, v2, step2 = adam_update(ws, grads, m, v, step, lr)
+    return (loss, *ws2, *m2, *v2, step2)
+
+
+def _distill_loss(cfg, ws, tokens, target_logits, loss_mask, temp=1.0):
+    logits = _causal_logits(cfg, ws, tokens, "lm")
+    logp = jax.nn.log_softmax(logits / temp, axis=-1)
+    tgt = jax.nn.softmax(target_logits / temp, axis=-1)
+    kl = jnp.sum(tgt * (jnp.log(jnp.maximum(tgt, 1e-9)) - logp), axis=-1)
+    return jnp.sum(kl * loss_mask) / jnp.maximum(jnp.sum(loss_mask), 1.0)
+
+
+def distill_step(cfg, ws, m, v, step, tokens, target_logits, loss_mask, lr):
+    """KL(target ‖ draft) distillation step for the SSM (paper §5.2: the
+    draft-logit ↔ acceptance-probability correlation is *earned* here)."""
+    loss, grads = jax.value_and_grad(
+        lambda w: _distill_loss(cfg, w, tokens, target_logits, loss_mask))(ws)
+    ws2, m2, v2, step2 = adam_update(ws, grads, m, v, step, lr)
+    return (loss, *ws2, *m2, *v2, step2)
+
+
+def _ppo_loss(cfg, ws, tokens, old_logp, adv, mask, clip_eps, kl_coef, ref_logp,
+              ent_coef):
+    logits = _causal_logits(cfg, ws, tokens, "lm")
+    logp_all = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    nxt = tokens[:, 1:]
+    logp = jnp.take_along_axis(logp_all, nxt[..., None], axis=-1)[..., 0]
+    msk = mask[:, 1:]
+    denom = jnp.maximum(jnp.sum(msk), 1.0)
+
+    ratio = jnp.exp(logp - old_logp)
+    un = ratio * adv
+    cl = jnp.clip(ratio, 1 - clip_eps, 1 + clip_eps) * adv
+    pg = -jnp.sum(jnp.minimum(un, cl) * msk) / denom
+
+    kl = jnp.sum((logp - ref_logp) * msk) / denom
+    ent = -jnp.sum(jnp.sum(jnp.exp(logp_all) * logp_all, axis=-1) * msk) / denom
+    loss = pg + kl_coef * kl - ent_coef * ent
+    return loss, (pg, kl, ent)
+
+
+def ppo_step(cfg, ws, m, v, step, tokens, old_logp, adv, mask, ref_logp, lr,
+             clip_eps, kl_coef, ent_coef):
+    """PPO-clip actor update (training stage, paper §2.1).
+
+    old_logp/adv/ref_logp: [B, S-1] aligned to next-token targets;
+    mask: [B, S] response mask.
+    Returns (loss, pg, kl, entropy, ws'…, m'…, v'…, step').
+    """
+    (loss, aux), grads = jax.value_and_grad(
+        lambda w: _ppo_loss(cfg, w, tokens, old_logp, adv, mask, clip_eps,
+                            kl_coef, ref_logp, ent_coef), has_aux=True)(ws)
+    pg, kl, ent = aux
+    ws2, m2, v2, step2 = adam_update(ws, grads, m, v, step, lr)
+    return (loss, pg, kl, ent, *ws2, *m2, *v2, step2)
+
+
+def _value_loss(cfg, ws, tokens, returns, mask):
+    vals = _causal_logits(cfg, ws, tokens, "value")
+    err = jnp.square(vals - returns) * mask
+    return jnp.sum(err) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def value_step(cfg, ws, m, v, step, tokens, returns, mask, lr):
+    """Critic MSE-to-returns update."""
+    loss, grads = jax.value_and_grad(
+        lambda w: _value_loss(cfg, w, tokens, returns, mask))(ws)
+    ws2, m2, v2, step2 = adam_update(ws, grads, m, v, step, lr)
+    return (loss, *ws2, *m2, *v2, step2)
+
+
+def _bt_loss(cfg, ws, tok_c, tok_r, last_c, last_r):
+    rc = reward_fwd(cfg, ws, tok_c, last_c)[0]
+    rr = reward_fwd(cfg, ws, tok_r, last_r)[0]
+    return -jnp.mean(jax.nn.log_sigmoid(rc - rr))
+
+
+def reward_bt_step(cfg, ws, m, v, step, tok_chosen, tok_rejected, last_c, last_r, lr):
+    """Bradley-Terry reward-model update on preference pairs."""
+    loss, grads = jax.value_and_grad(
+        lambda w: _bt_loss(cfg, w, tok_chosen, tok_rejected, last_c, last_r))(ws)
+    ws2, m2, v2, step2 = adam_update(ws, grads, m, v, step, lr)
+    return (loss, *ws2, *m2, *v2, step2)

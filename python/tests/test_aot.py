@@ -1,0 +1,104 @@
+"""AOT pipeline sanity: artifacts exist, manifest matches weight specs,
+HLO text parses structurally, fingerprint gating works."""
+
+import json
+import os
+
+import pytest
+
+from compile.configs import get_config
+from compile import model as M
+from compile.aot import config_fingerprint
+
+ART = os.path.normpath(os.path.join(os.path.dirname(__file__), "..", "..",
+                                    "artifacts"))
+TINY = os.path.join(ART, "tiny")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(TINY, "manifest.json")),
+    reason="tiny artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(TINY, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_all_artifact_files_exist(manifest):
+    for name, art in manifest["artifacts"].items():
+        path = os.path.join(TINY, art["file"])
+        assert os.path.exists(path), name
+        assert os.path.getsize(path) > 1000, name
+
+
+def test_weight_specs_match_model(manifest):
+    cfg = get_config("tiny")
+    for mdl, tcfg, head in [("target", cfg.target, "lm"),
+                            ("draft", cfg.draft, "lm"),
+                            ("critic", cfg.critic, "value"),
+                            ("reward", cfg.reward, "reward")]:
+        spec = M.weight_spec(tcfg, head)
+        man = manifest["weights"][mdl]
+        assert len(man) == len(spec)
+        for (name, shape), entry in zip(spec, man):
+            assert entry["name"] == name
+            assert tuple(entry["shape"]) == tuple(shape)
+
+
+def test_tree_buckets_all_present(manifest):
+    cfg = get_config("tiny")
+    for mdl in ("target", "draft"):
+        for b in cfg.batch_buckets:
+            for t in cfg.tree_buckets:
+                assert f"{mdl}_tree_b{b}_t{t}" in manifest["artifacts"]
+
+
+def test_tree_artifact_signature(manifest):
+    cfg = get_config("tiny")
+    t = cfg.target
+    art = manifest["artifacts"]["target_tree_b2_t8"]
+    kinds = [a["kind"] for a in art["args"]]
+    assert kinds == ["weights", "array", "array", "array", "array", "array",
+                     "array"]
+    kc = art["args"][1]
+    assert kc["shape"] == [t.n_layers, 2, t.n_heads, t.max_seq, t.d_head]
+    # outputs: logits [B,T,V], k_new, v_new [L,B,H,T,Dh]
+    outs = art["outs"]
+    assert outs[0]["shape"] == [2, 8, t.vocab]
+    assert outs[1]["shape"] == [t.n_layers, 2, t.n_heads, 8, t.d_head]
+    assert outs[2]["shape"] == outs[1]["shape"]
+
+
+def test_train_step_output_counts(manifest):
+    """train steps return loss(+stats) then ws, m, v, step."""
+    cfg = get_config("tiny")
+    nw = M.n_weights(cfg.target)
+    art = manifest["artifacts"]["target_train_lm"]
+    assert len(art["outs"]) == 1 + 3 * nw + 1
+    ppo = manifest["artifacts"]["target_ppo"]
+    assert len(ppo["outs"]) == 4 + 3 * nw + 1
+
+
+def test_hlo_text_looks_like_hlo(manifest):
+    path = os.path.join(TINY, manifest["artifacts"]["target_tree_b1_t1"]["file"])
+    with open(path) as f:
+        head = f.read(4096)
+    assert "HloModule" in head
+    assert "ENTRY" in open(path).read()
+
+
+def test_fingerprint_stable():
+    cfg = get_config("tiny")
+    assert config_fingerprint(cfg, "pallas") == config_fingerprint(cfg, "pallas")
+    assert config_fingerprint(cfg, "pallas") != config_fingerprint(cfg, "ref")
+
+
+def test_build_info_matches_current_code():
+    with open(os.path.join(TINY, "build_info.json")) as f:
+        info = json.load(f)
+    cfg = get_config("tiny")
+    assert info["fingerprint"] == config_fingerprint(cfg, info["attn"]), (
+        "artifacts are stale relative to python/compile — re-run `make artifacts`"
+    )

@@ -1,0 +1,162 @@
+"""L1 correctness: Pallas tree-attention kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the verification hot path —
+hypothesis sweeps shapes/dtypes/masks and asserts allclose against ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import tree_attention_ref
+from compile.kernels.tree_attention import tree_attention, vmem_bytes
+
+
+def _rand(rng, shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+def _chain_mask(B, T):
+    """Causal chain: token i sees 0..i (degenerate tree)."""
+    m = np.tril(np.ones((T, T), np.float32))
+    return jnp.asarray(np.broadcast_to(m, (B, T, T)).copy())
+
+
+def _random_tree_mask(rng, B, T):
+    """Random forest: each token's parent is an earlier token (or none);
+    mask = ancestor-or-self closure."""
+    m = np.zeros((B, T, T), np.float32)
+    for b in range(B):
+        for i in range(T):
+            m[b, i, i] = 1.0
+            if i > 0 and rng.random() < 0.8:
+                p = int(rng.integers(0, i))
+                m[b, i] = np.maximum(m[b, i], m[b, p])
+                m[b, i, i] = 1.0
+    return jnp.asarray(m)
+
+
+def _run_both(rng, B, H, T, Dh, S, blk_k, plen, mask):
+    q = _rand(rng, (B, H, T, Dh))
+    kc = _rand(rng, (B, H, S, Dh))
+    vc = _rand(rng, (B, H, S, Dh))
+    kt = _rand(rng, (B, H, T, Dh))
+    vt = _rand(rng, (B, H, T, Dh))
+    plen = jnp.asarray(plen, jnp.int32)
+    out = tree_attention(q, kc, vc, kt, vt, plen, mask, blk_k=blk_k)
+    ref = tree_attention_ref(q, kc, vc, kt, vt, plen, mask)
+    return np.asarray(out), np.asarray(ref)
+
+
+class TestBasic:
+    def test_matches_ref_simple(self):
+        rng = np.random.default_rng(0)
+        out, ref = _run_both(rng, 2, 2, 8, 16, 64, 32, [5, 17],
+                             _chain_mask(2, 8))
+        np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+    def test_zero_prefix(self):
+        """Empty cache: only the tree tokens participate."""
+        rng = np.random.default_rng(1)
+        out, ref = _run_both(rng, 1, 2, 4, 8, 32, 32, [0],
+                             _chain_mask(1, 4))
+        np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+    def test_full_prefix(self):
+        """Cache completely full."""
+        rng = np.random.default_rng(2)
+        out, ref = _run_both(rng, 1, 2, 4, 8, 32, 16, [32],
+                             _chain_mask(1, 4))
+        np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+    def test_self_only_mask(self):
+        """Padding rows: token sees only itself, zero prefix — stays finite."""
+        rng = np.random.default_rng(3)
+        B, T = 1, 4
+        m = np.zeros((B, T, T), np.float32)
+        for i in range(T):
+            m[0, i, i] = 1.0
+        out, ref = _run_both(rng, B, 2, T, 8, 32, 32, [0], jnp.asarray(m))
+        assert np.isfinite(out).all()
+        np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+    def test_single_token_decode(self):
+        """T=1 degenerates to ordinary incremental decode attention."""
+        rng = np.random.default_rng(4)
+        out, ref = _run_both(rng, 2, 4, 1, 16, 64, 32, [10, 63],
+                             _chain_mask(2, 1))
+        np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+    def test_blk_k_must_divide(self):
+        rng = np.random.default_rng(5)
+        with pytest.raises(ValueError):
+            _run_both(rng, 1, 1, 1, 8, 48, 32, [0], _chain_mask(1, 1))
+
+    def test_large_scale_values(self):
+        """Softmax stability under large score magnitudes."""
+        rng = np.random.default_rng(6)
+        B, H, T, Dh, S = 1, 2, 4, 8, 32
+        q = _rand(rng, (B, H, T, Dh), scale=30.0)
+        kc = _rand(rng, (B, H, S, Dh), scale=30.0)
+        vc = _rand(rng, (B, H, S, Dh))
+        kt = _rand(rng, (B, H, T, Dh), scale=30.0)
+        vt = _rand(rng, (B, H, T, Dh))
+        plen = jnp.asarray([20], jnp.int32)
+        mask = _chain_mask(B, T)
+        out = tree_attention(q, kc, vc, kt, vt, plen, mask, blk_k=32)
+        ref = tree_attention_ref(q, kc, vc, kt, vt, plen, mask)
+        assert np.isfinite(np.asarray(out)).all()
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    t=st.sampled_from([1, 2, 4, 8, 16]),
+    dh=st.sampled_from([4, 8, 16, 32]),
+    ntiles=st.integers(1, 4),
+    blk=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shapes(b, h, t, dh, ntiles, blk, seed):
+    """Property: kernel == oracle across the shape/mask/prefix space."""
+    rng = np.random.default_rng(seed)
+    S = ntiles * blk
+    plen = rng.integers(0, S + 1, size=b).tolist()
+    mask = _random_tree_mask(rng, b, t)
+    out, ref = _run_both(rng, b, h, t, dh, S, blk, plen, mask)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_bf16(seed):
+    """bf16 inputs stay finite and roughly match the f32 oracle."""
+    rng = np.random.default_rng(seed)
+    B, H, T, Dh, S = 1, 2, 4, 16, 32
+    mk = lambda s: jnp.asarray(rng.standard_normal(s), jnp.bfloat16)
+    q, kc, vc, kt, vt = (mk((B, H, T, Dh)), mk((B, H, S, Dh)), mk((B, H, S, Dh)),
+                         mk((B, H, T, Dh)), mk((B, H, T, Dh)))
+    plen = jnp.asarray([S // 2], jnp.int32)
+    mask = _chain_mask(B, T)
+    out = tree_attention(q, kc, vc, kt, vt, plen, mask, blk_k=32)
+    f = lambda x: x.astype(jnp.float32)
+    ref = tree_attention_ref(f(q), f(kc), f(vc), f(kt), f(vt), plen, mask)
+    assert np.isfinite(np.asarray(out, np.float32)).all()
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               atol=0.05, rtol=0.05)
+
+
+class TestVmemModel:
+    def test_footprint_independent_of_seq(self):
+        """The flash-style tile loop keeps VMEM independent of S."""
+        a = vmem_bytes(T=16, S=384, Dh=128, blk_k=128)
+        b = vmem_bytes(T=16, S=4096, Dh=128, blk_k=128)
+        assert a == b
+
+    def test_fits_tpu_vmem(self):
+        """Paper-scale shapes fit a 16 MiB TPU VMEM with double buffering."""
+        assert 2 * vmem_bytes(T=64, S=2048, Dh=128, blk_k=256) < 16 * 2**20

@@ -1,0 +1,237 @@
+"""L2 correctness: fwd_tree + host-style commit == dense causal forward.
+
+These tests pin down the exact contract the rust coordinator relies on:
+incremental decoding with the functional KV cache (commit the returned
+tree rows, advance prefix_len) must reproduce the dense full-sequence
+forward logits position-for-position.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import get_config
+from compile import model as M
+
+CFG = get_config("tiny")
+T_CFG = CFG.target
+
+
+def _init(key=0, cfg=T_CFG, head="lm"):
+    return M.init_weights(cfg, jax.random.PRNGKey(key), head)
+
+
+def _empty_cache(cfg, B):
+    L, H, Dh, S = cfg.n_layers, cfg.n_heads, cfg.d_head, cfg.max_seq
+    z = jnp.zeros((L, B, H, S, Dh), jnp.float32)
+    return z, z
+
+
+def _chain_mask(B, T):
+    m = np.tril(np.ones((T, T), np.float32))
+    return jnp.asarray(np.broadcast_to(m, (B, T, T)).copy())
+
+
+def _host_commit(kc, vc, k_new, v_new, b, src, dest):
+    """Mimic the rust host-side scatter: cache[:, b, :, dest, :] = new[:, b, :, src, :]."""
+    kc = kc.at[:, b, :, dest, :].set(k_new[:, b, :, src, :])
+    vc = vc.at[:, b, :, dest, :].set(v_new[:, b, :, src, :])
+    return kc, vc
+
+
+def _decode_incremental(ws, tokens_row, attn="ref"):
+    """Feed tokens one at a time through fwd_tree(T=1), committing each."""
+    B = 1
+    kc, vc = _empty_cache(T_CFG, B)
+    outs = []
+    for pos, tok in enumerate(tokens_row):
+        t = jnp.asarray([[tok]], jnp.int32)
+        p = jnp.asarray([[pos]], jnp.int32)
+        plen = jnp.asarray([pos], jnp.int32)
+        mask = jnp.ones((B, 1, 1), jnp.float32)
+        logits, k_new, v_new = M.fwd_tree(
+            T_CFG, ws, kc, vc, t, p, plen, mask, attn=attn, blk_k=CFG.blk_k)
+        kc, vc = _host_commit(kc, vc, k_new, v_new, 0, 0, pos)
+        outs.append(logits[0, 0])
+    return jnp.stack(outs)  # [S, V]
+
+
+class TestIncrementalEquivalence:
+    @pytest.mark.parametrize("attn", ["ref", "pallas"])
+    def test_decode_matches_causal(self, attn):
+        """Token-by-token decode == dense causal forward."""
+        ws = _init()
+        rng = np.random.default_rng(0)
+        toks = rng.integers(0, T_CFG.vocab, size=12).tolist()
+        inc = _decode_incremental(ws, toks, attn=attn)
+        dense = M.logits_fwd(T_CFG, ws, jnp.asarray([toks], jnp.int32))[0][0]
+        np.testing.assert_allclose(np.asarray(inc), np.asarray(dense),
+                                   atol=2e-4, rtol=2e-4)
+
+    @pytest.mark.parametrize("attn", ["ref", "pallas"])
+    def test_prefill_chunk_matches_causal(self, attn):
+        """One prefill chunk (T=8, causal mask) == dense forward prefix."""
+        ws = _init()
+        rng = np.random.default_rng(1)
+        toks = rng.integers(0, T_CFG.vocab, size=8)
+        B, T = 1, 8
+        kc, vc = _empty_cache(T_CFG, B)
+        t = jnp.asarray(toks[None, :], jnp.int32)
+        p = jnp.asarray(np.arange(T)[None, :], jnp.int32)
+        plen = jnp.zeros((B,), jnp.int32)
+        logits, _, _ = M.fwd_tree(T_CFG, ws, kc, vc, t, p, plen,
+                                  _chain_mask(B, T), attn=attn,
+                                  blk_k=CFG.blk_k)
+        pad = np.zeros((1, 12), np.int64)
+        pad[0, :8] = toks
+        dense = M.logits_fwd(T_CFG, ws, jnp.asarray(pad, jnp.int32))[0][0, :8]
+        np.testing.assert_allclose(np.asarray(logits[0]), np.asarray(dense),
+                                   atol=2e-4, rtol=2e-4)
+
+    def test_tree_verify_branch_equivalence(self):
+        """Each tree branch's logits == the logits of decoding that branch
+        as a plain chain (the Markov property §6.2 exploits)."""
+        ws = _init()
+        rng = np.random.default_rng(2)
+        prefix = rng.integers(0, T_CFG.vocab, size=6).tolist()
+
+        # Prefill the prefix.
+        B = 1
+        kc, vc = _empty_cache(T_CFG, B)
+        T = len(prefix)
+        logits_p, k_new, v_new = M.fwd_tree(
+            T_CFG, ws, kc, vc,
+            jnp.asarray([prefix], jnp.int32),
+            jnp.asarray(np.arange(T)[None, :], jnp.int32),
+            jnp.zeros((B,), jnp.int32),
+            _chain_mask(B, T), attn="ref", blk_k=CFG.blk_k)
+        for i in range(T):
+            kc, vc = _host_commit(kc, vc, k_new, v_new, 0, i, i)
+
+        # A 5-node tree: root a with children b,c; b has children d,e.
+        #   idx: 0=a 1=b 2=c 3=d 4=e ; depths 0,1,1,2,2
+        toks = rng.integers(0, T_CFG.vocab, size=5).tolist()
+        depth = [0, 1, 1, 2, 2]
+        parent = [-1, 0, 0, 1, 1]
+        Tt = 5
+        mask = np.zeros((B, Tt, Tt), np.float32)
+        for i in range(Tt):
+            j = i
+            while j >= 0:
+                mask[0, i, j] = 1.0
+                j = parent[j]
+        pos = jnp.asarray([[T + d for d in depth]], jnp.int32)
+        plen = jnp.asarray([T], jnp.int32)
+        tree_logits, _, _ = M.fwd_tree(
+            T_CFG, ws, kc, vc, jnp.asarray([toks], jnp.int32), pos, plen,
+            jnp.asarray(mask), attn="ref", blk_k=CFG.blk_k)
+
+        # Branch a→b→d decoded as a chain must match tree rows 0,1,3.
+        # Positions: dense[i] = logits after token i; tree row r sits at
+        # dense index T + depth(r).
+        chain = prefix + [toks[0], toks[1], toks[3]]
+        dense = M.logits_fwd(T_CFG, ws, jnp.asarray([chain], jnp.int32))[0][0]
+        np.testing.assert_allclose(np.asarray(tree_logits[0, 0]),
+                                   np.asarray(dense[T]), atol=2e-4, rtol=2e-4)
+        np.testing.assert_allclose(np.asarray(tree_logits[0, 1]),
+                                   np.asarray(dense[T + 1]), atol=2e-4, rtol=2e-4)
+        np.testing.assert_allclose(np.asarray(tree_logits[0, 3]),
+                                   np.asarray(dense[T + 2]), atol=2e-4, rtol=2e-4)
+
+    def test_batch_independence(self):
+        """Sample b's outputs don't depend on other rows in the batch —
+        the invariant that makes migration/batch-composition legal."""
+        ws = _init()
+        rng = np.random.default_rng(3)
+        toks = rng.integers(0, T_CFG.vocab, size=(2, 4))
+        B, T = 2, 4
+        kc, vc = _empty_cache(T_CFG, B)
+        p = jnp.asarray(np.broadcast_to(np.arange(T), (B, T)).copy(), jnp.int32)
+        plen = jnp.zeros((B,), jnp.int32)
+        both, _, _ = M.fwd_tree(T_CFG, ws, kc, vc,
+                                jnp.asarray(toks, jnp.int32), p, plen,
+                                _chain_mask(B, T), attn="ref", blk_k=CFG.blk_k)
+        kc1, vc1 = _empty_cache(T_CFG, 1)
+        solo, _, _ = M.fwd_tree(T_CFG, ws, kc1, vc1,
+                                jnp.asarray(toks[1:2], jnp.int32), p[:1], plen[:1],
+                                _chain_mask(1, T), attn="ref", blk_k=CFG.blk_k)
+        np.testing.assert_allclose(np.asarray(both[1]), np.asarray(solo[0]),
+                                   atol=1e-5, rtol=1e-5)
+
+
+class TestCommitExecutable:
+    def test_commit_matches_host_scatter(self):
+        """The jax commit (kept for tests) == the host-side scatter."""
+        rng = np.random.default_rng(4)
+        L, B, H, S, Dh, T = (T_CFG.n_layers, 2, T_CFG.n_heads, 16,
+                             T_CFG.d_head, 4)
+        kc = jnp.asarray(rng.standard_normal((L, B, H, S, Dh)), jnp.float32)
+        vc = jnp.asarray(rng.standard_normal((L, B, H, S, Dh)), jnp.float32)
+        kn = jnp.asarray(rng.standard_normal((L, B, H, T, Dh)), jnp.float32)
+        vn = jnp.asarray(rng.standard_normal((L, B, H, T, Dh)), jnp.float32)
+        src = jnp.asarray([[0, 2, 0, 0], [1, 3, 0, 0]], jnp.int32)
+        dst = jnp.asarray([[5, 6, 0, 0], [7, 8, 0, 0]], jnp.int32)
+        val = jnp.asarray([[1, 1, 0, 0], [1, 1, 0, 0]], jnp.float32)
+        kc2, vc2 = M.commit(T_CFG, kc, vc, kn, vn, src, dst, val)
+
+        kc_ref, vc_ref = kc, vc
+        for b in range(B):
+            for a in range(4):
+                if val[b, a] > 0.5:
+                    kc_ref, vc_ref = _host_commit(
+                        kc_ref, vc_ref, kn, vn, b, int(src[b, a]), int(dst[b, a]))
+        np.testing.assert_allclose(np.asarray(kc2), np.asarray(kc_ref), atol=0)
+        np.testing.assert_allclose(np.asarray(vc2), np.asarray(vc_ref), atol=0)
+
+
+class TestHeads:
+    def test_value_fwd_shape(self):
+        ws = _init(cfg=CFG.critic, head="value")
+        toks = jnp.zeros((2, 8), jnp.int32)
+        (vals,) = M.value_fwd(CFG.critic, ws, toks)
+        assert vals.shape == (2, 8)
+        assert np.isfinite(np.asarray(vals)).all()
+
+    def test_reward_fwd_uses_last_pos(self):
+        ws = _init(cfg=CFG.reward, head="reward")
+        rng = np.random.default_rng(5)
+        toks = jnp.asarray(rng.integers(0, 60, (2, 8)), jnp.int32)
+        (r1,) = M.reward_fwd(CFG.reward, ws, toks, jnp.asarray([3, 7], jnp.int32))
+        (vals_full,) = (M.value_fwd(CFG.reward, ws, toks),)
+        # reward = the reward-head value at last_pos; check consistency by
+        # recomputing with the same position twice.
+        (r2,) = M.reward_fwd(CFG.reward, ws, toks, jnp.asarray([3, 7], jnp.int32))
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r2))
+
+    def test_logprobs_fwd_is_log_softmax_gather(self):
+        ws = _init()
+        rng = np.random.default_rng(6)
+        toks = jnp.asarray(rng.integers(0, T_CFG.vocab, (1, 8)), jnp.int32)
+        (lp,) = M.logprobs_fwd(T_CFG, ws, toks)
+        (lg,) = M.logits_fwd(T_CFG, ws, toks)
+        ref = jax.nn.log_softmax(lg[:, :-1], axis=-1)
+        ref = jnp.take_along_axis(ref, toks[:, 1:, None], axis=-1)[..., 0]
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+        assert (np.asarray(lp) <= 1e-6).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), t=st.sampled_from([1, 2, 4, 8]))
+def test_rope_shift_invariance(seed, t):
+    """RoPE depends only on relative offsets: rotating q and k by the same
+    extra offset leaves q·k scores unchanged."""
+    rng = np.random.default_rng(seed)
+    B, H, Dh = 1, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, t, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, t, H, Dh)), jnp.float32)
+    p0 = jnp.asarray(rng.integers(0, 16, (B, t)), jnp.int32)
+    shift = int(rng.integers(0, 10))
+    q1, k1 = M.rope(q, p0), M.rope(k, p0)
+    q2, k2 = M.rope(q, p0 + shift), M.rope(k, p0 + shift)
+    s1 = jnp.einsum("bthd,bshd->bhts", q1, k1)
+    s2 = jnp.einsum("bthd,bshd->bhts", q2, k2)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               atol=1e-3, rtol=1e-3)

@@ -1,0 +1,59 @@
+//! Bench: real-path generation steps over PJRT (tiny artifacts).
+//!
+//! The end-to-end micro-benchmark behind the Fig-11 real-path variant:
+//! one AR step vs one adaptive speculative round at several batch sizes,
+//! plus prefill. Requires `make artifacts` (skips gracefully otherwise).
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use rlhfspec::benchutil::bench;
+use rlhfspec::config::RunConfig;
+use rlhfspec::coordinator::instance::{DecodeMode, GenerationInstance, SampleTask};
+use rlhfspec::runtime::{Manifest, ModelStore};
+use rlhfspec::utils::rng::Rng;
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    let Ok(man) = Manifest::load(&dir) else {
+        println!("SKIP bench_generation: tiny artifacts missing (run `make artifacts`)");
+        return;
+    };
+    let man = Rc::new(man);
+
+    for (label, mode) in [
+        ("ar", DecodeMode::Ar),
+        ("static8", DecodeMode::StaticSpec(8)),
+        ("adaptive", DecodeMode::Adaptive),
+    ] {
+        for batch in [1usize, 2] {
+            let target = ModelStore::init(&man, "target", 1).unwrap();
+            let draft = ModelStore::init(&man, "draft", 2).unwrap();
+            let mut cfg = RunConfig::default();
+            cfg.spec.max_depth = 3;
+            cfg.spec.max_draft = 8;
+            let mut inst =
+                GenerationInstance::new(0, man.clone(), target, draft, cfg, mode, 3).unwrap();
+            let mut rng = Rng::new(4);
+            for i in 0..batch {
+                inst.add_task(SampleTask {
+                    id: i as u64,
+                    prompt: (0..8).map(|_| rng.below(60) as i32 + 1).collect(),
+                    max_new_tokens: usize::MAX / 2,
+                    eos: 0,
+                });
+            }
+            inst.step().unwrap(); // admit + prefill + warm the executables
+            bench(&format!("generation/{label}/b{batch}/step"), 3, 25, || {
+                inst.step().unwrap();
+            });
+            let m = &inst.metrics;
+            println!(
+                "  tokens/step: {:.2}, accept rate {:.1}%, selector share {:.2}%",
+                m.tokens_out as f64 / m.rounds.max(1) as f64,
+                100.0 * m.acceptance_rate(),
+                100.0 * m.selector_overhead()
+            );
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Bench: two-stage migration data plane (§6.2) — the SM overhead of §7.7.
+//!
+//! The hierarchical (model→layer→sample) single-buffer pack vs a naive
+//! per-(layer,head) copy loop, across KV sizes; pack+unpack round-trip
+//! bandwidth decides how cheap migration is on the real path.
+
+use rlhfspec::benchutil::{bench, black_box};
+use rlhfspec::coordinator::migration::{pack_hierarchical, unpack_hierarchical};
+use rlhfspec::runtime::HostTensor;
+use rlhfspec::spec::kvcache::KvCache;
+use rlhfspec::utils::rng::Rng;
+
+fn filled(l: usize, h: usize, s: usize, d: usize, len: usize, rng: &mut Rng) -> KvCache {
+    let mut c = KvCache::new(l, h, s, d);
+    let n = l * h * len * d;
+    let kn = HostTensor::f32(vec![l, 1, h, len, d], (0..n).map(|_| rng.f32()).collect());
+    let vn = HostTensor::f32(vec![l, 1, h, len, d], (0..n).map(|_| rng.f32()).collect());
+    for i in 0..len {
+        c.commit_row(&kn, &vn, 0, i, i);
+    }
+    c
+}
+
+/// Naive ablation: one allocation + copy per (model, layer) — the
+/// "numerous inefficient copy operations" §6.2 eliminates.
+fn naive_pack(draft: &KvCache, target: &KvCache, len: usize) -> Vec<Vec<f32>> {
+    let mut chunks = Vec::new();
+    for c in [draft, target] {
+        for l in 0..c.layers {
+            let mut buf = Vec::new();
+            c.pack_layer_range(l, 0, len, &mut buf);
+            chunks.push(buf);
+        }
+    }
+    chunks
+}
+
+fn main() {
+    let mut rng = Rng::new(0);
+    // small-config shapes: target 6×8×384×32, draft 2×4×384×32
+    for &len in &[64usize, 256, 384] {
+        let draft = filled(2, 4, 384, 32, len, &mut rng);
+        let target = filled(6, 8, 384, 32, len, &mut rng);
+        let bytes = 2 * len * (draft.row_elems() + target.row_elems()) * 4;
+
+        let r = bench(&format!("migration/hier-pack/{len}tok"), 5, 100, || {
+            black_box(pack_hierarchical(
+                &[&draft],
+                &[&target],
+                &[0],
+                &[(0, len)],
+            ));
+        });
+        println!(
+            "  pack bandwidth: {:.2} GiB/s ({} KiB)",
+            bytes as f64 / r.mean_ns * 1e9 / (1 << 30) as f64,
+            bytes / 1024
+        );
+
+        bench(&format!("migration/naive-pack/{len}tok"), 5, 100, || {
+            black_box(naive_pack(&draft, &target, len));
+        });
+
+        let packed = pack_hierarchical(&[&draft], &[&target], &[0], &[(0, len)]);
+        bench(&format!("migration/unpack/{len}tok"), 5, 100, || {
+            let mut dd = KvCache::new(2, 4, 384, 32);
+            let mut dt = KvCache::new(6, 8, 384, 32);
+            unpack_hierarchical(&packed, &mut [&mut dd], &mut [&mut dt]);
+            black_box(dt.len);
+        });
+    }
+
+    // multi-sample batch pack (one reallocation of 5 samples, Fig 5)
+    let caches: Vec<(KvCache, KvCache)> = (0..5)
+        .map(|_| {
+            (
+                filled(2, 4, 384, 32, 300, &mut rng),
+                filled(6, 8, 384, 32, 300, &mut rng),
+            )
+        })
+        .collect();
+    let drafts: Vec<&KvCache> = caches.iter().map(|c| &c.0).collect();
+    let targets: Vec<&KvCache> = caches.iter().map(|c| &c.1).collect();
+    let ids = [0u64, 1, 2, 3, 4];
+    let ranges = [(0usize, 300usize); 5];
+    bench("migration/hier-pack/5-samples-300tok", 5, 50, || {
+        black_box(pack_hierarchical(&drafts, &targets, &ids, &ranges));
+    });
+}

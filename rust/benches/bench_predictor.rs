@@ -1,0 +1,57 @@
+//! Bench: decision-feature predictors (§5.2) — the "<1 ms" claim.
+//!
+//! Cache-hit vs cache-miss prediction paths, acceptance lookup, refits.
+
+use rlhfspec::benchutil::{bench, bench_batched, black_box};
+use rlhfspec::coordinator::predictor::{AcceptancePredictor, TsdPredictor};
+use rlhfspec::utils::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0);
+
+    // t_sd regression + bucket cache.
+    let mut tsd = TsdPredictor::new(256, 4);
+    for s in 0..60 {
+        for d in 1..50 {
+            tsd.observe(s * 48, d, 0.014 + 8e-7 * (s * 48) as f64 + 1.5e-4 * d as f64);
+        }
+    }
+    tsd.refit();
+
+    let _ = tsd.predict(12_345, 96); // warm the bucket
+    bench_batched("tsd/predict/cache-hit", 5, 200, 1000, || {
+        black_box(tsd.predict(12_400, 97)); // same bucket
+    });
+
+    let mut miss_seq = 0usize;
+    bench_batched("tsd/predict/cache-miss", 5, 200, 1000, || {
+        miss_seq += 257; // new bucket every call
+        black_box(tsd.predict(miss_seq, 8));
+    });
+
+    bench("tsd/refit/3k-samples", 3, 50, || {
+        let mut t = tsd.clone();
+        t.refit();
+        black_box(t.coefficients());
+    });
+
+    // acceptance predictor
+    let mut acc = AcceptancePredictor::new(24);
+    for _ in 0..20_000 {
+        let dl = rng.f32();
+        let ok = rng.chance((dl as f64).sqrt());
+        acc.observe(dl, ok);
+    }
+    acc.refit();
+    bench_batched("acceptance/predict", 5, 200, 1000, || {
+        black_box(acc.predict(0.37));
+    });
+    bench("acceptance/refit/20k-obs", 3, 100, || {
+        let mut a = acc.clone();
+        a.refit();
+        black_box(a.correlation());
+    });
+    bench_batched("acceptance/observe", 5, 200, 1000, || {
+        acc.observe(0.2, true);
+    });
+}

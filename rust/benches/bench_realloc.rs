@@ -1,0 +1,31 @@
+//! Bench: reallocation policy (§6.1) — the SRD overhead of §7.7.
+
+use rlhfspec::benchutil::{bench, black_box};
+use rlhfspec::coordinator::reallocator::Reallocator;
+use rlhfspec::utils::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0);
+    for n in [2usize, 8, 16, 64] {
+        let counts: Vec<usize> = (0..n).map(|_| rng.below(40)).collect();
+        let caps = vec![256usize; n];
+        let mut re = Reallocator::new(10, 1);
+        let mut step = 0u64;
+        bench(&format!("realloc/decide/{n}-instances"), 10, 500, || {
+            step += 1;
+            black_box(re.decide(step, &counts, &caps));
+        });
+    }
+
+    // threshold refit over a large observation window
+    let mut re = Reallocator::new(10, 1);
+    for _ in 0..20_000 {
+        let c = 1 + rng.below(64);
+        re.observe(c, (c.min(24) * 60) as f64 + rng.normal() * 30.0);
+    }
+    bench("realloc/refit-threshold/20k-obs", 3, 50, || {
+        let mut r = re.clone();
+        r.refit_threshold();
+        black_box(r.threshold);
+    });
+}

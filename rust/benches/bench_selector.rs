@@ -1,0 +1,64 @@
+//! Bench: layer-level strategy search (§5.3) — the WDS overhead of §7.7.
+//!
+//! Measures the pruned search vs exhaustive argmax over realistic
+//! candidate-tree batches, plus the pruning win at large max-n.
+
+use rlhfspec::benchutil::{bench, black_box};
+use rlhfspec::config::SelectorConfig;
+use rlhfspec::coordinator::predictor::TsdPredictor;
+use rlhfspec::coordinator::selector::{select_exhaustive, select_strategy};
+use rlhfspec::sim::acceptance::AcceptanceModel;
+use rlhfspec::spec::tree::CandidateTree;
+use rlhfspec::utils::rng::Rng;
+
+fn fitted_tsd() -> TsdPredictor {
+    let mut t = TsdPredictor::new(256, 4);
+    for s in 0..40 {
+        for d in 1..40 {
+            t.observe(s * 64, d, 0.014 + 8e-7 * (s * 64) as f64 + 1.5e-4 * d as f64);
+        }
+    }
+    t.refit();
+    t
+}
+
+fn trees(batch: usize, rng: &mut Rng) -> Vec<CandidateTree> {
+    let m = AcceptanceModel::lmsys();
+    (0..batch)
+        .map(|_| {
+            let mut t = m.make_tree(0, 5, 2, 4, 96, rng);
+            for n in t.nodes.iter_mut() {
+                n.w = n.dl;
+            }
+            t
+        })
+        .collect()
+}
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let cfg = SelectorConfig::default();
+
+    for batch in [1usize, 8, 24, 64] {
+        let ts = trees(batch, &mut rng);
+        let refs: Vec<&CandidateTree> = ts.iter().collect();
+        let mut tsd = fitted_tsd();
+        bench(&format!("selector/pruned/batch{batch}"), 20, 200, || {
+            black_box(select_strategy(&cfg, &mut tsd, &refs, batch * 1000, 48));
+        });
+        let mut tsd2 = fitted_tsd();
+        bench(&format!("selector/exhaustive/batch{batch}"), 20, 200, || {
+            black_box(select_exhaustive(&mut tsd2, &refs, batch * 1000, 48));
+        });
+    }
+
+    // §7.7 check: per-decision cost must be ≪ a ~50 ms verify step.
+    let ts = trees(24, &mut rng);
+    let refs: Vec<&CandidateTree> = ts.iter().collect();
+    let mut tsd = fitted_tsd();
+    let r = bench("selector/paper-operating-point", 20, 500, || {
+        black_box(select_strategy(&cfg, &mut tsd, &refs, 24_000, 48));
+    });
+    let pct = 100.0 * r.mean_ns / 50e6;
+    println!("WDS overhead at 50 ms steps: {pct:.3}% (paper bound: 3.87% total)");
+}

@@ -1,0 +1,38 @@
+//! Bench: simulator capacity — how fast the evaluation harness itself
+//! runs (cluster steps/sec), so figure sweeps stay cheap.
+
+use std::time::Instant;
+
+use rlhfspec::benchutil::{bench, black_box};
+use rlhfspec::sim::cluster::{ClusterConfig, SimCluster};
+use rlhfspec::sim::engine::SimMode;
+
+fn main() {
+    // Single full cluster run (Fig 11 cell) wall time.
+    for (label, mode) in [("ar", SimMode::Ar), ("adaptive", SimMode::Adaptive)] {
+        bench(&format!("sim/cluster-run/{label}/128-samples"), 1, 5, || {
+            let cfg = ClusterConfig {
+                instances: 4,
+                mode,
+                n_samples: 128,
+                seed: 7,
+                ..Default::default()
+            };
+            black_box(SimCluster::new(cfg).run());
+        });
+    }
+
+    // Virtual-vs-wall speed ratio: how many simulated seconds per real
+    // second the harness sustains.
+    let cfg = ClusterConfig { instances: 8, n_samples: 256, seed: 1, ..Default::default() };
+    let t0 = Instant::now();
+    let r = SimCluster::new(cfg).run();
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "sim speed: {:.0} virtual s in {:.2} wall s = {:.0}× real time ({} tokens simulated)",
+        r.makespan,
+        wall,
+        r.makespan / wall,
+        r.total_tokens
+    );
+}

@@ -1,0 +1,36 @@
+//! Bench: candidate-tree operations (§2.2) — build, top-n selection,
+//! dense selection materialization (mask/positions for the verify call).
+
+use rlhfspec::benchutil::{bench, black_box};
+use rlhfspec::sim::acceptance::AcceptanceModel;
+use rlhfspec::utils::rng::Rng;
+
+fn main() {
+    let m = AcceptanceModel::lmsys();
+    let mut rng = Rng::new(0);
+
+    for &size in &[16usize, 48, 96] {
+        bench(&format!("tree/build/{size}-nodes"), 10, 500, || {
+            black_box(m.make_tree(0, 6, 2, 6, size, &mut rng));
+        });
+
+        let mut tree = m.make_tree(0, 6, 2, 6, size, &mut rng);
+        for n in tree.nodes.iter_mut() {
+            n.w = n.dl;
+        }
+        let budget = (size / 2).max(1);
+        bench(&format!("tree/select-top-n/{size}-nodes"), 10, 500, || {
+            black_box(tree.select_top_n(budget));
+        });
+
+        let order = tree.select_top_n(budget);
+        bench(&format!("tree/selection-mask/{size}-nodes"), 10, 500, || {
+            black_box(tree.selection(&order));
+        });
+
+        let sel = tree.selection(&order);
+        bench(&format!("tree/padded/{size}-nodes"), 10, 500, || {
+            black_box(sel.padded(96));
+        });
+    }
+}

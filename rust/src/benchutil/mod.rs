@@ -1,0 +1,119 @@
+//! Mini benchmark harness (no criterion in the offline registry).
+//!
+//! Each file in `rust/benches/` uses `harness = false` and drives this:
+//! warmup, timed iterations, mean/p50/p99 + throughput reporting, and a
+//! machine-readable summary line (`BENCH <name> mean_ns=... p50_ns=...`)
+//! that `EXPERIMENTS.md` snapshots are generated from.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    summarize(name, samples)
+}
+
+/// Time `f` in batches (for sub-microsecond operations): each sample is
+/// `batch` invocations, reported per-invocation.
+pub fn bench_batched<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    samples_n: usize,
+    batch: usize,
+    mut f: F,
+) -> BenchResult {
+    for _ in 0..warmup * batch {
+        f();
+    }
+    let mut samples = Vec::with_capacity(samples_n);
+    for _ in 0..samples_n {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    summarize(name, samples)
+}
+
+fn summarize(name: &str, mut samples: Vec<f64>) -> BenchResult {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let p = |q: f64| samples[((q * (n - 1) as f64).round() as usize).min(n - 1)];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        p50_ns: p(0.50),
+        p99_ns: p(0.99),
+        min_ns: samples[0],
+    };
+    println!(
+        "BENCH {name} iters={n} mean={} p50={} p99={} min={}",
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.p50_ns),
+        fmt_ns(r.p99_ns),
+        fmt_ns(r.min_ns),
+    );
+    r
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Black-box to stop the optimizer deleting benchmarked work.
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", 2, 20, || {
+            black_box(42u64.wrapping_mul(7));
+        });
+        assert_eq!(r.iters, 20);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p50_ns <= r.p99_ns);
+        assert!(r.min_ns <= r.mean_ns * 1.001);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.2e9), "3.20s");
+    }
+}

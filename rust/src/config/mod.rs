@@ -1,0 +1,260 @@
+//! Run configuration: generation, selector, reallocation and RLHF knobs.
+//!
+//! Values load from a simple `key = value` config file (TOML-subset with
+//! `[section]` headers, comments, strings, numbers, bools) and can be
+//! overridden from CLI `--section.key value` options, so every example and
+//! bench shares one config surface.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Speculative generation knobs (paper §2.2, §5).
+#[derive(Clone, Debug)]
+pub struct SpecConfig {
+    /// Children expanded per tree node during drafting.
+    pub branch: usize,
+    /// Maximum tree depth (draft steps per speculative round).
+    pub max_depth: usize,
+    /// Maximum draft token budget n considered by the selector.
+    pub max_draft: usize,
+    /// Fixed n for the static-`Speculative` baseline.
+    pub static_n: usize,
+    /// Sampling temperature for generation.
+    pub temperature: f32,
+    /// Greedy (argmax) acceptance vs stochastic speculative sampling.
+    pub greedy: bool,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        SpecConfig { branch: 2, max_depth: 5, max_draft: 16, static_n: 8, temperature: 1.0, greedy: false }
+    }
+}
+
+/// Workload-aware drafting-strategy selector knobs (paper §5).
+#[derive(Clone, Debug)]
+pub struct SelectorConfig {
+    /// Enable the selector (off = static_n baseline behaviour).
+    pub enabled: bool,
+    /// Early-stop after this many consecutive objective decreases (§5.3).
+    pub patience: usize,
+    /// Bucket widths for the t_sd prediction cache (§5.2).
+    pub nseq_bucket: usize,
+    pub ndraft_bucket: usize,
+    /// Online refit period (steps) for the acceptance/t_sd models.
+    pub refit_every: usize,
+}
+
+impl Default for SelectorConfig {
+    fn default() -> Self {
+        SelectorConfig { enabled: true, patience: 2, nseq_bucket: 256, ndraft_bucket: 4, refit_every: 64 }
+    }
+}
+
+/// Sample-reallocation knobs (paper §6).
+#[derive(Clone, Debug)]
+pub struct ReallocConfig {
+    pub enabled: bool,
+    /// Decision period in steps (§6.1 "cooldown").
+    pub cooldown: usize,
+    /// Initial throughput-roofline threshold (samples); refined online.
+    pub threshold: usize,
+    /// Simulated interconnect bandwidth for KV transfer (bytes/sec).
+    pub link_bandwidth: f64,
+    /// Simulated per-message link latency (seconds).
+    pub link_latency: f64,
+}
+
+impl Default for ReallocConfig {
+    fn default() -> Self {
+        ReallocConfig {
+            enabled: true,
+            cooldown: 8,
+            threshold: 8,
+            // PCIe 4.0 x16-ish effective bandwidth, per the paper's testbed.
+            link_bandwidth: 20e9,
+            link_latency: 20e-6,
+        }
+    }
+}
+
+/// RLHF pipeline knobs (paper §2.1).
+#[derive(Clone, Debug)]
+pub struct RlhfConfig {
+    pub instances: usize,
+    pub samples_per_iter: usize,
+    pub max_new_tokens: usize,
+    pub prompt_len: usize,
+    pub lr: f32,
+    pub clip_eps: f32,
+    pub kl_coef: f32,
+    pub ent_coef: f32,
+    pub gamma: f32,
+    pub gae_lambda: f32,
+}
+
+impl Default for RlhfConfig {
+    fn default() -> Self {
+        RlhfConfig {
+            instances: 2,
+            samples_per_iter: 16,
+            max_new_tokens: 48,
+            prompt_len: 16,
+            lr: 1e-4,
+            clip_eps: 0.2,
+            kl_coef: 0.02,
+            ent_coef: 0.0,
+            gamma: 1.0,
+            gae_lambda: 0.95,
+        }
+    }
+}
+
+/// Top-level run config.
+#[derive(Clone, Debug, Default)]
+pub struct RunConfig {
+    pub spec: SpecConfig,
+    pub selector: SelectorConfig,
+    pub realloc: ReallocConfig,
+    pub rlhf: RlhfConfig,
+    pub seed: u64,
+}
+
+impl RunConfig {
+    /// Load from a TOML-subset file then apply CLI-style overrides.
+    pub fn load(path: Option<&Path>, overrides: &BTreeMap<String, String>) -> Result<RunConfig> {
+        let mut kv = BTreeMap::new();
+        if let Some(p) = path {
+            let src = std::fs::read_to_string(p)
+                .with_context(|| format!("reading config {p:?}"))?;
+            parse_toml_subset(&src, &mut kv)?;
+        }
+        for (k, v) in overrides {
+            kv.insert(k.clone(), v.clone());
+        }
+        let mut cfg = RunConfig::default();
+        for (k, v) in &kv {
+            cfg.set(k, v).with_context(|| format!("config key {k:?}"))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Set one dotted key, e.g. `spec.max_depth = 6`.
+    pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
+        let b = |v: &str| -> Result<bool> {
+            v.parse().map_err(|_| anyhow!("expected bool, got {v:?}"))
+        };
+        let u = |v: &str| -> Result<usize> {
+            v.parse().map_err(|_| anyhow!("expected int, got {v:?}"))
+        };
+        let f = |v: &str| -> Result<f32> {
+            v.parse().map_err(|_| anyhow!("expected float, got {v:?}"))
+        };
+        let f64_ = |v: &str| -> Result<f64> {
+            v.parse().map_err(|_| anyhow!("expected float, got {v:?}"))
+        };
+        match key {
+            "seed" => self.seed = u(val)? as u64,
+            "spec.branch" => self.spec.branch = u(val)?,
+            "spec.max_depth" => self.spec.max_depth = u(val)?,
+            "spec.max_draft" => self.spec.max_draft = u(val)?,
+            "spec.static_n" => self.spec.static_n = u(val)?,
+            "spec.temperature" => self.spec.temperature = f(val)?,
+            "spec.greedy" => self.spec.greedy = b(val)?,
+            "selector.enabled" => self.selector.enabled = b(val)?,
+            "selector.patience" => self.selector.patience = u(val)?,
+            "selector.nseq_bucket" => self.selector.nseq_bucket = u(val)?,
+            "selector.ndraft_bucket" => self.selector.ndraft_bucket = u(val)?,
+            "selector.refit_every" => self.selector.refit_every = u(val)?,
+            "realloc.enabled" => self.realloc.enabled = b(val)?,
+            "realloc.cooldown" => self.realloc.cooldown = u(val)?,
+            "realloc.threshold" => self.realloc.threshold = u(val)?,
+            "realloc.link_bandwidth" => self.realloc.link_bandwidth = f64_(val)?,
+            "realloc.link_latency" => self.realloc.link_latency = f64_(val)?,
+            "rlhf.instances" => self.rlhf.instances = u(val)?,
+            "rlhf.samples_per_iter" => self.rlhf.samples_per_iter = u(val)?,
+            "rlhf.max_new_tokens" => self.rlhf.max_new_tokens = u(val)?,
+            "rlhf.prompt_len" => self.rlhf.prompt_len = u(val)?,
+            "rlhf.lr" => self.rlhf.lr = f(val)?,
+            "rlhf.clip_eps" => self.rlhf.clip_eps = f(val)?,
+            "rlhf.kl_coef" => self.rlhf.kl_coef = f(val)?,
+            "rlhf.ent_coef" => self.rlhf.ent_coef = f(val)?,
+            "rlhf.gamma" => self.rlhf.gamma = f(val)?,
+            "rlhf.gae_lambda" => self.rlhf.gae_lambda = f(val)?,
+            _ => bail!("unknown config key"),
+        }
+        Ok(())
+    }
+}
+
+/// Parse `[section]` + `key = value` lines into dotted keys.
+fn parse_toml_subset(src: &str, out: &mut BTreeMap<String, String>) -> Result<()> {
+    let mut section = String::new();
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        let val = v.trim().trim_matches('"').to_string();
+        out.insert(key, val);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = RunConfig::default();
+        assert!(c.spec.max_draft >= c.spec.branch);
+        assert!(c.selector.enabled);
+        assert!(c.realloc.link_bandwidth > 1e9);
+    }
+
+    #[test]
+    fn toml_subset_parses() {
+        let src = r#"
+            seed = 7
+            [spec]
+            max_depth = 6   # comment
+            greedy = true
+            [rlhf]
+            lr = 0.001
+        "#;
+        let mut kv = BTreeMap::new();
+        parse_toml_subset(src, &mut kv).unwrap();
+        let cfg = RunConfig::load(None, &kv).unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.spec.max_depth, 6);
+        assert!(cfg.spec.greedy);
+        assert!((cfg.rlhf.lr - 1e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.set("nope.nope", "1").is_err());
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.set("spec.max_depth", "abc").is_err());
+    }
+}

@@ -1,0 +1,870 @@
+//! Multi-instance generation driver (Fig 6 workflow).
+//!
+//! One worker thread per generation instance (each owns its PJRT client —
+//! the "one client per GPU" topology), a monitor loop in the caller's
+//! thread, and message-passing for the reallocation/migration protocol:
+//!
+//! ```text
+//!   monitor                worker s                worker d
+//!     │  MigrateOut(s→d,k)   │                        │
+//!     ├──────────────────────▶ pick victims           │
+//!     │        AllocReq      │                        │
+//!     ◀──────────────────────┤                        │
+//!     ├──── DeliverAllocReq ─────────────────────────▶ capacity check
+//!     │        AllocAck      │                        │
+//!     ◀───────────────────────────────────────────────┤
+//!     ├──── AllocAck(ok) ────▶ send Stage1 (bulk KV)  │
+//!     │        Stage1        │   …keeps decoding…     │
+//!     ◀──────────────────────┤                        │
+//!     ├──── DeliverStage1 ───────────────────────────▶ unpack (phase 3)
+//!     │        Stage2        │ (next step boundary)   │
+//!     ◀──────────────────────┤ delta + control        │
+//!     ├──── DeliverStage2 ───────────────────────────▶ resume samples
+//! ```
+//!
+//! Initial allocation is sequential round-robin (paper §4: "training
+//! samples are first sequentially allocated to the generation instances").
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::instance::{
+    DecodeMode, FinishedSample, GenerationInstance, LiveSample, SampleTask,
+};
+use crate::coordinator::metrics::InstanceMetrics;
+use crate::coordinator::migration::{
+    migration_score, pack_hierarchical, unpack_hierarchical, AllocRequest, HierarchicalKv,
+    SampleControl,
+};
+use crate::coordinator::reallocator::Reallocator;
+use crate::runtime::{HostTensor, Manifest, ModelStore};
+use crate::spec::kvcache::KvCache;
+use crate::utils::stats::Ema;
+
+// ---------------------------------------------------------------------------
+// Protocol messages
+// ---------------------------------------------------------------------------
+
+enum Cmd {
+    Add(Vec<SampleTask>),
+    MigrateOut { to: usize, count: usize },
+    AllocAck { ok: bool },
+    DeliverAllocReq(AllocRequest),
+    DeliverStage1(Stage1Pkt),
+    DeliverStage2(Stage2Pkt),
+    /// Broadcast fresh actor/draft weights (next RLHF iteration).
+    UpdateWeights(Vec<HostTensor>, Vec<HostTensor>),
+    /// Emit a Done report for the current batch but keep running.
+    Report,
+    Stop,
+}
+
+struct Stage1Pkt {
+    from: usize,
+    kv: HierarchicalKv,
+}
+
+struct Stage2Pkt {
+    from: usize,
+    kv_delta: HierarchicalKv,
+    control: Vec<SampleControl>,
+    waiting_tasks: Vec<SampleTask>,
+}
+
+enum Event {
+    Progress {
+        instance: usize,
+        sample_count: usize,
+        throughput: f64,
+        finished: usize,
+    },
+    AllocReq {
+        to: usize,
+        req: AllocRequest,
+    },
+    AllocAck {
+        to_source: usize,
+        ok: bool,
+    },
+    Stage1 {
+        to: usize,
+        pkt: Stage1Pkt,
+    },
+    Stage2 {
+        to: usize,
+        pkt: Stage2Pkt,
+    },
+    MigrationRefused,
+    Done {
+        instance: usize,
+        finished: Vec<FinishedSample>,
+        metrics: Box<InstanceMetrics>,
+        fig7_curve: Vec<(f64, f64, u64)>,
+        accept_corr: f64,
+        tsd_cache_hits: u64,
+        tsd_cache_misses: u64,
+    },
+    Fatal {
+        instance: usize,
+        error: String,
+    },
+}
+
+/// Per-instance summary returned to the caller.
+pub struct InstanceReport {
+    pub id: usize,
+    pub metrics: InstanceMetrics,
+    pub fig7_curve: Vec<(f64, f64, u64)>,
+    pub accept_corr: f64,
+    pub tsd_cache_hits: u64,
+    pub tsd_cache_misses: u64,
+}
+
+/// Whole-run summary.
+pub struct GenerationReport {
+    pub finished: Vec<FinishedSample>,
+    pub instances: Vec<InstanceReport>,
+    pub wall_secs: f64,
+    pub migrations: u64,
+    pub migration_refusals: u64,
+    pub realloc_decisions: u64,
+    /// Seconds the monitor spent inside reallocation decisions (§7.7 SRD).
+    pub srd_secs: f64,
+    /// Total generated tokens across instances.
+    pub total_tokens: u64,
+}
+
+impl GenerationReport {
+    pub fn throughput_tokens(&self) -> f64 {
+        self.total_tokens as f64 / self.wall_secs.max(1e-9)
+    }
+
+    pub fn throughput_samples(&self) -> f64 {
+        self.finished.len() as f64 / self.wall_secs.max(1e-9)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker
+// ---------------------------------------------------------------------------
+
+struct MigOutState {
+    to: usize,
+    live_ids: Vec<u64>,
+    snapshots: Vec<usize>,
+    waiting_tasks: Vec<SampleTask>,
+    stage1_sent: bool,
+}
+
+struct Worker {
+    inst: GenerationInstance,
+    cmds: Receiver<Cmd>,
+    events: Sender<Event>,
+    mig_out: Option<MigOutState>,
+    /// Stage-1 buffers keyed by source instance: (draft,target) caches + ids.
+    mig_in_kv: BTreeMap<usize, (Vec<(KvCache, KvCache)>, Vec<u64>)>,
+    throughput: Ema,
+    last_tokens: u64,
+}
+
+impl Worker {
+    fn run(mut self) {
+        loop {
+            // Drain commands.
+            loop {
+                match self.cmds.try_recv() {
+                    Ok(Cmd::Stop) => {
+                        self.finishup();
+                        return;
+                    }
+                    Ok(cmd) => {
+                        if let Err(e) = self.handle(cmd) {
+                            let _ = self.events.send(Event::Fatal {
+                                instance: self.inst.id,
+                                error: format!("{e:#}"),
+                            });
+                            return;
+                        }
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        self.finishup();
+                        return;
+                    }
+                }
+            }
+
+            if self.inst.is_idle() {
+                // Flush any Stage-2 that was waiting on a step boundary
+                // (all victims may have finished during the overlap step).
+                if let Some(state) = self.mig_out.take() {
+                    if state.stage1_sent {
+                        if self.send_stage2(state).is_err() {
+                            return;
+                        }
+                    } else {
+                        self.mig_out = Some(state);
+                    }
+                }
+                // Nothing to do: block briefly for commands.
+                match self.cmds.recv_timeout(Duration::from_millis(5)) {
+                    Ok(Cmd::Stop) => {
+                        self.finishup();
+                        return;
+                    }
+                    Ok(cmd) => {
+                        if let Err(e) = self.handle(cmd) {
+                            let _ = self.events.send(Event::Fatal {
+                                instance: self.inst.id,
+                                error: format!("{e:#}"),
+                            });
+                            return;
+                        }
+                    }
+                    Err(_) => {}
+                }
+                continue;
+            }
+
+            let t0 = Instant::now();
+            if let Err(e) = self.inst.step() {
+                let _ = self.events.send(Event::Fatal {
+                    instance: self.inst.id,
+                    error: format!("{e:#}"),
+                });
+                return;
+            }
+            let dt = t0.elapsed().as_secs_f64().max(1e-9);
+            let new_tokens = self.inst.metrics.tokens_out - self.last_tokens;
+            self.last_tokens = self.inst.metrics.tokens_out;
+            let tp = self.throughput.update(new_tokens as f64 / dt);
+
+            // Stage 2 of an in-flight outbound migration fires at the step
+            // boundary after Stage 1 (the overlapped decode step).
+            if let Some(state) = self.mig_out.take() {
+                if state.stage1_sent {
+                    if let Err(e) = self.send_stage2(state) {
+                        let _ = self.events.send(Event::Fatal {
+                            instance: self.inst.id,
+                            error: format!("{e:#}"),
+                        });
+                        return;
+                    }
+                } else {
+                    self.mig_out = Some(state);
+                }
+            }
+
+            let _ = self.events.send(Event::Progress {
+                instance: self.inst.id,
+                sample_count: self.inst.sample_count(),
+                throughput: tp,
+                finished: self.inst.finished.len(),
+            });
+        }
+    }
+
+    fn handle(&mut self, cmd: Cmd) -> Result<()> {
+        match cmd {
+            Cmd::Add(tasks) => {
+                for t in tasks {
+                    self.inst.add_task(t);
+                }
+            }
+            Cmd::MigrateOut { to, count } => self.begin_migration(to, count)?,
+            Cmd::AllocAck { ok } => self.on_alloc_ack(ok)?,
+            Cmd::DeliverAllocReq(req) => {
+                // Capacity check: accept if total samples stay within 4×
+                // decode slots (the instance's practical memory budget).
+                let cap = self.inst.capacity() * 4;
+                let ok = self.inst.sample_count() + req.sample_ids.len() <= cap;
+                let _ = self.events.send(Event::AllocAck {
+                    to_source: req.from_instance,
+                    ok,
+                });
+            }
+            Cmd::DeliverStage1(pkt) => {
+                // Phase 3: unpack into fresh per-sample caches immediately.
+                let man = self.inst.engine.manifest.clone();
+                let n = pkt.kv.spans.len();
+                let mut caches: Vec<(KvCache, KvCache)> = (0..n)
+                    .map(|_| {
+                        (
+                            KvCache::new(
+                                man.draft.n_layers,
+                                man.draft.n_heads,
+                                man.draft.max_seq,
+                                man.draft.d_head,
+                            ),
+                            KvCache::new(
+                                man.target.n_layers,
+                                man.target.n_heads,
+                                man.target.max_seq,
+                                man.target.d_head,
+                            ),
+                        )
+                    })
+                    .collect();
+                {
+                    let mut drafts: Vec<&mut KvCache> = Vec::new();
+                    let mut targets: Vec<&mut KvCache> = Vec::new();
+                    for (d, t) in caches.iter_mut() {
+                        drafts.push(d);
+                        targets.push(t);
+                    }
+                    unpack_hierarchical(&pkt.kv, &mut drafts, &mut targets);
+                }
+                let ids = pkt.kv.spans.iter().map(|s| s.id).collect();
+                self.mig_in_kv.insert(pkt.from, (caches, ids));
+            }
+            Cmd::DeliverStage2(pkt) => self.finish_migration_in(pkt)?,
+            Cmd::UpdateWeights(tw, dw) => {
+                self.inst.target.set_weights(&tw)?;
+                self.inst.draft.set_weights(&dw)?;
+            }
+            Cmd::Report => self.report_batch(),
+            Cmd::Stop => unreachable!("handled by caller"),
+        }
+        Ok(())
+    }
+
+    /// Emit a Done event for the finished-so-far batch without stopping.
+    fn report_batch(&mut self) {
+        let fig7_curve = self.inst.accept_pred.curve();
+        let accept_corr = self.inst.accept_pred.correlation();
+        let _ = self.events.send(Event::Done {
+            instance: self.inst.id,
+            finished: std::mem::take(&mut self.inst.finished),
+            metrics: Box::new(self.inst.metrics.clone()),
+            fig7_curve,
+            accept_corr,
+            tsd_cache_hits: self.inst.tsd_pred.cache_hits,
+            tsd_cache_misses: self.inst.tsd_pred.cache_misses,
+        });
+    }
+
+    /// Source side: pick victims and send the alloc request.
+    fn begin_migration(&mut self, to: usize, count: usize) -> Result<()> {
+        let mut remaining = count;
+        // Waiting tasks first: no KV to move at all.
+        let mut waiting_tasks = Vec::new();
+        while remaining > 0 && !self.inst.waiting.is_empty() {
+            waiting_tasks.push(self.inst.waiting.pop().unwrap());
+            remaining -= 1;
+        }
+        // Then parked, treated like waiting but carrying KV — simplest is
+        // to treat them as live victims below; push them back to live pick.
+        // Live victims by the §6.1 score: short sequences, low accept rate.
+        let max_seq = self.inst.engine.manifest.target.max_seq;
+        let mut scored: Vec<(f64, u64)> = self
+            .inst
+            .live
+            .iter()
+            .chain(self.inst.parked.iter())
+            .map(|s| {
+                (
+                    migration_score(s.seq_len(), s.mean_accepted(), max_seq),
+                    s.task.id,
+                )
+            })
+            .collect();
+        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        // Never migrate ALL live samples away (keep at least one decoding
+        // unless the order insists).
+        let live_ids: Vec<u64> = scored.iter().take(remaining).map(|&(_, id)| id).collect();
+
+        if waiting_tasks.is_empty() && live_ids.is_empty() {
+            let _ = self.events.send(Event::MigrationRefused);
+            return Ok(());
+        }
+        if live_ids.is_empty() {
+            // Only queue transfers: no KV, no handshake needed — a single
+            // Stage-2 message carries the tasks.
+            self.inst.metrics.samples_migrated_out += waiting_tasks.len() as u64;
+            let empty = pack_hierarchical(&[], &[], &[], &[]);
+            let _ = self.events.send(Event::Stage2 {
+                to,
+                pkt: Stage2Pkt {
+                    from: self.inst.id,
+                    kv_delta: empty,
+                    control: Vec::new(),
+                    waiting_tasks,
+                },
+            });
+            return Ok(());
+        }
+        let snapshots: Vec<usize> = live_ids
+            .iter()
+            .map(|id| self.find_sample(*id).map(|s| s.prefix_len).unwrap_or(0))
+            .collect();
+        let bytes: usize = live_ids
+            .iter()
+            .zip(&snapshots)
+            .map(|(id, &snap)| {
+                self.find_sample(*id)
+                    .map(|s| {
+                        2 * snap * (s.target_cache.row_elems() + s.draft_cache.row_elems()) * 4
+                    })
+                    .unwrap_or(0)
+            })
+            .sum();
+        let req = AllocRequest {
+            from_instance: self.inst.id,
+            sample_ids: live_ids.clone(),
+            bytes,
+        };
+        self.mig_out = Some(MigOutState {
+            to,
+            live_ids,
+            snapshots,
+            waiting_tasks,
+            stage1_sent: false,
+        });
+        let _ = self.events.send(Event::AllocReq { to, req });
+        Ok(())
+    }
+
+    fn find_sample(&self, id: u64) -> Option<&LiveSample> {
+        self.inst
+            .live
+            .iter()
+            .chain(self.inst.parked.iter())
+            .find(|s| s.task.id == id)
+    }
+
+    fn on_alloc_ack(&mut self, ok: bool) -> Result<()> {
+        let Some(mut state) = self.mig_out.take() else {
+            return Ok(());
+        };
+        if !ok {
+            // §6.2 phase 2: clear buffers, give waiting tasks back, report.
+            self.inst.waiting.extend(state.waiting_tasks.drain(..));
+            let _ = self.events.send(Event::MigrationRefused);
+            return Ok(());
+        }
+        // Stage 1: pack the snapshot of verified KV; samples KEEP decoding.
+        let mut drafts = Vec::new();
+        let mut targets = Vec::new();
+        let mut ids = Vec::new();
+        let mut ranges = Vec::new();
+        for (id, &snap) in state.live_ids.iter().zip(&state.snapshots) {
+            if let Some(s) = self.find_sample(*id) {
+                drafts.push(&s.draft_cache);
+                targets.push(&s.target_cache);
+                ids.push(*id);
+                ranges.push((0usize, snap));
+            }
+        }
+        let kv = pack_hierarchical(&drafts, &targets, &ids, &ranges);
+        let _ = self.events.send(Event::Stage1 {
+            to: state.to,
+            pkt: Stage1Pkt { from: self.inst.id, kv },
+        });
+        state.stage1_sent = true;
+        self.inst.metrics.samples_migrated_out += state.live_ids.len() as u64;
+        self.mig_out = Some(state);
+        Ok(())
+    }
+
+    /// Source side, one step after Stage 1: the delta + control state.
+    fn send_stage2(&mut self, state: MigOutState) -> Result<()> {
+        // Keep (victim, snapshot) pairs aligned even if some victims
+        // finished during the overlapped step (they stay on the source).
+        let mut victims: Vec<(LiveSample, usize)> = Vec::new();
+        for (id, &snap) in state.live_ids.iter().zip(&state.snapshots) {
+            if let Some(s) = self
+                .inst
+                .take_live(*id)
+                .or_else(|| {
+                    self.inst
+                        .parked
+                        .iter()
+                        .position(|p| p.task.id == *id)
+                        .map(|i| self.inst.parked.remove(i))
+                })
+            {
+                victims.push((s, snap));
+            }
+        }
+        let mut drafts = Vec::new();
+        let mut targets = Vec::new();
+        let mut ids = Vec::new();
+        let mut ranges = Vec::new();
+        let mut control = Vec::new();
+        for (v, snap) in victims.iter() {
+            drafts.push(&v.draft_cache);
+            targets.push(&v.target_cache);
+            ids.push(v.task.id);
+            ranges.push((*snap, v.prefix_len));
+            control.push(SampleControl::from_live(v));
+        }
+        let kv_delta = pack_hierarchical(&drafts, &targets, &ids, &ranges);
+        let _ = self.events.send(Event::Stage2 {
+            to: state.to,
+            pkt: Stage2Pkt {
+                from: self.inst.id,
+                kv_delta,
+                control,
+                waiting_tasks: state.waiting_tasks,
+            },
+        });
+        Ok(())
+    }
+
+    /// Destination side: merge the delta, rebuild live samples, resume.
+    fn finish_migration_in(&mut self, pkt: Stage2Pkt) -> Result<()> {
+        self.inst.metrics.samples_migrated_in += pkt.waiting_tasks.len() as u64;
+        for t in pkt.waiting_tasks {
+            self.inst.add_task(t);
+        }
+        let (mut caches, ids) = self.mig_in_kv.remove(&pkt.from).unwrap_or_default();
+        // Merge the delta into the stage-1 caches (ids must align).
+        if !pkt.kv_delta.spans.is_empty() {
+            let mut drafts: Vec<&mut KvCache> = Vec::new();
+            let mut targets: Vec<&mut KvCache> = Vec::new();
+            for span in &pkt.kv_delta.spans {
+                let pos = ids
+                    .iter()
+                    .position(|id| id == &span.id)
+                    .ok_or_else(|| anyhow!("stage2 delta for unknown sample {}", span.id))?;
+                // Safety: spans have unique ids, so disjoint indices.
+                let ptr = caches.as_mut_ptr();
+                unsafe {
+                    drafts.push(&mut (*ptr.add(pos)).0);
+                    targets.push(&mut (*ptr.add(pos)).1);
+                }
+            }
+            unpack_hierarchical(&pkt.kv_delta, &mut drafts, &mut targets);
+        }
+        for ctl in pkt.control {
+            let pos = ids
+                .iter()
+                .position(|id| *id == ctl.task.id)
+                .ok_or_else(|| anyhow!("stage2 control for unknown sample {}", ctl.task.id))?;
+            let (draft_cache, target_cache) = {
+                let c = &caches[pos];
+                (c.0.clone(), c.1.clone())
+            };
+            let live = LiveSample {
+                task: ctl.task,
+                generated: ctl.generated,
+                prefix_len: ctl.prefix_len,
+                target_cache,
+                draft_cache,
+                rounds: ctl.rounds,
+                drafts_accepted: ctl.drafts_accepted,
+                drafts_proposed: ctl.drafts_proposed,
+            };
+            self.inst.insert_parked(live);
+        }
+        Ok(())
+    }
+
+    fn finishup(mut self) {
+        let fig7_curve = self.inst.accept_pred.curve();
+        let accept_corr = self.inst.accept_pred.correlation();
+        let _ = self.events.send(Event::Done {
+            instance: self.inst.id,
+            finished: std::mem::take(&mut self.inst.finished),
+            metrics: Box::new(self.inst.metrics.clone()),
+            fig7_curve,
+            accept_corr,
+            tsd_cache_hits: self.inst.tsd_pred.cache_hits,
+            tsd_cache_misses: self.inst.tsd_pred.cache_misses,
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+/// Persistent multi-instance generation service.
+///
+/// Worker threads (each with its own PJRT client and compiled executables)
+/// live across RLHF iterations: [`GenerationService::run_batch`] processes
+/// one generation stage, [`GenerationService::update_weights`] broadcasts
+/// the freshly trained actor/draft weights, and compiled artifacts are
+/// reused — exactly how a serving fleet amortizes warmup.
+pub struct GenerationService {
+    cfg: RunConfig,
+    manifest: Manifest,
+    cmd_txs: Vec<Sender<Cmd>>,
+    ev_rx: Receiver<Event>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+    realloc: Reallocator,
+    mode: DecodeMode,
+}
+
+impl GenerationService {
+    /// Spawn workers. `weights` cross the thread boundary as host tensors
+    /// (`xla::Literal` is not Send); each worker materializes its stores.
+    pub fn start(
+        artifacts_dir: &std::path::Path,
+        cfg: &RunConfig,
+        mode: DecodeMode,
+        target_weights: &[HostTensor],
+        draft_weights: &[HostTensor],
+    ) -> Result<GenerationService> {
+        let n_inst = cfg.rlhf.instances.max(1);
+        let manifest = Manifest::load(artifacts_dir)?;
+        let (ev_tx, ev_rx) = channel::<Event>();
+        let mut cmd_txs: Vec<Sender<Cmd>> = Vec::new();
+        let mut joins = Vec::new();
+
+        for i in 0..n_inst {
+            let (tx, rx) = channel::<Cmd>();
+            cmd_txs.push(tx);
+            let ev = ev_tx.clone();
+            let man = manifest.clone();
+            let cfgc = cfg.clone();
+            let tw: Vec<HostTensor> = target_weights.to_vec();
+            let dw: Vec<HostTensor> = draft_weights.to_vec();
+            let seed = cfg.seed ^ (0xABCD + i as u64);
+            joins.push(std::thread::spawn(move || {
+                let man = Rc::new(man);
+                let mut target = match ModelStore::init(&man, "target", 0) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        let _ = ev.send(Event::Fatal { instance: i, error: format!("{e:#}") });
+                        return;
+                    }
+                };
+                let mut draft = ModelStore::init(&man, "draft", 0).unwrap();
+                if target.set_weights(&tw).is_err() || draft.set_weights(&dw).is_err() {
+                    let _ = ev.send(Event::Fatal {
+                        instance: i,
+                        error: "weight broadcast failed".into(),
+                    });
+                    return;
+                }
+                let inst =
+                    match GenerationInstance::new(i, man, target, draft, cfgc, mode, seed) {
+                        Ok(x) => x,
+                        Err(e) => {
+                            let _ = ev
+                                .send(Event::Fatal { instance: i, error: format!("{e:#}") });
+                            return;
+                        }
+                    };
+                Worker {
+                    inst,
+                    cmds: rx,
+                    events: ev,
+                    mig_out: None,
+                    mig_in_kv: BTreeMap::new(),
+                    throughput: Ema::new(0.3),
+                    last_tokens: 0,
+                }
+                .run();
+            }));
+        }
+        Ok(GenerationService {
+            cfg: cfg.clone(),
+            manifest,
+            cmd_txs,
+            ev_rx,
+            joins,
+            realloc: Reallocator::new(cfg.realloc.threshold, cfg.realloc.cooldown as u64),
+            mode,
+        })
+    }
+
+    pub fn mode(&self) -> DecodeMode {
+        self.mode
+    }
+
+    /// Broadcast fresh actor/draft weights to every worker.
+    pub fn update_weights(
+        &self,
+        target_weights: &[HostTensor],
+        draft_weights: &[HostTensor],
+    ) -> Result<()> {
+        for tx in &self.cmd_txs {
+            tx.send(Cmd::UpdateWeights(
+                target_weights.to_vec(),
+                draft_weights.to_vec(),
+            ))
+            .map_err(|_| anyhow!("worker channel closed"))?;
+        }
+        Ok(())
+    }
+
+    /// Process one batch of samples to completion (one generation stage).
+    pub fn run_batch(&mut self, tasks: Vec<SampleTask>) -> Result<GenerationReport> {
+        let n_inst = self.cmd_txs.len();
+        let expected = tasks.len();
+        // Drain stale events from a previous batch.
+        while self.ev_rx.try_recv().is_ok() {}
+
+        // Sequential initial allocation (§4).
+        let mut batches: Vec<Vec<SampleTask>> = vec![Vec::new(); n_inst];
+        for (i, t) in tasks.into_iter().enumerate() {
+            batches[i % n_inst].push(t);
+        }
+        for (i, b) in batches.into_iter().enumerate() {
+            let _ = self.cmd_txs[i].send(Cmd::Add(b));
+        }
+
+        let t0 = Instant::now();
+        let mut counts = vec![0usize; n_inst];
+        let mut finished_counts = vec![0usize; n_inst];
+        let mut step: u64 = 0;
+        let mut migrations = 0u64;
+        let mut srd_secs = 0.0f64;
+        let mut reported = false;
+        let mut done_reports: BTreeMap<usize, InstanceReport> = BTreeMap::new();
+        let mut all_finished: Vec<FinishedSample> = Vec::new();
+        let mut refusals = 0u64;
+
+        loop {
+            // Generous stall timeout: a worker's FIRST step lazily
+            // compiles several XLA executables, which can take minutes on
+            // a small shared-CPU box.
+            let ev = match self.ev_rx.recv_timeout(Duration::from_secs(900)) {
+                Ok(e) => e,
+                Err(_) => {
+                    return Err(anyhow!(
+                        "generation stalled: {} / {expected} finished after {:?}",
+                        finished_counts.iter().sum::<usize>(),
+                        t0.elapsed()
+                    ))
+                }
+            };
+            match ev {
+                Event::Progress {
+                    instance,
+                    sample_count,
+                    throughput,
+                    finished,
+                } => {
+                    counts[instance] = sample_count;
+                    finished_counts[instance] = finished;
+                    step += 1;
+                    self.realloc.observe(sample_count.max(1), throughput);
+
+                    if self.cfg.realloc.enabled
+                        && !reported
+                        && self.realloc.should_decide(step, &counts)
+                    {
+                        let sw = Instant::now();
+                        self.realloc.refit_threshold();
+                        let caps: Vec<usize> = vec![
+                            self.manifest
+                                .batch_buckets
+                                .iter()
+                                .max()
+                                .copied()
+                                .unwrap_or(1)
+                                * 4;
+                            n_inst
+                        ];
+                        let plan = self.realloc.decide(step, &counts, &caps);
+                        srd_secs += sw.elapsed().as_secs_f64();
+                        for m in plan {
+                            migrations += 1;
+                            let _ = self.cmd_txs[m.from].send(Cmd::MigrateOut {
+                                to: m.to,
+                                count: m.count,
+                            });
+                        }
+                    }
+
+                    if !reported && finished_counts.iter().sum::<usize>() >= expected {
+                        reported = true;
+                        for tx in &self.cmd_txs {
+                            let _ = tx.send(Cmd::Report);
+                        }
+                    }
+                }
+                Event::AllocReq { to, req } => {
+                    let _ = self.cmd_txs[to].send(Cmd::DeliverAllocReq(req));
+                }
+                Event::AllocAck { to_source, ok } => {
+                    let _ = self.cmd_txs[to_source].send(Cmd::AllocAck { ok });
+                }
+                Event::Stage1 { to, pkt } => {
+                    let _ = self.cmd_txs[to].send(Cmd::DeliverStage1(pkt));
+                }
+                Event::Stage2 { to, pkt } => {
+                    let _ = self.cmd_txs[to].send(Cmd::DeliverStage2(pkt));
+                }
+                Event::MigrationRefused => {
+                    refusals += 1;
+                    self.realloc.report_refusal();
+                }
+                Event::Done {
+                    instance,
+                    finished,
+                    metrics,
+                    fig7_curve,
+                    accept_corr,
+                    tsd_cache_hits,
+                    tsd_cache_misses,
+                } => {
+                    all_finished.extend(finished);
+                    done_reports.insert(
+                        instance,
+                        InstanceReport {
+                            id: instance,
+                            metrics: *metrics,
+                            fig7_curve,
+                            accept_corr,
+                            tsd_cache_hits,
+                            tsd_cache_misses,
+                        },
+                    );
+                    if done_reports.len() == n_inst {
+                        break;
+                    }
+                }
+                Event::Fatal { instance, error } => {
+                    return Err(anyhow!("instance {instance} failed: {error}"));
+                }
+            }
+        }
+
+        let total_tokens = done_reports.values().map(|r| r.metrics.tokens_out).sum();
+        Ok(GenerationReport {
+            finished: all_finished,
+            instances: done_reports.into_values().collect(),
+            wall_secs: t0.elapsed().as_secs_f64(),
+            migrations,
+            migration_refusals: refusals,
+            realloc_decisions: self.realloc.decisions,
+            srd_secs,
+            total_tokens,
+        })
+    }
+
+    /// Stop all workers and join.
+    pub fn shutdown(self) {
+        for tx in &self.cmd_txs {
+            let _ = tx.send(Cmd::Stop);
+        }
+        for j in self.joins {
+            let _ = j.join();
+        }
+    }
+}
+
+/// One-shot convenience wrapper (start → run_batch → shutdown).
+pub fn run_generation(
+    artifacts_dir: &std::path::Path,
+    cfg: &RunConfig,
+    mode: DecodeMode,
+    tasks: Vec<SampleTask>,
+    target_weights: &[HostTensor],
+    draft_weights: &[HostTensor],
+) -> Result<GenerationReport> {
+    let mut svc =
+        GenerationService::start(artifacts_dir, cfg, mode, target_weights, draft_weights)?;
+    let report = svc.run_batch(tasks)?;
+    svc.shutdown();
+    Ok(report)
+}

@@ -1,0 +1,852 @@
+//! A generation instance: one "GPU" running the speculative round loop.
+//!
+//! Each instance owns a PJRT engine (its own client), target + draft
+//! weights, per-sample KV caches and the incrementally-maintained batch
+//! tensors. One [`GenerationInstance::step`] executes the paper's round:
+//!
+//! ```text
+//! draft (SSM tree expansion, batched, level by level)
+//!   → predict node weights w = F(dl)                 (§5.2)
+//!   → select draft budget n (layer-level search)     (§5.3)
+//!   → verify top-n tree with the target model        (L1 kernel)
+//!   → accept (greedy / stochastic spec sampling)     (§2.2)
+//!   → commit accepted KV rows host-side
+//! ```
+//!
+//! [`DecodeMode`] switches the same machinery between autoregressive
+//! (`Verl`-like baseline), static-n speculative (`Speculative` baseline)
+//! and the full workload-aware mode — giving the Fig 13 ablation an
+//! honest shared substrate.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::metrics::{InstanceMetrics, Stopwatch};
+use crate::coordinator::predictor::{AcceptancePredictor, TsdPredictor};
+use crate::coordinator::selector;
+use crate::runtime::{Engine, HostTensor, Manifest, ModelStore};
+use crate::spec::kvcache::{BatchedCache, KvCache};
+use crate::spec::sampler;
+use crate::spec::tree::{CandidateTree, Selection};
+use crate::spec::verify::{accept_greedy, accept_stochastic, AcceptOutcome};
+use crate::utils::rng::Rng;
+
+/// How the instance decodes (baselines + ablations share the substrate).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DecodeMode {
+    /// Autoregressive decoding (Verl/OpenRLHF-like generation).
+    Ar,
+    /// Speculative decoding with a fixed draft-token budget.
+    StaticSpec(usize),
+    /// Full RLHFSpec: workload-aware drafting-strategy selection.
+    Adaptive,
+}
+
+/// A sample entering the instance.
+#[derive(Clone, Debug)]
+pub struct SampleTask {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub eos: i32,
+}
+
+/// A completed sample leaving the instance.
+#[derive(Clone, Debug)]
+pub struct FinishedSample {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub response: Vec<i32>,
+    pub rounds: usize,
+    pub drafts_accepted: usize,
+    pub drafts_proposed: usize,
+}
+
+/// Live decoding state of one sample.
+pub struct LiveSample {
+    pub task: SampleTask,
+    /// Response tokens so far; the last one is the *pending* token whose
+    /// KV is not yet committed.
+    pub generated: Vec<i32>,
+    /// Committed cache length (= prompt_len + generated.len() - 1).
+    pub prefix_len: usize,
+    pub target_cache: KvCache,
+    pub draft_cache: KvCache,
+    pub rounds: usize,
+    pub drafts_accepted: usize,
+    pub drafts_proposed: usize,
+}
+
+impl LiveSample {
+    pub fn pending(&self) -> i32 {
+        *self.generated.last().expect("live sample has a pending token")
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.task.prompt.len() + self.generated.len()
+    }
+
+    /// Mean accepted drafts per round (migration-choice feature, §6.1).
+    pub fn mean_accepted(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.drafts_accepted as f64 / self.rounds as f64
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.generated.contains(&self.task.eos)
+            || self.generated.len() >= self.task.max_new_tokens
+    }
+
+    fn into_finished(self) -> FinishedSample {
+        let mut response = self.generated;
+        if let Some(p) = response.iter().position(|&t| t == self.task.eos) {
+            response.truncate(p + 1);
+        }
+        response.truncate(self.task.max_new_tokens);
+        FinishedSample {
+            id: self.task.id,
+            prompt: self.task.prompt,
+            response,
+            rounds: self.rounds,
+            drafts_accepted: self.drafts_accepted,
+            drafts_proposed: self.drafts_proposed,
+        }
+    }
+}
+
+pub struct GenerationInstance {
+    pub id: usize,
+    pub engine: Engine,
+    pub target: ModelStore,
+    pub draft: ModelStore,
+    pub cfg: RunConfig,
+    pub mode: DecodeMode,
+    pub live: Vec<LiveSample>,
+    /// Migrated-in samples with KV, waiting for a free decode slot.
+    pub parked: Vec<LiveSample>,
+    pub waiting: Vec<SampleTask>,
+    pub finished: Vec<FinishedSample>,
+    pub accept_pred: AcceptancePredictor,
+    pub tsd_pred: TsdPredictor,
+    pub metrics: InstanceMetrics,
+    rng: Rng,
+    batch_target: Option<BatchedCache>,
+    batch_draft: Option<BatchedCache>,
+    batch_dirty: bool,
+    pub steps: usize,
+    started: std::time::Instant,
+}
+
+impl GenerationInstance {
+    pub fn new(
+        id: usize,
+        manifest: Rc<Manifest>,
+        target: ModelStore,
+        draft: ModelStore,
+        cfg: RunConfig,
+        mode: DecodeMode,
+        seed: u64,
+    ) -> Result<Self> {
+        let engine = Engine::new(manifest)?;
+        Ok(GenerationInstance {
+            id,
+            engine,
+            target,
+            draft,
+            accept_pred: AcceptancePredictor::new(24),
+            tsd_pred: TsdPredictor::new(cfg.selector.nseq_bucket, cfg.selector.ndraft_bucket),
+            cfg,
+            mode,
+            live: Vec::new(),
+            parked: Vec::new(),
+            waiting: Vec::new(),
+            finished: Vec::new(),
+            metrics: InstanceMetrics::default(),
+            rng: Rng::new(seed),
+            batch_target: None,
+            batch_draft: None,
+            batch_dirty: true,
+            steps: 0,
+            started: std::time::Instant::now(),
+        })
+    }
+
+    /// Decoding-slot capacity (largest compiled batch bucket).
+    pub fn capacity(&self) -> usize {
+        *self.engine.manifest.batch_buckets.iter().max().unwrap_or(&1)
+    }
+
+    /// Total assigned samples (decoding + parked + waiting) — the
+    /// reallocator's "sample count" for this instance.
+    pub fn sample_count(&self) -> usize {
+        self.live.len() + self.parked.len() + self.waiting.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.live.is_empty() && self.parked.is_empty() && self.waiting.is_empty()
+    }
+
+    pub fn add_task(&mut self, task: SampleTask) {
+        self.waiting.push(task);
+    }
+
+    /// One full scheduler step: admit + prefill, then one decode round.
+    pub fn step(&mut self) -> Result<()> {
+        self.admit()?;
+        if self.live.is_empty() {
+            return Ok(());
+        }
+        match self.mode {
+            DecodeMode::Ar => self.step_ar()?,
+            DecodeMode::StaticSpec(_) | DecodeMode::Adaptive => self.step_spec()?,
+        }
+        self.retire_finished();
+        self.steps += 1;
+        if self.cfg.selector.enabled
+            && self.steps % self.cfg.selector.refit_every == 0
+        {
+            self.accept_pred.refit();
+            self.tsd_pred.refit();
+        }
+        self.metrics.trace.push((
+            self.started.elapsed().as_secs_f64(),
+            self.metrics.tokens_out,
+            self.sample_count(),
+        ));
+        Ok(())
+    }
+
+    /// Admit parked (migrated-in, already prefilled) then waiting samples
+    /// into free decode slots.
+    fn admit(&mut self) -> Result<()> {
+        while self.live.len() < self.capacity() && !self.parked.is_empty() {
+            let s = self.parked.remove(0);
+            self.live.push(s);
+            self.batch_dirty = true;
+        }
+        while self.live.len() < self.capacity() && !self.waiting.is_empty() {
+            let task = self.waiting.remove(0);
+            let mut sw = Stopwatch::start();
+            let s = self.prefill(task)?;
+            self.metrics.prefill_secs += sw.lap();
+            self.live.push(s);
+            self.batch_dirty = true;
+        }
+        Ok(())
+    }
+
+    /// Prefill a prompt through both models, chunked by tree buckets.
+    fn prefill(&mut self, task: SampleTask) -> Result<LiveSample> {
+        let man = self.engine.manifest.clone();
+        let td = &man.target;
+        let dd = &man.draft;
+        let mut target_cache = KvCache::new(td.n_layers, td.n_heads, td.max_seq, td.d_head);
+        let mut draft_cache = KvCache::new(dd.n_layers, dd.n_heads, dd.max_seq, dd.d_head);
+        if task.prompt.is_empty() {
+            bail!("empty prompt for sample {}", task.id);
+        }
+        let max_chunk = *man.tree_buckets.iter().max().unwrap();
+        let mut first_probs: Vec<f32> = Vec::new();
+        let mut done = 0usize;
+        while done < task.prompt.len() {
+            let chunk = (task.prompt.len() - done).min(max_chunk);
+            let toks = &task.prompt[done..done + chunk];
+            // causal-chain "tree": node i's parent is i-1.
+            let logits = self.prefill_chunk("target", &mut target_cache, toks, done)?;
+            self.prefill_chunk("draft", &mut draft_cache, toks, done)?;
+            if done + chunk == task.prompt.len() {
+                first_probs = logits;
+            }
+            done += chunk;
+        }
+        // First pending token from the target distribution at the prompt end.
+        let pending = if self.cfg.spec.greedy {
+            sampler::argmax(&first_probs) as i32
+        } else {
+            let p = sampler::softmax(&first_probs, self.cfg.spec.temperature);
+            sampler::sample(&p, &mut self.rng) as i32
+        };
+        Ok(LiveSample {
+            prefix_len: task.prompt.len(),
+            task,
+            generated: vec![pending],
+            target_cache,
+            draft_cache,
+            rounds: 0,
+            drafts_accepted: 0,
+            drafts_proposed: 0,
+        })
+    }
+
+    /// Run one causal chunk through `{model}_tree_b1_tT`, commit all rows,
+    /// return the logits of the LAST chunk position.
+    fn prefill_chunk(
+        &mut self,
+        model: &str,
+        cache: &mut KvCache,
+        toks: &[i32],
+        offset: usize,
+    ) -> Result<Vec<f32>> {
+        let man = self.engine.manifest.clone();
+        let t_bucket = man.tree_bucket(toks.len()).unwrap();
+        let name = man.tree_artifact(model, 1, toks.len())?;
+        let dims = man.model(model);
+        let t = toks.len();
+
+        let mut tokens = vec![0i32; t_bucket];
+        tokens[..t].copy_from_slice(toks);
+        let mut positions = vec![0i32; t_bucket];
+        for i in 0..t {
+            positions[i] = (offset + i) as i32;
+        }
+        let mut mask = vec![0f32; t_bucket * t_bucket];
+        for i in 0..t_bucket {
+            if i < t {
+                // causal within the chunk (cache prefix handled by plen)
+                for j in 0..=i {
+                    mask[i * t_bucket + j] = 1.0;
+                }
+            } else {
+                mask[i * t_bucket + i] = 1.0; // padded row: self only
+            }
+        }
+        let (kc, vc) = cache_tensors_single(cache);
+        let tokens_t = HostTensor::i32(vec![1, t_bucket], tokens);
+        let pos_t = HostTensor::i32(vec![1, t_bucket], positions);
+        let plen_t = HostTensor::i32(vec![1], vec![offset as i32]);
+        let mask_t = HostTensor::f32(vec![1, t_bucket, t_bucket], mask);
+        let store = if model == "target" { &self.target } else { &self.draft };
+        let stores: BTreeMap<String, &ModelStore> =
+            [(model.to_string(), store)].into_iter().collect();
+        let data: BTreeMap<&str, &HostTensor> = [
+            ("kc", &kc),
+            ("vc", &vc),
+            ("tokens", &tokens_t),
+            ("positions", &pos_t),
+            ("prefix_len", &plen_t),
+            ("tree_mask", &mask_t),
+        ]
+        .into_iter()
+        .collect();
+        let outs = self.engine.run_artifact(&name, &stores, &data)?;
+        // Commit every real row.
+        for i in 0..t {
+            cache.commit_row(&outs[1], &outs[2], 0, i, offset + i);
+        }
+        // Last real position's logits.
+        let v = dims.vocab;
+        let logits = outs[0].as_f32();
+        Ok(logits[(t - 1) * v..t * v].to_vec())
+    }
+
+    // ------------------------------------------------------------------
+    // Autoregressive baseline step
+    // ------------------------------------------------------------------
+
+    fn step_ar(&mut self) -> Result<()> {
+        let man = self.engine.manifest.clone();
+        let b_live = self.live.len();
+        let b = man.batch_bucket(b_live).unwrap();
+        self.rebuild_batches_if_needed(b)?;
+        let mut sw = Stopwatch::start();
+
+        let mut tokens = vec![0i32; b];
+        let mut positions = vec![0i32; b];
+        let mut plen = vec![0i32; b];
+        let mut mask = vec![0f32; b];
+        for (i, s) in self.live.iter().enumerate() {
+            tokens[i] = s.pending();
+            positions[i] = s.prefix_len as i32;
+            plen[i] = s.prefix_len as i32;
+        }
+        for i in 0..b {
+            mask[i] = 1.0; // T=1 self mask
+        }
+        let name = man.tree_artifact("target", b, 1)?;
+        // Borrow the batched KV tensors (no copy: they are only read
+        // while marshalling the call).
+        let (kc, vc) = {
+            let (k, v) = self.batch_target.as_ref().unwrap().tensors();
+            (k, v)
+        };
+        let tokens_t = HostTensor::i32(vec![b, 1], tokens);
+        let pos_t = HostTensor::i32(vec![b, 1], positions);
+        let plen_t = HostTensor::i32(vec![b], plen);
+        let mask_t = HostTensor::f32(vec![b, 1, 1], mask);
+        let stores: BTreeMap<String, &ModelStore> =
+            [("target".to_string(), &self.target)].into_iter().collect();
+        let data: BTreeMap<&str, &HostTensor> = [
+            ("kc", kc),
+            ("vc", vc),
+            ("tokens", &tokens_t),
+            ("positions", &pos_t),
+            ("prefix_len", &plen_t),
+            ("tree_mask", &mask_t),
+        ]
+        .into_iter()
+        .collect();
+        let outs = self.engine.run_artifact(&name, &stores, &data)?;
+        self.metrics.verify_secs += sw.lap();
+
+        let v = man.target.vocab;
+        let greedy = self.cfg.spec.greedy;
+        let temp = self.cfg.spec.temperature;
+        for i in 0..self.live.len() {
+            let logits = &outs[0].as_f32()[i * v..(i + 1) * v];
+            let next = if greedy {
+                sampler::argmax(logits) as i32
+            } else {
+                let p = sampler::softmax(logits, temp);
+                sampler::sample(&p, &mut self.rng) as i32
+            };
+            let dest = self.live[i].prefix_len;
+            self.live[i].target_cache.commit_row(&outs[1], &outs[2], i, 0, dest);
+            self.batch_target
+                .as_mut()
+                .unwrap()
+                .commit_row(&outs[1], &outs[2], i, i, 0, dest);
+            self.live[i].generated.push(next);
+            self.live[i].prefix_len += 1;
+            self.live[i].rounds += 1;
+            self.metrics.tokens_out += 1;
+        }
+        self.metrics.commit_secs += sw.lap();
+        self.metrics.rounds += 1;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Speculative step (static or adaptive)
+    // ------------------------------------------------------------------
+
+    fn step_spec(&mut self) -> Result<()> {
+        let man = self.engine.manifest.clone();
+        let b_live = self.live.len();
+        let b = man.batch_bucket(b_live).unwrap();
+        self.rebuild_batches_if_needed(b)?;
+        let step_sw = Stopwatch::start();
+        let mut sw = Stopwatch::start();
+
+        // ---- 1. draft: expand candidate trees level by level ----------
+        let (mut trees, level_orders, draft_rows, draft_dists) = self.draft_phase(b)?;
+        self.metrics.draft_secs += sw.lap();
+        let draft_secs = step_sw.elapsed();
+
+        // ---- 2. node weights w = F(dl) --------------------------------
+        for tree in trees.iter_mut() {
+            for node in tree.nodes.iter_mut() {
+                node.w = if node.parent.is_none() {
+                    1.0
+                } else {
+                    self.accept_pred.predict(node.dl)
+                };
+            }
+        }
+
+        // ---- 3. strategy selection ------------------------------------
+        let n_seq: usize = self.live.iter().map(|s| s.prefix_len).sum();
+        let max_n = self
+            .cfg
+            .spec
+            .max_draft
+            .min(*man.tree_buckets.iter().max().unwrap());
+        let n = match self.mode {
+            DecodeMode::StaticSpec(n) => n.clamp(1, max_n),
+            DecodeMode::Adaptive => {
+                let refs: Vec<&CandidateTree> = trees.iter().collect();
+                let choice = selector::select_strategy(
+                    &self.cfg.selector,
+                    &mut self.tsd_pred,
+                    &refs,
+                    n_seq,
+                    max_n,
+                );
+                choice.n
+            }
+            DecodeMode::Ar => unreachable!(),
+        };
+        self.metrics.select_secs += sw.lap();
+
+        // ---- 4. verify with the target model --------------------------
+        let selections: Vec<Selection> = trees
+            .iter()
+            .map(|t| t.selection(&t.select_top_n(n)))
+            .collect();
+        let t_need = selections.iter().map(|s| s.len()).max().unwrap_or(1);
+        let t_bucket = man.tree_bucket(t_need).unwrap();
+        let name = man.tree_artifact("target", b, t_need)?;
+
+        let mut tokens = vec![0i32; b * t_bucket];
+        let mut positions = vec![0i32; b * t_bucket];
+        let mut plen = vec![0i32; b];
+        let mut mask = vec![0f32; b * t_bucket * t_bucket];
+        for i in 0..b {
+            if i < self.live.len() {
+                let s = &self.live[i];
+                let sel = &selections[i];
+                let (tk, mk) = sel.padded(t_bucket);
+                tokens[i * t_bucket..(i + 1) * t_bucket].copy_from_slice(&tk);
+                mask[i * t_bucket * t_bucket..(i + 1) * t_bucket * t_bucket]
+                    .copy_from_slice(&mk);
+                let pos = sel.positions(s.prefix_len);
+                for (j, &p) in pos.iter().enumerate() {
+                    positions[i * t_bucket + j] = p;
+                }
+                for j in sel.len()..t_bucket {
+                    positions[i * t_bucket + j] = s.prefix_len as i32;
+                }
+                plen[i] = s.prefix_len as i32;
+            } else {
+                for j in 0..t_bucket {
+                    mask[(i * t_bucket + j) * t_bucket + j] = 1.0;
+                }
+            }
+        }
+        // Borrow the batched KV tensors (no copy: they are only read
+        // while marshalling the call).
+        let (kc, vc) = {
+            let (k, v) = self.batch_target.as_ref().unwrap().tensors();
+            (k, v)
+        };
+        let tokens_t = HostTensor::i32(vec![b, t_bucket], tokens);
+        let pos_t = HostTensor::i32(vec![b, t_bucket], positions);
+        let plen_t = HostTensor::i32(vec![b], plen);
+        let mask_t = HostTensor::f32(vec![b, t_bucket, t_bucket], mask);
+        let stores: BTreeMap<String, &ModelStore> =
+            [("target".to_string(), &self.target)].into_iter().collect();
+        let data: BTreeMap<&str, &HostTensor> = [
+            ("kc", kc),
+            ("vc", vc),
+            ("tokens", &tokens_t),
+            ("positions", &pos_t),
+            ("prefix_len", &plen_t),
+            ("tree_mask", &mask_t),
+        ]
+        .into_iter()
+        .collect();
+        let outs = self.engine.run_artifact(&name, &stores, &data)?;
+        self.metrics.verify_secs += sw.lap();
+
+        // Observe t_sd for the predictor (draft + verify wall time).
+        let n_draft_total: usize = selections.iter().map(|s| s.len()).sum();
+        self.tsd_pred
+            .observe(n_seq, n_draft_total, step_sw.elapsed().max(draft_secs));
+
+        // ---- 5. acceptance + commit -----------------------------------
+        let v = man.target.vocab;
+        let greedy = self.cfg.spec.greedy;
+        let temp = self.cfg.spec.temperature;
+        for i in 0..self.live.len() {
+            let sel = &selections[i];
+            let logit_rows: Vec<&[f32]> = (0..sel.len())
+                .map(|j| {
+                    let off = (i * t_bucket + j) * v;
+                    &outs[0].as_f32()[off..off + v]
+                })
+                .collect();
+            let outcome: AcceptOutcome = if greedy {
+                accept_greedy(sel, &logit_rows)
+            } else {
+                let probs: Vec<Vec<f32>> =
+                    logit_rows.iter().map(|r| sampler::softmax(r, temp)).collect();
+                let draft_q: Vec<f32> =
+                    sel.order.iter().map(|&ci| trees[i].nodes[ci].o).collect();
+                let dists: Vec<Vec<f32>> = sel
+                    .order
+                    .iter()
+                    .map(|&ci| draft_dists[i].get(&ci).cloned().unwrap_or_default())
+                    .collect();
+                accept_stochastic(sel, &probs, &draft_q, &dists, &mut self.rng)
+            };
+            self.metrics.accept_secs += sw.lap();
+
+            // Predictor observations: every non-root selected node.
+            let on_path: std::collections::HashSet<usize> =
+                outcome.path.iter().copied().collect();
+            for (j, &ci) in sel.order.iter().enumerate() {
+                if j == 0 {
+                    continue;
+                }
+                self.accept_pred
+                    .observe(trees[i].nodes[ci].dl, on_path.contains(&j));
+            }
+
+            // Commit target KV rows for the accepted path.
+            let base = self.live[i].prefix_len;
+            for (step_k, &selpos) in outcome.path.iter().enumerate() {
+                let dest = base + step_k;
+                self.live[i]
+                    .target_cache
+                    .commit_row(&outs[1], &outs[2], i, selpos, dest);
+                self.batch_target.as_mut().unwrap().commit_row(
+                    &outs[1],
+                    &outs[2],
+                    i,
+                    i,
+                    selpos,
+                    dest,
+                );
+                // Commit draft KV for the same token (draft rows are in
+                // level order of the candidate tree).
+                let cand_idx = sel.order[selpos];
+                let lvl_pos = level_orders[i][cand_idx];
+                self.live[i].draft_cache.commit_row(
+                    &draft_rows.0,
+                    &draft_rows.1,
+                    i,
+                    lvl_pos,
+                    dest,
+                );
+                self.batch_draft.as_mut().unwrap().commit_row(
+                    &draft_rows.0,
+                    &draft_rows.1,
+                    i,
+                    i,
+                    lvl_pos,
+                    dest,
+                );
+            }
+
+            let k = outcome.accepted_drafts;
+            self.live[i].prefix_len += k + 1;
+            self.live[i]
+                .generated
+                .extend_from_slice(&outcome.new_tokens);
+            self.live[i].rounds += 1;
+            self.live[i].drafts_accepted += k;
+            self.live[i].drafts_proposed += sel.len() - 1;
+            self.metrics.tokens_out += outcome.new_tokens.len() as u64;
+            self.metrics.drafts_accepted += k as u64;
+            self.metrics.drafts_proposed += (sel.len() - 1) as u64;
+            self.metrics.commit_secs += sw.lap();
+        }
+        self.metrics.rounds += 1;
+        Ok(())
+    }
+
+    /// Expand candidate trees for every live sample with batched draft
+    /// calls. Returns (trees, candidate→level-order maps, final draft
+    /// (k_new, v_new) rows, per-sample full draft distributions by
+    /// candidate index).
+    #[allow(clippy::type_complexity)]
+    fn draft_phase(
+        &mut self,
+        b: usize,
+    ) -> Result<(
+        Vec<CandidateTree>,
+        Vec<Vec<usize>>,
+        (HostTensor, HostTensor),
+        Vec<std::collections::HashMap<usize, Vec<f32>>>,
+    )> {
+        let man = self.engine.manifest.clone();
+        let dd = man.draft.clone();
+        let n_live = self.live.len();
+        let branch = self.cfg.spec.branch;
+        let max_depth = self.cfg.spec.max_depth;
+        let max_tree = self
+            .cfg
+            .spec
+            .max_draft
+            .min(*man.tree_buckets.iter().max().unwrap());
+        // Cap expansions per level so trees stay within buckets.
+        let expand_width = 4usize;
+
+        let mut trees: Vec<CandidateTree> = self
+            .live
+            .iter()
+            .map(|s| CandidateTree::new(s.pending()))
+            .collect();
+        let mut dists: Vec<std::collections::HashMap<usize, Vec<f32>>> =
+            vec![Default::default(); n_live];
+        let mut last_rows: Option<(HostTensor, HostTensor)> = None;
+
+        for depth in 0..=max_depth {
+            // Feed the whole tree-so-far (level order == insertion order).
+            let t_need = trees.iter().map(|t| t.len()).max().unwrap_or(1);
+            let t_bucket = match man.tree_bucket(t_need) {
+                Some(t) => t,
+                None => break,
+            };
+            let name = man.tree_artifact("draft", b, t_need)?;
+
+            let mut tokens = vec![0i32; b * t_bucket];
+            let mut positions = vec![0i32; b * t_bucket];
+            let mut plen = vec![0i32; b];
+            let mut mask = vec![0f32; b * t_bucket * t_bucket];
+            for i in 0..b {
+                if i < n_live {
+                    let s = &self.live[i];
+                    let tr = &trees[i];
+                    for (j, node) in tr.nodes.iter().enumerate() {
+                        tokens[i * t_bucket + j] = node.token;
+                        positions[i * t_bucket + j] = (s.prefix_len + node.depth) as i32;
+                        for &a in &tr.path(j) {
+                            mask[(i * t_bucket + j) * t_bucket + a] = 1.0;
+                        }
+                    }
+                    for j in tr.len()..t_bucket {
+                        mask[(i * t_bucket + j) * t_bucket + j] = 1.0;
+                        positions[i * t_bucket + j] = s.prefix_len as i32;
+                    }
+                    plen[i] = s.prefix_len as i32;
+                } else {
+                    for j in 0..t_bucket {
+                        mask[(i * t_bucket + j) * t_bucket + j] = 1.0;
+                    }
+                }
+            }
+            let (kc, vc) = {
+                let (k, v) = self.batch_draft.as_ref().unwrap().tensors();
+                (k, v)
+            };
+            let tokens_t = HostTensor::i32(vec![b, t_bucket], tokens);
+            let pos_t = HostTensor::i32(vec![b, t_bucket], positions);
+            let plen_t = HostTensor::i32(vec![b], plen);
+            let mask_t = HostTensor::f32(vec![b, t_bucket, t_bucket], mask);
+            let stores: BTreeMap<String, &ModelStore> =
+                [("draft".to_string(), &self.draft)].into_iter().collect();
+            let data: BTreeMap<&str, &HostTensor> = [
+                ("kc", kc),
+                ("vc", vc),
+                ("tokens", &tokens_t),
+                ("positions", &pos_t),
+                ("prefix_len", &plen_t),
+                ("tree_mask", &mask_t),
+            ]
+            .into_iter()
+            .collect();
+            let outs = self.engine.run_artifact(&name, &stores, &data)?;
+            last_rows = Some((outs[1].clone(), outs[2].clone()));
+
+            if depth == max_depth {
+                break;
+            }
+            // Expand: per sample, top `expand_width` nodes of this level
+            // by dl, each adding `branch` children.
+            let v = dd.vocab;
+            for i in 0..n_live {
+                let level_nodes = trees[i].level(depth);
+                if trees[i].len() >= max_tree || level_nodes.is_empty() {
+                    continue;
+                }
+                let mut ranked = level_nodes.clone();
+                // Descending dl: expand the most promising nodes (EAGLE-2).
+                ranked.sort_by(|&a, &bn| {
+                    trees[i].nodes[bn]
+                        .dl
+                        .partial_cmp(&trees[i].nodes[a].dl)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                });
+                for &node_idx in ranked.iter().take(expand_width) {
+                    if trees[i].len() >= max_tree {
+                        break;
+                    }
+                    let off = (i * t_bucket + node_idx) * v;
+                    let logits = &outs[0].as_f32()[off..off + v];
+                    let probs = sampler::softmax(logits, self.cfg.spec.temperature);
+                    dists[i].insert(node_idx, probs.clone());
+                    for &tok in sampler::top_k(&probs, branch).iter() {
+                        if trees[i].len() >= max_tree {
+                            break;
+                        }
+                        trees[i].add_child(node_idx, tok as i32, probs[tok]);
+                    }
+                }
+            }
+        }
+
+        // Candidate index → level-order position (insertion order IS level
+        // order because we append level by level).
+        let level_orders: Vec<Vec<usize>> =
+            trees.iter().map(|t| (0..t.len()).collect()).collect();
+        Ok((trees, level_orders, last_rows.unwrap(), dists))
+    }
+
+    /// Rebuild the batched KV tensors when batch composition changed.
+    fn rebuild_batches_if_needed(&mut self, b: usize) -> Result<()> {
+        let man = self.engine.manifest.clone();
+        let need_rebuild = self.batch_dirty
+            || self.batch_target.as_ref().map(|bt| bt.batch) != Some(b);
+        if !need_rebuild {
+            return Ok(());
+        }
+        let td = &man.target;
+        let dd = &man.draft;
+        let mut bt = BatchedCache::new(td.n_layers, td.n_heads, td.max_seq, td.d_head, b);
+        let mut bd = BatchedCache::new(dd.n_layers, dd.n_heads, dd.max_seq, dd.d_head, b);
+        for (i, s) in self.live.iter().enumerate() {
+            bt.load_slot(i, s.task.id, &s.target_cache);
+            bd.load_slot(i, s.task.id, &s.draft_cache);
+        }
+        self.batch_target = Some(bt);
+        self.batch_draft = Some(bd);
+        self.batch_dirty = false;
+        Ok(())
+    }
+
+    /// Move finished samples out of the live set.
+    fn retire_finished(&mut self) {
+        let mut i = 0;
+        while i < self.live.len() {
+            if self.live[i].is_done() {
+                let s = self.live.remove(i);
+                self.metrics.samples_finished += 1;
+                self.finished.push(s.into_finished());
+                self.batch_dirty = true;
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Remove a live sample by id (migration out). Returns it.
+    pub fn take_live(&mut self, id: u64) -> Option<LiveSample> {
+        let pos = self.live.iter().position(|s| s.task.id == id)?;
+        self.batch_dirty = true;
+        Some(self.live.remove(pos))
+    }
+
+    /// Remove a waiting sample by id (cheap migration out).
+    pub fn take_waiting(&mut self, id: u64) -> Option<SampleTask> {
+        let pos = self.waiting.iter().position(|t| t.id == id)?;
+        Some(self.waiting.remove(pos))
+    }
+
+    /// Re-admit a migrated-in live sample.
+    pub fn insert_live(&mut self, s: LiveSample) {
+        self.batch_dirty = true;
+        self.live.push(s);
+        self.metrics.samples_migrated_in += 1;
+    }
+
+    /// Park a migrated-in sample (admitted when a decode slot frees up).
+    pub fn insert_parked(&mut self, s: LiveSample) {
+        self.parked.push(s);
+        self.metrics.samples_migrated_in += 1;
+    }
+
+    /// Run until every assigned sample finishes; returns finished count.
+    pub fn run_to_completion(&mut self, max_steps: usize) -> Result<usize> {
+        let mut steps = 0;
+        while !self.is_idle() && steps < max_steps {
+            self.step()?;
+            steps += 1;
+        }
+        Ok(self.finished.len())
+    }
+}
+
+/// Single-sample cache tensors in batch-1 layout (prefill helper).
+fn cache_tensors_single(cache: &KvCache) -> (HostTensor, HostTensor) {
+    let (l, h, s, d) = (cache.layers, cache.heads, cache.max_seq, cache.d_head);
+    let mut bt = BatchedCache::new(l, h, s, d, 1);
+    bt.load_slot(0, 0, cache);
+    let (k, v) = bt.tensors();
+    (k.clone(), v.clone())
+}

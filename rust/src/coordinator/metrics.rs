@@ -1,0 +1,133 @@
+//! Per-instance stage timing and counters.
+//!
+//! Feeds Fig 3 (stage breakdown), Fig 5/14 (throughput-over-time curves)
+//! and the §7.7 overhead analysis (WDS = `select_secs`, SRD lives in the
+//! driver, SM = `migration_secs`).
+
+use std::time::Instant;
+
+#[derive(Clone, Debug, Default)]
+pub struct InstanceMetrics {
+    // ---- stage wall-times (seconds) ----
+    pub prefill_secs: f64,
+    pub draft_secs: f64,
+    pub select_secs: f64,
+    pub verify_secs: f64,
+    pub accept_secs: f64,
+    pub commit_secs: f64,
+    pub migration_secs: f64,
+    // ---- counters ----
+    pub rounds: u64,
+    pub tokens_out: u64,
+    pub drafts_proposed: u64,
+    pub drafts_accepted: u64,
+    pub samples_finished: u64,
+    pub samples_migrated_in: u64,
+    pub samples_migrated_out: u64,
+    /// (wall_clock_secs, tokens_out cumulative, live samples) trace rows
+    /// for throughput-over-time figures.
+    pub trace: Vec<(f64, u64, usize)>,
+}
+
+impl InstanceMetrics {
+    pub fn total_secs(&self) -> f64 {
+        self.prefill_secs
+            + self.draft_secs
+            + self.select_secs
+            + self.verify_secs
+            + self.accept_secs
+            + self.commit_secs
+            + self.migration_secs
+    }
+
+    /// Mean accepted draft tokens per round.
+    pub fn mean_accepted(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.drafts_accepted as f64 / self.rounds as f64
+        }
+    }
+
+    /// Draft token acceptance rate.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafts_proposed == 0 {
+            0.0
+        } else {
+            self.drafts_accepted as f64 / self.drafts_proposed as f64
+        }
+    }
+
+    /// Decision-overhead fraction: selector time / total (§7.7 WDS).
+    pub fn selector_overhead(&self) -> f64 {
+        let t = self.total_secs();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.select_secs / t
+        }
+    }
+
+    pub fn throughput(&self) -> f64 {
+        let t = self.total_secs();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / t
+        }
+    }
+}
+
+/// Scoped stage timer: `let _t = Stage::new(&mut m.draft_secs);` adds the
+/// elapsed time on drop. (Plain function style to avoid borrow juggling.)
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn lap(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.0).as_secs_f64();
+        self.0 = now;
+        dt
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_divide_safely() {
+        let m = InstanceMetrics::default();
+        assert_eq!(m.mean_accepted(), 0.0);
+        assert_eq!(m.acceptance_rate(), 0.0);
+        assert_eq!(m.throughput(), 0.0);
+    }
+
+    #[test]
+    fn overhead_fraction() {
+        let m = InstanceMetrics {
+            select_secs: 1.0,
+            verify_secs: 9.0,
+            ..Default::default()
+        };
+        assert!((m.selector_overhead() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stopwatch_laps_monotone() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let a = sw.lap();
+        assert!(a >= 0.002);
+        let b = sw.lap();
+        assert!(b < a);
+    }
+}

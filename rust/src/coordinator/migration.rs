@@ -1,0 +1,312 @@
+//! Two-stage sample migration (paper §6.2).
+//!
+//! Exploits two properties of speculative decoding:
+//!
+//! 1. **Markov property of LLM verification** — previously verified KV is
+//!    never modified, so the bulk of a migrating sample's cache (Stage 1)
+//!    can transfer *while the source keeps decoding it*; only the delta
+//!    produced meanwhile (plus control state) follows in Stage 2.
+//! 2. **SSM/LLM KV independence** — the destination can resume *draft
+//!    generation* as soon as the (small) SSM cache arrives, overlapping
+//!    the larger LLM-cache transfer with compute.
+//!
+//! Packing uses the paper's hierarchical representation — one contiguous
+//! buffer ordered model (SSM & LLM) → layer → sample — so the transfer is
+//! a single allocation + single copy per stage (phase 1/3 of the KVCache
+//! transmission), and the alloc-request handshake (phase 2) lets the
+//! destination refuse when memory is short.
+
+use crate::coordinator::instance::{LiveSample, SampleTask};
+use crate::spec::kvcache::KvCache;
+
+/// Which models' caches are in a hierarchical buffer, in order.
+pub const MODEL_ORDER: [&str; 2] = ["draft", "target"]; // SSM first: Stage-2 resume order
+
+/// Per-sample span descriptor inside a hierarchical buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SampleSpan {
+    pub id: u64,
+    /// Cache positions [from, to) packed for this sample.
+    pub from: usize,
+    pub to: usize,
+}
+
+/// One contiguous buffer holding several samples' K+V for both models,
+/// ordered model → layer → sample (paper §6.2 phase 1).
+#[derive(Clone, Debug)]
+pub struct HierarchicalKv {
+    pub data: Vec<f32>,
+    pub spans: Vec<SampleSpan>,
+    /// (layers, heads, d_head) per model, draft first.
+    pub draft_dims: (usize, usize, usize),
+    pub target_dims: (usize, usize, usize),
+    /// Byte offset where the target-model (LLM) section starts — the
+    /// destination can resume drafting once bytes `< target_offset`
+    /// arrived (Stage-2 overlap).
+    pub target_offset: usize,
+}
+
+impl HierarchicalKv {
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// Pack `samples`' caches over the given ranges into one buffer.
+///
+/// `ranges[i]` = (from, to) cache positions for sample i (Stage 1 packs
+/// `(0, prefix_snapshot)`, Stage 2 packs the delta).
+pub fn pack_hierarchical(
+    draft_caches: &[&KvCache],
+    target_caches: &[&KvCache],
+    ids: &[u64],
+    ranges: &[(usize, usize)],
+) -> HierarchicalKv {
+    assert_eq!(draft_caches.len(), target_caches.len());
+    assert_eq!(draft_caches.len(), ranges.len());
+    let n = draft_caches.len();
+    let spans: Vec<SampleSpan> = (0..n)
+        .map(|i| SampleSpan { id: ids[i], from: ranges[i].0, to: ranges[i].1 })
+        .collect();
+
+    let total: usize = (0..n)
+        .map(|i| {
+            let span = ranges[i].1 - ranges[i].0;
+            2 * span * (draft_caches[i].row_elems() + target_caches[i].row_elems())
+        })
+        .sum();
+    let mut data = Vec::with_capacity(total);
+
+    // model → layer → sample
+    let d0 = draft_caches.first().map(|c| (c.layers, c.heads, c.d_head)).unwrap_or((0, 0, 0));
+    let t0 = target_caches.first().map(|c| (c.layers, c.heads, c.d_head)).unwrap_or((0, 0, 0));
+    for l in 0..d0.0 {
+        for i in 0..n {
+            draft_caches[i].pack_layer_range(l, ranges[i].0, ranges[i].1, &mut data);
+        }
+    }
+    let target_offset = data.len() * 4;
+    for l in 0..t0.0 {
+        for i in 0..n {
+            target_caches[i].pack_layer_range(l, ranges[i].0, ranges[i].1, &mut data);
+        }
+    }
+    HierarchicalKv { data, spans, draft_dims: d0, target_dims: t0, target_offset }
+}
+
+/// Unpack a hierarchical buffer into destination caches (phase 3).
+pub fn unpack_hierarchical(
+    buf: &HierarchicalKv,
+    draft_caches: &mut [&mut KvCache],
+    target_caches: &mut [&mut KvCache],
+) {
+    let n = buf.spans.len();
+    assert_eq!(draft_caches.len(), n);
+    assert_eq!(target_caches.len(), n);
+    let mut idx = 0usize;
+    for l in 0..buf.draft_dims.0 {
+        for i in 0..n {
+            let s = &buf.spans[i];
+            idx = draft_caches[i].unpack_layer_range(l, s.from, s.to - s.from, &buf.data, idx);
+        }
+    }
+    assert_eq!(idx * 4, buf.target_offset, "draft section size mismatch");
+    for l in 0..buf.target_dims.0 {
+        for i in 0..n {
+            let s = &buf.spans[i];
+            idx = target_caches[i].unpack_layer_range(l, s.from, s.to - s.from, &buf.data, idx);
+        }
+    }
+    assert_eq!(idx, buf.data.len(), "buffer not fully consumed");
+}
+
+// ---------------------------------------------------------------------------
+// Protocol messages
+// ---------------------------------------------------------------------------
+
+/// Allocation handshake request (§6.2 phase 2): sent before any KV bytes.
+#[derive(Clone, Debug)]
+pub struct AllocRequest {
+    pub from_instance: usize,
+    pub sample_ids: Vec<u64>,
+    pub bytes: usize,
+}
+
+/// Stage 1: bulk KV of already-verified tokens; the source keeps decoding.
+#[derive(Debug)]
+pub struct Stage1 {
+    pub from_instance: usize,
+    pub kv: HierarchicalKv,
+}
+
+/// Stage 2: per-sample control state + the KV delta generated since the
+/// Stage-1 snapshot. After this the sample lives on the destination.
+#[derive(Debug)]
+pub struct Stage2 {
+    pub from_instance: usize,
+    pub kv_delta: HierarchicalKv,
+    pub control: Vec<SampleControl>,
+}
+
+/// Everything needed to resume a sample besides KV bytes.
+#[derive(Clone, Debug)]
+pub struct SampleControl {
+    pub task: SampleTask,
+    pub generated: Vec<i32>,
+    pub prefix_len: usize,
+    pub rounds: usize,
+    pub drafts_accepted: usize,
+    pub drafts_proposed: usize,
+}
+
+impl SampleControl {
+    pub fn from_live(s: &LiveSample) -> Self {
+        SampleControl {
+            task: s.task.clone(),
+            generated: s.generated.clone(),
+            prefix_len: s.prefix_len,
+            rounds: s.rounds,
+            drafts_accepted: s.drafts_accepted,
+            drafts_proposed: s.drafts_proposed,
+        }
+    }
+}
+
+/// Score used to choose which live samples to migrate (§6.1): prefer
+/// shorter sequences (fewer KV bytes) and lower mean accepted tokens
+/// (less throughput lost to downtime). Lower score = migrate first.
+pub fn migration_score(seq_len: usize, mean_accepted: f64, max_seq: usize) -> f64 {
+    let len_norm = seq_len as f64 / max_seq.max(1) as f64;
+    let acc_norm = mean_accepted / 8.0; // typical max accepted/round
+    len_norm + acc_norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::rng::Rng;
+
+    fn filled_cache(l: usize, h: usize, s: usize, d: usize, len: usize, rng: &mut Rng) -> KvCache {
+        let mut c = KvCache::new(l, h, s, d);
+        let kn = crate::runtime::HostTensor::f32(
+            vec![l, 1, h, len, d],
+            (0..l * h * len * d).map(|_| rng.normal() as f32).collect(),
+        );
+        let vn = crate::runtime::HostTensor::f32(
+            vec![l, 1, h, len, d],
+            (0..l * h * len * d).map(|_| rng.normal() as f32).collect(),
+        );
+        for i in 0..len {
+            c.commit_row(&kn, &vn, 0, i, i);
+        }
+        c
+    }
+
+    #[test]
+    fn hierarchical_roundtrip_multi_sample() {
+        let mut rng = Rng::new(0);
+        let d1 = filled_cache(1, 2, 16, 4, 5, &mut rng);
+        let d2 = filled_cache(1, 2, 16, 4, 9, &mut rng);
+        let t1 = filled_cache(3, 2, 16, 4, 5, &mut rng);
+        let t2 = filled_cache(3, 2, 16, 4, 9, &mut rng);
+
+        let buf = pack_hierarchical(
+            &[&d1, &d2],
+            &[&t1, &t2],
+            &[10, 11],
+            &[(0, 5), (0, 9)],
+        );
+        assert_eq!(buf.spans.len(), 2);
+        assert_eq!(
+            buf.data.len(),
+            2 * 5 * (d1.row_elems() + t1.row_elems())
+                + 2 * 9 * (d2.row_elems() + t2.row_elems())
+        );
+
+        let mut rd1 = KvCache::new(1, 2, 16, 4);
+        let mut rd2 = KvCache::new(1, 2, 16, 4);
+        let mut rt1 = KvCache::new(3, 2, 16, 4);
+        let mut rt2 = KvCache::new(3, 2, 16, 4);
+        unpack_hierarchical(&buf, &mut [&mut rd1, &mut rd2], &mut [&mut rt1, &mut rt2]);
+        for p in 0..5 {
+            assert_eq!(t1.k_slice(2, 1, p), rt1.k_slice(2, 1, p));
+            assert_eq!(d1.v_slice(0, 0, p), rd1.v_slice(0, 0, p));
+        }
+        for p in 0..9 {
+            assert_eq!(t2.k_slice(0, 0, p), rt2.k_slice(0, 0, p));
+        }
+        assert_eq!(rt2.len, 9);
+    }
+
+    #[test]
+    fn stage1_plus_stage2_delta_reconstructs_full_cache() {
+        // The two-stage split: snapshot [0, 6), delta [6, 10) — together
+        // they must reproduce the full source cache.
+        let mut rng = Rng::new(1);
+        let src_d = filled_cache(2, 2, 16, 4, 10, &mut rng);
+        let src_t = filled_cache(2, 2, 16, 4, 10, &mut rng);
+
+        let stage1 = pack_hierarchical(&[&src_d], &[&src_t], &[7], &[(0, 6)]);
+        let stage2 = pack_hierarchical(&[&src_d], &[&src_t], &[7], &[(6, 10)]);
+
+        let mut dst_d = KvCache::new(2, 2, 16, 4);
+        let mut dst_t = KvCache::new(2, 2, 16, 4);
+        unpack_hierarchical(&stage1, &mut [&mut dst_d], &mut [&mut dst_t]);
+        assert_eq!(dst_t.len, 6);
+        unpack_hierarchical(&stage2, &mut [&mut dst_d], &mut [&mut dst_t]);
+        assert_eq!(dst_t.len, 10);
+        for l in 0..2 {
+            for h in 0..2 {
+                for p in 0..10 {
+                    assert_eq!(src_t.k_slice(l, h, p), dst_t.k_slice(l, h, p));
+                    assert_eq!(src_d.v_slice(l, h, p), dst_d.v_slice(l, h, p));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn draft_section_precedes_target_section() {
+        // SSM cache first (Stage-2 resume order): target_offset marks it.
+        let mut rng = Rng::new(2);
+        let d = filled_cache(1, 1, 8, 2, 4, &mut rng);
+        let t = filled_cache(2, 1, 8, 2, 4, &mut rng);
+        let buf = pack_hierarchical(&[&d], &[&t], &[1], &[(0, 4)]);
+        let draft_elems = 2 * 4 * d.row_elems();
+        assert_eq!(buf.target_offset, draft_elems * 4);
+        assert!(buf.target_offset < buf.size_bytes());
+    }
+
+    #[test]
+    fn property_roundtrip_random_shapes() {
+        crate::testutil::check("hier-roundtrip", 60, |rng| {
+            let l = rng.range(1, 4);
+            let h = rng.range(1, 4);
+            let d = [2, 4, 8][rng.below(3)];
+            let s = 32;
+            let len = rng.range(1, 16);
+            let from = rng.below(len);
+            let src_d = filled_cache(l, h, s, d, len, rng);
+            let src_t = filled_cache(l + 1, h, s, d, len, rng);
+            let buf = pack_hierarchical(&[&src_d], &[&src_t], &[0], &[(from, len)]);
+            let mut dd = KvCache::new(l, h, s, d);
+            let mut dt = KvCache::new(l + 1, h, s, d);
+            unpack_hierarchical(&buf, &mut [&mut dd], &mut [&mut dt]);
+            for ll in 0..l {
+                for hh in 0..h {
+                    for p in from..len {
+                        assert_eq!(src_d.k_slice(ll, hh, p), dd.k_slice(ll, hh, p));
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn migration_score_prefers_short_low_accept() {
+        let a = migration_score(50, 1.0, 384); // short, low accept
+        let b = migration_score(300, 1.0, 384); // long
+        let c = migration_score(50, 4.0, 384); // high accept
+        assert!(a < b && a < c);
+    }
+}

@@ -1,0 +1,25 @@
+//! The RLHFSpec coordinator (the paper's L3 contribution).
+//!
+//! * [`predictor`] — decision-feature prediction (§5.2): the draft-logit →
+//!   acceptance-probability fit `F`, the `t_sd(N_seq, N_draft)` regression,
+//!   and the bucket-based prediction cache.
+//! * [`selector`] — workload-aware drafting-strategy selection (§5.3):
+//!   layer-level incremental search with sugar-water-inequality pruning.
+//! * [`reallocator`] — sample-reallocation policy (§6.1): roofline
+//!   threshold, greedy source/destination pairing under the Eq-6
+//!   constraints, cooldown.
+//! * [`migration`] — two-stage KV migration (§6.2): hierarchical packing,
+//!   allocation handshake, compute/transfer overlap.
+//! * [`instance`] — a generation instance: the speculative round loop
+//!   (draft → select → verify → accept → commit) over PJRT executables.
+//! * [`driver`] — multi-instance generation: worker threads, initial
+//!   allocation, the monitor/reallocation loop.
+//! * [`metrics`] — per-stage timing and counters (§7.7 overhead analysis).
+
+pub mod driver;
+pub mod instance;
+pub mod metrics;
+pub mod migration;
+pub mod predictor;
+pub mod reallocator;
+pub mod selector;

@@ -1,0 +1,366 @@
+//! Decision-feature prediction (paper §5.2).
+//!
+//! Two lightweight predictors feed the drafting-strategy selector:
+//!
+//! * [`AcceptancePredictor`] — the fitted function `F : draft logit →
+//!   acceptance probability`. The paper observes a strong positive
+//!   correlation (Fig 7) because the SSM is distilled from the LLM; we fit
+//!   a monotone binned curve (isotonic-regression style) from
+//!   (dl, accepted?) observations collected offline and updated online.
+//! * [`TsdPredictor`] — one-step speculative execution time
+//!   `t_sd(N_seq, N_draft)`: draft generation is constant w.r.t. the
+//!   strategy, LLM verification splits into a KV-load term (∝ N_seq) and
+//!   an FFN term (∝ N_draft) plus an interaction term. Fit by least
+//!   squares over profiled steps, fronted by the bucket-based prediction
+//!   cache (cache hit ⇒ no regression evaluation at all).
+
+use std::collections::HashMap;
+
+use crate::utils::stats;
+
+/// Monotone binned fit of acceptance probability vs draft logit.
+///
+/// Draft logits live in (0, 1]; we bin on a log scale (products of child
+/// probabilities decay geometrically with depth), average acceptance per
+/// bin, then enforce monotonicity with a pool-adjacent-violators pass so
+/// the selector's pruning argument (Δal decreasing) stays valid.
+#[derive(Clone, Debug)]
+pub struct AcceptancePredictor {
+    bins: usize,
+    /// (sum accepted, count) per bin.
+    acc: Vec<(f64, u64)>,
+    /// Monotone fitted value per bin (refreshed by `refit`).
+    fitted: Vec<f32>,
+    observations: u64,
+}
+
+impl AcceptancePredictor {
+    pub fn new(bins: usize) -> Self {
+        // Optimistic prior: F(dl) ≈ dl (paper Fig 7 shows a roughly linear
+        // trend), so the system behaves sensibly before any profiling.
+        let mut p = AcceptancePredictor {
+            bins,
+            acc: vec![(0.0, 0); bins],
+            fitted: Vec::new(),
+            observations: 0,
+        };
+        p.fitted = (0..bins).map(|b| p.bin_center(b)).collect();
+        p
+    }
+
+    /// Map a draft logit to its bin (log scale over [1e-4, 1]).
+    /// Bin 0 holds the highest dl; bins are ordered by *decreasing* dl.
+    fn bin_of(&self, dl: f32) -> usize {
+        let dl = dl.clamp(1e-4, 1.0) as f64;
+        let x = (dl.ln() / (1e-4f64).ln()).clamp(0.0, 1.0); // 0 at dl=1, 1 at 1e-4
+        ((x * self.bins as f64) as usize).min(self.bins - 1)
+    }
+
+    fn bin_center(&self, b: usize) -> f32 {
+        // Inverse of bin_of at the bin midpoint.
+        let x = 1.0 - (b as f64 + 0.5) / self.bins as f64;
+        ((1e-4f64).ln() * (1.0 - x)).exp() as f32
+    }
+
+    /// Record one verified tree token: its draft logit and whether the
+    /// target accepted it.
+    pub fn observe(&mut self, dl: f32, accepted: bool) {
+        let b = self.bin_of(dl);
+        self.acc[b].0 += accepted as u64 as f64;
+        self.acc[b].1 += 1;
+        self.observations += 1;
+    }
+
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// Refit the monotone curve (pool adjacent violators over bins sorted
+    /// by increasing dl).
+    pub fn refit(&mut self) {
+        // bins are ordered by *decreasing* dl; build increasing-dl view.
+        let mut vals: Vec<(f64, f64)> = Vec::with_capacity(self.bins); // (mean, weight)
+        for b in (0..self.bins).rev() {
+            let (s, n) = self.acc[b];
+            if n == 0 {
+                // No data: keep prior (bin center) with tiny weight.
+                vals.push((self.bin_center(b) as f64, 0.1));
+            } else {
+                vals.push((s / n as f64, n as f64));
+            }
+        }
+        // PAVA: enforce non-decreasing means over increasing dl.
+        let mut blocks: Vec<(f64, f64)> = Vec::new(); // (mean, weight)
+        for (m, w) in vals {
+            blocks.push((m, w));
+            while blocks.len() >= 2 {
+                let (m2, w2) = blocks[blocks.len() - 1];
+                let (m1, w1) = blocks[blocks.len() - 2];
+                if m1 <= m2 {
+                    break;
+                }
+                blocks.pop();
+                blocks.pop();
+                blocks.push(((m1 * w1 + m2 * w2) / (w1 + w2), w1 + w2));
+            }
+        }
+        // Expand blocks back to bins. Reconstruct per-bin assignment.
+        let mut expanded = Vec::with_capacity(self.bins);
+        let mut bi = 0;
+        let mut covered = 0.0;
+        // Recompute weights per original position to expand blocks.
+        let mut weights: Vec<f64> = Vec::with_capacity(self.bins);
+        for b in (0..self.bins).rev() {
+            let (_, n) = self.acc[b];
+            weights.push(if n == 0 { 0.1 } else { n as f64 });
+        }
+        for &w in &weights {
+            while bi < blocks.len() && covered >= blocks[bi].1 - 1e-12 {
+                covered = 0.0;
+                bi += 1;
+            }
+            let m = blocks[bi.min(blocks.len() - 1)].0;
+            expanded.push(m);
+            covered += w;
+        }
+        // expanded is increasing-dl order; store back in bin order.
+        self.fitted = (0..self.bins)
+            .map(|b| expanded[self.bins - 1 - b].clamp(0.0, 1.0) as f32)
+            .collect();
+    }
+
+    /// Predicted acceptance probability for a draft logit.
+    pub fn predict(&self, dl: f32) -> f32 {
+        self.fitted[self.bin_of(dl)]
+    }
+
+    /// Pearson correlation between bin centers and fitted values — the
+    /// Fig 7 statistic.
+    pub fn correlation(&self) -> f64 {
+        let xs: Vec<f64> = (0..self.bins).map(|b| self.bin_center(b) as f64).collect();
+        let ys: Vec<f64> = self.fitted.iter().map(|&y| y as f64).collect();
+        stats::pearson(&xs, &ys)
+    }
+
+    /// (dl bin center, empirical acceptance, count) rows for Fig 7.
+    pub fn curve(&self) -> Vec<(f64, f64, u64)> {
+        (0..self.bins)
+            .rev()
+            .map(|b| {
+                let (s, n) = self.acc[b];
+                let emp = if n == 0 { f64::NAN } else { s / n as f64 };
+                (self.bin_center(b) as f64, emp, n)
+            })
+            .collect()
+    }
+}
+
+/// Regression model of one-step speculative execution time.
+///
+/// `t_sd = c0 + c1·N_seq + c2·N_draft + c3·N_seq·N_draft`, with a bucketed
+/// prediction cache in front (paper: "variations in N_seq and N_draft
+/// within a range do not affect the final t_sd").
+#[derive(Clone, Debug)]
+pub struct TsdPredictor {
+    /// Regression coefficients [c0, c1, c2, c3].
+    coef: [f64; 4],
+    /// Profiled observations: (n_seq, n_draft, seconds).
+    samples: Vec<(f64, f64, f64)>,
+    nseq_bucket: usize,
+    ndraft_bucket: usize,
+    cache: HashMap<(usize, usize), f64>,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    fitted: bool,
+}
+
+impl TsdPredictor {
+    pub fn new(nseq_bucket: usize, ndraft_bucket: usize) -> Self {
+        TsdPredictor {
+            // Harmless prior: constant + tiny linear terms, replaced by the
+            // first refit.
+            coef: [1e-3, 1e-8, 1e-6, 0.0],
+            samples: Vec::new(),
+            nseq_bucket: nseq_bucket.max(1),
+            ndraft_bucket: ndraft_bucket.max(1),
+            cache: HashMap::new(),
+            cache_hits: 0,
+            cache_misses: 0,
+            fitted: false,
+        }
+    }
+
+    /// Record a measured speculative step.
+    pub fn observe(&mut self, n_seq: usize, n_draft: usize, secs: f64) {
+        self.samples.push((n_seq as f64, n_draft as f64, secs));
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_fitted(&self) -> bool {
+        self.fitted
+    }
+
+    /// Least-squares refit; clears the bucket cache.
+    pub fn refit(&mut self) {
+        if self.samples.len() < 8 {
+            return;
+        }
+        let feats: Vec<Vec<f64>> = self
+            .samples
+            .iter()
+            .map(|&(s, d, _)| vec![s, d, s * d])
+            .collect();
+        let ys: Vec<f64> = self.samples.iter().map(|&(_, _, t)| t).collect();
+        let w = stats::linreg_multi(&feats, &ys);
+        self.coef = [w[0], w[1], w[2], w[3]];
+        self.cache.clear();
+        self.fitted = true;
+    }
+
+    fn eval(&self, n_seq: f64, n_draft: f64) -> f64 {
+        let [c0, c1, c2, c3] = self.coef;
+        (c0 + c1 * n_seq + c2 * n_draft + c3 * n_seq * n_draft).max(1e-6)
+    }
+
+    /// Predict t_sd with bucket caching.
+    pub fn predict(&mut self, n_seq: usize, n_draft: usize) -> f64 {
+        let key = (n_seq / self.nseq_bucket, n_draft / self.ndraft_bucket);
+        if let Some(&v) = self.cache.get(&key) {
+            self.cache_hits += 1;
+            return v;
+        }
+        self.cache_misses += 1;
+        // Evaluate at the bucket center so every (n_seq, n_draft) pair in
+        // the bucket shares one prediction (paper's assumption).
+        let s = (key.0 * self.nseq_bucket + self.nseq_bucket / 2) as f64;
+        let d = (key.1 * self.ndraft_bucket + self.ndraft_bucket / 2) as f64;
+        let v = self.eval(s, d);
+        self.cache.insert(key, v);
+        v
+    }
+
+    /// Cache-free prediction (for tests / analysis).
+    pub fn predict_exact(&self, n_seq: usize, n_draft: usize) -> f64 {
+        self.eval(n_seq as f64, n_draft as f64)
+    }
+
+    pub fn coefficients(&self) -> [f64; 4] {
+        self.coef
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::rng::Rng;
+
+    #[test]
+    fn acceptance_bins_are_stable() {
+        let p = AcceptancePredictor::new(20);
+        for dl in [1.0, 0.5, 0.1, 0.01, 0.001, 1e-4, 1e-6] {
+            let b = p.bin_of(dl);
+            assert!(b < 20);
+        }
+        // higher dl → lower bin index
+        assert!(p.bin_of(0.9) < p.bin_of(0.01));
+    }
+
+    #[test]
+    fn acceptance_learns_monotone_curve() {
+        let mut p = AcceptancePredictor::new(20);
+        let mut rng = Rng::new(0);
+        // Ground truth: accept with prob = sqrt(dl).
+        for _ in 0..20_000 {
+            let dl = rng.f32().powi(2).max(1e-4);
+            let acc = rng.chance((dl as f64).sqrt());
+            p.observe(dl, acc);
+        }
+        p.refit();
+        // Monotone in dl.
+        let lo = p.predict(0.01);
+        let mid = p.predict(0.2);
+        let hi = p.predict(0.9);
+        assert!(lo <= mid + 1e-6 && mid <= hi + 1e-6, "{lo} {mid} {hi}");
+        // Roughly sqrt.
+        assert!((p.predict(0.25) - 0.5).abs() < 0.15);
+        assert!(p.correlation() > 0.8);
+    }
+
+    #[test]
+    fn acceptance_prior_before_data() {
+        let p = AcceptancePredictor::new(16);
+        // Prior ≈ identity.
+        assert!((p.predict(0.5) - 0.5).abs() < 0.2);
+        assert!(p.predict(0.9) > p.predict(0.05));
+    }
+
+    #[test]
+    fn pava_enforces_monotonicity_with_adversarial_data() {
+        let mut p = AcceptancePredictor::new(10);
+        // Feed non-monotone data: high acceptance at LOW dl.
+        for _ in 0..500 {
+            p.observe(0.001, true);
+            p.observe(0.9, false);
+        }
+        p.refit();
+        assert!(p.predict(0.9) + 1e-6 >= p.predict(0.001));
+    }
+
+    #[test]
+    fn tsd_recovers_linear_model() {
+        let mut t = TsdPredictor::new(1, 1);
+        for s in (0..20).map(|i| i * 100) {
+            for d in 1..20 {
+                let secs = 0.002 + 1e-6 * s as f64 + 3e-5 * d as f64;
+                t.observe(s, d, secs);
+            }
+        }
+        t.refit();
+        let pred = t.predict_exact(500, 10);
+        let truth = 0.002 + 1e-6 * 500.0 + 3e-5 * 10.0;
+        assert!((pred - truth).abs() / truth < 0.05, "{pred} vs {truth}");
+    }
+
+    #[test]
+    fn tsd_bucket_cache_hits() {
+        let mut t = TsdPredictor::new(256, 4);
+        for s in 0..40 {
+            t.observe(s * 50, 8, 0.001 + s as f64 * 1e-5);
+        }
+        t.refit();
+        let a = t.predict(100, 5);
+        let b = t.predict(120, 6); // same bucket (256, 4)
+        assert_eq!(a, b);
+        assert_eq!(t.cache_hits, 1);
+        assert_eq!(t.cache_misses, 1);
+        let _c = t.predict(300, 5); // new n_seq bucket
+        assert_eq!(t.cache_misses, 2);
+    }
+
+    #[test]
+    fn tsd_refit_clears_cache() {
+        let mut t = TsdPredictor::new(64, 4);
+        for i in 0..20 {
+            t.observe(i * 10, 4, 1e-3);
+        }
+        t.refit();
+        let _ = t.predict(50, 4);
+        assert_eq!(t.cache.len(), 1);
+        t.refit();
+        assert_eq!(t.cache.len(), 0);
+    }
+
+    #[test]
+    fn tsd_predictions_positive() {
+        let mut t = TsdPredictor::new(1, 1);
+        // Degenerate fit data.
+        for _ in 0..10 {
+            t.observe(0, 0, 0.0);
+        }
+        t.refit();
+        assert!(t.predict(10_000, 64) > 0.0);
+    }
+}

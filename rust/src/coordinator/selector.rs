@@ -1,0 +1,241 @@
+//! Workload-aware drafting-strategy selection (paper §5).
+//!
+//! Chooses the draft-token budget `n` for one speculative step of one
+//! instance, maximizing `al(n) / t_sd(n)` (Eq. 2) where:
+//!
+//! * `al(n)`  = predicted accepted tokens = Σ node weights of the top-n
+//!   connected selection across the batch's candidate trees (§5.2, Fig 8);
+//! * `t_sd(n)` = predicted step time from the `TsdPredictor` with
+//!   `N_draft = Σ per-sample n` and `N_seq` = cumulative committed length.
+//!
+//! The *layer-level search* walks n upward using the incremental property
+//! `S(n+1) = S(n) ∪ {u_max}` (each step only needs the next frontier
+//! weight) and early-stops via the sugar-water inequality (Eq. 3): once
+//! `Δal/Δt_sd < al(n)/t_sd(n)` the objective can only fall, so after
+//! `patience` consecutive decreases the search terminates.
+
+use crate::config::SelectorConfig;
+use crate::spec::tree::CandidateTree;
+
+use super::predictor::TsdPredictor;
+
+/// Outcome of one strategy search.
+#[derive(Clone, Debug)]
+pub struct StrategyChoice {
+    /// Chosen per-sample draft token budget (tree tokens incl. root).
+    pub n: usize,
+    /// Predicted accepted tokens at the chosen n (batch total).
+    pub predicted_al: f64,
+    /// Predicted step seconds at the chosen n.
+    pub predicted_tsd: f64,
+    /// Number of candidate n values actually evaluated (≤ max_n; shows
+    /// pruning effectiveness).
+    pub evaluated: usize,
+}
+
+/// Incremental weight streams per sample: `inc[s][k]` = weight of the
+/// (k+1)-th node greedily added to sample s's selection.
+fn incremental_weights(trees: &[&CandidateTree], max_n: usize) -> Vec<Vec<f64>> {
+    trees
+        .iter()
+        .map(|t| {
+            let order = t.select_top_n(max_n.min(t.len()));
+            order.iter().map(|&i| t.nodes[i].w as f64).collect()
+        })
+        .collect()
+}
+
+/// Layer-level search for the near-optimal per-sample budget `n`.
+///
+/// `n_seq`: batch cumulative committed sequence length (KV-load feature);
+/// `trees`: one candidate tree per live sample.
+pub fn select_strategy(
+    cfg: &SelectorConfig,
+    tsd: &mut TsdPredictor,
+    trees: &[&CandidateTree],
+    n_seq: usize,
+    max_n: usize,
+) -> StrategyChoice {
+    let batch = trees.len().max(1);
+    let max_n = max_n.max(1);
+    let inc = incremental_weights(trees, max_n);
+
+    let mut best = StrategyChoice { n: 1, predicted_al: 0.0, predicted_tsd: 1.0, evaluated: 0 };
+    let mut best_obj = f64::NEG_INFINITY;
+    let mut al = 0.0f64;
+    let mut decreases = 0usize;
+    let mut evaluated = 0usize;
+
+    for n in 1..=max_n {
+        // Δal for this n: each sample adds its n-th greedy node (if any).
+        let mut delta = 0.0;
+        for s in inc.iter() {
+            if n <= s.len() {
+                delta += s[n - 1];
+            }
+        }
+        al += delta;
+        let n_draft = batch * n;
+        let t = tsd.predict(n_seq, n_draft);
+        let obj = al / t;
+        evaluated += 1;
+        if obj > best_obj {
+            best_obj = obj;
+            best = StrategyChoice { n, predicted_al: al, predicted_tsd: t, evaluated };
+            decreases = 0;
+        } else {
+            // Sugar-water early stop (Eq. 3): objective decreased; Δal is
+            // non-increasing (greedy max-weight) and Δt_sd non-decreasing
+            // (regression is affine-increasing), so after `patience`
+            // consecutive decreases no larger objective can appear.
+            decreases += 1;
+            if decreases > cfg.patience {
+                break;
+            }
+        }
+    }
+    best.evaluated = evaluated;
+    best
+}
+
+/// Exhaustive argmax over all n (oracle for tests & Table 1).
+pub fn select_exhaustive(
+    tsd: &mut TsdPredictor,
+    trees: &[&CandidateTree],
+    n_seq: usize,
+    max_n: usize,
+) -> StrategyChoice {
+    let batch = trees.len().max(1);
+    let inc = incremental_weights(trees, max_n);
+    let mut best = StrategyChoice { n: 1, predicted_al: 0.0, predicted_tsd: 1.0, evaluated: max_n };
+    let mut best_obj = f64::NEG_INFINITY;
+    let mut al = 0.0;
+    for n in 1..=max_n {
+        for s in inc.iter() {
+            if n <= s.len() {
+                al += s[n - 1];
+            }
+        }
+        let t = tsd.predict(n_seq, batch * n);
+        let obj = al / t;
+        if obj > best_obj {
+            best_obj = obj;
+            best = StrategyChoice { n, predicted_al: al, predicted_tsd: t, evaluated: max_n };
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::rng::Rng;
+
+    fn fitted_tsd(c1: f64, c2: f64) -> TsdPredictor {
+        let mut t = TsdPredictor::new(1, 1);
+        for s in 0..30 {
+            for d in 1..30 {
+                t.observe(s * 64, d, 0.003 + c1 * (s * 64) as f64 + c2 * d as f64);
+            }
+        }
+        t.refit();
+        t
+    }
+
+    fn random_tree(rng: &mut Rng, size: usize) -> CandidateTree {
+        let mut t = CandidateTree::new(0);
+        for _ in 1..size {
+            let parent = rng.below(t.len());
+            let o = 0.2 + 0.8 * rng.f32();
+            t.add_child(parent, rng.below(64) as i32, o);
+        }
+        for n in &mut t.nodes {
+            n.w = n.dl; // identity F (monotone)
+        }
+        t
+    }
+
+    #[test]
+    fn search_matches_exhaustive() {
+        // Property: pruned layer-level search == exhaustive argmax.
+        crate::testutil::check("selector==oracle", 100, |rng| {
+            let mut tsd = fitted_tsd(1e-7, 5e-5);
+            let cfg = SelectorConfig { patience: 2, ..Default::default() };
+            let n_trees = rng.range(1, 4);
+            let trees: Vec<CandidateTree> = (0..n_trees)
+                .map(|_| {
+                    let size = rng.range(2, 30);
+                    random_tree(rng, size)
+                })
+                .collect();
+            let refs: Vec<&CandidateTree> = trees.iter().collect();
+            let n_seq = rng.below(2000);
+            let a = select_strategy(&cfg, &mut tsd, &refs, n_seq, 24);
+            let b = select_exhaustive(&mut tsd, &refs, n_seq, 24);
+            assert_eq!(a.n, b.n, "pruned={} oracle={}", a.n, b.n);
+        });
+    }
+
+    #[test]
+    fn pruning_reduces_evaluations() {
+        let mut tsd = fitted_tsd(1e-7, 2e-3); // steep verify cost → small n*
+        let cfg = SelectorConfig { patience: 2, ..Default::default() };
+        let mut rng = Rng::new(1);
+        let tree = random_tree(&mut rng, 40);
+        let choice = select_strategy(&cfg, &mut tsd, &[&tree], 512, 40);
+        assert!(choice.evaluated < 40, "no pruning happened: {choice:?}");
+        assert!(choice.n < 20);
+    }
+
+    #[test]
+    fn expensive_verification_prefers_small_n() {
+        let cfg = SelectorConfig::default();
+        let mut rng = Rng::new(2);
+        let tree = random_tree(&mut rng, 32);
+        let mut cheap = fitted_tsd(1e-8, 1e-6);
+        let mut dear = fitted_tsd(1e-8, 5e-3);
+        let n_cheap = select_strategy(&cfg, &mut cheap, &[&tree], 256, 32).n;
+        let n_dear = select_strategy(&cfg, &mut dear, &[&tree], 256, 32).n;
+        assert!(
+            n_dear <= n_cheap,
+            "dear verify should not pick larger n ({n_dear} vs {n_cheap})"
+        );
+    }
+
+    #[test]
+    fn larger_batch_shrinks_per_sample_budget() {
+        // With per-token verify cost, 8 samples saturate the step budget
+        // sooner than 1 sample (the paper's high-workload regime).
+        let cfg = SelectorConfig::default();
+        let mut rng = Rng::new(3);
+        let trees: Vec<CandidateTree> = (0..8).map(|_| random_tree(&mut rng, 32)).collect();
+        let solo = vec![&trees[0]];
+        let all: Vec<&CandidateTree> = trees.iter().collect();
+        let mut tsd = fitted_tsd(1e-7, 2e-4);
+        let n_solo = select_strategy(&cfg, &mut tsd, &solo, 256, 32).n;
+        let mut tsd2 = fitted_tsd(1e-7, 2e-4);
+        let n_all = select_strategy(&cfg, &mut tsd2, &all, 2048, 32).n;
+        assert!(n_all <= n_solo, "batch=8 chose n={n_all} > solo n={n_solo}");
+    }
+
+    #[test]
+    fn al_prediction_is_prefix_sum_of_weights() {
+        let mut rng = Rng::new(4);
+        let tree = random_tree(&mut rng, 10);
+        let mut tsd = fitted_tsd(1e-8, 1e-5);
+        let cfg = SelectorConfig { patience: 99, ..Default::default() };
+        let choice = select_strategy(&cfg, &mut tsd, &[&tree], 64, 10);
+        let order = tree.select_top_n(choice.n);
+        let manual: f64 = order.iter().map(|&i| tree.nodes[i].w as f64).sum();
+        assert!((choice.predicted_al - manual).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_node_tree_picks_n1() {
+        let tree = CandidateTree::new(5);
+        let mut tsd = fitted_tsd(1e-8, 1e-5);
+        let cfg = SelectorConfig::default();
+        let c = select_strategy(&cfg, &mut tsd, &[&tree], 0, 16);
+        assert_eq!(c.n, 1);
+    }
+}

@@ -1,0 +1,233 @@
+//! Synthetic corpora standing in for LMSYS-Chat-1M and GSM8K.
+//!
+//! Both generators emit (prompt, reference-response) pairs in plain text
+//! plus a *checker* for rule-based reward: the math corpus checks the
+//! numeric answer; the chat corpus checks grammatical template compliance
+//! (the response should continue with a known object for the verb).
+
+use crate::utils::rng::Rng;
+
+/// A (prompt, ideal response) pair plus a scoring rule.
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub prompt: String,
+    pub response: String,
+}
+
+pub trait Corpus {
+    /// Dataset tag used in reports ("lmsys-like", "gsm8k-like").
+    fn name(&self) -> &'static str;
+    /// Draw one example.
+    fn sample(&self, rng: &mut Rng) -> Example;
+    /// Reward in [0, 1] for a generated response to a prompt.
+    fn score(&self, prompt: &str, response: &str) -> f64;
+    /// One line of pretraining text (prompt + response).
+    fn pretrain_line(&self, rng: &mut Rng) -> String {
+        let e = self.sample(rng);
+        format!("{}{}", e.prompt, e.response)
+    }
+    /// A plausible-but-wrong response (rejected side of a Bradley-Terry
+    /// preference pair for reward-model training).
+    fn corrupt_response(&self, e: &Example, rng: &mut Rng) -> String {
+        let mut chars: Vec<char> = e.response.chars().collect();
+        rng.shuffle(&mut chars);
+        chars.into_iter().collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chat-like (LMSYS stand-in)
+// ---------------------------------------------------------------------------
+
+const SUBJECTS: &[&str] = &["the cat", "a dog", "my friend", "the robot", "our teacher"];
+const VERBS: &[&str] = &["likes", "sees", "wants", "finds", "makes"];
+const OBJECTS: &[&str] = &["a red ball", "the old book", "fresh bread", "a tiny house", "warm tea"];
+
+/// Templated grammar: `"<subj> <verb> "` → `"<obj>."`. Learnable by a tiny
+/// LM, and compliance is checkable (reward = response names a valid
+/// object for the grammar).
+#[derive(Clone, Debug, Default)]
+pub struct ChatCorpus;
+
+impl Corpus for ChatCorpus {
+    fn name(&self) -> &'static str {
+        "lmsys-like"
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let s = SUBJECTS[rng.below(SUBJECTS.len())];
+        let v = VERBS[rng.below(VERBS.len())];
+        let o = OBJECTS[rng.below(OBJECTS.len())];
+        Example {
+            prompt: format!("{s} {v} "),
+            response: format!("{o}."),
+        }
+    }
+
+    fn score(&self, _prompt: &str, response: &str) -> f64 {
+        let r = response.trim();
+        // Full credit: a known object followed by a period.
+        for o in OBJECTS {
+            if r.starts_with(o) {
+                return if r[o.len()..].starts_with('.') { 1.0 } else { 0.8 };
+            }
+        }
+        // Partial credit for producing words of the object vocabulary.
+        let words: Vec<&str> = r.split_whitespace().collect();
+        let hits = words
+            .iter()
+            .filter(|w| OBJECTS.iter().any(|o| o.contains(*w)))
+            .count();
+        (hits as f64 / 3.0).min(0.5)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Math-like (GSM8K stand-in)
+// ---------------------------------------------------------------------------
+
+/// Small arithmetic word problems: `"q: 3 + 4 = a: "` → `"7."`.
+/// Reward checks the numeric answer exactly.
+#[derive(Clone, Debug, Default)]
+pub struct MathCorpus;
+
+impl MathCorpus {
+    fn answer_of(prompt: &str) -> Option<i64> {
+        // "q: A OP B = a: "
+        let body = prompt.strip_prefix("q: ")?.split(" = a:").next()?;
+        let parts: Vec<&str> = body.split_whitespace().collect();
+        if parts.len() != 3 {
+            return None;
+        }
+        let a: i64 = parts[0].parse().ok()?;
+        let b: i64 = parts[2].parse().ok()?;
+        match parts[1] {
+            "+" => Some(a + b),
+            "-" => Some(a - b),
+            "*" => Some(a * b),
+            _ => None,
+        }
+    }
+}
+
+impl Corpus for MathCorpus {
+    fn name(&self) -> &'static str {
+        "gsm8k-like"
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let a = rng.below(20) as i64;
+        let b = rng.below(20) as i64;
+        let op = ["+", "-", "*"][rng.below(3)];
+        let ans = match op {
+            "+" => a + b,
+            "-" => a - b,
+            _ => a * b,
+        };
+        Example {
+            prompt: format!("q: {a} {op} {b} = a: "),
+            response: format!("{ans}."),
+        }
+    }
+
+    fn corrupt_response(&self, e: &Example, rng: &mut Rng) -> String {
+        // An off-by-k wrong answer — harder negative than shuffled chars.
+        let ans: i64 = e
+            .response
+            .trim_end_matches('.')
+            .parse()
+            .unwrap_or(0);
+        format!("{}.", ans + 1 + rng.below(5) as i64)
+    }
+
+    fn score(&self, prompt: &str, response: &str) -> f64 {
+        let Some(ans) = Self::answer_of(prompt) else {
+            return 0.0;
+        };
+        let r = response.trim();
+        let digits: String = r
+            .chars()
+            .take_while(|c| c.is_ascii_digit() || *c == '-')
+            .collect();
+        match digits.parse::<i64>() {
+            Ok(x) if x == ans => {
+                // Bonus for clean termination with a period.
+                if r[digits.len()..].starts_with('.') {
+                    1.0
+                } else {
+                    0.9
+                }
+            }
+            Ok(_) => 0.1,
+            Err(_) => 0.0,
+        }
+    }
+}
+
+/// Look up a corpus by dataset tag.
+pub fn by_name(name: &str) -> Box<dyn Corpus> {
+    match name {
+        "lmsys" | "lmsys-like" | "chat" => Box::new(ChatCorpus),
+        "gsm8k" | "gsm8k-like" | "math" => Box::new(MathCorpus),
+        other => panic!("unknown corpus {other:?} (use lmsys|gsm8k)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chat_examples_score_perfectly() {
+        let c = ChatCorpus;
+        let mut rng = Rng::new(0);
+        for _ in 0..50 {
+            let e = c.sample(&mut rng);
+            assert_eq!(c.score(&e.prompt, &e.response), 1.0, "{e:?}");
+        }
+    }
+
+    #[test]
+    fn chat_garbage_scores_low() {
+        let c = ChatCorpus;
+        assert!(c.score("the cat likes ", "zzz qqq") < 0.5);
+    }
+
+    #[test]
+    fn math_examples_score_perfectly() {
+        let c = MathCorpus;
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let e = c.sample(&mut rng);
+            assert_eq!(c.score(&e.prompt, &e.response), 1.0, "{e:?}");
+        }
+    }
+
+    #[test]
+    fn math_wrong_answer_scores_low() {
+        let c = MathCorpus;
+        assert!(c.score("q: 3 + 4 = a: ", "9.") <= 0.1);
+        assert_eq!(c.score("q: 3 + 4 = a: ", "x") , 0.0);
+    }
+
+    #[test]
+    fn math_answer_parser() {
+        assert_eq!(MathCorpus::answer_of("q: 12 * 3 = a: "), Some(36));
+        assert_eq!(MathCorpus::answer_of("q: 5 - 9 = a: "), Some(-4));
+        assert_eq!(MathCorpus::answer_of("junk"), None);
+    }
+
+    #[test]
+    fn pretrain_line_concatenates() {
+        let mut rng = Rng::new(2);
+        let line = MathCorpus.pretrain_line(&mut rng);
+        assert!(line.starts_with("q: "));
+        assert!(line.ends_with('.'));
+    }
+
+    #[test]
+    fn by_name_resolves() {
+        assert_eq!(by_name("lmsys").name(), "lmsys-like");
+        assert_eq!(by_name("gsm8k").name(), "gsm8k-like");
+    }
+}

@@ -1,0 +1,159 @@
+//! Long-tail response-length models (paper Fig 2).
+//!
+//! LMSYS-Chat-1M responses have median 378 and p95 1373 tokens — a
+//! long-tailed distribution well modeled as lognormal. Solving
+//! `exp(mu) = 378` and `exp(mu + 1.645 sigma) = 1373` gives
+//! `mu = 5.935, sigma = 0.784`. The GSM8K-like model is shorter-tailed.
+//! These drive both the simulator workloads and real-path max-new-token
+//! assignment, reproducing the instance-drain dynamics of Figs 5/9/14.
+
+use crate::utils::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct LengthModel {
+    pub mu: f64,
+    pub sigma: f64,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl LengthModel {
+    /// LMSYS-like: median 378, p95 1373, capped at the paper's 2048.
+    pub fn lmsys() -> Self {
+        LengthModel { mu: 5.935, sigma: 0.784, min_len: 8, max_len: 2048 }
+    }
+
+    /// GSM8K-like: shorter responses (median ~150, p95 ~400).
+    pub fn gsm8k() -> Self {
+        // sigma = ln(400/150)/1.645 = 0.596 ; mu = ln(150) = 5.011
+        LengthModel { mu: 5.011, sigma: 0.596, min_len: 8, max_len: 2048 }
+    }
+
+    /// Scaled-down variant for real-path runs with small max_seq: keeps
+    /// the *shape* (sigma) while shrinking the scale to `median`.
+    pub fn scaled(&self, median: usize, max_len: usize) -> Self {
+        LengthModel {
+            mu: (median as f64).ln(),
+            sigma: self.sigma,
+            min_len: 2,
+            max_len,
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let x = rng.lognormal(self.mu, self.sigma);
+        (x.round() as usize).clamp(self.min_len, self.max_len)
+    }
+
+    pub fn sample_many(&self, n: usize, rng: &mut Rng) -> Vec<usize> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+
+    /// Theoretical median (before clamping).
+    pub fn median(&self) -> f64 {
+        self.mu.exp()
+    }
+
+    /// Theoretical p-quantile (before clamping); p in (0,1).
+    pub fn quantile(&self, p: f64) -> f64 {
+        (self.mu + self.sigma * inv_norm_cdf(p)).exp()
+    }
+}
+
+/// Acklam's inverse normal CDF approximation (|eps| < 1.15e-9).
+pub fn inv_norm_cdf(p: f64) -> f64 {
+    assert!((0.0..1.0).contains(&p) && p > 0.0);
+    const A: [f64; 6] = [
+        -39.696830286653757, 220.9460984245205, -275.92851044696869,
+        138.357751867269, -30.66479806614716, 2.5066282774592392,
+    ];
+    const B: [f64; 5] = [
+        -54.476098798224058, 161.58583685804089, -155.69897985988661,
+        66.80131188771972, -13.280681552885721,
+    ];
+    const C: [f64; 6] = [
+        -0.0077848940024302926, -0.32239645804113648, -2.4007582771618381,
+        -2.5497325393437338, 4.3746641414649678, 2.9381639826987831,
+    ];
+    const D: [f64; 4] = [
+        0.0077846957090414622, 0.32246712907003983, 2.445134137142996,
+        3.7544086619074162,
+    ];
+    let p_low = 0.02425;
+    if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::stats;
+
+    #[test]
+    fn lmsys_matches_paper_quantiles() {
+        // Fig 2: median 378, p95 1373 (~4× the median).
+        let m = LengthModel::lmsys();
+        assert!((m.median() - 378.0).abs() < 5.0);
+        assert!((m.quantile(0.95) - 1373.0).abs() < 30.0, "{}", m.quantile(0.95));
+    }
+
+    #[test]
+    fn empirical_quantiles_match_theory() {
+        let m = LengthModel::lmsys();
+        let mut rng = Rng::new(0);
+        let xs: Vec<f64> = (0..60_000).map(|_| m.sample(&mut rng) as f64).collect();
+        let med = stats::median(&xs);
+        let p95 = stats::percentile(&xs, 95.0);
+        assert!((med - 378.0).abs() / 378.0 < 0.05, "{med}");
+        assert!((p95 - 1373.0).abs() / 1373.0 < 0.06, "{p95}");
+    }
+
+    #[test]
+    fn long_tail_property() {
+        // p95 / median ≈ 3.6 — the "nearly four times" of §3.1.
+        let m = LengthModel::lmsys();
+        let ratio = m.quantile(0.95) / m.median();
+        assert!((3.2..4.1).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn clamping_respected() {
+        let m = LengthModel { mu: 10.0, sigma: 2.0, min_len: 4, max_len: 100 };
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let l = m.sample(&mut rng);
+            assert!((4..=100).contains(&l));
+        }
+    }
+
+    #[test]
+    fn scaled_keeps_shape() {
+        let m = LengthModel::lmsys().scaled(20, 64);
+        assert!((m.median() - 20.0).abs() < 1e-9);
+        assert_eq!(m.sigma, LengthModel::lmsys().sigma);
+    }
+
+    #[test]
+    fn inv_norm_cdf_sanity() {
+        assert!(inv_norm_cdf(0.5).abs() < 1e-9);
+        assert!((inv_norm_cdf(0.975) - 1.96).abs() < 1e-3);
+        assert!((inv_norm_cdf(0.05) + 1.645).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gsm8k_shorter_than_lmsys() {
+        assert!(LengthModel::gsm8k().median() < LengthModel::lmsys().median());
+    }
+}

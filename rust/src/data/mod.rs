@@ -1,0 +1,20 @@
+//! Data substrate: tokenizer, synthetic corpora, response-length models.
+//!
+//! The paper trains on LMSYS-Chat-1M and GSM8K with Llama-3.1-8B; neither
+//! dataset nor model fits this environment (repro band 0/5), so we build
+//! the closest synthetic equivalents (DESIGN.md §2):
+//!
+//! * [`tokenizer`] — a small char-level tokenizer shared by all models;
+//! * [`corpus`] — two generators: a chat-like templated-grammar corpus
+//!   (LMSYS stand-in) and a math word-problem corpus (GSM8K stand-in)
+//!   whose answers are *checkable* — the rule-based reward uses that;
+//! * [`lengths`] — long-tail response-length models calibrated to the
+//!   paper's quantiles (Fig 2: median 378, p95 1373).
+
+pub mod corpus;
+pub mod lengths;
+pub mod tokenizer;
+
+pub use corpus::{ChatCorpus, Corpus, MathCorpus};
+pub use lengths::LengthModel;
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,123 @@
+//! Char-level tokenizer with reserved special tokens.
+//!
+//! Vocabulary layout: `[PAD, EOS, BOS, UNK, …alphabet…]`. The alphabet
+//! covers lowercase letters, digits and common punctuation — enough for
+//! the synthetic corpora while staying inside the tiny config's 64-token
+//! vocabulary.
+
+pub const PAD: i32 = 0;
+pub const EOS: i32 = 1;
+pub const BOS: i32 = 2;
+pub const UNK: i32 = 3;
+
+const ALPHABET: &str = "abcdefghijklmnopqrstuvwxyz0123456789 .,?+-=*:!'";
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    vocab_size: usize,
+}
+
+impl Tokenizer {
+    /// A tokenizer bounded by the model's vocabulary size.
+    pub fn new(vocab_size: usize) -> Self {
+        assert!(
+            vocab_size >= 4 + ALPHABET.len(),
+            "vocab {vocab_size} too small for alphabet ({})",
+            4 + ALPHABET.len()
+        );
+        Tokenizer { vocab_size }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+
+    pub fn encode_char(&self, c: char) -> i32 {
+        match ALPHABET.find(c.to_ascii_lowercase()) {
+            Some(i) => 4 + i as i32,
+            None => UNK,
+        }
+    }
+
+    pub fn encode(&self, s: &str) -> Vec<i32> {
+        s.chars().map(|c| self.encode_char(c)).collect()
+    }
+
+    /// Encode with BOS prefix (prompt form).
+    pub fn encode_prompt(&self, s: &str) -> Vec<i32> {
+        let mut v = vec![BOS];
+        v.extend(self.encode(s));
+        v
+    }
+
+    pub fn decode(&self, toks: &[i32]) -> String {
+        toks.iter()
+            .filter_map(|&t| match t {
+                PAD => None,
+                EOS => Some('§'),
+                BOS => None,
+                UNK => Some('�'),
+                t if (4..4 + ALPHABET.len() as i32).contains(&t) => {
+                    ALPHABET.chars().nth((t - 4) as usize)
+                }
+                _ => Some('?'),
+            })
+            .collect()
+    }
+
+    /// Decode stopping at the first EOS (excluded).
+    pub fn decode_until_eos(&self, toks: &[i32]) -> String {
+        let end = toks.iter().position(|&t| t == EOS).unwrap_or(toks.len());
+        self.decode(&toks[..end])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let tk = Tokenizer::new(64);
+        let s = "the answer is 42.";
+        assert_eq!(tk.decode(&tk.encode(s)), s);
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let tk = Tokenizer::new(64);
+        assert_eq!(tk.encode("~")[0], UNK);
+    }
+
+    #[test]
+    fn prompt_has_bos() {
+        let tk = Tokenizer::new(64);
+        let p = tk.encode_prompt("hi");
+        assert_eq!(p[0], BOS);
+        assert_eq!(p.len(), 3);
+    }
+
+    #[test]
+    fn decode_until_eos_stops() {
+        let tk = Tokenizer::new(64);
+        let mut toks = tk.encode("abc");
+        toks.push(EOS);
+        toks.extend(tk.encode("junk"));
+        assert_eq!(tk.decode_until_eos(&toks), "abc");
+    }
+
+    #[test]
+    #[should_panic]
+    fn vocab_too_small_panics() {
+        Tokenizer::new(10);
+    }
+
+    #[test]
+    fn all_tokens_in_vocab() {
+        let tk = Tokenizer::new(64);
+        for c in "abcdefghijklmnopqrstuvwxyz0123456789 .,?+-=*:!'".chars() {
+            let t = tk.encode_char(c);
+            assert!((0..64).contains(&t), "{c} -> {t}");
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! # RLHFSpec — RLHF training with adaptive speculative drafting
+//!
+//! A production-shaped reproduction of *"RLHFSpec: Breaking the Efficiency
+//! Bottleneck in RLHF Training via Adaptive Drafting"* as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: RLHF
+//!   pipeline, generation instances, tree-based speculative decoding, the
+//!   workload-aware drafting-strategy selector (§5), sample reallocation
+//!   with two-stage KV migration (§6), plus the calibrated instance
+//!   simulator used to regenerate the paper's evaluation at testbed scale.
+//! * **L2 (python/compile/model.py)** — JAX step functions (prefill /
+//!   tree-verify / train steps), AOT-lowered to HLO text once at build
+//!   time (`make artifacts`).
+//! * **L1 (python/compile/kernels/)** — the Pallas tree-attention
+//!   verification kernel, the paper's compute hot-spot.
+//!
+//! Python never runs on the request path: the binary loads
+//! `artifacts/<config>/*.hlo.txt` through the PJRT CPU client (`xla`
+//! crate) and is self-contained afterwards.
+//!
+//! Entry points: [`rlhf`] (the full loop), [`coordinator`]
+//! (multi-instance generation), [`sim`] (paper-scale simulation), and the
+//! `rlhfspec` binary (`rlhfspec fig <id>` regenerates every paper
+//! table/figure).
+
+pub mod benchutil;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod figures;
+pub mod rlhf;
+pub mod runtime;
+pub mod sim;
+pub mod spec;
+pub mod testutil;
+pub mod utils;

@@ -1,0 +1,201 @@
+//! RLHFSpec CLI.
+//!
+//! ```text
+//! rlhfspec fig <id> [--seed N]          regenerate a paper figure/table
+//! rlhfspec fig all                      regenerate everything
+//! rlhfspec rlhf   [--artifacts DIR] …  run the real RLHF loop (PJRT)
+//! rlhfspec gen    [--artifacts DIR] …  run one generation batch (PJRT)
+//! rlhfspec info   [--artifacts DIR]     print manifest/model summary
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use rlhfspec::config::RunConfig;
+use rlhfspec::coordinator::instance::DecodeMode;
+use rlhfspec::figures;
+use rlhfspec::rlhf::RlhfPipeline;
+use rlhfspec::runtime::Manifest;
+use rlhfspec::utils::cli::Args;
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts/tiny"))
+}
+
+fn run_config(args: &Args) -> Result<RunConfig> {
+    let path = args.get("config").map(PathBuf::from);
+    let mut overrides = BTreeMap::new();
+    // Any --key.with.dot becomes a config override.
+    for (k, v) in &args.options {
+        if k.contains('.') {
+            overrides.insert(k.clone(), v.clone());
+        }
+    }
+    if let Some(seed) = args.get("seed") {
+        overrides.insert("seed".into(), seed.to_string());
+    }
+    RunConfig::load(path.as_deref(), &overrides).map_err(|e| anyhow!("{e:#}"))
+}
+
+fn mode_of(args: &Args) -> DecodeMode {
+    match args.get_or("mode", "adaptive").as_str() {
+        "ar" => DecodeMode::Ar,
+        "static" => DecodeMode::StaticSpec(8),
+        m if m.starts_with("static:") => DecodeMode::StaticSpec(m[7..].parse().unwrap_or(8)),
+        _ => DecodeMode::Adaptive,
+    }
+}
+
+fn cmd_fig(args: &Args) -> Result<()> {
+    let mut id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: rlhfspec fig <id>|all"))?
+        .clone();
+    // `rlhfspec table 1` is sugar for `fig table1`.
+    if args.positional[0] == "table" {
+        id = format!("table{id}");
+    }
+    let id = id.as_str();
+    let seed = args.u64_or("seed", 0);
+    if id == "all" {
+        for f in figures::ALL_FIGURES {
+            println!("{}", figures::run_figure(f, seed).unwrap());
+        }
+        return Ok(());
+    }
+    match figures::run_figure(id, seed) {
+        Some(s) => {
+            println!("{s}");
+            Ok(())
+        }
+        None => Err(anyhow!(
+            "unknown figure {id:?}; available: {:?}",
+            figures::ALL_FIGURES
+        )),
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let m = Manifest::load(&artifacts_dir(args))?;
+    println!("config       : {}", m.config_name);
+    println!("attention    : {} (L1 Pallas kernel)", m.attn);
+    for name in ["target", "draft", "critic", "reward"] {
+        let d = m.model(name);
+        println!(
+            "{name:<12} : {} params ({} layers, d={}, heads={}, vocab={}, max_seq={})",
+            d.n_params(),
+            d.n_layers,
+            d.d_model,
+            d.n_heads,
+            d.vocab,
+            d.max_seq
+        );
+    }
+    println!("artifacts    : {}", m.artifacts.len());
+    println!("batch buckets: {:?}", m.batch_buckets);
+    println!("tree buckets : {:?}", m.tree_buckets);
+    Ok(())
+}
+
+fn cmd_rlhf(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let dir = artifacts_dir(args);
+    let corpus = args.get_or("corpus", "gsm8k");
+    let iters = args.usize_or("iters", 4);
+    let pretrain = args.usize_or("pretrain", 60);
+    let distill = args.usize_or("distill", 60);
+    let lr = args.f64_or("warmup-lr", 3e-3) as f32;
+    let seed = cfg.seed;
+
+    let mut p = RlhfPipeline::new(&dir, cfg, &corpus, seed)?;
+    eprintln!("[rlhf] pretraining actor ({pretrain} steps)…");
+    let lm = p.pretrain_actor(pretrain, lr)?;
+    eprintln!("[rlhf] lm loss {:.3} → {:.3}", lm[0], lm.last().unwrap());
+    p.freeze_reference()?;
+    eprintln!("[rlhf] distilling draft ({distill} steps)…");
+    let dl = p.distill_draft(distill, lr)?;
+    eprintln!("[rlhf] distill loss {:.3} → {:.3}", dl[0], dl.last().unwrap());
+    p.train_reward(20, lr)?;
+    p.start_generation(mode_of(args))?;
+    println!(
+        "{:>4} {:>8} {:>9} {:>9} {:>7} {:>8} {:>8} {:>8}",
+        "iter", "gen(s)", "infer(s)", "train(s)", "gen%", "reward", "accept", "tok"
+    );
+    for _ in 0..iters {
+        let (st, _report) = p.iteration()?;
+        println!(
+            "{:>4} {:>8.2} {:>9.2} {:>9.2} {:>6.1}% {:>8.3} {:>7.1}% {:>8}",
+            st.iter,
+            st.gen_secs,
+            st.infer_secs,
+            st.train_secs,
+            100.0 * st.gen_fraction(),
+            st.mean_reward,
+            100.0 * st.accept_rate,
+            st.gen_tokens
+        );
+    }
+    p.stop_generation();
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let dir = artifacts_dir(args);
+    let corpus = args.get_or("corpus", "gsm8k");
+    let n = args.usize_or("samples", 8);
+    let seed = cfg.seed;
+    let mut p = RlhfPipeline::new(&dir, cfg, &corpus, seed)?;
+    let warm = args.usize_or("pretrain", 30);
+    p.pretrain_actor(warm, 3e-3)?;
+    p.distill_draft(warm, 3e-3)?;
+    p.start_generation(mode_of(args))?;
+    let report = p.generate_once(n)?;
+    println!(
+        "finished {} samples | {:.2}s wall | {:.1} tok/s | {} migrations",
+        report.finished.len(),
+        report.wall_secs,
+        report.throughput_tokens(),
+        report.migrations
+    );
+    for r in &report.instances {
+        println!(
+            "  instance {}: {} tokens, accept {:.1}%, selector overhead {:.2}%",
+            r.id,
+            r.metrics.tokens_out,
+            100.0 * r.metrics.acceptance_rate(),
+            100.0 * r.metrics.selector_overhead()
+        );
+    }
+    p.stop_generation();
+    Ok(())
+}
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "fig" | "table" => cmd_fig(&args),
+        "info" => cmd_info(&args),
+        "rlhf" => cmd_rlhf(&args),
+        "gen" => cmd_gen(&args),
+        _ => {
+            println!(
+                "rlhfspec — RLHF training with adaptive speculative drafting\n\n\
+                 usage:\n  rlhfspec fig <2|3|4|5|7|9|11|12|13|14|table1|overhead|all> [--seed N]\n\
+                 \x20 rlhfspec info [--artifacts DIR]\n\
+                 \x20 rlhfspec rlhf [--artifacts DIR] [--corpus gsm8k|lmsys] [--iters N] [--mode adaptive|ar|static:N]\n\
+                 \x20 rlhfspec gen  [--artifacts DIR] [--samples N] [--mode …]\n\
+                 \x20 any --section.key value pair overrides config (see rust/src/config)"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,165 @@
+//! Experience assembly: finished samples → fixed-shape training tensors.
+//!
+//! The inference/training artifacts have static shapes `[B, S]`
+//! (`train_batch`, `train_seq`), so finished samples are padded/truncated
+//! here, response masks derived, and token-level rewards shaped as
+//! `r_row = −kl_coef·(logp − ref_logp)` per row plus the sequence reward
+//! on the final response row.
+
+use crate::coordinator::instance::FinishedSample;
+use crate::data::tokenizer;
+
+/// One padded training row.
+#[derive(Clone, Debug)]
+pub struct Row {
+    /// prompt ++ response, padded with PAD to `seq`.
+    pub tokens: Vec<i32>,
+    /// 1.0 on response token positions (indices prompt_len .. end).
+    pub mask: Vec<f32>,
+    pub prompt_len: usize,
+    /// Number of response tokens kept after truncation.
+    pub resp_len: usize,
+    pub sample_id: u64,
+}
+
+impl Row {
+    /// Index of the last real token.
+    pub fn last_pos(&self) -> usize {
+        (self.prompt_len + self.resp_len).saturating_sub(1)
+    }
+}
+
+/// Pad one finished sample to a fixed sequence length.
+pub fn to_row(s: &FinishedSample, seq: usize) -> Row {
+    let prompt_len = s.prompt.len().min(seq.saturating_sub(1));
+    let resp_len = s.response.len().min(seq - prompt_len);
+    let mut tokens = vec![tokenizer::PAD; seq];
+    tokens[..prompt_len].copy_from_slice(&s.prompt[..prompt_len]);
+    tokens[prompt_len..prompt_len + resp_len].copy_from_slice(&s.response[..resp_len]);
+    let mut mask = vec![0f32; seq];
+    for m in mask.iter_mut().take(prompt_len + resp_len).skip(prompt_len) {
+        *m = 1.0;
+    }
+    Row { tokens, mask, prompt_len, resp_len, sample_id: s.id }
+}
+
+/// Group rows into fixed-size batches, padding the tail with a copy of
+/// the last row but a zero mask (contributes nothing to any loss).
+pub fn batch_rows(rows: &[Row], batch: usize) -> Vec<Vec<Row>> {
+    assert!(batch > 0);
+    let mut out = Vec::new();
+    let mut cur: Vec<Row> = Vec::with_capacity(batch);
+    for r in rows {
+        cur.push(r.clone());
+        if cur.len() == batch {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        let filler = {
+            let mut f = cur.last().unwrap().clone();
+            f.mask.iter_mut().for_each(|m| *m = 0.0);
+            f.resp_len = 0;
+            f
+        };
+        while cur.len() < batch {
+            cur.push(filler.clone());
+        }
+        out.push(cur);
+    }
+    out
+}
+
+/// Shape token-level rewards over the next-token rows ([S-1]).
+///
+/// Row `t` predicts token `t+1`; response rows are
+/// `prompt_len-1 .. prompt_len+resp_len-1`. Each gets the KL penalty;
+/// the last gets the terminal sequence reward too.
+pub fn shaped_rewards(
+    row: &Row,
+    seq_reward: f32,
+    logp: &[f32],
+    ref_logp: &[f32],
+    kl_coef: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let s1 = logp.len();
+    debug_assert_eq!(ref_logp.len(), s1);
+    let mut rewards = vec![0f32; s1];
+    let mut row_mask = vec![0f32; s1];
+    if row.resp_len == 0 || row.prompt_len == 0 {
+        return (rewards, row_mask);
+    }
+    let first = row.prompt_len - 1;
+    let last = (row.prompt_len + row.resp_len - 2).min(s1 - 1);
+    for t in first..=last {
+        row_mask[t] = 1.0;
+        rewards[t] = -kl_coef * (logp[t] - ref_logp[t]);
+    }
+    rewards[last] += seq_reward;
+    (rewards, row_mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(prompt: Vec<i32>, response: Vec<i32>) -> FinishedSample {
+        FinishedSample {
+            id: 1,
+            prompt,
+            response,
+            rounds: 1,
+            drafts_accepted: 0,
+            drafts_proposed: 0,
+        }
+    }
+
+    #[test]
+    fn row_pads_and_masks() {
+        let r = to_row(&sample(vec![5, 6], vec![7, 8, 9]), 8);
+        assert_eq!(r.tokens, vec![5, 6, 7, 8, 9, 0, 0, 0]);
+        assert_eq!(r.mask, vec![0.0, 0.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(r.last_pos(), 4);
+    }
+
+    #[test]
+    fn row_truncates_long_response() {
+        let r = to_row(&sample(vec![1; 4], vec![2; 10]), 8);
+        assert_eq!(r.resp_len, 4);
+        assert_eq!(r.tokens.len(), 8);
+    }
+
+    #[test]
+    fn batching_pads_with_zero_mask() {
+        let rows: Vec<Row> = (0..5)
+            .map(|i| to_row(&sample(vec![i as i32], vec![1]), 4))
+            .collect();
+        let batches = batch_rows(&rows, 4);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[1].len(), 4);
+        // filler rows must be fully masked out
+        assert!(batches[1][2].mask.iter().all(|&m| m == 0.0));
+        assert!(batches[1][3].mask.iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn shaped_rewards_places_terminal_on_last_row() {
+        let r = to_row(&sample(vec![10, 11], vec![12, 13]), 6);
+        // S=6 → rows S-1=5; response rows = prompt_len-1=1 .. 1+2-1=2.
+        let logp = vec![-1.0; 5];
+        let refp = vec![-1.5; 5];
+        let (rw, m) = shaped_rewards(&r, 2.0, &logp, &refp, 0.1);
+        assert_eq!(m, vec![0.0, 1.0, 1.0, 0.0, 0.0]);
+        // KL penalty = -0.1 * (−1 − (−1.5)) = −0.05 per row.
+        assert!((rw[1] + 0.05).abs() < 1e-6);
+        assert!((rw[2] - (2.0 - 0.05)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_response_yields_no_mask() {
+        let r = to_row(&sample(vec![1, 2, 3], vec![]), 6);
+        let (rw, m) = shaped_rewards(&r, 1.0, &[0.0; 5], &[0.0; 5], 0.1);
+        assert!(m.iter().all(|&x| x == 0.0));
+        assert!(rw.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,128 @@
+//! Generalized Advantage Estimation (Schulman et al. 2016).
+//!
+//! Computed over the *next-token rows*: row `t` of the [S-1]-shaped
+//! arrays corresponds to predicting token `t+1`. Rewards are shaped in
+//! `experience`: per-row KL penalty plus terminal reward on the last
+//! response row.
+
+/// Compute (advantages, returns) for one sample.
+///
+/// `rewards[t]`, `values[t]`, `mask[t]` are row-aligned; rows with
+/// `mask == 0` are skipped (treated as absorbing: no bootstrap through
+/// padding).
+pub fn gae(
+    rewards: &[f32],
+    values: &[f32],
+    mask: &[f32],
+    gamma: f32,
+    lambda: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let n = rewards.len();
+    assert_eq!(values.len(), n);
+    assert_eq!(mask.len(), n);
+    let mut adv = vec![0f32; n];
+    let mut running = 0f32;
+    let mut next_value = 0f32;
+    for t in (0..n).rev() {
+        if mask[t] == 0.0 {
+            continue;
+        }
+        let delta = rewards[t] + gamma * next_value - values[t];
+        running = delta + gamma * lambda * running;
+        adv[t] = running;
+        next_value = values[t];
+    }
+    let returns: Vec<f32> = adv.iter().zip(values).map(|(a, v)| a + v).collect();
+    (adv, returns)
+}
+
+/// Normalize advantages to zero mean / unit variance over masked rows
+/// (standard PPO stabilization).
+pub fn normalize_advantages(adv: &mut [f32], mask: &[f32]) {
+    let mut n = 0f64;
+    let mut sum = 0f64;
+    for (a, m) in adv.iter().zip(mask) {
+        if *m > 0.0 {
+            sum += *a as f64;
+            n += 1.0;
+        }
+    }
+    if n < 2.0 {
+        return;
+    }
+    let mean = sum / n;
+    let mut var = 0f64;
+    for (a, m) in adv.iter().zip(mask) {
+        if *m > 0.0 {
+            var += (*a as f64 - mean).powi(2);
+        }
+    }
+    let std = (var / n).sqrt().max(1e-6);
+    for (a, m) in adv.iter_mut().zip(mask) {
+        if *m > 0.0 {
+            *a = ((*a as f64 - mean) / std) as f32;
+        } else {
+            *a = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_step_terminal_reward() {
+        // One masked row, reward 1, value 0.3 → adv = 1 - 0.3.
+        let (adv, ret) = gae(&[1.0], &[0.3], &[1.0], 1.0, 0.95);
+        assert!((adv[0] - 0.7).abs() < 1e-6);
+        assert!((ret[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn discounting_propagates_backward() {
+        // rewards only at the end; gamma=1, lambda=1 → adv[0] spans all.
+        let rewards = [0.0, 0.0, 1.0];
+        let values = [0.0, 0.0, 0.0];
+        let mask = [1.0, 1.0, 1.0];
+        let (adv, _) = gae(&rewards, &values, &mask, 1.0, 1.0);
+        assert!((adv[0] - 1.0).abs() < 1e-6);
+        assert!((adv[1] - 1.0).abs() < 1e-6);
+        assert!((adv[2] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lambda_zero_is_td() {
+        // lambda=0 → adv_t = r_t + gamma V_{t+1} - V_t exactly.
+        let rewards = [0.5, 0.2, 1.0];
+        let values = [0.1, 0.4, 0.3];
+        let mask = [1.0, 1.0, 1.0];
+        let (adv, _) = gae(&rewards, &values, &mask, 0.9, 0.0);
+        assert!((adv[2] - (1.0 - 0.3)).abs() < 1e-6);
+        assert!((adv[1] - (0.2 + 0.9 * 0.3 - 0.4)).abs() < 1e-6);
+        assert!((adv[0] - (0.5 + 0.9 * 0.4 - 0.1)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn masked_rows_untouched() {
+        let rewards = [9.0, 0.0, 1.0, 9.0];
+        let values = [9.0, 0.0, 0.0, 9.0];
+        let mask = [0.0, 1.0, 1.0, 0.0];
+        let (adv, _) = gae(&rewards, &values, &mask, 1.0, 1.0);
+        assert_eq!(adv[0], 0.0);
+        assert_eq!(adv[3], 0.0);
+        assert!((adv[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normalization_zero_mean_unit_std() {
+        let mut adv = vec![1.0, 2.0, 3.0, 100.0];
+        let mask = vec![1.0, 1.0, 1.0, 0.0];
+        normalize_advantages(&mut adv, &mask);
+        let m = (adv[0] + adv[1] + adv[2]) / 3.0;
+        assert!(m.abs() < 1e-5);
+        assert_eq!(adv[3], 0.0);
+        let var = (adv[0].powi(2) + adv[1].powi(2) + adv[2].powi(2)) / 3.0;
+        assert!((var - 1.0).abs() < 1e-4);
+    }
+}

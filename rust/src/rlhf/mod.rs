@@ -1,0 +1,19 @@
+//! The RLHF pipeline (paper §2.1): generation → inference → training.
+//!
+//! * [`gae`] — generalized advantage estimation (pure math).
+//! * [`experience`] — padding/batching of finished samples into the
+//!   fixed-shape tensors the inference/training artifacts expect, plus
+//!   token-level reward shaping (terminal reward + per-token KL penalty).
+//! * [`pipeline`] — the four-model orchestration: actor generates through
+//!   the speculative [`crate::coordinator::driver::GenerationService`];
+//!   reference/critic/reward models produce learnable experiences; PPO +
+//!   value steps update actor and critic; fresh weights broadcast back to
+//!   the generation fleet. Also hosts the warm-up phases: actor LM
+//!   pretraining, SSM distillation (which *earns* the Fig 7 correlation),
+//!   and Bradley-Terry reward-model training.
+
+pub mod experience;
+pub mod gae;
+pub mod pipeline;
+
+pub use pipeline::{IterationStats, RlhfPipeline};

@@ -1,0 +1,186 @@
+//! The PJRT execution engine: one per generation instance / trainer.
+//!
+//! Lazily compiles HLO-text artifacts on first use (mirrors CUDA-graph /
+//! bucket warmup in GPU serving systems) and exposes a generic
+//! `run_artifact` that marshals positional arguments straight from the
+//! manifest description, so call sites never hand-count argument lists.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ArgDesc, Manifest};
+use super::tensor::HostTensor;
+use super::weights::ModelStore;
+
+/// Per-artifact call statistics (feeds Fig 3 breakdown + §7.7 overheads).
+#[derive(Clone, Debug, Default)]
+pub struct CallStats {
+    pub calls: u64,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}
+
+pub struct Engine {
+    pub manifest: Rc<Manifest>,
+    client: xla::PjRtClient,
+    exes: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<BTreeMap<String, CallStats>>,
+}
+
+impl Engine {
+    /// Create an engine backed by the PJRT CPU client.
+    pub fn new(manifest: Rc<Manifest>) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { manifest, client, exes: RefCell::new(BTreeMap::new()), stats: RefCell::new(BTreeMap::new()) })
+    }
+
+    /// Load + parse manifest from an artifacts config dir, then construct.
+    pub fn from_dir(dir: &std::path::Path) -> Result<Engine> {
+        Engine::new(Rc::new(Manifest::load(dir)?))
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let art = self.manifest.artifact(name)?;
+        let path = self.manifest.dir.join(&art.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?,
+        );
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats
+            .borrow_mut()
+            .entry(name.to_string())
+            .or_default()
+            .compile_secs += dt;
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a compiled artifact with pre-marshalled literals.
+    pub fn run_literals(
+        &self,
+        name: &str,
+        args: &[&xla::Literal],
+    ) -> Result<Vec<HostTensor>> {
+        let exe = self.executable(name)?;
+        let t0 = Instant::now();
+        let results = exe
+            .execute::<&xla::Literal>(args)
+            .with_context(|| format!("executing {name}"))?;
+        let lit = results[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching outputs of {name}"))?;
+        // Every artifact is lowered with return_tuple=True.
+        let parts = lit.to_tuple()?;
+        let mut outs = Vec::with_capacity(parts.len());
+        for p in &parts {
+            outs.push(HostTensor::from_literal(p)?);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let mut st = self.stats.borrow_mut();
+        let e = st.entry(name.to_string()).or_default();
+        e.calls += 1;
+        e.total_secs += dt;
+        Ok(outs)
+    }
+
+    /// Execute an artifact, expanding weight/adam groups from `stores` and
+    /// array/scalar args from `data` (validated against the manifest).
+    pub fn run_artifact(
+        &self,
+        name: &str,
+        stores: &BTreeMap<String, &ModelStore>,
+        data: &BTreeMap<&str, &HostTensor>,
+    ) -> Result<Vec<HostTensor>> {
+        let art = self.manifest.artifact(name)?.clone();
+        let mut temps: Vec<xla::Literal> = Vec::new();
+        // First pass: create temp literals for data args.
+        for a in &art.args {
+            match a {
+                ArgDesc::Array { name: an, shape, dtype } => {
+                    let t = data
+                        .get(an.as_str())
+                        .ok_or_else(|| anyhow!("{name}: missing data arg {an:?}"))?;
+                    t.check(shape, dtype)
+                        .with_context(|| format!("{name}: arg {an:?}"))?;
+                    temps.push(t.to_literal()?);
+                }
+                ArgDesc::Scalar { name: an, .. } => {
+                    let t = data
+                        .get(an.as_str())
+                        .ok_or_else(|| anyhow!("{name}: missing scalar arg {an:?}"))?;
+                    if !t.shape.is_empty() {
+                        bail!("{name}: scalar arg {an:?} must be rank-0");
+                    }
+                    temps.push(t.to_literal()?);
+                }
+                _ => {}
+            }
+        }
+        // Second pass: assemble refs in positional order.
+        let mut refs: Vec<&xla::Literal> = Vec::new();
+        let mut ti = 0;
+        for a in &art.args {
+            match a {
+                ArgDesc::Weights { model } => {
+                    let s = stores
+                        .get(model)
+                        .ok_or_else(|| anyhow!("{name}: missing model store {model:?}"))?;
+                    refs.extend(s.weights().iter());
+                }
+                ArgDesc::AdamM { model } => {
+                    let s = stores
+                        .get(model)
+                        .ok_or_else(|| anyhow!("{name}: missing model store {model:?}"))?;
+                    refs.extend(s.adam_m().iter());
+                }
+                ArgDesc::AdamV { model } => {
+                    let s = stores
+                        .get(model)
+                        .ok_or_else(|| anyhow!("{name}: missing model store {model:?}"))?;
+                    refs.extend(s.adam_v().iter());
+                }
+                ArgDesc::Array { .. } | ArgDesc::Scalar { .. } => {
+                    refs.push(&temps[ti]);
+                    ti += 1;
+                }
+            }
+        }
+        self.run_literals(name, &refs)
+    }
+
+    /// Snapshot of per-artifact call statistics.
+    pub fn stats(&self) -> BTreeMap<String, CallStats> {
+        self.stats.borrow().clone()
+    }
+
+    /// Total execution seconds across artifacts matching a prefix.
+    pub fn total_secs(&self, prefix: &str) -> f64 {
+        self.stats
+            .borrow()
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(_, v)| v.total_secs)
+            .sum()
+    }
+
+    /// Number of distinct artifacts compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.exes.borrow().len()
+    }
+}

@@ -1,0 +1,289 @@
+//! Parsed form of `artifacts/<config>/manifest.json`.
+//!
+//! The manifest is the single source of truth for model hyper-parameters,
+//! per-model weight layouts, shape buckets and per-artifact positional
+//! argument lists. It is emitted by `python/compile/aot.py` in the same
+//! build that produced the HLO files, so rust and the HLO can never drift.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::utils::json::Json;
+
+/// Hyper-parameters of one transformer (mirrors configs.TransformerConfig).
+#[derive(Clone, Debug)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub d_head: usize,
+}
+
+impl ModelDims {
+    fn parse(j: &Json) -> Result<ModelDims> {
+        let u = |k: &str| -> Result<usize> {
+            j.req(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow!("bad field {k}"))
+        };
+        Ok(ModelDims {
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            d_ff: u("d_ff")?,
+            max_seq: u("max_seq")?,
+            d_head: u("d_head")?,
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        let per_layer = 4 * self.d_model * self.d_model + 2 * self.d_model * self.d_ff;
+        2 * self.vocab * self.d_model
+            + self.n_layers * per_layer
+            + self.n_layers * 2 * self.d_model
+            + self.d_model
+    }
+}
+
+/// One positional argument of an artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArgDesc {
+    /// Expand to the model's full flat weight list.
+    Weights { model: String },
+    /// Adam first/second moment (same shapes as the weights).
+    AdamM { model: String },
+    AdamV { model: String },
+    /// A single array argument.
+    Array { name: String, shape: Vec<usize>, dtype: String },
+    /// A scalar argument.
+    Scalar { name: String, dtype: String },
+}
+
+#[derive(Clone, Debug)]
+pub struct OutDesc {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactDesc {
+    pub name: String,
+    pub file: String,
+    pub args: Vec<ArgDesc>,
+    pub outs: Vec<OutDesc>,
+}
+
+#[derive(Clone, Debug)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// The whole manifest for one config directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config_name: String,
+    pub attn: String,
+    pub target: ModelDims,
+    pub draft: ModelDims,
+    pub critic: ModelDims,
+    pub reward: ModelDims,
+    pub batch_buckets: Vec<usize>,
+    pub tree_buckets: Vec<usize>,
+    pub train_batch: usize,
+    pub train_seq: usize,
+    pub weights: BTreeMap<String, Vec<WeightEntry>>,
+    pub artifacts: BTreeMap<String, ArtifactDesc>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&src).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        Self::parse(dir.to_path_buf(), &j)
+    }
+
+    fn parse(dir: PathBuf, j: &Json) -> Result<Manifest> {
+        let cfg = j.req("config")?;
+        let name = cfg
+            .req("name")?
+            .as_str()
+            .ok_or_else(|| anyhow!("config.name"))?
+            .to_string();
+
+        let mut weights = BTreeMap::new();
+        for (mdl, entries) in j.req("weights")?.as_obj().ok_or_else(|| anyhow!("weights"))? {
+            let mut list = Vec::new();
+            for e in entries.as_arr().ok_or_else(|| anyhow!("weights[{mdl}]"))? {
+                list.push(WeightEntry {
+                    name: e.req("name")?.as_str().unwrap_or_default().to_string(),
+                    shape: e
+                        .req("shape")?
+                        .usize_arr()
+                        .ok_or_else(|| anyhow!("weight shape"))?,
+                });
+            }
+            weights.insert(mdl.clone(), list);
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (aname, art) in j.req("artifacts")?.as_obj().ok_or_else(|| anyhow!("artifacts"))? {
+            let mut args = Vec::new();
+            for a in art.req("args")?.as_arr().ok_or_else(|| anyhow!("args"))? {
+                let kind = a.req("kind")?.as_str().unwrap_or_default();
+                let desc = match kind {
+                    "weights" => ArgDesc::Weights {
+                        model: a.req("model")?.as_str().unwrap_or_default().to_string(),
+                    },
+                    "adam_m" => ArgDesc::AdamM {
+                        model: a.req("model")?.as_str().unwrap_or_default().to_string(),
+                    },
+                    "adam_v" => ArgDesc::AdamV {
+                        model: a.req("model")?.as_str().unwrap_or_default().to_string(),
+                    },
+                    "array" => ArgDesc::Array {
+                        name: a.req("name")?.as_str().unwrap_or_default().to_string(),
+                        shape: a
+                            .req("shape")?
+                            .usize_arr()
+                            .ok_or_else(|| anyhow!("arg shape"))?,
+                        dtype: a.req("dtype")?.as_str().unwrap_or("float32").to_string(),
+                    },
+                    "scalar" => ArgDesc::Scalar {
+                        name: a.req("name")?.as_str().unwrap_or_default().to_string(),
+                        dtype: a.req("dtype")?.as_str().unwrap_or("float32").to_string(),
+                    },
+                    other => bail!("unknown arg kind {other:?} in {aname}"),
+                };
+                args.push(desc);
+            }
+            let mut outs = Vec::new();
+            for o in art.req("outs")?.as_arr().ok_or_else(|| anyhow!("outs"))? {
+                outs.push(OutDesc {
+                    shape: o
+                        .req("shape")?
+                        .usize_arr()
+                        .ok_or_else(|| anyhow!("out shape"))?,
+                    dtype: o.req("dtype")?.as_str().unwrap_or("float32").to_string(),
+                });
+            }
+            artifacts.insert(
+                aname.clone(),
+                ArtifactDesc {
+                    name: aname.clone(),
+                    file: art.req("file")?.as_str().unwrap_or_default().to_string(),
+                    args,
+                    outs,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir,
+            config_name: name,
+            attn: j.req("attn")?.as_str().unwrap_or("pallas").to_string(),
+            target: ModelDims::parse(cfg.req("target")?)?,
+            draft: ModelDims::parse(cfg.req("draft")?)?,
+            critic: ModelDims::parse(cfg.req("critic")?)?,
+            reward: ModelDims::parse(cfg.req("reward")?)?,
+            batch_buckets: cfg
+                .req("batch_buckets")?
+                .usize_arr()
+                .ok_or_else(|| anyhow!("batch_buckets"))?,
+            tree_buckets: cfg
+                .req("tree_buckets")?
+                .usize_arr()
+                .ok_or_else(|| anyhow!("tree_buckets"))?,
+            train_batch: cfg.req("train_batch")?.as_usize().unwrap_or(4),
+            train_seq: cfg.req("train_seq")?.as_usize().unwrap_or(256),
+            weights,
+            artifacts,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> &ModelDims {
+        match name {
+            "target" => &self.target,
+            "draft" => &self.draft,
+            "critic" => &self.critic,
+            "reward" => &self.reward,
+            _ => panic!("unknown model {name}"),
+        }
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactDesc> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    /// Smallest batch bucket that fits `n` live samples.
+    pub fn batch_bucket(&self, n: usize) -> Option<usize> {
+        self.batch_buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    /// Smallest tree bucket that fits `n` tree tokens.
+    pub fn tree_bucket(&self, n: usize) -> Option<usize> {
+        self.tree_buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    /// `{model}_tree_b{B}_t{T}` artifact name for a live batch/tree size.
+    pub fn tree_artifact(&self, model: &str, batch: usize, tree: usize) -> Result<String> {
+        let b = self
+            .batch_bucket(batch)
+            .ok_or_else(|| anyhow!("batch {batch} exceeds buckets {:?}", self.batch_buckets))?;
+        let t = self
+            .tree_bucket(tree)
+            .ok_or_else(|| anyhow!("tree {tree} exceeds buckets {:?}", self.tree_buckets))?;
+        Ok(format!("{model}_tree_b{b}_t{t}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+    }
+
+    #[test]
+    fn loads_tiny_manifest() {
+        let m = Manifest::load(&tiny_dir()).expect("run `make artifacts` first");
+        assert_eq!(m.config_name, "tiny");
+        assert_eq!(m.target.n_layers, 2);
+        assert!(m.artifacts.contains_key("target_tree_b1_t1"));
+        assert_eq!(m.weights["target"].len(), 2 + 8 * m.target.n_layers + 1);
+    }
+
+    #[test]
+    fn buckets_round_up() {
+        let m = Manifest::load(&tiny_dir()).unwrap();
+        assert_eq!(m.batch_bucket(1), Some(1));
+        assert_eq!(m.batch_bucket(2), Some(2));
+        assert_eq!(m.batch_bucket(3), None);
+        assert_eq!(m.tree_bucket(3), Some(4));
+        assert_eq!(
+            m.tree_artifact("draft", 2, 5).unwrap(),
+            "draft_tree_b2_t8"
+        );
+    }
+
+    #[test]
+    fn artifact_args_parsed() {
+        let m = Manifest::load(&tiny_dir()).unwrap();
+        let a = m.artifact("target_tree_b1_t4").unwrap();
+        assert!(matches!(&a.args[0], ArgDesc::Weights { model } if model == "target"));
+        assert!(matches!(&a.args[3], ArgDesc::Array { name, .. } if name == "tokens"));
+        assert_eq!(a.outs.len(), 3);
+    }
+}

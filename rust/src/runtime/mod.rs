@@ -1,0 +1,25 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! The interchange contract with the python AOT pipeline
+//! (`python/compile/aot.py`):
+//!
+//! * artifacts are HLO **text** (`HloModuleProto::from_text_file` reassigns
+//!   instruction ids, sidestepping the 64-bit-id proto incompatibility);
+//! * every executable returns one tuple literal which [`engine::Engine`]
+//!   decomposes into per-output [`tensor::HostTensor`]s;
+//! * `manifest.json` describes the positional argument list of every
+//!   artifact so marshalling is generic.
+//!
+//! One [`engine::Engine`] per generation instance / trainer thread
+//! (`PjRtClient` is Rc-based, i.e. single-threaded by design — one client
+//! per "GPU").
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+pub mod weights;
+
+pub use engine::Engine;
+pub use manifest::{ArgDesc, ArtifactDesc, Manifest};
+pub use tensor::HostTensor;
+pub use weights::ModelStore;

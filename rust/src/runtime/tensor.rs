@@ -1,0 +1,195 @@
+//! Host-side tensors and conversion to/from `xla::Literal`.
+//!
+//! All request-path state (KV caches, weights, token buffers) lives in
+//! these plain host buffers; literals are created at call boundaries.
+
+use anyhow::{anyhow, bail, Result};
+
+/// Row-major host tensor, f32 or i32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} vs len {}", data.len());
+        HostTensor { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} vs len {}", data.len());
+        HostTensor { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn zeros_i32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor::i32(shape, vec![0; n])
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        HostTensor::f32(vec![], vec![x])
+    }
+
+    pub fn scalar_i32(x: i32) -> Self {
+        HostTensor::i32(vec![], vec![x])
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            TensorData::F32(_) => panic!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn scalar(&self) -> f32 {
+        match &self.data {
+            TensorData::F32(v) => v[0],
+            TensorData::I32(v) => v[0] as f32,
+        }
+    }
+
+    /// Flat index for a multi-dimensional coordinate.
+    pub fn index(&self, coord: &[usize]) -> usize {
+        debug_assert_eq!(coord.len(), self.shape.len());
+        let mut idx = 0;
+        for (c, s) in coord.iter().zip(&self.shape) {
+            debug_assert!(c < s, "coord {coord:?} out of shape {:?}", self.shape);
+            idx = idx * s + c;
+        }
+        idx
+    }
+
+    // ---- Literal conversion ------------------------------------------------
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<usize> = self.shape.clone();
+        match &self.data {
+            TensorData::F32(v) => {
+                let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::F32, &dims);
+                lit.copy_raw_from(v)?;
+                Ok(lit)
+            }
+            TensorData::I32(v) => {
+                let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::S32, &dims);
+                lit.copy_raw_from(v)?;
+                Ok(lit)
+            }
+        }
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::f32(dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(HostTensor::i32(dims, lit.to_vec::<i32>()?)),
+            other => Err(anyhow!("unsupported literal dtype {other:?}")),
+        }
+    }
+
+    /// Validate against a manifest shape/dtype description.
+    pub fn check(&self, shape: &[usize], dtype: &str) -> Result<()> {
+        if self.shape != shape {
+            bail!("shape mismatch: have {:?}, want {:?}", self.shape, shape);
+        }
+        let ok = matches!(
+            (&self.data, dtype),
+            (TensorData::F32(_), "float32") | (TensorData::I32(_), "int32")
+        );
+        if !ok {
+            bail!("dtype mismatch: want {dtype}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_row_major() {
+        let t = HostTensor::zeros_f32(vec![2, 3, 4]);
+        assert_eq!(t.index(&[0, 0, 0]), 0);
+        assert_eq!(t.index(&[0, 0, 3]), 3);
+        assert_eq!(t.index(&[0, 1, 0]), 4);
+        assert_eq!(t.index(&[1, 2, 3]), 23);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let t2 = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = HostTensor::i32(vec![3], vec![-1, 0, 7]);
+        let lit = t.to_literal().unwrap();
+        let t2 = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar() {
+        let t = HostTensor::scalar_f32(2.5);
+        let lit = t.to_literal().unwrap();
+        let t2 = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t2.scalar(), 2.5);
+        assert!(t2.shape.is_empty());
+    }
+
+    #[test]
+    fn check_validates() {
+        let t = HostTensor::zeros_f32(vec![2, 2]);
+        assert!(t.check(&[2, 2], "float32").is_ok());
+        assert!(t.check(&[2, 2], "int32").is_err());
+        assert!(t.check(&[4], "float32").is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! Model weight + optimizer-state store.
+//!
+//! Weights live as `xla::Literal`s so repeated executions pass them without
+//! re-marshalling; Adam moments are materialized lazily (generation-only
+//! engines never allocate them). Initialization mirrors the python scheme
+//! (normal · fan_in^-1/2, RMS-norm scales = 1) from a seeded [`Rng`], and a
+//! simple binary checkpoint format supports save/load across processes.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{Manifest, WeightEntry};
+use super::tensor::HostTensor;
+use crate::utils::rng::Rng;
+
+pub struct ModelStore {
+    pub model: String,
+    pub entries: Vec<WeightEntry>,
+    ws: Vec<xla::Literal>,
+    m: Vec<xla::Literal>,
+    v: Vec<xla::Literal>,
+    step: f32,
+}
+
+const CKPT_MAGIC: &[u8; 8] = b"RLHFW001";
+
+impl ModelStore {
+    /// Deterministically initialize weights for `model` from `seed`.
+    pub fn init(manifest: &Manifest, model: &str, seed: u64) -> Result<ModelStore> {
+        let entries = manifest
+            .weights
+            .get(model)
+            .ok_or_else(|| anyhow!("no weight spec for model {model:?}"))?
+            .clone();
+        let mut rng = Rng::new(seed);
+        let mut ws = Vec::with_capacity(entries.len());
+        for e in &entries {
+            let n: usize = e.shape.iter().product();
+            let data = if e.name.ends_with("norm") {
+                vec![1.0f32; n]
+            } else {
+                let std = (e.shape[0] as f32).powf(-0.5);
+                (0..n).map(|_| rng.normal() as f32 * std).collect()
+            };
+            ws.push(HostTensor::f32(e.shape.clone(), data).to_literal()?);
+        }
+        Ok(ModelStore { model: model.to_string(), entries, ws, m: Vec::new(), v: Vec::new(), step: 0.0 })
+    }
+
+    pub fn n_weights(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.entries.iter().map(|e| e.shape.iter().product::<usize>()).sum()
+    }
+
+    pub fn weights(&self) -> &[xla::Literal] {
+        &self.ws
+    }
+
+    pub fn step(&self) -> f32 {
+        self.step
+    }
+
+    fn ensure_adam(&mut self) {
+        if self.m.is_empty() {
+            let zero = |e: &WeightEntry| {
+                HostTensor::zeros_f32(e.shape.clone()).to_literal().unwrap()
+            };
+            self.m = self.entries.iter().map(zero).collect();
+            self.v = self.entries.iter().map(zero).collect();
+        }
+    }
+
+    pub fn adam_m(&self) -> &[xla::Literal] {
+        assert!(!self.m.is_empty(), "call prepare_training() first");
+        &self.m
+    }
+
+    pub fn adam_v(&self) -> &[xla::Literal] {
+        assert!(!self.v.is_empty(), "call prepare_training() first");
+        &self.v
+    }
+
+    /// Allocate Adam state (no-op if already present).
+    pub fn prepare_training(&mut self) {
+        self.ensure_adam();
+    }
+
+    /// Scalar literal for the Adam `step` argument.
+    pub fn step_tensor(&self) -> HostTensor {
+        HostTensor::scalar_f32(self.step)
+    }
+
+    /// Consume the `(ws…, m…, v…, step)` tail of a train-step output,
+    /// starting at `offset` (after loss/stat scalars).
+    pub fn apply_train_outputs(&mut self, outs: &[HostTensor], offset: usize) -> Result<()> {
+        let n = self.n_weights();
+        if outs.len() < offset + 3 * n + 1 {
+            bail!(
+                "train outputs too short: {} < {} + 3*{} + 1",
+                outs.len(),
+                offset,
+                n
+            );
+        }
+        let mut ws = Vec::with_capacity(n);
+        let mut m = Vec::with_capacity(n);
+        let mut v = Vec::with_capacity(n);
+        for i in 0..n {
+            ws.push(outs[offset + i].to_literal()?);
+            m.push(outs[offset + n + i].to_literal()?);
+            v.push(outs[offset + 2 * n + i].to_literal()?);
+        }
+        self.ws = ws;
+        self.m = m;
+        self.v = v;
+        self.step = outs[offset + 3 * n].scalar();
+        Ok(())
+    }
+
+    /// Replace weights from host tensors (e.g. broadcast to workers).
+    pub fn set_weights(&mut self, tensors: &[HostTensor]) -> Result<()> {
+        if tensors.len() != self.n_weights() {
+            bail!("weight count mismatch");
+        }
+        let mut ws = Vec::with_capacity(tensors.len());
+        for (t, e) in tensors.iter().zip(&self.entries) {
+            if t.shape != e.shape {
+                bail!("shape mismatch for {}: {:?} vs {:?}", e.name, t.shape, e.shape);
+            }
+            ws.push(t.to_literal()?);
+        }
+        self.ws = ws;
+        Ok(())
+    }
+
+    /// Copy weights out as host tensors (checkpointing / broadcast).
+    pub fn weights_host(&self) -> Result<Vec<HostTensor>> {
+        self.ws.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Deep copy (e.g. freeze the reference model from the actor).
+    pub fn clone_store(&self) -> Result<ModelStore> {
+        let ws = self.weights_host()?;
+        let mut out = ModelStore {
+            model: self.model.clone(),
+            entries: self.entries.clone(),
+            ws: Vec::new(),
+            m: Vec::new(),
+            v: Vec::new(),
+            step: self.step,
+        };
+        out.ws = ws.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        Ok(out)
+    }
+
+    // ---- checkpointing -----------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {path:?}"))?;
+        f.write_all(CKPT_MAGIC)?;
+        f.write_all(&(self.entries.len() as u32).to_le_bytes())?;
+        f.write_all(&self.step.to_le_bytes())?;
+        for (e, w) in self.entries.iter().zip(&self.ws) {
+            let t = HostTensor::from_literal(w)?;
+            let name = e.name.as_bytes();
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name)?;
+            f.write_all(&(e.shape.len() as u32).to_le_bytes())?;
+            for &d in &e.shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            let data = t.as_f32();
+            f.write_all(&(data.len() as u64).to_le_bytes())?;
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(&mut self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {path:?}"))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != CKPT_MAGIC {
+            bail!("bad checkpoint magic in {path:?}");
+        }
+        let mut u32b = [0u8; 4];
+        f.read_exact(&mut u32b)?;
+        let count = u32::from_le_bytes(u32b) as usize;
+        if count != self.entries.len() {
+            bail!("checkpoint has {count} weights, model expects {}", self.entries.len());
+        }
+        f.read_exact(&mut u32b)?;
+        self.step = f32::from_le_bytes(u32b);
+        let mut ws = Vec::with_capacity(count);
+        for e in &self.entries {
+            f.read_exact(&mut u32b)?;
+            let name_len = u32::from_le_bytes(u32b) as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            if name != e.name.as_bytes() {
+                bail!("checkpoint weight order mismatch: {:?} vs {}", String::from_utf8_lossy(&name), e.name);
+            }
+            f.read_exact(&mut u32b)?;
+            let rank = u32::from_le_bytes(u32b) as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                f.read_exact(&mut u32b)?;
+                shape.push(u32::from_le_bytes(u32b) as usize);
+            }
+            if shape != e.shape {
+                bail!("checkpoint shape mismatch for {}", e.name);
+            }
+            let mut u64b = [0u8; 8];
+            f.read_exact(&mut u64b)?;
+            let n = u64::from_le_bytes(u64b) as usize;
+            let mut data = vec![0f32; n];
+            let bytes: &mut [u8] = unsafe {
+                std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, n * 4)
+            };
+            f.read_exact(bytes)?;
+            ws.push(HostTensor::f32(shape, data).to_literal()?);
+        }
+        self.ws = ws;
+        Ok(())
+    }
+}

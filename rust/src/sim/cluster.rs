@@ -1,0 +1,384 @@
+//! Multi-instance simulation: the real reallocator + virtual event loop.
+//!
+//! Instances advance on private virtual clocks; the cluster repeatedly
+//! steps the laggard (discrete-event style), runs the **real**
+//! [`Reallocator`] every `cooldown` steps, and models migration downtime
+//! per §6.2: two-stage migration overlaps the bulk (Stage-1) transfer
+//! with source compute, so a sample's downtime is only the small Stage-2
+//! delta; the `Naive` style (ablation) stalls for the full KV transfer.
+
+use crate::coordinator::reallocator::Reallocator;
+use crate::data::lengths::LengthModel;
+use crate::sim::acceptance::AcceptanceModel;
+use crate::sim::cost_model::CostModel;
+use crate::sim::engine::{SimInstance, SimMode, SimParams, SimSample};
+use crate::utils::rng::Rng;
+
+/// How migration downtime is modeled (§6.2 vs the naive ablation).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MigrationStyle {
+    /// Two-stage: downtime = Stage-2 delta only (≈ one round of tokens).
+    TwoStage,
+    /// Naive stop-and-copy: downtime = full KV transfer.
+    Naive,
+}
+
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub instances: usize,
+    pub mode: SimMode,
+    pub realloc_enabled: bool,
+    pub migration_style: MigrationStyle,
+    /// Reallocation decision period, in cluster scheduling steps.
+    pub cooldown: u64,
+    /// Initial roofline threshold (refined online).
+    pub threshold: usize,
+    pub dataset: String,
+    pub n_samples: usize,
+    pub prompt_len: usize,
+    pub max_tokens: usize,
+    pub seed: u64,
+    pub params: SimParams,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            instances: 8,
+            mode: SimMode::Adaptive,
+            realloc_enabled: true,
+            migration_style: MigrationStyle::TwoStage,
+            cooldown: 64,
+            threshold: 10,
+            dataset: "lmsys".into(),
+            n_samples: 256,
+            prompt_len: 128,
+            max_tokens: 2048,
+            seed: 0,
+            params: SimParams::default(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ClusterResult {
+    /// Virtual seconds until the last sample finished.
+    pub makespan: f64,
+    pub total_tokens: u64,
+    pub n_samples: usize,
+    pub migrations: u64,
+    pub realloc_decisions: u64,
+    /// Total sample downtime caused by migration (§7.7 SM).
+    pub migration_downtime: f64,
+    /// Mean accepted drafts per round across instances.
+    pub mean_accepted: f64,
+    /// Per-instance (time, cumulative tokens, live) traces.
+    pub traces: Vec<Vec<(f64, u64, usize)>>,
+    /// Fig-7 curve from instance 0's (real) acceptance predictor.
+    pub fig7_curve: Vec<(f64, f64, u64)>,
+    pub accept_corr: f64,
+}
+
+impl ClusterResult {
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.total_tokens as f64 / self.makespan.max(1e-9)
+    }
+
+    pub fn samples_per_sec(&self) -> f64 {
+        self.n_samples as f64 / self.makespan.max(1e-9)
+    }
+}
+
+pub struct SimCluster {
+    pub cfg: ClusterConfig,
+    pub instances: Vec<SimInstance>,
+    realloc: Reallocator,
+    cost: CostModel,
+    /// (arrival_time, dest, sample) in-flight migrations.
+    in_flight: Vec<(f64, usize, SimSample)>,
+    migrations: u64,
+    downtime: f64,
+    steps: u64,
+}
+
+impl SimCluster {
+    pub fn new(mut cfg: ClusterConfig) -> Self {
+        let cost = CostModel::l40s_llama8b();
+        let accept = AcceptanceModel::by_name(&cfg.dataset);
+        cfg.params.mode = cfg.mode; // ClusterConfig.mode is authoritative
+        let mut instances: Vec<SimInstance> = (0..cfg.instances)
+            .map(|i| {
+                let mut inst = SimInstance::new(
+                    i,
+                    cfg.params.clone(),
+                    cost.clone(),
+                    accept,
+                    cfg.seed ^ (i as u64 + 1) * 0x9E37,
+                );
+                inst.profile_offline();
+                inst
+            })
+            .collect();
+
+        // Workload: long-tail target lengths, sequentially allocated (§4).
+        let lens = match cfg.dataset.as_str() {
+            "gsm8k" | "gsm8k-like" | "math" => LengthModel::gsm8k(),
+            _ => LengthModel::lmsys(),
+        };
+        let mut rng = Rng::new(cfg.seed);
+        for k in 0..cfg.n_samples {
+            let target = lens.sample(&mut rng).min(cfg.max_tokens);
+            instances[k % cfg.instances].add(SimSample::new(k as u64, cfg.prompt_len, target));
+        }
+
+        SimCluster {
+            realloc: Reallocator::new(cfg.threshold, cfg.cooldown),
+            cfg,
+            instances,
+            cost,
+            in_flight: Vec::new(),
+            migrations: 0,
+            downtime: 0.0,
+            steps: 0,
+        }
+    }
+
+    /// Custom workload variant (explicit target lengths per instance).
+    pub fn with_assignment(mut cfg: ClusterConfig, per_instance: Vec<Vec<usize>>) -> Self {
+        cfg.n_samples = 0; // suppress default workload
+        let mut c = SimCluster::new(cfg);
+        let mut id = 0u64;
+        for (i, lens) in per_instance.into_iter().enumerate() {
+            for l in lens {
+                c.instances[i].add(SimSample::new(id, c.cfg.prompt_len, l));
+                id += 1;
+                c.cfg.n_samples += 1;
+            }
+        }
+        c
+    }
+
+    fn deliver_arrivals(&mut self) {
+        let mut i = 0;
+        while i < self.in_flight.len() {
+            let (at, dest, _) = &self.in_flight[i];
+            // Deliver when the destination clock reaches the arrival time
+            // (or immediately if the destination is idle — it would just
+            // be waiting).
+            if self.instances[*dest].clock >= *at || self.instances[*dest].is_idle() {
+                let (at, dest, s) = self.in_flight.remove(i);
+                let inst = &mut self.instances[dest];
+                if inst.is_idle() && inst.clock < at {
+                    inst.clock = at; // idle destination waits for the KV
+                }
+                inst.add(s);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Run until every sample finishes; returns the result summary.
+    pub fn run(&mut self) -> ClusterResult {
+        loop {
+            self.deliver_arrivals();
+            // Step the non-idle instance with the smallest clock.
+            let next = self
+                .instances
+                .iter()
+                .enumerate()
+                .filter(|(_, x)| !x.is_idle())
+                .min_by(|a, b| a.1.clock.partial_cmp(&b.1.clock).unwrap())
+                .map(|(i, _)| i);
+            let Some(i) = next else {
+                if self.in_flight.is_empty() {
+                    break;
+                }
+                // Only in-flight samples remain: force delivery.
+                let (at, dest, s) = self.in_flight.remove(0);
+                let inst = &mut self.instances[dest];
+                inst.clock = inst.clock.max(at);
+                inst.add(s);
+                continue;
+            };
+            self.instances[i].step();
+            self.steps += 1;
+
+            if self.cfg.realloc_enabled {
+                let counts: Vec<usize> =
+                    self.instances.iter().map(|x| x.sample_count()).collect();
+                if self.realloc.should_decide(self.steps, &counts) {
+                    // Feed recent operating points and refresh the knee.
+                    for inst in &self.instances {
+                        if let Some(&(t, tok, live)) = inst.trace.last() {
+                            if t > 0.0 && live > 0 {
+                                self.realloc.observe(live, tok as f64 / t);
+                            }
+                        }
+                    }
+                    self.realloc.refit_threshold();
+                    let caps = vec![self.cfg.params.max_batch * 4; self.instances.len()];
+                    let plan = self.realloc.decide(self.steps, &counts, &caps);
+                    for m in plan {
+                        self.execute_migration(m.from, m.to, m.count);
+                    }
+                }
+            }
+        }
+
+        let total_tokens: u64 = self.instances.iter().map(|x| x.tokens_out).sum();
+        let makespan = self
+            .instances
+            .iter()
+            .map(|x| x.clock)
+            .fold(0.0f64, f64::max);
+        let (acc, rounds): (u64, u64) = self
+            .instances
+            .iter()
+            .flat_map(|x| x.finished.iter())
+            .fold((0, 0), |a, s| (a.0 + s.accepted as u64, a.1 + s.rounds as u64));
+        ClusterResult {
+            makespan,
+            total_tokens,
+            n_samples: self.cfg.n_samples,
+            migrations: self.migrations,
+            realloc_decisions: self.realloc.decisions,
+            migration_downtime: self.downtime,
+            mean_accepted: if rounds == 0 { 0.0 } else { acc as f64 / rounds as f64 },
+            traces: self.instances.iter().map(|x| x.trace.clone()).collect(),
+            fig7_curve: self.instances[0].accept_pred.curve(),
+            accept_corr: self.instances[0].accept_pred.correlation(),
+        }
+    }
+
+    fn execute_migration(&mut self, from: usize, to: usize, count: usize) {
+        let samples = self.instances[from].take_for_migration(count);
+        let now = self.instances[from].clock;
+        for s in samples {
+            let full_bytes = self.cost.kv_bytes(s.seq_len());
+            let downtime = match self.cfg.migration_style {
+                MigrationStyle::TwoStage => {
+                    // Stage 1 overlaps with source compute; downtime is the
+                    // Stage-2 delta (≈ one round of new tokens) + handshake.
+                    let delta_tokens = (s.mean_accepted().ceil() as usize + 1).max(1);
+                    2.0 * self.cost.link_latency
+                        + self.cost.t_transfer(self.cost.kv_bytes(delta_tokens))
+                }
+                MigrationStyle::Naive => self.cost.t_transfer(full_bytes),
+            };
+            self.downtime += downtime;
+            self.migrations += 1;
+            self.in_flight.push((now + downtime, to, s));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_cfg(n_samples: usize, instances: usize) -> ClusterConfig {
+        ClusterConfig {
+            instances,
+            n_samples,
+            max_tokens: 512, // keep tests fast
+            cooldown: 32,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn all_samples_complete() {
+        let mut c = SimCluster::new(base_cfg(64, 4));
+        let r = c.run();
+        let done: usize = c.instances.iter().map(|x| x.finished.len()).sum();
+        assert_eq!(done, 64);
+        assert!(r.makespan > 0.0);
+        assert!(r.total_tokens > 0);
+    }
+
+    #[test]
+    fn realloc_improves_makespan_on_skewed_load() {
+        // Instance 0 gets all the long samples: reallocation must help.
+        let mk = |enabled| {
+            let mut cfg = base_cfg(0, 4);
+            cfg.realloc_enabled = enabled;
+            cfg.cooldown = 16;
+            let long: Vec<usize> = vec![1500; 16];
+            let short: Vec<usize> = vec![60; 16];
+            SimCluster::with_assignment(
+                cfg,
+                vec![long, short.clone(), short.clone(), short],
+            )
+            .run()
+        };
+        let with = mk(true);
+        let without = mk(false);
+        assert!(
+            with.makespan < without.makespan * 0.9,
+            "with {} vs without {}",
+            with.makespan,
+            without.makespan
+        );
+        assert!(with.migrations > 0);
+    }
+
+    #[test]
+    fn two_stage_has_less_downtime_than_naive() {
+        let mk = |style| {
+            let mut cfg = base_cfg(0, 2);
+            cfg.migration_style = style;
+            cfg.cooldown = 16;
+            SimCluster::with_assignment(
+                cfg,
+                vec![vec![1200; 20], vec![50; 8]],
+            )
+            .run()
+        };
+        let two = mk(MigrationStyle::TwoStage);
+        let naive = mk(MigrationStyle::Naive);
+        assert!(two.migrations > 0 && naive.migrations > 0);
+        let per_two = two.migration_downtime / two.migrations as f64;
+        let per_naive = naive.migration_downtime / naive.migrations as f64;
+        assert!(
+            per_two < per_naive * 0.5,
+            "two-stage {per_two} vs naive {per_naive}"
+        );
+    }
+
+    #[test]
+    fn adaptive_beats_ar_cluster() {
+        let mk = |mode| {
+            let mut cfg = base_cfg(64, 4);
+            cfg.mode = mode;
+            cfg.seed = 3;
+            SimCluster::new(cfg).run()
+        };
+        let ar = mk(SimMode::Ar);
+        let adp = mk(SimMode::Adaptive);
+        assert!(
+            adp.tokens_per_sec() > ar.tokens_per_sec() * 1.5,
+            "adaptive {} vs ar {}",
+            adp.tokens_per_sec(),
+            ar.tokens_per_sec()
+        );
+    }
+
+    #[test]
+    fn fig7_curve_learned_online() {
+        let mut cfg = base_cfg(48, 2);
+        cfg.seed = 9;
+        let r = SimCluster::new(cfg).run();
+        // The predictor must have learned a strongly positive dl ↔
+        // acceptance correlation (Fig 7).
+        assert!(r.accept_corr > 0.7, "{}", r.accept_corr);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let r1 = SimCluster::new(base_cfg(32, 2)).run();
+        let r2 = SimCluster::new(base_cfg(32, 2)).run();
+        assert_eq!(r1.total_tokens, r2.total_tokens);
+        assert!((r1.makespan - r2.makespan).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,195 @@
+//! Hardware cost model for the simulated testbed (8×L40S, Llama-8B-class).
+//!
+//! One speculative round costs `t_draft + t_verify`:
+//!
+//! * `t_draft`  — the SSM expands the candidate tree; sequential in depth,
+//!   independent of the chosen budget n (paper §5.2 treats it constant).
+//! * `t_verify(N_seq, N_draft)` — the LLM scores the selected tree:
+//!   a fixed launch/latency floor, a KV-load term ∝ ΣN_seq (attention is
+//!   bandwidth-bound over the cache) and an FFN/GEMM term ∝ N_draft
+//!   (paper §5.2's two features exactly).
+//!
+//! The FFN term only bites **above compute saturation**: a decode-scale
+//! GPU absorbs the first `free_draft_tokens` of batched tree tokens in
+//! the latency shadow of the memory-bound attention pass (this is the
+//! paper's "spare computational resources" — §3.2's entire premise).
+//! Below saturation, extra draft tokens are free; above it they cost
+//! `verify_per_draft_token` each. This produces both paper regimes:
+//! low workload → large n wins; high workload → small n wins (Fig 4),
+//! and the Fig-9 roofline with its knee.
+//!
+//! Calibration (`CostModel::l40s_llama8b`) reproduces the paper's
+//! disclosed operating points closely — Fig 5's (24 → 1453, 1 → 103,
+//! 19 → 1415, 6 → 765 tok/s) land within ~10% — and, more importantly,
+//! the *ratios*. The calibration tests in this file pin those.
+
+/// Cost model parameters (seconds).
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// Draft: fixed + per-level cost.
+    pub draft_base: f64,
+    pub draft_per_level: f64,
+    /// Verify: launch floor, per-cache-token, per-draft-token.
+    pub verify_base: f64,
+    pub verify_per_seq_token: f64,
+    pub verify_per_draft_token: f64,
+    /// Batched tree tokens absorbed for free below compute saturation.
+    pub free_draft_tokens: f64,
+    /// Autoregressive step: same verify structure with N_draft = B.
+    pub ar_base: f64,
+    /// Migration link (PCIe-class).
+    pub link_bandwidth: f64,
+    pub link_latency: f64,
+    /// Bytes per KV token row (both models, K+V, fp16) for migration
+    /// sizing: Llama-8B 32 layers × 8 kv-heads × 128 dim × 2 (K,V) × 2 B
+    /// ≈ 131 kB/token, plus the EAGLE head's single layer.
+    pub kv_bytes_per_token: f64,
+}
+
+impl CostModel {
+    /// Calibrated to the paper's L40S / Llama-3.1-8B / EAGLE testbed.
+    pub fn l40s_llama8b() -> Self {
+        CostModel {
+            draft_base: 1.5e-3,
+            draft_per_level: 0.5e-3,
+            verify_base: 14e-3,
+            verify_per_seq_token: 8.0e-7,
+            verify_per_draft_token: 1.5e-4,
+            free_draft_tokens: 64.0,
+            ar_base: 14e-3,
+            link_bandwidth: 20e9, // PCIe 4.0 ×16 effective
+            link_latency: 20e-6,
+            kv_bytes_per_token: 135_000.0,
+        }
+    }
+
+    /// One draft-generation phase (tree of `depth` levels).
+    pub fn t_draft(&self, depth: usize) -> f64 {
+        self.draft_base + self.draft_per_level * depth as f64
+    }
+
+    /// FFN/GEMM cost of `n_draft` tree tokens: free below saturation.
+    fn draft_compute(&self, n_draft: usize) -> f64 {
+        self.verify_per_draft_token * (n_draft as f64 - self.free_draft_tokens).max(0.0)
+    }
+
+    /// One LLM verification call.
+    pub fn t_verify(&self, n_seq: usize, n_draft: usize) -> f64 {
+        self.verify_base
+            + self.verify_per_seq_token * n_seq as f64
+            + self.draft_compute(n_draft)
+    }
+
+    /// One full speculative round.
+    pub fn t_spec_round(&self, depth: usize, n_seq: usize, n_draft: usize) -> f64 {
+        self.t_draft(depth) + self.t_verify(n_seq, n_draft)
+    }
+
+    /// One autoregressive step for a batch of `b` samples.
+    pub fn t_ar_step(&self, n_seq: usize, b: usize) -> f64 {
+        self.ar_base + self.verify_per_seq_token * n_seq as f64 + self.draft_compute(b)
+    }
+
+    /// Transfer time for `bytes` over the instance interconnect.
+    pub fn t_transfer(&self, bytes: usize) -> f64 {
+        self.link_latency + bytes as f64 / self.link_bandwidth
+    }
+
+    /// KV bytes for `tokens` committed tokens of one sample.
+    pub fn kv_bytes(&self, tokens: usize) -> usize {
+        (self.kv_bytes_per_token * tokens as f64) as usize
+    }
+
+    /// Roofline knee in samples (where per-sample cost equals the floor),
+    /// assuming average sequence length `seq` and draft budget `n`
+    /// (evaluated in the saturated regime).
+    pub fn knee(&self, seq: usize, n: usize) -> f64 {
+        let per_sample = self.verify_per_seq_token * seq as f64
+            + self.verify_per_draft_token * n as f64;
+        (self.verify_base + self.t_draft(5)) / per_sample.max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// al/round at the paper's operating point (EAGLE-like ≈ 3.4).
+    const AL: f64 = 3.4;
+
+    fn thr(m: &CostModel, b: usize, seq: usize, n: usize) -> f64 {
+        let t = m.t_spec_round(5, b * seq, b * n);
+        b as f64 * AL / t
+    }
+
+    #[test]
+    fn calibration_matches_paper_plateau() {
+        // Fig 5 slot ①: 24 samples ≈ 1453 tok/s (±20%).
+        let m = CostModel::l40s_llama8b();
+        let t24 = thr(&m, 24, 1000, 8);
+        assert!((1100.0..1800.0).contains(&t24), "{t24}");
+    }
+
+    #[test]
+    fn calibration_single_sample_ratio() {
+        // Paper: 1453/103 ≈ 14× between plateau and a single sample.
+        // Single-sample al is lower in practice (≈2); allow a band.
+        let m = CostModel::l40s_llama8b();
+        let t1 = 2.0 / m.t_spec_round(5, 500, 8);
+        let t24 = thr(&m, 24, 1000, 8);
+        let ratio = t24 / t1;
+        assert!((8.0..22.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn realloc_scenario_improves_total() {
+        // Fig 5: (24,1) → (19,6) raises total throughput substantially.
+        let m = CostModel::l40s_llama8b();
+        let before = thr(&m, 24, 1000, 8) + thr(&m, 1, 500, 8) * (2.0 / AL);
+        let after = thr(&m, 19, 1000, 8) + thr(&m, 6, 500, 8);
+        assert!(after > before * 1.15, "before {before} after {after}");
+    }
+
+    #[test]
+    fn roofline_knee_in_expected_range() {
+        // Fig 9's turning point: high-single-digits to low-teens samples.
+        let m = CostModel::l40s_llama8b();
+        let k = m.knee(1000, 8);
+        assert!((5.0..20.0).contains(&k), "{k}");
+    }
+
+    #[test]
+    fn throughput_saturates_with_batch() {
+        let m = CostModel::l40s_llama8b();
+        let t4 = thr(&m, 4, 800, 8);
+        let t16 = thr(&m, 16, 800, 8);
+        let t48 = thr(&m, 48, 800, 8);
+        let t64 = thr(&m, 64, 800, 8);
+        assert!(t16 > t4 * 2.0); // near-linear region
+        assert!(t64 < t48 * 1.25); // plateau region
+    }
+
+    #[test]
+    fn n_sweep_crossover() {
+        // High load: small n wins (verify cost dominates). Low load:
+        // large n wins (idle FLOPs absorb the extra drafts). al(n) grows
+        // sublinearly — use al ≈ 1.2·n^0.45.
+        let m = CostModel::l40s_llama8b();
+        let al = |n: usize| 1.2 * (n as f64).powf(0.45);
+        let thr_n = |b: usize, n: usize| {
+            b as f64 * al(n) / m.t_spec_round(5, b * 1000, b * n)
+        };
+        assert!(thr_n(32, 6) > thr_n(32, 24), "high load should prefer n=6");
+        assert!(thr_n(2, 24) > thr_n(2, 6), "low load should prefer n=24");
+    }
+
+    #[test]
+    fn migration_cheaper_than_decode_stall() {
+        // Transferring 500 tokens of KV must take less time than a decode
+        // round at plateau — the premise that makes reallocation pay off.
+        let m = CostModel::l40s_llama8b();
+        let t_mig = m.t_transfer(m.kv_bytes(500));
+        let t_round = m.t_spec_round(5, 24_000, 192);
+        assert!(t_mig < t_round, "mig {t_mig} vs round {t_round}");
+    }
+}

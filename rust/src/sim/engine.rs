@@ -1,0 +1,462 @@
+//! One simulated generation instance on a virtual clock.
+//!
+//! Runs the identical round structure as the real
+//! [`crate::coordinator::instance::GenerationInstance`] — synthetic
+//! drafting → real weight prediction → **the real selector** → synthetic
+//! verification/acceptance → bookkeeping — with wall time supplied by the
+//! [`CostModel`] instead of PJRT execution.
+
+use crate::config::SelectorConfig;
+use crate::coordinator::predictor::{AcceptancePredictor, TsdPredictor};
+use crate::coordinator::selector::{select_strategy, StrategyChoice};
+use crate::sim::acceptance::AcceptanceModel;
+use crate::sim::cost_model::CostModel;
+use crate::utils::rng::Rng;
+
+/// Decode policy of a simulated instance.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SimMode {
+    /// Autoregressive (Verl / OpenRLHF generation).
+    Ar,
+    /// Speculative with a fixed draft budget (the `Speculative` baseline).
+    StaticSpec(usize),
+    /// Full workload-aware selection.
+    Adaptive,
+}
+
+/// A simulated sample: counts tokens until its target length.
+#[derive(Clone, Debug)]
+pub struct SimSample {
+    pub id: u64,
+    pub target_len: usize,
+    pub generated: usize,
+    pub prompt_len: usize,
+    pub rounds: usize,
+    pub accepted: usize,
+}
+
+impl SimSample {
+    pub fn new(id: u64, prompt_len: usize, target_len: usize) -> Self {
+        SimSample { id, target_len, generated: 0, prompt_len, rounds: 0, accepted: 0 }
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.prompt_len + self.generated
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated >= self.target_len
+    }
+
+    pub fn mean_accepted(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.rounds as f64
+        }
+    }
+}
+
+/// Simulation knobs (tree shape mirrors the real instance defaults).
+#[derive(Clone, Debug)]
+pub struct SimParams {
+    pub mode: SimMode,
+    pub selector: SelectorConfig,
+    pub max_draft: usize,
+    pub depth: usize,
+    pub branch: usize,
+    pub expand_width: usize,
+    /// Max decodable samples per step (the paper's instances run batches
+    /// of up to ~64 at 8B scale).
+    pub max_batch: usize,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams {
+            mode: SimMode::Adaptive,
+            selector: SelectorConfig::default(),
+            max_draft: 48,
+            depth: 5,
+            branch: 2,
+            expand_width: 4,
+            max_batch: 64,
+        }
+    }
+}
+
+pub struct SimInstance {
+    pub id: usize,
+    pub clock: f64,
+    pub live: Vec<SimSample>,
+    pub finished: Vec<SimSample>,
+    pub tokens_out: u64,
+    pub rounds: u64,
+    pub params: SimParams,
+    pub cost: CostModel,
+    pub accept_model: AcceptanceModel,
+    pub accept_pred: AcceptancePredictor,
+    pub tsd_pred: TsdPredictor,
+    /// (virtual time, cumulative tokens, live count) trace.
+    pub trace: Vec<(f64, u64, usize)>,
+    /// Time spent stalled by migrations (naive migration comparison).
+    pub stall_secs: f64,
+    /// Seconds spent in selector decisions (modeled WDS overhead, §7.7:
+    /// measured per-call cost of the real selector code is added by the
+    /// cluster driver).
+    pub steps_since_refit: usize,
+    rng: Rng,
+}
+
+impl SimInstance {
+    pub fn new(
+        id: usize,
+        params: SimParams,
+        cost: CostModel,
+        accept_model: AcceptanceModel,
+        seed: u64,
+    ) -> Self {
+        let sel = &params.selector;
+        SimInstance {
+            id,
+            clock: 0.0,
+            live: Vec::new(),
+            finished: Vec::new(),
+            tokens_out: 0,
+            rounds: 0,
+            accept_pred: AcceptancePredictor::new(24),
+            tsd_pred: TsdPredictor::new(sel.nseq_bucket, sel.ndraft_bucket),
+            params,
+            cost,
+            accept_model,
+            trace: Vec::new(),
+            stall_secs: 0.0,
+            steps_since_refit: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn add(&mut self, sample: SimSample) {
+        self.live.push(sample);
+    }
+
+    pub fn sample_count(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.live.is_empty()
+    }
+
+    pub fn throughput(&self) -> f64 {
+        if self.clock <= 0.0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / self.clock
+        }
+    }
+
+    /// Seed both predictors from "offline profiling" (§5.2/§7.7): the
+    /// paper spends ~15 one-time minutes collecting (a) a (N_seq,
+    /// N_draft, t) table and (b) (draft logit, accepted) pairs to fit F.
+    /// Here (a) comes from the cost model + measurement noise and (b)
+    /// from profiling rounds against the ground-truth acceptance process.
+    pub fn profile_offline(&mut self) {
+        for &b in &[1usize, 2, 4, 8, 16, 32, 64] {
+            for &seq in &[128usize, 512, 1024, 1536] {
+                for &n in &[2usize, 4, 8, 16, 24, 32, 48] {
+                    let t = self.cost.t_spec_round(self.params.depth, b * seq, b * n);
+                    let noisy = t * (1.0 + 0.03 * (self.rng.f64() * 2.0 - 1.0));
+                    self.tsd_pred.observe(b * seq, b * n, noisy);
+                }
+            }
+        }
+        self.tsd_pred.refit();
+        // Acceptance-fit profiling rounds (full trees so deep/low-dl bins
+        // get coverage too).
+        for _ in 0..150 {
+            let mut tree = self.accept_model.make_tree(
+                0,
+                self.params.depth,
+                self.params.branch,
+                self.params.expand_width,
+                self.params.max_draft.max(8) * 2,
+                &mut self.rng,
+            );
+            for node in tree.nodes.iter_mut() {
+                node.w = node.dl;
+            }
+            let sel = tree.selection(&tree.select_top_n(tree.len()));
+            let (_, outcomes) = self.accept_model.walk(&sel, &tree, &mut self.rng);
+            for (dl, ok) in outcomes {
+                self.accept_pred.observe(dl, ok);
+            }
+        }
+        self.accept_pred.refit();
+    }
+
+    /// One decode step over the current batch. Returns the step's virtual
+    /// duration (0 if idle).
+    pub fn step(&mut self) -> f64 {
+        if self.live.is_empty() {
+            return 0.0;
+        }
+        let b = self.live.len().min(self.params.max_batch);
+        let n_seq: usize = self.live.iter().take(b).map(|s| s.seq_len()).sum();
+
+        let dt = match self.params.mode {
+            SimMode::Ar => {
+                let dt = self.cost.t_ar_step(n_seq, b);
+                for s in self.live.iter_mut().take(b) {
+                    s.generated += 1;
+                    s.rounds += 1;
+                    self.tokens_out += 1;
+                }
+                dt
+            }
+            SimMode::StaticSpec(n) => self.spec_step(b, n_seq, Some(n)),
+            SimMode::Adaptive => self.spec_step(b, n_seq, None),
+        };
+
+        self.clock += dt;
+        self.rounds += 1;
+        self.steps_since_refit += 1;
+        if self.steps_since_refit >= self.params.selector.refit_every {
+            self.accept_pred.refit();
+            self.tsd_pred.refit();
+            self.steps_since_refit = 0;
+        }
+        // Retire finished samples.
+        let mut i = 0;
+        while i < self.live.len() {
+            if self.live[i].done() {
+                self.finished.push(self.live.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        self.trace.push((self.clock, self.tokens_out, self.live.len()));
+        dt
+    }
+
+    fn spec_step(&mut self, b: usize, n_seq: usize, static_n: Option<usize>) -> f64 {
+        // 1. synthetic drafting: candidate tree per live sample
+        let mut trees = Vec::with_capacity(b);
+        for _ in 0..b {
+            let mut t = self.accept_model.make_tree(
+                0,
+                self.params.depth,
+                self.params.branch,
+                self.params.expand_width,
+                self.params.max_draft.max(8) * 2,
+                &mut self.rng,
+            );
+            // 2. REAL weight prediction
+            for node in t.nodes.iter_mut() {
+                node.w = if node.parent.is_none() {
+                    1.0
+                } else {
+                    self.accept_pred.predict(node.dl)
+                };
+            }
+            trees.push(t);
+        }
+
+        // 3. strategy: static or the REAL layer-level search
+        let n = match static_n {
+            Some(n) => StrategyChoice {
+                n: n.max(1),
+                predicted_al: 0.0,
+                predicted_tsd: 0.0,
+                evaluated: 0,
+            },
+            None => {
+                let refs: Vec<&crate::spec::tree::CandidateTree> = trees.iter().collect();
+                select_strategy(
+                    &self.params.selector,
+                    &mut self.tsd_pred,
+                    &refs,
+                    n_seq,
+                    self.params.max_draft,
+                )
+            }
+        }
+        .n;
+
+        // 4. synthetic verification + ground-truth acceptance
+        let mut n_draft_total = 0usize;
+        for (i, tree) in trees.iter().enumerate() {
+            let sel = tree.selection(&tree.select_top_n(n));
+            n_draft_total += sel.len();
+            let (accepted, outcomes) = self.accept_model.walk(&sel, tree, &mut self.rng);
+            for (dl, ok) in outcomes {
+                self.accept_pred.observe(dl, ok);
+            }
+            let s = &mut self.live[i];
+            let new_tokens = accepted + 1; // bonus token
+            s.generated += new_tokens;
+            s.rounds += 1;
+            s.accepted += accepted;
+            self.tokens_out += new_tokens as u64;
+        }
+
+        let dt = self.cost.t_spec_round(self.params.depth, n_seq, n_draft_total);
+        // 5. online t_sd observation (with measurement noise)
+        let noisy = dt * (1.0 + 0.02 * (self.rng.f64() * 2.0 - 1.0));
+        self.tsd_pred.observe(n_seq, n_draft_total, noisy);
+        dt
+    }
+
+    /// Remove `count` samples for migration, preferring the §6.1 score
+    /// (short sequences, low mean accepted). Returns them.
+    pub fn take_for_migration(&mut self, count: usize) -> Vec<SimSample> {
+        let max_seq = 2048;
+        let mut idx: Vec<usize> = (0..self.live.len()).collect();
+        idx.sort_by(|&a, &b| {
+            let sa = crate::coordinator::migration::migration_score(
+                self.live[a].seq_len(),
+                self.live[a].mean_accepted(),
+                max_seq,
+            );
+            let sb = crate::coordinator::migration::migration_score(
+                self.live[b].seq_len(),
+                self.live[b].mean_accepted(),
+                max_seq,
+            );
+            sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let chosen: Vec<usize> = idx.into_iter().take(count).collect();
+        let mut out = Vec::new();
+        // remove from highest index first
+        let mut sorted = chosen;
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        for i in sorted {
+            out.push(self.live.remove(i));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inst(mode: SimMode, seed: u64) -> SimInstance {
+        let mut i = SimInstance::new(
+            0,
+            SimParams { mode, ..Default::default() },
+            CostModel::l40s_llama8b(),
+            AcceptanceModel::lmsys(),
+            seed,
+        );
+        i.profile_offline();
+        i
+    }
+
+    fn load(i: &mut SimInstance, n: usize, len: usize) {
+        for k in 0..n {
+            i.add(SimSample::new(k as u64, 100, len));
+        }
+    }
+
+    #[test]
+    fn ar_generates_one_token_per_step() {
+        let mut i = inst(SimMode::Ar, 0);
+        load(&mut i, 4, 10);
+        i.step();
+        assert_eq!(i.tokens_out, 4);
+        assert!(i.clock > 0.0);
+    }
+
+    #[test]
+    fn spec_beats_ar_throughput() {
+        let mut a = inst(SimMode::Ar, 1);
+        let mut s = inst(SimMode::StaticSpec(8), 1);
+        load(&mut a, 16, 300);
+        load(&mut s, 16, 300);
+        while !a.is_idle() {
+            a.step();
+        }
+        while !s.is_idle() {
+            s.step();
+        }
+        assert!(
+            s.throughput() > a.throughput() * 1.3,
+            "spec {} vs ar {}",
+            s.throughput(),
+            a.throughput()
+        );
+    }
+
+    #[test]
+    fn adaptive_at_least_matches_reasonable_static() {
+        // After warm-up the adaptive selector should be ≥ 0.9× the best
+        // of a small static grid (it converges to near-optimal, Table 1).
+        let mut best_static: f64 = 0.0;
+        for n in [4usize, 8, 16, 24] {
+            let mut s = inst(SimMode::StaticSpec(n), 2);
+            load(&mut s, 24, 400);
+            while !s.is_idle() {
+                s.step();
+            }
+            best_static = best_static.max(s.throughput());
+        }
+        let mut a = inst(SimMode::Adaptive, 2);
+        load(&mut a, 24, 400);
+        while !a.is_idle() {
+            a.step();
+        }
+        assert!(
+            a.throughput() > best_static * 0.9,
+            "adaptive {} vs best static {best_static}",
+            a.throughput()
+        );
+    }
+
+    #[test]
+    fn all_samples_finish_exactly() {
+        let mut i = inst(SimMode::Adaptive, 3);
+        load(&mut i, 10, 50);
+        let mut guard = 0;
+        while !i.is_idle() && guard < 100_000 {
+            i.step();
+            guard += 1;
+        }
+        assert_eq!(i.finished.len(), 10);
+        for s in &i.finished {
+            assert!(s.generated >= s.target_len);
+        }
+    }
+
+    #[test]
+    fn throughput_declines_as_samples_drain() {
+        // Long-tail: most samples finish early; throughput at the end
+        // (few live) must be far below the peak (the §3.1 motivation).
+        let mut i = inst(SimMode::Adaptive, 4);
+        let lens = [50, 60, 70, 80, 90, 100, 110, 120, 1200, 1300];
+        for (k, &l) in lens.iter().enumerate() {
+            i.add(SimSample::new(k as u64, 100, l));
+        }
+        while !i.is_idle() {
+            i.step();
+        }
+        // instantaneous throughput: first vs last quarter of the trace
+        let t = &i.trace;
+        let q = t.len() / 4;
+        let early = (t[q].1 as f64) / t[q].0;
+        let late = (t[t.len() - 1].1 - t[t.len() - 1 - q].1) as f64
+            / (t[t.len() - 1].0 - t[t.len() - 1 - q].0);
+        assert!(late < early * 0.55, "early {early} late {late}");
+    }
+
+    #[test]
+    fn migration_picks_short_low_accept_samples() {
+        let mut i = inst(SimMode::Adaptive, 5);
+        i.add(SimSample::new(0, 100, 800));
+        i.add(SimSample::new(1, 100, 800));
+        i.live[0].generated = 700; // long sequence
+        i.live[1].generated = 30; // short sequence
+        let taken = i.take_for_migration(1);
+        assert_eq!(taken[0].id, 1);
+    }
+}

@@ -1,0 +1,33 @@
+//! Calibrated instance simulator — the paper-scale evaluation substrate.
+//!
+//! The paper's testbed (8×L40S, Llama-3.1-8B + EAGLE) is unavailable
+//! (repro band 0/5), so the evaluation figures are regenerated on a
+//! discrete-event simulator whose **control plane is the real code**:
+//! candidate trees ([`crate::spec::tree`]), the workload-aware selector
+//! ([`crate::coordinator::selector`]), the predictors and the reallocator
+//! all run unmodified. Only two things are synthetic:
+//!
+//! * [`cost_model`] — step wall-times `t_draft`, `t_verify(N_seq,
+//!   N_draft)` and the migration link, calibrated to the operating points
+//!   the paper discloses (Fig 5: 24 samples → 1453 tok/s, 1 → 103,
+//!   19+6 → 1415+765; Fig 9's knee; §7.2 speedup bands);
+//! * [`acceptance`] — a ground-truth acceptance process `P(accept | dl) =
+//!   dl^γ` with EAGLE-like draft-probability profiles, which the real
+//!   `AcceptancePredictor` then has to *learn online*, exactly as on
+//!   hardware.
+//!
+//! [`engine`] is a single simulated instance; [`cluster`] wires N of them
+//! to the real reallocator with a virtual clock; [`e2e`] extends the
+//! model to full RLHF iterations (inference + training stage costs) for
+//! Figs 3 and 12.
+
+pub mod acceptance;
+pub mod cluster;
+pub mod cost_model;
+pub mod e2e;
+pub mod engine;
+
+pub use cluster::{ClusterConfig, ClusterResult, SimCluster};
+pub use engine::SimMode;
+pub use cost_model::CostModel;
+pub use engine::SimInstance;

@@ -1,0 +1,449 @@
+//! Host-resident KV caches.
+//!
+//! [`KvCache`] is one sample's cache for one model: `[L, H, S, Dh]` K and V
+//! buffers plus the committed length. It supports committing rows returned
+//! by the tree executable, and byte-exact pack/unpack used by the two-stage
+//! migration (§6.2) — the hierarchical representation (model → layer →
+//! sample ordering) is built in `coordinator::migration` on top of
+//! [`KvCache::pack_range`].
+//!
+//! [`BatchedCache`] assembles per-sample caches into the `[L, B, H, S, Dh]`
+//! batch layout the executables expect, maintaining an incrementally
+//! updated buffer so steady-state decode steps only scatter the few newly
+//! accepted rows instead of rebuilding the whole batch tensor.
+
+use crate::runtime::tensor::HostTensor;
+
+/// One sample's KV cache for one model.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub layers: usize,
+    pub heads: usize,
+    pub max_seq: usize,
+    pub d_head: usize,
+    pub len: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn new(layers: usize, heads: usize, max_seq: usize, d_head: usize) -> Self {
+        let n = layers * heads * max_seq * d_head;
+        KvCache { layers, heads, max_seq, d_head, len: 0, k: vec![0.0; n], v: vec![0.0; n] }
+    }
+
+    /// Flat offset of (layer, head, pos, 0).
+    #[inline]
+    fn off(&self, l: usize, h: usize, p: usize) -> usize {
+        ((l * self.heads + h) * self.max_seq + p) * self.d_head
+    }
+
+    pub fn row_elems(&self) -> usize {
+        self.layers * self.heads * self.d_head
+    }
+
+    /// Bytes currently committed (K+V).
+    pub fn committed_bytes(&self) -> usize {
+        2 * self.len * self.row_elems() * 4
+    }
+
+    /// Commit one tree row from the executable outputs.
+    ///
+    /// `k_new`/`v_new` are `[L, B, H, T, Dh]`; this writes tree position
+    /// `src` of batch row `b` to cache position `dest`.
+    pub fn commit_row(
+        &mut self,
+        k_new: &HostTensor,
+        v_new: &HostTensor,
+        b: usize,
+        src: usize,
+        dest: usize,
+    ) {
+        let (l_n, b_n, h_n, t_n, d_n) = (
+            k_new.shape[0],
+            k_new.shape[1],
+            k_new.shape[2],
+            k_new.shape[3],
+            k_new.shape[4],
+        );
+        assert_eq!(l_n, self.layers);
+        assert_eq!(h_n, self.heads);
+        assert_eq!(d_n, self.d_head);
+        assert!(b < b_n && src < t_n && dest < self.max_seq);
+        let kd = k_new.as_f32();
+        let vd = v_new.as_f32();
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                let src_off = (((l * b_n + b) * h_n + h) * t_n + src) * d_n;
+                let dst_off = self.off(l, h, dest);
+                self.k[dst_off..dst_off + d_n].copy_from_slice(&kd[src_off..src_off + d_n]);
+                self.v[dst_off..dst_off + d_n].copy_from_slice(&vd[src_off..src_off + d_n]);
+            }
+        }
+        self.len = self.len.max(dest + 1);
+    }
+
+    /// Read access for tests / batch assembly.
+    pub fn k_slice(&self, l: usize, h: usize, p: usize) -> &[f32] {
+        let o = self.off(l, h, p);
+        &self.k[o..o + self.d_head]
+    }
+
+    pub fn v_slice(&self, l: usize, h: usize, p: usize) -> &[f32] {
+        let o = self.off(l, h, p);
+        &self.v[o..o + self.d_head]
+    }
+
+    /// Contiguous span of `span` positions starting at `from` for one
+    /// (layer, head) — the unit of fast batch assembly (§Perf iter 2).
+    pub fn k_span(&self, l: usize, h: usize, from: usize, span: usize) -> &[f32] {
+        let o = self.off(l, h, from);
+        &self.k[o..o + span * self.d_head]
+    }
+
+    pub fn v_span(&self, l: usize, h: usize, from: usize, span: usize) -> &[f32] {
+        let o = self.off(l, h, from);
+        &self.v[o..o + span * self.d_head]
+    }
+
+    /// Pack positions `[from, to)` of both K and V into a contiguous buffer
+    /// (layer-major, then head, then position): the per-sample unit of the
+    /// §6.2 hierarchical representation.
+    pub fn pack_range(&self, from: usize, to: usize) -> Vec<f32> {
+        assert!(from <= to && to <= self.len);
+        let span = to - from;
+        let mut out = Vec::with_capacity(2 * span * self.row_elems());
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                let o = self.off(l, h, from);
+                out.extend_from_slice(&self.k[o..o + span * self.d_head]);
+            }
+        }
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                let o = self.off(l, h, from);
+                out.extend_from_slice(&self.v[o..o + span * self.d_head]);
+            }
+        }
+        out
+    }
+
+    /// Per-layer pack: K rows then V rows of positions `[from, to)` for one
+    /// layer. Unit block of the §6.2 hierarchical (model→layer→sample)
+    /// representation.
+    pub fn pack_layer_range(&self, layer: usize, from: usize, to: usize, out: &mut Vec<f32>) {
+        assert!(layer < self.layers && from <= to && to <= self.max_seq);
+        let span = to - from;
+        for h in 0..self.heads {
+            let o = self.off(layer, h, from);
+            out.extend_from_slice(&self.k[o..o + span * self.d_head]);
+        }
+        for h in 0..self.heads {
+            let o = self.off(layer, h, from);
+            out.extend_from_slice(&self.v[o..o + span * self.d_head]);
+        }
+    }
+
+    /// Inverse of [`pack_layer_range`]: consume one layer block from `buf`
+    /// starting at `idx`, writing positions `[from, from+span)`. Returns
+    /// the new `idx`.
+    pub fn unpack_layer_range(
+        &mut self,
+        layer: usize,
+        from: usize,
+        span: usize,
+        buf: &[f32],
+        mut idx: usize,
+    ) -> usize {
+        assert!(layer < self.layers && from + span <= self.max_seq);
+        for h in 0..self.heads {
+            let o = self.off(layer, h, from);
+            self.k[o..o + span * self.d_head].copy_from_slice(&buf[idx..idx + span * self.d_head]);
+            idx += span * self.d_head;
+        }
+        for h in 0..self.heads {
+            let o = self.off(layer, h, from);
+            self.v[o..o + span * self.d_head].copy_from_slice(&buf[idx..idx + span * self.d_head]);
+            idx += span * self.d_head;
+        }
+        self.len = self.len.max(from + span);
+        idx
+    }
+
+    /// Inverse of [`pack_range`]: write a packed buffer at `[from, from+span)`.
+    pub fn unpack_range(&mut self, from: usize, span: usize, buf: &[f32]) {
+        assert_eq!(buf.len(), 2 * span * self.row_elems(), "packed size mismatch");
+        assert!(from + span <= self.max_seq);
+        let mut idx = 0;
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                let o = self.off(l, h, from);
+                self.k[o..o + span * self.d_head]
+                    .copy_from_slice(&buf[idx..idx + span * self.d_head]);
+                idx += span * self.d_head;
+            }
+        }
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                let o = self.off(l, h, from);
+                self.v[o..o + span * self.d_head]
+                    .copy_from_slice(&buf[idx..idx + span * self.d_head]);
+                idx += span * self.d_head;
+            }
+        }
+        self.len = self.len.max(from + span);
+    }
+
+    /// Drop all state (sample finished / migrated away).
+    pub fn reset(&mut self) {
+        self.len = 0;
+        // No need to zero data: prefix_len masks stale entries, but zero
+        // anyway so buffers are reproducible.
+        self.k.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+/// Incrementally maintained `[L, B, H, S, Dh]` batch tensors.
+pub struct BatchedCache {
+    pub layers: usize,
+    pub heads: usize,
+    pub max_seq: usize,
+    pub d_head: usize,
+    pub batch: usize,
+    kc: HostTensor,
+    vc: HostTensor,
+    /// Sample ids currently occupying each batch slot (for invalidation).
+    occupants: Vec<Option<u64>>,
+}
+
+impl BatchedCache {
+    pub fn new(layers: usize, heads: usize, max_seq: usize, d_head: usize, batch: usize) -> Self {
+        let shape = vec![layers, batch, heads, max_seq, d_head];
+        BatchedCache {
+            layers,
+            heads,
+            max_seq,
+            d_head,
+            batch,
+            kc: HostTensor::zeros_f32(shape.clone()),
+            vc: HostTensor::zeros_f32(shape),
+            occupants: vec![None; batch],
+        }
+    }
+
+    pub fn tensors(&self) -> (&HostTensor, &HostTensor) {
+        (&self.kc, &self.vc)
+    }
+
+    #[inline]
+    fn off(&self, l: usize, b: usize, h: usize, p: usize) -> usize {
+        (((l * self.batch + b) * self.heads + h) * self.max_seq + p) * self.d_head
+    }
+
+    /// Load a sample's cache into a batch slot (full copy — only on
+    /// composition changes; steady-state uses [`commit_row`]).
+    ///
+    /// Positions are contiguous within a (layer, head) in both layouts,
+    /// so this is one `len·Dh` span copy per (l, h) — ~3× faster than the
+    /// per-position loop it replaced (§Perf iteration 2).
+    pub fn load_slot(&mut self, slot: usize, sample_id: u64, cache: &KvCache) {
+        assert!(slot < self.batch);
+        assert_eq!(cache.layers, self.layers);
+        let d = self.d_head;
+        let len = cache.len;
+        let kdst = self.kc.as_f32_mut();
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                let o = (((l * self.batch + slot) * self.heads + h) * self.max_seq) * d;
+                kdst[o..o + len * d].copy_from_slice(cache.k_span(l, h, 0, len));
+            }
+        }
+        let vdst = self.vc.as_f32_mut();
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                let o = (((l * self.batch + slot) * self.heads + h) * self.max_seq) * d;
+                vdst[o..o + len * d].copy_from_slice(cache.v_span(l, h, 0, len));
+            }
+        }
+        self.occupants[slot] = Some(sample_id);
+    }
+
+    pub fn occupant(&self, slot: usize) -> Option<u64> {
+        self.occupants[slot]
+    }
+
+    pub fn clear_slot(&mut self, slot: usize) {
+        self.occupants[slot] = None;
+    }
+
+    /// Scatter one committed tree row into the batch buffer (mirror of
+    /// `KvCache::commit_row` so the two stay in sync without a rebuild).
+    pub fn commit_row(
+        &mut self,
+        k_new: &HostTensor,
+        v_new: &HostTensor,
+        src_b: usize,
+        slot: usize,
+        src: usize,
+        dest: usize,
+    ) {
+        let (l_n, b_n, h_n, t_n, d_n) = (
+            k_new.shape[0],
+            k_new.shape[1],
+            k_new.shape[2],
+            k_new.shape[3],
+            k_new.shape[4],
+        );
+        assert_eq!(l_n, self.layers);
+        assert!(dest < self.max_seq);
+        let kd = k_new.as_f32().to_vec();
+        let vd = v_new.as_f32().to_vec();
+        let kdst = self.kc.as_f32_mut();
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                let so = (((l * b_n + src_b) * h_n + h) * t_n + src) * d_n;
+                let o = (((l * self.batch + slot) * self.heads + h) * self.max_seq + dest) * d_n;
+                kdst[o..o + d_n].copy_from_slice(&kd[so..so + d_n]);
+            }
+        }
+        let vdst = self.vc.as_f32_mut();
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                let so = (((l * b_n + src_b) * h_n + h) * t_n + src) * d_n;
+                let o = (((l * self.batch + slot) * self.heads + h) * self.max_seq + dest) * d_n;
+                vdst[o..o + d_n].copy_from_slice(&vd[so..so + d_n]);
+            }
+        }
+    }
+
+    /// Check a slot equals a per-sample cache (test support).
+    pub fn slot_matches(&self, slot: usize, cache: &KvCache) -> bool {
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                for p in 0..cache.len {
+                    let o = self.off(l, slot, h, p);
+                    if self.kc.as_f32()[o..o + self.d_head] != *cache.k_slice(l, h, p) {
+                        return false;
+                    }
+                    if self.vc.as_f32()[o..o + self.d_head] != *cache.v_slice(l, h, p) {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::rng::Rng;
+
+    fn fake_knew(l: usize, b: usize, h: usize, t: usize, d: usize, rng: &mut Rng) -> HostTensor {
+        let n = l * b * h * t * d;
+        HostTensor::f32(
+            vec![l, b, h, t, d],
+            (0..n).map(|_| rng.normal() as f32).collect(),
+        )
+    }
+
+    #[test]
+    fn commit_row_places_values() {
+        let mut c = KvCache::new(2, 2, 8, 4);
+        let mut rng = Rng::new(0);
+        let kn = fake_knew(2, 1, 2, 3, 4, &mut rng);
+        let vn = fake_knew(2, 1, 2, 3, 4, &mut rng);
+        c.commit_row(&kn, &vn, 0, 1, 0);
+        c.commit_row(&kn, &vn, 0, 2, 1);
+        assert_eq!(c.len, 2);
+        // layer 1, head 1, dest 0 == k_new[l=1, b=0, h=1, t=1]
+        let expect_off = (((1 * 1 + 0) * 2 + 1) * 3 + 1) * 4;
+        assert_eq!(c.k_slice(1, 1, 0), &kn.as_f32()[expect_off..expect_off + 4]);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut a = KvCache::new(3, 2, 16, 4);
+        let mut rng = Rng::new(1);
+        let kn = fake_knew(3, 1, 2, 8, 4, &mut rng);
+        let vn = fake_knew(3, 1, 2, 8, 4, &mut rng);
+        for i in 0..8 {
+            a.commit_row(&kn, &vn, 0, i, i);
+        }
+        let packed = a.pack_range(0, 8);
+        assert_eq!(packed.len(), 2 * 8 * a.row_elems());
+
+        let mut b = KvCache::new(3, 2, 16, 4);
+        b.unpack_range(0, 8, &packed);
+        assert_eq!(b.len, 8);
+        for l in 0..3 {
+            for h in 0..2 {
+                for p in 0..8 {
+                    assert_eq!(a.k_slice(l, h, p), b.k_slice(l, h, p));
+                    assert_eq!(a.v_slice(l, h, p), b.v_slice(l, h, p));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partial_pack_lands_at_offset() {
+        let mut a = KvCache::new(1, 1, 8, 2);
+        let mut rng = Rng::new(2);
+        let kn = fake_knew(1, 1, 1, 6, 2, &mut rng);
+        let vn = fake_knew(1, 1, 1, 6, 2, &mut rng);
+        for i in 0..6 {
+            a.commit_row(&kn, &vn, 0, i, i);
+        }
+        // Move rows [2,5) into a fresh cache at the same offsets.
+        let packed = a.pack_range(2, 5);
+        let mut b = KvCache::new(1, 1, 8, 2);
+        b.unpack_range(2, 3, &packed);
+        for p in 2..5 {
+            assert_eq!(a.k_slice(0, 0, p), b.k_slice(0, 0, p));
+        }
+        assert_eq!(b.len, 5);
+    }
+
+    #[test]
+    fn batched_cache_load_and_commit_stay_consistent() {
+        let (l, h, s, d) = (2, 2, 8, 4);
+        let mut sample = KvCache::new(l, h, s, d);
+        let mut rng = Rng::new(3);
+        let kn = fake_knew(l, 2, h, 4, d, &mut rng);
+        let vn = fake_knew(l, 2, h, 4, d, &mut rng);
+        sample.commit_row(&kn, &vn, 1, 0, 0);
+        sample.commit_row(&kn, &vn, 1, 2, 1);
+
+        let mut batch = BatchedCache::new(l, h, s, d, 2);
+        batch.load_slot(1, 42, &sample);
+        assert!(batch.slot_matches(1, &sample));
+        assert_eq!(batch.occupant(1), Some(42));
+
+        // Incremental commit keeps both views identical.
+        sample.commit_row(&kn, &vn, 1, 3, 2);
+        batch.commit_row(&kn, &vn, 1, 1, 3, 2);
+        assert!(batch.slot_matches(1, &sample));
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut c = KvCache::new(1, 1, 4, 2);
+        let mut rng = Rng::new(4);
+        let kn = fake_knew(1, 1, 1, 2, 2, &mut rng);
+        c.commit_row(&kn, &kn, 0, 0, 0);
+        assert!(c.len > 0);
+        c.reset();
+        assert_eq!(c.len, 0);
+        assert!(c.k_slice(0, 0, 0).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn unpack_wrong_size_panics() {
+        let mut c = KvCache::new(1, 1, 4, 2);
+        c.unpack_range(0, 2, &[0.0; 3]);
+    }
+}

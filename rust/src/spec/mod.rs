@@ -1,0 +1,26 @@
+//! Speculative-decoding core: draft trees, KV caches, acceptance rules.
+//!
+//! The round protocol (shared by the real PJRT path and the simulator):
+//!
+//! 1. **Draft** — the SSM expands a *candidate tree* rooted at the sample's
+//!    pending token, level by level ([`tree::CandidateTree`]).
+//! 2. **Select** — the workload-aware selector (coordinator::selector)
+//!    chooses the draft-token budget `n`; the top-n weighted, connected
+//!    subtree becomes the verify tree ([`tree::Selection`]).
+//! 3. **Verify** — the target model scores all tree tokens in one call
+//!    (the Pallas tree-attention hot path).
+//! 4. **Accept** — greedy or stochastic speculative sampling walks the
+//!    tree ([`verify`]), yielding ≥1 new token per round (the "bonus"
+//!    token keeps the distribution exactly equal to autoregressive
+//!    decoding, per Leviathan et al.).
+//! 5. **Commit** — accepted tokens' KV rows are scattered into the
+//!    host-resident caches ([`kvcache`]).
+
+pub mod kvcache;
+pub mod sampler;
+pub mod tree;
+pub mod verify;
+
+pub use kvcache::{BatchedCache, KvCache};
+pub use tree::{CandidateTree, Selection, TreeNode};
+pub use verify::{accept_greedy, accept_stochastic, AcceptOutcome};

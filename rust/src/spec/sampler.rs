@@ -1,0 +1,136 @@
+//! Token sampling primitives: softmax, argmax, top-k, residual sampling.
+
+use crate::utils::rng::Rng;
+
+/// Numerically stable softmax with temperature (in place, returns probs).
+pub fn softmax(logits: &[f32], temperature: f32) -> Vec<f32> {
+    let t = temperature.max(1e-6);
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut out: Vec<f32> = logits.iter().map(|&x| ((x - m) / t).exp()).collect();
+    let s: f32 = out.iter().sum();
+    if s > 0.0 {
+        for x in &mut out {
+            *x /= s;
+        }
+    } else {
+        let u = 1.0 / out.len() as f32;
+        out.iter_mut().for_each(|x| *x = u);
+    }
+    out
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Indices of the k largest values, descending.
+pub fn top_k(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    let k = k.min(xs.len());
+    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+        xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(k);
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}
+
+/// Sample an index from a (not necessarily normalized) probability vector.
+pub fn sample(probs: &[f32], rng: &mut Rng) -> usize {
+    let total: f32 = probs.iter().sum();
+    if total <= 0.0 || !total.is_finite() {
+        return rng.below(probs.len());
+    }
+    let mut x = rng.f32() * total;
+    for (i, &p) in probs.iter().enumerate() {
+        x -= p;
+        if x <= 0.0 {
+            return i;
+        }
+    }
+    probs.len() - 1
+}
+
+/// Residual distribution max(p - q, 0), normalized; used when a draft
+/// token is rejected (Leviathan et al. speculative sampling).
+pub fn residual(p: &[f32], q: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(p.len(), q.len());
+    let mut r: Vec<f32> = p.iter().zip(q).map(|(&a, &b)| (a - b).max(0.0)).collect();
+    let s: f32 = r.iter().sum();
+    if s > 0.0 {
+        for x in &mut r {
+            *x /= s;
+        }
+    } else {
+        // p ≤ q everywhere (numerically): fall back to p itself.
+        r.copy_from_slice(p);
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0], 1.0);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_temperature_sharpens() {
+        let cold = softmax(&[1.0, 2.0], 0.1);
+        let hot = softmax(&[1.0, 2.0], 10.0);
+        assert!(cold[1] > hot[1]);
+    }
+
+    #[test]
+    fn softmax_handles_extremes() {
+        let p = softmax(&[-1e30, 1e4, f32::NEG_INFINITY], 1.0);
+        assert!(p.iter().all(|x| x.is_finite()));
+        assert!((p[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn top_k_descending() {
+        let idx = top_k(&[0.1, 0.9, 0.5, 0.7], 3);
+        assert_eq!(idx, vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn top_k_k_larger_than_len() {
+        let idx = top_k(&[0.3, 0.1], 10);
+        assert_eq!(idx, vec![0, 1]);
+    }
+
+    #[test]
+    fn sample_respects_distribution() {
+        let mut rng = Rng::new(3);
+        let mut hits = [0usize; 3];
+        for _ in 0..30_000 {
+            hits[sample(&[0.1, 0.2, 0.7], &mut rng)] += 1;
+        }
+        assert!((hits[2] as f64 / 30_000.0 - 0.7).abs() < 0.02, "{hits:?}");
+    }
+
+    #[test]
+    fn residual_zeroes_where_q_dominates() {
+        let r = residual(&[0.5, 0.5], &[0.8, 0.2]);
+        assert_eq!(r[0], 0.0);
+        assert!((r[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn residual_fallback_when_p_le_q() {
+        let r = residual(&[0.5, 0.5], &[0.6, 0.6]);
+        assert_eq!(r, vec![0.5, 0.5]);
+    }
+}

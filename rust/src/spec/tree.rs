@@ -1,0 +1,358 @@
+//! The speculative candidate tree (paper §2.2, Figure 1).
+//!
+//! Node 0 is always the sample's *pending token* (the bonus/last accepted
+//! token of the previous round, whose KV is not yet committed). The SSM
+//! expands candidates level by level; each node carries
+//!
+//! * `o`  — the SSM's probability of this token given its parent,
+//! * `dl` — the *draft logit* `dl(u) = ∏ o(v)` along the root path
+//!   (paper definition), and
+//! * `w`  — the node weight = predicted acceptance probability
+//!   `F(dl(u))` filled in by the coordinator's predictor (§5.2).
+//!
+//! [`CandidateTree::select_top_n`] implements the paper's two selection
+//! principles: nodes are taken greedily by weight from the *frontier*
+//! (parent already selected), which under a monotone `F` equals global
+//! top-n while guaranteeing a connected tree, and yields the incremental
+//! property `S(n+1) = S(n) ∪ {u_max}` that the layer-level search (§5.3)
+//! exploits.
+
+/// One node of the candidate tree.
+#[derive(Clone, Debug)]
+pub struct TreeNode {
+    pub token: i32,
+    /// Parent index within the tree; `None` only for node 0.
+    pub parent: Option<usize>,
+    /// Depth: 0 for the pending root, 1 for its direct candidates, …
+    pub depth: usize,
+    /// SSM probability o(v) of this token at its parent's context.
+    pub o: f32,
+    /// Draft logit dl(u) = ∏ o along the path (root has dl = 1).
+    pub dl: f32,
+    /// Node weight w(u) = F(dl(u)): predicted acceptance probability.
+    pub w: f32,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct CandidateTree {
+    pub nodes: Vec<TreeNode>,
+}
+
+impl CandidateTree {
+    /// Start a tree from the pending token.
+    pub fn new(pending_token: i32) -> Self {
+        CandidateTree {
+            nodes: vec![TreeNode {
+                token: pending_token,
+                parent: None,
+                depth: 0,
+                o: 1.0,
+                dl: 1.0,
+                w: 1.0,
+            }],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn max_depth(&self) -> usize {
+        self.nodes.iter().map(|n| n.depth).max().unwrap_or(0)
+    }
+
+    /// Indices of nodes at a given depth.
+    pub fn level(&self, depth: usize) -> Vec<usize> {
+        (0..self.nodes.len())
+            .filter(|&i| self.nodes[i].depth == depth)
+            .collect()
+    }
+
+    /// Add a candidate child; `o` is the SSM prob of `token` at `parent`.
+    pub fn add_child(&mut self, parent: usize, token: i32, o: f32) -> usize {
+        assert!(parent < self.nodes.len());
+        let dl = self.nodes[parent].dl * o;
+        let depth = self.nodes[parent].depth + 1;
+        self.nodes.push(TreeNode { token, parent: Some(parent), depth, o, dl, w: 0.0 });
+        self.nodes.len() - 1
+    }
+
+    /// Children of a node.
+    pub fn children(&self, idx: usize) -> Vec<usize> {
+        (0..self.nodes.len())
+            .filter(|&i| self.nodes[i].parent == Some(idx))
+            .collect()
+    }
+
+    /// Path from root to `idx`, inclusive.
+    pub fn path(&self, idx: usize) -> Vec<usize> {
+        let mut p = vec![idx];
+        let mut cur = idx;
+        while let Some(par) = self.nodes[cur].parent {
+            p.push(par);
+            cur = par;
+        }
+        p.reverse();
+        p
+    }
+
+    /// Greedy frontier selection of the top-n weighted connected subtree.
+    ///
+    /// Returns the *sequence* of node indices in selection order (root
+    /// first) — prefix `S(k)` of the returned vec is exactly the paper's
+    /// `S(k)`, enabling the §5.3 incremental search. `n` counts all tree
+    /// tokens including the root.
+    pub fn select_top_n(&self, n: usize) -> Vec<usize> {
+        let n = n.min(self.nodes.len());
+        let mut selected: Vec<usize> = Vec::with_capacity(n);
+        if n == 0 {
+            return selected;
+        }
+        let mut in_sel = vec![false; self.nodes.len()];
+        selected.push(0);
+        in_sel[0] = true;
+        // Frontier = children of selected nodes, not yet selected.
+        let mut frontier: Vec<usize> = self.children(0);
+        while selected.len() < n && !frontier.is_empty() {
+            // Max-weight frontier node (ties broken by lower index for
+            // determinism).
+            let (fi, &best) = frontier
+                .iter()
+                .enumerate()
+                .max_by(|(_, &a), (_, &b)| {
+                    self.nodes[a]
+                        .w
+                        .partial_cmp(&self.nodes[b].w)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(b.cmp(&a))
+                })
+                .unwrap();
+            frontier.swap_remove(fi);
+            selected.push(best);
+            in_sel[best] = true;
+            for c in self.children(best) {
+                if !in_sel[c] {
+                    frontier.push(c);
+                }
+            }
+        }
+        selected
+    }
+
+    /// Build the dense representation of a selection for the verify call.
+    pub fn selection(&self, order: &[usize]) -> Selection {
+        let t = order.len();
+        let mut pos_of = vec![usize::MAX; self.nodes.len()];
+        for (i, &idx) in order.iter().enumerate() {
+            pos_of[idx] = i;
+        }
+        let mut tokens = Vec::with_capacity(t);
+        let mut depths = Vec::with_capacity(t);
+        let mut parents = Vec::with_capacity(t);
+        let mut mask = vec![0f32; t * t];
+        for (i, &idx) in order.iter().enumerate() {
+            let node = &self.nodes[idx];
+            tokens.push(node.token);
+            depths.push(node.depth);
+            parents.push(node.parent.map(|p| {
+                debug_assert!(pos_of[p] != usize::MAX, "selection not connected");
+                pos_of[p]
+            }));
+            // ancestor-or-self mask row
+            for &a in &self.path(idx) {
+                let j = pos_of[a];
+                debug_assert!(j != usize::MAX && j <= i);
+                mask[i * t + j] = 1.0;
+            }
+        }
+        Selection { order: order.to_vec(), tokens, depths, parents, mask }
+    }
+
+    /// Sum of weights over a selection = predicted accepted length `al`
+    /// (paper §5.2, Figure 8).
+    pub fn predicted_al(&self, order: &[usize]) -> f64 {
+        order.iter().map(|&i| self.nodes[i].w as f64).sum()
+    }
+}
+
+/// Dense, topologically-ordered view of a selected subtree, ready to feed
+/// the `{model}_tree_b{B}_t{T}` executable.
+#[derive(Clone, Debug)]
+pub struct Selection {
+    /// Candidate-tree indices in selection (topological) order.
+    pub order: Vec<usize>,
+    pub tokens: Vec<i32>,
+    pub depths: Vec<usize>,
+    /// Parent position *within the selection* (None for root).
+    pub parents: Vec<Option<usize>>,
+    /// [t, t] ancestor-or-self mask, row-major.
+    pub mask: Vec<f32>,
+}
+
+impl Selection {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Children (selection positions) of selection position `i`.
+    pub fn children_of(&self, i: usize) -> Vec<usize> {
+        (0..self.len()).filter(|&j| self.parents[j] == Some(i)).collect()
+    }
+
+    /// Absolute positions for the verify call: prefix_len + depth.
+    pub fn positions(&self, prefix_len: usize) -> Vec<i32> {
+        self.depths.iter().map(|&d| (prefix_len + d) as i32).collect()
+    }
+
+    /// Pad to a bucket size T: tokens 0, self-only mask rows.
+    pub fn padded(&self, t_bucket: usize) -> (Vec<i32>, Vec<f32>) {
+        assert!(t_bucket >= self.len());
+        let t = self.len();
+        let mut tokens = vec![0i32; t_bucket];
+        tokens[..t].copy_from_slice(&self.tokens);
+        let mut mask = vec![0f32; t_bucket * t_bucket];
+        for i in 0..t {
+            mask[i * t_bucket..i * t_bucket + t].copy_from_slice(&self.mask[i * t..(i + 1) * t]);
+        }
+        for i in t..t_bucket {
+            mask[i * t_bucket + i] = 1.0; // keep padded softmax rows finite
+        }
+        (tokens, mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Figure-1-style tree: root + {I(0.7), We(0.3)}; I → {enjoy(0.5),
+    /// like(0.2)}; enjoy → {reading(0.1), sleeping(0.35/0.5=0.7)}.
+    fn fig1_tree() -> CandidateTree {
+        let mut t = CandidateTree::new(100);
+        let i = t.add_child(0, 1, 0.7); // "I"
+        let _we = t.add_child(0, 2, 0.3); // "We"
+        let enjoy = t.add_child(i, 3, 0.5); // "enjoy"
+        let _like = t.add_child(i, 4, 0.2); // "like"
+        let _reading = t.add_child(enjoy, 5, 0.2); // "reading"
+        let _sleeping = t.add_child(enjoy, 6, 0.7); // "sleeping"
+        t
+    }
+
+    fn set_w_from_dl(t: &mut CandidateTree) {
+        for n in &mut t.nodes {
+            n.w = n.dl; // identity F for tests
+        }
+    }
+
+    #[test]
+    fn draft_logits_multiply_along_path() {
+        let t = fig1_tree();
+        assert!((t.nodes[1].dl - 0.7).abs() < 1e-6);
+        assert!((t.nodes[3].dl - 0.35).abs() < 1e-6);
+        assert!((t.nodes[6].dl - 0.245).abs() < 1e-6);
+    }
+
+    #[test]
+    fn select_top_n_matches_paper_example() {
+        // Paper Fig 1: with n=4 (excluding our always-selected root, the
+        // paper counts draft tokens only), top draft nodes by dl are
+        // I(0.7), enjoy(0.35), sleeping(0.245), We(0.3).
+        let mut t = fig1_tree();
+        set_w_from_dl(&mut t);
+        let sel = t.select_top_n(5); // root + 4 draft tokens
+        let tokens: Vec<i32> = sel.iter().map(|&i| t.nodes[i].token).collect();
+        assert_eq!(tokens[0], 100);
+        let mut draft = tokens[1..].to_vec();
+        draft.sort_unstable();
+        assert_eq!(draft, vec![1, 2, 3, 6]); // I, We, enjoy, sleeping
+    }
+
+    #[test]
+    fn selection_is_connected_and_topological() {
+        let mut t = fig1_tree();
+        set_w_from_dl(&mut t);
+        for n in 1..=t.len() {
+            let sel = t.select_top_n(n);
+            let s = t.selection(&sel);
+            for (i, p) in s.parents.iter().enumerate() {
+                if i == 0 {
+                    assert!(p.is_none());
+                } else {
+                    assert!(p.unwrap() < i, "parent after child at {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn selection_prefix_property() {
+        // S(n) must be a prefix of S(n+1) (paper principle 2).
+        let mut t = fig1_tree();
+        set_w_from_dl(&mut t);
+        let full = t.select_top_n(t.len());
+        for n in 1..t.len() {
+            assert_eq!(full[..n], t.select_top_n(n)[..]);
+        }
+    }
+
+    #[test]
+    fn mask_is_ancestor_closure() {
+        let mut t = fig1_tree();
+        set_w_from_dl(&mut t);
+        let sel = t.select_top_n(6);
+        let s = t.selection(&sel);
+        let n = s.len();
+        for i in 0..n {
+            // self visible
+            assert_eq!(s.mask[i * n + i], 1.0);
+            // visible set == path set
+            let node_idx = s.order[i];
+            let path: std::collections::HashSet<usize> =
+                t.path(node_idx).into_iter().collect();
+            for j in 0..n {
+                let expect = path.contains(&s.order[j]);
+                assert_eq!(s.mask[i * n + j] > 0.5, expect, "i={i} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn padded_mask_keeps_self_rows() {
+        let mut t = fig1_tree();
+        set_w_from_dl(&mut t);
+        let s = t.selection(&t.select_top_n(3));
+        let (tokens, mask) = s.padded(8);
+        assert_eq!(tokens.len(), 8);
+        for i in 3..8 {
+            assert_eq!(mask[i * 8 + i], 1.0);
+        }
+    }
+
+    #[test]
+    fn predicted_al_sums_weights() {
+        let mut t = fig1_tree();
+        set_w_from_dl(&mut t);
+        let sel = t.select_top_n(3);
+        let al = t.predicted_al(&sel);
+        let manual: f64 = sel.iter().map(|&i| t.nodes[i].w as f64).sum();
+        assert!((al - manual).abs() < 1e-12);
+    }
+
+    #[test]
+    fn positions_offset_by_prefix() {
+        let t = fig1_tree();
+        let s = t.selection(&t.select_top_n(t.len()));
+        let pos = s.positions(10);
+        for (i, &p) in pos.iter().enumerate() {
+            assert_eq!(p as usize, 10 + s.depths[i]);
+        }
+    }
+}

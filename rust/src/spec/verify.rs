@@ -1,0 +1,295 @@
+//! Acceptance rules: greedy and stochastic speculative sampling over a
+//! verified tree.
+//!
+//! The verify executable returns target logits for every selected tree
+//! token. Acceptance walks the tree from the root (the pending token,
+//! always part of the sequence): at each accepted node we look at the
+//! *target* distribution after it and test that node's children.
+//!
+//! * **Greedy** — a child is accepted iff its token is the target argmax;
+//!   output is bit-identical to greedy autoregressive decoding.
+//! * **Stochastic** — multi-candidate speculative sampling (Leviathan et
+//!   al.; SpecInfer's multi-round variant): child x with draft prob q(x)
+//!   is accepted w.p. min(1, p(x)/q(x)); on rejection the target residual
+//!   max(p−q, 0) is renormalized and the next sibling is tried. The final
+//!   "bonus" token is sampled from the残 residual, so the per-step output
+//!   distribution equals the target model's — no precision loss (§2.2).
+
+use super::sampler;
+use super::tree::Selection;
+use crate::utils::rng::Rng;
+
+/// Result of one acceptance walk.
+#[derive(Clone, Debug)]
+pub struct AcceptOutcome {
+    /// Selection positions accepted, in path order. Always starts with 0
+    /// (the pending root, which was already part of the sequence).
+    pub path: Vec<usize>,
+    /// Newly generated tokens this round: tokens of `path[1..]` plus the
+    /// bonus token.
+    pub new_tokens: Vec<i32>,
+    /// The bonus token (last of `new_tokens`), becomes the next pending.
+    pub bonus: i32,
+    /// Number of *draft* tokens accepted (path.len() - 1).
+    pub accepted_drafts: usize,
+}
+
+/// Greedy acceptance: equivalent to greedy AR decoding.
+///
+/// `logits[i]` = target logits row for selection position i (length V).
+pub fn accept_greedy(sel: &Selection, logits: &[&[f32]]) -> AcceptOutcome {
+    let mut path = vec![0usize];
+    let mut new_tokens = Vec::new();
+    let mut cur = 0usize;
+    loop {
+        let best = sampler::argmax(logits[cur]) as i32;
+        let next = sel
+            .children_of(cur)
+            .into_iter()
+            .find(|&c| sel.tokens[c] == best);
+        match next {
+            Some(c) => {
+                path.push(c);
+                new_tokens.push(best);
+                cur = c;
+            }
+            None => {
+                // Bonus token: the argmax itself.
+                new_tokens.push(best);
+                return AcceptOutcome {
+                    accepted_drafts: path.len() - 1,
+                    bonus: best,
+                    path,
+                    new_tokens,
+                };
+            }
+        }
+    }
+}
+
+/// Stochastic speculative sampling (recursive rejection).
+///
+/// `probs[i]` = softmax(target logits / temperature) for position i;
+/// `draft_q[i]` = the SSM probability `o(v)` of selection position i at its
+/// parent; `draft_dists[i]` = the SSM's *full* distribution at position i
+/// (empty if the node was never expanded — then only per-token mass is
+/// subtracted on rejection).
+///
+/// For a chain with a draft token *sampled* from `q`, this is exactly
+/// Leviathan et al.: accept w.p. min(1, p(x)/q(x)), else sample from
+/// norm(max(p − q, 0)) — the output distribution equals the target's
+/// (verified by `stochastic_chain_preserves_target_distribution`). For
+/// top-k trees the same recursion is the SpecInfer multi-round variant.
+pub fn accept_stochastic(
+    sel: &Selection,
+    probs: &[Vec<f32>],
+    draft_q: &[f32],
+    draft_dists: &[Vec<f32>],
+    rng: &mut Rng,
+) -> AcceptOutcome {
+    let vocab = probs[0].len();
+    let mut path = vec![0usize];
+    let mut new_tokens = Vec::new();
+    let mut cur = 0usize;
+    loop {
+        // Residual distribution at this node, updated as children fail.
+        let mut p = probs[cur].clone();
+        let mut accepted_child = None;
+        let mut kids = sel.children_of(cur);
+        // Deterministic order: higher draft prob first (better acceptance).
+        kids.sort_by(|&a, &b| {
+            draft_q[b]
+                .partial_cmp(&draft_q[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for c in kids {
+            let tok = sel.tokens[c] as usize;
+            debug_assert!(tok < vocab);
+            let q = draft_q[c].max(1e-9);
+            let ratio = (p[tok] / q).min(1.0);
+            if rng.f32() < ratio {
+                accepted_child = Some(c);
+                break;
+            }
+            // Reject: subtract the draft distribution and renormalize.
+            if draft_dists[cur].len() == vocab {
+                p = sampler::residual(&p, &draft_dists[cur]);
+            } else {
+                let mut qvec = vec![0f32; vocab];
+                qvec[tok] = q;
+                p = sampler::residual(&p, &qvec);
+            }
+        }
+        match accepted_child {
+            Some(c) => {
+                path.push(c);
+                new_tokens.push(sel.tokens[c]);
+                cur = c;
+            }
+            None => {
+                let bonus = sampler::sample(&p, rng) as i32;
+                new_tokens.push(bonus);
+                return AcceptOutcome {
+                    accepted_drafts: path.len() - 1,
+                    bonus,
+                    path,
+                    new_tokens,
+                };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::sampler::sample;
+    use crate::spec::tree::CandidateTree;
+
+    /// root(tok 9) -> a(tok 1, o=.6) -> c(tok 3, o=.5)
+    ///             -> b(tok 2, o=.3)
+    fn small_sel() -> (CandidateTree, Selection) {
+        let mut t = CandidateTree::new(9);
+        let a = t.add_child(0, 1, 0.6);
+        let _b = t.add_child(0, 2, 0.3);
+        let _c = t.add_child(a, 3, 0.5);
+        for n in &mut t.nodes {
+            n.w = n.dl;
+        }
+        let order = t.select_top_n(4);
+        let sel = t.selection(&order);
+        (t, sel)
+    }
+
+    fn onehotish(v: usize, hot: usize, p: f32) -> Vec<f32> {
+        let mut x = vec![(1.0 - p) / (v - 1) as f32; v];
+        x[hot] = p;
+        x
+    }
+
+    #[test]
+    fn greedy_accepts_full_path() {
+        let (_t, sel) = small_sel();
+        let v = 8;
+        // logits rows aligned to selection order [root, a, c, b] (weights).
+        let pos_a = sel.tokens.iter().position(|&t| t == 1).unwrap();
+        let pos_c = sel.tokens.iter().position(|&t| t == 3).unwrap();
+        let mut rows = vec![vec![0f32; v]; sel.len()];
+        rows[0][1] = 5.0; // root prefers token 1 => accept a
+        rows[pos_a][3] = 5.0; // a prefers token 3 => accept c
+        rows[pos_c][7] = 5.0; // c prefers 7 => bonus 7
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let out = accept_greedy(&sel, &refs);
+        assert_eq!(out.accepted_drafts, 2);
+        assert_eq!(out.new_tokens, vec![1, 3, 7]);
+        assert_eq!(out.bonus, 7);
+    }
+
+    #[test]
+    fn greedy_rejects_wrong_branch() {
+        let (_t, sel) = small_sel();
+        let v = 8;
+        let mut rows = vec![vec![0f32; v]; sel.len()];
+        rows[0][5] = 5.0; // root prefers token 5: no child matches
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let out = accept_greedy(&sel, &refs);
+        assert_eq!(out.accepted_drafts, 0);
+        assert_eq!(out.new_tokens, vec![5]);
+    }
+
+    #[test]
+    fn greedy_takes_sibling_when_first_fails() {
+        let (_t, sel) = small_sel();
+        let v = 8;
+        let mut rows = vec![vec![0f32; v]; sel.len()];
+        rows[0][2] = 5.0; // root prefers token 2 => accept b (sibling)
+        let pos_b = sel.tokens.iter().position(|&t| t == 2).unwrap();
+        rows[pos_b][4] = 5.0;
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let out = accept_greedy(&sel, &refs);
+        assert_eq!(out.accepted_drafts, 1);
+        assert_eq!(out.new_tokens, vec![2, 4]);
+    }
+
+    #[test]
+    fn stochastic_always_yields_bonus() {
+        let (_t, sel) = small_sel();
+        let v = 8;
+        let probs: Vec<Vec<f32>> = (0..sel.len()).map(|_| onehotish(v, 6, 0.9)).collect();
+        let draft_q: Vec<f32> = sel.order.iter().map(|_| 0.5).collect();
+        let dists: Vec<Vec<f32>> = vec![Vec::new(); sel.len()];
+        let mut rng = Rng::new(0);
+        for _ in 0..50 {
+            let out = accept_stochastic(&sel, &probs, &draft_q, &dists, &mut rng);
+            assert!(!out.new_tokens.is_empty());
+            assert_eq!(*out.new_tokens.last().unwrap(), out.bonus);
+            assert_eq!(out.accepted_drafts, out.path.len() - 1);
+        }
+    }
+
+    #[test]
+    fn stochastic_accepts_when_target_agrees() {
+        // Target puts all mass on the drafted tokens → acceptance always.
+        let (_t, sel) = small_sel();
+        let v = 8;
+        let mut probs: Vec<Vec<f32>> = vec![vec![0.0; v]; sel.len()];
+        probs[0] = onehotish(v, 1, 0.999); // root → token 1 (child a)
+        let pos_a = sel.tokens.iter().position(|&t| t == 1).unwrap();
+        probs[pos_a] = onehotish(v, 3, 0.999); // a → token 3 (child c)
+        let pos_c = sel.tokens.iter().position(|&t| t == 3).unwrap();
+        probs[pos_c] = onehotish(v, 2, 0.999);
+        let pos_b = sel.tokens.iter().position(|&t| t == 2).unwrap();
+        probs[pos_b] = onehotish(v, 0, 0.999);
+        let draft_q: Vec<f32> = sel.order.iter().map(|_| 0.9).collect();
+        let dists: Vec<Vec<f32>> = vec![Vec::new(); sel.len()];
+        let mut rng = Rng::new(1);
+        let mut total = 0;
+        for _ in 0..100 {
+            total += accept_stochastic(&sel, &probs, &draft_q, &dists, &mut rng)
+                .accepted_drafts;
+        }
+        assert!(total as f64 / 100.0 > 1.8, "{total}");
+    }
+
+    #[test]
+    fn stochastic_chain_preserves_target_distribution() {
+        // The Leviathan guarantee: with the draft token SAMPLED from the
+        // full draft distribution q and the residual subtracting q, the
+        // first output token's distribution equals the target p exactly
+        // (paper §2.2: "no degradation of inference precision").
+        let v = 4;
+        let p = vec![0.4f32, 0.3, 0.2, 0.1];
+        let q = vec![0.1f32, 0.2, 0.3, 0.4]; // deliberately mismatched
+        let mut rng = Rng::new(2);
+        let mut hist = [0usize; 4];
+        let n = 300_000;
+        for _ in 0..n {
+            // Draft samples one token from q.
+            let draft_tok = sample(&q, &mut rng) as i32;
+            let mut t = CandidateTree::new(9);
+            t.add_child(0, draft_tok, q[draft_tok as usize]);
+            for node in &mut t.nodes {
+                node.w = node.dl;
+            }
+            let sel = t.selection(&t.select_top_n(2));
+            let probs = vec![p.clone(), vec![0.25; v]];
+            let draft_q: Vec<f32> = sel
+                .order
+                .iter()
+                .enumerate()
+                .map(|(i, _)| if i == 0 { 1.0 } else { q[draft_tok as usize] })
+                .collect();
+            let dists = vec![q.clone(), Vec::new()];
+            let out = accept_stochastic(&sel, &probs, &draft_q, &dists, &mut rng);
+            hist[out.new_tokens[0] as usize] += 1;
+        }
+        for i in 0..v {
+            let f = hist[i] as f64 / n as f64;
+            assert!(
+                (f - p[i] as f64).abs() < 0.005,
+                "token {i}: {f} vs {}",
+                p[i]
+            );
+        }
+    }
+}

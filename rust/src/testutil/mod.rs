@@ -1,0 +1,96 @@
+//! Mini property-testing harness (no proptest in the offline registry).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over many seeded RNGs;
+//! on failure it reports the exact seed so the case can be replayed with
+//! `check_seed`. Coordinator invariants (reallocation constraints, selector
+//! optimality, tree connectivity, migration round-trips) are verified with
+//! this harness throughout `rust/tests/`.
+
+use crate::utils::rng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 200;
+
+/// Run `prop` over `cases` seeded RNGs; panic with the failing seed.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: usize, mut prop: F) {
+    // Base seed is stable so CI is deterministic; override with
+    // RLHFSPEC_PROP_SEED for exploration.
+    let base: u64 = std::env::var("RLHFSPEC_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property {name:?} failed on case {case} (seed={seed:#x}): {msg}\n\
+                 replay with testutil::check_seed({seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn check_seed<F: FnOnce(&mut Rng)>(seed: u64, prop: F) {
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+/// Convenience: assert two f64 are within tolerance.
+pub fn assert_close(a: f64, b: f64, tol: f64) {
+    assert!(
+        (a - b).abs() <= tol,
+        "not close: {a} vs {b} (tol {tol})"
+    );
+}
+
+/// Convenience: random sorted vector of distinct usizes in [0, hi).
+pub fn distinct_sorted(rng: &mut Rng, n: usize, hi: usize) -> Vec<usize> {
+    assert!(n <= hi);
+    let mut all: Vec<usize> = (0..hi).collect();
+    rng.shuffle(&mut all);
+    let mut v: Vec<usize> = all.into_iter().take(n).collect();
+    v.sort_unstable();
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("x+0==x", 50, |rng| {
+            let x = rng.below(1000);
+            assert_eq!(x + 0, x);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn check_reports_failure_with_seed() {
+        check("always-false", 10, |_rng| {
+            panic!("intentional");
+        });
+    }
+
+    #[test]
+    fn distinct_sorted_is_distinct_and_sorted() {
+        check("distinct_sorted", 50, |rng| {
+            let v = distinct_sorted(rng, 10, 50);
+            assert_eq!(v.len(), 10);
+            for w in v.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        });
+    }
+}

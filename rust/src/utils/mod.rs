@@ -1,0 +1,10 @@
+//! Small in-repo substrates: seeded RNG, JSON, CLI parsing, statistics.
+//!
+//! The crate registry available in this environment has no serde / clap /
+//! rand, so these are deliberately small, dependency-free implementations
+//! (see DESIGN.md §4 "offline-constraint note").
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,171 @@
+//! Integration: the figure harness reproduces the paper's *shape* claims.
+//!
+//! Each test regenerates a figure/table through the public harness and
+//! asserts the property the paper's evaluation rests on (who wins, which
+//! way a trend bends, where a knee falls) — not absolute numbers.
+
+use rlhfspec::figures;
+use rlhfspec::sim::cluster::{ClusterConfig, SimCluster};
+use rlhfspec::sim::e2e::{run_system, StageModel, SystemKind};
+use rlhfspec::sim::SimMode;
+
+const SEED: u64 = 0;
+
+fn num_after(hay: &str, key: &str) -> f64 {
+    let idx = hay.find(key).unwrap_or_else(|| panic!("{key:?} not in output"));
+    let tail = &hay[idx + key.len()..];
+    let token: String = tail
+        .trim_start()
+        .chars()
+        .take_while(|c| c.is_ascii_digit() || *c == '.' || *c == '-')
+        .collect();
+    token.parse().unwrap_or_else(|_| panic!("bad number after {key:?}: {token:?}"))
+}
+
+#[test]
+fn fig2_long_tail_quantiles() {
+    let s = figures::fig2(SEED);
+    let med = num_after(&s, "ours: median");
+    let p95 = num_after(&s, "p95");
+    // paper: 378 / 1373
+    assert!((350.0..410.0).contains(&med), "{med}");
+    let p95v = num_after(&s[s.find("ours:").unwrap()..], "p95");
+    assert!((1250.0..1500.0).contains(&p95v), "{p95}");
+}
+
+#[test]
+fn fig3_generation_dominates() {
+    let s = figures::fig3(SEED);
+    // Verl row: gen% must exceed 60% (paper: >68.4%).
+    let verl_line = s.lines().find(|l| l.starts_with("Verl")).unwrap();
+    let pct: f64 = verl_line
+        .split_whitespace()
+        .last()
+        .unwrap()
+        .trim_end_matches('%')
+        .parse()
+        .unwrap();
+    assert!(pct > 60.0, "{pct}");
+    // RLHFSpec's generation share must be lower than Verl's.
+    let spec_line = s.lines().find(|l| l.starts_with("RLHFSpec")).unwrap();
+    let pct2: f64 = spec_line
+        .split_whitespace()
+        .last()
+        .unwrap()
+        .trim_end_matches('%')
+        .parse()
+        .unwrap();
+    assert!(pct2 < pct, "spec {pct2} !< verl {pct}");
+}
+
+#[test]
+fn fig4_optimal_n_shifts_with_load() {
+    let s = figures::fig4(SEED);
+    let low = num_after(&s, "optimal n at count 4:");
+    let high = num_after(&s, "optimal n at count 32:");
+    assert!(
+        low > high,
+        "low-load optimal n ({low}) should exceed high-load optimal n ({high})"
+    );
+}
+
+#[test]
+fn fig5_realloc_counterfactual_gains() {
+    let s = figures::fig5(SEED);
+    // the printed counterfactual gain must be clearly positive
+    let idx = s.find("slot ①").unwrap();
+    let pct_str = &s[idx..];
+    let gain = pct_str
+        .rsplit('(')
+        .next()
+        .unwrap()
+        .trim_start_matches('+')
+        .split('%')
+        .next()
+        .unwrap()
+        .parse::<f64>()
+        .unwrap();
+    assert!(gain > 15.0, "counterfactual gain {gain}% too small");
+}
+
+#[test]
+fn fig7_correlation_strong() {
+    let s = figures::fig7(SEED);
+    let corr = num_after(&s, "pearson(dl, acceptance) =");
+    assert!(corr > 0.8, "{corr}");
+}
+
+#[test]
+fn fig9_roofline_monotone_then_flat() {
+    let s = figures::fig9(SEED);
+    let knee = num_after(&s, "threshold (marginal-gain turning point):");
+    assert!((4.0..=48.0).contains(&knee), "{knee}");
+}
+
+#[test]
+fn fig11_system_ordering() {
+    // Direct check (faster than parsing): generation-stage ordering.
+    let stage = StageModel::default();
+    let get = |sys| run_system(sys, "lmsys", 128, 4, 24, SEED, &stage);
+    let rs = get(SystemKind::RlhfSpec);
+    let sp = get(SystemKind::Speculative);
+    let vl = get(SystemKind::Verl);
+    let or = get(SystemKind::OpenRlhf);
+    assert!(rs.gen_secs < sp.gen_secs);
+    assert!(sp.gen_secs < vl.gen_secs);
+    assert!(vl.gen_secs < or.gen_secs);
+    // Speedup bands (paper: ≈2.1–2.3× vs Verl in generation).
+    let speedup = vl.gen_secs / rs.gen_secs;
+    assert!((1.5..3.5).contains(&speedup), "{speedup}");
+}
+
+#[test]
+fn fig13_ablation_monotone() {
+    // Paper-scale configuration (8 instances, 256 samples) — small
+    // clusters don't develop enough drain-phase skew for reallocation to
+    // show (its gain concentrates in the long-tail phase).
+    let run = |mode, realloc| {
+        let cfg = ClusterConfig {
+            instances: 8,
+            mode,
+            realloc_enabled: realloc,
+            n_samples: 256,
+            seed: SEED,
+            ..Default::default()
+        };
+        let r = SimCluster::new(cfg).run();
+        r.n_samples as f64 / r.makespan
+    };
+    let default = run(SimMode::Ar, false);
+    let spec = run(SimMode::StaticSpec(24), false);
+    let selection = run(SimMode::Adaptive, false);
+    let realloc = run(SimMode::Adaptive, true);
+    assert!(spec > default, "+Spec must beat Default");
+    assert!(selection > spec, "+Selection must beat +Spec");
+    assert!(realloc > selection, "+Realloc must improve at paper scale");
+    let total = realloc / default;
+    assert!((1.6..3.6).contains(&total), "total ablation gain {total}");
+}
+
+#[test]
+fn table1_adaptive_near_optimal() {
+    let s = figures::table1(SEED);
+    let worst = num_after(&s, "worst case:");
+    assert!(worst >= 85.0, "adaptive fell to {worst}% of optimal");
+}
+
+#[test]
+fn overhead_under_paper_bound() {
+    let s = figures::overhead(SEED);
+    let total = num_after(&s, "total:");
+    assert!(total < 3.87, "overhead {total}% exceeds the paper bound");
+}
+
+#[test]
+fn all_figures_render() {
+    for id in figures::ALL_FIGURES {
+        let out = figures::run_figure(id, SEED).unwrap();
+        assert!(out.len() > 100, "figure {id} output too short");
+        assert!(!out.contains("NaN"), "figure {id} produced NaN");
+    }
+}

@@ -1,0 +1,207 @@
+//! Integration: the full speculative generation stack on real PJRT
+//! executables (tiny config).
+//!
+//! The heart of the file is `greedy_spec_equals_greedy_ar`: with greedy
+//! acceptance, speculative decoding must produce EXACTLY the tokens of
+//! autoregressive decoding — the lossless-ness claim of §2.2, end to end
+//! through draft trees, the Pallas-verified tree forward, acceptance and
+//! host-side KV commits.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use rlhfspec::config::RunConfig;
+use rlhfspec::coordinator::driver::run_generation;
+use rlhfspec::coordinator::instance::{DecodeMode, GenerationInstance, SampleTask};
+use rlhfspec::runtime::{Manifest, ModelStore};
+use rlhfspec::utils::rng::Rng;
+
+fn tiny_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+}
+
+fn tiny_manifest() -> Rc<Manifest> {
+    Rc::new(Manifest::load(&tiny_dir()).expect("run `make artifacts` first"))
+}
+
+fn mk_instance(mode: DecodeMode, greedy: bool, seed: u64) -> GenerationInstance {
+    let man = tiny_manifest();
+    let target = ModelStore::init(&man, "target", 11).unwrap();
+    let draft = ModelStore::init(&man, "draft", 12).unwrap();
+    let mut cfg = RunConfig::default();
+    cfg.spec.greedy = greedy;
+    cfg.spec.max_depth = 3;
+    cfg.spec.max_draft = 8;
+    cfg.spec.branch = 2;
+    cfg.seed = seed;
+    GenerationInstance::new(0, man, target, draft, cfg, mode, seed).unwrap()
+}
+
+fn tasks(n: usize, prompt_len: usize, max_new: usize, seed: u64) -> Vec<SampleTask> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| SampleTask {
+            id: i as u64,
+            prompt: (0..prompt_len).map(|_| rng.below(60) as i32 + 1).collect(),
+            max_new_tokens: max_new,
+            eos: 0, // token 0 = EOS; random-weight models rarely emit it
+        })
+        .collect()
+}
+
+#[test]
+fn greedy_spec_equals_greedy_ar() {
+    // Same weights, same prompts: adaptive speculative greedy decoding
+    // must emit byte-identical responses to autoregressive greedy.
+    let mut ar = mk_instance(DecodeMode::Ar, true, 1);
+    let mut spec = mk_instance(DecodeMode::Adaptive, true, 1);
+    for t in tasks(2, 6, 12, 42) {
+        ar.add_task(t.clone());
+        spec.add_task(t);
+    }
+    ar.run_to_completion(500).unwrap();
+    spec.run_to_completion(500).unwrap();
+    assert_eq!(ar.finished.len(), 2);
+    assert_eq!(spec.finished.len(), 2);
+    let mut a = ar.finished.clone();
+    let mut s = spec.finished.clone();
+    a.sort_by_key(|f| f.id);
+    s.sort_by_key(|f| f.id);
+    for (x, y) in a.iter().zip(&s) {
+        assert_eq!(x.response, y.response, "sample {} diverged", x.id);
+    }
+    // Drafts were proposed (acceptance needs a *distilled* draft — that
+    // path is exercised in rlhf_integration with real acceptance > 0;
+    // random draft vs random target agree ~1/vocab of the time).
+    assert!(spec.metrics.drafts_proposed > 0);
+}
+
+#[test]
+fn static_spec_also_matches_ar_greedy() {
+    let mut ar = mk_instance(DecodeMode::Ar, true, 2);
+    let mut spec = mk_instance(DecodeMode::StaticSpec(6), true, 2);
+    for t in tasks(1, 4, 10, 7) {
+        ar.add_task(t.clone());
+        spec.add_task(t);
+    }
+    ar.run_to_completion(200).unwrap();
+    spec.run_to_completion(200).unwrap();
+    assert_eq!(ar.finished[0].response, spec.finished[0].response);
+}
+
+#[test]
+fn stochastic_generation_terminates_and_counts_tokens() {
+    let mut inst = mk_instance(DecodeMode::Adaptive, false, 3);
+    for t in tasks(2, 5, 16, 9) {
+        inst.add_task(t);
+    }
+    inst.run_to_completion(500).unwrap();
+    assert_eq!(inst.finished.len(), 2);
+    for f in &inst.finished {
+        assert!(!f.response.is_empty());
+        assert!(f.response.len() <= 16);
+        // every token in-vocab
+        assert!(f.response.iter().all(|&t| (0..64).contains(&t)));
+    }
+    assert!(inst.metrics.tokens_out >= 2);
+}
+
+#[test]
+fn eos_truncates_response() {
+    // With eos set to a very common token (random logits ⇒ appears fast),
+    // responses must end exactly at the first eos.
+    let man = tiny_manifest();
+    let target = ModelStore::init(&man, "target", 21).unwrap();
+    let draft = ModelStore::init(&man, "draft", 22).unwrap();
+    let mut cfg = RunConfig::default();
+    cfg.spec.greedy = false;
+    cfg.spec.temperature = 3.0; // flat sampling: eos arrives quickly
+    let mut inst =
+        GenerationInstance::new(0, man, target, draft, cfg, DecodeMode::Adaptive, 5).unwrap();
+    for mut t in tasks(4, 4, 48, 13) {
+        t.eos = 7;
+        inst.add_task(t);
+    }
+    inst.run_to_completion(2000).unwrap();
+    assert_eq!(inst.finished.len(), 4);
+    for f in &inst.finished {
+        if let Some(p) = f.response.iter().position(|&t| t == 7) {
+            assert_eq!(p + 1, f.response.len(), "tokens after eos in {:?}", f.response);
+        }
+    }
+}
+
+#[test]
+fn driver_two_instances_with_reallocation() {
+    let man = tiny_manifest();
+    let target = ModelStore::init(&man, "target", 31).unwrap();
+    let draft = ModelStore::init(&man, "draft", 32).unwrap();
+    let tw = target.weights_host().unwrap();
+    let dw = draft.weights_host().unwrap();
+
+    let mut cfg = RunConfig::default();
+    cfg.rlhf.instances = 2;
+    cfg.spec.max_depth = 2;
+    cfg.spec.max_draft = 6;
+    cfg.realloc.enabled = true;
+    cfg.realloc.cooldown = 3;
+    cfg.realloc.threshold = 2;
+
+    let report = run_generation(
+        &tiny_dir(),
+        &cfg,
+        DecodeMode::Adaptive,
+        tasks(8, 5, 10, 77),
+        &tw,
+        &dw,
+    )
+    .unwrap();
+    assert_eq!(report.finished.len(), 8);
+    // All ids accounted for exactly once.
+    let mut ids: Vec<u64> = report.finished.iter().map(|f| f.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..8).collect::<Vec<u64>>());
+    assert_eq!(report.instances.len(), 2);
+    assert!(report.total_tokens > 0);
+}
+
+#[test]
+fn driver_skewed_load_triggers_migration() {
+    // 12 samples, 2 instances, low threshold & cooldown: the driver must
+    // issue at least one reallocation decision; samples still all finish
+    // exactly once (migration preserves work).
+    let man = tiny_manifest();
+    let target = ModelStore::init(&man, "target", 41).unwrap();
+    let draft = ModelStore::init(&man, "draft", 42).unwrap();
+    let tw = target.weights_host().unwrap();
+    let dw = draft.weights_host().unwrap();
+
+    let mut cfg = RunConfig::default();
+    cfg.rlhf.instances = 2;
+    cfg.spec.max_depth = 2;
+    cfg.spec.max_draft = 4;
+    cfg.realloc.enabled = true;
+    cfg.realloc.cooldown = 2;
+    cfg.realloc.threshold = 3;
+
+    // Skew: instance 0 gets long jobs via round-robin of mixed lengths.
+    let mut ts = Vec::new();
+    let mut rng = Rng::new(5);
+    for i in 0..12u64 {
+        ts.push(SampleTask {
+            id: i,
+            prompt: (0..4).map(|_| rng.below(60) as i32 + 1).collect(),
+            max_new_tokens: if i % 2 == 0 { 24 } else { 3 },
+            eos: 0,
+        });
+    }
+    let report = run_generation(&tiny_dir(), &cfg, DecodeMode::Adaptive, ts, &tw, &dw).unwrap();
+    assert_eq!(report.finished.len(), 12);
+    let mut ids: Vec<u64> = report.finished.iter().map(|f| f.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..12).collect::<Vec<u64>>());
+    assert!(
+        report.realloc_decisions > 0,
+        "skewed load produced no reallocation decisions"
+    );
+}

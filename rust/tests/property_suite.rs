@@ -1,0 +1,342 @@
+//! Property-based suite over coordinator/spec invariants (testutil::check
+//! is the in-repo mini-proptest; failures print a replayable seed).
+
+use std::collections::BTreeMap;
+
+use rlhfspec::config::{RunConfig, SelectorConfig};
+use rlhfspec::coordinator::migration::{pack_hierarchical, unpack_hierarchical};
+use rlhfspec::coordinator::predictor::{AcceptancePredictor, TsdPredictor};
+use rlhfspec::coordinator::selector::select_strategy;
+use rlhfspec::rlhf::gae::{gae, normalize_advantages};
+use rlhfspec::runtime::HostTensor;
+use rlhfspec::spec::kvcache::KvCache;
+use rlhfspec::spec::sampler;
+use rlhfspec::spec::tree::CandidateTree;
+use rlhfspec::spec::verify::{accept_greedy, accept_stochastic};
+use rlhfspec::testutil::{check, DEFAULT_CASES};
+use rlhfspec::utils::json::Json;
+use rlhfspec::utils::rng::Rng;
+
+fn random_tree(rng: &mut Rng, max_nodes: usize) -> CandidateTree {
+    let mut t = CandidateTree::new(rng.below(64) as i32);
+    let n = rng.range(1, max_nodes);
+    for _ in 1..n {
+        let parent = rng.below(t.len());
+        t.add_child(parent, rng.below(64) as i32, rng.f32().max(0.01));
+    }
+    t
+}
+
+#[test]
+fn tree_selection_always_connected_even_with_adversarial_weights() {
+    // Weights set adversarially (NOT monotone in dl): the frontier rule
+    // must still produce a connected, topologically-ordered selection.
+    check("tree-connected", DEFAULT_CASES, |rng| {
+        let mut t = random_tree(rng, 40);
+        for node in t.nodes.iter_mut() {
+            node.w = rng.f32(); // adversarial
+        }
+        let n = rng.range(1, t.len());
+        let order = t.select_top_n(n);
+        assert_eq!(order[0], 0, "root always first");
+        let sel = t.selection(&order);
+        for (i, p) in sel.parents.iter().enumerate() {
+            if i == 0 {
+                assert!(p.is_none());
+            } else {
+                assert!(p.unwrap() < i);
+            }
+        }
+    });
+}
+
+#[test]
+fn tree_mask_row_equals_path_length() {
+    check("mask-row-sum", DEFAULT_CASES, |rng| {
+        let mut t = random_tree(rng, 24);
+        for node in t.nodes.iter_mut() {
+            node.w = node.dl;
+        }
+        let order = t.select_top_n(t.len());
+        let sel = t.selection(&order);
+        let n = sel.len();
+        for i in 0..n {
+            let row_sum: f32 = sel.mask[i * n..(i + 1) * n].iter().sum();
+            assert_eq!(row_sum as usize, sel.depths[i] + 1, "row {i}");
+        }
+    });
+}
+
+#[test]
+fn kvcache_pack_unpack_arbitrary_ranges() {
+    check("kv-roundtrip", 100, |rng| {
+        let l = rng.range(1, 4);
+        let h = rng.range(1, 4);
+        let d = [2usize, 4, 8][rng.below(3)];
+        let s = 32;
+        let mut src = KvCache::new(l, h, s, d);
+        let len = rng.range(2, 24);
+        let n = l * h * len * d;
+        let kn = HostTensor::f32(vec![l, 1, h, len, d], (0..n).map(|_| rng.f32()).collect());
+        let vn = HostTensor::f32(vec![l, 1, h, len, d], (0..n).map(|_| rng.f32()).collect());
+        for i in 0..len {
+            src.commit_row(&kn, &vn, 0, i, i);
+        }
+        let a = rng.below(len);
+        let b = rng.range(a, len);
+        let packed = src.pack_range(a, b);
+        let mut dst = KvCache::new(l, h, s, d);
+        dst.unpack_range(a, b - a, &packed);
+        for ll in 0..l {
+            for hh in 0..h {
+                for p in a..b {
+                    assert_eq!(src.k_slice(ll, hh, p), dst.k_slice(ll, hh, p));
+                    assert_eq!(src.v_slice(ll, hh, p), dst.v_slice(ll, hh, p));
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn hierarchical_migration_roundtrip_many_samples() {
+    check("hier-multi", 60, |rng| {
+        let n_samples = rng.range(1, 6);
+        let mut drafts = Vec::new();
+        let mut targets = Vec::new();
+        let mut ids = Vec::new();
+        let mut ranges = Vec::new();
+        for i in 0..n_samples {
+            let len = rng.range(1, 16);
+            let mk = |l: usize, h: usize, rng: &mut Rng| {
+                let mut c = KvCache::new(l, h, 32, 4);
+                let n = l * h * len * 4;
+                let kn =
+                    HostTensor::f32(vec![l, 1, h, len, 4], (0..n).map(|_| rng.f32()).collect());
+                let vn =
+                    HostTensor::f32(vec![l, 1, h, len, 4], (0..n).map(|_| rng.f32()).collect());
+                for p in 0..len {
+                    c.commit_row(&kn, &vn, 0, p, p);
+                }
+                c
+            };
+            drafts.push(mk(1, 2, rng));
+            targets.push(mk(3, 2, rng));
+            ids.push(i as u64);
+            ranges.push((0, len));
+        }
+        let dref: Vec<&KvCache> = drafts.iter().collect();
+        let tref: Vec<&KvCache> = targets.iter().collect();
+        let buf = pack_hierarchical(&dref, &tref, &ids, &ranges);
+
+        let mut rd: Vec<KvCache> = (0..n_samples).map(|_| KvCache::new(1, 2, 32, 4)).collect();
+        let mut rt: Vec<KvCache> = (0..n_samples).map(|_| KvCache::new(3, 2, 32, 4)).collect();
+        {
+            let mut rdm: Vec<&mut KvCache> = rd.iter_mut().collect();
+            let mut rtm: Vec<&mut KvCache> = rt.iter_mut().collect();
+            unpack_hierarchical(&buf, &mut rdm, &mut rtm);
+        }
+        for i in 0..n_samples {
+            for p in 0..ranges[i].1 {
+                assert_eq!(targets[i].k_slice(0, 0, p), rt[i].k_slice(0, 0, p));
+                assert_eq!(drafts[i].v_slice(0, 1, p), rd[i].v_slice(0, 1, p));
+            }
+        }
+    });
+}
+
+#[test]
+fn selector_choice_within_bounds_and_al_sane() {
+    check("selector-bounds", DEFAULT_CASES, |rng| {
+        let mut tsd = TsdPredictor::new(rng.range(1, 512), rng.range(1, 8));
+        for s in 0..20 {
+            for d in 1..20 {
+                tsd.observe(s * 100, d, 1e-3 + 1e-6 * (s * 100) as f64 + 1e-4 * d as f64);
+            }
+        }
+        tsd.refit();
+        let batch = rng.range(1, 4);
+        let trees: Vec<CandidateTree> = (0..batch)
+            .map(|_| {
+                let mut t = random_tree(rng, 32);
+                for node in t.nodes.iter_mut() {
+                    node.w = node.dl;
+                }
+                t
+            })
+            .collect();
+        let refs: Vec<&CandidateTree> = trees.iter().collect();
+        let max_n = rng.range(1, 48);
+        let cfg = SelectorConfig::default();
+        let c = select_strategy(&cfg, &mut tsd, &refs, rng.below(5000), max_n);
+        assert!(c.n >= 1 && c.n <= max_n);
+        assert!(c.predicted_al >= 0.0);
+        assert!(c.predicted_al <= (c.n * batch) as f64 + 1e-9);
+        assert!(c.predicted_tsd > 0.0);
+    });
+}
+
+#[test]
+fn acceptance_predictor_always_in_unit_interval() {
+    check("accept-unit", 100, |rng| {
+        let mut p = AcceptancePredictor::new(rng.range(4, 32));
+        for _ in 0..rng.below(2000) {
+            p.observe(rng.f32(), rng.chance(0.5));
+        }
+        p.refit();
+        for _ in 0..50 {
+            let v = p.predict(rng.f32());
+            assert!((0.0..=1.0).contains(&v), "{v}");
+        }
+    });
+}
+
+#[test]
+fn greedy_acceptance_path_is_consistent() {
+    // Whatever logits we feed, the accepted path must be parent-linked and
+    // new_tokens = path tokens + bonus.
+    check("greedy-consistent", DEFAULT_CASES, |rng| {
+        let mut t = random_tree(rng, 16);
+        for node in t.nodes.iter_mut() {
+            node.w = node.dl;
+        }
+        let order = t.select_top_n(rng.range(1, t.len()));
+        let sel = t.selection(&order);
+        let v = 64;
+        let rows: Vec<Vec<f32>> = (0..sel.len())
+            .map(|_| (0..v).map(|_| rng.f32()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let out = accept_greedy(&sel, &refs);
+        assert_eq!(out.path[0], 0);
+        for w in out.path.windows(2) {
+            assert_eq!(sel.parents[w[1]], Some(w[0]), "path not parent-linked");
+        }
+        assert_eq!(out.new_tokens.len(), out.accepted_drafts + 1);
+        for (k, &p) in out.path.iter().skip(1).enumerate() {
+            assert_eq!(out.new_tokens[k], sel.tokens[p]);
+        }
+    });
+}
+
+#[test]
+fn stochastic_acceptance_same_invariants() {
+    check("stochastic-consistent", DEFAULT_CASES, |rng| {
+        let mut t = random_tree(rng, 16);
+        for node in t.nodes.iter_mut() {
+            node.w = node.dl;
+        }
+        let order = t.select_top_n(rng.range(1, t.len()));
+        let sel = t.selection(&order);
+        let v = 64; // tree tokens are drawn from 0..64
+        let probs: Vec<Vec<f32>> = (0..sel.len())
+            .map(|_| sampler::softmax(&(0..v).map(|_| rng.f32()).collect::<Vec<_>>(), 1.0))
+            .collect();
+        let draft_q: Vec<f32> = sel.order.iter().map(|&i| t.nodes[i].o).collect();
+        let dists: Vec<Vec<f32>> = vec![Vec::new(); sel.len()];
+        let out = accept_stochastic(&sel, &probs, &draft_q, &dists, rng);
+        assert_eq!(out.new_tokens.len(), out.accepted_drafts + 1);
+        assert!((0..v as i32).contains(&out.bonus));
+        for w in out.path.windows(2) {
+            assert_eq!(sel.parents[w[1]], Some(w[0]));
+        }
+    });
+}
+
+#[test]
+fn gae_zero_rewards_zero_values_zero_advantages() {
+    check("gae-zero", 100, |rng| {
+        let n = rng.range(1, 32);
+        let mask: Vec<f32> = (0..n).map(|_| if rng.chance(0.7) { 1.0 } else { 0.0 }).collect();
+        let (adv, ret) = gae(&vec![0.0; n], &vec![0.0; n], &mask, 1.0, 0.95);
+        assert!(adv.iter().all(|&a| a == 0.0));
+        assert!(ret.iter().all(|&r| r == 0.0));
+    });
+}
+
+#[test]
+fn gae_normalization_is_idempotent_scale() {
+    check("gae-norm", 100, |rng| {
+        let n = rng.range(3, 24);
+        let mut adv: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 5.0).collect();
+        let mask = vec![1.0f32; n];
+        normalize_advantages(&mut adv, &mask);
+        let mean: f32 = adv.iter().sum::<f32>() / n as f32;
+        assert!(mean.abs() < 1e-4, "{mean}");
+        let var: f32 = adv.iter().map(|a| a * a).sum::<f32>() / n as f32;
+        assert!((var - 1.0).abs() < 1e-2, "{var}");
+    });
+}
+
+#[test]
+fn json_roundtrip_random_trees() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        if depth == 0 {
+            return match rng.below(4) {
+                0 => Json::Null,
+                1 => Json::Bool(rng.chance(0.5)),
+                2 => Json::Num((rng.below(100000) as f64) / 8.0),
+                _ => Json::Str(format!("s{}\"\\\n{}", rng.below(100), "é")),
+            };
+        }
+        match rng.below(2) {
+            0 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json-roundtrip", DEFAULT_CASES, |rng| {
+        let j = random_json(rng, 3);
+        let s = j.to_string();
+        let j2 = Json::parse(&s).unwrap_or_else(|e| panic!("{e}: {s}"));
+        assert_eq!(j, j2);
+    });
+}
+
+#[test]
+fn config_overrides_roundtrip() {
+    check("config-roundtrip", 100, |rng| {
+        let mut overrides = BTreeMap::new();
+        let depth = rng.range(1, 12);
+        let cooldown = rng.range(1, 64);
+        overrides.insert("spec.max_depth".to_string(), depth.to_string());
+        overrides.insert("realloc.cooldown".to_string(), cooldown.to_string());
+        let cfg = RunConfig::load(None, &overrides).unwrap();
+        assert_eq!(cfg.spec.max_depth, depth);
+        assert_eq!(cfg.realloc.cooldown, cooldown);
+    });
+}
+
+#[test]
+fn sampler_topk_sorted_and_unique() {
+    check("topk", DEFAULT_CASES, |rng| {
+        let n = rng.range(1, 100);
+        let xs: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let k = rng.range(1, n);
+        let idx = sampler::top_k(&xs, k);
+        assert_eq!(idx.len(), k.min(n));
+        for w in idx.windows(2) {
+            assert!(xs[w[0]] >= xs[w[1]], "not descending");
+        }
+        let mut uniq = idx.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), idx.len());
+    });
+}
+
+#[test]
+fn softmax_is_distribution_under_any_input() {
+    check("softmax-dist", DEFAULT_CASES, |rng| {
+        let n = rng.range(1, 64);
+        let xs: Vec<f32> = (0..n)
+            .map(|_| (rng.normal() * 50.0) as f32)
+            .collect();
+        let p = sampler::softmax(&xs, 0.1 + rng.f32() * 5.0);
+        assert!(p.iter().all(|&x| x.is_finite() && x >= 0.0));
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+    });
+}

@@ -1,0 +1,113 @@
+//! Integration: the full RLHF pipeline on the tiny config.
+//!
+//! Covers the paper's complete workflow: actor pretraining, SSM
+//! distillation (which must produce real draft acceptances — the property
+//! the generation_integration tests cannot check with random weights),
+//! reward-model training, and generation → inference → training
+//! iterations with weight broadcast back to the fleet.
+
+use std::path::PathBuf;
+
+use rlhfspec::config::RunConfig;
+use rlhfspec::coordinator::instance::DecodeMode;
+use rlhfspec::rlhf::RlhfPipeline;
+
+fn tiny_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+}
+
+fn cfg() -> RunConfig {
+    let mut c = RunConfig::default();
+    c.rlhf.instances = 2;
+    c.rlhf.samples_per_iter = 6;
+    c.rlhf.max_new_tokens = 12;
+    c.rlhf.lr = 3e-4;
+    c.spec.max_depth = 3;
+    c.spec.max_draft = 8;
+    c.spec.greedy = false;
+    c.spec.temperature = 1.0;
+    c.realloc.cooldown = 4;
+    c.realloc.threshold = 2;
+    c.seed = 7;
+    c
+}
+
+#[test]
+fn full_rlhf_loop_runs_and_drafts_get_accepted() {
+    let mut p = RlhfPipeline::new(&tiny_dir(), cfg(), "gsm8k", 7).unwrap();
+
+    // Warm-up: losses must drop.
+    let lm = p.pretrain_actor(40, 3e-3).unwrap();
+    assert!(
+        lm.last().unwrap() < &(lm[0] * 0.9),
+        "pretrain loss did not drop: {:.3} -> {:.3}",
+        lm[0],
+        lm.last().unwrap()
+    );
+    p.freeze_reference().unwrap();
+
+    let dl = p.distill_draft(40, 3e-3).unwrap();
+    assert!(
+        dl.last().unwrap() < dl.first().unwrap(),
+        "distill loss did not drop: {dl:?}"
+    );
+
+    let rl = p.train_reward(15, 3e-3).unwrap();
+    assert!(rl.last().unwrap() < rl.first().unwrap(), "{rl:?}");
+
+    // Generation with the distilled draft: acceptance must be real now.
+    p.start_generation(DecodeMode::Adaptive).unwrap();
+    let (stats, report) = p.iteration().unwrap();
+    assert_eq!(report.finished.len(), 6);
+    assert!(
+        stats.accept_rate > 0.02,
+        "distilled draft should get acceptances, rate={}",
+        stats.accept_rate
+    );
+    assert!(stats.gen_secs > 0.0 && stats.train_secs > 0.0);
+    assert!(stats.mean_response_len > 0.0);
+
+    // Second iteration exercises weight broadcast + persistent workers.
+    let (stats2, report2) = p.iteration().unwrap();
+    assert_eq!(report2.finished.len(), 6);
+    assert!(stats2.iter == 2);
+    p.stop_generation();
+}
+
+#[test]
+fn rlhf_iteration_stats_are_consistent() {
+    let mut c = cfg();
+    c.rlhf.samples_per_iter = 4;
+    c.rlhf.instances = 1;
+    let mut p = RlhfPipeline::new(&tiny_dir(), c, "lmsys", 11).unwrap();
+    p.pretrain_actor(10, 3e-3).unwrap();
+    p.freeze_reference().unwrap();
+    p.distill_draft(10, 3e-3).unwrap();
+    p.start_generation(DecodeMode::Adaptive).unwrap();
+    let (stats, report) = p.iteration().unwrap();
+    assert!(stats.total_secs() > 0.0);
+    assert!((0.0..=1.0).contains(&stats.gen_fraction()));
+    assert!(stats.mean_reward.is_finite());
+    assert!(stats.ppo_loss.is_finite());
+    assert!(stats.value_loss.is_finite());
+    assert_eq!(report.finished.len(), 4);
+    // Every response is bounded and in-vocab.
+    for f in &report.finished {
+        assert!(f.response.len() <= 12);
+        assert!(f.response.iter().all(|&t| (0..64).contains(&t)));
+    }
+}
+
+#[test]
+fn ar_baseline_pipeline_also_works() {
+    let mut c = cfg();
+    c.rlhf.samples_per_iter = 4;
+    c.rlhf.instances = 1;
+    let mut p = RlhfPipeline::new(&tiny_dir(), c, "gsm8k", 13).unwrap();
+    p.pretrain_actor(5, 3e-3).unwrap();
+    p.freeze_reference().unwrap();
+    p.start_generation(DecodeMode::Ar).unwrap();
+    let (stats, report) = p.iteration().unwrap();
+    assert_eq!(report.finished.len(), 4);
+    assert_eq!(stats.accept_rate, 0.0); // AR proposes no drafts
+}

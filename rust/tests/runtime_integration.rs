@@ -1,0 +1,231 @@
+//! Integration: the rust runtime executes the AOT artifacts end-to-end.
+//!
+//! Requires `make artifacts` (tiny config). These tests validate the whole
+//! interchange contract: manifest-driven marshalling, HLO-text loading,
+//! PJRT execution, tuple decomposition and train-step state threading.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use rlhfspec::runtime::{Engine, HostTensor, Manifest, ModelStore};
+
+fn tiny() -> Rc<Manifest> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    Rc::new(Manifest::load(&dir).expect("run `make artifacts` first"))
+}
+
+fn stores<'a>(pairs: Vec<(&str, &'a ModelStore)>) -> BTreeMap<String, &'a ModelStore> {
+    pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect()
+}
+
+#[test]
+fn tree_forward_runs_and_shapes_match() {
+    let m = tiny();
+    let eng = Engine::new(m.clone()).unwrap();
+    let target = ModelStore::init(&m, "target", 1).unwrap();
+    let d = &m.target;
+    let (b, t) = (1usize, 4usize);
+
+    let kc = HostTensor::zeros_f32(vec![d.n_layers, b, d.n_heads, d.max_seq, d.d_head]);
+    let vc = kc.clone();
+    let tokens = HostTensor::i32(vec![b, t], vec![1, 2, 3, 4]);
+    let positions = HostTensor::i32(vec![b, t], vec![0, 1, 2, 3]);
+    let prefix = HostTensor::i32(vec![b], vec![0]);
+    // causal chain mask
+    let mut mask = vec![0f32; t * t];
+    for i in 0..t {
+        for j in 0..=i {
+            mask[i * t + j] = 1.0;
+        }
+    }
+    let tree_mask = HostTensor::f32(vec![b, t, t], mask);
+
+    let data: BTreeMap<&str, &HostTensor> = [
+        ("kc", &kc),
+        ("vc", &vc),
+        ("tokens", &tokens),
+        ("positions", &positions),
+        ("prefix_len", &prefix),
+        ("tree_mask", &tree_mask),
+    ]
+    .into_iter()
+    .collect();
+
+    let outs = eng
+        .run_artifact("target_tree_b1_t4", &stores(vec![("target", &target)]), &data)
+        .unwrap();
+    assert_eq!(outs.len(), 3);
+    assert_eq!(outs[0].shape, vec![b, t, d.vocab]);
+    assert_eq!(outs[1].shape, vec![d.n_layers, b, d.n_heads, t, d.d_head]);
+    assert!(outs[0].as_f32().iter().all(|x| x.is_finite()));
+    // Logits must differ across positions (the model is actually running).
+    let l = outs[0].as_f32();
+    assert!((l[0] - l[d.vocab]).abs() > 1e-7);
+}
+
+#[test]
+fn decode_step_depends_on_cache_state() {
+    // The same token at the same position must produce different logits
+    // under different committed prefixes — proves the cache inputs matter.
+    let m = tiny();
+    let eng = Engine::new(m.clone()).unwrap();
+    let target = ModelStore::init(&m, "target", 2).unwrap();
+    let d = &m.target;
+
+    let run = |kc: &HostTensor, vc: &HostTensor, plen: i32| -> Vec<f32> {
+        let tokens = HostTensor::i32(vec![1, 1], vec![5]);
+        let positions = HostTensor::i32(vec![1, 1], vec![plen]);
+        let prefix = HostTensor::i32(vec![1], vec![plen]);
+        let tree_mask = HostTensor::f32(vec![1, 1, 1], vec![1.0]);
+        let data: BTreeMap<&str, &HostTensor> = [
+            ("kc", kc),
+            ("vc", vc),
+            ("tokens", &tokens),
+            ("positions", &positions),
+            ("prefix_len", &prefix),
+            ("tree_mask", &tree_mask),
+        ]
+        .into_iter()
+        .collect();
+        let outs = eng
+            .run_artifact("target_tree_b1_t1", &stores(vec![("target", &target)]), &data)
+            .unwrap();
+        outs[0].as_f32().to_vec()
+    };
+
+    let zero = HostTensor::zeros_f32(vec![d.n_layers, 1, d.n_heads, d.max_seq, d.d_head]);
+    let a = run(&zero, &zero, 0);
+
+    let mut kc2 = zero.clone();
+    kc2.as_f32_mut().iter_mut().for_each(|x| *x = 0.3);
+    let b = run(&kc2, &kc2, 3);
+    let diff: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+    assert!(diff > 1e-3, "cache state had no effect (diff={diff})");
+}
+
+#[test]
+fn train_lm_step_reduces_loss_when_repeated() {
+    let m = tiny();
+    let eng = Engine::new(m.clone()).unwrap();
+    let mut target = ModelStore::init(&m, "target", 3).unwrap();
+    target.prepare_training();
+    let (b, s) = (m.train_batch, m.train_seq);
+
+    // A fixed batch to overfit.
+    let toks: Vec<i32> = (0..b * s).map(|i| ((i * 7 + 3) % m.target.vocab) as i32).collect();
+    let tokens = HostTensor::i32(vec![b, s], toks);
+    let mask = HostTensor::f32(vec![b, s], vec![1.0; b * s]);
+    let lr = HostTensor::scalar_f32(5e-3);
+
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        let step = target.step_tensor();
+        let data: BTreeMap<&str, &HostTensor> = [
+            ("tokens", &tokens),
+            ("loss_mask", &mask),
+            ("lr", &lr),
+            ("step", &step),
+        ]
+        .into_iter()
+        .collect();
+        let outs = eng
+            .run_artifact("target_train_lm", &stores(vec![("target", &target)]), &data)
+            .unwrap();
+        losses.push(outs[0].scalar());
+        target.apply_train_outputs(&outs, 1).unwrap();
+    }
+    assert!(losses[7] < losses[0], "{losses:?}");
+    assert!((target.step() - 8.0).abs() < 1e-6);
+}
+
+#[test]
+fn reward_and_value_forwards_run() {
+    let m = tiny();
+    let eng = Engine::new(m.clone()).unwrap();
+    let critic = ModelStore::init(&m, "critic", 4).unwrap();
+    let reward = ModelStore::init(&m, "reward", 5).unwrap();
+    let (b, s) = (m.train_batch, m.train_seq);
+
+    let tokens = HostTensor::i32(vec![b, s], vec![1; b * s]);
+    let data: BTreeMap<&str, &HostTensor> = [("tokens", &tokens)].into_iter().collect();
+    let v = eng
+        .run_artifact("critic_value", &stores(vec![("critic", &critic)]), &data)
+        .unwrap();
+    assert_eq!(v[0].shape, vec![b, s]);
+
+    let last = HostTensor::i32(vec![b], vec![(s - 1) as i32; b]);
+    let data: BTreeMap<&str, &HostTensor> =
+        [("tokens", &tokens), ("last_pos", &last)].into_iter().collect();
+    let r = eng
+        .run_artifact("reward_score", &stores(vec![("reward", &reward)]), &data)
+        .unwrap();
+    assert_eq!(r[0].shape, vec![b]);
+}
+
+#[test]
+fn store_checkpoint_roundtrip() {
+    let m = tiny();
+    let s1 = ModelStore::init(&m, "draft", 6).unwrap();
+    let dir = std::env::temp_dir().join("rlhfspec_test_ckpt.bin");
+    s1.save(&dir).unwrap();
+    let mut s2 = ModelStore::init(&m, "draft", 999).unwrap();
+    s2.load(&dir).unwrap();
+    let w1 = s1.weights_host().unwrap();
+    let w2 = s2.weights_host().unwrap();
+    for (a, b) in w1.iter().zip(&w2) {
+        assert_eq!(a, b);
+    }
+    std::fs::remove_file(&dir).ok();
+}
+
+#[test]
+fn missing_arg_is_reported() {
+    let m = tiny();
+    let eng = Engine::new(m.clone()).unwrap();
+    let target = ModelStore::init(&m, "target", 7).unwrap();
+    let data: BTreeMap<&str, &HostTensor> = BTreeMap::new();
+    let err = eng
+        .run_artifact("target_tree_b1_t1", &stores(vec![("target", &target)]), &data)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("missing data arg"));
+}
+
+#[test]
+fn wrong_shape_is_reported() {
+    let m = tiny();
+    let eng = Engine::new(m.clone()).unwrap();
+    let target = ModelStore::init(&m, "target", 8).unwrap();
+    let bad = HostTensor::zeros_i32(vec![1, 2]); // tokens should be [1,1]
+    let kc = HostTensor::zeros_f32(vec![
+        m.target.n_layers, 1, m.target.n_heads, m.target.max_seq, m.target.d_head,
+    ]);
+    let pos = HostTensor::zeros_i32(vec![1, 1]);
+    let plen = HostTensor::zeros_i32(vec![1]);
+    let mask = HostTensor::f32(vec![1, 1, 1], vec![1.0]);
+    let data: BTreeMap<&str, &HostTensor> = [
+        ("kc", &kc),
+        ("vc", &kc),
+        ("tokens", &bad),
+        ("positions", &pos),
+        ("prefix_len", &plen),
+        ("tree_mask", &mask),
+    ]
+    .into_iter()
+    .collect();
+    let err = eng
+        .run_artifact("target_tree_b1_t1", &stores(vec![("target", &target)]), &data)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("shape mismatch"), "{err:#}");
+}
+
+#[test]
+fn engine_stats_accumulate() {
+    let m = tiny();
+    let eng = Engine::new(m.clone()).unwrap();
+    assert_eq!(eng.compiled_count(), 0);
+    let _ = eng.executable("target_tree_b1_t1").unwrap();
+    assert_eq!(eng.compiled_count(), 1);
+    let st = eng.stats();
+    assert!(st["target_tree_b1_t1"].compile_secs > 0.0);
+}
