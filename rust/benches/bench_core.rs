@@ -1,0 +1,47 @@
+//! Bench: per-step scheduler overhead of `InstanceCore` on the sim
+//! backend — the wall cost of the shared control plane (admission, weight
+//! prediction, budget selection, retirement, bookkeeping) with no PJRT
+//! execution behind it. Tracked so the `DecodeBackend` abstraction's cost
+//! shows up in `BENCH_*.json` history.
+
+use rlhfspec::benchutil::{bench, black_box};
+use rlhfspec::sim::acceptance::AcceptanceModel;
+use rlhfspec::sim::cost_model::CostModel;
+use rlhfspec::sim::engine::{SimInstance, SimMode, SimParams, SimSample};
+
+fn main() {
+    for (label, mode) in [
+        ("ar", SimMode::Ar),
+        ("static8", SimMode::StaticSpec(8)),
+        ("adaptive", SimMode::Adaptive),
+    ] {
+        for &batch in &[1usize, 8, 32, 64] {
+            let mut inst = SimInstance::new(
+                0,
+                SimParams { mode, ..Default::default() },
+                CostModel::l40s_llama8b(),
+                AcceptanceModel::lmsys(),
+                7,
+            );
+            inst.profile_offline();
+            for k in 0..batch {
+                // Effectively endless samples: steady state at this batch.
+                inst.add(SimSample::new(k as u64, 128, usize::MAX / 2));
+            }
+            inst.step().unwrap(); // admit + first round
+            let r = bench(&format!("core/step/{label}/b{batch}"), 5, 200, || {
+                inst.step().unwrap();
+            });
+            // Scheduler wall time as a share of the *modeled* step it
+            // schedules (the abstraction must stay ≪ the step itself).
+            let virtual_step = inst.clock() / inst.steps as f64;
+            println!(
+                "  scheduler {:.1}µs/step vs modeled step {:.2}ms = {:.3}% overhead",
+                r.mean_ns / 1e3,
+                virtual_step * 1e3,
+                100.0 * (r.mean_ns / 1e9) / virtual_step
+            );
+            black_box(inst.metrics.tokens_out);
+        }
+    }
+}

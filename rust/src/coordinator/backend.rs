@@ -1,0 +1,130 @@
+//! The decode-backend abstraction behind [`super::core::InstanceCore`].
+//!
+//! The paper's contribution is the *control plane*: admission, AR vs.
+//! speculative stepping, candidate-tree weight prediction + budget
+//! selection (§5), migration-victim picking and the two-stage migration
+//! handshake (§6). That logic lives exactly once, in
+//! [`super::core::InstanceCore`], and is generic over this trait — the few
+//! genuinely backend-specific operations:
+//!
+//! * **PJRT plane** ([`super::instance::PjrtBackend`]) — prefill/draft/
+//!   verify are real executions of AOT-compiled HLO artifacts; KV lives in
+//!   per-sample [`crate::spec::kvcache::KvCache`]s; migration payloads are
+//!   packed [`crate::coordinator::migration::HierarchicalKv`] buffers;
+//!   time is the wall clock.
+//! * **Simulation plane** ([`crate::sim::engine::SimBackend`]) — drafting
+//!   is the calibrated synthetic tree process, verification is the
+//!   ground-truth acceptance walk, step durations come from the
+//!   [`crate::sim::cost_model::CostModel`], and time is a virtual clock —
+//!   so the *same* scheduler runs at 8–64 instances inside `cargo test`.
+//!
+//! Everything the selector, predictors and reallocator observe flows
+//! through [`SpecRound`], which keeps the learning loop identical on both
+//! planes.
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::InstanceMetrics;
+use crate::spec::tree::{CandidateTree, Selection};
+
+/// What one speculative round reports back to the shared control plane.
+#[derive(Clone, Debug, Default)]
+pub struct SpecRound {
+    /// `(draft logit, accepted?)` per selected non-root node — the online
+    /// training data of the acceptance predictor `F` (§5.2).
+    pub observations: Vec<(f32, bool)>,
+    /// Σ selection sizes fed to verification (the `N_draft` feature).
+    pub n_draft_total: usize,
+    /// Observed `t_sd` for this round: wall seconds on hardware, modeled
+    /// seconds (with measurement noise) in simulation.
+    pub tsd_secs: f64,
+}
+
+/// Backend-specific operations of one generation instance.
+///
+/// Associated functions that only *read* a sample take no `&self` so the
+/// control plane can call them while holding disjoint borrows of the
+/// backend and the sample lists.
+pub trait DecodeBackend {
+    /// Queued work that has not been admitted yet (no KV attached).
+    type Task;
+    /// A live decoding sample (KV/state attached).
+    type Sample;
+    /// A completed sample leaving the instance.
+    type Finished;
+    /// Backend-private context threaded from [`Self::draft`] to
+    /// [`Self::verify_accept`] (e.g. draft KV rows + distributions).
+    type DraftCtx;
+    /// Packed KV bytes crossing the interconnect during migration.
+    type KvPayload;
+    /// Control snapshot that resumes a sample on another instance
+    /// (Stage 2 of §6.2).
+    type Control;
+
+    // ---- identity & workload features --------------------------------
+    fn sample_id(s: &Self::Sample) -> u64;
+    /// Committed tokens (KV rows) — the selector's `N_seq` contribution
+    /// and the Stage-1 snapshot length.
+    fn committed_len(s: &Self::Sample) -> usize;
+    /// Prompt + generated tokens — the §6.1 migration-score length.
+    fn seq_len(s: &Self::Sample) -> usize;
+    /// Mean accepted drafts per round (§6.1 victim feature).
+    fn mean_accepted(s: &Self::Sample) -> f64;
+    fn is_done(s: &Self::Sample) -> bool;
+    fn finish(s: Self::Sample) -> Self::Finished;
+    fn control_of(s: &Self::Sample) -> Self::Control;
+
+    // ---- capacity / clock ---------------------------------------------
+    /// Decode-slot capacity (compiled batch bucket / simulated max batch).
+    fn capacity(&self) -> usize;
+    /// Upper bound for the selector's draft-budget search.
+    fn max_draft(&self) -> usize;
+    /// Normalizer for the §6.1 migration score.
+    fn max_seq(&self) -> usize;
+    /// Instance-local time: wall seconds since start (PJRT) or the
+    /// virtual clock (simulation).
+    fn now(&self) -> f64;
+
+    // ---- decode operations --------------------------------------------
+    /// Admit one task: run prefill, return the live sample.
+    fn prefill(&mut self, task: Self::Task, metrics: &mut InstanceMetrics)
+        -> Result<Self::Sample>;
+    /// One autoregressive round over the live batch.
+    fn step_ar(&mut self, live: &mut [Self::Sample], metrics: &mut InstanceMetrics)
+        -> Result<()>;
+    /// Expand one candidate tree per live sample (draft model).
+    fn draft(&mut self, live: &mut [Self::Sample], metrics: &mut InstanceMetrics)
+        -> Result<(Vec<CandidateTree>, Self::DraftCtx)>;
+    /// Verify the selected subtrees, run acceptance, commit accepted KV,
+    /// and update per-sample/-instance counters.
+    fn verify_accept(
+        &mut self,
+        live: &mut [Self::Sample],
+        trees: &[CandidateTree],
+        ctx: Self::DraftCtx,
+        selections: &[Selection],
+        metrics: &mut InstanceMetrics,
+    ) -> Result<SpecRound>;
+    /// Live-batch composition changed (admit / retire / migrate): backends
+    /// with batched device state invalidate it here.
+    fn on_batch_change(&mut self) {}
+
+    // ---- two-stage KV migration (§6.2) --------------------------------
+    /// Bytes of rows `[from, to)` of one sample's caches (AllocReq sizing
+    /// and the simulated transfer model).
+    fn kv_bytes(&self, s: &Self::Sample, from: usize, to: usize) -> usize;
+    /// Pack the given row ranges of several samples into one transferable
+    /// payload (Stage 1 packs `(0, snapshot)`, Stage 2 the delta).
+    fn kv_extract(&self, items: &[(&Self::Sample, (usize, usize))]) -> Self::KvPayload;
+    /// Destination, Stage 1: stash the bulk payload until Stage 2 arrives.
+    /// The payload itself carries the sample ids it packs.
+    fn stage1_store(&mut self, from: usize, kv: Self::KvPayload) -> Result<()>;
+    /// Destination, Stage 2: merge the delta into the stashed bulk and
+    /// rebuild resumable samples from the control snapshots.
+    fn stage2_restore(
+        &mut self,
+        from: usize,
+        delta: Self::KvPayload,
+        control: Vec<Self::Control>,
+    ) -> Result<Vec<Self::Sample>>;
+}

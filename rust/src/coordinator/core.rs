@@ -1,0 +1,485 @@
+//! The single implementation of the adaptive decode loop and the §6.2
+//! migration state machine, generic over [`DecodeBackend`].
+//!
+//! [`InstanceCore`] owns everything the paper calls the control plane:
+//!
+//! * **admission** — parked (migrated-in) samples first, then waiting
+//!   tasks, into free decode slots;
+//! * **stepping** — AR baseline or the speculative round: draft →
+//!   `w = F(dl)` weight prediction (§5.2) → workload-aware budget
+//!   selection (§5.3) → verify/accept → commit;
+//! * **online learning** — every round feeds the acceptance predictor and
+//!   the `t_sd` regression, refit on a fixed cadence;
+//! * **migration endpoint** — victim picking by the §6.1 score and the
+//!   full `AllocReq → AllocAck → Stage1 → Stage2` handshake of §6.2,
+//!   expressed as pure state transitions so both the threaded PJRT driver
+//!   and the virtual-clock simulation cluster pump the *same* code.
+//!
+//! The backend ([`crate::coordinator::instance::PjrtBackend`] or
+//! [`crate::sim::engine::SimBackend`]) only supplies prefill/draft/verify
+//! execution, KV packing and the clock.
+
+use anyhow::Result;
+
+use crate::config::SelectorConfig;
+use crate::coordinator::backend::DecodeBackend;
+use crate::coordinator::metrics::{InstanceMetrics, Stopwatch};
+use crate::coordinator::migration::{migration_score, AllocRequest};
+use crate::coordinator::predictor::{AcceptancePredictor, TsdPredictor};
+use crate::coordinator::selector;
+use crate::spec::tree::{CandidateTree, Selection};
+
+/// How an instance decodes (baselines + ablations share the substrate).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DecodeMode {
+    /// Autoregressive decoding (Verl/OpenRLHF-like generation).
+    Ar,
+    /// Speculative decoding with a fixed draft-token budget.
+    StaticSpec(usize),
+    /// Full RLHFSpec: workload-aware drafting-strategy selection.
+    Adaptive,
+}
+
+/// Stage 1 of an outbound migration: the bulk KV snapshot. The victims
+/// keep decoding on the source while this transfers.
+pub struct Stage1Msg<B: DecodeBackend> {
+    pub from: usize,
+    pub to: usize,
+    /// Bulk payload; carries the packed sample ids itself.
+    pub kv: B::KvPayload,
+}
+
+/// Stage 2 of an outbound migration: the KV delta generated since the
+/// Stage-1 snapshot plus control state — after this the samples live on
+/// the destination. Queue-only moves (waiting tasks, no KV) are a Stage-2
+/// message with `kv_delta = None`.
+pub struct Stage2Msg<B: DecodeBackend> {
+    pub from: usize,
+    pub to: usize,
+    pub kv_delta: Option<B::KvPayload>,
+    pub control: Vec<B::Control>,
+    pub waiting_tasks: Vec<B::Task>,
+}
+
+/// Outcome of [`InstanceCore::begin_migration`] on the source.
+pub enum MigrateStart<B: DecodeBackend> {
+    /// Nothing to move.
+    Refused,
+    /// Only queued tasks move: no KV, no handshake — a single Stage-2
+    /// message carries them.
+    QueueOnly(Stage2Msg<B>),
+    /// Live victims picked: run the §6.2 allocation handshake first.
+    AllocReq(AllocRequest),
+}
+
+/// Outcome of [`InstanceCore::handle_alloc_ack`] on the source.
+pub enum AckOutcome<B: DecodeBackend> {
+    /// No migration was pending (stale ack).
+    NoPending,
+    /// Destination refused: waiting tasks were returned to the queue.
+    Refused,
+    /// Stage 1 is ready to transfer; victims keep decoding until
+    /// [`InstanceCore::poll_stage2`] is pumped at a step boundary.
+    Stage1(Stage1Msg<B>),
+}
+
+/// In-flight outbound migration state on the source instance.
+struct MigOutState<B: DecodeBackend> {
+    to: usize,
+    live_ids: Vec<u64>,
+    /// Committed length of each victim at decision time (Stage-1 range).
+    snapshots: Vec<usize>,
+    waiting_tasks: Vec<B::Task>,
+    stage1_sent: bool,
+}
+
+/// One generation instance: the adaptive decode loop over any backend.
+pub struct InstanceCore<B: DecodeBackend> {
+    pub id: usize,
+    pub backend: B,
+    pub mode: DecodeMode,
+    pub selector: SelectorConfig,
+    /// Samples in decode slots.
+    pub live: Vec<B::Sample>,
+    /// Migrated-in samples with KV, waiting for a free decode slot.
+    pub parked: Vec<B::Sample>,
+    /// Queued tasks, not yet prefetched.
+    pub waiting: Vec<B::Task>,
+    pub finished: Vec<B::Finished>,
+    pub accept_pred: AcceptancePredictor,
+    pub tsd_pred: TsdPredictor,
+    pub metrics: InstanceMetrics,
+    pub steps: usize,
+    steps_since_refit: usize,
+    mig_out: Option<MigOutState<B>>,
+}
+
+impl<B: DecodeBackend> InstanceCore<B> {
+    pub fn with_backend(id: usize, backend: B, mode: DecodeMode, selector: SelectorConfig) -> Self {
+        InstanceCore {
+            id,
+            mode,
+            accept_pred: AcceptancePredictor::new(24),
+            tsd_pred: TsdPredictor::new(selector.nseq_bucket, selector.ndraft_bucket),
+            selector,
+            backend,
+            live: Vec::new(),
+            parked: Vec::new(),
+            waiting: Vec::new(),
+            finished: Vec::new(),
+            metrics: InstanceMetrics::default(),
+            steps: 0,
+            steps_since_refit: 0,
+            mig_out: None,
+        }
+    }
+
+    /// Decoding-slot capacity.
+    pub fn capacity(&self) -> usize {
+        self.backend.capacity()
+    }
+
+    /// Total assigned samples (decoding + parked + waiting) — the
+    /// reallocator's "sample count" for this instance.
+    pub fn sample_count(&self) -> usize {
+        self.live.len() + self.parked.len() + self.waiting.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.live.is_empty() && self.parked.is_empty() && self.waiting.is_empty()
+    }
+
+    pub fn add_task(&mut self, task: B::Task) {
+        self.waiting.push(task);
+    }
+
+    /// One full scheduler step: admit + prefill, then one decode round.
+    pub fn step(&mut self) -> Result<()> {
+        self.admit()?;
+        if self.live.is_empty() {
+            return Ok(());
+        }
+        match self.mode {
+            DecodeMode::Ar => self.backend.step_ar(&mut self.live, &mut self.metrics)?,
+            DecodeMode::StaticSpec(_) | DecodeMode::Adaptive => self.step_spec()?,
+        }
+        self.retire_finished();
+        self.steps += 1;
+        self.steps_since_refit += 1;
+        if self.selector.enabled && self.steps_since_refit >= self.selector.refit_every.max(1) {
+            self.accept_pred.refit();
+            self.tsd_pred.refit();
+            self.steps_since_refit = 0;
+        }
+        self.metrics.trace.push((
+            self.backend.now(),
+            self.metrics.tokens_out,
+            self.sample_count(),
+        ));
+        Ok(())
+    }
+
+    /// Admit parked (migrated-in, already prefilled) then waiting samples
+    /// into free decode slots.
+    fn admit(&mut self) -> Result<()> {
+        let cap = self.backend.capacity();
+        while self.live.len() < cap && !self.parked.is_empty() {
+            let s = self.parked.remove(0);
+            self.live.push(s);
+            self.backend.on_batch_change();
+        }
+        while self.live.len() < cap && !self.waiting.is_empty() {
+            let task = self.waiting.remove(0);
+            let s = self.backend.prefill(task, &mut self.metrics)?;
+            self.live.push(s);
+            self.backend.on_batch_change();
+        }
+        Ok(())
+    }
+
+    /// One speculative round (static or adaptive budget).
+    fn step_spec(&mut self) -> Result<()> {
+        // ---- 1. draft: expand candidate trees -------------------------
+        let (mut trees, ctx) = self.backend.draft(&mut self.live, &mut self.metrics)?;
+
+        // ---- 2. node weights w = F(dl) (§5.2) -------------------------
+        for tree in trees.iter_mut() {
+            for node in tree.nodes.iter_mut() {
+                node.w = if node.parent.is_none() {
+                    1.0
+                } else {
+                    self.accept_pred.predict(node.dl)
+                };
+            }
+        }
+
+        // ---- 3. strategy selection (§5.3) -----------------------------
+        let n_seq: usize = self.live.iter().map(B::committed_len).sum();
+        let max_n = self.backend.max_draft().max(1);
+        let n = match self.mode {
+            DecodeMode::StaticSpec(n) => n.clamp(1, max_n),
+            DecodeMode::Adaptive => {
+                let mut sw = Stopwatch::start();
+                let refs: Vec<&CandidateTree> = trees.iter().collect();
+                let choice = selector::select_strategy(
+                    &self.selector,
+                    &mut self.tsd_pred,
+                    &refs,
+                    n_seq,
+                    max_n,
+                );
+                self.metrics.select_secs += sw.lap();
+                choice.n
+            }
+            DecodeMode::Ar => unreachable!("step_spec in AR mode"),
+        };
+
+        // ---- 4./5. verify + accept + commit ---------------------------
+        let selections: Vec<Selection> = trees
+            .iter()
+            .map(|t| t.selection(&t.select_top_n(n)))
+            .collect();
+        let round =
+            self.backend
+                .verify_accept(&mut self.live, &trees, ctx, &selections, &mut self.metrics)?;
+
+        // ---- 6. online learning ---------------------------------------
+        self.tsd_pred.observe(n_seq, round.n_draft_total, round.tsd_secs);
+        for &(dl, ok) in &round.observations {
+            self.accept_pred.observe(dl, ok);
+        }
+        Ok(())
+    }
+
+    /// Move finished samples out of the live set.
+    fn retire_finished(&mut self) {
+        let mut i = 0;
+        while i < self.live.len() {
+            if B::is_done(&self.live[i]) {
+                let s = self.live.remove(i);
+                self.metrics.samples_finished += 1;
+                self.finished.push(B::finish(s));
+                self.backend.on_batch_change();
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Remove a live sample by id (migration out). Returns it.
+    pub fn take_live(&mut self, id: u64) -> Option<B::Sample> {
+        let pos = self.live.iter().position(|s| B::sample_id(s) == id)?;
+        self.backend.on_batch_change();
+        Some(self.live.remove(pos))
+    }
+
+    fn take_live_or_parked(&mut self, id: u64) -> Option<B::Sample> {
+        self.take_live(id).or_else(|| {
+            self.parked
+                .iter()
+                .position(|p| B::sample_id(p) == id)
+                .map(|i| self.parked.remove(i))
+        })
+    }
+
+    fn find_sample(&self, id: u64) -> Option<&B::Sample> {
+        self.live
+            .iter()
+            .chain(self.parked.iter())
+            .find(|s| B::sample_id(s) == id)
+    }
+
+    /// Park a migrated-in sample (admitted when a decode slot frees up).
+    pub fn insert_parked(&mut self, s: B::Sample) {
+        self.parked.push(s);
+        self.metrics.samples_migrated_in += 1;
+    }
+
+    /// Run until every assigned sample finishes; returns finished count.
+    pub fn run_to_completion(&mut self, max_steps: usize) -> Result<usize> {
+        let mut steps = 0;
+        while !self.is_idle() && steps < max_steps {
+            self.step()?;
+            steps += 1;
+        }
+        Ok(self.finished.len())
+    }
+
+    // ------------------------------------------------------------------
+    // §6.2 migration endpoint (source side)
+    // ------------------------------------------------------------------
+
+    /// Source: pick victims (waiting tasks first — no KV to move — then
+    /// live/parked samples by the §6.1 score) and open the handshake.
+    pub fn begin_migration(&mut self, to: usize, count: usize) -> MigrateStart<B> {
+        // One outbound migration at a time (§6.1's m(k) ≤ 1): starting a
+        // second would overwrite the Stage-1 state and strand its victims.
+        if self.mig_out.is_some() {
+            return MigrateStart::Refused;
+        }
+        let mut remaining = count;
+        let mut waiting_tasks: Vec<B::Task> = Vec::new();
+        while remaining > 0 && !self.waiting.is_empty() {
+            waiting_tasks.push(self.waiting.pop().expect("non-empty waiting queue"));
+            remaining -= 1;
+        }
+        // Live victims by the §6.1 score: short sequences, low accept rate.
+        let max_seq = self.backend.max_seq();
+        let mut scored: Vec<(f64, u64)> = self
+            .live
+            .iter()
+            .chain(self.parked.iter())
+            .map(|s| {
+                (
+                    migration_score(B::seq_len(s), B::mean_accepted(s), max_seq),
+                    B::sample_id(s),
+                )
+            })
+            .collect();
+        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        let live_ids: Vec<u64> = scored.iter().take(remaining).map(|&(_, id)| id).collect();
+
+        if waiting_tasks.is_empty() && live_ids.is_empty() {
+            return MigrateStart::Refused;
+        }
+        if live_ids.is_empty() {
+            // Queue-only transfer: no KV, no handshake needed.
+            self.metrics.samples_migrated_out += waiting_tasks.len() as u64;
+            return MigrateStart::QueueOnly(Stage2Msg {
+                from: self.id,
+                to,
+                kv_delta: None,
+                control: Vec::new(),
+                waiting_tasks,
+            });
+        }
+        let snapshots: Vec<usize> = live_ids
+            .iter()
+            .map(|id| self.find_sample(*id).map(B::committed_len).unwrap_or(0))
+            .collect();
+        let bytes: usize = live_ids
+            .iter()
+            .zip(&snapshots)
+            .map(|(id, &snap)| {
+                self.find_sample(*id)
+                    .map(|s| self.backend.kv_bytes(s, 0, snap))
+                    .unwrap_or(0)
+            })
+            .sum();
+        let req = AllocRequest {
+            from_instance: self.id,
+            sample_ids: live_ids.clone(),
+            bytes,
+        };
+        self.mig_out = Some(MigOutState {
+            to,
+            live_ids,
+            snapshots,
+            waiting_tasks,
+            stage1_sent: false,
+        });
+        MigrateStart::AllocReq(req)
+    }
+
+    /// Destination: §6.2 phase-2 capacity check for an alloc request.
+    /// Accept if total samples stay within 4× decode slots (the
+    /// instance's practical memory budget).
+    pub fn handle_alloc_req(&self, req: &AllocRequest) -> bool {
+        self.sample_count() + req.sample_ids.len() <= self.backend.capacity() * 4
+    }
+
+    /// Source: the destination answered the alloc request. On success,
+    /// pack Stage 1 (the verified-KV snapshot); the victims keep decoding
+    /// until [`Self::poll_stage2`].
+    pub fn handle_alloc_ack(&mut self, ok: bool) -> AckOutcome<B> {
+        let Some(mut state) = self.mig_out.take() else {
+            return AckOutcome::NoPending;
+        };
+        if !ok {
+            // Clear buffers, give waiting tasks back, report refusal.
+            self.waiting.extend(state.waiting_tasks.drain(..));
+            return AckOutcome::Refused;
+        }
+        let kv = {
+            let mut items: Vec<(&B::Sample, (usize, usize))> = Vec::new();
+            for (id, &snap) in state.live_ids.iter().zip(&state.snapshots) {
+                if let Some(s) = self.find_sample(*id) {
+                    items.push((s, (0, snap)));
+                }
+            }
+            self.backend.kv_extract(&items)
+        };
+        let msg = Stage1Msg { from: self.id, to: state.to, kv };
+        state.stage1_sent = true;
+        self.mig_out = Some(state);
+        AckOutcome::Stage1(msg)
+    }
+
+    /// Source, at a step boundary after Stage 1: remove the victims and
+    /// emit the Stage-2 delta + control. Victims that finished during the
+    /// overlapped step stay local (they were retired normally).
+    pub fn poll_stage2(&mut self) -> Option<Stage2Msg<B>> {
+        let state = self.mig_out.take()?;
+        if !state.stage1_sent {
+            self.mig_out = Some(state);
+            return None;
+        }
+        let mut victims: Vec<(B::Sample, usize)> = Vec::new();
+        for (id, &snap) in state.live_ids.iter().zip(&state.snapshots) {
+            if let Some(s) = self.take_live_or_parked(*id) {
+                victims.push((s, snap));
+            }
+        }
+        let mut control = Vec::with_capacity(victims.len());
+        let kv_delta = {
+            let mut items: Vec<(&B::Sample, (usize, usize))> = Vec::new();
+            for (v, snap) in victims.iter() {
+                let upto = B::committed_len(v);
+                items.push((v, (*snap, upto)));
+                control.push(B::control_of(v));
+            }
+            self.backend.kv_extract(&items)
+        };
+        // Count what actually ships: victims that finished during the
+        // overlap step stayed local and were retired, not migrated.
+        self.metrics.samples_migrated_out +=
+            (control.len() + state.waiting_tasks.len()) as u64;
+        Some(Stage2Msg {
+            from: self.id,
+            to: state.to,
+            kv_delta: Some(kv_delta),
+            control,
+            waiting_tasks: state.waiting_tasks,
+        })
+    }
+
+    /// True while an outbound migration is between Stage 1 and Stage 2.
+    pub fn migration_pending(&self) -> bool {
+        self.mig_out.is_some()
+    }
+
+    // ------------------------------------------------------------------
+    // §6.2 migration endpoint (destination side)
+    // ------------------------------------------------------------------
+
+    /// Destination: stash the Stage-1 bulk payload (phase 3 unpack).
+    pub fn handle_stage1(&mut self, msg: Stage1Msg<B>) -> Result<()> {
+        self.backend.stage1_store(msg.from, msg.kv)
+    }
+
+    /// Destination: merge the Stage-2 delta, rebuild and park the
+    /// migrated samples, and enqueue transferred waiting tasks.
+    pub fn handle_stage2(&mut self, msg: Stage2Msg<B>) -> Result<()> {
+        self.metrics.samples_migrated_in += msg.waiting_tasks.len() as u64;
+        for t in msg.waiting_tasks {
+            self.waiting.push(t);
+        }
+        if let Some(delta) = msg.kv_delta {
+            let samples = self.backend.stage2_restore(msg.from, delta, msg.control)?;
+            for s in samples {
+                self.insert_parked(s);
+            }
+        }
+        Ok(())
+    }
+}

@@ -22,6 +22,12 @@
 //!     ├──── DeliverStage2 ───────────────────────────▶ resume samples
 //! ```
 //!
+//! The endpoint state machine (victim picking, handshake sequencing,
+//! Stage-1/Stage-2 packing and restore) lives in
+//! [`InstanceCore`](crate::coordinator::core::InstanceCore), shared with
+//! the virtual-clock simulation cluster — the worker threads here only
+//! pump commands/events between the monitor and that endpoint.
+//!
 //! Initial allocation is sequential round-robin (paper §4: "training
 //! samples are first sequentially allocated to the generation instances").
 
@@ -33,17 +39,14 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::config::RunConfig;
+use crate::coordinator::core::{AckOutcome, MigrateStart, Stage1Msg, Stage2Msg};
 use crate::coordinator::instance::{
-    DecodeMode, FinishedSample, GenerationInstance, LiveSample, SampleTask,
+    DecodeMode, FinishedSample, GenerationInstance, PjrtBackend, SampleTask,
 };
 use crate::coordinator::metrics::InstanceMetrics;
-use crate::coordinator::migration::{
-    migration_score, pack_hierarchical, unpack_hierarchical, AllocRequest, HierarchicalKv,
-    SampleControl,
-};
+use crate::coordinator::migration::AllocRequest;
 use crate::coordinator::reallocator::Reallocator;
 use crate::runtime::{HostTensor, Manifest, ModelStore};
-use crate::spec::kvcache::KvCache;
 use crate::utils::stats::Ema;
 
 // ---------------------------------------------------------------------------
@@ -55,25 +58,13 @@ enum Cmd {
     MigrateOut { to: usize, count: usize },
     AllocAck { ok: bool },
     DeliverAllocReq(AllocRequest),
-    DeliverStage1(Stage1Pkt),
-    DeliverStage2(Stage2Pkt),
+    DeliverStage1(Stage1Msg<PjrtBackend>),
+    DeliverStage2(Stage2Msg<PjrtBackend>),
     /// Broadcast fresh actor/draft weights (next RLHF iteration).
     UpdateWeights(Vec<HostTensor>, Vec<HostTensor>),
     /// Emit a Done report for the current batch but keep running.
     Report,
     Stop,
-}
-
-struct Stage1Pkt {
-    from: usize,
-    kv: HierarchicalKv,
-}
-
-struct Stage2Pkt {
-    from: usize,
-    kv_delta: HierarchicalKv,
-    control: Vec<SampleControl>,
-    waiting_tasks: Vec<SampleTask>,
 }
 
 enum Event {
@@ -93,11 +84,11 @@ enum Event {
     },
     Stage1 {
         to: usize,
-        pkt: Stage1Pkt,
+        pkt: Stage1Msg<PjrtBackend>,
     },
     Stage2 {
         to: usize,
-        pkt: Stage2Pkt,
+        pkt: Stage2Msg<PjrtBackend>,
     },
     MigrationRefused,
     Done {
@@ -140,12 +131,22 @@ pub struct GenerationReport {
 }
 
 impl GenerationReport {
+    /// Tokens per wall second (0 when no time elapsed).
     pub fn throughput_tokens(&self) -> f64 {
-        self.total_tokens as f64 / self.wall_secs.max(1e-9)
+        if self.wall_secs <= 0.0 {
+            0.0
+        } else {
+            self.total_tokens as f64 / self.wall_secs
+        }
     }
 
+    /// Finished samples per wall second (0 when no time elapsed).
     pub fn throughput_samples(&self) -> f64 {
-        self.finished.len() as f64 / self.wall_secs.max(1e-9)
+        if self.wall_secs <= 0.0 {
+            0.0
+        } else {
+            self.finished.len() as f64 / self.wall_secs
+        }
     }
 }
 
@@ -153,21 +154,10 @@ impl GenerationReport {
 // Worker
 // ---------------------------------------------------------------------------
 
-struct MigOutState {
-    to: usize,
-    live_ids: Vec<u64>,
-    snapshots: Vec<usize>,
-    waiting_tasks: Vec<SampleTask>,
-    stage1_sent: bool,
-}
-
 struct Worker {
-    inst: GenerationInstance,
+    core: GenerationInstance,
     cmds: Receiver<Cmd>,
     events: Sender<Event>,
-    mig_out: Option<MigOutState>,
-    /// Stage-1 buffers keyed by source instance: (draft,target) caches + ids.
-    mig_in_kv: BTreeMap<usize, (Vec<(KvCache, KvCache)>, Vec<u64>)>,
     throughput: Ema,
     last_tokens: u64,
 }
@@ -185,7 +175,7 @@ impl Worker {
                     Ok(cmd) => {
                         if let Err(e) = self.handle(cmd) {
                             let _ = self.events.send(Event::Fatal {
-                                instance: self.inst.id,
+                                instance: self.core.id,
                                 error: format!("{e:#}"),
                             });
                             return;
@@ -199,18 +189,10 @@ impl Worker {
                 }
             }
 
-            if self.inst.is_idle() {
+            if self.core.is_idle() {
                 // Flush any Stage-2 that was waiting on a step boundary
                 // (all victims may have finished during the overlap step).
-                if let Some(state) = self.mig_out.take() {
-                    if state.stage1_sent {
-                        if self.send_stage2(state).is_err() {
-                            return;
-                        }
-                    } else {
-                        self.mig_out = Some(state);
-                    }
-                }
+                self.pump_stage2();
                 // Nothing to do: block briefly for commands.
                 match self.cmds.recv_timeout(Duration::from_millis(5)) {
                     Ok(Cmd::Stop) => {
@@ -220,7 +202,7 @@ impl Worker {
                     Ok(cmd) => {
                         if let Err(e) = self.handle(cmd) {
                             let _ = self.events.send(Event::Fatal {
-                                instance: self.inst.id,
+                                instance: self.core.id,
                                 error: format!("{e:#}"),
                             });
                             return;
@@ -232,40 +214,35 @@ impl Worker {
             }
 
             let t0 = Instant::now();
-            if let Err(e) = self.inst.step() {
+            if let Err(e) = self.core.step() {
                 let _ = self.events.send(Event::Fatal {
-                    instance: self.inst.id,
+                    instance: self.core.id,
                     error: format!("{e:#}"),
                 });
                 return;
             }
             let dt = t0.elapsed().as_secs_f64().max(1e-9);
-            let new_tokens = self.inst.metrics.tokens_out - self.last_tokens;
-            self.last_tokens = self.inst.metrics.tokens_out;
+            let new_tokens = self.core.metrics.tokens_out - self.last_tokens;
+            self.last_tokens = self.core.metrics.tokens_out;
             let tp = self.throughput.update(new_tokens as f64 / dt);
 
             // Stage 2 of an in-flight outbound migration fires at the step
             // boundary after Stage 1 (the overlapped decode step).
-            if let Some(state) = self.mig_out.take() {
-                if state.stage1_sent {
-                    if let Err(e) = self.send_stage2(state) {
-                        let _ = self.events.send(Event::Fatal {
-                            instance: self.inst.id,
-                            error: format!("{e:#}"),
-                        });
-                        return;
-                    }
-                } else {
-                    self.mig_out = Some(state);
-                }
-            }
+            self.pump_stage2();
 
             let _ = self.events.send(Event::Progress {
-                instance: self.inst.id,
-                sample_count: self.inst.sample_count(),
+                instance: self.core.id,
+                sample_count: self.core.sample_count(),
                 throughput: tp,
-                finished: self.inst.finished.len(),
+                finished: self.core.finished.len(),
             });
+        }
+    }
+
+    /// Emit a pending Stage-2 packet, if the endpoint has one ready.
+    fn pump_stage2(&mut self) {
+        if let Some(pkt) = self.core.poll_stage2() {
+            let _ = self.events.send(Event::Stage2 { to: pkt.to, pkt });
         }
     }
 
@@ -273,59 +250,41 @@ impl Worker {
         match cmd {
             Cmd::Add(tasks) => {
                 for t in tasks {
-                    self.inst.add_task(t);
+                    self.core.add_task(t);
                 }
             }
-            Cmd::MigrateOut { to, count } => self.begin_migration(to, count)?,
-            Cmd::AllocAck { ok } => self.on_alloc_ack(ok)?,
+            Cmd::MigrateOut { to, count } => match self.core.begin_migration(to, count) {
+                MigrateStart::Refused => {
+                    let _ = self.events.send(Event::MigrationRefused);
+                }
+                MigrateStart::QueueOnly(pkt) => {
+                    let _ = self.events.send(Event::Stage2 { to: pkt.to, pkt });
+                }
+                MigrateStart::AllocReq(req) => {
+                    let _ = self.events.send(Event::AllocReq { to, req });
+                }
+            },
+            Cmd::AllocAck { ok } => match self.core.handle_alloc_ack(ok) {
+                AckOutcome::NoPending => {}
+                AckOutcome::Refused => {
+                    let _ = self.events.send(Event::MigrationRefused);
+                }
+                AckOutcome::Stage1(pkt) => {
+                    let _ = self.events.send(Event::Stage1 { to: pkt.to, pkt });
+                }
+            },
             Cmd::DeliverAllocReq(req) => {
-                // Capacity check: accept if total samples stay within 4×
-                // decode slots (the instance's practical memory budget).
-                let cap = self.inst.capacity() * 4;
-                let ok = self.inst.sample_count() + req.sample_ids.len() <= cap;
+                let ok = self.core.handle_alloc_req(&req);
                 let _ = self.events.send(Event::AllocAck {
                     to_source: req.from_instance,
                     ok,
                 });
             }
-            Cmd::DeliverStage1(pkt) => {
-                // Phase 3: unpack into fresh per-sample caches immediately.
-                let man = self.inst.engine.manifest.clone();
-                let n = pkt.kv.spans.len();
-                let mut caches: Vec<(KvCache, KvCache)> = (0..n)
-                    .map(|_| {
-                        (
-                            KvCache::new(
-                                man.draft.n_layers,
-                                man.draft.n_heads,
-                                man.draft.max_seq,
-                                man.draft.d_head,
-                            ),
-                            KvCache::new(
-                                man.target.n_layers,
-                                man.target.n_heads,
-                                man.target.max_seq,
-                                man.target.d_head,
-                            ),
-                        )
-                    })
-                    .collect();
-                {
-                    let mut drafts: Vec<&mut KvCache> = Vec::new();
-                    let mut targets: Vec<&mut KvCache> = Vec::new();
-                    for (d, t) in caches.iter_mut() {
-                        drafts.push(d);
-                        targets.push(t);
-                    }
-                    unpack_hierarchical(&pkt.kv, &mut drafts, &mut targets);
-                }
-                let ids = pkt.kv.spans.iter().map(|s| s.id).collect();
-                self.mig_in_kv.insert(pkt.from, (caches, ids));
-            }
-            Cmd::DeliverStage2(pkt) => self.finish_migration_in(pkt)?,
+            Cmd::DeliverStage1(pkt) => self.core.handle_stage1(pkt)?,
+            Cmd::DeliverStage2(pkt) => self.core.handle_stage2(pkt)?,
             Cmd::UpdateWeights(tw, dw) => {
-                self.inst.target.set_weights(&tw)?;
-                self.inst.draft.set_weights(&dw)?;
+                self.core.backend.target.set_weights(&tw)?;
+                self.core.backend.draft.set_weights(&dw)?;
             }
             Cmd::Report => self.report_batch(),
             Cmd::Stop => unreachable!("handled by caller"),
@@ -335,248 +294,21 @@ impl Worker {
 
     /// Emit a Done event for the finished-so-far batch without stopping.
     fn report_batch(&mut self) {
-        let fig7_curve = self.inst.accept_pred.curve();
-        let accept_corr = self.inst.accept_pred.correlation();
+        let fig7_curve = self.core.accept_pred.curve();
+        let accept_corr = self.core.accept_pred.correlation();
         let _ = self.events.send(Event::Done {
-            instance: self.inst.id,
-            finished: std::mem::take(&mut self.inst.finished),
-            metrics: Box::new(self.inst.metrics.clone()),
+            instance: self.core.id,
+            finished: std::mem::take(&mut self.core.finished),
+            metrics: Box::new(self.core.metrics.clone()),
             fig7_curve,
             accept_corr,
-            tsd_cache_hits: self.inst.tsd_pred.cache_hits,
-            tsd_cache_misses: self.inst.tsd_pred.cache_misses,
+            tsd_cache_hits: self.core.tsd_pred.cache_hits,
+            tsd_cache_misses: self.core.tsd_pred.cache_misses,
         });
-    }
-
-    /// Source side: pick victims and send the alloc request.
-    fn begin_migration(&mut self, to: usize, count: usize) -> Result<()> {
-        let mut remaining = count;
-        // Waiting tasks first: no KV to move at all.
-        let mut waiting_tasks = Vec::new();
-        while remaining > 0 && !self.inst.waiting.is_empty() {
-            waiting_tasks.push(self.inst.waiting.pop().unwrap());
-            remaining -= 1;
-        }
-        // Then parked, treated like waiting but carrying KV — simplest is
-        // to treat them as live victims below; push them back to live pick.
-        // Live victims by the §6.1 score: short sequences, low accept rate.
-        let max_seq = self.inst.engine.manifest.target.max_seq;
-        let mut scored: Vec<(f64, u64)> = self
-            .inst
-            .live
-            .iter()
-            .chain(self.inst.parked.iter())
-            .map(|s| {
-                (
-                    migration_score(s.seq_len(), s.mean_accepted(), max_seq),
-                    s.task.id,
-                )
-            })
-            .collect();
-        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
-        // Never migrate ALL live samples away (keep at least one decoding
-        // unless the order insists).
-        let live_ids: Vec<u64> = scored.iter().take(remaining).map(|&(_, id)| id).collect();
-
-        if waiting_tasks.is_empty() && live_ids.is_empty() {
-            let _ = self.events.send(Event::MigrationRefused);
-            return Ok(());
-        }
-        if live_ids.is_empty() {
-            // Only queue transfers: no KV, no handshake needed — a single
-            // Stage-2 message carries the tasks.
-            self.inst.metrics.samples_migrated_out += waiting_tasks.len() as u64;
-            let empty = pack_hierarchical(&[], &[], &[], &[]);
-            let _ = self.events.send(Event::Stage2 {
-                to,
-                pkt: Stage2Pkt {
-                    from: self.inst.id,
-                    kv_delta: empty,
-                    control: Vec::new(),
-                    waiting_tasks,
-                },
-            });
-            return Ok(());
-        }
-        let snapshots: Vec<usize> = live_ids
-            .iter()
-            .map(|id| self.find_sample(*id).map(|s| s.prefix_len).unwrap_or(0))
-            .collect();
-        let bytes: usize = live_ids
-            .iter()
-            .zip(&snapshots)
-            .map(|(id, &snap)| {
-                self.find_sample(*id)
-                    .map(|s| {
-                        2 * snap * (s.target_cache.row_elems() + s.draft_cache.row_elems()) * 4
-                    })
-                    .unwrap_or(0)
-            })
-            .sum();
-        let req = AllocRequest {
-            from_instance: self.inst.id,
-            sample_ids: live_ids.clone(),
-            bytes,
-        };
-        self.mig_out = Some(MigOutState {
-            to,
-            live_ids,
-            snapshots,
-            waiting_tasks,
-            stage1_sent: false,
-        });
-        let _ = self.events.send(Event::AllocReq { to, req });
-        Ok(())
-    }
-
-    fn find_sample(&self, id: u64) -> Option<&LiveSample> {
-        self.inst
-            .live
-            .iter()
-            .chain(self.inst.parked.iter())
-            .find(|s| s.task.id == id)
-    }
-
-    fn on_alloc_ack(&mut self, ok: bool) -> Result<()> {
-        let Some(mut state) = self.mig_out.take() else {
-            return Ok(());
-        };
-        if !ok {
-            // §6.2 phase 2: clear buffers, give waiting tasks back, report.
-            self.inst.waiting.extend(state.waiting_tasks.drain(..));
-            let _ = self.events.send(Event::MigrationRefused);
-            return Ok(());
-        }
-        // Stage 1: pack the snapshot of verified KV; samples KEEP decoding.
-        let mut drafts = Vec::new();
-        let mut targets = Vec::new();
-        let mut ids = Vec::new();
-        let mut ranges = Vec::new();
-        for (id, &snap) in state.live_ids.iter().zip(&state.snapshots) {
-            if let Some(s) = self.find_sample(*id) {
-                drafts.push(&s.draft_cache);
-                targets.push(&s.target_cache);
-                ids.push(*id);
-                ranges.push((0usize, snap));
-            }
-        }
-        let kv = pack_hierarchical(&drafts, &targets, &ids, &ranges);
-        let _ = self.events.send(Event::Stage1 {
-            to: state.to,
-            pkt: Stage1Pkt { from: self.inst.id, kv },
-        });
-        state.stage1_sent = true;
-        self.inst.metrics.samples_migrated_out += state.live_ids.len() as u64;
-        self.mig_out = Some(state);
-        Ok(())
-    }
-
-    /// Source side, one step after Stage 1: the delta + control state.
-    fn send_stage2(&mut self, state: MigOutState) -> Result<()> {
-        // Keep (victim, snapshot) pairs aligned even if some victims
-        // finished during the overlapped step (they stay on the source).
-        let mut victims: Vec<(LiveSample, usize)> = Vec::new();
-        for (id, &snap) in state.live_ids.iter().zip(&state.snapshots) {
-            if let Some(s) = self
-                .inst
-                .take_live(*id)
-                .or_else(|| {
-                    self.inst
-                        .parked
-                        .iter()
-                        .position(|p| p.task.id == *id)
-                        .map(|i| self.inst.parked.remove(i))
-                })
-            {
-                victims.push((s, snap));
-            }
-        }
-        let mut drafts = Vec::new();
-        let mut targets = Vec::new();
-        let mut ids = Vec::new();
-        let mut ranges = Vec::new();
-        let mut control = Vec::new();
-        for (v, snap) in victims.iter() {
-            drafts.push(&v.draft_cache);
-            targets.push(&v.target_cache);
-            ids.push(v.task.id);
-            ranges.push((*snap, v.prefix_len));
-            control.push(SampleControl::from_live(v));
-        }
-        let kv_delta = pack_hierarchical(&drafts, &targets, &ids, &ranges);
-        let _ = self.events.send(Event::Stage2 {
-            to: state.to,
-            pkt: Stage2Pkt {
-                from: self.inst.id,
-                kv_delta,
-                control,
-                waiting_tasks: state.waiting_tasks,
-            },
-        });
-        Ok(())
-    }
-
-    /// Destination side: merge the delta, rebuild live samples, resume.
-    fn finish_migration_in(&mut self, pkt: Stage2Pkt) -> Result<()> {
-        self.inst.metrics.samples_migrated_in += pkt.waiting_tasks.len() as u64;
-        for t in pkt.waiting_tasks {
-            self.inst.add_task(t);
-        }
-        let (mut caches, ids) = self.mig_in_kv.remove(&pkt.from).unwrap_or_default();
-        // Merge the delta into the stage-1 caches (ids must align).
-        if !pkt.kv_delta.spans.is_empty() {
-            let mut drafts: Vec<&mut KvCache> = Vec::new();
-            let mut targets: Vec<&mut KvCache> = Vec::new();
-            for span in &pkt.kv_delta.spans {
-                let pos = ids
-                    .iter()
-                    .position(|id| id == &span.id)
-                    .ok_or_else(|| anyhow!("stage2 delta for unknown sample {}", span.id))?;
-                // Safety: spans have unique ids, so disjoint indices.
-                let ptr = caches.as_mut_ptr();
-                unsafe {
-                    drafts.push(&mut (*ptr.add(pos)).0);
-                    targets.push(&mut (*ptr.add(pos)).1);
-                }
-            }
-            unpack_hierarchical(&pkt.kv_delta, &mut drafts, &mut targets);
-        }
-        for ctl in pkt.control {
-            let pos = ids
-                .iter()
-                .position(|id| *id == ctl.task.id)
-                .ok_or_else(|| anyhow!("stage2 control for unknown sample {}", ctl.task.id))?;
-            let (draft_cache, target_cache) = {
-                let c = &caches[pos];
-                (c.0.clone(), c.1.clone())
-            };
-            let live = LiveSample {
-                task: ctl.task,
-                generated: ctl.generated,
-                prefix_len: ctl.prefix_len,
-                target_cache,
-                draft_cache,
-                rounds: ctl.rounds,
-                drafts_accepted: ctl.drafts_accepted,
-                drafts_proposed: ctl.drafts_proposed,
-            };
-            self.inst.insert_parked(live);
-        }
-        Ok(())
     }
 
     fn finishup(mut self) {
-        let fig7_curve = self.inst.accept_pred.curve();
-        let accept_corr = self.inst.accept_pred.correlation();
-        let _ = self.events.send(Event::Done {
-            instance: self.inst.id,
-            finished: std::mem::take(&mut self.inst.finished),
-            metrics: Box::new(self.inst.metrics.clone()),
-            fig7_curve,
-            accept_corr,
-            tsd_cache_hits: self.inst.tsd_pred.cache_hits,
-            tsd_cache_misses: self.inst.tsd_pred.cache_misses,
-        });
+        self.report_batch();
     }
 }
 
@@ -653,11 +385,9 @@ impl GenerationService {
                         }
                     };
                 Worker {
-                    inst,
+                    core: inst,
                     cmds: rx,
                     events: ev,
-                    mig_out: None,
-                    mig_in_kv: BTreeMap::new(),
                     throughput: Ema::new(0.3),
                     last_tokens: 0,
                 }
@@ -867,4 +597,47 @@ pub fn run_generation(
     let report = svc.run_batch(tasks)?;
     svc.shutdown();
     Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(wall_secs: f64, tokens: u64, finished: usize) -> GenerationReport {
+        GenerationReport {
+            finished: (0..finished)
+                .map(|i| FinishedSample {
+                    id: i as u64,
+                    prompt: vec![1],
+                    response: vec![2],
+                    rounds: 1,
+                    drafts_accepted: 0,
+                    drafts_proposed: 0,
+                })
+                .collect(),
+            instances: Vec::new(),
+            wall_secs,
+            migrations: 0,
+            migration_refusals: 0,
+            realloc_decisions: 0,
+            srd_secs: 0.0,
+            total_tokens: tokens,
+        }
+    }
+
+    #[test]
+    fn throughput_guards_zero_elapsed() {
+        let r = report(0.0, 100, 4);
+        assert_eq!(r.throughput_tokens(), 0.0);
+        assert_eq!(r.throughput_samples(), 0.0);
+        let neg = report(-1.0, 100, 4);
+        assert_eq!(neg.throughput_tokens(), 0.0);
+    }
+
+    #[test]
+    fn throughput_normal_case() {
+        let r = report(2.0, 100, 4);
+        assert!((r.throughput_tokens() - 50.0).abs() < 1e-9);
+        assert!((r.throughput_samples() - 2.0).abs() < 1e-9);
+    }
 }

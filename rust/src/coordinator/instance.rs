@@ -1,32 +1,35 @@
-//! A generation instance: one "GPU" running the speculative round loop.
+//! The PJRT decode backend: one "GPU" running real AOT executables.
 //!
-//! Each instance owns a PJRT engine (its own client), target + draft
-//! weights, per-sample KV caches and the incrementally-maintained batch
-//! tensors. One [`GenerationInstance::step`] executes the paper's round:
+//! The adaptive round loop itself lives in
+//! [`crate::coordinator::core::InstanceCore`]; this module supplies the
+//! hardware-facing half of the [`DecodeBackend`] contract:
 //!
 //! ```text
-//! draft (SSM tree expansion, batched, level by level)
-//!   → predict node weights w = F(dl)                 (§5.2)
-//!   → select draft budget n (layer-level search)     (§5.3)
-//!   → verify top-n tree with the target model        (L1 kernel)
-//!   → accept (greedy / stochastic spec sampling)     (§2.2)
-//!   → commit accepted KV rows host-side
+//! draft (SSM tree expansion, batched, level by level)   ← PJRT calls
+//!   → predict node weights w = F(dl)                 (§5.2, shared core)
+//!   → select draft budget n (layer-level search)     (§5.3, shared core)
+//!   → verify top-n tree with the target model        (L1 kernel, here)
+//!   → accept (greedy / stochastic spec sampling)     (§2.2, here)
+//!   → commit accepted KV rows host-side              (here)
 //! ```
 //!
-//! [`DecodeMode`] switches the same machinery between autoregressive
-//! (`Verl`-like baseline), static-n speculative (`Speculative` baseline)
-//! and the full workload-aware mode — giving the Fig 13 ablation an
-//! honest shared substrate.
+//! [`GenerationInstance`] is simply `InstanceCore<PjrtBackend>`, so every
+//! scheduling-policy change is automatically exercised by the calibrated
+//! simulation plane as well ([`crate::sim::engine::SimBackend`]).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::rc::Rc;
+use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::config::RunConfig;
+use crate::coordinator::backend::{DecodeBackend, SpecRound};
+use crate::coordinator::core::InstanceCore;
 use crate::coordinator::metrics::{InstanceMetrics, Stopwatch};
-use crate::coordinator::predictor::{AcceptancePredictor, TsdPredictor};
-use crate::coordinator::selector;
+use crate::coordinator::migration::{
+    pack_hierarchical, unpack_hierarchical, HierarchicalKv, SampleControl,
+};
 use crate::runtime::{Engine, HostTensor, Manifest, ModelStore};
 use crate::spec::kvcache::{BatchedCache, KvCache};
 use crate::spec::sampler;
@@ -34,16 +37,7 @@ use crate::spec::tree::{CandidateTree, Selection};
 use crate::spec::verify::{accept_greedy, accept_stochastic, AcceptOutcome};
 use crate::utils::rng::Rng;
 
-/// How the instance decodes (baselines + ablations share the substrate).
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum DecodeMode {
-    /// Autoregressive decoding (Verl/OpenRLHF-like generation).
-    Ar,
-    /// Speculative decoding with a fixed draft-token budget.
-    StaticSpec(usize),
-    /// Full RLHFSpec: workload-aware drafting-strategy selection.
-    Adaptive,
-}
+pub use crate::coordinator::core::DecodeMode;
 
 /// A sample entering the instance.
 #[derive(Clone, Debug)]
@@ -120,30 +114,41 @@ impl LiveSample {
     }
 }
 
-pub struct GenerationInstance {
-    pub id: usize,
+/// Backend-private context threaded from the draft phase to verification.
+pub struct PjrtDraftCtx {
+    /// Compiled batch bucket used this round.
+    b: usize,
+    /// Final draft (k_new, v_new) rows, level order == candidate order.
+    draft_rows: (HostTensor, HostTensor),
+    /// Per-sample full draft distributions by candidate index.
+    dists: Vec<HashMap<usize, Vec<f32>>>,
+    /// Round stopwatch (started at draft begin) + draft-phase seconds,
+    /// for the `t_sd` observation.
+    step_sw: Stopwatch,
+    draft_secs: f64,
+}
+
+/// The PJRT execution backend: engine + weights + batched KV state.
+pub struct PjrtBackend {
     pub engine: Engine,
     pub target: ModelStore,
     pub draft: ModelStore,
     pub cfg: RunConfig,
-    pub mode: DecodeMode,
-    pub live: Vec<LiveSample>,
-    /// Migrated-in samples with KV, waiting for a free decode slot.
-    pub parked: Vec<LiveSample>,
-    pub waiting: Vec<SampleTask>,
-    pub finished: Vec<FinishedSample>,
-    pub accept_pred: AcceptancePredictor,
-    pub tsd_pred: TsdPredictor,
-    pub metrics: InstanceMetrics,
     rng: Rng,
     batch_target: Option<BatchedCache>,
     batch_draft: Option<BatchedCache>,
     batch_dirty: bool,
-    pub steps: usize,
-    started: std::time::Instant,
+    /// Stage-1 buffers keyed by source instance:
+    /// (draft, target) caches + sample ids.
+    mig_in: BTreeMap<usize, (Vec<(KvCache, KvCache)>, Vec<u64>)>,
+    started: Instant,
 }
 
-impl GenerationInstance {
+/// A generation instance on real PJRT executables: the shared adaptive
+/// decode loop over the [`PjrtBackend`].
+pub type GenerationInstance = InstanceCore<PjrtBackend>;
+
+impl InstanceCore<PjrtBackend> {
     pub fn new(
         id: usize,
         manifest: Rc<Manifest>,
@@ -154,136 +159,24 @@ impl GenerationInstance {
         seed: u64,
     ) -> Result<Self> {
         let engine = Engine::new(manifest)?;
-        Ok(GenerationInstance {
-            id,
+        let selector = cfg.selector.clone();
+        let backend = PjrtBackend {
             engine,
             target,
             draft,
-            accept_pred: AcceptancePredictor::new(24),
-            tsd_pred: TsdPredictor::new(cfg.selector.nseq_bucket, cfg.selector.ndraft_bucket),
             cfg,
-            mode,
-            live: Vec::new(),
-            parked: Vec::new(),
-            waiting: Vec::new(),
-            finished: Vec::new(),
-            metrics: InstanceMetrics::default(),
             rng: Rng::new(seed),
             batch_target: None,
             batch_draft: None,
             batch_dirty: true,
-            steps: 0,
-            started: std::time::Instant::now(),
-        })
-    }
-
-    /// Decoding-slot capacity (largest compiled batch bucket).
-    pub fn capacity(&self) -> usize {
-        *self.engine.manifest.batch_buckets.iter().max().unwrap_or(&1)
-    }
-
-    /// Total assigned samples (decoding + parked + waiting) — the
-    /// reallocator's "sample count" for this instance.
-    pub fn sample_count(&self) -> usize {
-        self.live.len() + self.parked.len() + self.waiting.len()
-    }
-
-    pub fn is_idle(&self) -> bool {
-        self.live.is_empty() && self.parked.is_empty() && self.waiting.is_empty()
-    }
-
-    pub fn add_task(&mut self, task: SampleTask) {
-        self.waiting.push(task);
-    }
-
-    /// One full scheduler step: admit + prefill, then one decode round.
-    pub fn step(&mut self) -> Result<()> {
-        self.admit()?;
-        if self.live.is_empty() {
-            return Ok(());
-        }
-        match self.mode {
-            DecodeMode::Ar => self.step_ar()?,
-            DecodeMode::StaticSpec(_) | DecodeMode::Adaptive => self.step_spec()?,
-        }
-        self.retire_finished();
-        self.steps += 1;
-        if self.cfg.selector.enabled
-            && self.steps % self.cfg.selector.refit_every == 0
-        {
-            self.accept_pred.refit();
-            self.tsd_pred.refit();
-        }
-        self.metrics.trace.push((
-            self.started.elapsed().as_secs_f64(),
-            self.metrics.tokens_out,
-            self.sample_count(),
-        ));
-        Ok(())
-    }
-
-    /// Admit parked (migrated-in, already prefilled) then waiting samples
-    /// into free decode slots.
-    fn admit(&mut self) -> Result<()> {
-        while self.live.len() < self.capacity() && !self.parked.is_empty() {
-            let s = self.parked.remove(0);
-            self.live.push(s);
-            self.batch_dirty = true;
-        }
-        while self.live.len() < self.capacity() && !self.waiting.is_empty() {
-            let task = self.waiting.remove(0);
-            let mut sw = Stopwatch::start();
-            let s = self.prefill(task)?;
-            self.metrics.prefill_secs += sw.lap();
-            self.live.push(s);
-            self.batch_dirty = true;
-        }
-        Ok(())
-    }
-
-    /// Prefill a prompt through both models, chunked by tree buckets.
-    fn prefill(&mut self, task: SampleTask) -> Result<LiveSample> {
-        let man = self.engine.manifest.clone();
-        let td = &man.target;
-        let dd = &man.draft;
-        let mut target_cache = KvCache::new(td.n_layers, td.n_heads, td.max_seq, td.d_head);
-        let mut draft_cache = KvCache::new(dd.n_layers, dd.n_heads, dd.max_seq, dd.d_head);
-        if task.prompt.is_empty() {
-            bail!("empty prompt for sample {}", task.id);
-        }
-        let max_chunk = *man.tree_buckets.iter().max().unwrap();
-        let mut first_probs: Vec<f32> = Vec::new();
-        let mut done = 0usize;
-        while done < task.prompt.len() {
-            let chunk = (task.prompt.len() - done).min(max_chunk);
-            let toks = &task.prompt[done..done + chunk];
-            // causal-chain "tree": node i's parent is i-1.
-            let logits = self.prefill_chunk("target", &mut target_cache, toks, done)?;
-            self.prefill_chunk("draft", &mut draft_cache, toks, done)?;
-            if done + chunk == task.prompt.len() {
-                first_probs = logits;
-            }
-            done += chunk;
-        }
-        // First pending token from the target distribution at the prompt end.
-        let pending = if self.cfg.spec.greedy {
-            sampler::argmax(&first_probs) as i32
-        } else {
-            let p = sampler::softmax(&first_probs, self.cfg.spec.temperature);
-            sampler::sample(&p, &mut self.rng) as i32
+            mig_in: BTreeMap::new(),
+            started: Instant::now(),
         };
-        Ok(LiveSample {
-            prefix_len: task.prompt.len(),
-            task,
-            generated: vec![pending],
-            target_cache,
-            draft_cache,
-            rounds: 0,
-            drafts_accepted: 0,
-            drafts_proposed: 0,
-        })
+        Ok(InstanceCore::with_backend(id, backend, mode, selector))
     }
+}
 
+impl PjrtBackend {
     /// Run one causal chunk through `{model}_tree_b1_tT`, commit all rows,
     /// return the logits of the LAST chunk position.
     fn prefill_chunk(
@@ -345,28 +238,156 @@ impl GenerationInstance {
         Ok(logits[(t - 1) * v..t * v].to_vec())
     }
 
+    /// Rebuild the batched KV tensors when batch composition changed.
+    fn rebuild_batches_if_needed(&mut self, live: &[LiveSample], b: usize) -> Result<()> {
+        let man = self.engine.manifest.clone();
+        let need_rebuild = self.batch_dirty
+            || self.batch_target.as_ref().map(|bt| bt.batch) != Some(b);
+        if !need_rebuild {
+            return Ok(());
+        }
+        let td = &man.target;
+        let dd = &man.draft;
+        let mut bt = BatchedCache::new(td.n_layers, td.n_heads, td.max_seq, td.d_head, b);
+        let mut bd = BatchedCache::new(dd.n_layers, dd.n_heads, dd.max_seq, dd.d_head, b);
+        for (i, s) in live.iter().enumerate() {
+            bt.load_slot(i, s.task.id, &s.target_cache);
+            bd.load_slot(i, s.task.id, &s.draft_cache);
+        }
+        self.batch_target = Some(bt);
+        self.batch_draft = Some(bd);
+        self.batch_dirty = false;
+        Ok(())
+    }
+}
+
+impl DecodeBackend for PjrtBackend {
+    type Task = SampleTask;
+    type Sample = LiveSample;
+    type Finished = FinishedSample;
+    type DraftCtx = PjrtDraftCtx;
+    type KvPayload = HierarchicalKv;
+    type Control = SampleControl;
+
+    fn sample_id(s: &LiveSample) -> u64 {
+        s.task.id
+    }
+
+    fn committed_len(s: &LiveSample) -> usize {
+        s.prefix_len
+    }
+
+    fn seq_len(s: &LiveSample) -> usize {
+        s.seq_len()
+    }
+
+    fn mean_accepted(s: &LiveSample) -> f64 {
+        s.mean_accepted()
+    }
+
+    fn is_done(s: &LiveSample) -> bool {
+        s.is_done()
+    }
+
+    fn finish(s: LiveSample) -> FinishedSample {
+        s.into_finished()
+    }
+
+    fn control_of(s: &LiveSample) -> SampleControl {
+        SampleControl::from_live(s)
+    }
+
+    /// Decoding-slot capacity (largest compiled batch bucket).
+    fn capacity(&self) -> usize {
+        *self.engine.manifest.batch_buckets.iter().max().unwrap_or(&1)
+    }
+
+    fn max_draft(&self) -> usize {
+        self.cfg
+            .spec
+            .max_draft
+            .min(*self.engine.manifest.tree_buckets.iter().max().unwrap_or(&1))
+    }
+
+    fn max_seq(&self) -> usize {
+        self.engine.manifest.target.max_seq
+    }
+
+    fn now(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    fn on_batch_change(&mut self) {
+        self.batch_dirty = true;
+    }
+
+    /// Prefill a prompt through both models, chunked by tree buckets.
+    fn prefill(&mut self, task: SampleTask, metrics: &mut InstanceMetrics) -> Result<LiveSample> {
+        let mut sw = Stopwatch::start();
+        let man = self.engine.manifest.clone();
+        let td = &man.target;
+        let dd = &man.draft;
+        let mut target_cache = KvCache::new(td.n_layers, td.n_heads, td.max_seq, td.d_head);
+        let mut draft_cache = KvCache::new(dd.n_layers, dd.n_heads, dd.max_seq, dd.d_head);
+        if task.prompt.is_empty() {
+            bail!("empty prompt for sample {}", task.id);
+        }
+        let max_chunk = *man.tree_buckets.iter().max().unwrap();
+        let mut first_probs: Vec<f32> = Vec::new();
+        let mut done = 0usize;
+        while done < task.prompt.len() {
+            let chunk = (task.prompt.len() - done).min(max_chunk);
+            let toks = &task.prompt[done..done + chunk];
+            // causal-chain "tree": node i's parent is i-1.
+            let logits = self.prefill_chunk("target", &mut target_cache, toks, done)?;
+            self.prefill_chunk("draft", &mut draft_cache, toks, done)?;
+            if done + chunk == task.prompt.len() {
+                first_probs = logits;
+            }
+            done += chunk;
+        }
+        // First pending token from the target distribution at the prompt end.
+        let pending = if self.cfg.spec.greedy {
+            sampler::argmax(&first_probs) as i32
+        } else {
+            let p = sampler::softmax(&first_probs, self.cfg.spec.temperature);
+            sampler::sample(&p, &mut self.rng) as i32
+        };
+        metrics.prefill_secs += sw.lap();
+        Ok(LiveSample {
+            prefix_len: task.prompt.len(),
+            task,
+            generated: vec![pending],
+            target_cache,
+            draft_cache,
+            rounds: 0,
+            drafts_accepted: 0,
+            drafts_proposed: 0,
+        })
+    }
+
     // ------------------------------------------------------------------
     // Autoregressive baseline step
     // ------------------------------------------------------------------
 
-    fn step_ar(&mut self) -> Result<()> {
+    fn step_ar(&mut self, live: &mut [LiveSample], metrics: &mut InstanceMetrics) -> Result<()> {
         let man = self.engine.manifest.clone();
-        let b_live = self.live.len();
+        let b_live = live.len();
         let b = man.batch_bucket(b_live).unwrap();
-        self.rebuild_batches_if_needed(b)?;
+        self.rebuild_batches_if_needed(live, b)?;
         let mut sw = Stopwatch::start();
 
         let mut tokens = vec![0i32; b];
         let mut positions = vec![0i32; b];
         let mut plen = vec![0i32; b];
         let mut mask = vec![0f32; b];
-        for (i, s) in self.live.iter().enumerate() {
+        for (i, s) in live.iter().enumerate() {
             tokens[i] = s.pending();
             positions[i] = s.prefix_len as i32;
             plen[i] = s.prefix_len as i32;
         }
-        for i in 0..b {
-            mask[i] = 1.0; // T=1 self mask
+        for m in mask.iter_mut() {
+            *m = 1.0; // T=1 self mask
         }
         let name = man.tree_artifact("target", b, 1)?;
         // Borrow the batched KV tensors (no copy: they are only read
@@ -392,12 +413,12 @@ impl GenerationInstance {
         .into_iter()
         .collect();
         let outs = self.engine.run_artifact(&name, &stores, &data)?;
-        self.metrics.verify_secs += sw.lap();
+        metrics.verify_secs += sw.lap();
 
         let v = man.target.vocab;
         let greedy = self.cfg.spec.greedy;
         let temp = self.cfg.spec.temperature;
-        for i in 0..self.live.len() {
+        for (i, s) in live.iter_mut().enumerate() {
             let logits = &outs[0].as_f32()[i * v..(i + 1) * v];
             let next = if greedy {
                 sampler::argmax(logits) as i32
@@ -405,248 +426,42 @@ impl GenerationInstance {
                 let p = sampler::softmax(logits, temp);
                 sampler::sample(&p, &mut self.rng) as i32
             };
-            let dest = self.live[i].prefix_len;
-            self.live[i].target_cache.commit_row(&outs[1], &outs[2], i, 0, dest);
+            let dest = s.prefix_len;
+            s.target_cache.commit_row(&outs[1], &outs[2], i, 0, dest);
             self.batch_target
                 .as_mut()
                 .unwrap()
                 .commit_row(&outs[1], &outs[2], i, i, 0, dest);
-            self.live[i].generated.push(next);
-            self.live[i].prefix_len += 1;
-            self.live[i].rounds += 1;
-            self.metrics.tokens_out += 1;
+            s.generated.push(next);
+            s.prefix_len += 1;
+            s.rounds += 1;
+            metrics.tokens_out += 1;
         }
-        self.metrics.commit_secs += sw.lap();
-        self.metrics.rounds += 1;
+        metrics.commit_secs += sw.lap();
+        metrics.rounds += 1;
         Ok(())
     }
 
     // ------------------------------------------------------------------
-    // Speculative step (static or adaptive)
+    // Speculative round: draft phase
     // ------------------------------------------------------------------
 
-    fn step_spec(&mut self) -> Result<()> {
+    /// Expand candidate trees for every live sample with batched draft
+    /// calls, level by level (EAGLE-2-style: widest-`dl` nodes first).
+    fn draft(
+        &mut self,
+        live: &mut [LiveSample],
+        metrics: &mut InstanceMetrics,
+    ) -> Result<(Vec<CandidateTree>, PjrtDraftCtx)> {
         let man = self.engine.manifest.clone();
-        let b_live = self.live.len();
+        let b_live = live.len();
         let b = man.batch_bucket(b_live).unwrap();
-        self.rebuild_batches_if_needed(b)?;
+        self.rebuild_batches_if_needed(live, b)?;
         let step_sw = Stopwatch::start();
         let mut sw = Stopwatch::start();
 
-        // ---- 1. draft: expand candidate trees level by level ----------
-        let (mut trees, level_orders, draft_rows, draft_dists) = self.draft_phase(b)?;
-        self.metrics.draft_secs += sw.lap();
-        let draft_secs = step_sw.elapsed();
-
-        // ---- 2. node weights w = F(dl) --------------------------------
-        for tree in trees.iter_mut() {
-            for node in tree.nodes.iter_mut() {
-                node.w = if node.parent.is_none() {
-                    1.0
-                } else {
-                    self.accept_pred.predict(node.dl)
-                };
-            }
-        }
-
-        // ---- 3. strategy selection ------------------------------------
-        let n_seq: usize = self.live.iter().map(|s| s.prefix_len).sum();
-        let max_n = self
-            .cfg
-            .spec
-            .max_draft
-            .min(*man.tree_buckets.iter().max().unwrap());
-        let n = match self.mode {
-            DecodeMode::StaticSpec(n) => n.clamp(1, max_n),
-            DecodeMode::Adaptive => {
-                let refs: Vec<&CandidateTree> = trees.iter().collect();
-                let choice = selector::select_strategy(
-                    &self.cfg.selector,
-                    &mut self.tsd_pred,
-                    &refs,
-                    n_seq,
-                    max_n,
-                );
-                choice.n
-            }
-            DecodeMode::Ar => unreachable!(),
-        };
-        self.metrics.select_secs += sw.lap();
-
-        // ---- 4. verify with the target model --------------------------
-        let selections: Vec<Selection> = trees
-            .iter()
-            .map(|t| t.selection(&t.select_top_n(n)))
-            .collect();
-        let t_need = selections.iter().map(|s| s.len()).max().unwrap_or(1);
-        let t_bucket = man.tree_bucket(t_need).unwrap();
-        let name = man.tree_artifact("target", b, t_need)?;
-
-        let mut tokens = vec![0i32; b * t_bucket];
-        let mut positions = vec![0i32; b * t_bucket];
-        let mut plen = vec![0i32; b];
-        let mut mask = vec![0f32; b * t_bucket * t_bucket];
-        for i in 0..b {
-            if i < self.live.len() {
-                let s = &self.live[i];
-                let sel = &selections[i];
-                let (tk, mk) = sel.padded(t_bucket);
-                tokens[i * t_bucket..(i + 1) * t_bucket].copy_from_slice(&tk);
-                mask[i * t_bucket * t_bucket..(i + 1) * t_bucket * t_bucket]
-                    .copy_from_slice(&mk);
-                let pos = sel.positions(s.prefix_len);
-                for (j, &p) in pos.iter().enumerate() {
-                    positions[i * t_bucket + j] = p;
-                }
-                for j in sel.len()..t_bucket {
-                    positions[i * t_bucket + j] = s.prefix_len as i32;
-                }
-                plen[i] = s.prefix_len as i32;
-            } else {
-                for j in 0..t_bucket {
-                    mask[(i * t_bucket + j) * t_bucket + j] = 1.0;
-                }
-            }
-        }
-        // Borrow the batched KV tensors (no copy: they are only read
-        // while marshalling the call).
-        let (kc, vc) = {
-            let (k, v) = self.batch_target.as_ref().unwrap().tensors();
-            (k, v)
-        };
-        let tokens_t = HostTensor::i32(vec![b, t_bucket], tokens);
-        let pos_t = HostTensor::i32(vec![b, t_bucket], positions);
-        let plen_t = HostTensor::i32(vec![b], plen);
-        let mask_t = HostTensor::f32(vec![b, t_bucket, t_bucket], mask);
-        let stores: BTreeMap<String, &ModelStore> =
-            [("target".to_string(), &self.target)].into_iter().collect();
-        let data: BTreeMap<&str, &HostTensor> = [
-            ("kc", kc),
-            ("vc", vc),
-            ("tokens", &tokens_t),
-            ("positions", &pos_t),
-            ("prefix_len", &plen_t),
-            ("tree_mask", &mask_t),
-        ]
-        .into_iter()
-        .collect();
-        let outs = self.engine.run_artifact(&name, &stores, &data)?;
-        self.metrics.verify_secs += sw.lap();
-
-        // Observe t_sd for the predictor (draft + verify wall time).
-        let n_draft_total: usize = selections.iter().map(|s| s.len()).sum();
-        self.tsd_pred
-            .observe(n_seq, n_draft_total, step_sw.elapsed().max(draft_secs));
-
-        // ---- 5. acceptance + commit -----------------------------------
-        let v = man.target.vocab;
-        let greedy = self.cfg.spec.greedy;
-        let temp = self.cfg.spec.temperature;
-        for i in 0..self.live.len() {
-            let sel = &selections[i];
-            let logit_rows: Vec<&[f32]> = (0..sel.len())
-                .map(|j| {
-                    let off = (i * t_bucket + j) * v;
-                    &outs[0].as_f32()[off..off + v]
-                })
-                .collect();
-            let outcome: AcceptOutcome = if greedy {
-                accept_greedy(sel, &logit_rows)
-            } else {
-                let probs: Vec<Vec<f32>> =
-                    logit_rows.iter().map(|r| sampler::softmax(r, temp)).collect();
-                let draft_q: Vec<f32> =
-                    sel.order.iter().map(|&ci| trees[i].nodes[ci].o).collect();
-                let dists: Vec<Vec<f32>> = sel
-                    .order
-                    .iter()
-                    .map(|&ci| draft_dists[i].get(&ci).cloned().unwrap_or_default())
-                    .collect();
-                accept_stochastic(sel, &probs, &draft_q, &dists, &mut self.rng)
-            };
-            self.metrics.accept_secs += sw.lap();
-
-            // Predictor observations: every non-root selected node.
-            let on_path: std::collections::HashSet<usize> =
-                outcome.path.iter().copied().collect();
-            for (j, &ci) in sel.order.iter().enumerate() {
-                if j == 0 {
-                    continue;
-                }
-                self.accept_pred
-                    .observe(trees[i].nodes[ci].dl, on_path.contains(&j));
-            }
-
-            // Commit target KV rows for the accepted path.
-            let base = self.live[i].prefix_len;
-            for (step_k, &selpos) in outcome.path.iter().enumerate() {
-                let dest = base + step_k;
-                self.live[i]
-                    .target_cache
-                    .commit_row(&outs[1], &outs[2], i, selpos, dest);
-                self.batch_target.as_mut().unwrap().commit_row(
-                    &outs[1],
-                    &outs[2],
-                    i,
-                    i,
-                    selpos,
-                    dest,
-                );
-                // Commit draft KV for the same token (draft rows are in
-                // level order of the candidate tree).
-                let cand_idx = sel.order[selpos];
-                let lvl_pos = level_orders[i][cand_idx];
-                self.live[i].draft_cache.commit_row(
-                    &draft_rows.0,
-                    &draft_rows.1,
-                    i,
-                    lvl_pos,
-                    dest,
-                );
-                self.batch_draft.as_mut().unwrap().commit_row(
-                    &draft_rows.0,
-                    &draft_rows.1,
-                    i,
-                    i,
-                    lvl_pos,
-                    dest,
-                );
-            }
-
-            let k = outcome.accepted_drafts;
-            self.live[i].prefix_len += k + 1;
-            self.live[i]
-                .generated
-                .extend_from_slice(&outcome.new_tokens);
-            self.live[i].rounds += 1;
-            self.live[i].drafts_accepted += k;
-            self.live[i].drafts_proposed += sel.len() - 1;
-            self.metrics.tokens_out += outcome.new_tokens.len() as u64;
-            self.metrics.drafts_accepted += k as u64;
-            self.metrics.drafts_proposed += (sel.len() - 1) as u64;
-            self.metrics.commit_secs += sw.lap();
-        }
-        self.metrics.rounds += 1;
-        Ok(())
-    }
-
-    /// Expand candidate trees for every live sample with batched draft
-    /// calls. Returns (trees, candidate→level-order maps, final draft
-    /// (k_new, v_new) rows, per-sample full draft distributions by
-    /// candidate index).
-    #[allow(clippy::type_complexity)]
-    fn draft_phase(
-        &mut self,
-        b: usize,
-    ) -> Result<(
-        Vec<CandidateTree>,
-        Vec<Vec<usize>>,
-        (HostTensor, HostTensor),
-        Vec<std::collections::HashMap<usize, Vec<f32>>>,
-    )> {
-        let man = self.engine.manifest.clone();
         let dd = man.draft.clone();
-        let n_live = self.live.len();
+        let n_live = live.len();
         let branch = self.cfg.spec.branch;
         let max_depth = self.cfg.spec.max_depth;
         let max_tree = self
@@ -657,13 +472,11 @@ impl GenerationInstance {
         // Cap expansions per level so trees stay within buckets.
         let expand_width = 4usize;
 
-        let mut trees: Vec<CandidateTree> = self
-            .live
+        let mut trees: Vec<CandidateTree> = live
             .iter()
             .map(|s| CandidateTree::new(s.pending()))
             .collect();
-        let mut dists: Vec<std::collections::HashMap<usize, Vec<f32>>> =
-            vec![Default::default(); n_live];
+        let mut dists: Vec<HashMap<usize, Vec<f32>>> = vec![Default::default(); n_live];
         let mut last_rows: Option<(HostTensor, HostTensor)> = None;
 
         for depth in 0..=max_depth {
@@ -681,7 +494,7 @@ impl GenerationInstance {
             let mut mask = vec![0f32; b * t_bucket * t_bucket];
             for i in 0..b {
                 if i < n_live {
-                    let s = &self.live[i];
+                    let s = &live[i];
                     let tr = &trees[i];
                     for (j, node) in tr.nodes.iter().enumerate() {
                         tokens[i * t_bucket + j] = node.token;
@@ -761,84 +574,299 @@ impl GenerationInstance {
             }
         }
 
-        // Candidate index → level-order position (insertion order IS level
-        // order because we append level by level).
-        let level_orders: Vec<Vec<usize>> =
-            trees.iter().map(|t| (0..t.len()).collect()).collect();
-        Ok((trees, level_orders, last_rows.unwrap(), dists))
+        metrics.draft_secs += sw.lap();
+        let draft_secs = step_sw.elapsed();
+        Ok((
+            trees,
+            PjrtDraftCtx {
+                b,
+                draft_rows: last_rows.expect("at least one draft level ran"),
+                dists,
+                step_sw,
+                draft_secs,
+            },
+        ))
     }
 
-    /// Rebuild the batched KV tensors when batch composition changed.
-    fn rebuild_batches_if_needed(&mut self, b: usize) -> Result<()> {
+    // ------------------------------------------------------------------
+    // Speculative round: verify + accept + commit
+    // ------------------------------------------------------------------
+
+    fn verify_accept(
+        &mut self,
+        live: &mut [LiveSample],
+        trees: &[CandidateTree],
+        ctx: PjrtDraftCtx,
+        selections: &[Selection],
+        metrics: &mut InstanceMetrics,
+    ) -> Result<SpecRound> {
         let man = self.engine.manifest.clone();
-        let need_rebuild = self.batch_dirty
-            || self.batch_target.as_ref().map(|bt| bt.batch) != Some(b);
-        if !need_rebuild {
-            return Ok(());
+        let b = ctx.b;
+        let mut sw = Stopwatch::start();
+
+        let t_need = selections.iter().map(|s| s.len()).max().unwrap_or(1);
+        let t_bucket = man.tree_bucket(t_need).unwrap();
+        let name = man.tree_artifact("target", b, t_need)?;
+
+        let mut tokens = vec![0i32; b * t_bucket];
+        let mut positions = vec![0i32; b * t_bucket];
+        let mut plen = vec![0i32; b];
+        let mut mask = vec![0f32; b * t_bucket * t_bucket];
+        for i in 0..b {
+            if i < live.len() {
+                let s = &live[i];
+                let sel = &selections[i];
+                let (tk, mk) = sel.padded(t_bucket);
+                tokens[i * t_bucket..(i + 1) * t_bucket].copy_from_slice(&tk);
+                mask[i * t_bucket * t_bucket..(i + 1) * t_bucket * t_bucket]
+                    .copy_from_slice(&mk);
+                let pos = sel.positions(s.prefix_len);
+                for (j, &p) in pos.iter().enumerate() {
+                    positions[i * t_bucket + j] = p;
+                }
+                for j in sel.len()..t_bucket {
+                    positions[i * t_bucket + j] = s.prefix_len as i32;
+                }
+                plen[i] = s.prefix_len as i32;
+            } else {
+                for j in 0..t_bucket {
+                    mask[(i * t_bucket + j) * t_bucket + j] = 1.0;
+                }
+            }
         }
-        let td = &man.target;
-        let dd = &man.draft;
-        let mut bt = BatchedCache::new(td.n_layers, td.n_heads, td.max_seq, td.d_head, b);
-        let mut bd = BatchedCache::new(dd.n_layers, dd.n_heads, dd.max_seq, dd.d_head, b);
-        for (i, s) in self.live.iter().enumerate() {
-            bt.load_slot(i, s.task.id, &s.target_cache);
-            bd.load_slot(i, s.task.id, &s.draft_cache);
+        // Borrow the batched KV tensors (no copy: they are only read
+        // while marshalling the call).
+        let (kc, vc) = {
+            let (k, v) = self.batch_target.as_ref().unwrap().tensors();
+            (k, v)
+        };
+        let tokens_t = HostTensor::i32(vec![b, t_bucket], tokens);
+        let pos_t = HostTensor::i32(vec![b, t_bucket], positions);
+        let plen_t = HostTensor::i32(vec![b], plen);
+        let mask_t = HostTensor::f32(vec![b, t_bucket, t_bucket], mask);
+        let stores: BTreeMap<String, &ModelStore> =
+            [("target".to_string(), &self.target)].into_iter().collect();
+        let data: BTreeMap<&str, &HostTensor> = [
+            ("kc", kc),
+            ("vc", vc),
+            ("tokens", &tokens_t),
+            ("positions", &pos_t),
+            ("prefix_len", &plen_t),
+            ("tree_mask", &mask_t),
+        ]
+        .into_iter()
+        .collect();
+        let outs = self.engine.run_artifact(&name, &stores, &data)?;
+        metrics.verify_secs += sw.lap();
+
+        // Observed t_sd for the predictor (draft + verify wall time).
+        let n_draft_total: usize = selections.iter().map(|s| s.len()).sum();
+        let tsd_secs = ctx.step_sw.elapsed().max(ctx.draft_secs);
+
+        // ---- acceptance + commit -----------------------------------
+        let v = man.target.vocab;
+        let greedy = self.cfg.spec.greedy;
+        let temp = self.cfg.spec.temperature;
+        let mut observations: Vec<(f32, bool)> = Vec::new();
+        for (i, s) in live.iter_mut().enumerate() {
+            let sel = &selections[i];
+            let logit_rows: Vec<&[f32]> = (0..sel.len())
+                .map(|j| {
+                    let off = (i * t_bucket + j) * v;
+                    &outs[0].as_f32()[off..off + v]
+                })
+                .collect();
+            let outcome: AcceptOutcome = if greedy {
+                accept_greedy(sel, &logit_rows)
+            } else {
+                let probs: Vec<Vec<f32>> =
+                    logit_rows.iter().map(|r| sampler::softmax(r, temp)).collect();
+                let draft_q: Vec<f32> =
+                    sel.order.iter().map(|&ci| trees[i].nodes[ci].o).collect();
+                let dists: Vec<Vec<f32>> = sel
+                    .order
+                    .iter()
+                    .map(|&ci| ctx.dists[i].get(&ci).cloned().unwrap_or_default())
+                    .collect();
+                accept_stochastic(sel, &probs, &draft_q, &dists, &mut self.rng)
+            };
+            metrics.accept_secs += sw.lap();
+
+            // Predictor observations: every non-root selected node.
+            let on_path: std::collections::HashSet<usize> =
+                outcome.path.iter().copied().collect();
+            for (j, &ci) in sel.order.iter().enumerate() {
+                if j == 0 {
+                    continue;
+                }
+                observations.push((trees[i].nodes[ci].dl, on_path.contains(&j)));
+            }
+
+            // Commit target KV rows for the accepted path.
+            let base = s.prefix_len;
+            for (step_k, &selpos) in outcome.path.iter().enumerate() {
+                let dest = base + step_k;
+                s.target_cache.commit_row(&outs[1], &outs[2], i, selpos, dest);
+                self.batch_target.as_mut().unwrap().commit_row(
+                    &outs[1],
+                    &outs[2],
+                    i,
+                    i,
+                    selpos,
+                    dest,
+                );
+                // Commit draft KV for the same token (draft rows are in
+                // level order of the candidate tree, which equals the
+                // candidate-insertion order).
+                let cand_idx = sel.order[selpos];
+                s.draft_cache.commit_row(
+                    &ctx.draft_rows.0,
+                    &ctx.draft_rows.1,
+                    i,
+                    cand_idx,
+                    dest,
+                );
+                self.batch_draft.as_mut().unwrap().commit_row(
+                    &ctx.draft_rows.0,
+                    &ctx.draft_rows.1,
+                    i,
+                    i,
+                    cand_idx,
+                    dest,
+                );
+            }
+
+            let k = outcome.accepted_drafts;
+            s.prefix_len += k + 1;
+            s.generated.extend_from_slice(&outcome.new_tokens);
+            s.rounds += 1;
+            s.drafts_accepted += k;
+            s.drafts_proposed += sel.len() - 1;
+            metrics.tokens_out += outcome.new_tokens.len() as u64;
+            metrics.drafts_accepted += k as u64;
+            metrics.drafts_proposed += (sel.len() - 1) as u64;
+            metrics.commit_secs += sw.lap();
         }
-        self.batch_target = Some(bt);
-        self.batch_draft = Some(bd);
-        self.batch_dirty = false;
+        metrics.rounds += 1;
+        Ok(SpecRound { observations, n_draft_total, tsd_secs })
+    }
+
+    // ------------------------------------------------------------------
+    // Two-stage KV migration (§6.2)
+    // ------------------------------------------------------------------
+
+    fn kv_bytes(&self, s: &LiveSample, from: usize, to: usize) -> usize {
+        2 * to.saturating_sub(from)
+            * (s.target_cache.row_elems() + s.draft_cache.row_elems())
+            * 4
+    }
+
+    fn kv_extract(&self, items: &[(&LiveSample, (usize, usize))]) -> HierarchicalKv {
+        let mut drafts = Vec::with_capacity(items.len());
+        let mut targets = Vec::with_capacity(items.len());
+        let mut ids = Vec::with_capacity(items.len());
+        let mut ranges = Vec::with_capacity(items.len());
+        for (s, range) in items {
+            drafts.push(&s.draft_cache);
+            targets.push(&s.target_cache);
+            ids.push(s.task.id);
+            ranges.push(*range);
+        }
+        pack_hierarchical(&drafts, &targets, &ids, &ranges)
+    }
+
+    /// Phase 3: unpack the Stage-1 bulk into fresh per-sample caches
+    /// immediately, keyed by source instance.
+    fn stage1_store(&mut self, from: usize, kv: HierarchicalKv) -> Result<()> {
+        let man = self.engine.manifest.clone();
+        let n = kv.spans.len();
+        let mut caches: Vec<(KvCache, KvCache)> = (0..n)
+            .map(|_| {
+                (
+                    KvCache::new(
+                        man.draft.n_layers,
+                        man.draft.n_heads,
+                        man.draft.max_seq,
+                        man.draft.d_head,
+                    ),
+                    KvCache::new(
+                        man.target.n_layers,
+                        man.target.n_heads,
+                        man.target.max_seq,
+                        man.target.d_head,
+                    ),
+                )
+            })
+            .collect();
+        {
+            let mut drafts: Vec<&mut KvCache> = Vec::new();
+            let mut targets: Vec<&mut KvCache> = Vec::new();
+            for (d, t) in caches.iter_mut() {
+                drafts.push(d);
+                targets.push(t);
+            }
+            unpack_hierarchical(&kv, &mut drafts, &mut targets);
+        }
+        let ids = kv.spans.iter().map(|s| s.id).collect();
+        self.mig_in.insert(from, (caches, ids));
         Ok(())
     }
 
-    /// Move finished samples out of the live set.
-    fn retire_finished(&mut self) {
-        let mut i = 0;
-        while i < self.live.len() {
-            if self.live[i].is_done() {
-                let s = self.live.remove(i);
-                self.metrics.samples_finished += 1;
-                self.finished.push(s.into_finished());
-                self.batch_dirty = true;
-            } else {
-                i += 1;
+    /// Merge the Stage-2 delta into the stashed caches and rebuild live
+    /// samples from their control snapshots.
+    fn stage2_restore(
+        &mut self,
+        from: usize,
+        delta: HierarchicalKv,
+        control: Vec<SampleControl>,
+    ) -> Result<Vec<LiveSample>> {
+        let (mut caches, ids) = self.mig_in.remove(&from).unwrap_or_default();
+        if !delta.spans.is_empty() {
+            // Delta spans arrive in Stage-1 order (an order-preserving
+            // subset: victims that finished during the overlap step were
+            // dropped), so disjoint &mut borrows can be split off in
+            // sequence.
+            let mut drafts: Vec<&mut KvCache> = Vec::new();
+            let mut targets: Vec<&mut KvCache> = Vec::new();
+            let mut rest: &mut [(KvCache, KvCache)] = &mut caches[..];
+            let mut rest_ids: &[u64] = &ids[..];
+            for span in &delta.spans {
+                let pos = rest_ids
+                    .iter()
+                    .position(|id| *id == span.id)
+                    .ok_or_else(|| anyhow!("stage2 delta for unknown sample {}", span.id))?;
+                let tail = std::mem::take(&mut rest);
+                let (_, at) = tail.split_at_mut(pos);
+                let (item, after) = at.split_first_mut().expect("pos in range");
+                drafts.push(&mut item.0);
+                targets.push(&mut item.1);
+                rest = after;
+                rest_ids = &rest_ids[pos + 1..];
             }
+            unpack_hierarchical(&delta, &mut drafts, &mut targets);
         }
-    }
-
-    /// Remove a live sample by id (migration out). Returns it.
-    pub fn take_live(&mut self, id: u64) -> Option<LiveSample> {
-        let pos = self.live.iter().position(|s| s.task.id == id)?;
-        self.batch_dirty = true;
-        Some(self.live.remove(pos))
-    }
-
-    /// Remove a waiting sample by id (cheap migration out).
-    pub fn take_waiting(&mut self, id: u64) -> Option<SampleTask> {
-        let pos = self.waiting.iter().position(|t| t.id == id)?;
-        Some(self.waiting.remove(pos))
-    }
-
-    /// Re-admit a migrated-in live sample.
-    pub fn insert_live(&mut self, s: LiveSample) {
-        self.batch_dirty = true;
-        self.live.push(s);
-        self.metrics.samples_migrated_in += 1;
-    }
-
-    /// Park a migrated-in sample (admitted when a decode slot frees up).
-    pub fn insert_parked(&mut self, s: LiveSample) {
-        self.parked.push(s);
-        self.metrics.samples_migrated_in += 1;
-    }
-
-    /// Run until every assigned sample finishes; returns finished count.
-    pub fn run_to_completion(&mut self, max_steps: usize) -> Result<usize> {
-        let mut steps = 0;
-        while !self.is_idle() && steps < max_steps {
-            self.step()?;
-            steps += 1;
+        let mut out = Vec::with_capacity(control.len());
+        for ctl in control {
+            let pos = ids
+                .iter()
+                .position(|id| *id == ctl.task.id)
+                .ok_or_else(|| anyhow!("stage2 control for unknown sample {}", ctl.task.id))?;
+            let (draft_cache, target_cache) = {
+                let c = &caches[pos];
+                (c.0.clone(), c.1.clone())
+            };
+            out.push(LiveSample {
+                task: ctl.task,
+                generated: ctl.generated,
+                prefix_len: ctl.prefix_len,
+                target_cache,
+                draft_cache,
+                rounds: ctl.rounds,
+                drafts_accepted: ctl.drafts_accepted,
+                drafts_proposed: ctl.drafts_proposed,
+            });
         }
-        Ok(self.finished.len())
+        Ok(out)
     }
 }
 

@@ -68,9 +68,11 @@ impl InstanceMetrics {
         }
     }
 
+    /// Tokens per second of instance stage time (0 when no time elapsed —
+    /// guards the divide for instances that never stepped).
     pub fn throughput(&self) -> f64 {
         let t = self.total_secs();
-        if t == 0.0 {
+        if t <= 0.0 {
             0.0
         } else {
             self.tokens_out as f64 / t

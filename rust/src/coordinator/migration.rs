@@ -132,21 +132,9 @@ pub struct AllocRequest {
     pub bytes: usize,
 }
 
-/// Stage 1: bulk KV of already-verified tokens; the source keeps decoding.
-#[derive(Debug)]
-pub struct Stage1 {
-    pub from_instance: usize,
-    pub kv: HierarchicalKv,
-}
-
-/// Stage 2: per-sample control state + the KV delta generated since the
-/// Stage-1 snapshot. After this the sample lives on the destination.
-#[derive(Debug)]
-pub struct Stage2 {
-    pub from_instance: usize,
-    pub kv_delta: HierarchicalKv,
-    pub control: Vec<SampleControl>,
-}
+// The Stage-1/Stage-2 message *sequencing* lives in the backend-generic
+// endpoint state machine (`crate::coordinator::core`); this module only
+// defines the payload representation and the control snapshot.
 
 /// Everything needed to resume a sample besides KV bytes.
 #[derive(Clone, Debug)]

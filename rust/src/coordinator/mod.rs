@@ -1,5 +1,21 @@
 //! The RLHFSpec coordinator (the paper's L3 contribution).
 //!
+//! The control plane is implemented **once** and runs on two backends:
+//!
+//! * [`backend`] — the [`backend::DecodeBackend`] trait: the few
+//!   genuinely backend-specific operations (prefill, draft, verify, KV
+//!   extract/inject, step cost/clock).
+//! * [`core`] — [`core::InstanceCore`]: the adaptive decode loop
+//!   (admission, AR vs. speculative stepping, §5.2 weight prediction,
+//!   §5.3 budget selection, retirement, metrics) and the §6.2 two-stage
+//!   migration endpoint state machine, generic over the backend. The
+//!   PJRT plane ([`instance`]) and the virtual-clock plane
+//!   ([`crate::sim::engine`]) are both `InstanceCore<_>` instantiations,
+//!   so every scheduler change is exercised at cluster scale in ordinary
+//!   `cargo test`.
+//!
+//! Around that core:
+//!
 //! * [`predictor`] — decision-feature prediction (§5.2): the draft-logit →
 //!   acceptance-probability fit `F`, the `t_sd(N_seq, N_draft)` regression,
 //!   and the bucket-based prediction cache.
@@ -8,14 +24,17 @@
 //! * [`reallocator`] — sample-reallocation policy (§6.1): roofline
 //!   threshold, greedy source/destination pairing under the Eq-6
 //!   constraints, cooldown.
-//! * [`migration`] — two-stage KV migration (§6.2): hierarchical packing,
-//!   allocation handshake, compute/transfer overlap.
-//! * [`instance`] — a generation instance: the speculative round loop
-//!   (draft → select → verify → accept → commit) over PJRT executables.
+//! * [`migration`] — two-stage KV migration payloads (§6.2): hierarchical
+//!   packing, allocation handshake types, compute/transfer overlap.
+//! * [`instance`] — the PJRT backend: the speculative round phases
+//!   (draft → verify → accept → commit) over compiled executables.
 //! * [`driver`] — multi-instance generation: worker threads, initial
-//!   allocation, the monitor/reallocation loop.
+//!   allocation, the monitor/reallocation loop pumping the shared
+//!   endpoint protocol.
 //! * [`metrics`] — per-stage timing and counters (§7.7 overhead analysis).
 
+pub mod backend;
+pub mod core;
 pub mod driver;
 pub mod instance;
 pub mod metrics;

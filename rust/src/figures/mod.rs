@@ -94,7 +94,7 @@ fn steady_throughput(mode: SimMode, dataset: &str, count: usize, rounds: usize, 
         inst.add(SimSample::new(k as u64, 128, usize::MAX / 2));
     }
     for _ in 0..rounds {
-        inst.step();
+        inst.step().expect("sim step cannot fail");
     }
     inst.throughput()
 }

@@ -9,6 +9,13 @@
 //!   workload-aware drafting-strategy selector (§5), sample reallocation
 //!   with two-stage KV migration (§6), plus the calibrated instance
 //!   simulator used to regenerate the paper's evaluation at testbed scale.
+//!   The scheduling control plane is written **once**:
+//!   [`coordinator::core::InstanceCore`] is generic over a
+//!   [`coordinator::backend::DecodeBackend`], and both the PJRT plane
+//!   (`InstanceCore<PjrtBackend>`) and the virtual-clock simulation plane
+//!   (`InstanceCore<SimBackend>`) instantiate it — including the full
+//!   §6.2 two-stage migration protocol, which therefore runs at 8–64
+//!   simulated instances inside ordinary `cargo test`.
 //! * **L2 (python/compile/model.py)** — JAX step functions (prefill /
 //!   tree-verify / train steps), AOT-lowered to HLO text once at build
 //!   time (`make artifacts`).

@@ -1,17 +1,27 @@
-//! Multi-instance simulation: the real reallocator + virtual event loop.
+//! Multi-instance simulation: the real reallocator + the real §6.2
+//! migration protocol over a virtual event loop.
 //!
 //! Instances advance on private virtual clocks; the cluster repeatedly
-//! steps the laggard (discrete-event style), runs the **real**
-//! [`Reallocator`] every `cooldown` steps, and models migration downtime
-//! per §6.2: two-stage migration overlaps the bulk (Stage-1) transfer
-//! with source compute, so a sample's downtime is only the small Stage-2
-//! delta; the `Naive` style (ablation) stalls for the full KV transfer.
+//! steps the laggard (discrete-event style) and runs the **real**
+//! [`Reallocator`] every `cooldown` steps. Migration is no longer a
+//! cluster-private shortcut: each order is pumped through the *same*
+//! `MigrateOut → AllocReq → AllocAck → Stage1 → Stage2` endpoint state
+//! machine ([`crate::coordinator::core::InstanceCore`]) that the threaded
+//! PJRT driver uses — the cluster only plays the transport, assigning
+//! virtual transfer times to the Stage-2 packets:
+//!
+//! * `TwoStage` (§6.2) — the Stage-1 bulk overlaps source compute, so a
+//!   sample's downtime is only the small Stage-2 delta (≈ one round of
+//!   tokens) plus the handshake latency;
+//! * `Naive` (ablation) — stop-and-copy: downtime is the full KV
+//!   transfer.
 
+use crate::coordinator::core::{AckOutcome, MigrateStart, Stage2Msg};
 use crate::coordinator::reallocator::Reallocator;
 use crate::data::lengths::LengthModel;
 use crate::sim::acceptance::AcceptanceModel;
 use crate::sim::cost_model::CostModel;
-use crate::sim::engine::{SimInstance, SimMode, SimParams, SimSample};
+use crate::sim::engine::{SimBackend, SimInstance, SimMode, SimParams, SimSample};
 use crate::utils::rng::Rng;
 
 /// How migration downtime is modeled (§6.2 vs the naive ablation).
@@ -72,7 +82,7 @@ pub struct ClusterResult {
     pub migration_downtime: f64,
     /// Mean accepted drafts per round across instances.
     pub mean_accepted: f64,
-    /// Per-instance (time, cumulative tokens, live) traces.
+    /// Per-instance (time, cumulative tokens, assigned samples) traces.
     pub traces: Vec<Vec<(f64, u64, usize)>>,
     /// Fig-7 curve from instance 0's (real) acceptance predictor.
     pub fig7_curve: Vec<(f64, f64, u64)>,
@@ -80,12 +90,22 @@ pub struct ClusterResult {
 }
 
 impl ClusterResult {
+    /// Tokens per virtual second (0 when nothing ran yet).
     pub fn tokens_per_sec(&self) -> f64 {
-        self.total_tokens as f64 / self.makespan.max(1e-9)
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            self.total_tokens as f64 / self.makespan
+        }
     }
 
+    /// Samples per virtual second (0 when nothing ran yet).
     pub fn samples_per_sec(&self) -> f64 {
-        self.n_samples as f64 / self.makespan.max(1e-9)
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            self.n_samples as f64 / self.makespan
+        }
     }
 }
 
@@ -94,8 +114,8 @@ pub struct SimCluster {
     pub instances: Vec<SimInstance>,
     realloc: Reallocator,
     cost: CostModel,
-    /// (arrival_time, dest, sample) in-flight migrations.
-    in_flight: Vec<(f64, usize, SimSample)>,
+    /// Stage-2 packets on the virtual link: (arrival time, packet).
+    in_flight: Vec<(f64, Stage2Msg<SimBackend>)>,
     migrations: u64,
     downtime: f64,
     steps: u64,
@@ -113,7 +133,7 @@ impl SimCluster {
                     cfg.params.clone(),
                     cost.clone(),
                     accept,
-                    cfg.seed ^ (i as u64 + 1) * 0x9E37,
+                    cfg.seed ^ ((i as u64 + 1) * 0x9E37),
                 );
                 inst.profile_offline();
                 inst
@@ -158,20 +178,21 @@ impl SimCluster {
         c
     }
 
+    /// Deliver Stage-2 packets whose destination clock reached the
+    /// arrival time (or immediately if the destination is idle — it
+    /// would just be waiting).
     fn deliver_arrivals(&mut self) {
         let mut i = 0;
         while i < self.in_flight.len() {
-            let (at, dest, _) = &self.in_flight[i];
-            // Deliver when the destination clock reaches the arrival time
-            // (or immediately if the destination is idle — it would just
-            // be waiting).
-            if self.instances[*dest].clock >= *at || self.instances[*dest].is_idle() {
-                let (at, dest, s) = self.in_flight.remove(i);
+            let (at, msg) = &self.in_flight[i];
+            let dest = msg.to;
+            if self.instances[dest].backend.clock >= *at || self.instances[dest].is_idle() {
+                let (at, msg) = self.in_flight.remove(i);
                 let inst = &mut self.instances[dest];
-                if inst.is_idle() && inst.clock < at {
-                    inst.clock = at; // idle destination waits for the KV
+                if inst.is_idle() && inst.backend.clock < at {
+                    inst.backend.clock = at; // idle destination waits for the KV
                 }
-                inst.add(s);
+                inst.handle_stage2(msg).expect("sim stage2 delivery");
             } else {
                 i += 1;
             }
@@ -188,20 +209,21 @@ impl SimCluster {
                 .iter()
                 .enumerate()
                 .filter(|(_, x)| !x.is_idle())
-                .min_by(|a, b| a.1.clock.partial_cmp(&b.1.clock).unwrap())
+                .min_by(|a, b| a.1.backend.clock.partial_cmp(&b.1.backend.clock).unwrap())
                 .map(|(i, _)| i);
             let Some(i) = next else {
                 if self.in_flight.is_empty() {
                     break;
                 }
-                // Only in-flight samples remain: force delivery.
-                let (at, dest, s) = self.in_flight.remove(0);
+                // Only in-flight packets remain: force delivery.
+                let (at, msg) = self.in_flight.remove(0);
+                let dest = msg.to;
                 let inst = &mut self.instances[dest];
-                inst.clock = inst.clock.max(at);
-                inst.add(s);
+                inst.backend.clock = inst.backend.clock.max(at);
+                inst.handle_stage2(msg).expect("sim stage2 delivery");
                 continue;
             };
-            self.instances[i].step();
+            self.instances[i].step().expect("sim step");
             self.steps += 1;
 
             if self.cfg.realloc_enabled {
@@ -210,7 +232,7 @@ impl SimCluster {
                 if self.realloc.should_decide(self.steps, &counts) {
                     // Feed recent operating points and refresh the knee.
                     for inst in &self.instances {
-                        if let Some(&(t, tok, live)) = inst.trace.last() {
+                        if let Some(&(t, tok, live)) = inst.metrics.trace.last() {
                             if t > 0.0 && live > 0 {
                                 self.realloc.observe(live, tok as f64 / t);
                             }
@@ -220,17 +242,17 @@ impl SimCluster {
                     let caps = vec![self.cfg.params.max_batch * 4; self.instances.len()];
                     let plan = self.realloc.decide(self.steps, &counts, &caps);
                     for m in plan {
-                        self.execute_migration(m.from, m.to, m.count);
+                        self.migrate(m.from, m.to, m.count);
                     }
                 }
             }
         }
 
-        let total_tokens: u64 = self.instances.iter().map(|x| x.tokens_out).sum();
+        let total_tokens: u64 = self.instances.iter().map(|x| x.metrics.tokens_out).sum();
         let makespan = self
             .instances
             .iter()
-            .map(|x| x.clock)
+            .map(|x| x.backend.clock)
             .fold(0.0f64, f64::max);
         let (acc, rounds): (u64, u64) = self
             .instances
@@ -245,31 +267,64 @@ impl SimCluster {
             realloc_decisions: self.realloc.decisions,
             migration_downtime: self.downtime,
             mean_accepted: if rounds == 0 { 0.0 } else { acc as f64 / rounds as f64 },
-            traces: self.instances.iter().map(|x| x.trace.clone()).collect(),
+            traces: self.instances.iter().map(|x| x.metrics.trace.clone()).collect(),
             fig7_curve: self.instances[0].accept_pred.curve(),
             accept_corr: self.instances[0].accept_pred.correlation(),
         }
     }
 
-    fn execute_migration(&mut self, from: usize, to: usize, count: usize) {
-        let samples = self.instances[from].take_for_migration(count);
-        let now = self.instances[from].clock;
-        for s in samples {
-            let full_bytes = self.cost.kv_bytes(s.seq_len());
+    /// Execute one reallocation order through the real §6.2 endpoint
+    /// protocol, at the source's current virtual instant. Control
+    /// messages (AllocReq/Ack) are ~µs against ~ms decode steps and cost
+    /// no virtual time; the Stage-1 bulk overlaps source compute; only
+    /// the Stage-2 packet rides the modeled link.
+    fn migrate(&mut self, from: usize, to: usize, count: usize) {
+        let stage2 = match self.instances[from].begin_migration(to, count) {
+            MigrateStart::Refused => {
+                self.realloc.report_refusal();
+                return;
+            }
+            MigrateStart::QueueOnly(pkt) => pkt,
+            MigrateStart::AllocReq(req) => {
+                let ok = self.instances[to].handle_alloc_req(&req);
+                match self.instances[from].handle_alloc_ack(ok) {
+                    AckOutcome::Stage1(s1) => {
+                        self.instances[to].handle_stage1(s1).expect("sim stage1");
+                        // Victims stop decoding at the decision in the
+                        // virtual plane; the Stage-2 delta models the
+                        // round of tokens the overlap step produces.
+                        self.instances[from]
+                            .poll_stage2()
+                            .expect("stage1 was just sent")
+                    }
+                    _ => {
+                        self.realloc.report_refusal();
+                        return;
+                    }
+                }
+            }
+        };
+        let now = self.instances[from].backend.clock;
+        let mut latest = now;
+        for c in &stage2.control {
             let downtime = match self.cfg.migration_style {
                 MigrationStyle::TwoStage => {
                     // Stage 1 overlaps with source compute; downtime is the
                     // Stage-2 delta (≈ one round of new tokens) + handshake.
-                    let delta_tokens = (s.mean_accepted().ceil() as usize + 1).max(1);
+                    let delta_tokens = (c.mean_accepted().ceil() as usize + 1).max(1);
                     2.0 * self.cost.link_latency
                         + self.cost.t_transfer(self.cost.kv_bytes(delta_tokens))
                 }
-                MigrationStyle::Naive => self.cost.t_transfer(full_bytes),
+                MigrationStyle::Naive => {
+                    self.cost.t_transfer(self.cost.kv_bytes(c.seq_len()))
+                }
             };
             self.downtime += downtime;
             self.migrations += 1;
-            self.in_flight.push((now + downtime, to, s));
+            latest = latest.max(now + downtime);
         }
+        self.migrations += stage2.waiting_tasks.len() as u64;
+        self.in_flight.push((latest, stage2));
     }
 }
 
@@ -380,5 +435,43 @@ mod tests {
         let r2 = SimCluster::new(base_cfg(32, 2)).run();
         assert_eq!(r1.total_tokens, r2.total_tokens);
         assert!((r1.makespan - r2.makespan).abs() < 1e-12);
+    }
+
+    #[test]
+    fn migration_conserves_samples() {
+        let mut cfg = base_cfg(0, 4);
+        cfg.cooldown = 8;
+        let mut c = SimCluster::with_assignment(
+            cfg,
+            vec![vec![900; 24], vec![40; 4], vec![40; 4], vec![40; 4]],
+        );
+        let r = c.run();
+        assert!(r.migrations > 0, "skew must trigger migrations");
+        // No sample lost or duplicated across the protocol.
+        let mut ids: Vec<u64> = c
+            .instances
+            .iter()
+            .flat_map(|x| x.finished.iter().map(|s| s.id))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..36).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn throughput_accessors_guard_zero_makespan() {
+        let r = ClusterResult {
+            makespan: 0.0,
+            total_tokens: 0,
+            n_samples: 0,
+            migrations: 0,
+            realloc_decisions: 0,
+            migration_downtime: 0.0,
+            mean_accepted: 0.0,
+            traces: Vec::new(),
+            fig7_curve: Vec::new(),
+            accept_corr: 0.0,
+        };
+        assert_eq!(r.tokens_per_sec(), 0.0);
+        assert_eq!(r.samples_per_sec(), 0.0);
     }
 }

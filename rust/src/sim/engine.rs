@@ -1,30 +1,41 @@
-//! One simulated generation instance on a virtual clock.
+//! The simulated decode backend: one instance on a virtual clock.
 //!
-//! Runs the identical round structure as the real
-//! [`crate::coordinator::instance::GenerationInstance`] — synthetic
-//! drafting → real weight prediction → **the real selector** → synthetic
-//! verification/acceptance → bookkeeping — with wall time supplied by the
-//! [`CostModel`] instead of PJRT execution.
+//! Since the refactor onto [`crate::coordinator::core::InstanceCore`],
+//! this module contains **no scheduling logic of its own** — admission,
+//! weight prediction, budget selection, retirement and the migration
+//! state machine are the *same code* the PJRT plane runs. The
+//! [`SimBackend`] only substitutes the hardware:
+//!
+//! * drafting — the calibrated synthetic tree process
+//!   ([`AcceptanceModel::make_tree`]);
+//! * verification — the ground-truth acceptance walk (the real
+//!   `AcceptancePredictor` has to *learn* the curve online, as on
+//!   hardware);
+//! * step durations — the [`CostModel`], advancing a private virtual
+//!   clock;
+//! * migration payloads — byte counts only (the virtual link's transfer
+//!   model lives in [`crate::sim::cluster`]).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
 
 use crate::config::SelectorConfig;
-use crate::coordinator::predictor::{AcceptancePredictor, TsdPredictor};
-use crate::coordinator::selector::{select_strategy, StrategyChoice};
+use crate::coordinator::backend::{DecodeBackend, SpecRound};
+use crate::coordinator::core::InstanceCore;
+use crate::coordinator::metrics::InstanceMetrics;
 use crate::sim::acceptance::AcceptanceModel;
 use crate::sim::cost_model::CostModel;
+use crate::spec::tree::{CandidateTree, Selection};
 use crate::utils::rng::Rng;
 
-/// Decode policy of a simulated instance.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum SimMode {
-    /// Autoregressive (Verl / OpenRLHF generation).
-    Ar,
-    /// Speculative with a fixed draft budget (the `Speculative` baseline).
-    StaticSpec(usize),
-    /// Full workload-aware selection.
-    Adaptive,
-}
+/// Decode policy of a simulated instance — the *same* mode enum the PJRT
+/// plane uses (one scheduler, two backends).
+pub use crate::coordinator::core::DecodeMode as SimMode;
 
-/// A simulated sample: counts tokens until its target length.
+/// A simulated sample: counts tokens until its target length. It is its
+/// own task (admission is free), finished record and migration control
+/// snapshot.
 #[derive(Clone, Debug)]
 pub struct SimSample {
     pub id: u64,
@@ -85,30 +96,191 @@ impl Default for SimParams {
     }
 }
 
-pub struct SimInstance {
-    pub id: usize,
-    pub clock: f64,
-    pub live: Vec<SimSample>,
-    pub finished: Vec<SimSample>,
-    pub tokens_out: u64,
-    pub rounds: u64,
+/// Simulated migration payload: ids + modeled bytes (no actual KV data).
+#[derive(Clone, Debug)]
+pub struct SimKv {
+    pub ids: Vec<u64>,
+    pub bytes: usize,
+}
+
+/// The virtual-clock backend.
+pub struct SimBackend {
     pub params: SimParams,
     pub cost: CostModel,
     pub accept_model: AcceptanceModel,
-    pub accept_pred: AcceptancePredictor,
-    pub tsd_pred: TsdPredictor,
-    /// (virtual time, cumulative tokens, live count) trace.
-    pub trace: Vec<(f64, u64, usize)>,
-    /// Time spent stalled by migrations (naive migration comparison).
-    pub stall_secs: f64,
-    /// Seconds spent in selector decisions (modeled WDS overhead, §7.7:
-    /// measured per-call cost of the real selector code is added by the
-    /// cluster driver).
-    pub steps_since_refit: usize,
+    /// Virtual seconds elapsed on this instance.
+    pub clock: f64,
     rng: Rng,
+    /// Stage-1 buffers keyed by source instance (ids only — simulated
+    /// KV carries no data).
+    stage1: BTreeMap<usize, Vec<u64>>,
 }
 
-impl SimInstance {
+impl DecodeBackend for SimBackend {
+    type Task = SimSample;
+    type Sample = SimSample;
+    type Finished = SimSample;
+    type DraftCtx = ();
+    type KvPayload = SimKv;
+    type Control = SimSample;
+
+    fn sample_id(s: &SimSample) -> u64 {
+        s.id
+    }
+
+    fn committed_len(s: &SimSample) -> usize {
+        s.seq_len()
+    }
+
+    fn seq_len(s: &SimSample) -> usize {
+        s.seq_len()
+    }
+
+    fn mean_accepted(s: &SimSample) -> f64 {
+        s.mean_accepted()
+    }
+
+    fn is_done(s: &SimSample) -> bool {
+        s.done()
+    }
+
+    fn finish(s: SimSample) -> SimSample {
+        s
+    }
+
+    fn control_of(s: &SimSample) -> SimSample {
+        s.clone()
+    }
+
+    fn capacity(&self) -> usize {
+        self.params.max_batch
+    }
+
+    fn max_draft(&self) -> usize {
+        self.params.max_draft
+    }
+
+    /// §6.1 migration-score normalizer (the simulated testbed's max
+    /// context, matching the pre-refactor constant).
+    fn max_seq(&self) -> usize {
+        2048
+    }
+
+    fn now(&self) -> f64 {
+        self.clock
+    }
+
+    /// Admission is free in simulation: the task *is* the live sample.
+    fn prefill(&mut self, task: SimSample, _metrics: &mut InstanceMetrics) -> Result<SimSample> {
+        Ok(task)
+    }
+
+    fn step_ar(&mut self, live: &mut [SimSample], metrics: &mut InstanceMetrics) -> Result<()> {
+        let b = live.len();
+        let n_seq: usize = live.iter().map(|s| s.seq_len()).sum();
+        let dt = self.cost.t_ar_step(n_seq, b);
+        for s in live.iter_mut() {
+            s.generated += 1;
+            s.rounds += 1;
+            metrics.tokens_out += 1;
+        }
+        self.clock += dt;
+        metrics.rounds += 1;
+        Ok(())
+    }
+
+    /// Synthetic drafting: one calibrated candidate tree per live sample.
+    fn draft(
+        &mut self,
+        live: &mut [SimSample],
+        _metrics: &mut InstanceMetrics,
+    ) -> Result<(Vec<CandidateTree>, ())> {
+        let mut trees = Vec::with_capacity(live.len());
+        for _ in 0..live.len() {
+            trees.push(self.accept_model.make_tree(
+                0,
+                self.params.depth,
+                self.params.branch,
+                self.params.expand_width,
+                self.params.max_draft.max(8) * 2,
+                &mut self.rng,
+            ));
+        }
+        Ok((trees, ()))
+    }
+
+    /// Synthetic verification: walk each selected subtree against the
+    /// ground-truth acceptance process; the round's duration comes from
+    /// the cost model and advances the virtual clock.
+    fn verify_accept(
+        &mut self,
+        live: &mut [SimSample],
+        trees: &[CandidateTree],
+        _ctx: (),
+        selections: &[Selection],
+        metrics: &mut InstanceMetrics,
+    ) -> Result<SpecRound> {
+        let n_seq: usize = live.iter().map(|s| s.seq_len()).sum();
+        let mut n_draft_total = 0usize;
+        let mut observations: Vec<(f32, bool)> = Vec::new();
+        for (i, tree) in trees.iter().enumerate() {
+            let sel = &selections[i];
+            n_draft_total += sel.len();
+            let (accepted, outcomes) = self.accept_model.walk(sel, tree, &mut self.rng);
+            observations.extend(outcomes);
+            let s = &mut live[i];
+            let new_tokens = accepted + 1; // bonus token
+            s.generated += new_tokens;
+            s.rounds += 1;
+            s.accepted += accepted;
+            metrics.tokens_out += new_tokens as u64;
+            metrics.drafts_accepted += accepted as u64;
+            metrics.drafts_proposed += (sel.len() - 1) as u64;
+        }
+        let dt = self.cost.t_spec_round(self.params.depth, n_seq, n_draft_total);
+        // Online t_sd observation carries measurement noise, as on
+        // hardware.
+        let noisy = dt * (1.0 + 0.02 * (self.rng.f64() * 2.0 - 1.0));
+        self.clock += dt;
+        metrics.rounds += 1;
+        Ok(SpecRound { observations, n_draft_total, tsd_secs: noisy })
+    }
+
+    fn kv_bytes(&self, _s: &SimSample, from: usize, to: usize) -> usize {
+        self.cost.kv_bytes(to.saturating_sub(from))
+    }
+
+    fn kv_extract(&self, items: &[(&SimSample, (usize, usize))]) -> SimKv {
+        SimKv {
+            ids: items.iter().map(|(s, _)| s.id).collect(),
+            bytes: items
+                .iter()
+                .map(|(_, (from, to))| self.cost.kv_bytes(to.saturating_sub(*from)))
+                .sum(),
+        }
+    }
+
+    fn stage1_store(&mut self, from: usize, kv: SimKv) -> Result<()> {
+        self.stage1.insert(from, kv.ids);
+        Ok(())
+    }
+
+    fn stage2_restore(
+        &mut self,
+        from: usize,
+        _delta: SimKv,
+        control: Vec<SimSample>,
+    ) -> Result<Vec<SimSample>> {
+        self.stage1.remove(&from);
+        Ok(control)
+    }
+}
+
+/// One simulated generation instance: the shared adaptive decode loop
+/// over the [`SimBackend`].
+pub type SimInstance = InstanceCore<SimBackend>;
+
+impl InstanceCore<SimBackend> {
     pub fn new(
         id: usize,
         params: SimParams,
@@ -116,43 +288,39 @@ impl SimInstance {
         accept_model: AcceptanceModel,
         seed: u64,
     ) -> Self {
-        let sel = &params.selector;
-        SimInstance {
-            id,
-            clock: 0.0,
-            live: Vec::new(),
-            finished: Vec::new(),
-            tokens_out: 0,
-            rounds: 0,
-            accept_pred: AcceptancePredictor::new(24),
-            tsd_pred: TsdPredictor::new(sel.nseq_bucket, sel.ndraft_bucket),
+        let selector = params.selector.clone();
+        let mode = params.mode;
+        let backend = SimBackend {
             params,
             cost,
             accept_model,
-            trace: Vec::new(),
-            stall_secs: 0.0,
-            steps_since_refit: 0,
+            clock: 0.0,
             rng: Rng::new(seed),
-        }
+            stage1: BTreeMap::new(),
+        };
+        InstanceCore::with_backend(id, backend, mode, selector)
     }
 
+    /// Queue a sample (admitted into a decode slot on the next step).
     pub fn add(&mut self, sample: SimSample) {
-        self.live.push(sample);
+        self.add_task(sample);
     }
 
-    pub fn sample_count(&self) -> usize {
-        self.live.len()
+    /// Virtual seconds elapsed on this instance.
+    pub fn clock(&self) -> f64 {
+        self.backend.clock
     }
 
-    pub fn is_idle(&self) -> bool {
-        self.live.is_empty()
+    pub fn tokens_out(&self) -> u64 {
+        self.metrics.tokens_out
     }
 
+    /// Virtual tokens/sec over the instance lifetime (0 before any step).
     pub fn throughput(&self) -> f64 {
-        if self.clock <= 0.0 {
+        if self.backend.clock <= 0.0 {
             0.0
         } else {
-            self.tokens_out as f64 / self.clock
+            self.metrics.tokens_out as f64 / self.backend.clock
         }
     }
 
@@ -162,12 +330,13 @@ impl SimInstance {
     /// Here (a) comes from the cost model + measurement noise and (b)
     /// from profiling rounds against the ground-truth acceptance process.
     pub fn profile_offline(&mut self) {
-        for &b in &[1usize, 2, 4, 8, 16, 32, 64] {
+        let b = &mut self.backend;
+        for &bsz in &[1usize, 2, 4, 8, 16, 32, 64] {
             for &seq in &[128usize, 512, 1024, 1536] {
                 for &n in &[2usize, 4, 8, 16, 24, 32, 48] {
-                    let t = self.cost.t_spec_round(self.params.depth, b * seq, b * n);
-                    let noisy = t * (1.0 + 0.03 * (self.rng.f64() * 2.0 - 1.0));
-                    self.tsd_pred.observe(b * seq, b * n, noisy);
+                    let t = b.cost.t_spec_round(b.params.depth, bsz * seq, bsz * n);
+                    let noisy = t * (1.0 + 0.03 * (b.rng.f64() * 2.0 - 1.0));
+                    self.tsd_pred.observe(bsz * seq, bsz * n, noisy);
                 }
             }
         }
@@ -175,171 +344,31 @@ impl SimInstance {
         // Acceptance-fit profiling rounds (full trees so deep/low-dl bins
         // get coverage too).
         for _ in 0..150 {
-            let mut tree = self.accept_model.make_tree(
+            let mut tree = b.accept_model.make_tree(
                 0,
-                self.params.depth,
-                self.params.branch,
-                self.params.expand_width,
-                self.params.max_draft.max(8) * 2,
-                &mut self.rng,
+                b.params.depth,
+                b.params.branch,
+                b.params.expand_width,
+                b.params.max_draft.max(8) * 2,
+                &mut b.rng,
             );
             for node in tree.nodes.iter_mut() {
                 node.w = node.dl;
             }
             let sel = tree.selection(&tree.select_top_n(tree.len()));
-            let (_, outcomes) = self.accept_model.walk(&sel, &tree, &mut self.rng);
+            let (_, outcomes) = b.accept_model.walk(&sel, &tree, &mut b.rng);
             for (dl, ok) in outcomes {
                 self.accept_pred.observe(dl, ok);
             }
         }
         self.accept_pred.refit();
     }
-
-    /// One decode step over the current batch. Returns the step's virtual
-    /// duration (0 if idle).
-    pub fn step(&mut self) -> f64 {
-        if self.live.is_empty() {
-            return 0.0;
-        }
-        let b = self.live.len().min(self.params.max_batch);
-        let n_seq: usize = self.live.iter().take(b).map(|s| s.seq_len()).sum();
-
-        let dt = match self.params.mode {
-            SimMode::Ar => {
-                let dt = self.cost.t_ar_step(n_seq, b);
-                for s in self.live.iter_mut().take(b) {
-                    s.generated += 1;
-                    s.rounds += 1;
-                    self.tokens_out += 1;
-                }
-                dt
-            }
-            SimMode::StaticSpec(n) => self.spec_step(b, n_seq, Some(n)),
-            SimMode::Adaptive => self.spec_step(b, n_seq, None),
-        };
-
-        self.clock += dt;
-        self.rounds += 1;
-        self.steps_since_refit += 1;
-        if self.steps_since_refit >= self.params.selector.refit_every {
-            self.accept_pred.refit();
-            self.tsd_pred.refit();
-            self.steps_since_refit = 0;
-        }
-        // Retire finished samples.
-        let mut i = 0;
-        while i < self.live.len() {
-            if self.live[i].done() {
-                self.finished.push(self.live.remove(i));
-            } else {
-                i += 1;
-            }
-        }
-        self.trace.push((self.clock, self.tokens_out, self.live.len()));
-        dt
-    }
-
-    fn spec_step(&mut self, b: usize, n_seq: usize, static_n: Option<usize>) -> f64 {
-        // 1. synthetic drafting: candidate tree per live sample
-        let mut trees = Vec::with_capacity(b);
-        for _ in 0..b {
-            let mut t = self.accept_model.make_tree(
-                0,
-                self.params.depth,
-                self.params.branch,
-                self.params.expand_width,
-                self.params.max_draft.max(8) * 2,
-                &mut self.rng,
-            );
-            // 2. REAL weight prediction
-            for node in t.nodes.iter_mut() {
-                node.w = if node.parent.is_none() {
-                    1.0
-                } else {
-                    self.accept_pred.predict(node.dl)
-                };
-            }
-            trees.push(t);
-        }
-
-        // 3. strategy: static or the REAL layer-level search
-        let n = match static_n {
-            Some(n) => StrategyChoice {
-                n: n.max(1),
-                predicted_al: 0.0,
-                predicted_tsd: 0.0,
-                evaluated: 0,
-            },
-            None => {
-                let refs: Vec<&crate::spec::tree::CandidateTree> = trees.iter().collect();
-                select_strategy(
-                    &self.params.selector,
-                    &mut self.tsd_pred,
-                    &refs,
-                    n_seq,
-                    self.params.max_draft,
-                )
-            }
-        }
-        .n;
-
-        // 4. synthetic verification + ground-truth acceptance
-        let mut n_draft_total = 0usize;
-        for (i, tree) in trees.iter().enumerate() {
-            let sel = tree.selection(&tree.select_top_n(n));
-            n_draft_total += sel.len();
-            let (accepted, outcomes) = self.accept_model.walk(&sel, tree, &mut self.rng);
-            for (dl, ok) in outcomes {
-                self.accept_pred.observe(dl, ok);
-            }
-            let s = &mut self.live[i];
-            let new_tokens = accepted + 1; // bonus token
-            s.generated += new_tokens;
-            s.rounds += 1;
-            s.accepted += accepted;
-            self.tokens_out += new_tokens as u64;
-        }
-
-        let dt = self.cost.t_spec_round(self.params.depth, n_seq, n_draft_total);
-        // 5. online t_sd observation (with measurement noise)
-        let noisy = dt * (1.0 + 0.02 * (self.rng.f64() * 2.0 - 1.0));
-        self.tsd_pred.observe(n_seq, n_draft_total, noisy);
-        dt
-    }
-
-    /// Remove `count` samples for migration, preferring the §6.1 score
-    /// (short sequences, low mean accepted). Returns them.
-    pub fn take_for_migration(&mut self, count: usize) -> Vec<SimSample> {
-        let max_seq = 2048;
-        let mut idx: Vec<usize> = (0..self.live.len()).collect();
-        idx.sort_by(|&a, &b| {
-            let sa = crate::coordinator::migration::migration_score(
-                self.live[a].seq_len(),
-                self.live[a].mean_accepted(),
-                max_seq,
-            );
-            let sb = crate::coordinator::migration::migration_score(
-                self.live[b].seq_len(),
-                self.live[b].mean_accepted(),
-                max_seq,
-            );
-            sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal)
-        });
-        let chosen: Vec<usize> = idx.into_iter().take(count).collect();
-        let mut out = Vec::new();
-        // remove from highest index first
-        let mut sorted = chosen;
-        sorted.sort_unstable_by(|a, b| b.cmp(a));
-        for i in sorted {
-            out.push(self.live.remove(i));
-        }
-        out
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::core::MigrateStart;
 
     fn inst(mode: SimMode, seed: u64) -> SimInstance {
         let mut i = SimInstance::new(
@@ -363,9 +392,9 @@ mod tests {
     fn ar_generates_one_token_per_step() {
         let mut i = inst(SimMode::Ar, 0);
         load(&mut i, 4, 10);
-        i.step();
-        assert_eq!(i.tokens_out, 4);
-        assert!(i.clock > 0.0);
+        i.step().unwrap();
+        assert_eq!(i.tokens_out(), 4);
+        assert!(i.clock() > 0.0);
     }
 
     #[test]
@@ -375,10 +404,10 @@ mod tests {
         load(&mut a, 16, 300);
         load(&mut s, 16, 300);
         while !a.is_idle() {
-            a.step();
+            a.step().unwrap();
         }
         while !s.is_idle() {
-            s.step();
+            s.step().unwrap();
         }
         assert!(
             s.throughput() > a.throughput() * 1.3,
@@ -397,14 +426,14 @@ mod tests {
             let mut s = inst(SimMode::StaticSpec(n), 2);
             load(&mut s, 24, 400);
             while !s.is_idle() {
-                s.step();
+                s.step().unwrap();
             }
             best_static = best_static.max(s.throughput());
         }
         let mut a = inst(SimMode::Adaptive, 2);
         load(&mut a, 24, 400);
         while !a.is_idle() {
-            a.step();
+            a.step().unwrap();
         }
         assert!(
             a.throughput() > best_static * 0.9,
@@ -419,7 +448,7 @@ mod tests {
         load(&mut i, 10, 50);
         let mut guard = 0;
         while !i.is_idle() && guard < 100_000 {
-            i.step();
+            i.step().unwrap();
             guard += 1;
         }
         assert_eq!(i.finished.len(), 10);
@@ -438,10 +467,10 @@ mod tests {
             i.add(SimSample::new(k as u64, 100, l));
         }
         while !i.is_idle() {
-            i.step();
+            i.step().unwrap();
         }
         // instantaneous throughput: first vs last quarter of the trace
-        let t = &i.trace;
+        let t = &i.metrics.trace;
         let q = t.len() / 4;
         let early = (t[q].1 as f64) / t[q].0;
         let late = (t[t.len() - 1].1 - t[t.len() - 1 - q].1) as f64
@@ -451,12 +480,28 @@ mod tests {
 
     #[test]
     fn migration_picks_short_low_accept_samples() {
+        // The shared §6.1 victim picker must choose the short sequence.
         let mut i = inst(SimMode::Adaptive, 5);
-        i.add(SimSample::new(0, 100, 800));
-        i.add(SimSample::new(1, 100, 800));
-        i.live[0].generated = 700; // long sequence
-        i.live[1].generated = 30; // short sequence
-        let taken = i.take_for_migration(1);
-        assert_eq!(taken[0].id, 1);
+        let mut long = SimSample::new(0, 100, 800);
+        long.generated = 700; // long sequence
+        let mut short = SimSample::new(1, 100, 800);
+        short.generated = 30; // short sequence
+        i.live.push(long);
+        i.live.push(short);
+        match i.begin_migration(1, 1) {
+            MigrateStart::AllocReq(req) => assert_eq!(req.sample_ids, vec![1]),
+            _ => panic!("expected an alloc request for a live victim"),
+        }
+    }
+
+    #[test]
+    fn capacity_caps_decode_slots() {
+        let mut i = inst(SimMode::Adaptive, 6);
+        let cap = i.capacity();
+        load(&mut i, cap + 9, 40);
+        i.step().unwrap();
+        assert_eq!(i.live.len() + i.finished.len(), cap);
+        assert_eq!(i.waiting.len(), 9);
+        assert_eq!(i.sample_count() + i.finished.len(), cap + 9);
     }
 }

@@ -2,10 +2,14 @@
 //!
 //! The paper's testbed (8×L40S, Llama-3.1-8B + EAGLE) is unavailable
 //! (repro band 0/5), so the evaluation figures are regenerated on a
-//! discrete-event simulator whose **control plane is the real code**:
-//! candidate trees ([`crate::spec::tree`]), the workload-aware selector
-//! ([`crate::coordinator::selector`]), the predictors and the reallocator
-//! all run unmodified. Only two things are synthetic:
+//! discrete-event simulator whose **control plane is the real code** —
+//! not a reimplementation. Since the `DecodeBackend` refactor, a
+//! simulated instance *is* [`crate::coordinator::core::InstanceCore`]
+//! over [`engine::SimBackend`]: admission, candidate-tree weighting, the
+//! workload-aware selector, the predictors, victim picking and the full
+//! §6.2 `AllocReq → AllocAck → Stage1 → Stage2` migration state machine
+//! are byte-for-byte the same code the PJRT driver runs. Only two things
+//! are synthetic:
 //!
 //! * [`cost_model`] — step wall-times `t_draft`, `t_verify(N_seq,
 //!   N_draft)` and the migration link, calibrated to the operating points
@@ -16,10 +20,12 @@
 //!   `AcceptancePredictor` then has to *learn online*, exactly as on
 //!   hardware.
 //!
-//! [`engine`] is a single simulated instance; [`cluster`] wires N of them
-//! to the real reallocator with a virtual clock; [`e2e`] extends the
-//! model to full RLHF iterations (inference + training stage costs) for
-//! Figs 3 and 12.
+//! [`engine`] is the simulated backend + single-instance wrapper;
+//! [`cluster`] wires N endpoints to the real reallocator and plays the
+//! virtual-clock transport for the real migration protocol (8–64
+//! instances run in ordinary `cargo test`); [`e2e`] extends the model to
+//! full RLHF iterations (inference + training stage costs) for Figs 3
+//! and 12.
 
 pub mod acceptance;
 pub mod cluster;
@@ -28,6 +34,6 @@ pub mod e2e;
 pub mod engine;
 
 pub use cluster::{ClusterConfig, ClusterResult, SimCluster};
-pub use engine::SimMode;
 pub use cost_model::CostModel;
 pub use engine::SimInstance;
+pub use engine::SimMode;

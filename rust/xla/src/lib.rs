@@ -1,0 +1,321 @@
+//! Offline stand-in for the `xla-rs` PJRT bindings.
+//!
+//! The RLHFSpec runtime layer (`rlhfspec::runtime`) is written against the
+//! `xla` crate API: host `Literal`s at call boundaries, an HLO-text →
+//! `XlaComputation` → `PjRtLoadedExecutable` compile path, and tuple
+//! outputs. The real bindings need a PJRT plugin (`libpjrt_c_api`) that is
+//! not present in the offline build image, so this crate provides the same
+//! API surface with two properties:
+//!
+//! * **`Literal` is fully functional** — shape/dtype metadata plus host
+//!   storage, round-trippable from raw slices. Everything that only moves
+//!   weights or KV around (checkpointing, weight broadcast, migration
+//!   packing tests) works unchanged.
+//! * **Compilation/execution returns [`Error::Unavailable`]** — call sites
+//!   degrade with a clear message instead of segfaulting. Swapping this
+//!   path dependency for the real `xla-rs` restores hardware execution
+//!   without touching `rlhfspec` source.
+
+use std::fmt;
+
+/// Stub error type (mirrors `xla_rs::Error` closely enough for `?`).
+#[derive(Debug)]
+pub enum Error {
+    /// The operation needs a real PJRT runtime.
+    Unavailable(String),
+    /// Malformed input to a host-side Literal operation.
+    Invalid(String),
+    /// I/O while loading an HLO text file.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: PJRT is unavailable (rlhfspec was built against the \
+                 bundled xla stub; link the real xla-rs bindings to execute \
+                 HLO artifacts)"
+            ),
+            Error::Invalid(msg) => write!(f, "{msg}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// XLA primitive types used when *creating* literals.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrimitiveType {
+    Pred,
+    S32,
+    S64,
+    F16,
+    F32,
+    F64,
+}
+
+/// Element types reported when *inspecting* literals.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    F16,
+    F32,
+    F64,
+}
+
+impl PrimitiveType {
+    fn element_type(self) -> ElementType {
+        match self {
+            PrimitiveType::Pred => ElementType::Pred,
+            PrimitiveType::S32 => ElementType::S32,
+            PrimitiveType::S64 => ElementType::S64,
+            PrimitiveType::F16 => ElementType::F16,
+            PrimitiveType::F32 => ElementType::F32,
+            PrimitiveType::F64 => ElementType::F64,
+        }
+    }
+}
+
+/// Rust scalar types that can fill / drain a [`Literal`].
+pub trait NativeType: Copy {
+    const ELEMENT_TYPE: ElementType;
+    fn to_ne(self) -> [u8; 4];
+    fn from_ne(b: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+    fn to_ne(self) -> [u8; 4] {
+        self.to_ne_bytes()
+    }
+    fn from_ne(b: [u8; 4]) -> Self {
+        f32::from_ne_bytes(b)
+    }
+}
+
+impl NativeType for i32 {
+    const ELEMENT_TYPE: ElementType = ElementType::S32;
+    fn to_ne(self) -> [u8; 4] {
+        self.to_ne_bytes()
+    }
+    fn from_ne(b: [u8; 4]) -> Self {
+        i32::from_ne_bytes(b)
+    }
+}
+
+/// Array shape metadata: element type + dimensions.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().map(|&d| d as usize).product()
+    }
+}
+
+/// A host literal: dense row-major storage + shape metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    shape: ArrayShape,
+    /// Native-endian element bytes (4 bytes per element for F32/S32).
+    data: Vec<u8>,
+}
+
+impl Literal {
+    /// Allocate a zero-filled literal of the given shape.
+    pub fn create_from_shape(ty: PrimitiveType, dims: &[usize]) -> Literal {
+        let n: usize = dims.iter().product();
+        Literal {
+            shape: ArrayShape {
+                ty: ty.element_type(),
+                dims: dims.iter().map(|&d| d as i64).collect(),
+            },
+            data: vec![0u8; n * 4],
+        }
+    }
+
+    /// Overwrite the literal's storage from a raw host slice.
+    pub fn copy_raw_from<T: NativeType>(&mut self, src: &[T]) -> Result<()> {
+        if T::ELEMENT_TYPE != self.shape.ty {
+            return Err(Error::Invalid(format!(
+                "copy_raw_from: literal is {:?}, source is {:?}",
+                self.shape.ty,
+                T::ELEMENT_TYPE
+            )));
+        }
+        if src.len() != self.shape.element_count() {
+            return Err(Error::Invalid(format!(
+                "copy_raw_from: literal holds {} elements, source has {}",
+                self.shape.element_count(),
+                src.len()
+            )));
+        }
+        self.data.clear();
+        for &x in src {
+            self.data.extend_from_slice(&x.to_ne());
+        }
+        Ok(())
+    }
+
+    /// Copy the literal's storage out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::ELEMENT_TYPE != self.shape.ty {
+            return Err(Error::Invalid(format!(
+                "to_vec: literal is {:?}, requested {:?}",
+                self.shape.ty,
+                T::ELEMENT_TYPE
+            )));
+        }
+        let mut out = Vec::with_capacity(self.shape.element_count());
+        for chunk in self.data.chunks_exact(4) {
+            out.push(T::from_ne([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        Ok(out)
+    }
+
+    /// Shape metadata (errors on tuple literals in the real bindings).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(self.shape.clone())
+    }
+
+    /// Decompose a tuple literal. Stub literals are always arrays (tuples
+    /// only come back from execution, which the stub cannot do).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("Literal::to_tuple".into()))
+    }
+}
+
+/// Parsed HLO module text (the stub only validates readability).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)?;
+        if text.trim().is_empty() {
+            return Err(Error::Invalid(format!("empty HLO text file {path:?}")));
+        }
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation awaiting compilation.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: proto.clone() }
+    }
+}
+
+/// Device buffer handle returned by execution (never materializes here).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync".into()))
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute".into()))
+    }
+}
+
+/// PJRT client handle. Construction succeeds (host-only operations remain
+/// usable); compilation reports the runtime as unavailable.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let mut lit = Literal::create_from_shape(PrimitiveType::F32, &[2, 3]);
+        let src = [1.0f32, 2.0, 3.0, -4.0, 0.5, 6.25];
+        lit.copy_raw_from(&src[..]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), src);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let mut lit = Literal::create_from_shape(PrimitiveType::S32, &[4]);
+        lit.copy_raw_from(&[-7i32, 0, 1, i32::MAX][..]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![-7, 0, 1, i32::MAX]);
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let lit = Literal::create_from_shape(PrimitiveType::F32, &[2]);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn execution_reports_unavailable() {
+        let client = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { text: "HloModule m".into() };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = client.compile(&comp).unwrap_err();
+        assert!(format!("{err}").contains("PJRT is unavailable"));
+    }
+}
