@@ -1,15 +1,49 @@
-//! Bench: per-step scheduler overhead of `InstanceCore` on the sim
-//! backend — the wall cost of the shared control plane (admission, weight
-//! prediction, budget selection, retirement, bookkeeping) with no PJRT
-//! execution behind it. Tracked so the `DecodeBackend` abstraction's cost
-//! shows up in `BENCH_*.json` history.
+//! Bench: scheduler overhead of the shared control plane.
+//!
+//! Two families, both recorded into `BENCH_core.json` so CI accumulates
+//! scheduler-overhead history (ROADMAP regression budget: < 1% of a
+//! modeled step at b = 64):
+//!
+//! * `core/step/*` — per-step cost of `InstanceCore` on the sim backend
+//!   (admission, weight prediction, budget selection, retirement,
+//!   bookkeeping) with no PJRT execution behind it;
+//! * `core/cluster/*` — whole-fleet wall time of the event-heap
+//!   discrete-event scheduler, including the acceptance criterion run:
+//!   a 512-instance heterogeneous fleet (l40s/a100/h100 tiers) driving
+//!   8192 samples end to end, which must complete in seconds.
+//!
+//! Pass `--test` (`cargo bench --bench bench_core -- --test`) for the CI
+//! smoke mode: same code paths, scaled-down fleets and iteration counts.
 
-use rlhfspec::benchutil::{bench, black_box};
+use std::time::Instant;
+
+use rlhfspec::benchutil::{bench, black_box, write_json, BenchResult};
 use rlhfspec::sim::acceptance::AcceptanceModel;
+use rlhfspec::sim::cluster::{ClusterConfig, FleetTier, SimCluster};
 use rlhfspec::sim::cost_model::CostModel;
 use rlhfspec::sim::engine::{SimInstance, SimMode, SimParams, SimSample};
 
+fn hetero_cfg(instances_per_tier: usize, n_samples: usize) -> ClusterConfig {
+    ClusterConfig {
+        fleet: vec![
+            FleetTier::preset("l40s", instances_per_tier * 2).unwrap(),
+            FleetTier::preset("a100", instances_per_tier).unwrap(),
+            FleetTier::preset("h100", instances_per_tier).unwrap(),
+        ],
+        n_samples,
+        max_tokens: 768,
+        cooldown: 64,
+        seed: 11,
+        ..Default::default()
+    }
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // ---- per-step scheduler overhead ---------------------------------
+    let (warmup, iters) = if smoke { (1, 10) } else { (5, 200) };
     for (label, mode) in [
         ("ar", SimMode::Ar),
         ("static8", SimMode::StaticSpec(8)),
@@ -29,7 +63,7 @@ fn main() {
                 inst.add(SimSample::new(k as u64, 128, usize::MAX / 2));
             }
             inst.step().unwrap(); // admit + first round
-            let r = bench(&format!("core/step/{label}/b{batch}"), 5, 200, || {
+            let r = bench(&format!("core/step/{label}/b{batch}"), warmup, iters, || {
                 inst.step().unwrap();
             });
             // Scheduler wall time as a share of the *modeled* step it
@@ -42,6 +76,43 @@ fn main() {
                 100.0 * (r.mean_ns / 1e9) / virtual_step
             );
             black_box(inst.metrics.tokens_out);
+            results.push(r);
         }
     }
+
+    // ---- event-heap cluster at fleet scale ---------------------------
+    // Full mode: 512 instances / 8192 samples (the acceptance budget is
+    // < 30 s wall); smoke mode: 32 / 512.
+    let (per_tier, n_samples) = if smoke { (8, 512) } else { (128, 8192) };
+    let r = bench("core/cluster/hetero-event-heap", 0, 1, || {
+        let mut cluster = SimCluster::new(hetero_cfg(per_tier, n_samples));
+        let res = cluster.run();
+        assert_eq!(
+            cluster.instances.iter().map(|x| x.finished.len()).sum::<usize>(),
+            n_samples,
+            "fleet must drain completely"
+        );
+        black_box(res.total_tokens);
+    });
+    results.push(r);
+
+    // Virtual-vs-wall ratio for the same fleet, reported for context.
+    let t0 = Instant::now();
+    let mut cluster = SimCluster::new(hetero_cfg(per_tier, n_samples));
+    let res = cluster.run();
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "  {} instances / {} samples: {:.2} wall s for {:.0} virtual s \
+         ({} migrations, {} refusals, {} tokens)",
+        4 * per_tier,
+        n_samples,
+        wall,
+        res.makespan,
+        res.migrations,
+        res.refusals,
+        res.total_tokens
+    );
+
+    write_json("BENCH_core.json", &results).expect("write BENCH_core.json");
+    println!("wrote BENCH_core.json ({} rows)", results.len());
 }

@@ -76,6 +76,28 @@ fn summarize(name: &str, mut samples: Vec<f64>) -> BenchResult {
     r
 }
 
+/// Write results as a `BENCH_*.json` history artifact (hand-rolled JSON
+/// — no serde in the offline registry). Schema: a flat array of
+/// `{"name", "iters", "mean_ns", "p50_ns", "p99_ns", "min_ns"}` rows so
+/// CI runs can be diffed/trended without parsing stdout.
+pub fn write_json(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    let mut out = String::from("[\n");
+    for (i, r) in results.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"name\": {:?}, \"iters\": {}, \"mean_ns\": {:.1}, \"p50_ns\": {:.1}, \"p99_ns\": {:.1}, \"min_ns\": {:.1}}}{}\n",
+            r.name,
+            r.iters,
+            r.mean_ns,
+            r.p50_ns,
+            r.p99_ns,
+            r.min_ns,
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("]\n");
+    std::fs::write(path, out)
+}
+
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.0}ns")
@@ -107,6 +129,21 @@ mod tests {
         assert!(r.mean_ns >= 0.0);
         assert!(r.p50_ns <= r.p99_ns);
         assert!(r.min_ns <= r.mean_ns * 1.001);
+    }
+
+    #[test]
+    fn write_json_emits_valid_rows() {
+        let r = bench("json-test", 1, 5, || {
+            black_box(42u64.wrapping_mul(3));
+        });
+        let path = std::env::temp_dir().join("rlhfspec_benchutil_test.json");
+        write_json(path.to_str().unwrap(), &[r]).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.contains("\"name\": \"json-test\""), "{s}");
+        assert!(s.contains("\"mean_ns\""), "{s}");
+        assert!(s.trim_start().starts_with('['), "{s}");
+        assert!(s.trim_end().ends_with(']'), "{s}");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -84,6 +84,15 @@ pub trait DecodeBackend {
     /// Instance-local time: wall seconds since start (PJRT) or the
     /// virtual clock (simulation).
     fn now(&self) -> f64;
+    /// The instant at which this backend can execute its next decode
+    /// round. The event-driven cluster scheduler keys each instance's
+    /// step-ready heap entry on this — instances *report* their next
+    /// ready time instead of being polled — so a backend that knows
+    /// about future unavailability (a pending collective, a modeled
+    /// stall) can push its slot back. Defaults to [`Self::now`].
+    fn next_ready(&self) -> f64 {
+        self.now()
+    }
 
     // ---- decode operations --------------------------------------------
     /// Admit one task: run prefill, return the live sample.

@@ -336,7 +336,7 @@ impl<B: DecodeBackend> InstanceCore<B> {
                 )
             })
             .collect();
-        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        scored.sort_by(|a, b| a.0.total_cmp(&b.0));
         let live_ids: Vec<u64> = scored.iter().take(remaining).map(|&(_, id)| id).collect();
 
         if waiting_tasks.is_empty() && live_ids.is_empty() {

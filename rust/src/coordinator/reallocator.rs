@@ -16,6 +16,16 @@
 //!
 //! The threshold comes from offline profiling (Fig 9 knee) and is refined
 //! online from (count, throughput) observations.
+//!
+//! **Heterogeneous fleets.** On a mixed-GPU fleet the roofline knee is a
+//! property of the *cost tier*, not of the fleet: an H100 absorbs more
+//! concurrent samples than an L40S before its marginal throughput
+//! vanishes. [`Reallocator::with_tiers`] therefore keeps one threshold
+//! *per tier*, classifies instance `i` against `threshold_of(i)`, and
+//! refits each tier's knee only from that tier's (count, throughput)
+//! observations ([`Reallocator::observe_on`]). The uniform constructor
+//! ([`Reallocator::new`]) is the single-tier special case and behaves
+//! exactly as before.
 
 use crate::utils::stats;
 
@@ -29,26 +39,84 @@ pub struct MigrationOrder {
 
 #[derive(Clone, Debug)]
 pub struct Reallocator {
+    /// Uniform knee (tier 0); mirrors `tier_thresholds[0]` after refits.
     pub threshold: usize,
     pub cooldown: u64,
     last_decision: u64,
-    /// (sample count, tokens/sec) observations for online refit.
-    obs: Vec<(usize, f64)>,
+    /// Instance → cost-tier index. Empty = every instance is tier 0.
+    tier_of: Vec<usize>,
+    /// Per-tier roofline knees; `[0]` is the uniform threshold.
+    tier_thresholds: Vec<usize>,
+    /// Per-tier (sample count, tokens/sec) observations for online refit.
+    obs: Vec<Vec<(usize, f64)>>,
     pub decisions: u64,
     pub refusals: u64,
 }
 
 impl Reallocator {
+    /// Uniform fleet: one shared threshold for every instance.
     pub fn new(threshold: usize, cooldown: u64) -> Self {
-        Reallocator { threshold: threshold.max(1), cooldown: cooldown.max(1), last_decision: 0, obs: Vec::new(), decisions: 0, refusals: 0 }
+        Reallocator {
+            threshold: threshold.max(1),
+            cooldown: cooldown.max(1),
+            last_decision: 0,
+            tier_of: Vec::new(),
+            tier_thresholds: vec![threshold.max(1)],
+            obs: vec![Vec::new()],
+            decisions: 0,
+            refusals: 0,
+        }
     }
 
-    /// Record an instance's (sample count → throughput) operating point.
+    /// Heterogeneous fleet: `tier_of[i]` maps instance `i` to a cost
+    /// tier, `tier_thresholds[t]` is tier `t`'s initial roofline knee
+    /// (typically `CostModel::knee`-derived), refined online per tier.
+    pub fn with_tiers(tier_thresholds: Vec<usize>, tier_of: Vec<usize>, cooldown: u64) -> Self {
+        assert!(!tier_thresholds.is_empty(), "at least one tier required");
+        let n_tiers = tier_thresholds.len();
+        for &t in &tier_of {
+            assert!(t < n_tiers, "tier index {t} out of range ({n_tiers} tiers)");
+        }
+        let tier_thresholds: Vec<usize> =
+            tier_thresholds.into_iter().map(|t| t.max(1)).collect();
+        Reallocator {
+            threshold: tier_thresholds[0],
+            cooldown: cooldown.max(1),
+            last_decision: 0,
+            tier_of,
+            tier_thresholds,
+            obs: vec![Vec::new(); n_tiers],
+            decisions: 0,
+            refusals: 0,
+        }
+    }
+
+    /// The roofline threshold instance `i` is classified against.
+    pub fn threshold_of(&self, i: usize) -> usize {
+        match self.tier_of.get(i) {
+            Some(&t) => self.tier_thresholds[t],
+            None => self.threshold,
+        }
+    }
+
+    /// Record an instance's (sample count → throughput) operating point
+    /// on the default tier (uniform fleets).
     pub fn observe(&mut self, sample_count: usize, tokens_per_sec: f64) {
+        self.observe_tier(0, sample_count, tokens_per_sec);
+    }
+
+    /// Record an operating point attributed to instance `i`'s cost tier.
+    pub fn observe_on(&mut self, instance: usize, sample_count: usize, tokens_per_sec: f64) {
+        let tier = self.tier_of.get(instance).copied().unwrap_or(0);
+        self.observe_tier(tier, sample_count, tokens_per_sec);
+    }
+
+    fn observe_tier(&mut self, tier: usize, sample_count: usize, tokens_per_sec: f64) {
         if sample_count > 0 && tokens_per_sec.is_finite() && tokens_per_sec >= 0.0 {
-            self.obs.push((sample_count, tokens_per_sec));
-            if self.obs.len() > 100_000 {
-                self.obs.drain(..50_000);
+            let obs = &mut self.obs[tier];
+            obs.push((sample_count, tokens_per_sec));
+            if obs.len() > 100_000 {
+                obs.drain(..50_000);
             }
         }
     }
@@ -58,18 +126,30 @@ impl Reallocator {
         self.refusals += 1;
     }
 
-    /// Re-estimate the roofline knee: the smallest sample count whose
-    /// median throughput reaches 60% of the plateau. (The paper's Fig-5
-    /// operating points imply a threshold well below the 90% knee — ins.2
-    /// is topped up to 6 samples at ~52% of plateau throughput; an
-    /// aggressive threshold maximizes drain-phase rebalancing.)
+    /// Re-estimate each tier's roofline knee: the smallest sample count
+    /// whose median throughput reaches 60% of that tier's plateau. (The
+    /// paper's Fig-5 operating points imply a threshold well below the
+    /// 90% knee — ins.2 is topped up to 6 samples at ~52% of plateau
+    /// throughput; an aggressive threshold maximizes drain-phase
+    /// rebalancing.)
     pub fn refit_threshold(&mut self) {
-        if self.obs.len() < 32 {
-            return;
+        for tier in 0..self.tier_thresholds.len() {
+            if let Some(th) = Self::fit_knee(&self.obs[tier]) {
+                self.tier_thresholds[tier] = th;
+                if tier == 0 {
+                    self.threshold = th;
+                }
+            }
         }
-        let max_count = self.obs.iter().map(|&(c, _)| c).max().unwrap();
+    }
+
+    fn fit_knee(obs: &[(usize, f64)]) -> Option<usize> {
+        if obs.len() < 32 {
+            return None;
+        }
+        let max_count = obs.iter().map(|&(c, _)| c).max().unwrap();
         let mut per_count: Vec<Vec<f64>> = vec![Vec::new(); max_count + 1];
-        for &(c, t) in &self.obs {
+        for &(c, t) in obs {
             per_count[c].push(t);
         }
         let medians: Vec<(usize, f64)> = per_count
@@ -79,31 +159,45 @@ impl Reallocator {
             .map(|(c, v)| (c, stats::median(v)))
             .collect();
         if medians.len() < 3 {
-            return;
+            return None;
         }
         let plateau = medians
             .iter()
             .map(|&(_, t)| t)
             .fold(f64::NEG_INFINITY, f64::max);
-        for &(c, t) in &medians {
-            if t >= 0.6 * plateau {
-                self.threshold = c.max(1);
-                return;
-            }
-        }
+        medians
+            .iter()
+            .find(|&&(_, t)| t >= 0.6 * plateau)
+            .map(|&(c, _)| c.max(1))
+    }
+
+    /// Is the cooldown over at this step? (Cheap check — callers should
+    /// gate on this before gathering per-instance counts.)
+    pub fn due(&self, step: u64) -> bool {
+        step >= self.last_decision + self.cooldown
+    }
+
+    /// Is there detectable inefficiency: some instance below its tier
+    /// threshold while another sits above its own?
+    pub fn inefficiency(&self, counts: &[usize]) -> bool {
+        let has_dest = counts
+            .iter()
+            .enumerate()
+            .any(|(i, &c)| c < self.threshold_of(i));
+        let has_src = counts
+            .iter()
+            .enumerate()
+            .any(|(i, &c)| c > self.threshold_of(i));
+        has_dest && has_src
     }
 
     /// Is a decision due at this step, and is there detectable inefficiency?
     pub fn should_decide(&self, step: u64, counts: &[usize]) -> bool {
-        if step < self.last_decision + self.cooldown {
-            return false;
-        }
-        let has_dest = counts.iter().any(|&c| c < self.threshold);
-        let has_src = counts.iter().any(|&c| c > self.threshold);
-        has_dest && has_src
+        self.due(step) && self.inefficiency(counts)
     }
 
-    /// Greedy pairing under the Eq-6 constraints.
+    /// Greedy pairing under the Eq-6 constraints, against per-tier
+    /// thresholds.
     ///
     /// `counts[i]` = sample count of instance i. `capacity[i]` caps what a
     /// destination may hold (alloc-handshake pre-check).
@@ -115,20 +209,32 @@ impl Reallocator {
     ) -> Vec<MigrationOrder> {
         self.last_decision = step;
         self.decisions += 1;
-        let th = self.threshold;
 
-        // Sort ascending by count (paper: "sort the instances based on the
-        // sample count in ascending order … pair largest difference").
+        // Sort ascending by the signed offset from each instance's own
+        // threshold (paper: "sort the instances based on the sample count
+        // in ascending order … pair largest difference" — with per-tier
+        // knees the *difference* is count − threshold, so a slow tier's
+        // heavy overload outranks a fast tier's higher raw count). For a
+        // uniform threshold this is the same order as sorting by count.
         let mut order: Vec<usize> = (0..counts.len()).collect();
-        order.sort_by_key(|&i| counts[i]);
+        order.sort_by_key(|&i| counts[i] as isize - self.threshold_of(i) as isize);
 
-        let mut dests: Vec<usize> = order.iter().copied().filter(|&i| counts[i] < th).collect();
-        let mut srcs: Vec<usize> = order.iter().copied().filter(|&i| counts[i] > th).collect();
+        let mut dests: Vec<usize> = order
+            .iter()
+            .copied()
+            .filter(|&i| counts[i] < self.threshold_of(i))
+            .collect();
+        let mut srcs: Vec<usize> = order
+            .iter()
+            .copied()
+            .filter(|&i| counts[i] > self.threshold_of(i))
+            .collect();
         // srcs ascending; we take from the back (largest surplus).
         let mut out = Vec::new();
         while let (Some(&d), Some(&s)) = (dests.first(), srcs.last()) {
-            let surplus = counts[s] - th;
-            let deficit = (th - counts[d]).min(capacity[d].saturating_sub(counts[d]));
+            let surplus = counts[s] - self.threshold_of(s);
+            let deficit = (self.threshold_of(d) - counts[d])
+                .min(capacity[d].saturating_sub(counts[d]));
             let k = surplus.min(deficit);
             dests.remove(0);
             srcs.pop();
@@ -141,16 +247,26 @@ impl Reallocator {
     }
 
     pub fn observations(&self) -> usize {
-        self.obs.len()
+        self.obs.iter().map(|o| o.len()).sum()
     }
 }
 
 /// Check the Eq-6 constraints for a plan (used by tests and the driver's
-/// debug assertions).
+/// debug assertions) against a uniform threshold.
 pub fn plan_satisfies_constraints(
     counts: &[usize],
     capacity: &[usize],
     threshold: usize,
+    plan: &[MigrationOrder],
+) -> bool {
+    plan_satisfies_constraints_tiered(counts, capacity, &vec![threshold; counts.len()], plan)
+}
+
+/// Eq-6 constraint check against per-instance thresholds (mixed fleets).
+pub fn plan_satisfies_constraints_tiered(
+    counts: &[usize],
+    capacity: &[usize],
+    thresholds: &[usize],
     plan: &[MigrationOrder],
 ) -> bool {
     let mut next = counts.to_vec();
@@ -172,11 +288,11 @@ pub fn plan_satisfies_constraints(
         return false;
     }
     for m in plan {
-        // sources stay >= threshold; dests stay <= threshold & <= capacity
-        if next[m.from] < threshold {
+        // sources stay >= their threshold; dests stay <= theirs & <= capacity
+        if next[m.from] < thresholds[m.from] {
             return false;
         }
-        if next[m.to] > threshold || next[m.to] > capacity[m.to] {
+        if next[m.to] > thresholds[m.to] || next[m.to] > capacity[m.to] {
             return false;
         }
     }
@@ -293,5 +409,55 @@ mod tests {
         let mut r = Reallocator::new(7, 1);
         r.refit_threshold();
         assert_eq!(r.threshold, 7); // unchanged
+    }
+
+    #[test]
+    fn tiered_thresholds_classify_per_instance() {
+        // Instances 0-1 are a slow tier (knee 6), 2-3 a fast tier
+        // (knee 16): a count of 10 is a *source* on the slow tier and a
+        // *destination* on the fast tier.
+        let mut r = Reallocator::with_tiers(vec![6, 16], vec![0, 0, 1, 1], 1);
+        assert_eq!(r.threshold_of(0), 6);
+        assert_eq!(r.threshold_of(3), 16);
+        let counts = [10, 6, 10, 16];
+        assert!(r.should_decide(1, &counts));
+        let caps = [64, 64, 64, 64];
+        let plan = r.decide(1, &counts, &caps);
+        assert_eq!(plan, vec![MigrationOrder { from: 0, to: 2, count: 4 }]);
+        assert!(plan_satisfies_constraints_tiered(
+            &counts,
+            &caps,
+            &[6, 6, 16, 16],
+            &plan
+        ));
+    }
+
+    #[test]
+    fn tiered_refit_is_per_tier() {
+        // Tier 0 plateaus at 5 samples, tier 1 at 20: after refit, the
+        // tiers must hold distinct knees.
+        let mut r = Reallocator::with_tiers(vec![2, 2], vec![0, 1], 1);
+        for c in 1..=24 {
+            for _ in 0..5 {
+                r.observe_on(0, c, (c.min(5) * 100) as f64);
+                r.observe_on(1, c, (c.min(20) * 300) as f64);
+            }
+        }
+        r.refit_threshold();
+        assert!((2..=5).contains(&r.threshold_of(0)), "{}", r.threshold_of(0));
+        assert!((10..=16).contains(&r.threshold_of(1)), "{}", r.threshold_of(1));
+        assert!(r.threshold_of(1) > r.threshold_of(0));
+    }
+
+    #[test]
+    fn uniform_is_single_tier_special_case() {
+        // new() and with_tiers(single tier) make identical decisions.
+        let counts = [1, 24, 6, 30];
+        let mut uni = Reallocator::new(8, 1);
+        let mut one = Reallocator::with_tiers(vec![8], vec![0, 0, 0, 0], 1);
+        assert_eq!(
+            uni.decide(10, &counts, &caps(4)),
+            one.decide(10, &counts, &caps(4))
+        );
     }
 }

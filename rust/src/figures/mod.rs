@@ -9,7 +9,7 @@
 use std::fmt::Write as _;
 
 use crate::data::lengths::LengthModel;
-use crate::sim::cluster::{ClusterConfig, SimCluster};
+use crate::sim::cluster::{ClusterConfig, FleetTier, SimCluster};
 use crate::sim::cost_model::CostModel;
 use crate::sim::e2e::{run_system, StageModel, SystemKind};
 use crate::sim::engine::{SimInstance, SimMode, SimParams, SimSample};
@@ -545,6 +545,76 @@ pub fn overhead(seed: u64) -> String {
     out
 }
 
+// ---------------------------------------------------------------------------
+// Heterogeneous fleet — beyond the paper's single-SKU testbed
+// ---------------------------------------------------------------------------
+
+pub fn fig_hetero(seed: u64) -> String {
+    let mut out = header(
+        "Hetero fleet",
+        "mixed-GPU fleet (h100/a100/l40s): per-tier knees + §6.2 work stealing",
+        seed,
+    );
+    let fleet = vec![
+        FleetTier::preset("h100", 2).expect("preset"),
+        FleetTier::preset("a100", 2).expect("preset"),
+        FleetTier::preset("l40s", 4).expect("preset"),
+    ];
+    // Fast tiers drain early; the slow tier holds the long tail — the
+    // reallocator must move work *down the cost gradient*.
+    let assignment = |rng: &mut Rng| -> Vec<Vec<usize>> {
+        let mut v: Vec<Vec<usize>> = Vec::new();
+        for _ in 0..4 {
+            v.push((0..4).map(|_| 60 + rng.below(160)).collect());
+        }
+        for _ in 0..4 {
+            v.push((0..10).map(|_| 700 + rng.below(500)).collect());
+        }
+        v
+    };
+    let run = |realloc: bool| {
+        let cfg = ClusterConfig {
+            fleet: fleet.clone(),
+            realloc_enabled: realloc,
+            cooldown: 16,
+            n_samples: 0,
+            max_tokens: 1400,
+            seed,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(seed ^ 0xFE);
+        SimCluster::with_assignment(cfg, assignment(&mut rng)).run()
+    };
+    let with = run(true);
+    let without = run(false);
+    let _ = writeln!(
+        out,
+        "{:<8} {:>6} {:>10} {:>10} {:>9}",
+        "tier", "inst", "migr-in", "migr-out", "refusals"
+    );
+    for t in &with.tier_stats {
+        let _ = writeln!(
+            out,
+            "{:<8} {:>6} {:>10} {:>10} {:>9}",
+            t.tier, t.instances, t.migrated_in, t.migrated_out, t.refusals
+        );
+    }
+    let _ = writeln!(
+        out,
+        "makespan: realloc {:.1}s vs none {:.1}s ({:+.0}%) | {} migrations, {} refused orders",
+        with.makespan,
+        without.makespan,
+        100.0 * (with.makespan - without.makespan) / without.makespan,
+        with.migrations,
+        with.refusals
+    );
+    let _ = writeln!(
+        out,
+        "fast tiers steal the slow tier's long tail through the real AllocReq→Stage1→Stage2 endpoint protocol"
+    );
+    out
+}
+
 /// Dispatch by figure id.
 pub fn run_figure(id: &str, seed: u64) -> Option<String> {
     Some(match id {
@@ -560,9 +630,10 @@ pub fn run_figure(id: &str, seed: u64) -> Option<String> {
         "14" => fig14(seed),
         "table1" | "t1" => table1(seed),
         "overhead" | "7.7" => overhead(seed),
+        "hetero" | "mixed-fleet" => fig_hetero(seed),
         _ => return None,
     })
 }
 
-pub const ALL_FIGURES: [&str; 12] =
-    ["2", "3", "4", "5", "7", "9", "11", "12", "13", "14", "table1", "overhead"];
+pub const ALL_FIGURES: [&str; 13] =
+    ["2", "3", "4", "5", "7", "9", "11", "12", "13", "14", "table1", "overhead", "hetero"];

@@ -1,14 +1,43 @@
-//! Multi-instance simulation: the real reallocator + the real §6.2
-//! migration protocol over a virtual event loop.
+//! Multi-instance simulation: a discrete-event virtual cluster running
+//! the real reallocator + the real §6.2 migration protocol.
 //!
-//! Instances advance on private virtual clocks; the cluster repeatedly
-//! steps the laggard (discrete-event style) and runs the **real**
-//! [`Reallocator`] every `cooldown` steps. Migration is no longer a
-//! cluster-private shortcut: each order is pumped through the *same*
-//! `MigrateOut → AllocReq → AllocAck → Stage1 → Stage2` endpoint state
-//! machine ([`crate::coordinator::core::InstanceCore`]) that the threaded
-//! PJRT driver uses — the cluster only plays the transport, assigning
-//! virtual transfer times to the Stage-2 packets:
+//! **Event-driven core.** The cluster keeps a single time-ordered
+//! [`EventQueue`] (a binary heap with deterministic `(time, kind, seq)`
+//! tie-breaking over NaN-safe [`f64::total_cmp`]) holding three event
+//! kinds:
+//!
+//! * **step-ready** — instance `i` can execute its next decode round at
+//!   its reported [`DecodeBackend::next_ready`] instant;
+//! * **Stage-2 arrival** — a migration packet lands on the virtual link
+//!   at its transfer-completion time;
+//! * **realloc tick** — an optional fixed virtual-period reallocation
+//!   cadence ([`ClusterConfig::realloc_period_secs`]) for heterogeneous
+//!   fleets, where a global *step* counter is meaningless because fast
+//!   tiers step more often per virtual second than slow ones.
+//!
+//! Each scheduling decision is an `O(log n)` heap pop instead of the old
+//! `O(n)` laggard scan plus `O(in-flight)` arrival walk, which is what
+//! lets 512-instance / 8k-sample fleets run in seconds (see
+//! `benches/bench_core.rs`). The pre-heap scheduler is preserved as
+//! [`SimCluster::run_reference_laggard`] so golden tests can assert that
+//! both produce bit-identical `total_tokens`/`makespan` on homogeneous
+//! fleets under fixed seeds.
+//!
+//! **Heterogeneous fleets.** [`ClusterConfig::fleet`] assigns each
+//! instance a named [`CostModel`] tier (`l40s`/`a100`/`h100` presets)
+//! and optionally a per-tier batch capacity. The reallocator then runs
+//! with *per-tier* roofline knees (seeded from [`CostModel::knee`]) and
+//! per-instance capacity vectors, so fast tiers absorb long-tail samples
+//! stolen from slow tiers through the real §6.2 endpoint protocol.
+//! Per-tier migration/refusal counts surface in
+//! [`ClusterResult::tier_stats`].
+//!
+//! Migration is not a cluster-private shortcut: each order is pumped
+//! through the *same* `MigrateOut → AllocReq → AllocAck → Stage1 →
+//! Stage2` endpoint state machine
+//! ([`crate::coordinator::core::InstanceCore`]) that the threaded PJRT
+//! driver uses — the cluster only plays the transport, assigning virtual
+//! transfer times to the Stage-2 packets:
 //!
 //! * `TwoStage` (§6.2) — the Stage-1 bulk overlaps source compute, so a
 //!   sample's downtime is only the small Stage-2 delta (≈ one round of
@@ -16,6 +45,9 @@
 //! * `Naive` (ablation) — stop-and-copy: downtime is the full KV
 //!   transfer.
 
+use std::collections::BinaryHeap;
+
+use crate::coordinator::backend::DecodeBackend;
 use crate::coordinator::core::{AckOutcome, MigrateStart, Stage2Msg};
 use crate::coordinator::reallocator::Reallocator;
 use crate::data::lengths::LengthModel;
@@ -33,16 +65,52 @@ pub enum MigrationStyle {
     Naive,
 }
 
+/// One homogeneous slice of a mixed-GPU fleet.
+#[derive(Clone, Debug)]
+pub struct FleetTier {
+    /// Display name surfaced in [`ClusterResult::tier_stats`]
+    /// (conventionally a [`CostModel::by_name`] preset id).
+    pub name: String,
+    /// Number of instances in this tier.
+    pub count: usize,
+    /// Per-instance hardware cost model of this tier.
+    pub cost: CostModel,
+    /// Optional decode-slot override (defaults to `params.max_batch`).
+    pub max_batch: Option<usize>,
+}
+
+impl FleetTier {
+    /// Tier from a named [`CostModel`] preset (`l40s`/`a100`/`h100`).
+    pub fn preset(name: &str, count: usize) -> Option<Self> {
+        CostModel::by_name(name).map(|cost| FleetTier {
+            name: name.to_string(),
+            count,
+            cost,
+            max_batch: None,
+        })
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
+    /// Fleet size for homogeneous clusters; ignored (recomputed as the
+    /// tier-count sum) when `fleet` is non-empty.
     pub instances: usize,
     pub mode: SimMode,
     pub realloc_enabled: bool,
     pub migration_style: MigrationStyle,
     /// Reallocation decision period, in cluster scheduling steps.
     pub cooldown: u64,
-    /// Initial roofline threshold (refined online).
+    /// Initial roofline threshold (refined online). Heterogeneous fleets
+    /// ignore this and seed per-tier knees from [`CostModel::knee`].
     pub threshold: usize,
+    /// Heterogeneous fleet spec; empty = `instances`× the L40S baseline.
+    pub fleet: Vec<FleetTier>,
+    /// When set, reallocation decisions fire on virtual-time *ticks* of
+    /// this period (event-heap `ReallocTick` events) instead of every
+    /// `cooldown` scheduler steps — the meaningful cadence on mixed
+    /// fleets. `None` keeps the step-cadence (and scan parity).
+    pub realloc_period_secs: Option<f64>,
     pub dataset: String,
     pub n_samples: usize,
     pub prompt_len: usize,
@@ -60,6 +128,8 @@ impl Default for ClusterConfig {
             migration_style: MigrationStyle::TwoStage,
             cooldown: 64,
             threshold: 10,
+            fleet: Vec::new(),
+            realloc_period_secs: None,
             dataset: "lmsys".into(),
             n_samples: 256,
             prompt_len: 128,
@@ -70,6 +140,19 @@ impl Default for ClusterConfig {
     }
 }
 
+/// Per-tier migration traffic summary (heterogeneous-fleet reporting).
+#[derive(Clone, Debug, Default)]
+pub struct TierStats {
+    pub tier: String,
+    pub instances: usize,
+    /// Samples that left this tier's instances via migration.
+    pub migrated_out: u64,
+    /// Samples that arrived on this tier's instances via migration.
+    pub migrated_in: u64,
+    /// Migration orders this tier's sources refused mid-handshake.
+    pub refusals: u64,
+}
+
 #[derive(Clone, Debug)]
 pub struct ClusterResult {
     /// Virtual seconds until the last sample finished.
@@ -78,13 +161,20 @@ pub struct ClusterResult {
     pub n_samples: usize,
     pub migrations: u64,
     pub realloc_decisions: u64,
+    /// Migration orders that ended in refusal (destination alloc failure
+    /// or an already-pending outbound handshake on the source).
+    pub refusals: u64,
     /// Total sample downtime caused by migration (§7.7 SM).
     pub migration_downtime: f64,
     /// Mean accepted drafts per round across instances.
     pub mean_accepted: f64,
     /// Per-instance (time, cumulative tokens, assigned samples) traces.
     pub traces: Vec<Vec<(f64, u64, usize)>>,
-    /// Fig-7 curve from instance 0's (real) acceptance predictor.
+    /// Per-tier migration traffic (one entry per [`FleetTier`]; a single
+    /// synthetic tier for homogeneous fleets).
+    pub tier_stats: Vec<TierStats>,
+    /// Fig-7 curve from instance 0's (real) acceptance predictor (empty
+    /// for zero-instance configs).
     pub fig7_curve: Vec<(f64, f64, u64)>,
     pub accept_corr: f64,
 }
@@ -109,13 +199,108 @@ impl ClusterResult {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Event queue
+// ---------------------------------------------------------------------------
+
+/// What happens at a scheduled virtual instant.
+enum EventKind {
+    /// A Stage-2 migration packet completes its virtual transfer.
+    Arrival(Stage2Msg<SimBackend>),
+    /// Instance `i` is ready to execute its next decode round.
+    StepReady(usize),
+    /// Fixed-period reallocation cadence (heterogeneous fleets).
+    ReallocTick,
+}
+
+impl EventKind {
+    /// Tie-break rank at equal timestamps: arrivals deliver first (the
+    /// laggard scan delivered at the top of every scheduling iteration,
+    /// before picking an instance to step), then steps, then ticks.
+    fn rank(&self) -> u8 {
+        match self {
+            EventKind::Arrival(_) => 0,
+            EventKind::StepReady(_) => 1,
+            EventKind::ReallocTick => 2,
+        }
+    }
+}
+
+struct Event {
+    time: f64,
+    rank: u8,
+    /// Monotone push counter: deterministic FIFO among exact ties.
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // `BinaryHeap` is a max-heap: invert so the earliest (time, rank,
+        // seq) pops first. `total_cmp` keeps the order total even if a
+        // cost model ever produces NaN — no `partial_cmp().unwrap()`.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then(other.rank.cmp(&self.rank))
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Time-ordered event heap with a deterministic total order.
+struct EventQueue {
+    heap: BinaryHeap<Event>,
+    seq: u64,
+}
+
+impl EventQueue {
+    fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    fn push(&mut self, time: f64, kind: EventKind) {
+        let rank = kind.rank();
+        self.heap.push(Event { time, rank, seq: self.seq, kind });
+        self.seq += 1;
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cluster
+// ---------------------------------------------------------------------------
+
 pub struct SimCluster {
     pub cfg: ClusterConfig,
     pub instances: Vec<SimInstance>,
     realloc: Reallocator,
-    cost: CostModel,
-    /// Stage-2 packets on the virtual link: (arrival time, packet).
-    in_flight: Vec<(f64, Stage2Msg<SimBackend>)>,
+    /// Instance → tier index (all zeros for homogeneous fleets).
+    tier_of: Vec<usize>,
+    tier_names: Vec<String>,
+    tier_out: Vec<u64>,
+    tier_in: Vec<u64>,
+    tier_refusals: Vec<u64>,
     migrations: u64,
     downtime: f64,
     steps: u64,
@@ -123,15 +308,38 @@ pub struct SimCluster {
 
 impl SimCluster {
     pub fn new(mut cfg: ClusterConfig) -> Self {
-        let cost = CostModel::l40s_llama8b();
+        let tiers: Vec<FleetTier> = if cfg.fleet.is_empty() {
+            vec![FleetTier {
+                name: "l40s".into(),
+                count: cfg.instances,
+                cost: CostModel::l40s_llama8b(),
+                max_batch: None,
+            }]
+        } else {
+            cfg.fleet.clone()
+        };
+        cfg.instances = tiers.iter().map(|t| t.count).sum();
+        if cfg.instances == 0 {
+            cfg.n_samples = 0; // nothing can host a sample
+        }
+        let mut tier_of: Vec<usize> = Vec::with_capacity(cfg.instances);
+        for (t, tier) in tiers.iter().enumerate() {
+            tier_of.resize(tier_of.len() + tier.count, t);
+        }
+
         let accept = AcceptanceModel::by_name(&cfg.dataset);
         cfg.params.mode = cfg.mode; // ClusterConfig.mode is authoritative
         let mut instances: Vec<SimInstance> = (0..cfg.instances)
             .map(|i| {
+                let tier = &tiers[tier_of[i]];
+                let mut params = cfg.params.clone();
+                if let Some(mb) = tier.max_batch {
+                    params.max_batch = mb;
+                }
                 let mut inst = SimInstance::new(
                     i,
-                    cfg.params.clone(),
-                    cost.clone(),
+                    params,
+                    tier.cost.clone(),
                     accept,
                     cfg.seed ^ ((i as u64 + 1) * 0x9E37),
                 );
@@ -151,12 +359,35 @@ impl SimCluster {
             instances[k % cfg.instances].add(SimSample::new(k as u64, cfg.prompt_len, target));
         }
 
+        // Uniform fleets keep the configured threshold (and the exact
+        // legacy reallocator behavior); mixed fleets seed each tier's
+        // knee from its cost model's roofline.
+        let realloc = if cfg.fleet.is_empty() {
+            Reallocator::new(cfg.threshold, cfg.cooldown)
+        } else {
+            // Seed each tier's knee at the *configured* operating point —
+            // a mid-generation sequence (prompt + half the target budget)
+            // and a mid-range draft budget — rather than a fixed magic
+            // point; online refit then tracks the observed workload.
+            let knee_seq = cfg.prompt_len + cfg.max_tokens / 2;
+            let knee_n = (cfg.params.max_draft / 4).max(1);
+            let ths: Vec<usize> = tiers
+                .iter()
+                .map(|t| t.cost.knee(knee_seq, knee_n).round().max(1.0) as usize)
+                .collect();
+            Reallocator::with_tiers(ths, tier_of.clone(), cfg.cooldown)
+        };
+
+        let n_tiers = tiers.len();
         SimCluster {
-            realloc: Reallocator::new(cfg.threshold, cfg.cooldown),
+            realloc,
             cfg,
             instances,
-            cost,
-            in_flight: Vec::new(),
+            tier_names: tiers.into_iter().map(|t| t.name).collect(),
+            tier_of,
+            tier_out: vec![0; n_tiers],
+            tier_in: vec![0; n_tiers],
+            tier_refusals: vec![0; n_tiers],
             migrations: 0,
             downtime: 0.0,
             steps: 0,
@@ -178,47 +409,136 @@ impl SimCluster {
         c
     }
 
-    /// Deliver Stage-2 packets whose destination clock reached the
-    /// arrival time (or immediately if the destination is idle — it
-    /// would just be waiting).
-    fn deliver_arrivals(&mut self) {
-        let mut i = 0;
-        while i < self.in_flight.len() {
-            let (at, msg) = &self.in_flight[i];
-            let dest = msg.to;
-            if self.instances[dest].backend.clock >= *at || self.instances[dest].is_idle() {
-                let (at, msg) = self.in_flight.remove(i);
-                let inst = &mut self.instances[dest];
-                if inst.is_idle() && inst.backend.clock < at {
-                    inst.backend.clock = at; // idle destination waits for the KV
-                }
-                inst.handle_stage2(msg).expect("sim stage2 delivery");
-            } else {
-                i += 1;
+    /// Run until every sample finishes; returns the result summary.
+    ///
+    /// Discrete-event loop: every scheduling decision is a heap pop.
+    /// An instance's `StepReady` event is (re)scheduled at its backend's
+    /// [`DecodeBackend::next_ready`] instant whenever it holds work, so
+    /// idle instances cost nothing; Stage-2 packets pop at their
+    /// transfer-completion time (an idle destination's clock fast-forwards
+    /// to the arrival, exactly as under the laggard scan).
+    pub fn run(&mut self) -> ClusterResult {
+        let n = self.instances.len();
+        let mut q = EventQueue::new();
+        // `scheduled[i]` ⇔ exactly one StepReady(i) event is in the heap.
+        // An instance emptied by an outbound migration leaves a stale
+        // event behind; the pop path skips it (and clears the flag).
+        let mut scheduled = vec![false; n];
+        for (i, inst) in self.instances.iter().enumerate() {
+            if !inst.is_idle() {
+                q.push(inst.backend.next_ready(), EventKind::StepReady(i));
+                scheduled[i] = true;
             }
         }
+        // A non-positive (or NaN) period would re-arm the tick at its own
+        // timestamp and spin forever; treat it as "no timed cadence".
+        let tick_period = self
+            .cfg
+            .realloc_period_secs
+            .filter(|&p| p > 0.0 && self.cfg.realloc_enabled);
+        if let Some(p) = tick_period {
+            q.push(p, EventKind::ReallocTick);
+        }
+
+        while let Some(ev) = q.pop() {
+            match ev.kind {
+                EventKind::StepReady(i) => {
+                    scheduled[i] = false;
+                    if self.instances[i].is_idle() {
+                        continue; // stale: drained by a migration order
+                    }
+                    self.instances[i].step().expect("sim step");
+                    self.steps += 1;
+                    if self.cfg.realloc_enabled
+                        && tick_period.is_none()
+                        && self.realloc.due(self.steps)
+                    {
+                        for (at, pkt) in self.realloc_decide() {
+                            q.push(at, EventKind::Arrival(pkt));
+                        }
+                    }
+                    if !self.instances[i].is_idle() {
+                        q.push(self.instances[i].backend.next_ready(), EventKind::StepReady(i));
+                        scheduled[i] = true;
+                    }
+                }
+                EventKind::Arrival(msg) => {
+                    let dest = msg.to;
+                    let inst = &mut self.instances[dest];
+                    if inst.is_idle() && inst.backend.clock < ev.time {
+                        inst.backend.clock = ev.time; // idle destination waits for the KV
+                    }
+                    inst.handle_stage2(msg).expect("sim stage2 delivery");
+                    if !scheduled[dest] && !self.instances[dest].is_idle() {
+                        let at = self.instances[dest].backend.next_ready();
+                        q.push(at, EventKind::StepReady(dest));
+                        scheduled[dest] = true;
+                    }
+                }
+                EventKind::ReallocTick => {
+                    for (at, pkt) in self.realloc_decide() {
+                        q.push(at, EventKind::Arrival(pkt));
+                    }
+                    // Re-arm only while the fleet still has live events:
+                    // an empty heap means every instance is idle and no
+                    // packet is in flight, i.e. the run is over.
+                    match tick_period {
+                        Some(p) if !q.is_empty() => {
+                            q.push(ev.time + p, EventKind::ReallocTick)
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+        self.summarize()
     }
 
-    /// Run until every sample finishes; returns the result summary.
-    pub fn run(&mut self) -> ClusterResult {
+    /// The pre-event-heap scheduler (O(n) laggard scan + linear in-flight
+    /// walk), preserved verbatim as the golden reference: on homogeneous
+    /// fleets with step-cadence reallocation it must produce bit-identical
+    /// `total_tokens`/`makespan` to [`SimCluster::run`] under a fixed
+    /// seed. Quadratic in fleet size — tests only.
+    #[doc(hidden)]
+    pub fn run_reference_laggard(&mut self) -> ClusterResult {
+        let mut in_flight: Vec<(f64, Stage2Msg<SimBackend>)> = Vec::new();
         loop {
-            self.deliver_arrivals();
+            // Deliver Stage-2 packets whose destination clock reached the
+            // arrival time (or immediately if the destination is idle —
+            // it would just be waiting).
+            let mut i = 0;
+            while i < in_flight.len() {
+                let deliverable = {
+                    let (at, msg) = &in_flight[i];
+                    let dest = &self.instances[msg.to];
+                    dest.backend.clock >= *at || dest.is_idle()
+                };
+                if deliverable {
+                    let (at, msg) = in_flight.remove(i);
+                    let inst = &mut self.instances[msg.to];
+                    if inst.is_idle() && inst.backend.clock < at {
+                        inst.backend.clock = at;
+                    }
+                    inst.handle_stage2(msg).expect("sim stage2 delivery");
+                } else {
+                    i += 1;
+                }
+            }
             // Step the non-idle instance with the smallest clock.
             let next = self
                 .instances
                 .iter()
                 .enumerate()
                 .filter(|(_, x)| !x.is_idle())
-                .min_by(|a, b| a.1.backend.clock.partial_cmp(&b.1.backend.clock).unwrap())
+                .min_by(|a, b| a.1.backend.clock.total_cmp(&b.1.backend.clock))
                 .map(|(i, _)| i);
             let Some(i) = next else {
-                if self.in_flight.is_empty() {
+                if in_flight.is_empty() {
                     break;
                 }
                 // Only in-flight packets remain: force delivery.
-                let (at, msg) = self.in_flight.remove(0);
-                let dest = msg.to;
-                let inst = &mut self.instances[dest];
+                let (at, msg) = in_flight.remove(0);
+                let inst = &mut self.instances[msg.to];
                 inst.backend.clock = inst.backend.clock.max(at);
                 inst.handle_stage2(msg).expect("sim stage2 delivery");
                 continue;
@@ -226,63 +546,74 @@ impl SimCluster {
             self.instances[i].step().expect("sim step");
             self.steps += 1;
 
-            if self.cfg.realloc_enabled {
-                let counts: Vec<usize> =
-                    self.instances.iter().map(|x| x.sample_count()).collect();
-                if self.realloc.should_decide(self.steps, &counts) {
-                    // Feed recent operating points and refresh the knee.
-                    for inst in &self.instances {
-                        if let Some(&(t, tok, live)) = inst.metrics.trace.last() {
-                            if t > 0.0 && live > 0 {
-                                self.realloc.observe(live, tok as f64 / t);
-                            }
-                        }
-                    }
-                    self.realloc.refit_threshold();
-                    let caps = vec![self.cfg.params.max_batch * 4; self.instances.len()];
-                    let plan = self.realloc.decide(self.steps, &counts, &caps);
-                    for m in plan {
-                        self.migrate(m.from, m.to, m.count);
-                    }
+            if self.cfg.realloc_enabled && self.realloc.due(self.steps) {
+                in_flight.extend(self.realloc_decide());
+            }
+        }
+        self.summarize()
+    }
+
+    /// One reallocation round: gather counts, bail if the fleet is
+    /// balanced, feed operating points + refit the per-tier knees, and
+    /// pump every planned order through the §6.2 endpoint protocol.
+    /// Returns the Stage-2 packets with their virtual arrival times.
+    fn realloc_decide(&mut self) -> Vec<(f64, Stage2Msg<SimBackend>)> {
+        let counts: Vec<usize> = self.instances.iter().map(|x| x.sample_count()).collect();
+        if !self.realloc.inefficiency(&counts) {
+            return Vec::new();
+        }
+        // Feed recent operating points and refresh the knee(s).
+        for (i, inst) in self.instances.iter().enumerate() {
+            if let Some(&(t, tok, live)) = inst.metrics.trace.last() {
+                if t > 0.0 && live > 0 {
+                    self.realloc.observe_on(i, live, tok as f64 / t);
                 }
             }
         }
-
-        let total_tokens: u64 = self.instances.iter().map(|x| x.metrics.tokens_out).sum();
-        let makespan = self
-            .instances
-            .iter()
-            .map(|x| x.backend.clock)
-            .fold(0.0f64, f64::max);
-        let (acc, rounds): (u64, u64) = self
-            .instances
-            .iter()
-            .flat_map(|x| x.finished.iter())
-            .fold((0, 0), |a, s| (a.0 + s.accepted as u64, a.1 + s.rounds as u64));
-        ClusterResult {
-            makespan,
-            total_tokens,
-            n_samples: self.cfg.n_samples,
-            migrations: self.migrations,
-            realloc_decisions: self.realloc.decisions,
-            migration_downtime: self.downtime,
-            mean_accepted: if rounds == 0 { 0.0 } else { acc as f64 / rounds as f64 },
-            traces: self.instances.iter().map(|x| x.metrics.trace.clone()).collect(),
-            fig7_curve: self.instances[0].accept_pred.curve(),
-            accept_corr: self.instances[0].accept_pred.correlation(),
+        self.realloc.refit_threshold();
+        // Per-instance capacity: 4× this instance's decode slots — the
+        // same memory budget `handle_alloc_req` enforces, so mixed-batch
+        // tiers advertise their true headroom.
+        let caps: Vec<usize> = self.instances.iter().map(|x| x.capacity() * 4).collect();
+        let plan = self.realloc.decide(self.steps, &counts, &caps);
+        let mut packets = Vec::new();
+        for m in plan {
+            if let Some(p) = self.pump_migration(m.from, m.to, m.count) {
+                packets.push(p);
+            }
         }
+        packets
+    }
+
+    /// Effective link between two instances: the bottleneck of the two
+    /// endpoints' interconnects (latency adds at the slower NIC).
+    fn link(&self, from: usize, to: usize) -> (f64, f64) {
+        let a = &self.instances[from].backend.cost;
+        let b = &self.instances[to].backend.cost;
+        (a.link_latency.max(b.link_latency), a.link_bandwidth.min(b.link_bandwidth))
+    }
+
+    fn report_refusal(&mut self, from: usize) {
+        self.realloc.report_refusal();
+        self.tier_refusals[self.tier_of[from]] += 1;
     }
 
     /// Execute one reallocation order through the real §6.2 endpoint
     /// protocol, at the source's current virtual instant. Control
     /// messages (AllocReq/Ack) are ~µs against ~ms decode steps and cost
     /// no virtual time; the Stage-1 bulk overlaps source compute; only
-    /// the Stage-2 packet rides the modeled link.
-    fn migrate(&mut self, from: usize, to: usize, count: usize) {
+    /// the Stage-2 packet rides the modeled link. Returns the packet and
+    /// its arrival time (None if the order was refused).
+    fn pump_migration(
+        &mut self,
+        from: usize,
+        to: usize,
+        count: usize,
+    ) -> Option<(f64, Stage2Msg<SimBackend>)> {
         let stage2 = match self.instances[from].begin_migration(to, count) {
             MigrateStart::Refused => {
-                self.realloc.report_refusal();
-                return;
+                self.report_refusal(from);
+                return None;
             }
             MigrateStart::QueueOnly(pkt) => pkt,
             MigrateStart::AllocReq(req) => {
@@ -298,12 +629,14 @@ impl SimCluster {
                             .expect("stage1 was just sent")
                     }
                     _ => {
-                        self.realloc.report_refusal();
-                        return;
+                        self.report_refusal(from);
+                        return None;
                     }
                 }
             }
         };
+        let (lat, bw) = self.link(from, to);
+        let kv = &self.instances[from].backend.cost;
         let now = self.instances[from].backend.clock;
         let mut latest = now;
         for c in &stage2.control {
@@ -312,11 +645,12 @@ impl SimCluster {
                     // Stage 1 overlaps with source compute; downtime is the
                     // Stage-2 delta (≈ one round of new tokens) + handshake.
                     let delta_tokens = (c.mean_accepted().ceil() as usize + 1).max(1);
-                    2.0 * self.cost.link_latency
-                        + self.cost.t_transfer(self.cost.kv_bytes(delta_tokens))
+                    let bytes = kv.kv_bytes(delta_tokens);
+                    2.0 * lat + (lat + bytes as f64 / bw)
                 }
                 MigrationStyle::Naive => {
-                    self.cost.t_transfer(self.cost.kv_bytes(c.seq_len()))
+                    let bytes = kv.kv_bytes(c.seq_len());
+                    lat + bytes as f64 / bw
                 }
             };
             self.downtime += downtime;
@@ -324,7 +658,58 @@ impl SimCluster {
             latest = latest.max(now + downtime);
         }
         self.migrations += stage2.waiting_tasks.len() as u64;
-        self.in_flight.push((latest, stage2));
+        let moved = (stage2.control.len() + stage2.waiting_tasks.len()) as u64;
+        self.tier_out[self.tier_of[from]] += moved;
+        self.tier_in[self.tier_of[to]] += moved;
+        Some((latest, stage2))
+    }
+
+    fn summarize(&self) -> ClusterResult {
+        let total_tokens: u64 = self.instances.iter().map(|x| x.metrics.tokens_out).sum();
+        let makespan = self
+            .instances
+            .iter()
+            .map(|x| x.backend.clock)
+            .fold(0.0f64, f64::max);
+        let (acc, rounds): (u64, u64) = self
+            .instances
+            .iter()
+            .flat_map(|x| x.finished.iter())
+            .fold((0, 0), |a, s| (a.0 + s.accepted as u64, a.1 + s.rounds as u64));
+        let tier_stats = self
+            .tier_names
+            .iter()
+            .enumerate()
+            .map(|(t, name)| TierStats {
+                tier: name.clone(),
+                instances: self.tier_of.iter().filter(|&&x| x == t).count(),
+                migrated_out: self.tier_out[t],
+                migrated_in: self.tier_in[t],
+                refusals: self.tier_refusals[t],
+            })
+            .collect();
+        ClusterResult {
+            makespan,
+            total_tokens,
+            n_samples: self.cfg.n_samples,
+            migrations: self.migrations,
+            realloc_decisions: self.realloc.decisions,
+            refusals: self.realloc.refusals,
+            migration_downtime: self.downtime,
+            mean_accepted: if rounds == 0 { 0.0 } else { acc as f64 / rounds as f64 },
+            traces: self.instances.iter().map(|x| x.metrics.trace.clone()).collect(),
+            tier_stats,
+            fig7_curve: self
+                .instances
+                .first()
+                .map(|x| x.accept_pred.curve())
+                .unwrap_or_default(),
+            accept_corr: self
+                .instances
+                .first()
+                .map(|x| x.accept_pred.correlation())
+                .unwrap_or(0.0),
+        }
     }
 }
 
@@ -458,6 +843,122 @@ mod tests {
     }
 
     #[test]
+    fn zero_instance_config_is_graceful() {
+        // No instances: empty results, no panic (fig7_curve/accept_corr
+        // used to index instances[0] unconditionally).
+        let mut cfg = base_cfg(16, 0);
+        cfg.realloc_enabled = true;
+        let mut c = SimCluster::new(cfg);
+        let r = c.run();
+        assert_eq!(r.n_samples, 0);
+        assert_eq!(r.total_tokens, 0);
+        assert_eq!(r.makespan, 0.0);
+        assert!(r.fig7_curve.is_empty());
+        assert_eq!(r.accept_corr, 0.0);
+        assert_eq!(r.tokens_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn timed_realloc_ticks_rebalance_too() {
+        // Virtual-period cadence (ReallocTick events) instead of the
+        // step counter: the skewed fleet must still rebalance and finish.
+        let mut cfg = base_cfg(0, 4);
+        cfg.realloc_period_secs = Some(0.25);
+        let mut c = SimCluster::with_assignment(
+            cfg,
+            vec![vec![1500; 16], vec![60; 16], vec![60; 16], vec![60; 16]],
+        );
+        let r = c.run();
+        assert!(r.migrations > 0, "timed ticks must trigger migrations");
+        let done: usize = c.instances.iter().map(|x| x.finished.len()).sum();
+        assert_eq!(done, 64);
+    }
+
+    #[test]
+    fn heterogeneous_fleet_reports_tier_stats() {
+        let mut cfg = base_cfg(0, 0);
+        cfg.cooldown = 8;
+        cfg.fleet = vec![
+            FleetTier::preset("h100", 2).unwrap(),
+            FleetTier::preset("l40s", 2).unwrap(),
+        ];
+        // The slow tier (instances 2, 3) holds the long tail.
+        let mut c = SimCluster::with_assignment(
+            cfg,
+            vec![vec![50; 4], vec![50; 4], vec![1000; 20], vec![1000; 20]],
+        );
+        let r = c.run();
+        assert_eq!(r.tier_stats.len(), 2);
+        assert_eq!(r.tier_stats[0].tier, "h100");
+        assert_eq!(r.tier_stats[0].instances, 2);
+        assert!(r.migrations > 0, "skew across tiers must migrate");
+        // The fast tier steals work: net flow l40s → h100.
+        assert!(
+            r.tier_stats[0].migrated_in > r.tier_stats[0].migrated_out,
+            "h100 in {} out {}",
+            r.tier_stats[0].migrated_in,
+            r.tier_stats[0].migrated_out
+        );
+        assert!(
+            r.tier_stats[1].migrated_out > r.tier_stats[1].migrated_in,
+            "l40s in {} out {}",
+            r.tier_stats[1].migrated_in,
+            r.tier_stats[1].migrated_out
+        );
+        // Refusal accounting is consistent fleet-wide.
+        let tier_refusals: u64 = r.tier_stats.iter().map(|t| t.refusals).sum();
+        assert_eq!(r.refusals, tier_refusals);
+        // All samples complete exactly once.
+        let mut ids: Vec<u64> = c
+            .instances
+            .iter()
+            .flat_map(|x| x.finished.iter().map(|s| s.id))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..48).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn event_queue_orders_by_time_then_kind_then_seq() {
+        let mut q = EventQueue::new();
+        q.push(2.0, EventKind::StepReady(0));
+        q.push(1.0, EventKind::StepReady(1));
+        q.push(1.0, EventKind::ReallocTick);
+        q.push(1.0, EventKind::StepReady(2));
+        // time first …
+        let e = q.pop().unwrap();
+        assert_eq!(e.time, 1.0);
+        // … kind rank second (StepReady before ReallocTick at equal time) …
+        match e.kind {
+            EventKind::StepReady(i) => assert_eq!(i, 1), // seq FIFO among ties
+            _ => panic!("expected a step event first"),
+        }
+        match q.pop().unwrap().kind {
+            EventKind::StepReady(i) => assert_eq!(i, 2),
+            _ => panic!("expected the second step event"),
+        }
+        assert!(matches!(q.pop().unwrap().kind, EventKind::ReallocTick));
+        let last = q.pop().unwrap();
+        assert_eq!(last.time, 2.0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn event_queue_is_nan_safe() {
+        // A NaN timestamp must neither panic nor poison the order:
+        // total_cmp sorts NaN after every finite time.
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, EventKind::StepReady(0));
+        q.push(5.0, EventKind::StepReady(1));
+        q.push(f64::INFINITY, EventKind::StepReady(2));
+        let order: Vec<f64> = std::iter::from_fn(|| q.pop().map(|e| e.time)).collect();
+        assert_eq!(order.len(), 3);
+        assert_eq!(order[0], 5.0);
+        assert_eq!(order[1], f64::INFINITY);
+        assert!(order[2].is_nan());
+    }
+
+    #[test]
     fn throughput_accessors_guard_zero_makespan() {
         let r = ClusterResult {
             makespan: 0.0,
@@ -465,9 +966,11 @@ mod tests {
             n_samples: 0,
             migrations: 0,
             realloc_decisions: 0,
+            refusals: 0,
             migration_downtime: 0.0,
             mean_accepted: 0.0,
             traces: Vec::new(),
+            tier_stats: Vec::new(),
             fig7_curve: Vec::new(),
             accept_corr: 0.0,
         };

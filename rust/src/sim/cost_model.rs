@@ -63,6 +63,56 @@ impl CostModel {
         }
     }
 
+    /// A100-80GB tier, same Llama-8B-class model. ~2.3× the HBM
+    /// bandwidth of an L40S, so the memory-bound KV-load term shrinks
+    /// more than the launch floor does — which pushes the roofline knee
+    /// *up* (an A100 absorbs more concurrent samples before saturating,
+    /// `knee(1000, 8)` ≈ 13 vs ≈ 9 on the L40S). Bigger SM budget also
+    /// raises the free-draft-token shadow.
+    pub fn a100_llama8b() -> Self {
+        CostModel {
+            draft_base: 0.9e-3,
+            draft_per_level: 0.3e-3,
+            verify_base: 9e-3,
+            verify_per_seq_token: 3.0e-7,
+            verify_per_draft_token: 0.7e-4,
+            free_draft_tokens: 128.0,
+            ar_base: 9e-3,
+            link_bandwidth: 25e9,
+            link_latency: 15e-6,
+            kv_bytes_per_token: 135_000.0,
+        }
+    }
+
+    /// H100-80GB tier (~3.3 TB/s HBM3, NVLink-class interconnect).
+    /// Knee(1000, 8) ≈ 17: the fastest tier tolerates the deepest
+    /// batches, so under the tiered reallocator it acts as the fleet's
+    /// sink for migrated long-tail samples.
+    pub fn h100_llama8b() -> Self {
+        CostModel {
+            draft_base: 0.6e-3,
+            draft_per_level: 0.2e-3,
+            verify_base: 7e-3,
+            verify_per_seq_token: 1.8e-7,
+            verify_per_draft_token: 0.4e-4,
+            free_draft_tokens: 192.0,
+            ar_base: 7e-3,
+            link_bandwidth: 50e9,
+            link_latency: 10e-6,
+            kv_bytes_per_token: 135_000.0,
+        }
+    }
+
+    /// Named preset lookup for mixed-fleet configs (`FleetTier`).
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "l40s" | "l40s_llama8b" => Some(Self::l40s_llama8b()),
+            "a100" | "a100_llama8b" => Some(Self::a100_llama8b()),
+            "h100" | "h100_llama8b" => Some(Self::h100_llama8b()),
+            _ => None,
+        }
+    }
+
     /// One draft-generation phase (tree of `depth` levels).
     pub fn t_draft(&self, depth: usize) -> f64 {
         self.draft_base + self.draft_per_level * depth as f64
@@ -181,6 +231,40 @@ mod tests {
         };
         assert!(thr_n(32, 6) > thr_n(32, 24), "high load should prefer n=6");
         assert!(thr_n(2, 24) > thr_n(2, 6), "low load should prefer n=24");
+    }
+
+    #[test]
+    fn tiers_get_strictly_faster() {
+        // Same operating point, strictly decreasing round time per tier.
+        let l = CostModel::l40s_llama8b();
+        let a = CostModel::a100_llama8b();
+        let h = CostModel::h100_llama8b();
+        let t = |m: &CostModel| m.t_spec_round(5, 24 * 1000, 24 * 8);
+        assert!(t(&a) < t(&l), "a100 {} !< l40s {}", t(&a), t(&l));
+        assert!(t(&h) < t(&a), "h100 {} !< a100 {}", t(&h), t(&a));
+        assert!(h.t_ar_step(24_000, 24) < l.t_ar_step(24_000, 24));
+    }
+
+    #[test]
+    fn tier_knees_grow_with_speed() {
+        // Faster tiers saturate later: the per-tier reallocation
+        // thresholds (fitted from these knees) must be ordered.
+        let kl = CostModel::l40s_llama8b().knee(1000, 8);
+        let ka = CostModel::a100_llama8b().knee(1000, 8);
+        let kh = CostModel::h100_llama8b().knee(1000, 8);
+        assert!(kl < ka && ka < kh, "knees {kl} {ka} {kh} not increasing");
+        assert!((5.0..14.0).contains(&kl), "{kl}");
+        assert!((14.0..24.0).contains(&kh), "{kh}");
+    }
+
+    #[test]
+    fn by_name_resolves_presets() {
+        for name in ["l40s", "a100", "h100", "l40s_llama8b"] {
+            assert!(CostModel::by_name(name).is_some(), "{name}");
+        }
+        assert!(CostModel::by_name("tpu-v5").is_none());
+        let named = CostModel::by_name("h100").unwrap();
+        assert_eq!(named.verify_base, CostModel::h100_llama8b().verify_base);
     }
 
     #[test]

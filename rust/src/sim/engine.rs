@@ -170,6 +170,12 @@ impl DecodeBackend for SimBackend {
         self.clock
     }
 
+    /// A simulated instance is ready again the moment its previous round
+    /// ends: the event-heap cluster schedules it at its private clock.
+    fn next_ready(&self) -> f64 {
+        self.clock
+    }
+
     /// Admission is free in simulation: the task *is* the live sample.
     fn prefill(&mut self, task: SimSample, _metrics: &mut InstanceMetrics) -> Result<SimSample> {
         Ok(task)

@@ -14,18 +14,25 @@
 //! * [`cost_model`] — step wall-times `t_draft`, `t_verify(N_seq,
 //!   N_draft)` and the migration link, calibrated to the operating points
 //!   the paper discloses (Fig 5: 24 samples → 1453 tok/s, 1 → 103,
-//!   19+6 → 1415+765; Fig 9's knee; §7.2 speedup bands);
+//!   19+6 → 1415+765; Fig 9's knee; §7.2 speedup bands), with named
+//!   per-tier presets (`l40s`/`a100`/`h100`) for mixed-GPU fleets;
 //! * [`acceptance`] — a ground-truth acceptance process `P(accept | dl) =
 //!   dl^γ` with EAGLE-like draft-probability profiles, which the real
 //!   `AcceptancePredictor` then has to *learn online*, exactly as on
 //!   hardware.
 //!
-//! [`engine`] is the simulated backend + single-instance wrapper;
-//! [`cluster`] wires N endpoints to the real reallocator and plays the
-//! virtual-clock transport for the real migration protocol (8–64
-//! instances run in ordinary `cargo test`); [`e2e`] extends the model to
-//! full RLHF iterations (inference + training stage costs) for Figs 3
-//! and 12.
+//! [`engine`] is the simulated backend + single-instance wrapper.
+//! [`cluster`] is a true discrete-event simulator: one time-ordered
+//! event heap (instance step-ready, Stage-2 packet arrival, realloc
+//! tick) with deterministic `(time, kind, seq)` tie-breaking schedules N
+//! endpoints against the real reallocator and plays the virtual-clock
+//! transport for the real migration protocol. Scheduling is O(log n)
+//! per event rather than the old O(n) laggard scan, so 8–64 instances
+//! run inside ordinary `cargo test` and 512-instance heterogeneous
+//! fleets (per-instance [`cost_model::CostModel`] tiers with per-tier
+//! reallocation knees) complete 8k-sample workloads in seconds. [`e2e`]
+//! extends the model to full RLHF iterations (inference + training
+//! stage costs) for Figs 3 and 12.
 
 pub mod acceptance;
 pub mod cluster;
@@ -33,7 +40,7 @@ pub mod cost_model;
 pub mod e2e;
 pub mod engine;
 
-pub use cluster::{ClusterConfig, ClusterResult, SimCluster};
+pub use cluster::{ClusterConfig, ClusterResult, FleetTier, SimCluster, TierStats};
 pub use cost_model::CostModel;
 pub use engine::SimInstance;
 pub use engine::SimMode;

@@ -7,15 +7,20 @@
 //! instances inside ordinary `cargo test`:
 //!
 //! * a 64-instance run completes with migrations > 0;
+//! * golden parity: the event-heap scheduler reproduces the retained
+//!   laggard-scan reference bit-for-bit (`total_tokens`, `makespan`) on
+//!   homogeneous 8-instance fleets under fixed seeds;
 //! * conservation: no sample is lost or duplicated and token counts are
-//!   conserved across arbitrary migration sequences (property test, 16
-//!   instances);
+//!   conserved across arbitrary migration sequences (property test at 16
+//!   instances, plus a 256-instance event-heap run);
+//! * heterogeneous fleets: fast tiers steal the slow tier's work through
+//!   the real endpoint protocol, with per-tier accounting;
 //! * the endpoint handshake moves a sample intact between two instances
 //!   and handles refusal without losing work.
 
 use rlhfspec::coordinator::core::{AckOutcome, MigrateStart};
 use rlhfspec::sim::acceptance::AcceptanceModel;
-use rlhfspec::sim::cluster::{ClusterConfig, SimCluster};
+use rlhfspec::sim::cluster::{ClusterConfig, FleetTier, SimCluster};
 use rlhfspec::sim::cost_model::CostModel;
 use rlhfspec::sim::engine::{SimInstance, SimParams, SimSample};
 use rlhfspec::testutil;
@@ -103,6 +108,161 @@ fn property_conservation_across_arbitrary_migration_sequences() {
         let r = c.run();
         conservation_checks(&c, &r, n);
     });
+}
+
+#[test]
+fn golden_parity_event_heap_matches_laggard_scan() {
+    // The event-heap scheduler must reproduce the pre-refactor laggard
+    // scan *bit for bit* on homogeneous fleets: same fixed-seed RNG draw
+    // order, same step order, same migration sequence. Covers both decode
+    // modes and a migration-heavy skewed assignment.
+    for seed in [0u64, 7, 42] {
+        let cfg = ClusterConfig {
+            instances: 8,
+            n_samples: 192,
+            max_tokens: 512,
+            cooldown: 24,
+            seed,
+            ..Default::default()
+        };
+        let heap = SimCluster::new(cfg.clone()).run();
+        let scan = SimCluster::new(cfg).run_reference_laggard();
+        assert_eq!(heap.total_tokens, scan.total_tokens, "seed {seed}");
+        assert_eq!(
+            heap.makespan.to_bits(),
+            scan.makespan.to_bits(),
+            "seed {seed}: {} vs {}",
+            heap.makespan,
+            scan.makespan
+        );
+        assert_eq!(heap.migrations, scan.migrations, "seed {seed}");
+        assert_eq!(heap.realloc_decisions, scan.realloc_decisions, "seed {seed}");
+    }
+    // AR mode keeps many instance clocks exactly tied for long stretches
+    // — the (time, kind, seq) tie-break must still replay the scan's
+    // lowest-index-first order.
+    let ar_cfg = ClusterConfig {
+        instances: 8,
+        mode: rlhfspec::sim::SimMode::Ar,
+        n_samples: 128,
+        max_tokens: 256,
+        seed: 5,
+        ..Default::default()
+    };
+    let heap = SimCluster::new(ar_cfg.clone()).run();
+    let scan = SimCluster::new(ar_cfg).run_reference_laggard();
+    assert_eq!(heap.total_tokens, scan.total_tokens);
+    assert_eq!(heap.makespan.to_bits(), scan.makespan.to_bits());
+}
+
+#[test]
+fn golden_parity_under_skewed_migrations() {
+    // Skew forces a dense migration schedule: Stage-2 arrival ordering on
+    // the heap must replay the scan's delivery semantics exactly.
+    let mk = || {
+        let cfg = ClusterConfig {
+            instances: 4,
+            cooldown: 8,
+            n_samples: 0,
+            max_tokens: 1024,
+            seed: 3,
+            ..Default::default()
+        };
+        SimCluster::with_assignment(
+            cfg,
+            vec![vec![900; 24], vec![40; 4], vec![40; 4], vec![40; 4]],
+        )
+    };
+    let heap = mk().run();
+    let scan = mk().run_reference_laggard();
+    assert!(heap.migrations > 0, "scenario must migrate");
+    assert_eq!(heap.total_tokens, scan.total_tokens);
+    assert_eq!(heap.makespan.to_bits(), scan.makespan.to_bits());
+    assert_eq!(heap.migrations, scan.migrations);
+    assert_eq!(heap.migration_downtime.to_bits(), scan.migration_downtime.to_bits());
+}
+
+#[test]
+fn two_hundred_fifty_six_instances_conserve_samples() {
+    // Event-heap scale test: 256 instances, skewed enough to migrate;
+    // every sample finishes exactly once and every token is counted on
+    // exactly one instance.
+    let cfg = ClusterConfig {
+        instances: 256,
+        cooldown: 16,
+        n_samples: 0,
+        max_tokens: 384,
+        seed: 17,
+        ..Default::default()
+    };
+    let mut assignment: Vec<Vec<usize>> = Vec::new();
+    for i in 0..256 {
+        if i % 4 == 0 {
+            assignment.push(vec![350; 8]); // heavy: long-tail holders
+        } else {
+            assignment.push(vec![40; 2]); // light: drain fast
+        }
+    }
+    let n: u64 = assignment.iter().map(|v| v.len() as u64).sum();
+    let mut c = SimCluster::with_assignment(cfg, assignment);
+    let r = c.run();
+    assert!(r.migrations > 0, "256-instance skew produced no migrations");
+    conservation_checks(&c, &r, n);
+}
+
+#[test]
+fn heterogeneous_fleet_fast_tiers_steal_work() {
+    // Mixed fleet through the real endpoint protocol: the overloaded slow
+    // tier must shed its long tail to the fast tiers, and the per-tier
+    // ledgers must balance.
+    let cfg = ClusterConfig {
+        fleet: vec![
+            FleetTier::preset("h100", 4).unwrap(),
+            FleetTier::preset("a100", 4).unwrap(),
+            FleetTier::preset("l40s", 8).unwrap(),
+        ],
+        cooldown: 16,
+        n_samples: 0,
+        max_tokens: 768,
+        seed: 23,
+        ..Default::default()
+    };
+    let mut assignment: Vec<Vec<usize>> = Vec::new();
+    for _ in 0..8 {
+        assignment.push(vec![60; 2]); // fast tiers: drain quickly
+    }
+    for _ in 0..8 {
+        assignment.push(vec![700; 12]); // slow tier: overloaded long tail
+    }
+    let n: u64 = assignment.iter().map(|v| v.len() as u64).sum();
+    let mut c = SimCluster::with_assignment(cfg, assignment);
+    let r = c.run();
+    conservation_checks(&c, &r, n);
+    assert!(r.migrations > 0, "tier skew must migrate");
+    assert_eq!(r.tier_stats.len(), 3);
+    let h100 = &r.tier_stats[0];
+    let l40s = &r.tier_stats[2];
+    assert_eq!(h100.tier, "h100");
+    assert_eq!(l40s.tier, "l40s");
+    assert!(
+        h100.migrated_in > h100.migrated_out,
+        "h100 must be a net sink: in {} out {}",
+        h100.migrated_in,
+        h100.migrated_out
+    );
+    assert!(
+        l40s.migrated_out > l40s.migrated_in,
+        "l40s must be a net source: in {} out {}",
+        l40s.migrated_in,
+        l40s.migrated_out
+    );
+    // Fleet-wide flow conservation: every migrated-out sample arrived
+    // somewhere.
+    let out_total: u64 = r.tier_stats.iter().map(|t| t.migrated_out).sum();
+    let in_total: u64 = r.tier_stats.iter().map(|t| t.migrated_in).sum();
+    assert_eq!(out_total, in_total);
+    let refusal_total: u64 = r.tier_stats.iter().map(|t| t.refusals).sum();
+    assert_eq!(r.refusals, refusal_total);
 }
 
 #[test]
