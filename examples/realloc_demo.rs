@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
             // round-robin allocation sends the long ones to instance 0
             max_new_tokens: if i % 2 == 0 { 44 } else { 3 },
             eos: 0,
+            submitted_at: None,
         });
     }
 
@@ -66,6 +67,7 @@ fn main() -> anyhow::Result<()> {
                 prompt: vec![1, 2, 3, 4],
                 max_new_tokens: 3,
                 eos: 0,
+                submitted_at: None,
             })
             .collect();
         svc.run_batch(warm)?;

@@ -1,0 +1,79 @@
+//! Streaming rollout: drive a Poisson (continuous-batching) workload
+//! through the virtual cluster and print the serving-latency
+//! percentiles — the workload real RLHF rollout systems face, which the
+//! paper's batch-synchronous evaluation cannot show.
+//!
+//! ```bash
+//! cargo run --release --example streaming_rollout            # defaults
+//! cargo run --release --example streaming_rollout 12 256     # rate, samples
+//! ```
+//!
+//! See `docs/ARCHITECTURE.md` ("Streaming arrivals and admission") for
+//! how the arrival/admission path threads through the event heap.
+
+use rlhfspec::data::arrivals::ArrivalProcess;
+use rlhfspec::sim::cluster::{ClusterConfig, FleetTier, SimCluster};
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let rate: f64 = args.next().map(|a| a.parse()).transpose()?.unwrap_or(8.0);
+    let n_samples: usize = args.next().map(|a| a.parse()).transpose()?.unwrap_or(192);
+
+    // A mixed fleet: two fast tiers plus the L40S baseline, each with its
+    // own reallocation knee. Small decode batches make queueing visible.
+    let mut cfg = ClusterConfig {
+        fleet: vec![
+            FleetTier::preset("h100", 2).expect("known preset"),
+            FleetTier::preset("a100", 2).expect("known preset"),
+            FleetTier::preset("l40s", 4).expect("known preset"),
+        ],
+        n_samples,
+        max_tokens: 512,
+        cooldown: 24,
+        seed: 0,
+        ..Default::default()
+    };
+    cfg.params.max_batch = 8;
+    // Occupancy ramps as arrivals land: let the §5 selector refit on
+    // batch-occupancy changes instead of a fixed step cadence.
+    cfg.params.selector.refit_on_occupancy_change = true;
+
+    println!("offering {n_samples} samples at {rate}/s to a 2×h100 + 2×a100 + 4×l40s fleet…");
+    let mut cluster = SimCluster::streaming(cfg, &ArrivalProcess::poisson(rate))?;
+    let r = cluster.run();
+
+    println!(
+        "\ncompleted {}/{} samples in {:.1} virtual s ({} refused at admission)",
+        r.n_samples, r.arrivals, r.makespan, r.admission_refusals
+    );
+    println!(
+        "throughput: {:.0} tok/s, {:.2} samples/s | {} migrations, {} realloc decisions",
+        r.tokens_per_sec(),
+        r.samples_per_sec(),
+        r.migrations,
+        r.realloc_decisions
+    );
+    println!("\nserving latency over {} samples:", r.latency.n);
+    println!(
+        "  queueing delay  p50 {:>7.3}s   p95 {:>7.3}s   p99 {:>7.3}s",
+        r.latency.queue_p50, r.latency.queue_p95, r.latency.queue_p99
+    );
+    println!(
+        "  TTFT            p50 {:>7.3}s   p95 {:>7.3}s   p99 {:>7.3}s",
+        r.latency.ttft_p50, r.latency.ttft_p95, r.latency.ttft_p99
+    );
+    println!(
+        "  TPOT            p50 {:>6.2}ms   p95 {:>6.2}ms   p99 {:>6.2}ms",
+        r.latency.tpot_p50 * 1e3,
+        r.latency.tpot_p95 * 1e3,
+        r.latency.tpot_p99 * 1e3
+    );
+    println!("\nper-tier traffic:");
+    for t in &r.tier_stats {
+        println!(
+            "  {:<6} ×{}  migrated in {:>4} / out {:>4}  refusals {:>3}  admission refusals {:>3}",
+            t.tier, t.instances, t.migrated_in, t.migrated_out, t.refusals, t.admission_refusals
+        );
+    }
+    Ok(())
+}

@@ -10,7 +10,14 @@
 //! * `core/cluster/*` — whole-fleet wall time of the event-heap
 //!   discrete-event scheduler, including the acceptance criterion run:
 //!   a 512-instance heterogeneous fleet (l40s/a100/h100 tiers) driving
-//!   8192 samples end to end, which must complete in seconds.
+//!   8192 samples end to end, which must complete in seconds — both
+//!   batch-synchronous and as a streaming (Poisson-arrival) workload.
+//!
+//! Every `core/step/<mode>/b<batch>` row is paired with a
+//! `.../modeled-step` row whose `mean_ns` is the *modeled* decode-step
+//! duration it schedules; CI's budget gate
+//! (`scripts/check_bench_budget.py`) divides the two and fails when
+//! scheduler overhead at b = 64 exceeds 1% of the modeled step.
 //!
 //! Pass `--test` (`cargo bench --bench bench_core -- --test`) for the CI
 //! smoke mode: same code paths, scaled-down fleets and iteration counts.
@@ -18,6 +25,7 @@
 use std::time::Instant;
 
 use rlhfspec::benchutil::{bench, black_box, write_json, BenchResult};
+use rlhfspec::data::arrivals::ArrivalProcess;
 use rlhfspec::sim::acceptance::AcceptanceModel;
 use rlhfspec::sim::cluster::{ClusterConfig, FleetTier, SimCluster};
 use rlhfspec::sim::cost_model::CostModel;
@@ -77,6 +85,17 @@ fn main() {
             );
             black_box(inst.metrics.tokens_out);
             results.push(r);
+            // Paired row for the CI budget gate: the modeled step this
+            // scheduler overhead amortizes against.
+            let step_ns = virtual_step * 1e9;
+            results.push(BenchResult {
+                name: format!("core/step/{label}/b{batch}/modeled-step"),
+                iters: 1,
+                mean_ns: step_ns,
+                p50_ns: step_ns,
+                p99_ns: step_ns,
+                min_ns: step_ns,
+            });
         }
     }
 
@@ -111,6 +130,44 @@ fn main() {
         res.migrations,
         res.refusals,
         res.total_tokens
+    );
+
+    // ---- streaming (continuous-batching) workload at fleet scale ------
+    // Same heterogeneous fleet, but samples arrive over virtual time as
+    // one TaskArrival heap event each — the event kind must not regress
+    // the scheduler (the budget gate above pins per-step overhead).
+    let rate = n_samples as f64 / 20.0; // offered over ~20 virtual seconds
+    let r = bench("core/cluster/streaming-poisson", 0, 1, || {
+        let mut cfg = hetero_cfg(per_tier, n_samples);
+        cfg.params.selector.refit_on_occupancy_change = true;
+        let mut cluster = SimCluster::streaming(cfg, &ArrivalProcess::poisson(rate))
+            .expect("streaming config");
+        let res = cluster.run();
+        assert_eq!(res.arrivals, n_samples as u64, "all samples must arrive");
+        assert_eq!(
+            res.arrivals,
+            res.n_samples as u64 + res.admission_refusals,
+            "conservation: arrivals = completions + refusals"
+        );
+        black_box(res.total_tokens);
+    });
+    results.push(r);
+    let mut cfg = hetero_cfg(per_tier, n_samples);
+    cfg.params.selector.refit_on_occupancy_change = true;
+    let sres = SimCluster::streaming(cfg, &ArrivalProcess::poisson(rate))
+        .expect("streaming config")
+        .run();
+    println!(
+        "  streaming @ {:.0}/s: {} done, {} refused | ttft p50/p95/p99 \
+         {:.2}/{:.2}/{:.2}s | queue p95 {:.2}s | tpot p50 {:.2}ms",
+        rate,
+        sres.n_samples,
+        sres.admission_refusals,
+        sres.latency.ttft_p50,
+        sres.latency.ttft_p95,
+        sres.latency.ttft_p99,
+        sres.latency.queue_p95,
+        sres.latency.tpot_p50 * 1e3,
     );
 
     write_json("BENCH_core.json", &results).expect("write BENCH_core.json");

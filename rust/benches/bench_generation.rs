@@ -41,6 +41,7 @@ fn main() {
                     prompt: (0..8).map(|_| rng.below(60) as i32 + 1).collect(),
                     max_new_tokens: usize::MAX / 2,
                     eos: 0,
+                    submitted_at: None,
                 });
             }
             inst.step().unwrap(); // admit + prefill + warm the executables

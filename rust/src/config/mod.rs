@@ -45,11 +45,26 @@ pub struct SelectorConfig {
     pub ndraft_bucket: usize,
     /// Online refit period (steps) for the acceptance/t_sd models.
     pub refit_every: usize,
+    /// Also refit (and drop the t_sd bucket cache) whenever batch
+    /// occupancy changes between steps, rate-limited to once per 8 steps.
+    /// Off by default — batch-synchronous runs see occupancy change only
+    /// at the drain tail, and the fixed cadence is calibrated for them.
+    /// Streaming workloads (continuous batching) should enable this so
+    /// the §5.3 budget search re-evaluates as occupancy ramps instead of
+    /// waiting out the `refit_every` cadence at a stale operating point.
+    pub refit_on_occupancy_change: bool,
 }
 
 impl Default for SelectorConfig {
     fn default() -> Self {
-        SelectorConfig { enabled: true, patience: 2, nseq_bucket: 256, ndraft_bucket: 4, refit_every: 64 }
+        SelectorConfig {
+            enabled: true,
+            patience: 2,
+            nseq_bucket: 256,
+            ndraft_bucket: 4,
+            refit_every: 64,
+            refit_on_occupancy_change: false,
+        }
     }
 }
 
@@ -168,6 +183,9 @@ impl RunConfig {
             "selector.nseq_bucket" => self.selector.nseq_bucket = u(val)?,
             "selector.ndraft_bucket" => self.selector.ndraft_bucket = u(val)?,
             "selector.refit_every" => self.selector.refit_every = u(val)?,
+            "selector.refit_on_occupancy_change" => {
+                self.selector.refit_on_occupancy_change = b(val)?
+            }
             "realloc.enabled" => self.realloc.enabled = b(val)?,
             "realloc.cooldown" => self.realloc.cooldown = u(val)?,
             "realloc.threshold" => self.realloc.threshold = u(val)?,

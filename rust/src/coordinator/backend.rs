@@ -62,6 +62,7 @@ pub trait DecodeBackend {
     type Control;
 
     // ---- identity & workload features --------------------------------
+    /// Cluster-unique id of a sample.
     fn sample_id(s: &Self::Sample) -> u64;
     /// Committed tokens (KV rows) — the selector's `N_seq` contribution
     /// and the Stage-1 snapshot length.
@@ -70,8 +71,11 @@ pub trait DecodeBackend {
     fn seq_len(s: &Self::Sample) -> usize;
     /// Mean accepted drafts per round (§6.1 victim feature).
     fn mean_accepted(s: &Self::Sample) -> f64;
+    /// Has the sample completed (target length / EOS / budget)?
     fn is_done(s: &Self::Sample) -> bool;
+    /// Convert a completed live sample into its finished record.
     fn finish(s: Self::Sample) -> Self::Finished;
+    /// Snapshot the control state that resumes a sample elsewhere (§6.2).
     fn control_of(s: &Self::Sample) -> Self::Control;
 
     // ---- capacity / clock ---------------------------------------------

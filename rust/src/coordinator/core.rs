@@ -43,7 +43,9 @@ pub enum DecodeMode {
 /// Stage 1 of an outbound migration: the bulk KV snapshot. The victims
 /// keep decoding on the source while this transfers.
 pub struct Stage1Msg<B: DecodeBackend> {
+    /// Source instance id.
     pub from: usize,
+    /// Destination instance id.
     pub to: usize,
     /// Bulk payload; carries the packed sample ids itself.
     pub kv: B::KvPayload,
@@ -54,10 +56,16 @@ pub struct Stage1Msg<B: DecodeBackend> {
 /// the destination. Queue-only moves (waiting tasks, no KV) are a Stage-2
 /// message with `kv_delta = None`.
 pub struct Stage2Msg<B: DecodeBackend> {
+    /// Source instance id.
     pub from: usize,
+    /// Destination instance id.
     pub to: usize,
+    /// KV rows generated since the Stage-1 snapshot (None for queue-only
+    /// moves).
     pub kv_delta: Option<B::KvPayload>,
+    /// Control snapshots that resume the victims on the destination.
     pub control: Vec<B::Control>,
+    /// Queued (never-admitted) tasks riding along without KV.
     pub waiting_tasks: Vec<B::Task>,
 }
 
@@ -95,9 +103,13 @@ struct MigOutState<B: DecodeBackend> {
 
 /// One generation instance: the adaptive decode loop over any backend.
 pub struct InstanceCore<B: DecodeBackend> {
+    /// Cluster-wide instance index.
     pub id: usize,
+    /// The execution backend (PJRT hardware or the virtual clock).
     pub backend: B,
+    /// Decode policy (AR / static speculative / adaptive).
     pub mode: DecodeMode,
+    /// Workload-aware selector configuration (§5).
     pub selector: SelectorConfig,
     /// Samples in decode slots.
     pub live: Vec<B::Sample>,
@@ -105,16 +117,25 @@ pub struct InstanceCore<B: DecodeBackend> {
     pub parked: Vec<B::Sample>,
     /// Queued tasks, not yet prefetched.
     pub waiting: Vec<B::Task>,
+    /// Completed samples retired on this instance.
     pub finished: Vec<B::Finished>,
+    /// The online `F : draft logit → P(accept)` fit (§5.2).
     pub accept_pred: AcceptancePredictor,
+    /// The online `t_sd(N_seq, N_draft)` regression (§5.2).
     pub tsd_pred: TsdPredictor,
+    /// Per-stage timing and counters.
     pub metrics: InstanceMetrics,
+    /// Scheduler steps executed.
     pub steps: usize,
     steps_since_refit: usize,
+    /// Live-batch occupancy at the previous step, for the streaming
+    /// occupancy-change refit trigger.
+    last_occupancy: usize,
     mig_out: Option<MigOutState<B>>,
 }
 
 impl<B: DecodeBackend> InstanceCore<B> {
+    /// Wrap a backend into a full instance (fresh predictors, no work).
     pub fn with_backend(id: usize, backend: B, mode: DecodeMode, selector: SelectorConfig) -> Self {
         InstanceCore {
             id,
@@ -130,6 +151,7 @@ impl<B: DecodeBackend> InstanceCore<B> {
             metrics: InstanceMetrics::default(),
             steps: 0,
             steps_since_refit: 0,
+            last_occupancy: 0,
             mig_out: None,
         }
     }
@@ -145,10 +167,12 @@ impl<B: DecodeBackend> InstanceCore<B> {
         self.live.len() + self.parked.len() + self.waiting.len()
     }
 
+    /// True when no sample is decoding, parked or queued here.
     pub fn is_idle(&self) -> bool {
         self.live.is_empty() && self.parked.is_empty() && self.waiting.is_empty()
     }
 
+    /// Queue a task (admitted into a decode slot on a later step).
     pub fn add_task(&mut self, task: B::Task) {
         self.waiting.push(task);
     }
@@ -159,6 +183,24 @@ impl<B: DecodeBackend> InstanceCore<B> {
         if self.live.is_empty() {
             return Ok(());
         }
+        // Streaming workloads: batch occupancy is time-varying (arrivals
+        // ramp it up, the long tail drains it), so the §5 selection must
+        // re-evaluate against fresh fits instead of waiting out the
+        // `refit_every` cadence at a stale operating point. Opt-in
+        // (`SelectorConfig::refit_on_occupancy_change`) and rate-limited
+        // so batch-synchronous runs are untouched and refit cost stays
+        // amortized.
+        let occupancy = self.live.len();
+        if self.selector.enabled
+            && self.selector.refit_on_occupancy_change
+            && occupancy != self.last_occupancy
+            && self.steps_since_refit >= 8
+        {
+            self.accept_pred.refit();
+            self.tsd_pred.refit();
+            self.steps_since_refit = 0;
+        }
+        self.last_occupancy = occupancy;
         match self.mode {
             DecodeMode::Ar => self.backend.step_ar(&mut self.live, &mut self.metrics)?,
             DecodeMode::StaticSpec(_) | DecodeMode::Adaptive => self.step_spec()?,

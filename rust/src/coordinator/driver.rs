@@ -30,6 +30,14 @@
 //!
 //! Initial allocation is sequential round-robin (paper §4: "training
 //! samples are first sequentially allocated to the generation instances").
+//!
+//! Two entry points share the workers: [`GenerationService::run_batch`]
+//! (batch-synchronous, the paper's workload) and
+//! [`GenerationService::submit`] + [`GenerationService::run_streaming`]
+//! (continuous batching: the monitor drains a wall-clock arrival queue
+//! between decode-step events, dispatching each task to the least-loaded
+//! instance — mirroring the virtual cluster's admission policy — and the
+//! report carries per-sample TTFT/TPOT/queueing-delay percentiles).
 
 use std::collections::BTreeMap;
 use std::rc::Rc;
@@ -43,7 +51,7 @@ use crate::coordinator::core::{AckOutcome, MigrateStart, Stage1Msg, Stage2Msg};
 use crate::coordinator::instance::{
     DecodeMode, FinishedSample, GenerationInstance, PjrtBackend, SampleTask,
 };
-use crate::coordinator::metrics::InstanceMetrics;
+use crate::coordinator::metrics::{InstanceMetrics, LatencySummary};
 use crate::coordinator::migration::AllocRequest;
 use crate::coordinator::reallocator::Reallocator;
 use crate::runtime::{HostTensor, Manifest, ModelStore};
@@ -108,26 +116,43 @@ enum Event {
 
 /// Per-instance summary returned to the caller.
 pub struct InstanceReport {
+    /// Instance id.
     pub id: usize,
+    /// Per-stage timing and counters.
     pub metrics: InstanceMetrics,
+    /// The learned Fig-7 acceptance curve rows.
     pub fig7_curve: Vec<(f64, f64, u64)>,
+    /// Pearson correlation of the learned acceptance curve.
     pub accept_corr: f64,
+    /// `t_sd` bucket-cache hits (§5.2 cache effectiveness).
     pub tsd_cache_hits: u64,
+    /// `t_sd` bucket-cache misses.
     pub tsd_cache_misses: u64,
 }
 
 /// Whole-run summary.
 pub struct GenerationReport {
+    /// Completed samples across the fleet.
     pub finished: Vec<FinishedSample>,
+    /// Per-instance reports, ordered by instance id.
     pub instances: Vec<InstanceReport>,
+    /// Wall seconds from dispatch to the last report.
     pub wall_secs: f64,
+    /// Migration orders issued by the monitor.
     pub migrations: u64,
+    /// Migration orders that ended in refusal.
     pub migration_refusals: u64,
+    /// Reallocation decisions taken.
     pub realloc_decisions: u64,
     /// Seconds the monitor spent inside reallocation decisions (§7.7 SRD).
     pub srd_secs: f64,
     /// Total generated tokens across instances.
     pub total_tokens: u64,
+    /// Per-sample serving-latency percentiles (queueing delay, TTFT,
+    /// TPOT) over samples that carried a submission stamp — i.e. the
+    /// streaming [`GenerationService::submit`] path; empty for plain
+    /// batch runs.
+    pub latency: LatencySummary,
 }
 
 impl GenerationReport {
@@ -316,6 +341,32 @@ impl Worker {
 // Driver
 // ---------------------------------------------------------------------------
 
+/// Assemble the final [`GenerationReport`] from the monitor accumulators
+/// (shared by `run_batch` and `run_streaming`).
+fn assemble_report(
+    all_finished: Vec<FinishedSample>,
+    done_reports: BTreeMap<usize, InstanceReport>,
+    wall_secs: f64,
+    migrations: u64,
+    migration_refusals: u64,
+    realloc_decisions: u64,
+    srd_secs: f64,
+) -> GenerationReport {
+    let total_tokens = done_reports.values().map(|r| r.metrics.tokens_out).sum();
+    let latencies: Vec<_> = all_finished.iter().filter_map(|f| f.latency).collect();
+    GenerationReport {
+        finished: all_finished,
+        instances: done_reports.into_values().collect(),
+        wall_secs,
+        migrations,
+        migration_refusals,
+        realloc_decisions,
+        srd_secs,
+        total_tokens,
+        latency: LatencySummary::from_samples(&latencies),
+    }
+}
+
 /// Persistent multi-instance generation service.
 ///
 /// Worker threads (each with its own PJRT client and compiled executables)
@@ -331,6 +382,9 @@ pub struct GenerationService {
     joins: Vec<std::thread::JoinHandle<()>>,
     realloc: Reallocator,
     mode: DecodeMode,
+    /// Streaming arrival queue: (offset seconds from `run_streaming`
+    /// start, task), fed by [`GenerationService::submit`].
+    arrival_queue: Vec<(f64, SampleTask)>,
 }
 
 impl GenerationService {
@@ -402,9 +456,11 @@ impl GenerationService {
             joins,
             realloc: Reallocator::new(cfg.realloc.threshold, cfg.realloc.cooldown as u64),
             mode,
+            arrival_queue: Vec::new(),
         })
     }
 
+    /// The decode mode every worker runs.
     pub fn mode(&self) -> DecodeMode {
         self.mode
     }
@@ -425,10 +481,88 @@ impl GenerationService {
         Ok(())
     }
 
+    /// Fold a worker's terminal event into the monitor's accumulators:
+    /// `Done` collects the finished samples + per-instance report (true
+    /// once every instance reported), `Fatal` aborts. Shared by
+    /// `run_batch` and `run_streaming` — with
+    /// [`Self::relay_protocol_event`] this keeps the two monitor loops'
+    /// shared logic in one place.
+    fn absorb_done(
+        ev: Event,
+        all_finished: &mut Vec<FinishedSample>,
+        done_reports: &mut BTreeMap<usize, InstanceReport>,
+        n_inst: usize,
+    ) -> Result<bool> {
+        match ev {
+            Event::Done {
+                instance,
+                finished,
+                metrics,
+                fig7_curve,
+                accept_corr,
+                tsd_cache_hits,
+                tsd_cache_misses,
+            } => {
+                all_finished.extend(finished);
+                done_reports.insert(
+                    instance,
+                    InstanceReport {
+                        id: instance,
+                        metrics: *metrics,
+                        fig7_curve,
+                        accept_corr,
+                        tsd_cache_hits,
+                        tsd_cache_misses,
+                    },
+                );
+                Ok(done_reports.len() == n_inst)
+            }
+            Event::Fatal { instance, error } => {
+                Err(anyhow!("instance {instance} failed: {error}"))
+            }
+            _ => unreachable!("only terminal events reach absorb_done"),
+        }
+    }
+
+    /// Relay a pure §6.2 protocol event between workers (AllocReq/Ack,
+    /// Stage 1/2, refusal accounting). Returns the event back when it is
+    /// not a relay (Progress/Done/Fatal) so the calling monitor loop can
+    /// apply its own bookkeeping — `run_batch` and `run_streaming` share
+    /// this pump so a protocol change cannot diverge between them.
+    fn relay_protocol_event(&mut self, ev: Event, refusals: &mut u64) -> Option<Event> {
+        match ev {
+            Event::AllocReq { to, req } => {
+                let _ = self.cmd_txs[to].send(Cmd::DeliverAllocReq(req));
+                None
+            }
+            Event::AllocAck { to_source, ok } => {
+                let _ = self.cmd_txs[to_source].send(Cmd::AllocAck { ok });
+                None
+            }
+            Event::Stage1 { to, pkt } => {
+                let _ = self.cmd_txs[to].send(Cmd::DeliverStage1(pkt));
+                None
+            }
+            Event::Stage2 { to, pkt } => {
+                let _ = self.cmd_txs[to].send(Cmd::DeliverStage2(pkt));
+                None
+            }
+            Event::MigrationRefused => {
+                *refusals += 1;
+                self.realloc.report_refusal();
+                None
+            }
+            other => Some(other),
+        }
+    }
+
     /// Process one batch of samples to completion (one generation stage).
     pub fn run_batch(&mut self, tasks: Vec<SampleTask>) -> Result<GenerationReport> {
         let n_inst = self.cmd_txs.len();
         let expected = tasks.len();
+        // Batch-synchronous: no admission backlog can gate reallocation
+        // (clears any stale gate from an aborted streaming run).
+        self.realloc.note_backlog(0);
         // Drain stale events from a previous batch.
         while self.ev_rx.try_recv().is_ok() {}
 
@@ -465,6 +599,9 @@ impl GenerationService {
                         t0.elapsed()
                     ))
                 }
+            };
+            let Some(ev) = self.relay_protocol_event(ev, &mut refusals) else {
+                continue;
             };
             match ev {
                 Event::Progress {
@@ -512,64 +649,203 @@ impl GenerationService {
                         }
                     }
                 }
-                Event::AllocReq { to, req } => {
-                    let _ = self.cmd_txs[to].send(Cmd::DeliverAllocReq(req));
-                }
-                Event::AllocAck { to_source, ok } => {
-                    let _ = self.cmd_txs[to_source].send(Cmd::AllocAck { ok });
-                }
-                Event::Stage1 { to, pkt } => {
-                    let _ = self.cmd_txs[to].send(Cmd::DeliverStage1(pkt));
-                }
-                Event::Stage2 { to, pkt } => {
-                    let _ = self.cmd_txs[to].send(Cmd::DeliverStage2(pkt));
-                }
-                Event::MigrationRefused => {
-                    refusals += 1;
-                    self.realloc.report_refusal();
-                }
-                Event::Done {
-                    instance,
-                    finished,
-                    metrics,
-                    fig7_curve,
-                    accept_corr,
-                    tsd_cache_hits,
-                    tsd_cache_misses,
-                } => {
-                    all_finished.extend(finished);
-                    done_reports.insert(
-                        instance,
-                        InstanceReport {
-                            id: instance,
-                            metrics: *metrics,
-                            fig7_curve,
-                            accept_corr,
-                            tsd_cache_hits,
-                            tsd_cache_misses,
-                        },
-                    );
-                    if done_reports.len() == n_inst {
+                other => {
+                    if Self::absorb_done(other, &mut all_finished, &mut done_reports, n_inst)? {
                         break;
                     }
-                }
-                Event::Fatal { instance, error } => {
-                    return Err(anyhow!("instance {instance} failed: {error}"));
                 }
             }
         }
 
-        let total_tokens = done_reports.values().map(|r| r.metrics.tokens_out).sum();
-        Ok(GenerationReport {
-            finished: all_finished,
-            instances: done_reports.into_values().collect(),
-            wall_secs: t0.elapsed().as_secs_f64(),
+        Ok(assemble_report(
+            all_finished,
+            done_reports,
+            t0.elapsed().as_secs_f64(),
             migrations,
-            migration_refusals: refusals,
-            realloc_decisions: self.realloc.decisions,
+            refusals,
+            self.realloc.decisions,
             srd_secs,
-            total_tokens,
-        })
+        ))
+    }
+
+    /// Queue tasks for the streaming path: they will be dispatched
+    /// `offset_secs` after [`GenerationService::run_streaming`] starts
+    /// (0 = immediately). Each task's `submitted_at` stamp is its
+    /// *scheduled* arrival instant — monitor-side dispatch lag counts as
+    /// queueing delay — so TTFT/queue metrics measure what a client of
+    /// the serving fleet would see. Tasks accumulate across calls until
+    /// the next `run_streaming`.
+    pub fn submit(&mut self, offset_secs: f64, tasks: Vec<SampleTask>) {
+        let at = if offset_secs.is_finite() { offset_secs.max(0.0) } else { 0.0 };
+        for t in tasks {
+            self.arrival_queue.push((at, t));
+        }
+    }
+
+    /// Process every submitted arrival to completion (continuous
+    /// batching): the monitor drains the arrival queue against the wall
+    /// clock between decode-step events, dispatching each due task to the
+    /// least-loaded instance — the same admission policy the virtual
+    /// cluster uses, with the per-worker waiting queue as the backlog (no
+    /// hard refusal on hardware: memory pressure is bounded by the
+    /// compiled batch buckets, not by sample count).
+    ///
+    /// Reallocation stays live throughout, but while every instance sits
+    /// at its 4×-capacity budget the policy reports a backlog
+    /// ([`Reallocator::note_backlog`]) and holds off: arrivals, not
+    /// migrations, fill the deficits.
+    pub fn run_streaming(&mut self) -> Result<GenerationReport> {
+        let n_inst = self.cmd_txs.len();
+        let mut sorted = std::mem::take(&mut self.arrival_queue);
+        sorted.sort_by(|a, b| a.0.total_cmp(&b.0));
+        // Consume front-to-back without cloning tasks at dispatch.
+        let mut queue: std::collections::VecDeque<(f64, SampleTask)> = sorted.into();
+        let expected = queue.len();
+        // Drain stale events from a previous batch.
+        while self.ev_rx.try_recv().is_ok() {}
+
+        let t0 = Instant::now();
+        let cap = self
+            .manifest
+            .batch_buckets
+            .iter()
+            .max()
+            .copied()
+            .unwrap_or(1)
+            * 4;
+        let caps: Vec<usize> = vec![cap; n_inst];
+        let mut counts = vec![0usize; n_inst];
+        let mut finished_counts = vec![0usize; n_inst];
+        let mut step: u64 = 0;
+        let mut migrations = 0u64;
+        let mut srd_secs = 0.0f64;
+        let mut reported = false;
+        let mut done_reports: BTreeMap<usize, InstanceReport> = BTreeMap::new();
+        let mut all_finished: Vec<FinishedSample> = Vec::new();
+        let mut refusals = 0u64;
+
+        if expected == 0 {
+            return Ok(assemble_report(
+                Vec::new(),
+                BTreeMap::new(),
+                0.0,
+                0,
+                0,
+                self.realloc.decisions,
+                0.0,
+            ));
+        }
+
+        loop {
+            // Dispatch every arrival that is due, stamping submission at
+            // dispatch time. Least-loaded under the memory budget first;
+            // when the whole fleet is at budget, still least-loaded (the
+            // worker's waiting queue is the backlog).
+            let now = t0.elapsed().as_secs_f64();
+            while let Some(&(due, _)) = queue.front() {
+                if due > now {
+                    break;
+                }
+                let (_, mut task) = queue.pop_front().expect("front was Some");
+                // Stamp the *scheduled* arrival instant, not the dispatch
+                // instant: if the monitor dispatches late (busy pumping
+                // events under load), that lag is real client-visible
+                // queueing delay and must stay in the TTFT/queue metrics
+                // — matching the sim plane, which anchors latency at the
+                // arrival-event time.
+                task.submitted_at = Some(t0 + Duration::from_secs_f64(due));
+                let dest = (0..n_inst)
+                    .filter(|&i| counts[i] < cap)
+                    .min_by_key(|&i| counts[i])
+                    .or_else(|| (0..n_inst).min_by_key(|&i| counts[i]))
+                    .expect("service always has at least one worker");
+                counts[dest] += 1; // optimistic; refreshed by Progress
+                let _ = self.cmd_txs[dest].send(Cmd::Add(vec![task]));
+            }
+
+            // Wake in time for the next arrival; otherwise the generous
+            // first-step compile timeout applies (see run_batch).
+            let timeout = if let Some(&(due, _)) = queue.front() {
+                let wait = due - t0.elapsed().as_secs_f64();
+                Duration::from_secs_f64(wait.clamp(0.001, 900.0))
+            } else {
+                Duration::from_secs(900)
+            };
+            let ev = match self.ev_rx.recv_timeout(timeout) {
+                Ok(e) => e,
+                Err(_) if !queue.is_empty() => continue, // arrival due
+                Err(_) => {
+                    return Err(anyhow!(
+                        "streaming generation stalled: {} / {expected} finished after {:?}",
+                        finished_counts.iter().sum::<usize>(),
+                        t0.elapsed()
+                    ))
+                }
+            };
+            let Some(ev) = self.relay_protocol_event(ev, &mut refusals) else {
+                continue;
+            };
+            match ev {
+                Event::Progress {
+                    instance,
+                    sample_count,
+                    throughput,
+                    finished,
+                } => {
+                    counts[instance] = sample_count;
+                    finished_counts[instance] = finished;
+                    step += 1;
+                    self.realloc.observe(sample_count.max(1), throughput);
+                    // Occupancy is time-varying here: while the fleet is
+                    // saturated, arrivals (not migrations) fill deficits.
+                    let saturated = counts.iter().all(|&c| c >= cap);
+                    self.realloc.note_backlog(saturated as usize);
+
+                    if self.cfg.realloc.enabled
+                        && !reported
+                        && self.realloc.should_decide(step, &counts)
+                    {
+                        let sw = Instant::now();
+                        self.realloc.refit_threshold();
+                        let plan = self.realloc.decide(step, &counts, &caps);
+                        srd_secs += sw.elapsed().as_secs_f64();
+                        for m in plan {
+                            migrations += 1;
+                            let _ = self.cmd_txs[m.from].send(Cmd::MigrateOut {
+                                to: m.to,
+                                count: m.count,
+                            });
+                        }
+                    }
+
+                    if !reported
+                        && queue.is_empty()
+                        && finished_counts.iter().sum::<usize>() >= expected
+                    {
+                        reported = true;
+                        for tx in &self.cmd_txs {
+                            let _ = tx.send(Cmd::Report);
+                        }
+                    }
+                }
+                other => {
+                    if Self::absorb_done(other, &mut all_finished, &mut done_reports, n_inst)? {
+                        break;
+                    }
+                }
+            }
+        }
+        self.realloc.note_backlog(0);
+
+        Ok(assemble_report(
+            all_finished,
+            done_reports,
+            t0.elapsed().as_secs_f64(),
+            migrations,
+            refusals,
+            self.realloc.decisions,
+            srd_secs,
+        ))
     }
 
     /// Stop all workers and join.
@@ -613,6 +889,7 @@ mod tests {
                     rounds: 1,
                     drafts_accepted: 0,
                     drafts_proposed: 0,
+                    latency: None,
                 })
                 .collect(),
             instances: Vec::new(),
@@ -622,6 +899,7 @@ mod tests {
             realloc_decisions: 0,
             srd_secs: 0.0,
             total_tokens: tokens,
+            latency: LatencySummary::default(),
         }
     }
 

@@ -26,7 +26,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::config::RunConfig;
 use crate::coordinator::backend::{DecodeBackend, SpecRound};
 use crate::coordinator::core::InstanceCore;
-use crate::coordinator::metrics::{InstanceMetrics, Stopwatch};
+use crate::coordinator::metrics::{InstanceMetrics, SampleLatency, Stopwatch};
 use crate::coordinator::migration::{
     pack_hierarchical, unpack_hierarchical, HierarchicalKv, SampleControl,
 };
@@ -42,43 +42,75 @@ pub use crate::coordinator::core::DecodeMode;
 /// A sample entering the instance.
 #[derive(Clone, Debug)]
 pub struct SampleTask {
+    /// Caller-assigned sample id (unique within a batch).
     pub id: u64,
+    /// Prompt token ids.
     pub prompt: Vec<i32>,
+    /// Generation budget.
     pub max_new_tokens: usize,
+    /// End-of-sequence token id.
     pub eos: i32,
+    /// Wall-clock instant the task was submitted to the service (set by
+    /// the streaming [`GenerationService::submit`] path; None for plain
+    /// batch tasks, which then carry no latency record).
+    ///
+    /// [`GenerationService::submit`]: crate::coordinator::driver::GenerationService::submit
+    pub submitted_at: Option<Instant>,
 }
 
 /// A completed sample leaving the instance.
 #[derive(Clone, Debug)]
 pub struct FinishedSample {
+    /// Caller-assigned sample id.
     pub id: u64,
+    /// Prompt token ids.
     pub prompt: Vec<i32>,
+    /// Generated response (truncated at EOS / the generation budget).
     pub response: Vec<i32>,
+    /// Decode rounds this sample participated in.
     pub rounds: usize,
+    /// Draft tokens the target accepted for this sample.
     pub drafts_accepted: usize,
+    /// Draft tokens proposed for this sample.
     pub drafts_proposed: usize,
+    /// Serving latencies (queueing delay, TTFT, TPOT) measured from
+    /// submission; None for tasks without a submission timestamp.
+    pub latency: Option<SampleLatency>,
 }
 
 /// Live decoding state of one sample.
 pub struct LiveSample {
+    /// The originating task (prompt, budget, submission stamp).
     pub task: SampleTask,
     /// Response tokens so far; the last one is the *pending* token whose
     /// KV is not yet committed.
     pub generated: Vec<i32>,
     /// Committed cache length (= prompt_len + generated.len() - 1).
     pub prefix_len: usize,
+    /// Target-model KV rows of this sample.
     pub target_cache: KvCache,
+    /// Draft-model KV rows of this sample.
     pub draft_cache: KvCache,
+    /// Decode rounds this sample participated in.
     pub rounds: usize,
+    /// Draft tokens the target accepted for this sample.
     pub drafts_accepted: usize,
+    /// Draft tokens proposed for this sample.
     pub drafts_proposed: usize,
+    /// Wall-clock instant the sample entered a decode slot (prefill).
+    pub admitted_at: Option<Instant>,
+    /// Wall-clock instant of the first generated token (prefill end —
+    /// prefill samples the first pending token from the target).
+    pub first_token_at: Option<Instant>,
 }
 
 impl LiveSample {
+    /// The pending (uncommitted) token that seeds the next round.
     pub fn pending(&self) -> i32 {
         *self.generated.last().expect("live sample has a pending token")
     }
 
+    /// Prompt + generated tokens (the §6.1 migration-score length).
     pub fn seq_len(&self) -> usize {
         self.task.prompt.len() + self.generated.len()
     }
@@ -98,6 +130,26 @@ impl LiveSample {
     }
 
     fn into_finished(self) -> FinishedSample {
+        // Serving latencies, when the task carried a submission stamp
+        // (streaming path). Finish time is "now": retirement happens at
+        // the step boundary that produced the final token.
+        let latency = match (self.task.submitted_at, self.admitted_at, self.first_token_at) {
+            (Some(sub), Some(adm), Some(first)) => {
+                let finish = Instant::now();
+                let n_out = self.generated.len();
+                let tpot = if n_out > 1 {
+                    finish.duration_since(first).as_secs_f64() / (n_out - 1) as f64
+                } else {
+                    0.0
+                };
+                Some(SampleLatency {
+                    queue_secs: adm.duration_since(sub).as_secs_f64(),
+                    ttft_secs: first.duration_since(sub).as_secs_f64(),
+                    tpot_secs: tpot,
+                })
+            }
+            _ => None,
+        };
         let mut response = self.generated;
         if let Some(p) = response.iter().position(|&t| t == self.task.eos) {
             response.truncate(p + 1);
@@ -110,6 +162,7 @@ impl LiveSample {
             rounds: self.rounds,
             drafts_accepted: self.drafts_accepted,
             drafts_proposed: self.drafts_proposed,
+            latency,
         }
     }
 }
@@ -130,9 +183,13 @@ pub struct PjrtDraftCtx {
 
 /// The PJRT execution backend: engine + weights + batched KV state.
 pub struct PjrtBackend {
+    /// Compiled-artifact execution engine (one PJRT client).
     pub engine: Engine,
+    /// Target-model weights.
     pub target: ModelStore,
+    /// Draft-model weights.
     pub draft: ModelStore,
+    /// Run configuration (spec/selector knobs).
     pub cfg: RunConfig,
     rng: Rng,
     batch_target: Option<BatchedCache>,
@@ -149,6 +206,7 @@ pub struct PjrtBackend {
 pub type GenerationInstance = InstanceCore<PjrtBackend>;
 
 impl InstanceCore<PjrtBackend> {
+    /// Build one PJRT-backed instance from loaded stores + manifest.
     pub fn new(
         id: usize,
         manifest: Rc<Manifest>,
@@ -323,6 +381,7 @@ impl DecodeBackend for PjrtBackend {
 
     /// Prefill a prompt through both models, chunked by tree buckets.
     fn prefill(&mut self, task: SampleTask, metrics: &mut InstanceMetrics) -> Result<LiveSample> {
+        let admitted = Instant::now();
         let mut sw = Stopwatch::start();
         let man = self.engine.manifest.clone();
         let td = &man.target;
@@ -354,6 +413,9 @@ impl DecodeBackend for PjrtBackend {
             sampler::sample(&p, &mut self.rng) as i32
         };
         metrics.prefill_secs += sw.lap();
+        // The first generated token exists at prefill end; admission was
+        // at prefill start. Both stamps anchor the queue-delay/TTFT
+        // metrics of the streaming path.
         Ok(LiveSample {
             prefix_len: task.prompt.len(),
             task,
@@ -363,6 +425,8 @@ impl DecodeBackend for PjrtBackend {
             rounds: 0,
             drafts_accepted: 0,
             drafts_proposed: 0,
+            admitted_at: Some(admitted),
+            first_token_at: Some(Instant::now()),
         })
     }
 
@@ -864,6 +928,8 @@ impl DecodeBackend for PjrtBackend {
                 rounds: ctl.rounds,
                 drafts_accepted: ctl.drafts_accepted,
                 drafts_proposed: ctl.drafts_proposed,
+                admitted_at: ctl.admitted_at,
+                first_token_at: ctl.first_token_at,
             });
         }
         Ok(out)

@@ -1,28 +1,47 @@
-//! Per-instance stage timing and counters.
+//! Per-instance stage timing, counters and serving-latency summaries.
 //!
-//! Feeds Fig 3 (stage breakdown), Fig 5/14 (throughput-over-time curves)
-//! and the §7.7 overhead analysis (WDS = `select_secs`, SRD lives in the
-//! driver, SM = `migration_secs`).
+//! Feeds Fig 3 (stage breakdown), Fig 5/14 (throughput-over-time curves),
+//! the §7.7 overhead analysis (WDS = `select_secs`, SRD lives in the
+//! driver, SM = `migration_secs`) and — for streaming workloads — the
+//! per-sample TTFT/TPOT/queueing-delay percentiles
+//! ([`SampleLatency`]/[`LatencySummary`]) reported by both decode planes.
 
 use std::time::Instant;
 
+use crate::utils::stats;
+
+/// Per-stage wall-time and counter ledger of one generation instance.
 #[derive(Clone, Debug, Default)]
 pub struct InstanceMetrics {
     // ---- stage wall-times (seconds) ----
+    /// Seconds spent prefilling admitted prompts.
     pub prefill_secs: f64,
+    /// Seconds spent expanding candidate trees (draft model).
     pub draft_secs: f64,
+    /// Seconds spent in drafting-strategy selection (§7.7 WDS).
     pub select_secs: f64,
+    /// Seconds spent verifying selected subtrees (target model).
     pub verify_secs: f64,
+    /// Seconds spent in the acceptance walk.
     pub accept_secs: f64,
+    /// Seconds spent committing accepted KV rows.
     pub commit_secs: f64,
+    /// Seconds spent packing/unpacking migration payloads (§7.7 SM).
     pub migration_secs: f64,
     // ---- counters ----
+    /// Decode rounds executed.
     pub rounds: u64,
+    /// Tokens generated (committed) on this instance.
     pub tokens_out: u64,
+    /// Draft tokens proposed to verification.
     pub drafts_proposed: u64,
+    /// Draft tokens the target accepted.
     pub drafts_accepted: u64,
+    /// Samples retired on this instance.
     pub samples_finished: u64,
+    /// Samples that arrived via the §6.2 migration protocol.
     pub samples_migrated_in: u64,
+    /// Samples that left via the §6.2 migration protocol.
     pub samples_migrated_out: u64,
     /// (wall_clock_secs, tokens_out cumulative, live samples) trace rows
     /// for throughput-over-time figures.
@@ -30,6 +49,7 @@ pub struct InstanceMetrics {
 }
 
 impl InstanceMetrics {
+    /// Total instance stage time (sum of the per-stage wall-times).
     pub fn total_secs(&self) -> f64 {
         self.prefill_secs
             + self.draft_secs
@@ -80,15 +100,85 @@ impl InstanceMetrics {
     }
 }
 
+/// One finished sample's serving latencies (streaming workloads).
+///
+/// All values are seconds on the plane's clock — virtual seconds in the
+/// simulation cluster, wall seconds on the PJRT driver — measured from
+/// the sample's *arrival* (submission), not from its admission.
+#[derive(Clone, Copy, Debug)]
+pub struct SampleLatency {
+    /// Arrival → admission into a decode slot (scheduling delay).
+    pub queue_secs: f64,
+    /// Arrival → first generated token (time-to-first-token).
+    pub ttft_secs: f64,
+    /// Mean seconds per output token after the first
+    /// (time-per-output-token); 0 for single-token responses.
+    pub tpot_secs: f64,
+}
+
+/// p50/p95/p99 percentile summary over a set of [`SampleLatency`]
+/// records. All fields are 0 when no sample carried latency data (e.g.
+/// batch-synchronous runs, where every sample arrives at t = 0 and
+/// queueing delay is not meaningful).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LatencySummary {
+    /// Number of samples summarized.
+    pub n: usize,
+    /// Median queueing delay (arrival → decode slot), seconds.
+    pub queue_p50: f64,
+    /// 95th-percentile queueing delay, seconds.
+    pub queue_p95: f64,
+    /// 99th-percentile queueing delay, seconds.
+    pub queue_p99: f64,
+    /// Median time-to-first-token, seconds.
+    pub ttft_p50: f64,
+    /// 95th-percentile time-to-first-token, seconds.
+    pub ttft_p95: f64,
+    /// 99th-percentile time-to-first-token, seconds.
+    pub ttft_p99: f64,
+    /// Median time-per-output-token, seconds.
+    pub tpot_p50: f64,
+    /// 95th-percentile time-per-output-token, seconds.
+    pub tpot_p95: f64,
+    /// 99th-percentile time-per-output-token, seconds.
+    pub tpot_p99: f64,
+}
+
+impl LatencySummary {
+    /// Summarize a batch of per-sample latencies (zeroed when empty).
+    pub fn from_samples(lat: &[SampleLatency]) -> Self {
+        if lat.is_empty() {
+            return LatencySummary::default();
+        }
+        let queue: Vec<f64> = lat.iter().map(|l| l.queue_secs).collect();
+        let ttft: Vec<f64> = lat.iter().map(|l| l.ttft_secs).collect();
+        let tpot: Vec<f64> = lat.iter().map(|l| l.tpot_secs).collect();
+        LatencySummary {
+            n: lat.len(),
+            queue_p50: stats::percentile(&queue, 50.0),
+            queue_p95: stats::percentile(&queue, 95.0),
+            queue_p99: stats::percentile(&queue, 99.0),
+            ttft_p50: stats::percentile(&ttft, 50.0),
+            ttft_p95: stats::percentile(&ttft, 95.0),
+            ttft_p99: stats::percentile(&ttft, 99.0),
+            tpot_p50: stats::percentile(&tpot, 50.0),
+            tpot_p95: stats::percentile(&tpot, 95.0),
+            tpot_p99: stats::percentile(&tpot, 99.0),
+        }
+    }
+}
+
 /// Scoped stage timer: `let _t = Stage::new(&mut m.draft_secs);` adds the
 /// elapsed time on drop. (Plain function style to avoid borrow juggling.)
 pub struct Stopwatch(Instant);
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Self {
         Stopwatch(Instant::now())
     }
 
+    /// Seconds since start (or the previous lap); resets the lap origin.
     pub fn lap(&mut self) -> f64 {
         let now = Instant::now();
         let dt = now.duration_since(self.0).as_secs_f64();
@@ -96,6 +186,7 @@ impl Stopwatch {
         dt
     }
 
+    /// Seconds since start (or the previous lap), without resetting.
     pub fn elapsed(&self) -> f64 {
         self.0.elapsed().as_secs_f64()
     }
@@ -121,6 +212,32 @@ mod tests {
             ..Default::default()
         };
         assert!((m.selector_overhead() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_summary_empty_is_zeroed() {
+        let s = LatencySummary::from_samples(&[]);
+        assert_eq!(s, LatencySummary::default());
+        assert_eq!(s.n, 0);
+        assert_eq!(s.ttft_p99, 0.0);
+    }
+
+    #[test]
+    fn latency_summary_percentiles_ordered() {
+        let lat: Vec<SampleLatency> = (0..100)
+            .map(|i| SampleLatency {
+                queue_secs: i as f64,
+                ttft_secs: i as f64 + 1.0,
+                tpot_secs: 0.01 * i as f64,
+            })
+            .collect();
+        let s = LatencySummary::from_samples(&lat);
+        assert_eq!(s.n, 100);
+        assert!(s.queue_p50 <= s.queue_p95 && s.queue_p95 <= s.queue_p99);
+        assert!(s.ttft_p50 <= s.ttft_p95 && s.ttft_p95 <= s.ttft_p99);
+        assert!((s.queue_p50 - 49.5).abs() < 1e-9);
+        // TTFT includes the queueing delay by construction here.
+        assert!(s.ttft_p50 > s.queue_p50);
     }
 
     #[test]

@@ -16,6 +16,8 @@
 //! transmission), and the alloc-request handshake (phase 2) lets the
 //! destination refuse when memory is short.
 
+use std::time::Instant;
+
 use crate::coordinator::instance::{LiveSample, SampleTask};
 use crate::spec::kvcache::KvCache;
 
@@ -25,9 +27,11 @@ pub const MODEL_ORDER: [&str; 2] = ["draft", "target"]; // SSM first: Stage-2 re
 /// Per-sample span descriptor inside a hierarchical buffer.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SampleSpan {
+    /// Sample id the span belongs to.
     pub id: u64,
     /// Cache positions [from, to) packed for this sample.
     pub from: usize,
+    /// Exclusive end of the packed cache range.
     pub to: usize,
 }
 
@@ -35,10 +39,13 @@ pub struct SampleSpan {
 /// ordered model → layer → sample (paper §6.2 phase 1).
 #[derive(Clone, Debug)]
 pub struct HierarchicalKv {
+    /// The packed cache elements (one allocation, one copy per stage).
     pub data: Vec<f32>,
+    /// Per-sample spans, in packing order.
     pub spans: Vec<SampleSpan>,
-    /// (layers, heads, d_head) per model, draft first.
+    /// (layers, heads, d_head) of the draft model.
     pub draft_dims: (usize, usize, usize),
+    /// (layers, heads, d_head) of the target model.
     pub target_dims: (usize, usize, usize),
     /// Byte offset where the target-model (LLM) section starts — the
     /// destination can resume drafting once bytes `< target_offset`
@@ -47,6 +54,7 @@ pub struct HierarchicalKv {
 }
 
 impl HierarchicalKv {
+    /// Transfer size of the packed buffer in bytes.
     pub fn size_bytes(&self) -> usize {
         self.data.len() * 4
     }
@@ -127,8 +135,11 @@ pub fn unpack_hierarchical(
 /// Allocation handshake request (§6.2 phase 2): sent before any KV bytes.
 #[derive(Clone, Debug)]
 pub struct AllocRequest {
+    /// Source instance id.
     pub from_instance: usize,
+    /// Ids of the live victims whose KV would transfer.
     pub sample_ids: Vec<u64>,
+    /// Total KV bytes the destination must be able to hold.
     pub bytes: usize,
 }
 
@@ -139,15 +150,27 @@ pub struct AllocRequest {
 /// Everything needed to resume a sample besides KV bytes.
 #[derive(Clone, Debug)]
 pub struct SampleControl {
+    /// The originating task (prompt, budget, submission stamp).
     pub task: SampleTask,
+    /// Response tokens so far (last one pending).
     pub generated: Vec<i32>,
+    /// Committed cache length at snapshot time.
     pub prefix_len: usize,
+    /// Decode rounds so far.
     pub rounds: usize,
+    /// Draft tokens accepted so far.
     pub drafts_accepted: usize,
+    /// Draft tokens proposed so far.
     pub drafts_proposed: usize,
+    /// Admission stamp — travels with the sample so streaming latency
+    /// metrics survive a migration.
+    pub admitted_at: Option<Instant>,
+    /// First-token stamp — travels with the sample for the same reason.
+    pub first_token_at: Option<Instant>,
 }
 
 impl SampleControl {
+    /// Snapshot a live sample's control state (Stage 2 payload).
     pub fn from_live(s: &LiveSample) -> Self {
         SampleControl {
             task: s.task.clone(),
@@ -156,6 +179,8 @@ impl SampleControl {
             rounds: s.rounds,
             drafts_accepted: s.drafts_accepted,
             drafts_proposed: s.drafts_proposed,
+            admitted_at: s.admitted_at,
+            first_token_at: s.first_token_at,
         }
     }
 }

@@ -31,7 +31,16 @@
 //! * [`driver`] — multi-instance generation: worker threads, initial
 //!   allocation, the monitor/reallocation loop pumping the shared
 //!   endpoint protocol.
-//! * [`metrics`] — per-stage timing and counters (§7.7 overhead analysis).
+//! * [`metrics`] — per-stage timing and counters (§7.7 overhead
+//!   analysis) plus the serving-latency summaries (TTFT/TPOT/queueing
+//!   delay) both planes report for streaming workloads.
+//!
+//! See `docs/ARCHITECTURE.md` for the full paper-section → module map
+//! and the event-flow diagrams.
+
+// Every public item in the coordinator must be documented; CI runs
+// `cargo doc --no-deps` with `RUSTDOCFLAGS="-D warnings"` to enforce it.
+#![warn(missing_docs)]
 
 pub mod backend;
 pub mod core;

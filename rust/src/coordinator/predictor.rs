@@ -35,6 +35,7 @@ pub struct AcceptancePredictor {
 }
 
 impl AcceptancePredictor {
+    /// A fresh predictor with `bins` log-scale draft-logit bins.
     pub fn new(bins: usize) -> Self {
         // Optimistic prior: F(dl) ≈ dl (paper Fig 7 shows a roughly linear
         // trend), so the system behaves sensibly before any profiling.
@@ -71,6 +72,7 @@ impl AcceptancePredictor {
         self.observations += 1;
     }
 
+    /// Number of (dl, accepted) observations recorded so far.
     pub fn observations(&self) -> u64 {
         self.observations
     }
@@ -169,12 +171,15 @@ pub struct TsdPredictor {
     nseq_bucket: usize,
     ndraft_bucket: usize,
     cache: HashMap<(usize, usize), f64>,
+    /// Bucket-cache hits (prediction served without evaluating the fit).
     pub cache_hits: u64,
+    /// Bucket-cache misses (fit evaluated at the bucket center).
     pub cache_misses: u64,
     fitted: bool,
 }
 
 impl TsdPredictor {
+    /// A fresh regression with the given prediction-cache bucket widths.
     pub fn new(nseq_bucket: usize, ndraft_bucket: usize) -> Self {
         TsdPredictor {
             // Harmless prior: constant + tiny linear terms, replaced by the
@@ -195,10 +200,12 @@ impl TsdPredictor {
         self.samples.push((n_seq as f64, n_draft as f64, secs));
     }
 
+    /// Number of profiled steps recorded so far.
     pub fn n_samples(&self) -> usize {
         self.samples.len()
     }
 
+    /// Has at least one successful refit replaced the prior?
     pub fn is_fitted(&self) -> bool {
         self.fitted
     }
@@ -247,6 +254,7 @@ impl TsdPredictor {
         self.eval(n_seq as f64, n_draft as f64)
     }
 
+    /// The fitted `[c0, c1, c2, c3]` regression coefficients.
     pub fn coefficients(&self) -> [f64; 4] {
         self.coef
     }

@@ -26,21 +26,36 @@
 //! observations ([`Reallocator::observe_on`]). The uniform constructor
 //! ([`Reallocator::new`]) is the single-tier special case and behaves
 //! exactly as before.
+//!
+//! **Streaming workloads.** Under continuous batching, occupancy is
+//! time-varying: new samples keep arriving while the long tail drains.
+//! While a cluster-level admission backlog exists
+//! ([`Reallocator::note_backlog`]), instances below their threshold will
+//! be topped up by *admission* — which costs nothing — so firing the
+//! migration protocol at them would double-fill destinations and waste
+//! link bandwidth. The policy therefore reports no inefficiency while a
+//! backlog is pending; batch-synchronous callers never report a backlog
+//! and behave exactly as before.
 
 use crate::utils::stats;
 
 /// One migration order: move `count` samples from `from` to `to`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MigrationOrder {
+    /// Source instance id (above its threshold).
     pub from: usize,
+    /// Destination instance id (below its threshold).
     pub to: usize,
+    /// Samples to move.
     pub count: usize,
 }
 
+/// The §6.1 sample-reallocation policy.
 #[derive(Clone, Debug)]
 pub struct Reallocator {
     /// Uniform knee (tier 0); mirrors `tier_thresholds[0]` after refits.
     pub threshold: usize,
+    /// Decision period in scheduler steps.
     pub cooldown: u64,
     last_decision: u64,
     /// Instance → cost-tier index. Empty = every instance is tier 0.
@@ -49,7 +64,12 @@ pub struct Reallocator {
     tier_thresholds: Vec<usize>,
     /// Per-tier (sample count, tokens/sec) observations for online refit.
     obs: Vec<Vec<(usize, f64)>>,
+    /// Cluster-level admission backlog (streaming runs); while non-zero,
+    /// deficits are filled by admission, not migration.
+    backlog: usize,
+    /// Reallocation decisions taken (for §7.7 SRD accounting).
     pub decisions: u64,
+    /// Migration orders that ended in refusal.
     pub refusals: u64,
 }
 
@@ -63,6 +83,7 @@ impl Reallocator {
             tier_of: Vec::new(),
             tier_thresholds: vec![threshold.max(1)],
             obs: vec![Vec::new()],
+            backlog: 0,
             decisions: 0,
             refusals: 0,
         }
@@ -86,6 +107,7 @@ impl Reallocator {
             tier_of,
             tier_thresholds,
             obs: vec![Vec::new(); n_tiers],
+            backlog: 0,
             decisions: 0,
             refusals: 0,
         }
@@ -124,6 +146,16 @@ impl Reallocator {
     /// A migration was refused (allocation failure on the destination).
     pub fn report_refusal(&mut self) {
         self.refusals += 1;
+    }
+
+    /// Report the cluster-level admission backlog (streaming workloads).
+    /// While non-zero, [`Reallocator::inefficiency`] reports `false`:
+    /// pending arrivals will fill under-threshold instances through
+    /// ordinary admission, so migrating into them would double-fill the
+    /// destinations. Batch-synchronous callers never call this (backlog
+    /// stays 0) and are unaffected.
+    pub fn note_backlog(&mut self, backlog: usize) {
+        self.backlog = backlog;
     }
 
     /// Re-estimate each tier's roofline knee: the smallest sample count
@@ -178,8 +210,12 @@ impl Reallocator {
     }
 
     /// Is there detectable inefficiency: some instance below its tier
-    /// threshold while another sits above its own?
+    /// threshold while another sits above its own? Always `false` while
+    /// an admission backlog is pending (see [`Reallocator::note_backlog`]).
     pub fn inefficiency(&self, counts: &[usize]) -> bool {
+        if self.backlog > 0 {
+            return false;
+        }
         let has_dest = counts
             .iter()
             .enumerate()
@@ -246,6 +282,7 @@ impl Reallocator {
         out
     }
 
+    /// Total (count, throughput) operating points recorded across tiers.
     pub fn observations(&self) -> usize {
         self.obs.iter().map(|o| o.len()).sum()
     }
@@ -388,6 +425,21 @@ mod tests {
                 assert!(m.count <= th - counts[m.to]);
             }
         });
+    }
+
+    #[test]
+    fn backlog_suppresses_migration_until_drained() {
+        // While an admission backlog exists, deficits are filled by
+        // arrivals — no migration inefficiency is reported.
+        let mut r = Reallocator::new(8, 1);
+        let counts = [1, 24];
+        assert!(r.should_decide(10, &counts));
+        r.note_backlog(5);
+        assert!(!r.inefficiency(&counts));
+        assert!(!r.should_decide(10, &counts));
+        // Backlog drained: the ordinary policy resumes.
+        r.note_backlog(0);
+        assert!(r.should_decide(10, &counts));
     }
 
     #[test]

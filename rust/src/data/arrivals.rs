@@ -1,0 +1,138 @@
+//! Streaming-workload arrival processes.
+//!
+//! The paper evaluates batch-synchronous generation: every round starts
+//! with all prompts present, so the §6 reallocator only fires on the
+//! long-tail drain. Real RLHF rollout systems face *streaming* prompt
+//! arrivals and long-tail completions concurrently. [`ArrivalProcess`]
+//! generates the arrival instants for such workloads and is shared by
+//! both decode planes: the virtual-clock cluster
+//! ([`crate::sim::cluster::SimCluster::streaming`]) schedules them as
+//! heap events, the threaded PJRT driver
+//! ([`crate::coordinator::driver::GenerationService::submit`]) replays
+//! them against the wall clock.
+//!
+//! Times are *offsets from run start* in seconds (virtual or wall,
+//! depending on the plane), always non-negative and non-decreasing.
+
+use crate::utils::rng::Rng;
+
+/// How streaming samples arrive over time.
+#[derive(Clone, Debug)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at `rate` samples/second (exponential
+    /// interarrival gaps). A non-finite or non-positive rate degenerates
+    /// to a burst: every sample arrives at t = 0, which reproduces the
+    /// batch-synchronous workload exactly.
+    Poisson {
+        /// Mean arrival rate in samples per second.
+        rate: f64,
+    },
+    /// Trace-driven replay: one recorded offset (seconds from run start)
+    /// per sample. Extra samples beyond the trace length reuse the final
+    /// trace time; an empty trace degenerates to a burst at t = 0.
+    Trace(Vec<f64>),
+}
+
+impl ArrivalProcess {
+    /// Poisson arrivals at `rate` samples/second. `f64::INFINITY` (or any
+    /// non-positive/non-finite rate) yields the batch burst at t = 0.
+    pub fn poisson(rate: f64) -> Self {
+        ArrivalProcess::Poisson { rate }
+    }
+
+    /// Replay recorded arrival offsets (seconds from run start). Negative
+    /// offsets are clamped to 0 and the trace is sorted, so any recorded
+    /// log can be fed in directly.
+    pub fn trace(mut offsets: Vec<f64>) -> Self {
+        for t in offsets.iter_mut() {
+            if !t.is_finite() || *t < 0.0 {
+                *t = 0.0;
+            }
+        }
+        offsets.sort_by(f64::total_cmp);
+        ArrivalProcess::Trace(offsets)
+    }
+
+    /// The batch-synchronous limit: every sample arrives at t = 0.
+    pub fn burst() -> Self {
+        ArrivalProcess::Poisson { rate: f64::INFINITY }
+    }
+
+    /// Generate `n` non-decreasing arrival offsets. `seed` drives the
+    /// Poisson draws (trace replay is deterministic by construction);
+    /// callers derive it from the run seed so arrival randomness never
+    /// perturbs the workload-generation RNG stream.
+    pub fn times(&self, n: usize, seed: u64) -> Vec<f64> {
+        match self {
+            ArrivalProcess::Poisson { rate } => {
+                if !rate.is_finite() || *rate <= 0.0 {
+                    return vec![0.0; n];
+                }
+                let mut rng = Rng::new(seed);
+                let mut t = 0.0f64;
+                (0..n)
+                    .map(|_| {
+                        t += rng.exponential(*rate);
+                        t
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Trace(offsets) => {
+                if offsets.is_empty() {
+                    return vec![0.0; n];
+                }
+                (0..n)
+                    .map(|k| offsets[k.min(offsets.len() - 1)])
+                    .collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infinite_rate_is_a_burst_at_zero() {
+        let ts = ArrivalProcess::burst().times(32, 7);
+        assert_eq!(ts, vec![0.0; 32]);
+        let ts2 = ArrivalProcess::poisson(f64::INFINITY).times(5, 0);
+        assert_eq!(ts2, vec![0.0; 5]);
+        // Degenerate rates also burst rather than divide by zero.
+        assert_eq!(ArrivalProcess::poisson(0.0).times(3, 0), vec![0.0; 3]);
+        assert_eq!(ArrivalProcess::poisson(-1.0).times(3, 0), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn poisson_times_are_sorted_and_near_rate() {
+        let rate = 50.0;
+        let ts = ArrivalProcess::poisson(rate).times(5000, 3);
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "must be sorted");
+        // Mean interarrival ≈ 1/rate (law of large numbers).
+        let mean_gap = ts.last().unwrap() / ts.len() as f64;
+        assert!(
+            (mean_gap - 1.0 / rate).abs() < 0.15 / rate,
+            "mean gap {mean_gap} vs {}",
+            1.0 / rate
+        );
+    }
+
+    #[test]
+    fn poisson_is_deterministic_per_seed() {
+        let a = ArrivalProcess::poisson(10.0).times(64, 9);
+        let b = ArrivalProcess::poisson(10.0).times(64, 9);
+        assert_eq!(a, b);
+        let c = ArrivalProcess::poisson(10.0).times(64, 10);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn trace_replays_clamped_sorted_and_extends() {
+        let p = ArrivalProcess::trace(vec![3.0, -1.0, 2.0, f64::NAN]);
+        let ts = p.times(6, 0);
+        assert_eq!(ts, vec![0.0, 0.0, 2.0, 3.0, 3.0, 3.0]);
+        // Empty trace degenerates to a burst.
+        assert_eq!(ArrivalProcess::trace(Vec::new()).times(2, 0), vec![0.0, 0.0]);
+    }
+}

@@ -9,12 +9,16 @@
 //!   (LMSYS stand-in) and a math word-problem corpus (GSM8K stand-in)
 //!   whose answers are *checkable* — the rule-based reward uses that;
 //! * [`lengths`] — long-tail response-length models calibrated to the
-//!   paper's quantiles (Fig 2: median 378, p95 1373).
+//!   paper's quantiles (Fig 2: median 378, p95 1373);
+//! * [`arrivals`] — streaming-workload arrival processes (Poisson +
+//!   trace replay) shared by both decode planes.
 
+pub mod arrivals;
 pub mod corpus;
 pub mod lengths;
 pub mod tokenizer;
 
+pub use arrivals::ArrivalProcess;
 pub use corpus::{ChatCorpus, Corpus, MathCorpus};
 pub use lengths::LengthModel;
 pub use tokenizer::Tokenizer;

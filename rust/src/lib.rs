@@ -27,9 +27,17 @@
 //! crate) and is self-contained afterwards.
 //!
 //! Entry points: [`rlhf`] (the full loop), [`coordinator`]
-//! (multi-instance generation), [`sim`] (paper-scale simulation), and the
-//! `rlhfspec` binary (`rlhfspec fig <id>` regenerates every paper
-//! table/figure).
+//! (multi-instance generation — batch-synchronous `run_batch` or the
+//! streaming `submit`/`run_streaming` continuous-batching path), [`sim`]
+//! (paper-scale simulation, including streaming arrivals with
+//! TTFT/TPOT/queueing-delay reporting), and the `rlhfspec` binary
+//! (`rlhfspec fig <id>` regenerates every paper table/figure; see the
+//! repo-root `README.md` for the id table).
+//!
+//! The architecture guide — paper-section → module map, the event-flow
+//! diagram of the discrete-event cluster, and the "where to add a new
+//! event kind / backend / figure" recipes — lives in
+//! `docs/ARCHITECTURE.md`.
 
 pub mod benchutil;
 pub mod config;

@@ -111,6 +111,7 @@ mod tests {
             rounds: 1,
             drafts_accepted: 0,
             drafts_proposed: 0,
+            latency: None,
         }
     }
 

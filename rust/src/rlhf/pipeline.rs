@@ -310,7 +310,7 @@ impl RlhfPipeline {
                 let id = self.next_task_id;
                 self.next_task_id += 1;
                 self.prompt_texts.insert(id, e);
-                SampleTask { id, prompt, max_new_tokens: max_new, eos: EOS }
+                SampleTask { id, prompt, max_new_tokens: max_new, eos: EOS, submitted_at: None }
             })
             .collect()
     }
@@ -351,7 +351,7 @@ impl RlhfPipeline {
                 let id = self.next_task_id;
                 self.next_task_id += 1;
                 self.prompt_texts.insert(id, e);
-                SampleTask { id, prompt, max_new_tokens: max_new, eos: EOS }
+                SampleTask { id, prompt, max_new_tokens: max_new, eos: EOS, submitted_at: None }
             })
             .collect();
         let report = svc.run_batch(tasks)?;

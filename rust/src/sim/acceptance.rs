@@ -15,6 +15,7 @@
 use crate::spec::tree::CandidateTree;
 use crate::utils::rng::Rng;
 
+/// Ground-truth acceptance process parameters (per dataset).
 #[derive(Clone, Copy, Debug)]
 pub struct AcceptanceModel {
     /// Exponent of the acceptance curve P = dl^gamma.
@@ -28,15 +29,18 @@ pub struct AcceptanceModel {
 }
 
 impl AcceptanceModel {
+    /// Open-chat workload (LMSYS-like): steeper curve, lower confidence.
     pub fn lmsys() -> Self {
         AcceptanceModel { gamma: 0.45, top1: 0.66, decay: 0.30, noise: 0.10 }
     }
 
+    /// Math workload (GSM8K-like).
     pub fn gsm8k() -> Self {
         // More predictable continuations: higher confidence, flatter curve.
         AcceptanceModel { gamma: 0.40, top1: 0.72, decay: 0.28, noise: 0.08 }
     }
 
+    /// Look up a dataset's acceptance model by id.
     pub fn by_name(name: &str) -> Self {
         match name {
             "lmsys" | "lmsys-like" | "chat" => Self::lmsys(),

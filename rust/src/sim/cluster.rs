@@ -2,10 +2,14 @@
 //! the real reallocator + the real §6.2 migration protocol.
 //!
 //! **Event-driven core.** The cluster keeps a single time-ordered
-//! [`EventQueue`] (a binary heap with deterministic `(time, kind, seq)`
-//! tie-breaking over NaN-safe [`f64::total_cmp`]) holding three event
+//! event queue (a binary heap with deterministic `(time, kind, seq)`
+//! tie-breaking over NaN-safe [`f64::total_cmp`]) holding four event
 //! kinds:
 //!
+//! * **task arrival** — a streaming sample reaches the cluster
+//!   ([`SimCluster::streaming`]) and goes through admission:
+//!   least-loaded instance with memory-budget headroom, else a bounded
+//!   FIFO backlog, else refusal;
 //! * **step-ready** — instance `i` can execute its next decode round at
 //!   its reported [`DecodeBackend::next_ready`] instant;
 //! * **Stage-2 arrival** — a migration packet lands on the virtual link
@@ -19,9 +23,9 @@
 //! `O(n)` laggard scan plus `O(in-flight)` arrival walk, which is what
 //! lets 512-instance / 8k-sample fleets run in seconds (see
 //! `benches/bench_core.rs`). The pre-heap scheduler is preserved as
-//! [`SimCluster::run_reference_laggard`] so golden tests can assert that
-//! both produce bit-identical `total_tokens`/`makespan` on homogeneous
-//! fleets under fixed seeds.
+//! `SimCluster::run_reference_laggard` (doc-hidden, tests only) so
+//! golden tests can assert that both produce bit-identical
+//! `total_tokens`/`makespan` on homogeneous fleets under fixed seeds.
 //!
 //! **Heterogeneous fleets.** [`ClusterConfig::fleet`] assigns each
 //! instance a named [`CostModel`] tier (`l40s`/`a100`/`h100` presets)
@@ -45,16 +49,25 @@
 //! * `Naive` (ablation) — stop-and-copy: downtime is the full KV
 //!   transfer.
 
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
+
+use anyhow::{bail, Result};
 
 use crate::coordinator::backend::DecodeBackend;
 use crate::coordinator::core::{AckOutcome, MigrateStart, Stage2Msg};
+use crate::coordinator::metrics::LatencySummary;
 use crate::coordinator::reallocator::Reallocator;
+use crate::data::arrivals::ArrivalProcess;
 use crate::data::lengths::LengthModel;
 use crate::sim::acceptance::AcceptanceModel;
 use crate::sim::cost_model::CostModel;
 use crate::sim::engine::{SimBackend, SimInstance, SimMode, SimParams, SimSample};
 use crate::utils::rng::Rng;
+
+/// Salt for the arrival-time RNG stream: keeps Poisson draws independent
+/// of the workload-generation stream, so a streaming run draws the same
+/// sample lengths as the batch-synchronous constructor.
+const ARRIVAL_SEED_SALT: u64 = 0xA441_5EED;
 
 /// How migration downtime is modeled (§6.2 vs the naive ablation).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -91,13 +104,17 @@ impl FleetTier {
     }
 }
 
+/// Cluster-level simulation configuration (fleet, workload, policies).
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
     /// Fleet size for homogeneous clusters; ignored (recomputed as the
     /// tier-count sum) when `fleet` is non-empty.
     pub instances: usize,
+    /// Decode policy of every instance (AR / static spec / adaptive).
     pub mode: SimMode,
+    /// Run the §6.1 reallocation policy.
     pub realloc_enabled: bool,
+    /// Migration downtime model (§6.2 two-stage vs naive stop-and-copy).
     pub migration_style: MigrationStyle,
     /// Reallocation decision period, in cluster scheduling steps.
     pub cooldown: u64,
@@ -111,11 +128,26 @@ pub struct ClusterConfig {
     /// `cooldown` scheduler steps — the meaningful cadence on mixed
     /// fleets. `None` keeps the step-cadence (and scan parity).
     pub realloc_period_secs: Option<f64>,
+    /// Bound on the cluster-level admission backlog for streaming runs
+    /// ([`SimCluster::streaming`]): arrivals that find every instance at
+    /// its 4×-capacity memory budget queue here; once the bound is hit
+    /// they are *refused* (counted in
+    /// [`ClusterResult::admission_refusals`]). Batch-synchronous runs
+    /// never touch the backlog. Must be ≥ 1 when samples arrive over
+    /// time — [`SimCluster::streaming`] rejects a bound of 0.
+    pub pending_bound: usize,
+    /// Workload dataset id (`lmsys`/`gsm8k`): picks length + acceptance
+    /// models.
     pub dataset: String,
+    /// Number of workload samples (arrivals, for streaming runs).
     pub n_samples: usize,
+    /// Prompt length of every sample.
     pub prompt_len: usize,
+    /// Per-sample generation cap (target lengths are clamped to this).
     pub max_tokens: usize,
+    /// Master seed: workload, per-instance RNG streams, arrival times.
     pub seed: u64,
+    /// Per-instance simulation knobs.
     pub params: SimParams,
 }
 
@@ -130,6 +162,7 @@ impl Default for ClusterConfig {
             threshold: 10,
             fleet: Vec::new(),
             realloc_period_secs: None,
+            pending_bound: 1024,
             dataset: "lmsys".into(),
             n_samples: 256,
             prompt_len: 128,
@@ -143,7 +176,9 @@ impl Default for ClusterConfig {
 /// Per-tier migration traffic summary (heterogeneous-fleet reporting).
 #[derive(Clone, Debug, Default)]
 pub struct TierStats {
+    /// Tier display name (preset id for [`FleetTier::preset`] tiers).
     pub tier: String,
+    /// Instances in this tier.
     pub instances: usize,
     /// Samples that left this tier's instances via migration.
     pub migrated_out: u64,
@@ -151,15 +186,32 @@ pub struct TierStats {
     pub migrated_in: u64,
     /// Migration orders this tier's sources refused mid-handshake.
     pub refusals: u64,
+    /// Streaming arrivals refused at admission while this tier's
+    /// least-loaded instance was the closest (still full) candidate.
+    pub admission_refusals: u64,
 }
 
+/// Whole-run summary of one cluster simulation.
 #[derive(Clone, Debug)]
 pub struct ClusterResult {
     /// Virtual seconds until the last sample finished.
     pub makespan: f64,
+    /// Tokens generated across the fleet.
     pub total_tokens: u64,
+    /// Samples that *completed* (equals the configured workload for
+    /// batch-synchronous runs; excludes admission refusals in streaming
+    /// runs).
     pub n_samples: usize,
+    /// Samples offered to the cluster (configured workload size for
+    /// batch runs, arrival count for streaming runs).
+    pub arrivals: u64,
+    /// Streaming arrivals refused at admission (fleet at its memory
+    /// budget and the pending queue at [`ClusterConfig::pending_bound`]).
+    /// Conservation invariant: `arrivals == n_samples + admission_refusals`.
+    pub admission_refusals: u64,
+    /// Samples moved through the §6.2 protocol.
     pub migrations: u64,
+    /// Reallocation decisions taken.
     pub realloc_decisions: u64,
     /// Migration orders that ended in refusal (destination alloc failure
     /// or an already-pending outbound handshake on the source).
@@ -176,7 +228,12 @@ pub struct ClusterResult {
     /// Fig-7 curve from instance 0's (real) acceptance predictor (empty
     /// for zero-instance configs).
     pub fig7_curve: Vec<(f64, f64, u64)>,
+    /// Pearson correlation of instance 0's learned acceptance curve.
     pub accept_corr: f64,
+    /// Per-sample serving-latency percentiles (queueing delay, TTFT,
+    /// TPOT). Meaningful for streaming runs; batch-synchronous runs
+    /// measure every sample from t = 0.
+    pub latency: LatencySummary,
 }
 
 impl ClusterResult {
@@ -205,6 +262,8 @@ impl ClusterResult {
 
 /// What happens at a scheduled virtual instant.
 enum EventKind {
+    /// A streaming sample arrives at the cluster (continuous batching).
+    TaskArrival(SimSample),
     /// A Stage-2 migration packet completes its virtual transfer.
     Arrival(Stage2Msg<SimBackend>),
     /// Instance `i` is ready to execute its next decode round.
@@ -214,14 +273,18 @@ enum EventKind {
 }
 
 impl EventKind {
-    /// Tie-break rank at equal timestamps: arrivals deliver first (the
-    /// laggard scan delivered at the top of every scheduling iteration,
-    /// before picking an instance to step), then steps, then ticks.
+    /// Tie-break rank at equal timestamps: task arrivals enter the
+    /// admission path first (so a burst at t = 0 reproduces the
+    /// batch-synchronous initial allocation before any step runs), then
+    /// Stage-2 deliveries (the laggard scan delivered at the top of every
+    /// scheduling iteration, before picking an instance to step), then
+    /// steps, then ticks.
     fn rank(&self) -> u8 {
         match self {
-            EventKind::Arrival(_) => 0,
-            EventKind::StepReady(_) => 1,
-            EventKind::ReallocTick => 2,
+            EventKind::TaskArrival(_) => 0,
+            EventKind::Arrival(_) => 1,
+            EventKind::StepReady(_) => 2,
+            EventKind::ReallocTick => 3,
         }
     }
 }
@@ -291,8 +354,11 @@ impl EventQueue {
 // Cluster
 // ---------------------------------------------------------------------------
 
+/// The discrete-event virtual cluster (see the module docs).
 pub struct SimCluster {
+    /// Effective configuration (fleet sizes resolved).
     pub cfg: ClusterConfig,
+    /// The simulated instances, each a full [`SimInstance`] endpoint.
     pub instances: Vec<SimInstance>,
     realloc: Reallocator,
     /// Instance → tier index (all zeros for homogeneous fleets).
@@ -301,12 +367,26 @@ pub struct SimCluster {
     tier_out: Vec<u64>,
     tier_in: Vec<u64>,
     tier_refusals: Vec<u64>,
+    tier_adm_refusals: Vec<u64>,
+    /// Streaming workload: (arrival time, sample) pairs injected as
+    /// `TaskArrival` events when `run` starts. Empty for batch runs.
+    arrival_schedule: Vec<(f64, SimSample)>,
+    /// Cluster-level admission backlog (streaming runs): arrivals that
+    /// found every instance at its memory budget, FIFO.
+    pending: VecDeque<SimSample>,
+    /// Samples offered so far (configured workload or popped arrivals).
+    arrivals: u64,
+    /// Arrivals refused at admission (pending queue at its bound).
+    admission_refusals: u64,
     migrations: u64,
     downtime: f64,
     steps: u64,
 }
 
 impl SimCluster {
+    /// Batch-synchronous workload (§4): `cfg.n_samples` samples with
+    /// dataset-model target lengths, sequentially (round-robin) allocated
+    /// to the fleet before the run starts.
     pub fn new(mut cfg: ClusterConfig) -> Self {
         let tiers: Vec<FleetTier> = if cfg.fleet.is_empty() {
             vec![FleetTier {
@@ -379,6 +459,7 @@ impl SimCluster {
         };
 
         let n_tiers = tiers.len();
+        let arrivals = cfg.n_samples as u64;
         SimCluster {
             realloc,
             cfg,
@@ -388,6 +469,11 @@ impl SimCluster {
             tier_out: vec![0; n_tiers],
             tier_in: vec![0; n_tiers],
             tier_refusals: vec![0; n_tiers],
+            tier_adm_refusals: vec![0; n_tiers],
+            arrival_schedule: Vec::new(),
+            pending: VecDeque::new(),
+            arrivals,
+            admission_refusals: 0,
             migrations: 0,
             downtime: 0.0,
             steps: 0,
@@ -404,9 +490,66 @@ impl SimCluster {
                 c.instances[i].add(SimSample::new(id, c.cfg.prompt_len, l));
                 id += 1;
                 c.cfg.n_samples += 1;
+                c.arrivals += 1;
             }
         }
         c
+    }
+
+    /// Streaming (continuous-batching) workload: `cfg.n_samples` samples
+    /// with dataset-model target lengths arrive over virtual time
+    /// according to `process`, injected as `TaskArrival` events into the
+    /// same heap that schedules decode rounds and Stage-2 packets.
+    ///
+    /// Admission slots each arrival into the least-loaded instance with
+    /// headroom under the §6.2 memory budget (4× decode slots — the same
+    /// bound `handle_alloc_req` enforces), falling back to a FIFO backlog
+    /// capped at [`ClusterConfig::pending_bound`]; overflow beyond the
+    /// bound is *refused* and accounted in
+    /// [`ClusterResult::admission_refusals`] (and per tier in
+    /// [`TierStats::admission_refusals`]).
+    ///
+    /// Sample lengths are drawn from the same RNG stream as the
+    /// batch-synchronous constructor, and a t = 0 burst replays the
+    /// round-robin initial allocation of §4 exactly — so at arrival rate
+    /// → ∞ this run is bit-identical to [`SimCluster::new`] + `run()`
+    /// (pinned by `tests/streaming_cluster.rs`).
+    ///
+    /// Rejects a [`ClusterConfig::pending_bound`] of 0 while samples are
+    /// still arriving: with no backlog and no refusal headroom the
+    /// admission loop could never make progress on a saturated fleet.
+    pub fn streaming(cfg: ClusterConfig, process: &ArrivalProcess) -> Result<SimCluster> {
+        let n = cfg.n_samples;
+        if n > 0 && cfg.pending_bound == 0 {
+            bail!(
+                "ClusterConfig::pending_bound is 0 but {n} samples are scheduled to \
+                 arrive; a saturated fleet could then neither queue nor refuse them. \
+                 Set pending_bound >= 1 (arrivals beyond the bound are refused and \
+                 counted in admission_refusals)."
+            );
+        }
+        let lens = match cfg.dataset.as_str() {
+            "gsm8k" | "gsm8k-like" | "math" => LengthModel::gsm8k(),
+            _ => LengthModel::lmsys(),
+        };
+        let mut batch_cfg = cfg;
+        batch_cfg.n_samples = 0; // suppress the batch-synchronous workload
+        let mut c = SimCluster::new(batch_cfg);
+        c.cfg.n_samples = n;
+        // Same length-RNG stream as the batch constructor; arrival times
+        // come from a salted stream so they never perturb the workload.
+        let mut rng = Rng::new(c.cfg.seed);
+        let times = process.times(n, c.cfg.seed ^ ARRIVAL_SEED_SALT);
+        let mut schedule = Vec::with_capacity(n);
+        for (k, t) in times.into_iter().enumerate() {
+            let target = lens.sample(&mut rng).min(c.cfg.max_tokens);
+            let mut s = SimSample::new(k as u64, c.cfg.prompt_len, target);
+            s.arrival_time = t;
+            schedule.push((t, s));
+        }
+        c.arrival_schedule = schedule;
+        c.arrivals = 0; // counted as arrival events pop
+        Ok(c)
     }
 
     /// Run until every sample finishes; returns the result summary.
@@ -416,7 +559,9 @@ impl SimCluster {
     /// [`DecodeBackend::next_ready`] instant whenever it holds work, so
     /// idle instances cost nothing; Stage-2 packets pop at their
     /// transfer-completion time (an idle destination's clock fast-forwards
-    /// to the arrival, exactly as under the laggard scan).
+    /// to the arrival, exactly as under the laggard scan); streaming
+    /// samples ([`SimCluster::streaming`]) pop as `TaskArrival` events at
+    /// their arrival instants and go through admission.
     pub fn run(&mut self) -> ClusterResult {
         let n = self.instances.len();
         let mut q = EventQueue::new();
@@ -430,6 +575,11 @@ impl SimCluster {
                 scheduled[i] = true;
             }
         }
+        // Streaming workload: one TaskArrival event per scheduled sample
+        // (times are non-decreasing, so seq order preserves FIFO at ties).
+        for (t, s) in self.arrival_schedule.drain(..) {
+            q.push(t, EventKind::TaskArrival(s));
+        }
         // A non-positive (or NaN) period would re-arm the tick at its own
         // timestamp and spin forever; treat it as "no timed cadence".
         let tick_period = self
@@ -441,7 +591,19 @@ impl SimCluster {
         }
 
         while let Some(ev) = q.pop() {
+            // Admission headroom (sample_count < 4×capacity) only grows
+            // when a step retires samples or a reallocation round moves
+            // them off a source — arrivals and Stage-2 deliveries only
+            // add. Gate the backlog re-drain accordingly so a saturated
+            // burst doesn't pay an O(fleet) scan per heap event.
+            let may_free_headroom =
+                matches!(ev.kind, EventKind::StepReady(_) | EventKind::ReallocTick);
             match ev.kind {
+                EventKind::TaskArrival(mut s) => {
+                    self.arrivals += 1;
+                    s.arrival_time = ev.time;
+                    self.try_admit(s, ev.time, &mut q, &mut scheduled);
+                }
                 EventKind::StepReady(i) => {
                     scheduled[i] = false;
                     if self.instances[i].is_idle() {
@@ -490,15 +652,120 @@ impl SimCluster {
                     }
                 }
             }
+            // Streaming backlog: re-attempt admission once headroom can
+            // have appeared. No-op for batch-synchronous runs.
+            if may_free_headroom && !self.pending.is_empty() {
+                self.drain_pending(ev.time, &mut q, &mut scheduled);
+            }
+        }
+        // A backlog can only survive the heap draining on a fleet that
+        // can never admit (zero instances / zero capacity): shed it as
+        // refusals so `arrivals == completed + admission_refusals` holds.
+        while self.pending.pop_front().is_some() {
+            self.refuse_admission();
         }
         self.summarize()
+    }
+
+    /// Admit an arriving sample: least-loaded instance with headroom
+    /// under the 4×-capacity memory budget (lowest index on ties — a
+    /// t = 0 burst therefore replays §4's round-robin initial
+    /// allocation), else the FIFO backlog, else refusal. New arrivals
+    /// never overtake a non-empty backlog.
+    fn try_admit(
+        &mut self,
+        s: SimSample,
+        now: f64,
+        q: &mut EventQueue,
+        scheduled: &mut [bool],
+    ) {
+        if self.pending.is_empty() {
+            if let Some(i) = self.admission_dest() {
+                self.admit_to(i, s, now, q, scheduled);
+                return;
+            }
+        }
+        if self.pending.len() < self.cfg.pending_bound {
+            self.pending.push_back(s);
+        } else {
+            self.refuse_admission();
+        }
+    }
+
+    /// The least-loaded instance still under its admission budget
+    /// (4× decode slots — the same bound `handle_alloc_req` enforces for
+    /// migrations), lowest index on ties; None when the fleet is full.
+    fn admission_dest(&self) -> Option<usize> {
+        let mut best: Option<(usize, usize)> = None; // (count, index)
+        for (i, inst) in self.instances.iter().enumerate() {
+            let c = inst.sample_count();
+            if c >= inst.capacity() * 4 {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((bc, _)) => c < bc,
+            };
+            if better {
+                best = Some((c, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Hand a sample to instance `i`, fast-forwarding an idle instance's
+    /// clock to the admission instant (work cannot start in the past).
+    fn admit_to(
+        &mut self,
+        i: usize,
+        s: SimSample,
+        now: f64,
+        q: &mut EventQueue,
+        scheduled: &mut [bool],
+    ) {
+        let inst = &mut self.instances[i];
+        if inst.is_idle() && inst.backend.clock < now {
+            inst.backend.clock = now;
+        }
+        inst.add(s);
+        if !scheduled[i] {
+            q.push(self.instances[i].backend.next_ready(), EventKind::StepReady(i));
+            scheduled[i] = true;
+        }
+    }
+
+    /// Move backlog samples into freed admission headroom, FIFO.
+    fn drain_pending(&mut self, now: f64, q: &mut EventQueue, scheduled: &mut [bool]) {
+        while !self.pending.is_empty() {
+            let Some(i) = self.admission_dest() else { break };
+            let s = self.pending.pop_front().expect("non-empty backlog");
+            self.admit_to(i, s, now, q, scheduled);
+        }
+    }
+
+    /// Account one admission refusal, attributed to the least-loaded
+    /// tier (the closest candidate that still had no headroom).
+    fn refuse_admission(&mut self) {
+        self.admission_refusals += 1;
+        let tier = self
+            .instances
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, x)| x.sample_count())
+            .map(|(i, _)| self.tier_of[i])
+            .unwrap_or(0);
+        if let Some(t) = self.tier_adm_refusals.get_mut(tier) {
+            *t += 1;
+        }
     }
 
     /// The pre-event-heap scheduler (O(n) laggard scan + linear in-flight
     /// walk), preserved verbatim as the golden reference: on homogeneous
     /// fleets with step-cadence reallocation it must produce bit-identical
     /// `total_tokens`/`makespan` to [`SimCluster::run`] under a fixed
-    /// seed. Quadratic in fleet size — tests only.
+    /// seed. Quadratic in fleet size — tests only. Predates streaming:
+    /// it ignores any [`SimCluster::streaming`] arrival schedule (the
+    /// streaming-vs-batch parity anchor is `run()` itself).
     #[doc(hidden)]
     pub fn run_reference_laggard(&mut self) -> ClusterResult {
         let mut in_flight: Vec<(f64, Stage2Msg<SimBackend>)> = Vec::new();
@@ -558,6 +825,11 @@ impl SimCluster {
     /// pump every planned order through the §6.2 endpoint protocol.
     /// Returns the Stage-2 packets with their virtual arrival times.
     fn realloc_decide(&mut self) -> Vec<(f64, Stage2Msg<SimBackend>)> {
+        // Streaming: while an admission backlog exists, under-threshold
+        // instances will be topped up by admission (free), not migration
+        // — the policy reports no inefficiency until it drains. Batch
+        // runs never hold a backlog, so this is a no-op for them.
+        self.realloc.note_backlog(self.pending.len());
         let counts: Vec<usize> = self.instances.iter().map(|x| x.sample_count()).collect();
         if !self.realloc.inefficiency(&counts) {
             return Vec::new();
@@ -666,6 +938,7 @@ impl SimCluster {
 
     fn summarize(&self) -> ClusterResult {
         let total_tokens: u64 = self.instances.iter().map(|x| x.metrics.tokens_out).sum();
+        let completed: usize = self.instances.iter().map(|x| x.finished.len()).sum();
         let makespan = self
             .instances
             .iter()
@@ -676,6 +949,12 @@ impl SimCluster {
             .iter()
             .flat_map(|x| x.finished.iter())
             .fold((0, 0), |a, s| (a.0 + s.accepted as u64, a.1 + s.rounds as u64));
+        let latencies: Vec<_> = self
+            .instances
+            .iter()
+            .flat_map(|x| x.finished.iter())
+            .filter_map(|s| s.latency())
+            .collect();
         let tier_stats = self
             .tier_names
             .iter()
@@ -686,12 +965,15 @@ impl SimCluster {
                 migrated_out: self.tier_out[t],
                 migrated_in: self.tier_in[t],
                 refusals: self.tier_refusals[t],
+                admission_refusals: self.tier_adm_refusals[t],
             })
             .collect();
         ClusterResult {
             makespan,
             total_tokens,
-            n_samples: self.cfg.n_samples,
+            n_samples: completed,
+            arrivals: self.arrivals,
+            admission_refusals: self.admission_refusals,
             migrations: self.migrations,
             realloc_decisions: self.realloc.decisions,
             refusals: self.realloc.refusals,
@@ -709,6 +991,7 @@ impl SimCluster {
                 .first()
                 .map(|x| x.accept_pred.correlation())
                 .unwrap_or(0.0),
+            latency: LatencySummary::from_samples(&latencies),
         }
     }
 }
@@ -919,6 +1202,68 @@ mod tests {
     }
 
     #[test]
+    fn streaming_poisson_run_completes_with_latency() {
+        let mut cfg = base_cfg(64, 4);
+        cfg.seed = 5;
+        let mut c =
+            SimCluster::streaming(cfg, &ArrivalProcess::poisson(8.0)).expect("valid config");
+        let r = c.run();
+        assert_eq!(r.arrivals, 64);
+        assert_eq!(r.admission_refusals, 0, "4×64-slot fleet cannot overflow");
+        assert_eq!(r.n_samples, 64);
+        let done: usize = c.instances.iter().map(|x| x.finished.len()).sum();
+        assert_eq!(done, 64);
+        // Every finished sample carries latency data; TTFT includes the
+        // queueing delay, so the percentiles are ordered.
+        assert_eq!(r.latency.n, 64);
+        assert!(r.latency.ttft_p50 > 0.0);
+        assert!(r.latency.ttft_p50 >= r.latency.queue_p50);
+        assert!(r.latency.ttft_p99 >= r.latency.ttft_p50);
+        assert!(r.latency.tpot_p50 > 0.0);
+        // Samples arrived over ~8s of virtual time: the run cannot end
+        // before the last arrival.
+        assert!(r.makespan > 0.0);
+    }
+
+    #[test]
+    fn streaming_rejects_zero_pending_bound() {
+        let mut cfg = base_cfg(16, 2);
+        cfg.pending_bound = 0;
+        let err = SimCluster::streaming(cfg, &ArrivalProcess::burst());
+        assert!(err.is_err(), "bound 0 with arrivals must be rejected");
+        let msg = format!("{:#}", err.err().unwrap());
+        assert!(msg.contains("pending_bound"), "{msg}");
+        // No samples arriving: bound 0 is harmless.
+        let mut cfg2 = base_cfg(0, 2);
+        cfg2.pending_bound = 0;
+        assert!(SimCluster::streaming(cfg2, &ArrivalProcess::burst()).is_ok());
+    }
+
+    #[test]
+    fn streaming_overflow_is_refused_and_conserved() {
+        // 2 instances × 2 decode slots → admission budget 8 per instance;
+        // a burst of 40 with a backlog bound of 4 must refuse 40-16-4=20.
+        let mut cfg = base_cfg(40, 2);
+        cfg.params.max_batch = 2;
+        cfg.pending_bound = 4;
+        cfg.max_tokens = 64;
+        let mut c =
+            SimCluster::streaming(cfg, &ArrivalProcess::burst()).expect("valid config");
+        let r = c.run();
+        assert_eq!(r.arrivals, 40);
+        assert_eq!(r.admission_refusals, 20);
+        assert_eq!(r.n_samples, 20, "admitted + backlog all complete");
+        assert_eq!(
+            r.arrivals,
+            r.n_samples as u64 + r.admission_refusals,
+            "conservation: arrivals = completions + refusals"
+        );
+        // Tier ledger agrees with the cluster total.
+        let tier_total: u64 = r.tier_stats.iter().map(|t| t.admission_refusals).sum();
+        assert_eq!(tier_total, r.admission_refusals);
+    }
+
+    #[test]
     fn event_queue_orders_by_time_then_kind_then_seq() {
         let mut q = EventQueue::new();
         q.push(2.0, EventKind::StepReady(0));
@@ -964,6 +1309,8 @@ mod tests {
             makespan: 0.0,
             total_tokens: 0,
             n_samples: 0,
+            arrivals: 0,
+            admission_refusals: 0,
             migrations: 0,
             realloc_decisions: 0,
             refusals: 0,
@@ -973,6 +1320,7 @@ mod tests {
             tier_stats: Vec::new(),
             fig7_curve: Vec::new(),
             accept_corr: 0.0,
+            latency: LatencySummary::default(),
         };
         assert_eq!(r.tokens_per_sec(), 0.0);
         assert_eq!(r.samples_per_sec(), 0.0);

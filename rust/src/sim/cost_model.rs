@@ -26,19 +26,23 @@
 /// Cost model parameters (seconds).
 #[derive(Clone, Debug)]
 pub struct CostModel {
-    /// Draft: fixed + per-level cost.
+    /// Draft: fixed launch cost per round.
     pub draft_base: f64,
+    /// Draft: additional cost per tree level.
     pub draft_per_level: f64,
-    /// Verify: launch floor, per-cache-token, per-draft-token.
+    /// Verify: fixed launch floor per round.
     pub verify_base: f64,
+    /// Verify: KV-load cost per cached sequence token.
     pub verify_per_seq_token: f64,
+    /// Verify: FFN cost per selected draft token.
     pub verify_per_draft_token: f64,
     /// Batched tree tokens absorbed for free below compute saturation.
     pub free_draft_tokens: f64,
     /// Autoregressive step: same verify structure with N_draft = B.
     pub ar_base: f64,
-    /// Migration link (PCIe-class).
+    /// Migration link bandwidth, bytes/second (PCIe-class).
     pub link_bandwidth: f64,
+    /// Migration link latency per message, seconds.
     pub link_latency: f64,
     /// Bytes per KV token row (both models, K+V, fp16) for migration
     /// sizing: Llama-8B 32 layers × 8 kv-heads × 128 dim × 2 (K,V) × 2 B

@@ -31,6 +31,7 @@ pub enum SystemKind {
 }
 
 impl SystemKind {
+    /// Display name used in figure rows.
     pub fn label(&self) -> &'static str {
         match self {
             SystemKind::Verl => "Verl",
@@ -40,6 +41,7 @@ impl SystemKind {
         }
     }
 
+    /// Every modeled system, in the paper's presentation order.
     pub fn all() -> [SystemKind; 4] {
         [
             SystemKind::OpenRlhf,
@@ -84,7 +86,11 @@ impl SystemKind {
 /// Stage-cost constants (seconds per token over the whole fleet).
 #[derive(Clone, Debug)]
 pub struct StageModel {
+    /// Inference-stage seconds per generated token (reward + critic +
+    /// reference forwards).
     pub inference_per_token: f64,
+    /// Training-stage seconds per generated token (actor + critic
+    /// forward+backward, one PPO epoch).
     pub training_per_token: f64,
 }
 
@@ -102,18 +108,25 @@ impl Default for StageModel {
 /// One end-to-end iteration summary.
 #[derive(Clone, Debug)]
 pub struct E2eResult {
+    /// Which system was modeled.
     pub system: SystemKind,
+    /// The generation-stage cluster result.
     pub gen: ClusterResult,
+    /// Generation-stage seconds.
     pub gen_secs: f64,
+    /// Inference-stage seconds.
     pub infer_secs: f64,
+    /// Training-stage seconds.
     pub train_secs: f64,
 }
 
 impl E2eResult {
+    /// Whole-iteration seconds.
     pub fn total_secs(&self) -> f64 {
         self.gen_secs + self.infer_secs + self.train_secs
     }
 
+    /// Fraction of the iteration spent generating (Fig 3's headline).
     pub fn gen_fraction(&self) -> f64 {
         self.gen_secs / self.total_secs()
     }

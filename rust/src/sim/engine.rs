@@ -23,7 +23,7 @@ use anyhow::Result;
 use crate::config::SelectorConfig;
 use crate::coordinator::backend::{DecodeBackend, SpecRound};
 use crate::coordinator::core::InstanceCore;
-use crate::coordinator::metrics::InstanceMetrics;
+use crate::coordinator::metrics::{InstanceMetrics, SampleLatency};
 use crate::sim::acceptance::AcceptanceModel;
 use crate::sim::cost_model::CostModel;
 use crate::spec::tree::{CandidateTree, Selection};
@@ -35,30 +35,61 @@ pub use crate::coordinator::core::DecodeMode as SimMode;
 
 /// A simulated sample: counts tokens until its target length. It is its
 /// own task (admission is free), finished record and migration control
-/// snapshot.
+/// snapshot. The latency timestamps (all in virtual seconds) travel with
+/// the sample across migrations, so TTFT/TPOT survive a §6.2 handoff.
 #[derive(Clone, Debug)]
 pub struct SimSample {
+    /// Cluster-unique sample id.
     pub id: u64,
+    /// Target response length (tokens to generate).
     pub target_len: usize,
+    /// Tokens generated so far.
     pub generated: usize,
+    /// Prompt length (pre-existing KV rows).
     pub prompt_len: usize,
+    /// Decode rounds this sample participated in.
     pub rounds: usize,
+    /// Draft tokens accepted for this sample.
     pub accepted: usize,
+    /// Virtual instant the sample arrived at the cluster (0 for
+    /// batch-synchronous workloads, the arrival-event time in streaming).
+    pub arrival_time: f64,
+    /// Virtual instant the sample entered a decode slot (prefill).
+    pub admit_time: Option<f64>,
+    /// Virtual instant the first token was generated.
+    pub first_token_time: Option<f64>,
+    /// Virtual instant the sample reached its target length.
+    pub finish_time: Option<f64>,
 }
 
 impl SimSample {
+    /// A fresh sample arriving at t = 0 (batch-synchronous default).
     pub fn new(id: u64, prompt_len: usize, target_len: usize) -> Self {
-        SimSample { id, target_len, generated: 0, prompt_len, rounds: 0, accepted: 0 }
+        SimSample {
+            id,
+            target_len,
+            generated: 0,
+            prompt_len,
+            rounds: 0,
+            accepted: 0,
+            arrival_time: 0.0,
+            admit_time: None,
+            first_token_time: None,
+            finish_time: None,
+        }
     }
 
+    /// Prompt + generated tokens (the §6.1 migration-score length).
     pub fn seq_len(&self) -> usize {
         self.prompt_len + self.generated
     }
 
+    /// Has the sample reached its target length?
     pub fn done(&self) -> bool {
         self.generated >= self.target_len
     }
 
+    /// Mean accepted drafts per round (§6.1 victim-picking feature).
     pub fn mean_accepted(&self) -> f64 {
         if self.rounds == 0 {
             0.0
@@ -66,16 +97,40 @@ impl SimSample {
             self.accepted as f64 / self.rounds as f64
         }
     }
+
+    /// Serving latencies of a finished sample, if every timestamp was
+    /// stamped (None for samples still decoding or never admitted).
+    pub fn latency(&self) -> Option<SampleLatency> {
+        let admit = self.admit_time?;
+        let first = self.first_token_time?;
+        let finish = self.finish_time?;
+        let tpot = if self.generated > 1 {
+            (finish - first) / (self.generated - 1) as f64
+        } else {
+            0.0
+        };
+        Some(SampleLatency {
+            queue_secs: admit - self.arrival_time,
+            ttft_secs: first - self.arrival_time,
+            tpot_secs: tpot,
+        })
+    }
 }
 
 /// Simulation knobs (tree shape mirrors the real instance defaults).
 #[derive(Clone, Debug)]
 pub struct SimParams {
+    /// Decode policy (AR / static speculative / adaptive).
     pub mode: SimMode,
+    /// Workload-aware selector configuration (§5).
     pub selector: SelectorConfig,
+    /// Upper bound of the selector's draft-budget search.
     pub max_draft: usize,
+    /// Candidate-tree depth (draft steps per speculative round).
     pub depth: usize,
+    /// Children expanded per tree node.
     pub branch: usize,
+    /// Nodes expanded per tree level (EAGLE-2-style beam).
     pub expand_width: usize,
     /// Max decodable samples per step (the paper's instances run batches
     /// of up to ~64 at 8B scale).
@@ -99,14 +154,19 @@ impl Default for SimParams {
 /// Simulated migration payload: ids + modeled bytes (no actual KV data).
 #[derive(Clone, Debug)]
 pub struct SimKv {
+    /// Packed sample ids, in Stage-1 order.
     pub ids: Vec<u64>,
+    /// Modeled payload size for the virtual link's transfer time.
     pub bytes: usize,
 }
 
 /// The virtual-clock backend.
 pub struct SimBackend {
+    /// Simulation knobs (tree shape, batch capacity, selector config).
     pub params: SimParams,
+    /// Hardware cost model (step durations, link, KV sizing).
     pub cost: CostModel,
+    /// Ground-truth acceptance process the predictors must learn.
     pub accept_model: AcceptanceModel,
     /// Virtual seconds elapsed on this instance.
     pub clock: f64,
@@ -177,7 +237,11 @@ impl DecodeBackend for SimBackend {
     }
 
     /// Admission is free in simulation: the task *is* the live sample.
-    fn prefill(&mut self, task: SimSample, _metrics: &mut InstanceMetrics) -> Result<SimSample> {
+    /// Stamps the admission instant for the queueing-delay metric.
+    fn prefill(&mut self, mut task: SimSample, _metrics: &mut InstanceMetrics) -> Result<SimSample> {
+        if task.admit_time.is_none() {
+            task.admit_time = Some(self.clock);
+        }
         Ok(task)
     }
 
@@ -185,10 +249,17 @@ impl DecodeBackend for SimBackend {
         let b = live.len();
         let n_seq: usize = live.iter().map(|s| s.seq_len()).sum();
         let dt = self.cost.t_ar_step(n_seq, b);
+        let t_end = self.clock + dt;
         for s in live.iter_mut() {
             s.generated += 1;
             s.rounds += 1;
             metrics.tokens_out += 1;
+            if s.first_token_time.is_none() {
+                s.first_token_time = Some(t_end);
+            }
+            if s.done() && s.finish_time.is_none() {
+                s.finish_time = Some(t_end);
+            }
         }
         self.clock += dt;
         metrics.rounds += 1;
@@ -244,6 +315,17 @@ impl DecodeBackend for SimBackend {
             metrics.drafts_proposed += (sel.len() - 1) as u64;
         }
         let dt = self.cost.t_spec_round(self.params.depth, n_seq, n_draft_total);
+        // Latency stamps use the round's end instant; stamping draws no
+        // RNG, so fixed-seed token/clock trajectories are unchanged.
+        let t_end = self.clock + dt;
+        for s in live.iter_mut() {
+            if s.generated > 0 && s.first_token_time.is_none() {
+                s.first_token_time = Some(t_end);
+            }
+            if s.done() && s.finish_time.is_none() {
+                s.finish_time = Some(t_end);
+            }
+        }
         // Online t_sd observation carries measurement noise, as on
         // hardware.
         let noisy = dt * (1.0 + 0.02 * (self.rng.f64() * 2.0 - 1.0));
@@ -287,6 +369,7 @@ impl DecodeBackend for SimBackend {
 pub type SimInstance = InstanceCore<SimBackend>;
 
 impl InstanceCore<SimBackend> {
+    /// Build one simulated instance with its own seeded RNG stream.
     pub fn new(
         id: usize,
         params: SimParams,
@@ -317,6 +400,7 @@ impl InstanceCore<SimBackend> {
         self.backend.clock
     }
 
+    /// Tokens generated on this instance so far.
     pub fn tokens_out(&self) -> u64 {
         self.metrics.tokens_out
     }

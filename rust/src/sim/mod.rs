@@ -23,16 +23,29 @@
 //!
 //! [`engine`] is the simulated backend + single-instance wrapper.
 //! [`cluster`] is a true discrete-event simulator: one time-ordered
-//! event heap (instance step-ready, Stage-2 packet arrival, realloc
-//! tick) with deterministic `(time, kind, seq)` tie-breaking schedules N
-//! endpoints against the real reallocator and plays the virtual-clock
-//! transport for the real migration protocol. Scheduling is O(log n)
-//! per event rather than the old O(n) laggard scan, so 8–64 instances
-//! run inside ordinary `cargo test` and 512-instance heterogeneous
-//! fleets (per-instance [`cost_model::CostModel`] tiers with per-tier
-//! reallocation knees) complete 8k-sample workloads in seconds. [`e2e`]
-//! extends the model to full RLHF iterations (inference + training
-//! stage costs) for Figs 3 and 12.
+//! event heap (streaming task arrival, instance step-ready, Stage-2
+//! packet arrival, realloc tick) with deterministic `(time, kind, seq)`
+//! tie-breaking schedules N endpoints against the real reallocator and
+//! plays the virtual-clock transport for the real migration protocol.
+//! Scheduling is O(log n) per event rather than the old O(n) laggard
+//! scan, so 8–64 instances run inside ordinary `cargo test` and
+//! 512-instance heterogeneous fleets (per-instance
+//! [`cost_model::CostModel`] tiers with per-tier reallocation knees)
+//! complete 8k-sample workloads in seconds. Beyond the paper's
+//! batch-synchronous evaluation, [`SimCluster::streaming`] opens a
+//! continuous-batching workload: Poisson / trace-driven arrivals
+//! ([`crate::data::arrivals::ArrivalProcess`]) flow through an
+//! admission policy (least-loaded instance, bounded backlog, refusal
+//! accounting) and the result reports TTFT/TPOT/queueing-delay
+//! percentiles. [`e2e`] extends the model to full RLHF iterations
+//! (inference + training stage costs) for Figs 3 and 12.
+//!
+//! See `docs/ARCHITECTURE.md` for the event-flow diagram and the
+//! "where to add a new event kind" guide.
+
+// Every public item in the simulator must be documented; CI runs
+// `cargo doc --no-deps` with `RUSTDOCFLAGS="-D warnings"` to enforce it.
+#![warn(missing_docs)]
 
 pub mod acceptance;
 pub mod cluster;

@@ -144,7 +144,7 @@ impl KvCache {
         }
     }
 
-    /// Inverse of [`pack_layer_range`]: consume one layer block from `buf`
+    /// Inverse of [`KvCache::pack_layer_range`]: consume one layer block from `buf`
     /// starting at `idx`, writing positions `[from, from+span)`. Returns
     /// the new `idx`.
     pub fn unpack_layer_range(
@@ -170,7 +170,7 @@ impl KvCache {
         idx
     }
 
-    /// Inverse of [`pack_range`]: write a packed buffer at `[from, from+span)`.
+    /// Inverse of [`KvCache::pack_range`]: write a packed buffer at `[from, from+span)`.
     pub fn unpack_range(&mut self, from: usize, span: usize, buf: &[f32]) {
         assert_eq!(buf.len(), 2 * span * self.row_elems(), "packed size mismatch");
         assert!(from + span <= self.max_seq);
@@ -242,7 +242,7 @@ impl BatchedCache {
     }
 
     /// Load a sample's cache into a batch slot (full copy — only on
-    /// composition changes; steady-state uses [`commit_row`]).
+    /// composition changes; steady-state uses [`BatchedCache::commit_row`]).
     ///
     /// Positions are contiguous within a (layer, head) in both layouts,
     /// so this is one `len·Dh` span copy per (l, h) — ~3× faster than the

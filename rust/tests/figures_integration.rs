@@ -162,6 +162,52 @@ fn overhead_under_paper_bound() {
 }
 
 #[test]
+fn streaming_figure_shows_the_throughput_latency_trade() {
+    // The serving-shaped claim: low arrival rates are arrival-limited
+    // (lower throughput, small queueing delay); the t = 0 burst maximizes
+    // throughput and tail latency. Check it on the homogeneous fleet by
+    // re-running the figure's configs directly.
+    use rlhfspec::data::arrivals::ArrivalProcess;
+    let run = |rate: f64| {
+        let mut cfg = ClusterConfig {
+            instances: 8,
+            n_samples: 192,
+            max_tokens: 512,
+            cooldown: 24,
+            seed: SEED,
+            ..Default::default()
+        };
+        cfg.params.max_batch = 8;
+        cfg.params.selector.refit_on_occupancy_change = true;
+        SimCluster::streaming(cfg, &ArrivalProcess::poisson(rate))
+            .expect("valid streaming config")
+            .run()
+    };
+    let slow = run(4.0);
+    let burst = run(f64::INFINITY);
+    assert_eq!(slow.arrivals, 192);
+    assert_eq!(burst.arrivals, 192);
+    assert_eq!(slow.admission_refusals, 0);
+    assert!(
+        burst.tokens_per_sec() > slow.tokens_per_sec(),
+        "burst {} !> slow {} tok/s",
+        burst.tokens_per_sec(),
+        slow.tokens_per_sec()
+    );
+    assert!(
+        burst.latency.ttft_p95 > slow.latency.ttft_p95,
+        "burst ttft p95 {} !> slow {}",
+        burst.latency.ttft_p95,
+        slow.latency.ttft_p95
+    );
+    // And the rendered figure carries both fleet sections.
+    let s = figures::fig_streaming(SEED);
+    assert!(s.contains("homogeneous"), "{s}");
+    assert!(s.contains("hetero"), "{s}");
+    assert!(s.contains("inf"), "{s}");
+}
+
+#[test]
 fn all_figures_render() {
     for id in figures::ALL_FIGURES {
         let out = figures::run_figure(id, SEED).unwrap();

@@ -52,6 +52,7 @@ fn tasks(n: usize, prompt_len: usize, max_new: usize, seed: u64) -> Vec<SampleTa
             prompt: (0..prompt_len).map(|_| rng.below(60) as i32 + 1).collect(),
             max_new_tokens: max_new,
             eos: 0, // token 0 = EOS; random-weight models rarely emit it
+            submitted_at: None,
         })
         .collect()
 }
@@ -200,6 +201,7 @@ fn driver_skewed_load_triggers_migration() {
             prompt: (0..4).map(|_| rng.below(60) as i32 + 1).collect(),
             max_new_tokens: if i % 2 == 0 { 24 } else { 3 },
             eos: 0,
+            submitted_at: None,
         });
     }
     let report = run_generation(&tiny_dir(), &cfg, DecodeMode::Adaptive, ts, &tw, &dw).unwrap();
@@ -211,4 +213,51 @@ fn driver_skewed_load_triggers_migration() {
         report.realloc_decisions > 0,
         "skewed load produced no reallocation decisions"
     );
+}
+
+#[test]
+fn driver_streaming_submit_path_reports_latency() {
+    // The continuous-batching entry point: tasks submitted with arrival
+    // offsets drain through the monitor's arrival queue, every sample
+    // finishes exactly once, and the report carries per-sample latency
+    // percentiles (queueing delay / TTFT / TPOT).
+    let Some(man) = tiny_manifest() else { return };
+    let target = ModelStore::init(&man, "target", 51).unwrap();
+    let draft = ModelStore::init(&man, "draft", 52).unwrap();
+    let tw = target.weights_host().unwrap();
+    let dw = draft.weights_host().unwrap();
+
+    let mut cfg = RunConfig::default();
+    cfg.rlhf.instances = 2;
+    cfg.spec.max_depth = 2;
+    cfg.spec.max_draft = 4;
+
+    let mut svc = rlhfspec::coordinator::driver::GenerationService::start(
+        &tiny_dir(),
+        &cfg,
+        DecodeMode::Adaptive,
+        &tw,
+        &dw,
+    )
+    .unwrap();
+    // Two waves: one immediate, one 50 ms in.
+    svc.submit(0.0, tasks(4, 5, 8, 91));
+    let mut wave2 = tasks(4, 5, 8, 92);
+    for (i, t) in wave2.iter_mut().enumerate() {
+        t.id = 100 + i as u64;
+    }
+    svc.submit(0.05, wave2);
+    let report = svc.run_streaming().unwrap();
+    svc.shutdown();
+
+    assert_eq!(report.finished.len(), 8);
+    let mut ids: Vec<u64> = report.finished.iter().map(|f| f.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1, 2, 3, 100, 101, 102, 103]);
+    // Every streamed sample carries a latency record, and the summary
+    // reflects all of them.
+    assert!(report.finished.iter().all(|f| f.latency.is_some()));
+    assert_eq!(report.latency.n, 8);
+    assert!(report.latency.ttft_p50 > 0.0);
+    assert!(report.latency.ttft_p99 >= report.latency.ttft_p50);
 }

@@ -1,0 +1,215 @@
+//! Integration: the streaming (continuous-batching) workload path.
+//!
+//! * **Golden parity** — a streaming run at arrival rate → ∞ (every
+//!   sample arrives at t = 0) must reproduce the batch-synchronous
+//!   `SimCluster::new` + `run()` results *bit-identically* on the golden
+//!   8-instance configs: the t = 0 burst replays §4's round-robin initial
+//!   allocation, the same fixed-seed RNG streams drive the same decode
+//!   trajectory, and the admission path adds no virtual time.
+//! * **Conservation at scale** — on a ≥128-instance fleet with a tight
+//!   memory budget and a bounded backlog, every offered sample is either
+//!   completed or refused: `arrivals == completions + admission_refusals`,
+//!   and the per-tier refusal ledgers agree with the cluster totals.
+//! * **Latency sanity** — queueing delay under an overloaded burst
+//!   dwarfs the near-zero delay of a trickle arrival process.
+
+use rlhfspec::data::arrivals::ArrivalProcess;
+use rlhfspec::sim::cluster::{ClusterConfig, FleetTier, SimCluster};
+use rlhfspec::sim::SimMode;
+
+#[test]
+fn infinite_rate_streaming_is_bit_identical_to_batch_run() {
+    // The same golden configs the event-heap/laggard-scan parity test
+    // pins, now pinning streaming-vs-batch: adaptive decode, migrations
+    // live, three seeds.
+    for seed in [0u64, 7, 42] {
+        let cfg = ClusterConfig {
+            instances: 8,
+            n_samples: 192,
+            max_tokens: 512,
+            cooldown: 24,
+            seed,
+            ..Default::default()
+        };
+        let batch = SimCluster::new(cfg.clone()).run();
+        let mut streaming = SimCluster::streaming(cfg, &ArrivalProcess::burst())
+            .expect("valid streaming config");
+        let stream = streaming.run();
+        assert_eq!(stream.arrivals, 192, "seed {seed}");
+        assert_eq!(stream.admission_refusals, 0, "seed {seed}");
+        assert_eq!(stream.total_tokens, batch.total_tokens, "seed {seed}");
+        assert_eq!(
+            stream.makespan.to_bits(),
+            batch.makespan.to_bits(),
+            "seed {seed}: {} vs {}",
+            stream.makespan,
+            batch.makespan
+        );
+        assert_eq!(stream.migrations, batch.migrations, "seed {seed}");
+        assert_eq!(
+            stream.realloc_decisions, batch.realloc_decisions,
+            "seed {seed}"
+        );
+        assert_eq!(stream.n_samples, batch.n_samples, "seed {seed}");
+    }
+    // AR mode keeps many instance clocks exactly tied — the burst's
+    // admission order must still replay the round-robin allocation.
+    let ar_cfg = ClusterConfig {
+        instances: 8,
+        mode: SimMode::Ar,
+        n_samples: 128,
+        max_tokens: 256,
+        seed: 5,
+        ..Default::default()
+    };
+    let batch = SimCluster::new(ar_cfg.clone()).run();
+    let stream = SimCluster::streaming(ar_cfg, &ArrivalProcess::poisson(f64::INFINITY))
+        .expect("valid streaming config")
+        .run();
+    assert_eq!(stream.total_tokens, batch.total_tokens);
+    assert_eq!(stream.makespan.to_bits(), batch.makespan.to_bits());
+}
+
+#[test]
+fn streaming_conserves_arrivals_at_128_instances() {
+    // 128 instances × 2 decode slots → admission budget 8 per instance
+    // (4× capacity), fleet budget 1024. A burst of 1400 with a backlog
+    // bound of 16 must refuse exactly 1400 - 1024 - 16 = 360 and complete
+    // the rest — nothing lost, nothing duplicated.
+    let mut cfg = ClusterConfig {
+        instances: 128,
+        n_samples: 1400,
+        max_tokens: 256,
+        cooldown: 16,
+        seed: 17,
+        ..Default::default()
+    };
+    cfg.params.max_batch = 2;
+    cfg.pending_bound = 16;
+    let mut c = SimCluster::streaming(cfg, &ArrivalProcess::burst()).expect("valid config");
+    let r = c.run();
+    assert_eq!(r.arrivals, 1400);
+    assert_eq!(r.admission_refusals, 360);
+    assert_eq!(r.n_samples, 1040);
+    assert_eq!(
+        r.arrivals,
+        r.n_samples as u64 + r.admission_refusals,
+        "conservation: arrivals = completions + refusals"
+    );
+    // Completed samples really finished, exactly once each.
+    let mut ids: Vec<u64> = c
+        .instances
+        .iter()
+        .flat_map(|x| x.finished.iter().map(|s| s.id))
+        .collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 1040, "no duplicated completions");
+    for inst in &c.instances {
+        assert!(inst.is_idle(), "instance {} still holds samples", inst.id);
+    }
+    // Tier ledgers agree with cluster totals.
+    let tier_adm: u64 = r.tier_stats.iter().map(|t| t.admission_refusals).sum();
+    assert_eq!(tier_adm, r.admission_refusals);
+    // Every finished sample carries a full latency record.
+    assert_eq!(r.latency.n, 1040);
+}
+
+#[test]
+fn streaming_conservation_on_hetero_fleet_with_finite_rate() {
+    // Mixed fleet (per-tier knees + the real §6.2 endpoint protocol)
+    // under a finite-rate Poisson stream: conservation and the per-tier
+    // migration ledger must both hold while arrivals and the long tail
+    // overlap.
+    let mut cfg = ClusterConfig {
+        fleet: vec![
+            FleetTier::preset("h100", 4).unwrap(),
+            FleetTier::preset("a100", 4).unwrap(),
+            FleetTier::preset("l40s", 8).unwrap(),
+        ],
+        n_samples: 256,
+        max_tokens: 512,
+        cooldown: 16,
+        seed: 23,
+        ..Default::default()
+    };
+    cfg.params.selector.refit_on_occupancy_change = true;
+    let mut c = SimCluster::streaming(cfg, &ArrivalProcess::poisson(32.0))
+        .expect("valid streaming config");
+    let r = c.run();
+    assert_eq!(r.arrivals, 256);
+    assert_eq!(
+        r.arrivals,
+        r.n_samples as u64 + r.admission_refusals,
+        "conservation on a mixed fleet"
+    );
+    let done: usize = c.instances.iter().map(|x| x.finished.len()).sum();
+    assert_eq!(done, r.n_samples);
+    // Migration flow conservation still holds with arrivals in flight.
+    let out_total: u64 = r.tier_stats.iter().map(|t| t.migrated_out).sum();
+    let in_total: u64 = r.tier_stats.iter().map(|t| t.migrated_in).sum();
+    assert_eq!(out_total, in_total);
+}
+
+#[test]
+fn burst_queueing_dwarfs_trickle_queueing() {
+    // Small decode batches (queueing visible): an overloaded t = 0 burst
+    // must show far larger p95 queueing delay than a slow trickle, and
+    // TTFT must dominate queueing delay in both.
+    let mk = |rate: f64| {
+        let mut cfg = ClusterConfig {
+            instances: 4,
+            n_samples: 96,
+            max_tokens: 384,
+            seed: 11,
+            ..Default::default()
+        };
+        cfg.params.max_batch = 4;
+        SimCluster::streaming(cfg, &ArrivalProcess::poisson(rate))
+            .expect("valid streaming config")
+            .run()
+    };
+    let trickle = mk(2.0); // ~48s of arrivals for a fleet that drains faster
+    let burst = mk(f64::INFINITY);
+    assert_eq!(trickle.latency.n, 96);
+    assert_eq!(burst.latency.n, 96);
+    assert!(
+        burst.latency.queue_p95 > trickle.latency.queue_p95 * 3.0,
+        "burst p95 queue {} should dwarf trickle {}",
+        burst.latency.queue_p95,
+        trickle.latency.queue_p95
+    );
+    assert!(burst.latency.ttft_p95 >= burst.latency.queue_p95);
+    assert!(trickle.latency.ttft_p95 >= trickle.latency.queue_p95);
+    // The burst finishes the same work in less virtual time (higher
+    // throughput) — the throughput/latency trade of serving systems.
+    assert!(burst.tokens_per_sec() > trickle.tokens_per_sec());
+}
+
+#[test]
+fn trace_replay_drives_the_cluster() {
+    // A recorded trace (two waves) replays deterministically.
+    let trace: Vec<f64> = (0..48)
+        .map(|k| if k < 24 { 0.5 } else { 30.0 })
+        .collect();
+    let mk = || {
+        let cfg = ClusterConfig {
+            instances: 4,
+            n_samples: 48,
+            max_tokens: 256,
+            seed: 3,
+            ..Default::default()
+        };
+        SimCluster::streaming(cfg, &ArrivalProcess::trace(trace.clone()))
+            .expect("valid streaming config")
+            .run()
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.arrivals, 48);
+    assert_eq!(a.n_samples, 48);
+    assert_eq!(a.total_tokens, b.total_tokens, "trace replay is deterministic");
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    // The second wave lands at t = 30: the run cannot end before that.
+    assert!(a.makespan >= 30.0, "{}", a.makespan);
+}

@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""CI gate: scheduler overhead must stay within budget.
+
+Parses the BENCH_core.json artifact written by `cargo bench --bench
+bench_core` and fails when the control-plane scheduler's per-step wall
+time exceeds BUDGET (default 1%) of the *modeled* decode step it
+schedules, at batch size 64 (the ROADMAP regression budget). Every
+`core/step/<mode>/b<batch>` row is paired with a `.../modeled-step` row
+carrying the modeled step duration, so the gate needs no knowledge of
+the cost model.
+
+Usage: check_bench_budget.py [BENCH_core.json] [--budget-pct 1.0]
+
+Exit codes: 0 = within budget, 1 = over budget, 2 = malformed input
+(missing rows count as malformed — a silently skipped gate is worse
+than a failing one).
+"""
+
+import argparse
+import json
+import sys
+
+GATED_BATCH = "b64"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", nargs="?", default="BENCH_core.json")
+    ap.add_argument("--budget-pct", type=float, default=1.0,
+                    help="max scheduler overhead as %% of a modeled step")
+    args = ap.parse_args()
+
+    try:
+        with open(args.path) as f:
+            rows = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: cannot parse {args.path}: {e}", file=sys.stderr)
+        return 2
+
+    by_name = {}
+    for row in rows:
+        if not isinstance(row, dict) or "name" not in row or "mean_ns" not in row:
+            print(f"error: malformed row {row!r}", file=sys.stderr)
+            return 2
+        by_name[row["name"]] = float(row["mean_ns"])
+
+    gated = sorted(
+        name for name in by_name
+        if name.startswith("core/step/")
+        and name.endswith(f"/{GATED_BATCH}")
+    )
+    if not gated:
+        print(f"error: no core/step/*/{GATED_BATCH} rows in {args.path} — "
+              "the budget gate has nothing to check", file=sys.stderr)
+        return 2
+
+    failures = []
+    for name in gated:
+        modeled_name = f"{name}/modeled-step"
+        if modeled_name not in by_name:
+            print(f"error: {name} has no paired {modeled_name} row",
+                  file=sys.stderr)
+            return 2
+        sched_ns = by_name[name]
+        modeled_ns = by_name[modeled_name]
+        if modeled_ns <= 0:
+            print(f"error: non-positive modeled step for {name}",
+                  file=sys.stderr)
+            return 2
+        pct = 100.0 * sched_ns / modeled_ns
+        status = "OK" if pct <= args.budget_pct else "OVER BUDGET"
+        print(f"{name}: scheduler {sched_ns / 1e3:.2f}µs vs modeled step "
+              f"{modeled_ns / 1e6:.2f}ms = {pct:.4f}% "
+              f"(budget {args.budget_pct}%) {status}")
+        if pct > args.budget_pct:
+            failures.append(name)
+
+    if failures:
+        print(f"FAIL: {len(failures)} row(s) over the "
+              f"{args.budget_pct}% scheduler-overhead budget: "
+              f"{', '.join(failures)}", file=sys.stderr)
+        return 1
+    print(f"PASS: all {len(gated)} gated rows within the "
+          f"{args.budget_pct}% budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
