@@ -170,6 +170,11 @@ fn main() {
         sres.latency.tpot_p50 * 1e3,
     );
 
-    write_json("BENCH_core.json", &results).expect("write BENCH_core.json");
-    println!("wrote BENCH_core.json ({} rows)", results.len());
+    // Anchor the artifact at the *workspace* root: cargo runs bench
+    // binaries with cwd = the package root (rust/), but the committed
+    // trajectory seed, CI's budget gate and the upload step all read
+    // the repo-root path.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_core.json");
+    write_json(path, &results).expect("write BENCH_core.json");
+    println!("wrote {path} ({} rows)", results.len());
 }

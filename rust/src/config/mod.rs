@@ -10,6 +10,8 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::coordinator::transport::TransportConfig;
+
 /// Speculative generation knobs (paper §2.2, §5).
 #[derive(Clone, Debug)]
 pub struct SpecConfig {
@@ -80,6 +82,17 @@ pub struct ReallocConfig {
     pub link_bandwidth: f64,
     /// Simulated per-message link latency (seconds).
     pub link_latency: f64,
+    /// Wall-clock decision cadence for the threaded driver, in seconds.
+    /// `> 0` replaces the step-counter cooldown with timed ticks (the
+    /// meaningful schedule when instances step at different rates);
+    /// `<= 0` (default) keeps the step cadence.
+    pub period_secs: f64,
+    /// Batched multi-destination orders: one decision may split a
+    /// source's surplus across several destinations (and fill one deep
+    /// deficit from several sources). Requires nothing extra — the
+    /// hardened endpoint runs the handshakes concurrently — but is off
+    /// by default to keep the paper's `m(k) <= 1` pairing.
+    pub multi_dest: bool,
 }
 
 impl Default for ReallocConfig {
@@ -91,6 +104,8 @@ impl Default for ReallocConfig {
             // PCIe 4.0 x16-ish effective bandwidth, per the paper's testbed.
             link_bandwidth: 20e9,
             link_latency: 20e-6,
+            period_secs: 0.0,
+            multi_dest: false,
         }
     }
 }
@@ -134,6 +149,12 @@ pub struct RunConfig {
     pub selector: SelectorConfig,
     pub realloc: ReallocConfig,
     pub rlhf: RlhfConfig,
+    /// `[transport]` — §6.2 message-transport fault model + reliability
+    /// knobs (see [`TransportConfig`]). Fault-free by default. Honored
+    /// by the simulated link; the threaded driver's in-process channels
+    /// are reliable, so `GenerationService::start` *rejects* a
+    /// non-perfect section instead of silently ignoring it.
+    pub transport: TransportConfig,
     pub seed: u64,
 }
 
@@ -191,6 +212,8 @@ impl RunConfig {
             "realloc.threshold" => self.realloc.threshold = u(val)?,
             "realloc.link_bandwidth" => self.realloc.link_bandwidth = f64_(val)?,
             "realloc.link_latency" => self.realloc.link_latency = f64_(val)?,
+            "realloc.period_secs" => self.realloc.period_secs = f64_(val)?,
+            "realloc.multi_dest" => self.realloc.multi_dest = b(val)?,
             "rlhf.instances" => self.rlhf.instances = u(val)?,
             "rlhf.samples_per_iter" => self.rlhf.samples_per_iter = u(val)?,
             "rlhf.max_new_tokens" => self.rlhf.max_new_tokens = u(val)?,
@@ -201,7 +224,17 @@ impl RunConfig {
             "rlhf.ent_coef" => self.rlhf.ent_coef = f(val)?,
             "rlhf.gamma" => self.rlhf.gamma = f(val)?,
             "rlhf.gae_lambda" => self.rlhf.gae_lambda = f(val)?,
-            _ => bail!("unknown config key"),
+            _ => {
+                // `[transport]` keys (fault profiles + reliability
+                // knobs) are parsed by TransportConfig itself — one
+                // config surface, even though only the simulated link
+                // can inject the faults (the driver rejects non-perfect
+                // sections at start).
+                if let Some(rest) = key.strip_prefix("transport.") {
+                    return self.transport.set(rest, val);
+                }
+                bail!("unknown config key")
+            }
         }
         Ok(())
     }
@@ -268,6 +301,43 @@ mod tests {
     fn unknown_key_rejected() {
         let mut cfg = RunConfig::default();
         assert!(cfg.set("nope.nope", "1").is_err());
+    }
+
+    #[test]
+    fn transport_section_parses() {
+        let src = r#"
+            [transport]
+            drop_prob = 0.1          # all four classes
+            stage2.dup_prob = 0.25   # one class
+            retransmit_budget = 7
+            handshake_timeout_secs = 0.5
+            [realloc]
+            period_secs = 0.5
+            multi_dest = true
+        "#;
+        let mut kv = BTreeMap::new();
+        parse_toml_subset(src, &mut kv).unwrap();
+        let cfg = RunConfig::load(None, &kv).unwrap();
+        assert!(!cfg.transport.is_perfect());
+        assert_eq!(cfg.transport.alloc_req.drop_prob, 0.1);
+        assert_eq!(cfg.transport.stage2.drop_prob, 0.1);
+        assert_eq!(cfg.transport.stage2.dup_prob, 0.25);
+        assert_eq!(cfg.transport.alloc_ack.dup_prob, 0.0);
+        assert_eq!(cfg.transport.retransmit_budget, 7);
+        assert_eq!(cfg.transport.handshake_timeout_secs, 0.5);
+        assert_eq!(cfg.realloc.period_secs, 0.5);
+        assert!(cfg.realloc.multi_dest);
+        // Defaults stay fault-free (today's behavior).
+        assert!(RunConfig::default().transport.is_perfect());
+        assert_eq!(RunConfig::default().realloc.period_secs, 0.0);
+    }
+
+    #[test]
+    fn bad_transport_key_rejected() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.set("transport.nope", "1").is_err());
+        assert!(cfg.set("transport.stage2.nope", "1").is_err());
+        assert!(cfg.set("transport.drop_prob", "abc").is_err());
     }
 
     #[test]

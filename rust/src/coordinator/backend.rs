@@ -129,13 +129,17 @@ pub trait DecodeBackend {
     /// Pack the given row ranges of several samples into one transferable
     /// payload (Stage 1 packs `(0, snapshot)`, Stage 2 the delta).
     fn kv_extract(&self, items: &[(&Self::Sample, (usize, usize))]) -> Self::KvPayload;
-    /// Destination, Stage 1: stash the bulk payload until Stage 2 arrives.
-    /// The payload itself carries the sample ids it packs.
-    fn stage1_store(&mut self, from: usize, kv: Self::KvPayload) -> Result<()>;
-    /// Destination, Stage 2: merge the delta into the stashed bulk and
-    /// rebuild resumable samples from the control snapshots.
+    /// Destination, Stage 1: stash the bulk payload until Stage 2 arrives,
+    /// keyed by the migration-order sequence number (several orders —
+    /// even from the same source — can be in flight concurrently on an
+    /// unreliable transport). The payload itself carries the sample ids
+    /// it packs. The endpoint dedups retransmissions before calling this.
+    fn stage1_store(&mut self, order: u64, from: usize, kv: Self::KvPayload) -> Result<()>;
+    /// Destination, Stage 2: merge the delta into the bulk stashed under
+    /// `order` and rebuild resumable samples from the control snapshots.
     fn stage2_restore(
         &mut self,
+        order: u64,
         from: usize,
         delta: Self::KvPayload,
         control: Vec<Self::Control>,

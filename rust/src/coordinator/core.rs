@@ -18,6 +18,29 @@
 //! The backend ([`crate::coordinator::instance::PjrtBackend`] or
 //! [`crate::sim::engine::SimBackend`]) only supplies prefill/draft/verify
 //! execution, KV packing and the clock.
+//!
+//! **Hardened against unreliable transports.** Every migration order
+//! carries a cluster-unique sequence number (`order`), and the endpoint
+//! is safe under message loss, duplication and reordering (see
+//! [`crate::coordinator::transport`]):
+//!
+//! * the source keeps **per-order** outbound state, so several orders —
+//!   e.g. one batched multi-destination order set — can be in flight
+//!   concurrently without overwriting each other; victims claimed by one
+//!   order are excluded from later victim picks;
+//! * Stage-1/Stage-2 **apply is idempotent**: the destination dedups on
+//!   the order id, so retransmitted or duplicated packets can never
+//!   double-park a sample ([`Stage2Disposition::Duplicate`]);
+//! * shipped victims sit in the source's **limbo** buffer until the
+//!   destination's confirmation arrives ([`InstanceCore::confirm_order`])
+//!   — a lost Stage-2 is retransmitted by the carrier from its held
+//!   copy, and the samples are only dropped once the order is confirmed;
+//! * a handshake that never completes is **aborted**
+//!   ([`InstanceCore::abort_handshake`]): waiting tasks return to the
+//!   queue and live victims — which never left the decode batch during
+//!   the handshake — simply keep decoding at the source.
+
+use std::collections::BTreeSet;
 
 use anyhow::Result;
 
@@ -43,6 +66,8 @@ pub enum DecodeMode {
 /// Stage 1 of an outbound migration: the bulk KV snapshot. The victims
 /// keep decoding on the source while this transfers.
 pub struct Stage1Msg<B: DecodeBackend> {
+    /// Cluster-unique migration-order sequence number.
+    pub order: u64,
     /// Source instance id.
     pub from: usize,
     /// Destination instance id.
@@ -51,11 +76,26 @@ pub struct Stage1Msg<B: DecodeBackend> {
     pub kv: B::KvPayload,
 }
 
+// Manual Clone impls: carriers on unreliable transports hold message
+// copies for retransmission. `#[derive(Clone)]` would wrongly demand
+// `B: Clone`; only the payload types need it.
+impl<B: DecodeBackend> Clone for Stage1Msg<B>
+where
+    B::KvPayload: Clone,
+{
+    fn clone(&self) -> Self {
+        Stage1Msg { order: self.order, from: self.from, to: self.to, kv: self.kv.clone() }
+    }
+}
+
 /// Stage 2 of an outbound migration: the KV delta generated since the
 /// Stage-1 snapshot plus control state — after this the samples live on
 /// the destination. Queue-only moves (waiting tasks, no KV) are a Stage-2
 /// message with `kv_delta = None`.
 pub struct Stage2Msg<B: DecodeBackend> {
+    /// Cluster-unique migration-order sequence number — the dedup key of
+    /// the idempotent destination apply.
+    pub order: u64,
     /// Source instance id.
     pub from: usize,
     /// Destination instance id.
@@ -67,6 +107,40 @@ pub struct Stage2Msg<B: DecodeBackend> {
     pub control: Vec<B::Control>,
     /// Queued (never-admitted) tasks riding along without KV.
     pub waiting_tasks: Vec<B::Task>,
+}
+
+impl<B: DecodeBackend> Clone for Stage2Msg<B>
+where
+    B::KvPayload: Clone,
+    B::Control: Clone,
+    B::Task: Clone,
+{
+    fn clone(&self) -> Self {
+        Stage2Msg {
+            order: self.order,
+            from: self.from,
+            to: self.to,
+            kv_delta: self.kv_delta.clone(),
+            control: self.control.clone(),
+            waiting_tasks: self.waiting_tasks.clone(),
+        }
+    }
+}
+
+/// What the destination did with a Stage-2 message (idempotent apply).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage2Disposition {
+    /// First delivery: samples parked / tasks enqueued. The carrier
+    /// should acknowledge so the source can release its limbo copy.
+    Applied,
+    /// The order was already applied — a duplicate or retransmitted
+    /// packet. Nothing changed; the carrier should re-acknowledge (the
+    /// previous ack may have been lost).
+    Duplicate,
+    /// The packet carries a KV delta but this order's Stage-1 bulk has
+    /// not arrived (loss or reordering). Nothing changed and no ack is
+    /// due — the source's retransmit timer will resend both stages.
+    AwaitingStage1,
 }
 
 /// Outcome of [`InstanceCore::begin_migration`] on the source.
@@ -91,8 +165,9 @@ pub enum AckOutcome<B: DecodeBackend> {
     Stage1(Stage1Msg<B>),
 }
 
-/// In-flight outbound migration state on the source instance.
+/// One in-flight outbound migration handshake on the source instance.
 struct MigOutState<B: DecodeBackend> {
+    order: u64,
     to: usize,
     live_ids: Vec<u64>,
     /// Committed length of each victim at decision time (Stage-1 range).
@@ -131,7 +206,18 @@ pub struct InstanceCore<B: DecodeBackend> {
     /// Live-batch occupancy at the previous step, for the streaming
     /// occupancy-change refit trigger.
     last_occupancy: usize,
-    mig_out: Option<MigOutState<B>>,
+    /// In-flight outbound handshakes, one entry per order (FIFO by
+    /// creation). Several can coexist — a batched multi-destination
+    /// order set opens one handshake per destination.
+    mig_out: Vec<MigOutState<B>>,
+    /// Victims shipped in an unconfirmed Stage-2, keyed by order: held
+    /// until [`InstanceCore::confirm_order`] so a lost packet can be
+    /// retransmitted without losing the samples.
+    limbo: Vec<(u64, Vec<B::Sample>)>,
+    /// Destination-side dedup: orders whose Stage-2 already applied.
+    applied_orders: BTreeSet<u64>,
+    /// Destination-side: orders whose Stage-1 bulk has been stored.
+    stage1_seen: BTreeSet<u64>,
 }
 
 impl<B: DecodeBackend> InstanceCore<B> {
@@ -152,7 +238,10 @@ impl<B: DecodeBackend> InstanceCore<B> {
             steps: 0,
             steps_since_refit: 0,
             last_occupancy: 0,
-            mig_out: None,
+            mig_out: Vec::new(),
+            limbo: Vec::new(),
+            applied_orders: BTreeSet::new(),
+            stage1_seen: BTreeSet::new(),
         }
     }
 
@@ -352,25 +441,31 @@ impl<B: DecodeBackend> InstanceCore<B> {
     // ------------------------------------------------------------------
 
     /// Source: pick victims (waiting tasks first — no KV to move — then
-    /// live/parked samples by the §6.1 score) and open the handshake.
-    pub fn begin_migration(&mut self, to: usize, count: usize) -> MigrateStart<B> {
-        // One outbound migration at a time (§6.1's m(k) ≤ 1): starting a
-        // second would overwrite the Stage-1 state and strand its victims.
-        if self.mig_out.is_some() {
-            return MigrateStart::Refused;
-        }
+    /// live/parked samples by the §6.1 score) and open the handshake for
+    /// migration order `order` (a cluster-unique sequence number assigned
+    /// by the caller). Victims already claimed by another in-flight order
+    /// are excluded, so several handshakes — e.g. one batched
+    /// multi-destination order set — can run concurrently.
+    pub fn begin_migration(&mut self, to: usize, count: usize, order: u64) -> MigrateStart<B> {
         let mut remaining = count;
         let mut waiting_tasks: Vec<B::Task> = Vec::new();
         while remaining > 0 && !self.waiting.is_empty() {
             waiting_tasks.push(self.waiting.pop().expect("non-empty waiting queue"));
             remaining -= 1;
         }
-        // Live victims by the §6.1 score: short sequences, low accept rate.
+        // Live victims by the §6.1 score: short sequences, low accept
+        // rate. Ids reserved by other in-flight orders are off the table.
+        let claimed: BTreeSet<u64> = self
+            .mig_out
+            .iter()
+            .flat_map(|s| s.live_ids.iter().copied())
+            .collect();
         let max_seq = self.backend.max_seq();
         let mut scored: Vec<(f64, u64)> = self
             .live
             .iter()
             .chain(self.parked.iter())
+            .filter(|s| !claimed.contains(&B::sample_id(s)))
             .map(|s| {
                 (
                     migration_score(B::seq_len(s), B::mean_accepted(s), max_seq),
@@ -388,6 +483,7 @@ impl<B: DecodeBackend> InstanceCore<B> {
             // Queue-only transfer: no KV, no handshake needed.
             self.metrics.samples_migrated_out += waiting_tasks.len() as u64;
             return MigrateStart::QueueOnly(Stage2Msg {
+                order,
                 from: self.id,
                 to,
                 kv_delta: None,
@@ -409,11 +505,13 @@ impl<B: DecodeBackend> InstanceCore<B> {
             })
             .sum();
         let req = AllocRequest {
+            order,
             from_instance: self.id,
             sample_ids: live_ids.clone(),
             bytes,
         };
-        self.mig_out = Some(MigOutState {
+        self.mig_out.push(MigOutState {
+            order,
             to,
             live_ids,
             snapshots,
@@ -430,18 +528,21 @@ impl<B: DecodeBackend> InstanceCore<B> {
         self.sample_count() + req.sample_ids.len() <= self.backend.capacity() * 4
     }
 
-    /// Source: the destination answered the alloc request. On success,
-    /// pack Stage 1 (the verified-KV snapshot); the victims keep decoding
-    /// until [`Self::poll_stage2`].
-    pub fn handle_alloc_ack(&mut self, ok: bool) -> AckOutcome<B> {
-        let Some(mut state) = self.mig_out.take() else {
+    /// Source: the destination answered the alloc request for `order`.
+    /// On success, pack Stage 1 (the verified-KV snapshot); the victims
+    /// keep decoding until [`Self::poll_stage2`]. A stale or duplicated
+    /// ack (unknown order) is ignored.
+    pub fn handle_alloc_ack(&mut self, order: u64, ok: bool) -> AckOutcome<B> {
+        let Some(pos) = self.mig_out.iter().position(|s| s.order == order) else {
             return AckOutcome::NoPending;
         };
         if !ok {
             // Clear buffers, give waiting tasks back, report refusal.
+            let mut state = self.mig_out.remove(pos);
             self.waiting.extend(state.waiting_tasks.drain(..));
             return AckOutcome::Refused;
         }
+        let state = &self.mig_out[pos];
         let kv = {
             let mut items: Vec<(&B::Sample, (usize, usize))> = Vec::new();
             for (id, &snap) in state.live_ids.iter().zip(&state.snapshots) {
@@ -451,21 +552,20 @@ impl<B: DecodeBackend> InstanceCore<B> {
             }
             self.backend.kv_extract(&items)
         };
-        let msg = Stage1Msg { from: self.id, to: state.to, kv };
-        state.stage1_sent = true;
-        self.mig_out = Some(state);
+        let msg = Stage1Msg { order, from: self.id, to: state.to, kv };
+        self.mig_out[pos].stage1_sent = true;
         AckOutcome::Stage1(msg)
     }
 
-    /// Source, at a step boundary after Stage 1: remove the victims and
-    /// emit the Stage-2 delta + control. Victims that finished during the
-    /// overlapped step stay local (they were retired normally).
+    /// Source, at a step boundary after Stage 1: remove the victims of
+    /// the oldest Stage-1-sent order and emit its Stage-2 delta +
+    /// control. Victims that finished during the overlapped step stay
+    /// local (they were retired normally). The shipped victims move into
+    /// the limbo buffer until [`Self::confirm_order`] releases them —
+    /// call in a loop to drain every ready order.
     pub fn poll_stage2(&mut self) -> Option<Stage2Msg<B>> {
-        let state = self.mig_out.take()?;
-        if !state.stage1_sent {
-            self.mig_out = Some(state);
-            return None;
-        }
+        let pos = self.mig_out.iter().position(|s| s.stage1_sent)?;
+        let state = self.mig_out.remove(pos);
         let mut victims: Vec<(B::Sample, usize)> = Vec::new();
         for (id, &snap) in state.live_ids.iter().zip(&state.snapshots) {
             if let Some(s) = self.take_live_or_parked(*id) {
@@ -486,7 +586,12 @@ impl<B: DecodeBackend> InstanceCore<B> {
         // overlap step stayed local and were retired, not migrated.
         self.metrics.samples_migrated_out +=
             (control.len() + state.waiting_tasks.len()) as u64;
+        // Hold the shipped samples until the order is confirmed: a lost
+        // Stage-2 is the carrier's to retransmit, not ours to lose.
+        self.limbo
+            .push((state.order, victims.into_iter().map(|(s, _)| s).collect()));
         Some(Stage2Msg {
+            order: state.order,
             from: self.id,
             to: state.to,
             kv_delta: Some(kv_delta),
@@ -495,9 +600,37 @@ impl<B: DecodeBackend> InstanceCore<B> {
         })
     }
 
-    /// True while an outbound migration is between Stage 1 and Stage 2.
+    /// Source: the destination confirmed `order` (its Stage-2 applied) —
+    /// release the limbo copy of the shipped victims. Idempotent.
+    pub fn confirm_order(&mut self, order: u64) {
+        self.limbo.retain(|(o, _)| *o != order);
+    }
+
+    /// Source: abort a handshake that never completed (lost AllocReq/Ack
+    /// past the retransmit budget or the handshake timeout). Waiting
+    /// tasks return to the queue; live victims never left the decode
+    /// batch and simply keep decoding here. Only valid before Stage 2
+    /// shipped — committed orders must be retransmitted to completion
+    /// instead (aborting then could duplicate samples). Returns false
+    /// for an unknown (already finished/aborted) order.
+    pub fn abort_handshake(&mut self, order: u64) -> bool {
+        let Some(pos) = self.mig_out.iter().position(|s| s.order == order) else {
+            return false;
+        };
+        let mut state = self.mig_out.remove(pos);
+        self.waiting.extend(state.waiting_tasks.drain(..));
+        self.metrics.orders_aborted += 1;
+        true
+    }
+
+    /// True while any outbound handshake is between AllocReq and Stage 2.
     pub fn migration_pending(&self) -> bool {
-        self.mig_out.is_some()
+        !self.mig_out.is_empty()
+    }
+
+    /// Samples shipped in not-yet-confirmed Stage-2 packets (limbo).
+    pub fn limbo_count(&self) -> usize {
+        self.limbo.iter().map(|(_, v)| v.len()).sum()
     }
 
     // ------------------------------------------------------------------
@@ -505,23 +638,42 @@ impl<B: DecodeBackend> InstanceCore<B> {
     // ------------------------------------------------------------------
 
     /// Destination: stash the Stage-1 bulk payload (phase 3 unpack).
+    /// Idempotent: a retransmitted or duplicated Stage-1 for an order
+    /// already stored — or already fully applied — is ignored.
     pub fn handle_stage1(&mut self, msg: Stage1Msg<B>) -> Result<()> {
-        self.backend.stage1_store(msg.from, msg.kv)
+        if self.applied_orders.contains(&msg.order) || !self.stage1_seen.insert(msg.order) {
+            return Ok(());
+        }
+        self.backend.stage1_store(msg.order, msg.from, msg.kv)
     }
 
     /// Destination: merge the Stage-2 delta, rebuild and park the
     /// migrated samples, and enqueue transferred waiting tasks.
-    pub fn handle_stage2(&mut self, msg: Stage2Msg<B>) -> Result<()> {
+    ///
+    /// Idempotent on the order id: duplicates report
+    /// [`Stage2Disposition::Duplicate`] and change nothing; a KV-carrying
+    /// packet whose Stage-1 has not arrived reports
+    /// [`Stage2Disposition::AwaitingStage1`] and changes nothing (the
+    /// source retransmits both stages).
+    pub fn handle_stage2(&mut self, msg: Stage2Msg<B>) -> Result<Stage2Disposition> {
+        if self.applied_orders.contains(&msg.order) {
+            return Ok(Stage2Disposition::Duplicate);
+        }
+        if msg.kv_delta.is_some() && !self.stage1_seen.contains(&msg.order) {
+            return Ok(Stage2Disposition::AwaitingStage1);
+        }
         self.metrics.samples_migrated_in += msg.waiting_tasks.len() as u64;
         for t in msg.waiting_tasks {
             self.waiting.push(t);
         }
         if let Some(delta) = msg.kv_delta {
-            let samples = self.backend.stage2_restore(msg.from, delta, msg.control)?;
+            let samples = self.backend.stage2_restore(msg.order, msg.from, delta, msg.control)?;
             for s in samples {
                 self.insert_parked(s);
             }
         }
-        Ok(())
+        self.applied_orders.insert(msg.order);
+        self.stage1_seen.remove(&msg.order);
+        Ok(Stage2Disposition::Applied)
     }
 }

@@ -63,11 +63,15 @@ use crate::utils::stats::Ema;
 
 enum Cmd {
     Add(Vec<SampleTask>),
-    MigrateOut { to: usize, count: usize },
-    AllocAck { ok: bool },
+    MigrateOut { to: usize, count: usize, order: u64 },
+    AllocAck { order: u64, ok: bool },
     DeliverAllocReq(AllocRequest),
     DeliverStage1(Stage1Msg<PjrtBackend>),
     DeliverStage2(Stage2Msg<PjrtBackend>),
+    /// Source-side confirmation that `order`'s Stage-2 was relayed:
+    /// releases the endpoint's limbo copy. The monitor's channels are
+    /// reliable FIFO, so relay time is commit time on this plane.
+    ConfirmOrder(u64),
     /// Broadcast fresh actor/draft weights (next RLHF iteration).
     UpdateWeights(Vec<HostTensor>, Vec<HostTensor>),
     /// Emit a Done report for the current batch but keep running.
@@ -88,6 +92,7 @@ enum Event {
     },
     AllocAck {
         to_source: usize,
+        order: u64,
         ok: bool,
     },
     Stage1 {
@@ -264,9 +269,11 @@ impl Worker {
         }
     }
 
-    /// Emit a pending Stage-2 packet, if the endpoint has one ready.
+    /// Emit every pending Stage-2 packet the endpoint has ready —
+    /// batched multi-destination order sets can have several handshakes
+    /// reach their step boundary at once.
     fn pump_stage2(&mut self) {
-        if let Some(pkt) = self.core.poll_stage2() {
+        while let Some(pkt) = self.core.poll_stage2() {
             let _ = self.events.send(Event::Stage2 { to: pkt.to, pkt });
         }
     }
@@ -278,18 +285,20 @@ impl Worker {
                     self.core.add_task(t);
                 }
             }
-            Cmd::MigrateOut { to, count } => match self.core.begin_migration(to, count) {
-                MigrateStart::Refused => {
-                    let _ = self.events.send(Event::MigrationRefused);
+            Cmd::MigrateOut { to, count, order } => {
+                match self.core.begin_migration(to, count, order) {
+                    MigrateStart::Refused => {
+                        let _ = self.events.send(Event::MigrationRefused);
+                    }
+                    MigrateStart::QueueOnly(pkt) => {
+                        let _ = self.events.send(Event::Stage2 { to: pkt.to, pkt });
+                    }
+                    MigrateStart::AllocReq(req) => {
+                        let _ = self.events.send(Event::AllocReq { to, req });
+                    }
                 }
-                MigrateStart::QueueOnly(pkt) => {
-                    let _ = self.events.send(Event::Stage2 { to: pkt.to, pkt });
-                }
-                MigrateStart::AllocReq(req) => {
-                    let _ = self.events.send(Event::AllocReq { to, req });
-                }
-            },
-            Cmd::AllocAck { ok } => match self.core.handle_alloc_ack(ok) {
+            }
+            Cmd::AllocAck { order, ok } => match self.core.handle_alloc_ack(order, ok) {
                 AckOutcome::NoPending => {}
                 AckOutcome::Refused => {
                     let _ = self.events.send(Event::MigrationRefused);
@@ -302,11 +311,15 @@ impl Worker {
                 let ok = self.core.handle_alloc_req(&req);
                 let _ = self.events.send(Event::AllocAck {
                     to_source: req.from_instance,
+                    order: req.order,
                     ok,
                 });
             }
             Cmd::DeliverStage1(pkt) => self.core.handle_stage1(pkt)?,
-            Cmd::DeliverStage2(pkt) => self.core.handle_stage2(pkt)?,
+            Cmd::DeliverStage2(pkt) => {
+                self.core.handle_stage2(pkt)?;
+            }
+            Cmd::ConfirmOrder(order) => self.core.confirm_order(order),
             Cmd::UpdateWeights(tw, dw) => {
                 self.core.backend.target.set_weights(&tw)?;
                 self.core.backend.draft.set_weights(&dw)?;
@@ -340,6 +353,46 @@ impl Worker {
 // ---------------------------------------------------------------------------
 // Driver
 // ---------------------------------------------------------------------------
+
+/// Wall-clock reallocation cadence for the threaded monitor loop — the
+/// real-plane port of `ClusterConfig::realloc_period_secs`. With a
+/// period set (`realloc.period_secs > 0`), decisions fire on elapsed
+/// virtual-wall-time ticks instead of the step-counter cadence, which is
+/// the meaningful schedule once instances step at different rates.
+struct ReallocTicker {
+    period: Option<f64>,
+    next_at: f64,
+}
+
+impl ReallocTicker {
+    /// A non-positive (or NaN) period disables the timed cadence — the
+    /// step-counter cadence stays in charge.
+    fn new(period_secs: f64) -> Self {
+        let period = (period_secs > 0.0).then_some(period_secs);
+        ReallocTicker { period, next_at: period.unwrap_or(0.0) }
+    }
+
+    /// True when the timed cadence (rather than the step cadence)
+    /// governs decision scheduling.
+    fn timed(&self) -> bool {
+        self.period.is_some()
+    }
+
+    /// One decision tick is due at `now` (seconds since run start)?
+    /// Fires at most once per call; a monitor that slept through several
+    /// periods (one long decode step) gets a single catch-up tick, and
+    /// the schedule stays anchored to the period grid (no drift).
+    fn due(&mut self, now: f64) -> bool {
+        let Some(p) = self.period else { return false };
+        if now < self.next_at {
+            return false;
+        }
+        while self.next_at <= now {
+            self.next_at += p;
+        }
+        true
+    }
+}
 
 /// Assemble the final [`GenerationReport`] from the monitor accumulators
 /// (shared by `run_batch` and `run_streaming`).
@@ -385,6 +438,10 @@ pub struct GenerationService {
     /// Streaming arrival queue: (offset seconds from `run_streaming`
     /// start, task), fed by [`GenerationService::submit`].
     arrival_queue: Vec<(f64, SampleTask)>,
+    /// Next cluster-unique migration-order sequence number. Monotone
+    /// across batches, so a stale Stage-2 from a previous batch can
+    /// never collide with a live order's dedup key.
+    next_order: u64,
 }
 
 impl GenerationService {
@@ -397,6 +454,19 @@ impl GenerationService {
         target_weights: &[HostTensor],
         draft_weights: &[HostTensor],
     ) -> Result<GenerationService> {
+        // The real plane's carrier is in-process channels — reliable
+        // FIFO by construction, so a `[transport]` fault model cannot
+        // be honored here. Reject it loudly rather than silently
+        // ignoring the config (fault injection on the threaded driver
+        // is a ROADMAP follow-up; the simulated plane honors the same
+        // section via `ClusterConfig::transport`).
+        if !cfg.transport.is_perfect() {
+            return Err(anyhow!(
+                "[transport] fault probabilities are set, but the threaded driver's \
+                 in-process channels are reliable and cannot inject faults; use the \
+                 simulation plane (ClusterConfig::transport) for fault schedules"
+            ));
+        }
         let n_inst = cfg.rlhf.instances.max(1);
         let manifest = Manifest::load(artifacts_dir)?;
         let (ev_tx, ev_rx) = channel::<Event>();
@@ -457,6 +527,7 @@ impl GenerationService {
             realloc: Reallocator::new(cfg.realloc.threshold, cfg.realloc.cooldown as u64),
             mode,
             arrival_queue: Vec::new(),
+            next_order: 1,
         })
     }
 
@@ -535,8 +606,8 @@ impl GenerationService {
                 let _ = self.cmd_txs[to].send(Cmd::DeliverAllocReq(req));
                 None
             }
-            Event::AllocAck { to_source, ok } => {
-                let _ = self.cmd_txs[to_source].send(Cmd::AllocAck { ok });
+            Event::AllocAck { to_source, order, ok } => {
+                let _ = self.cmd_txs[to_source].send(Cmd::AllocAck { order, ok });
                 None
             }
             Event::Stage1 { to, pkt } => {
@@ -544,7 +615,12 @@ impl GenerationService {
                 None
             }
             Event::Stage2 { to, pkt } => {
+                let (src, order) = (pkt.from, pkt.order);
                 let _ = self.cmd_txs[to].send(Cmd::DeliverStage2(pkt));
+                // In-process channels are reliable FIFO: once the Stage-2
+                // is relayed it *will* apply, so the source can release
+                // its limbo copy now.
+                let _ = self.cmd_txs[src].send(Cmd::ConfirmOrder(order));
                 None
             }
             Event::MigrationRefused => {
@@ -554,6 +630,32 @@ impl GenerationService {
             }
             other => Some(other),
         }
+    }
+
+    /// Plan one reallocation decision (classic pairing, or the batched
+    /// multi-destination order set under `realloc.multi_dest`) and
+    /// dispatch each order to its source worker with a fresh
+    /// cluster-unique order id. The workers' hardened endpoints run the
+    /// handshakes concurrently — one batched set opens several at once.
+    /// Returns the number of orders issued.
+    fn dispatch_plan(&mut self, step: u64, counts: &[usize], caps: &[usize]) -> u64 {
+        let plan = if self.cfg.realloc.multi_dest {
+            self.realloc.decide_batched(step, counts, caps)
+        } else {
+            self.realloc.decide(step, counts, caps)
+        };
+        let mut issued = 0;
+        for m in plan {
+            let order = self.next_order;
+            self.next_order += 1;
+            issued += 1;
+            let _ = self.cmd_txs[m.from].send(Cmd::MigrateOut {
+                to: m.to,
+                count: m.count,
+                order,
+            });
+        }
+        issued
     }
 
     /// Process one batch of samples to completion (one generation stage).
@@ -585,6 +687,7 @@ impl GenerationService {
         let mut done_reports: BTreeMap<usize, InstanceReport> = BTreeMap::new();
         let mut all_finished: Vec<FinishedSample> = Vec::new();
         let mut refusals = 0u64;
+        let mut ticker = ReallocTicker::new(self.cfg.realloc.period_secs);
 
         loop {
             // Generous stall timeout: a worker's FIRST step lazily
@@ -615,10 +718,15 @@ impl GenerationService {
                     step += 1;
                     self.realloc.observe(sample_count.max(1), throughput);
 
-                    if self.cfg.realloc.enabled
-                        && !reported
-                        && self.realloc.should_decide(step, &counts)
-                    {
+                    // Timed cadence (realloc.period_secs) fires on the
+                    // wall clock; otherwise the step-counter cadence.
+                    let due = if ticker.timed() {
+                        ticker.due(t0.elapsed().as_secs_f64())
+                            && self.realloc.inefficiency(&counts)
+                    } else {
+                        self.realloc.should_decide(step, &counts)
+                    };
+                    if self.cfg.realloc.enabled && !reported && due {
                         let sw = Instant::now();
                         self.realloc.refit_threshold();
                         let caps: Vec<usize> = vec![
@@ -631,15 +739,8 @@ impl GenerationService {
                                 * 4;
                             n_inst
                         ];
-                        let plan = self.realloc.decide(step, &counts, &caps);
+                        migrations += self.dispatch_plan(step, &counts, &caps);
                         srd_secs += sw.elapsed().as_secs_f64();
-                        for m in plan {
-                            migrations += 1;
-                            let _ = self.cmd_txs[m.from].send(Cmd::MigrateOut {
-                                to: m.to,
-                                count: m.count,
-                            });
-                        }
                     }
 
                     if !reported && finished_counts.iter().sum::<usize>() >= expected {
@@ -723,6 +824,7 @@ impl GenerationService {
         let mut done_reports: BTreeMap<usize, InstanceReport> = BTreeMap::new();
         let mut all_finished: Vec<FinishedSample> = Vec::new();
         let mut refusals = 0u64;
+        let mut ticker = ReallocTicker::new(self.cfg.realloc.period_secs);
 
         if expected == 0 {
             return Ok(assemble_report(
@@ -801,21 +903,17 @@ impl GenerationService {
                     let saturated = counts.iter().all(|&c| c >= cap);
                     self.realloc.note_backlog(saturated as usize);
 
-                    if self.cfg.realloc.enabled
-                        && !reported
-                        && self.realloc.should_decide(step, &counts)
-                    {
+                    let due = if ticker.timed() {
+                        ticker.due(t0.elapsed().as_secs_f64())
+                            && self.realloc.inefficiency(&counts)
+                    } else {
+                        self.realloc.should_decide(step, &counts)
+                    };
+                    if self.cfg.realloc.enabled && !reported && due {
                         let sw = Instant::now();
                         self.realloc.refit_threshold();
-                        let plan = self.realloc.decide(step, &counts, &caps);
+                        migrations += self.dispatch_plan(step, &counts, &caps);
                         srd_secs += sw.elapsed().as_secs_f64();
-                        for m in plan {
-                            migrations += 1;
-                            let _ = self.cmd_txs[m.from].send(Cmd::MigrateOut {
-                                to: m.to,
-                                count: m.count,
-                            });
-                        }
                     }
 
                     if !reported
@@ -917,5 +1015,56 @@ mod tests {
         let r = report(2.0, 100, 4);
         assert!((r.throughput_tokens() - 50.0).abs() < 1e-9);
         assert!((r.throughput_samples() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn start_rejects_faulty_transport_on_the_real_plane() {
+        // The `[transport]` section is honored by the sim plane; the
+        // threaded driver's channels are reliable, so a fault schedule
+        // there must error loudly instead of silently doing nothing.
+        // (Checked before artifact loading, so this needs no PJRT.)
+        let mut cfg = RunConfig::default();
+        cfg.set("transport.stage2.drop_prob", "0.5").unwrap();
+        let err = GenerationService::start(
+            std::path::Path::new("/nonexistent"),
+            &cfg,
+            DecodeMode::Ar,
+            &[],
+            &[],
+        )
+        .err()
+        .expect("faulty transport must be rejected");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("transport"), "{msg}");
+    }
+
+    #[test]
+    fn realloc_ticker_fires_on_period_grid() {
+        let mut t = ReallocTicker::new(0.5);
+        assert!(t.timed());
+        assert!(!t.due(0.0));
+        assert!(!t.due(0.49));
+        assert!(t.due(0.5), "first tick at one period");
+        assert!(!t.due(0.6), "tick consumed until the next period");
+        assert!(t.due(1.01));
+    }
+
+    #[test]
+    fn realloc_ticker_collapses_missed_periods() {
+        // A monitor that slept through several periods (one long decode
+        // step) gets exactly one catch-up tick, re-anchored on the grid.
+        let mut t = ReallocTicker::new(0.25);
+        assert!(t.due(1.6), "first poll after 6+ periods fires once");
+        assert!(!t.due(1.7), "missed periods are not replayed");
+        assert!(t.due(1.75), "next grid point still fires");
+    }
+
+    #[test]
+    fn realloc_ticker_disabled_by_nonpositive_period() {
+        for p in [0.0, -1.0, f64::NAN] {
+            let mut t = ReallocTicker::new(p);
+            assert!(!t.timed());
+            assert!(!t.due(1e9));
+        }
     }
 }

@@ -195,9 +195,9 @@ pub struct PjrtBackend {
     batch_target: Option<BatchedCache>,
     batch_draft: Option<BatchedCache>,
     batch_dirty: bool,
-    /// Stage-1 buffers keyed by source instance:
+    /// Stage-1 buffers keyed by migration order:
     /// (draft, target) caches + sample ids.
-    mig_in: BTreeMap<usize, (Vec<(KvCache, KvCache)>, Vec<u64>)>,
+    mig_in: BTreeMap<u64, (Vec<(KvCache, KvCache)>, Vec<u64>)>,
     started: Instant,
 }
 
@@ -840,8 +840,8 @@ impl DecodeBackend for PjrtBackend {
     }
 
     /// Phase 3: unpack the Stage-1 bulk into fresh per-sample caches
-    /// immediately, keyed by source instance.
-    fn stage1_store(&mut self, from: usize, kv: HierarchicalKv) -> Result<()> {
+    /// immediately, keyed by migration order.
+    fn stage1_store(&mut self, order: u64, _from: usize, kv: HierarchicalKv) -> Result<()> {
         let man = self.engine.manifest.clone();
         let n = kv.spans.len();
         let mut caches: Vec<(KvCache, KvCache)> = (0..n)
@@ -872,7 +872,7 @@ impl DecodeBackend for PjrtBackend {
             unpack_hierarchical(&kv, &mut drafts, &mut targets);
         }
         let ids = kv.spans.iter().map(|s| s.id).collect();
-        self.mig_in.insert(from, (caches, ids));
+        self.mig_in.insert(order, (caches, ids));
         Ok(())
     }
 
@@ -880,11 +880,12 @@ impl DecodeBackend for PjrtBackend {
     /// samples from their control snapshots.
     fn stage2_restore(
         &mut self,
-        from: usize,
+        order: u64,
+        _from: usize,
         delta: HierarchicalKv,
         control: Vec<SampleControl>,
     ) -> Result<Vec<LiveSample>> {
-        let (mut caches, ids) = self.mig_in.remove(&from).unwrap_or_default();
+        let (mut caches, ids) = self.mig_in.remove(&order).unwrap_or_default();
         if !delta.spans.is_empty() {
             // Delta spans arrive in Stage-1 order (an order-preserving
             // subset: victims that finished during the overlap step were

@@ -43,6 +43,10 @@ pub struct InstanceMetrics {
     pub samples_migrated_in: u64,
     /// Samples that left via the §6.2 migration protocol.
     pub samples_migrated_out: u64,
+    /// Outbound migration orders this instance aborted after a handshake
+    /// timeout on an unreliable transport (victims returned to the local
+    /// batch; see `InstanceCore::abort_handshake`).
+    pub orders_aborted: u64,
     /// (wall_clock_secs, tokens_out cumulative, live samples) trace rows
     /// for throughput-over-time figures.
     pub trace: Vec<(f64, u64, usize)>,

@@ -135,6 +135,11 @@ pub fn unpack_hierarchical(
 /// Allocation handshake request (§6.2 phase 2): sent before any KV bytes.
 #[derive(Clone, Debug)]
 pub struct AllocRequest {
+    /// Cluster-unique migration-order sequence number. Ties the whole
+    /// `AllocReq → AllocAck → Stage1 → Stage2` exchange together so
+    /// unreliable transports can retransmit and endpoints can dedup
+    /// without confusing concurrent orders.
+    pub order: u64,
     /// Source instance id.
     pub from_instance: usize,
     /// Ids of the live victims whose KV would transfer.

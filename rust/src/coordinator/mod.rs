@@ -26,6 +26,11 @@
 //!   constraints, cooldown.
 //! * [`migration`] — two-stage KV migration payloads (§6.2): hierarchical
 //!   packing, allocation handshake types, compute/transfer overlap.
+//! * [`transport`] — the message-transport abstraction under the §6.2
+//!   protocol: per-class fault profiles (`[transport]` config section),
+//!   the perfect transport (today's behavior), and the reliability knobs
+//!   (retransmit timer/budget, handshake timeout) the hardened endpoint
+//!   honors. The unreliable implementation lives in [`crate::sim::link`].
 //! * [`instance`] — the PJRT backend: the speculative round phases
 //!   (draft → verify → accept → commit) over compiled executables.
 //! * [`driver`] — multi-instance generation: worker threads, initial
@@ -51,3 +56,4 @@ pub mod migration;
 pub mod predictor;
 pub mod reallocator;
 pub mod selector;
+pub mod transport;

@@ -282,6 +282,74 @@ impl Reallocator {
         out
     }
 
+    /// Batched multi-destination pairing: like [`Reallocator::decide`],
+    /// but the paper's `m(k) ≤ 1` participation limit is lifted — a
+    /// source's full surplus is split across **several** underloaded
+    /// destinations, and a destination's full deficit may be served by
+    /// several sources. One order per `(from, to)` pair; the whole set
+    /// is one decision. Requires the hardened per-order migration
+    /// endpoint (concurrent outbound handshakes with disjoint victims).
+    ///
+    /// Sources are drained largest-surplus-first into
+    /// largest-deficit-first destinations, so the skew extremes still
+    /// pair up exactly as in the paper's greedy scheme.
+    pub fn decide_batched(
+        &mut self,
+        step: u64,
+        counts: &[usize],
+        capacity: &[usize],
+    ) -> Vec<MigrationOrder> {
+        self.last_decision = step;
+        self.decisions += 1;
+
+        let mut order: Vec<usize> = (0..counts.len()).collect();
+        order.sort_by_key(|&i| counts[i] as isize - self.threshold_of(i) as isize);
+
+        // Destinations keep their *remaining* deficit; most-underloaded
+        // first (same sort the uniform scheme uses).
+        let mut deficits: Vec<(usize, usize)> = order
+            .iter()
+            .copied()
+            .filter(|&i| counts[i] < self.threshold_of(i))
+            .map(|i| {
+                let d = (self.threshold_of(i) - counts[i])
+                    .min(capacity[i].saturating_sub(counts[i]));
+                (i, d)
+            })
+            .collect();
+        let srcs: Vec<usize> = order
+            .iter()
+            .copied()
+            .filter(|&i| counts[i] > self.threshold_of(i))
+            .collect();
+
+        let mut out = Vec::new();
+        let mut di = 0usize;
+        for &s in srcs.iter().rev() {
+            let mut surplus = counts[s] - self.threshold_of(s);
+            while surplus > 0 && di < deficits.len() {
+                let (d, deficit) = &mut deficits[di];
+                if *deficit == 0 {
+                    di += 1;
+                    continue;
+                }
+                let k = surplus.min(*deficit);
+                let to = *d;
+                *deficit -= k;
+                let filled = *deficit == 0;
+                out.push(MigrationOrder { from: s, to, count: k });
+                surplus -= k;
+                if filled {
+                    di += 1;
+                }
+            }
+            if di >= deficits.len() {
+                break;
+            }
+        }
+        out
+    }
+
     /// Total (count, throughput) operating points recorded across tiers.
     pub fn observations(&self) -> usize {
         self.obs.iter().map(|o| o.len()).sum()
@@ -297,6 +365,51 @@ pub fn plan_satisfies_constraints(
     plan: &[MigrationOrder],
 ) -> bool {
     plan_satisfies_constraints_tiered(counts, capacity, &vec![threshold; counts.len()], plan)
+}
+
+/// Constraint check for batched multi-destination plans
+/// ([`Reallocator::decide_batched`]): the `m(k) ≤ 1` participation limit
+/// is replaced by (a) one order per `(from, to)` pair, (b) no instance
+/// acting as both source and destination; sources never drop below their
+/// threshold, destinations never exceed theirs (or their capacity).
+pub fn plan_satisfies_constraints_batched(
+    counts: &[usize],
+    capacity: &[usize],
+    thresholds: &[usize],
+    plan: &[MigrationOrder],
+) -> bool {
+    let mut next = counts.to_vec();
+    let mut pairs: Vec<(usize, usize)> = Vec::with_capacity(plan.len());
+    let mut is_src = vec![false; counts.len()];
+    let mut is_dst = vec![false; counts.len()];
+    for m in plan {
+        if m.from == m.to || m.count == 0 {
+            return false;
+        }
+        if pairs.contains(&(m.from, m.to)) {
+            return false; // duplicate (from, to) order in one decision
+        }
+        pairs.push((m.from, m.to));
+        is_src[m.from] = true;
+        is_dst[m.to] = true;
+        if next[m.from] < m.count {
+            return false;
+        }
+        next[m.from] -= m.count;
+        next[m.to] += m.count;
+    }
+    if is_src.iter().zip(&is_dst).any(|(&s, &d)| s && d) {
+        return false; // an instance cannot shed and absorb in one decision
+    }
+    for m in plan {
+        if next[m.from] < thresholds[m.from] {
+            return false;
+        }
+        if next[m.to] > thresholds[m.to] || next[m.to] > capacity[m.to] {
+            return false;
+        }
+    }
+    true
 }
 
 /// Eq-6 constraint check against per-instance thresholds (mixed fleets).
@@ -499,6 +612,73 @@ mod tests {
         assert!((2..=5).contains(&r.threshold_of(0)), "{}", r.threshold_of(0));
         assert!((10..=16).contains(&r.threshold_of(1)), "{}", r.threshold_of(1));
         assert!(r.threshold_of(1) > r.threshold_of(0));
+    }
+
+    #[test]
+    fn batched_splits_one_source_across_three_destinations() {
+        // One heavily loaded source, three starved destinations: the
+        // batched planner must emit one order per destination (1 → ≥3),
+        // which the single-destination scheme cannot do.
+        let mut r = Reallocator::new(8, 1);
+        let counts = [32, 2, 3, 4];
+        let caps = caps(4);
+        let plan = r.decide_batched(1, &counts, &caps);
+        assert_eq!(plan.len(), 3, "{plan:?}");
+        assert!(plan.iter().all(|m| m.from == 0), "{plan:?}");
+        let mut tos: Vec<usize> = plan.iter().map(|m| m.to).collect();
+        tos.sort_unstable();
+        assert_eq!(tos, vec![1, 2, 3]);
+        // Deficits filled exactly: dest k ends at the threshold.
+        assert_eq!(
+            plan.iter().map(|m| m.count).sum::<usize>(),
+            (8 - 2) + (8 - 3) + (8 - 4)
+        );
+        assert!(plan_satisfies_constraints_batched(&counts, &caps, &[8; 4], &plan));
+        // The classic scheme pairs the source with only one destination.
+        let mut uni = Reallocator::new(8, 1);
+        assert_eq!(uni.decide(1, &counts, &caps).len(), 1);
+    }
+
+    #[test]
+    fn batched_multiple_sources_fill_one_deep_deficit() {
+        // Two mildly overloaded sources, one deep deficit: both sources
+        // contribute (lifted m(k) ≤ 1 on the destination side too).
+        let mut r = Reallocator::new(10, 1);
+        let counts = [13, 12, 1];
+        let caps = caps(3);
+        let plan = r.decide_batched(1, &counts, &caps);
+        assert_eq!(plan.len(), 2, "{plan:?}");
+        assert!(plan.iter().all(|m| m.to == 2));
+        assert_eq!(plan.iter().map(|m| m.count).sum::<usize>(), 5);
+        assert!(plan_satisfies_constraints_batched(&counts, &caps, &[10; 3], &plan));
+    }
+
+    #[test]
+    fn batched_equals_classic_when_one_pair_suffices() {
+        // Single source, single destination: both planners agree.
+        let counts = [24, 1];
+        let mut a = Reallocator::new(6, 1);
+        let mut b = Reallocator::new(6, 1);
+        assert_eq!(
+            a.decide(1, &counts, &caps(2)),
+            b.decide_batched(1, &counts, &caps(2))
+        );
+    }
+
+    #[test]
+    fn property_batched_constraints_always_hold() {
+        testutil::check("batched-constraints", 300, |rng| {
+            let n = rng.range(2, 12);
+            let th = rng.range(2, 12);
+            let counts: Vec<usize> = (0..n).map(|_| rng.below(40)).collect();
+            let capacity: Vec<usize> = counts.iter().map(|&c| c + rng.below(32)).collect();
+            let mut r = Reallocator::new(th, 1);
+            let plan = r.decide_batched(1, &counts, &capacity);
+            assert!(
+                plan_satisfies_constraints_batched(&counts, &capacity, &vec![th; n], &plan),
+                "counts={counts:?} th={th} plan={plan:?}"
+            );
+        });
     }
 
     #[test]

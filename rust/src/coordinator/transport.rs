@@ -1,0 +1,340 @@
+//! Transport abstraction for the §6.2 migration protocol.
+//!
+//! Every protocol message — `AllocReq → AllocAck → Stage1 → Stage2` plus
+//! the Stage-2 acknowledgement that confirms an order — crosses a
+//! [`Transport`]. A transport does not *carry* payloads (the carriers —
+//! the threaded driver's channels and the virtual cluster's event heap —
+//! own delivery); it *plans* each send: how many copies arrive and with
+//! how much extra delay. That keeps the fault model in one place and the
+//! carriers oblivious to it:
+//!
+//! * [`PerfectTransport`] — every message delivered exactly once with no
+//!   extra delay. This is today's behavior: carriers detect it via
+//!   [`Transport::is_perfect`] and take their zero-overhead synchronous
+//!   paths, so fault-free runs stay bit-identical to the pre-transport
+//!   code.
+//! * [`crate::sim::link::FaultyLink`] — seeded, schedulable faults on the
+//!   virtual link: per-[`MsgClass`] drop/duplicate/reorder probabilities
+//!   and bounded extra delay, drawn from a salted deterministic RNG
+//!   stream so any fault schedule replays bit-for-bit.
+//!
+//! The endpoint ([`crate::coordinator::core::InstanceCore`]) is hardened
+//! against whatever a transport does: per-order sequence numbers,
+//! idempotent Stage-1/Stage-2 apply (dedup on the order id), and — on the
+//! source — a limbo buffer that holds shipped victims until the order is
+//! confirmed, so retransmits cannot lose, duplicate, or double-count a
+//! sample. See `docs/ARCHITECTURE.md` ("Transport & fault plane").
+
+use anyhow::{bail, Result};
+
+/// The §6.2 protocol message classes a transport can fault independently.
+///
+/// Acknowledgements (`AllocAck` and the Stage-2 confirmation) share the
+/// [`MsgClass::AllocAck`] fault profile: both are small control replies
+/// riding the same reverse path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MsgClass {
+    /// §6.2 phase-2 allocation request (source → destination).
+    AllocReq,
+    /// Allocation reply and the Stage-2 confirmation (destination →
+    /// source).
+    AllocAck,
+    /// Stage-1 bulk KV snapshot (source → destination).
+    Stage1,
+    /// Stage-2 delta + control state — the commit message (source →
+    /// destination).
+    Stage2,
+}
+
+/// Fault probabilities of one message class.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultProfile {
+    /// Probability a message copy is silently lost.
+    pub drop_prob: f64,
+    /// Probability an extra duplicate copy is delivered (with its own
+    /// random extra delay, so duplicates also reorder).
+    pub dup_prob: f64,
+    /// Probability the (surviving) copy is delayed by a uniform draw in
+    /// `[0, extra_delay_secs]` — at non-zero delay this reorders it
+    /// against later traffic.
+    pub reorder_prob: f64,
+    /// Upper bound of the injected extra delay, in link seconds.
+    pub extra_delay_secs: f64,
+}
+
+impl FaultProfile {
+    /// A profile that never faults (all probabilities zero).
+    pub fn perfect() -> Self {
+        FaultProfile::default()
+    }
+
+    /// True when this profile can never drop, duplicate, or delay.
+    pub fn is_perfect(&self) -> bool {
+        self.drop_prob <= 0.0 && self.dup_prob <= 0.0 && self.reorder_prob <= 0.0
+    }
+
+    /// Uniform profile: the same drop/dup/reorder probabilities with a
+    /// delay bound.
+    pub fn uniform(drop: f64, dup: f64, reorder: f64, extra_delay_secs: f64) -> Self {
+        FaultProfile { drop_prob: drop, dup_prob: dup, reorder_prob: reorder, extra_delay_secs }
+    }
+}
+
+/// The `[transport]` configuration section: per-class fault profiles plus
+/// the reliability knobs of the hardened endpoint protocol.
+///
+/// Reliability layer semantics (implemented by the carriers):
+///
+/// * while an order is in its *handshake* phase (AllocReq sent, no ack
+///   yet) the source retransmits every [`TransportConfig::retransmit_secs`]
+///   up to [`TransportConfig::retransmit_budget`] times; exceeding the
+///   budget — or the hard [`TransportConfig::handshake_timeout_secs`]
+///   deadline — **aborts** the order and returns its victims to the
+///   source batch (nothing has left the source yet);
+/// * once Stage 1/Stage 2 are in flight the order is *committed*:
+///   retransmission is unbounded (the victims sit in the source's limbo
+///   buffer until the destination's confirmation arrives), because an
+///   abort after the commit point could duplicate samples.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TransportConfig {
+    /// Fault profile of [`MsgClass::AllocReq`] messages.
+    pub alloc_req: FaultProfile,
+    /// Fault profile of [`MsgClass::AllocAck`] messages (allocation
+    /// replies *and* Stage-2 confirmations).
+    pub alloc_ack: FaultProfile,
+    /// Fault profile of [`MsgClass::Stage1`] messages.
+    pub stage1: FaultProfile,
+    /// Fault profile of [`MsgClass::Stage2`] messages.
+    pub stage2: FaultProfile,
+    /// Retransmission timer (seconds on the carrier's clock).
+    pub retransmit_secs: f64,
+    /// Handshake retransmissions before the order aborts.
+    pub retransmit_budget: usize,
+    /// Hard wall for the handshake phase: if no allocation reply arrived
+    /// this many seconds after the first AllocReq, the order aborts even
+    /// with retransmit budget left.
+    pub handshake_timeout_secs: f64,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig {
+            alloc_req: FaultProfile::perfect(),
+            alloc_ack: FaultProfile::perfect(),
+            stage1: FaultProfile::perfect(),
+            stage2: FaultProfile::perfect(),
+            retransmit_secs: 0.02,
+            retransmit_budget: 5,
+            handshake_timeout_secs: 0.25,
+        }
+    }
+}
+
+impl TransportConfig {
+    /// True when every class profile is fault-free — carriers then take
+    /// their synchronous zero-overhead paths (today's behavior).
+    pub fn is_perfect(&self) -> bool {
+        self.alloc_req.is_perfect()
+            && self.alloc_ack.is_perfect()
+            && self.stage1.is_perfect()
+            && self.stage2.is_perfect()
+    }
+
+    /// The same fault profile on every message class.
+    pub fn uniform(profile: FaultProfile) -> Self {
+        TransportConfig {
+            alloc_req: profile,
+            alloc_ack: profile,
+            stage1: profile,
+            stage2: profile,
+            ..TransportConfig::default()
+        }
+    }
+
+    /// The fault profile of one message class.
+    pub fn profile(&self, class: MsgClass) -> FaultProfile {
+        match class {
+            MsgClass::AllocReq => self.alloc_req,
+            MsgClass::AllocAck => self.alloc_ack,
+            MsgClass::Stage1 => self.stage1,
+            MsgClass::Stage2 => self.stage2,
+        }
+    }
+
+    /// Set one `[transport]` config key (the part after `transport.`).
+    ///
+    /// Bare keys (`drop_prob`, `dup_prob`, `reorder_prob`,
+    /// `extra_delay_secs`) apply to **all four** classes; class-scoped
+    /// keys (`stage2.drop_prob`, `alloc_ack.dup_prob`, …) target one.
+    /// `retransmit_secs`, `retransmit_budget` and
+    /// `handshake_timeout_secs` set the reliability knobs.
+    pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
+        let f = |v: &str| -> Result<f64> {
+            v.parse()
+                .map_err(|_| anyhow::anyhow!("expected float, got {v:?}"))
+        };
+        let u = |v: &str| -> Result<usize> {
+            v.parse()
+                .map_err(|_| anyhow::anyhow!("expected int, got {v:?}"))
+        };
+        match key {
+            "retransmit_secs" => self.retransmit_secs = f(val)?,
+            "retransmit_budget" => self.retransmit_budget = u(val)?,
+            "handshake_timeout_secs" => self.handshake_timeout_secs = f(val)?,
+            "drop_prob" => {
+                let x = f(val)?;
+                self.set_all(|p| p.drop_prob = x);
+            }
+            "dup_prob" => {
+                let x = f(val)?;
+                self.set_all(|p| p.dup_prob = x);
+            }
+            "reorder_prob" => {
+                let x = f(val)?;
+                self.set_all(|p| p.reorder_prob = x);
+            }
+            "extra_delay_secs" => {
+                let x = f(val)?;
+                self.set_all(|p| p.extra_delay_secs = x);
+            }
+            _ => {
+                let Some((class, field)) = key.split_once('.') else {
+                    bail!("unknown transport key {key:?}");
+                };
+                let p = match class {
+                    "alloc_req" => &mut self.alloc_req,
+                    "alloc_ack" => &mut self.alloc_ack,
+                    "stage1" => &mut self.stage1,
+                    "stage2" => &mut self.stage2,
+                    _ => bail!("unknown transport message class {class:?}"),
+                };
+                match field {
+                    "drop_prob" => p.drop_prob = f(val)?,
+                    "dup_prob" => p.dup_prob = f(val)?,
+                    "reorder_prob" => p.reorder_prob = f(val)?,
+                    "extra_delay_secs" => p.extra_delay_secs = f(val)?,
+                    _ => bail!("unknown transport profile field {field:?}"),
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn set_all(&mut self, mut set: impl FnMut(&mut FaultProfile)) {
+        set(&mut self.alloc_req);
+        set(&mut self.alloc_ack);
+        set(&mut self.stage1);
+        set(&mut self.stage2);
+    }
+}
+
+/// A transport plans each protocol message's fate; the carrier (driver
+/// channels, sim event heap) executes the plan.
+pub trait Transport {
+    /// Plan one message send: each returned entry is one copy that will
+    /// arrive, with that copy's *extra* delay (added on top of the
+    /// carrier's base transfer time). An empty plan means the message is
+    /// lost; more than one entry means it was duplicated.
+    fn plan(&mut self, class: MsgClass, from: usize, to: usize) -> Vec<f64>;
+
+    /// True when every plan is exactly `[0.0]` — carriers may then skip
+    /// the event-driven reliability layer entirely.
+    fn is_perfect(&self) -> bool;
+
+    /// `(dropped, duplicated)` message counts injected so far.
+    fn stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
+}
+
+/// The fault-free transport: every message delivered exactly once,
+/// immediately. Draws no randomness, so runs carried over it are
+/// bit-identical to the pre-transport code.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PerfectTransport;
+
+impl Transport for PerfectTransport {
+    fn plan(&mut self, _class: MsgClass, _from: usize, _to: usize) -> Vec<f64> {
+        vec![0.0]
+    }
+
+    fn is_perfect(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_perfect() {
+        let cfg = TransportConfig::default();
+        assert!(cfg.is_perfect());
+        assert!(cfg.profile(MsgClass::Stage2).is_perfect());
+        assert!(cfg.retransmit_budget > 0);
+        assert!(cfg.handshake_timeout_secs > cfg.retransmit_secs);
+    }
+
+    #[test]
+    fn perfect_transport_plans_single_immediate_delivery() {
+        let mut t = PerfectTransport;
+        assert!(t.is_perfect());
+        for class in [MsgClass::AllocReq, MsgClass::AllocAck, MsgClass::Stage1, MsgClass::Stage2] {
+            assert_eq!(t.plan(class, 0, 1), vec![0.0]);
+        }
+        assert_eq!(t.stats(), (0, 0));
+    }
+
+    #[test]
+    fn uniform_keys_hit_every_class() {
+        let mut cfg = TransportConfig::default();
+        cfg.set("drop_prob", "0.25").unwrap();
+        cfg.set("extra_delay_secs", "0.01").unwrap();
+        for class in [MsgClass::AllocReq, MsgClass::AllocAck, MsgClass::Stage1, MsgClass::Stage2] {
+            assert_eq!(cfg.profile(class).drop_prob, 0.25);
+            assert_eq!(cfg.profile(class).extra_delay_secs, 0.01);
+        }
+        assert!(!cfg.is_perfect());
+    }
+
+    #[test]
+    fn class_scoped_keys_hit_one_class() {
+        let mut cfg = TransportConfig::default();
+        cfg.set("stage2.drop_prob", "0.5").unwrap();
+        cfg.set("alloc_ack.dup_prob", "0.125").unwrap();
+        assert_eq!(cfg.stage2.drop_prob, 0.5);
+        assert_eq!(cfg.alloc_ack.dup_prob, 0.125);
+        assert_eq!(cfg.alloc_req.drop_prob, 0.0);
+        assert!(cfg.stage1.is_perfect());
+    }
+
+    #[test]
+    fn reliability_knobs_parse() {
+        let mut cfg = TransportConfig::default();
+        cfg.set("retransmit_secs", "0.05").unwrap();
+        cfg.set("retransmit_budget", "9").unwrap();
+        cfg.set("handshake_timeout_secs", "1.5").unwrap();
+        assert_eq!(cfg.retransmit_secs, 0.05);
+        assert_eq!(cfg.retransmit_budget, 9);
+        assert_eq!(cfg.handshake_timeout_secs, 1.5);
+    }
+
+    #[test]
+    fn bad_keys_rejected() {
+        let mut cfg = TransportConfig::default();
+        assert!(cfg.set("nope", "1").is_err());
+        assert!(cfg.set("stage3.drop_prob", "1").is_err());
+        assert!(cfg.set("stage2.nope", "1").is_err());
+        assert!(cfg.set("drop_prob", "abc").is_err());
+    }
+
+    #[test]
+    fn uniform_constructor_sets_all_classes() {
+        let p = FaultProfile::uniform(0.1, 0.2, 0.3, 0.004);
+        let cfg = TransportConfig::uniform(p);
+        assert_eq!(cfg.alloc_req, p);
+        assert_eq!(cfg.stage2, p);
+        assert!(!cfg.is_perfect());
+    }
+}

@@ -135,4 +135,44 @@ mod tests {
         // Empty trace degenerates to a burst.
         assert_eq!(ArrivalProcess::trace(Vec::new()).times(2, 0), vec![0.0, 0.0]);
     }
+
+    #[test]
+    fn unsorted_and_duplicate_trace_timestamps_sort_not_error() {
+        // Pinned intent: a recorded log may be unsorted and may contain
+        // exact duplicates — the constructor sorts (it does not reject),
+        // duplicates are kept verbatim, and same-instant arrivals are
+        // ordered FIFO downstream by the event heap's seq counter, not
+        // here.
+        let p = ArrivalProcess::trace(vec![5.0, 1.0, 5.0, 1.0]);
+        assert_eq!(p.times(4, 0), vec![1.0, 1.0, 5.0, 5.0]);
+        // Fewer samples than trace entries: front of the sorted trace.
+        assert_eq!(p.times(2, 0), vec![1.0, 1.0]);
+        // A non-finite offset clamps to t = 0 rather than poisoning the
+        // sort (total_cmp would order NaN last — an arrival that never
+        // happens).
+        assert_eq!(ArrivalProcess::trace(vec![f64::INFINITY, 1.0]).times(2, 0), vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn zero_samples_mean_no_arrivals_for_every_process() {
+        // Pinned intent: n = 0 is "no arrivals", never an error — the
+        // streaming constructor relies on this for empty workloads.
+        assert!(ArrivalProcess::poisson(8.0).times(0, 1).is_empty());
+        assert!(ArrivalProcess::poisson(0.0).times(0, 1).is_empty());
+        assert!(ArrivalProcess::burst().times(0, 1).is_empty());
+        assert!(ArrivalProcess::trace(vec![1.0]).times(0, 1).is_empty());
+    }
+
+    #[test]
+    fn zero_rate_poisson_bursts_instead_of_hanging() {
+        // Pinned intent: rate 0 (mean gap ∞) degenerates to the t = 0
+        // burst — the alternative (samples that never arrive) would hang
+        // the admission loop waiting on events that cannot fire.
+        let ts = ArrivalProcess::poisson(0.0).times(16, 3);
+        assert_eq!(ts, vec![0.0; 16]);
+        // Tiny-but-positive rates still work (no overflow/NaN).
+        let slow = ArrivalProcess::poisson(1e-6).times(4, 3);
+        assert!(slow.windows(2).all(|w| w[0] <= w[1]));
+        assert!(slow.iter().all(|t| t.is_finite() && *t >= 0.0));
+    }
 }

@@ -3,7 +3,7 @@
 //!
 //! **Event-driven core.** The cluster keeps a single time-ordered
 //! event queue (a binary heap with deterministic `(time, kind, seq)`
-//! tie-breaking over NaN-safe [`f64::total_cmp`]) holding four event
+//! tie-breaking over NaN-safe [`f64::total_cmp`]) holding seven event
 //! kinds:
 //!
 //! * **task arrival** — a streaming sample reaches the cluster
@@ -17,7 +17,18 @@
 //! * **realloc tick** — an optional fixed virtual-period reallocation
 //!   cadence ([`ClusterConfig::realloc_period_secs`]) for heterogeneous
 //!   fleets, where a global *step* counter is meaningless because fast
-//!   tiers step more often per virtual second than slow ones.
+//!   tiers step more often per virtual second than slow ones;
+//! * **control message / Stage-1 arrival / retransmit timer** — the
+//!   event-driven reliable §6.2 protocol, scheduled only on unreliable
+//!   transports ([`ClusterConfig::transport`] with any non-zero fault
+//!   probability): AllocReq/AllocAck/Stage-2-ack control traffic and the
+//!   Stage-1 bulk ride the [`FaultyLink`], and each in-flight order
+//!   keeps a retransmit timer — bounded during the handshake (then the
+//!   order aborts and its victims return to the source), unbounded once
+//!   Stage 1/2 shipped (the victims sit in the source's limbo until the
+//!   destination's ack). With every probability at 0 the perfect
+//!   transport keeps today's synchronous handshake and fault-free runs
+//!   are bit-identical to the pre-transport scheduler.
 //!
 //! Each scheduling decision is an `O(log n)` heap pop instead of the old
 //! `O(n)` laggard scan plus `O(in-flight)` arrival walk, which is what
@@ -49,19 +60,24 @@
 //! * `Naive` (ablation) — stop-and-copy: downtime is the full KV
 //!   transfer.
 
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::backend::DecodeBackend;
-use crate::coordinator::core::{AckOutcome, MigrateStart, Stage2Msg};
+use crate::coordinator::core::{
+    AckOutcome, MigrateStart, Stage1Msg, Stage2Disposition, Stage2Msg,
+};
 use crate::coordinator::metrics::LatencySummary;
-use crate::coordinator::reallocator::Reallocator;
+use crate::coordinator::migration::AllocRequest;
+use crate::coordinator::reallocator::{MigrationOrder, Reallocator};
+use crate::coordinator::transport::{MsgClass, PerfectTransport, Transport, TransportConfig};
 use crate::data::arrivals::ArrivalProcess;
 use crate::data::lengths::LengthModel;
 use crate::sim::acceptance::AcceptanceModel;
 use crate::sim::cost_model::CostModel;
 use crate::sim::engine::{SimBackend, SimInstance, SimMode, SimParams, SimSample};
+use crate::sim::link::FaultyLink;
 use crate::utils::rng::Rng;
 
 /// Salt for the arrival-time RNG stream: keeps Poisson draws independent
@@ -149,6 +165,19 @@ pub struct ClusterConfig {
     pub seed: u64,
     /// Per-instance simulation knobs.
     pub params: SimParams,
+    /// §6.2 transport fault model + reliability knobs (`[transport]`).
+    /// The default is fault-free, on which every run is bit-identical to
+    /// the pre-transport scheduler; any non-zero probability switches
+    /// migration traffic onto the event-driven reliable protocol over a
+    /// seeded [`FaultyLink`].
+    pub transport: TransportConfig,
+    /// Batched multi-destination reallocation orders
+    /// ([`Reallocator::decide_batched`]): one decision may split a
+    /// source's surplus across several destinations (and fill one deep
+    /// deficit from several sources), running the handshakes
+    /// concurrently. Off by default — the classic planner keeps the
+    /// paper's `m(k) ≤ 1` pairing and the golden outputs.
+    pub multi_dest: bool,
 }
 
 impl Default for ClusterConfig {
@@ -169,6 +198,8 @@ impl Default for ClusterConfig {
             max_tokens: 2048,
             seed: 0,
             params: SimParams::default(),
+            transport: TransportConfig::default(),
+            multi_dest: false,
         }
     }
 }
@@ -184,7 +215,8 @@ pub struct TierStats {
     pub migrated_out: u64,
     /// Samples that arrived on this tier's instances via migration.
     pub migrated_in: u64,
-    /// Migration orders this tier's sources refused mid-handshake.
+    /// Migration orders from this tier's sources that ended in refusal
+    /// (destination alloc failure or no available victims).
     pub refusals: u64,
     /// Streaming arrivals refused at admission while this tier's
     /// least-loaded instance was the closest (still full) candidate.
@@ -213,9 +245,26 @@ pub struct ClusterResult {
     pub migrations: u64,
     /// Reallocation decisions taken.
     pub realloc_decisions: u64,
-    /// Migration orders that ended in refusal (destination alloc failure
-    /// or an already-pending outbound handshake on the source).
+    /// Migration orders that ended in refusal: destination alloc
+    /// failure, or a source with nothing left to move (every candidate
+    /// victim already claimed by an in-flight order). Handshake-timeout
+    /// aborts are counted separately in
+    /// [`ClusterResult::handshake_aborts`].
     pub refusals: u64,
+    /// Migration orders attempted (victim pick ran; includes orders the
+    /// destination refused and orders the handshake timeout aborted).
+    pub orders_attempted: u64,
+    /// Link-layer retransmissions (handshake resends + committed
+    /// Stage-1/Stage-2 resends) on an unreliable transport. 0 on the
+    /// perfect transport.
+    pub retransmits: u64,
+    /// Migration orders aborted by the handshake timeout (victims
+    /// returned to the source batch). 0 on the perfect transport.
+    pub handshake_aborts: u64,
+    /// Protocol messages the link dropped (injected loss).
+    pub link_drops: u64,
+    /// Protocol messages the link duplicated (injected duplication).
+    pub link_dups: u64,
     /// Total sample downtime caused by migration (§7.7 SM).
     pub migration_downtime: f64,
     /// Mean accepted drafts per round across instances.
@@ -260,31 +309,60 @@ impl ClusterResult {
 // Event queue
 // ---------------------------------------------------------------------------
 
+/// A §6.2 control-plane message riding the (possibly faulty) link.
+/// Only scheduled on unreliable transports — the perfect transport keeps
+/// the pre-transport synchronous handshake.
+#[derive(Clone)]
+enum CtrlMsg {
+    /// Allocation request travelling source → destination.
+    AllocReq { to: usize, req: AllocRequest },
+    /// Allocation reply travelling destination → source.
+    AllocAck { order: u64, to_source: usize, ok: bool },
+    /// Stage-2 confirmation travelling destination → source: releases
+    /// the source's limbo copy and ends the order's retransmit chain.
+    Stage2Ack { order: u64, to_source: usize },
+}
+
 /// What happens at a scheduled virtual instant.
 enum EventKind {
     /// A streaming sample arrives at the cluster (continuous batching).
     TaskArrival(SimSample),
+    /// A §6.2 control message lands (unreliable transports only).
+    Ctrl(CtrlMsg),
+    /// A Stage-1 bulk packet lands (unreliable transports only — the
+    /// perfect path delivers Stage 1 synchronously inside the handshake).
+    Stage1Arrival(Stage1Msg<SimBackend>),
     /// A Stage-2 migration packet completes its virtual transfer.
     Arrival(Stage2Msg<SimBackend>),
     /// Instance `i` is ready to execute its next decode round.
     StepReady(usize),
     /// Fixed-period reallocation cadence (heterogeneous fleets).
     ReallocTick,
+    /// Retransmit-timer pop for one in-flight migration order
+    /// (unreliable transports only).
+    Retransmit { order: u64 },
 }
 
 impl EventKind {
     /// Tie-break rank at equal timestamps: task arrivals enter the
     /// admission path first (so a burst at t = 0 reproduces the
     /// batch-synchronous initial allocation before any step runs), then
-    /// Stage-2 deliveries (the laggard scan delivered at the top of every
-    /// scheduling iteration, before picking an instance to step), then
-    /// steps, then ticks.
+    /// link deliveries — control, Stage 1, Stage 2 in protocol order —
+    /// (the laggard scan delivered at the top of every scheduling
+    /// iteration, before picking an instance to step), then steps, then
+    /// ticks, then retransmit timers (a timer tied with its own ack must
+    /// lose, so the ack cancels the resend). The relative order of the
+    /// kinds a perfect-transport run schedules (arrival < Stage-2 < step
+    /// < tick) is unchanged from the pre-transport scheduler.
     fn rank(&self) -> u8 {
         match self {
             EventKind::TaskArrival(_) => 0,
-            EventKind::Arrival(_) => 1,
-            EventKind::StepReady(_) => 2,
-            EventKind::ReallocTick => 3,
+            EventKind::Ctrl(_) => 1,
+            EventKind::Stage1Arrival(_) => 2,
+            EventKind::Arrival(_) => 3,
+            EventKind::StepReady(_) => 4,
+            EventKind::ReallocTick => 5,
+            EventKind::Retransmit { .. } => 6,
         }
     }
 }
@@ -354,6 +432,35 @@ impl EventQueue {
 // Cluster
 // ---------------------------------------------------------------------------
 
+/// Source-side carrier state of one in-flight migration order on the
+/// unreliable link: the held message copies the retransmit timer resends
+/// and the handshake bookkeeping the abort deadline needs. Only
+/// populated on faulty transports — the perfect path resolves each order
+/// synchronously and never creates one.
+struct OrderState {
+    from: usize,
+    to: usize,
+    /// False while the order is in its handshake (AllocReq out, no
+    /// usable ack): resends are bounded and the order can still abort.
+    /// True once Stage 1/Stage 2 shipped: the victims sit in the
+    /// source's limbo, so resends are unbounded until the Stage-2 ack.
+    committed: bool,
+    /// Handshake retransmissions used (bounded by
+    /// [`TransportConfig::retransmit_budget`]).
+    resends: usize,
+    /// First AllocReq send instant — anchor of the
+    /// [`TransportConfig::handshake_timeout_secs`] deadline.
+    started: f64,
+    /// Held handshake request (handshake resends).
+    req: Option<AllocRequest>,
+    /// Held Stage-1 bulk copy (committed resends; dest dedups).
+    stage1: Option<Stage1Msg<SimBackend>>,
+    /// Held Stage-2 copy (committed resends; dest dedups on the order).
+    stage2: Option<Stage2Msg<SimBackend>>,
+    /// Modeled Stage-2 transfer duration, re-used by retransmissions.
+    stage2_dur: f64,
+}
+
 /// The discrete-event virtual cluster (see the module docs).
 pub struct SimCluster {
     /// Effective configuration (fleet sizes resolved).
@@ -381,6 +488,21 @@ pub struct SimCluster {
     migrations: u64,
     downtime: f64,
     steps: u64,
+    /// The §6.2 message transport: [`PerfectTransport`] when every fault
+    /// probability is 0 (synchronous handshakes, bit-identical to the
+    /// pre-transport scheduler), else a seeded [`FaultyLink`].
+    link: Box<dyn Transport>,
+    /// Cached `!link.is_perfect()`: picks the event-driven reliable
+    /// protocol over the synchronous fast path.
+    faulty: bool,
+    /// In-flight orders on the faulty path, keyed by order id.
+    orders: BTreeMap<u64, OrderState>,
+    /// Next cluster-unique migration-order sequence number.
+    next_order: u64,
+    /// Migration orders attempted (victim pick ran).
+    orders_attempted: u64,
+    /// Carrier retransmissions performed (handshake + committed).
+    retransmits: u64,
 }
 
 impl SimCluster {
@@ -460,6 +582,12 @@ impl SimCluster {
 
         let n_tiers = tiers.len();
         let arrivals = cfg.n_samples as u64;
+        let link: Box<dyn Transport> = if cfg.transport.is_perfect() {
+            Box::new(PerfectTransport)
+        } else {
+            Box::new(FaultyLink::new(cfg.transport.clone(), cfg.seed))
+        };
+        let faulty = !link.is_perfect();
         SimCluster {
             realloc,
             cfg,
@@ -477,6 +605,12 @@ impl SimCluster {
             migrations: 0,
             downtime: 0.0,
             steps: 0,
+            link,
+            faulty,
+            orders: BTreeMap::new(),
+            next_order: 1,
+            orders_attempted: 0,
+            retransmits: 0,
         }
     }
 
@@ -592,12 +726,16 @@ impl SimCluster {
 
         while let Some(ev) = q.pop() {
             // Admission headroom (sample_count < 4×capacity) only grows
-            // when a step retires samples or a reallocation round moves
-            // them off a source — arrivals and Stage-2 deliveries only
-            // add. Gate the backlog re-drain accordingly so a saturated
+            // when a step retires samples or a reallocation order moves
+            // them off a source — synchronously inside a step/tick on
+            // the perfect transport, at the AllocAck control message on
+            // a faulty one. Arrivals and Stage-2 deliveries only add.
+            // Gate the backlog re-drain accordingly so a saturated
             // burst doesn't pay an O(fleet) scan per heap event.
-            let may_free_headroom =
-                matches!(ev.kind, EventKind::StepReady(_) | EventKind::ReallocTick);
+            let may_free_headroom = matches!(
+                ev.kind,
+                EventKind::StepReady(_) | EventKind::ReallocTick | EventKind::Ctrl(_)
+            );
             match ev.kind {
                 EventKind::TaskArrival(mut s) => {
                     self.arrivals += 1;
@@ -615,32 +753,53 @@ impl SimCluster {
                         && tick_period.is_none()
                         && self.realloc.due(self.steps)
                     {
-                        for (at, pkt) in self.realloc_decide() {
-                            q.push(at, EventKind::Arrival(pkt));
-                        }
+                        self.realloc_round(&mut q);
                     }
                     if !self.instances[i].is_idle() {
                         q.push(self.instances[i].backend.next_ready(), EventKind::StepReady(i));
                         scheduled[i] = true;
                     }
                 }
+                EventKind::Ctrl(msg) => {
+                    self.handle_ctrl(msg, ev.time, &mut q, &mut scheduled);
+                }
+                EventKind::Stage1Arrival(msg) => {
+                    // Idempotent: retransmitted/duplicated bulk for an
+                    // order already stored (or applied) is ignored.
+                    let to = msg.to;
+                    self.instances[to].handle_stage1(msg).expect("sim stage1 delivery");
+                }
                 EventKind::Arrival(msg) => {
-                    let dest = msg.to;
+                    let (src, dest, order) = (msg.from, msg.to, msg.order);
                     let inst = &mut self.instances[dest];
                     if inst.is_idle() && inst.backend.clock < ev.time {
                         inst.backend.clock = ev.time; // idle destination waits for the KV
                     }
-                    inst.handle_stage2(msg).expect("sim stage2 delivery");
-                    if !scheduled[dest] && !self.instances[dest].is_idle() {
+                    let disp = inst.handle_stage2(msg).expect("sim stage2 delivery");
+                    if self.faulty {
+                        // Applied *and* duplicate deliveries re-ack — the
+                        // previous ack may have been the lost copy. A
+                        // delta without its Stage-1 bulk stays unacked:
+                        // the source's timer resends both stages.
+                        if disp != Stage2Disposition::AwaitingStage1 {
+                            self.send_stage2_ack(order, dest, src, ev.time, &mut q);
+                        }
+                    } else {
+                        // The perfect link delivers exactly once: confirm
+                        // synchronously, releasing the source's limbo.
+                        self.instances[src].confirm_order(order);
+                    }
+                    if disp == Stage2Disposition::Applied
+                        && !scheduled[dest]
+                        && !self.instances[dest].is_idle()
+                    {
                         let at = self.instances[dest].backend.next_ready();
                         q.push(at, EventKind::StepReady(dest));
                         scheduled[dest] = true;
                     }
                 }
                 EventKind::ReallocTick => {
-                    for (at, pkt) in self.realloc_decide() {
-                        q.push(at, EventKind::Arrival(pkt));
-                    }
+                    self.realloc_round(&mut q);
                     // Re-arm only while the fleet still has live events:
                     // an empty heap means every instance is idle and no
                     // packet is in flight, i.e. the run is over.
@@ -650,6 +809,9 @@ impl SimCluster {
                         }
                         _ => {}
                     }
+                }
+                EventKind::Retransmit { order } => {
+                    self.handle_retransmit(order, ev.time, &mut q, &mut scheduled);
                 }
             }
             // Streaming backlog: re-attempt admission once headroom can
@@ -782,11 +944,13 @@ impl SimCluster {
                 };
                 if deliverable {
                     let (at, msg) = in_flight.remove(i);
+                    let (src, order) = (msg.from, msg.order);
                     let inst = &mut self.instances[msg.to];
                     if inst.is_idle() && inst.backend.clock < at {
                         inst.backend.clock = at;
                     }
                     inst.handle_stage2(msg).expect("sim stage2 delivery");
+                    self.instances[src].confirm_order(order);
                 } else {
                     i += 1;
                 }
@@ -805,9 +969,11 @@ impl SimCluster {
                 }
                 // Only in-flight packets remain: force delivery.
                 let (at, msg) = in_flight.remove(0);
+                let (src, order) = (msg.from, msg.order);
                 let inst = &mut self.instances[msg.to];
                 inst.backend.clock = inst.backend.clock.max(at);
                 inst.handle_stage2(msg).expect("sim stage2 delivery");
+                self.instances[src].confirm_order(order);
                 continue;
             };
             self.instances[i].step().expect("sim step");
@@ -820,11 +986,12 @@ impl SimCluster {
         self.summarize()
     }
 
-    /// One reallocation round: gather counts, bail if the fleet is
+    /// One reallocation decision: gather counts, bail if the fleet is
     /// balanced, feed operating points + refit the per-tier knees, and
-    /// pump every planned order through the §6.2 endpoint protocol.
-    /// Returns the Stage-2 packets with their virtual arrival times.
-    fn realloc_decide(&mut self) -> Vec<(f64, Stage2Msg<SimBackend>)> {
+    /// plan the migration orders — the classic single-destination
+    /// pairing, or the batched multi-destination order set when
+    /// [`ClusterConfig::multi_dest`] is on.
+    fn realloc_plan(&mut self) -> Vec<MigrationOrder> {
         // Streaming: while an admission backlog exists, under-threshold
         // instances will be topped up by admission (free), not migration
         // — the policy reports no inefficiency until it drains. Batch
@@ -847,7 +1014,33 @@ impl SimCluster {
         // same memory budget `handle_alloc_req` enforces, so mixed-batch
         // tiers advertise their true headroom.
         let caps: Vec<usize> = self.instances.iter().map(|x| x.capacity() * 4).collect();
-        let plan = self.realloc.decide(self.steps, &counts, &caps);
+        if self.cfg.multi_dest {
+            self.realloc.decide_batched(self.steps, &counts, &caps)
+        } else {
+            self.realloc.decide(self.steps, &counts, &caps)
+        }
+    }
+
+    /// One reallocation round inside the event loop: plan, then execute
+    /// each order — synchronously on the perfect transport (Stage-2
+    /// packets scheduled straight onto the heap, today's behavior), or
+    /// as an event-driven reliable handshake on a faulty link.
+    fn realloc_round(&mut self, q: &mut EventQueue) {
+        for m in self.realloc_plan() {
+            if self.faulty {
+                self.start_order(m.from, m.to, m.count, q);
+            } else if let Some((at, pkt)) = self.pump_migration(m.from, m.to, m.count) {
+                q.push(at, EventKind::Arrival(pkt));
+            }
+        }
+    }
+
+    /// The perfect-path reallocation round of the pre-heap reference
+    /// scheduler: plan + pump synchronously, returning timed Stage-2
+    /// packets. Ignores the transport fault model (the golden reference
+    /// predates the transport plane).
+    fn realloc_decide(&mut self) -> Vec<(f64, Stage2Msg<SimBackend>)> {
+        let plan = self.realloc_plan();
         let mut packets = Vec::new();
         for m in plan {
             if let Some(p) = self.pump_migration(m.from, m.to, m.count) {
@@ -859,7 +1052,7 @@ impl SimCluster {
 
     /// Effective link between two instances: the bottleneck of the two
     /// endpoints' interconnects (latency adds at the slower NIC).
-    fn link(&self, from: usize, to: usize) -> (f64, f64) {
+    fn link_of(&self, from: usize, to: usize) -> (f64, f64) {
         let a = &self.instances[from].backend.cost;
         let b = &self.instances[to].backend.cost;
         (a.link_latency.max(b.link_latency), a.link_bandwidth.min(b.link_bandwidth))
@@ -882,7 +1075,10 @@ impl SimCluster {
         to: usize,
         count: usize,
     ) -> Option<(f64, Stage2Msg<SimBackend>)> {
-        let stage2 = match self.instances[from].begin_migration(to, count) {
+        let order = self.next_order;
+        self.next_order += 1;
+        self.orders_attempted += 1;
+        let stage2 = match self.instances[from].begin_migration(to, count, order) {
             MigrateStart::Refused => {
                 self.report_refusal(from);
                 return None;
@@ -890,7 +1086,7 @@ impl SimCluster {
             MigrateStart::QueueOnly(pkt) => pkt,
             MigrateStart::AllocReq(req) => {
                 let ok = self.instances[to].handle_alloc_req(&req);
-                match self.instances[from].handle_alloc_ack(ok) {
+                match self.instances[from].handle_alloc_ack(order, ok) {
                     AckOutcome::Stage1(s1) => {
                         self.instances[to].handle_stage1(s1).expect("sim stage1");
                         // Victims stop decoding at the decision in the
@@ -907,10 +1103,22 @@ impl SimCluster {
                 }
             }
         };
-        let (lat, bw) = self.link(from, to);
-        let kv = &self.instances[from].backend.cost;
         let now = self.instances[from].backend.clock;
-        let mut latest = now;
+        let dur = self.account_stage2(&stage2);
+        Some((now + dur, stage2))
+    }
+
+    /// Account one Stage-2 packet's migration counters and per-victim
+    /// downtime (§7.7 SM); returns the packet's modeled transfer
+    /// duration — the slowest victim's downtime (0 for queue-only
+    /// moves). Called exactly once per order, when the packet is first
+    /// created: retransmissions of the held copy are link traffic, not
+    /// new migrations.
+    fn account_stage2(&mut self, stage2: &Stage2Msg<SimBackend>) -> f64 {
+        let (from, to) = (stage2.from, stage2.to);
+        let (lat, bw) = self.link_of(from, to);
+        let kv = &self.instances[from].backend.cost;
+        let mut dur = 0.0f64;
         for c in &stage2.control {
             let downtime = match self.cfg.migration_style {
                 MigrationStyle::TwoStage => {
@@ -927,13 +1135,274 @@ impl SimCluster {
             };
             self.downtime += downtime;
             self.migrations += 1;
-            latest = latest.max(now + downtime);
+            dur = dur.max(downtime);
         }
         self.migrations += stage2.waiting_tasks.len() as u64;
         let moved = (stage2.control.len() + stage2.waiting_tasks.len()) as u64;
         self.tier_out[self.tier_of[from]] += moved;
         self.tier_in[self.tier_of[to]] += moved;
-        Some((latest, stage2))
+        dur
+    }
+
+    // ------------------------------------------------------------------
+    // Faulty-link carrier: the event-driven reliable §6.2 protocol
+    // ------------------------------------------------------------------
+
+    /// Open one migration order on the unreliable link: run the
+    /// endpoint's victim pick, ship the first message (AllocReq for live
+    /// victims; the Stage-2 packet itself for queue-only moves, which
+    /// commit immediately) and arm the order's retransmit timer.
+    /// The effective retransmit period: clamped to a positive floor so a
+    /// zero/NaN config value cannot re-arm the timer at its own
+    /// timestamp and starve later-timestamped deliveries (the committed
+    /// phase retransmits unboundedly).
+    fn retransmit_period(&self) -> f64 {
+        let p = self.cfg.transport.retransmit_secs;
+        if p.is_finite() && p > 0.0 {
+            p.max(1e-6)
+        } else {
+            TransportConfig::default().retransmit_secs
+        }
+    }
+
+    fn start_order(&mut self, from: usize, to: usize, count: usize, q: &mut EventQueue) {
+        let order = self.next_order;
+        self.next_order += 1;
+        self.orders_attempted += 1;
+        let now = self.instances[from].backend.clock;
+        let retransmit_secs = self.retransmit_period();
+        match self.instances[from].begin_migration(to, count, order) {
+            MigrateStart::Refused => self.report_refusal(from),
+            MigrateStart::QueueOnly(pkt) => {
+                // The tasks already left the source queue — the order is
+                // born committed; the held copy retransmits until acked.
+                let dur = self.account_stage2(&pkt);
+                self.orders.insert(
+                    order,
+                    OrderState {
+                        from,
+                        to,
+                        committed: true,
+                        resends: 0,
+                        started: now,
+                        req: None,
+                        stage1: None,
+                        stage2: Some(pkt),
+                        stage2_dur: dur,
+                    },
+                );
+                self.send_stage2(order, now, q);
+                q.push(now + retransmit_secs, EventKind::Retransmit { order });
+            }
+            MigrateStart::AllocReq(req) => {
+                self.orders.insert(
+                    order,
+                    OrderState {
+                        from,
+                        to,
+                        committed: false,
+                        resends: 0,
+                        started: now,
+                        req: Some(req),
+                        stage1: None,
+                        stage2: None,
+                        stage2_dur: 0.0,
+                    },
+                );
+                self.send_alloc_req(order, now, q);
+                q.push(now + retransmit_secs, EventKind::Retransmit { order });
+            }
+        }
+    }
+
+    /// Ship (or re-ship) the held AllocReq of `order` through the link.
+    fn send_alloc_req(&mut self, order: u64, now: f64, q: &mut EventQueue) {
+        let st = &self.orders[&order];
+        let (from, to) = (st.from, st.to);
+        let req = st.req.clone().expect("handshake orders hold their request");
+        let (lat, _) = self.link_of(from, to);
+        for extra in self.link.plan(MsgClass::AllocReq, from, to) {
+            q.push(
+                now + lat + extra,
+                EventKind::Ctrl(CtrlMsg::AllocReq { to, req: req.clone() }),
+            );
+        }
+    }
+
+    /// Ship (or re-ship) the held Stage-1 bulk of `order`. No-op for
+    /// queue-only orders (no KV). The bulk overlaps source compute, so
+    /// its modeled transfer cost is one link latency (as on the perfect
+    /// path, where Stage 1 consumes no virtual time at all).
+    fn send_stage1(&mut self, order: u64, now: f64, q: &mut EventQueue) {
+        let st = &self.orders[&order];
+        let Some(s1) = st.stage1.clone() else { return };
+        let (from, to) = (st.from, st.to);
+        let (lat, _) = self.link_of(from, to);
+        for extra in self.link.plan(MsgClass::Stage1, from, to) {
+            q.push(now + lat + extra, EventKind::Stage1Arrival(s1.clone()));
+        }
+    }
+
+    /// Ship (or re-ship) the held Stage-2 packet of `order`, riding the
+    /// modeled transfer duration computed when the packet was created.
+    fn send_stage2(&mut self, order: u64, now: f64, q: &mut EventQueue) {
+        let st = &self.orders[&order];
+        let pkt = st.stage2.clone().expect("committed orders hold their Stage-2");
+        let (from, to, dur) = (st.from, st.to, st.stage2_dur);
+        let (lat, _) = self.link_of(from, to);
+        for extra in self.link.plan(MsgClass::Stage2, from, to) {
+            q.push(now + lat.max(dur) + extra, EventKind::Arrival(pkt.clone()));
+        }
+    }
+
+    /// Ship a Stage-2 confirmation back to the source (dest → source,
+    /// sharing the AllocAck fault profile).
+    fn send_stage2_ack(
+        &mut self,
+        order: u64,
+        from_dest: usize,
+        to_source: usize,
+        now: f64,
+        q: &mut EventQueue,
+    ) {
+        let (lat, _) = self.link_of(from_dest, to_source);
+        for extra in self.link.plan(MsgClass::AllocAck, from_dest, to_source) {
+            q.push(
+                now + lat + extra,
+                EventKind::Ctrl(CtrlMsg::Stage2Ack { order, to_source }),
+            );
+        }
+    }
+
+    /// Re-arm instance `i`'s StepReady event after work returned to it
+    /// (abort / refused handshake handing waiting tasks back). An
+    /// instance that idled while the tasks were away has a stale clock:
+    /// fast-forward it to `now`, like admission does.
+    fn rearm_step(&mut self, i: usize, now: f64, q: &mut EventQueue, scheduled: &mut [bool]) {
+        if scheduled[i] || self.instances[i].is_idle() {
+            return;
+        }
+        let inst = &mut self.instances[i];
+        if inst.backend.clock < now {
+            inst.backend.clock = now;
+        }
+        q.push(inst.backend.next_ready(), EventKind::StepReady(i));
+        scheduled[i] = true;
+    }
+
+    /// A §6.2 control message landed (faulty transports only).
+    fn handle_ctrl(
+        &mut self,
+        msg: CtrlMsg,
+        now: f64,
+        q: &mut EventQueue,
+        scheduled: &mut [bool],
+    ) {
+        match msg {
+            CtrlMsg::AllocReq { to, req } => {
+                // The capacity check is read-only, so duplicated or
+                // retransmitted requests are naturally idempotent; each
+                // delivery re-acks (the previous ack may have dropped).
+                let order = req.order;
+                let src = req.from_instance;
+                let ok = self.instances[to].handle_alloc_req(&req);
+                let (lat, _) = self.link_of(to, src);
+                for extra in self.link.plan(MsgClass::AllocAck, to, src) {
+                    q.push(
+                        now + lat + extra,
+                        EventKind::Ctrl(CtrlMsg::AllocAck { order, to_source: src, ok }),
+                    );
+                }
+            }
+            CtrlMsg::AllocAck { order, to_source, ok } => {
+                // Carrier-level dedup: only a handshake-phase order
+                // consumes an ack; stale or duplicated acks fall through
+                // (the endpoint would also report NoPending).
+                let Some(st) = self.orders.get(&order) else { return };
+                if st.committed {
+                    return;
+                }
+                let from = st.from;
+                debug_assert_eq!(from, to_source);
+                if !ok {
+                    // Destination refused: endpoint returns the waiting
+                    // tasks; the carrier drops the order.
+                    self.instances[from].handle_alloc_ack(order, false);
+                    self.report_refusal(from);
+                    self.orders.remove(&order);
+                    self.rearm_step(from, now, q, scheduled);
+                    return;
+                }
+                let AckOutcome::Stage1(s1) = self.instances[from].handle_alloc_ack(order, true)
+                else {
+                    // The endpoint lost the handshake state (cannot
+                    // happen while the carrier holds the order) — drop.
+                    self.orders.remove(&order);
+                    return;
+                };
+                // Victims commit at the next step boundary in the real
+                // plane; the virtual plane commits immediately, exactly
+                // like the perfect path (see pump_migration).
+                let pkt = self.instances[from]
+                    .poll_stage2()
+                    .expect("stage1 was just sent");
+                let dur = self.account_stage2(&pkt);
+                let st = self.orders.get_mut(&order).expect("present: checked above");
+                st.committed = true;
+                st.req = None;
+                st.stage1 = Some(s1);
+                st.stage2 = Some(pkt);
+                st.stage2_dur = dur;
+                self.send_stage1(order, now, q);
+                self.send_stage2(order, now, q);
+            }
+            CtrlMsg::Stage2Ack { order, to_source } => {
+                // Confirmation: release the source's limbo copy and end
+                // the retransmit chain. Idempotent on duplicates.
+                self.instances[to_source].confirm_order(order);
+                self.orders.remove(&order);
+            }
+        }
+    }
+
+    /// A retransmit timer popped: stale if the order confirmed or
+    /// aborted; otherwise resend — bounded during the handshake (then
+    /// abort, returning victims to the source), unbounded once committed
+    /// (the limbo samples may not be lost).
+    fn handle_retransmit(
+        &mut self,
+        order: u64,
+        now: f64,
+        q: &mut EventQueue,
+        scheduled: &mut [bool],
+    ) {
+        let retransmit_secs = self.retransmit_period();
+        let budget = self.cfg.transport.retransmit_budget;
+        let deadline = self.cfg.transport.handshake_timeout_secs;
+        let Some(st) = self.orders.get_mut(&order) else {
+            return; // confirmed or aborted: stale timer
+        };
+        if st.committed {
+            self.retransmits += 1;
+            self.send_stage1(order, now, q);
+            self.send_stage2(order, now, q);
+            q.push(now + retransmit_secs, EventKind::Retransmit { order });
+            return;
+        }
+        if now - st.started >= deadline || st.resends >= budget {
+            // Handshake never completed: abort the order. Waiting tasks
+            // return to the source queue; live victims never left its
+            // decode batch.
+            let from = st.from;
+            self.orders.remove(&order);
+            self.instances[from].abort_handshake(order);
+            self.rearm_step(from, now, q, scheduled);
+            return;
+        }
+        st.resends += 1;
+        self.retransmits += 1;
+        self.send_alloc_req(order, now, q);
+        q.push(now + retransmit_secs, EventKind::Retransmit { order });
     }
 
     fn summarize(&self) -> ClusterResult {
@@ -968,6 +1437,7 @@ impl SimCluster {
                 admission_refusals: self.tier_adm_refusals[t],
             })
             .collect();
+        let (link_drops, link_dups) = self.link.stats();
         ClusterResult {
             makespan,
             total_tokens,
@@ -977,6 +1447,15 @@ impl SimCluster {
             migrations: self.migrations,
             realloc_decisions: self.realloc.decisions,
             refusals: self.realloc.refusals,
+            orders_attempted: self.orders_attempted,
+            retransmits: self.retransmits,
+            handshake_aborts: self
+                .instances
+                .iter()
+                .map(|x| x.metrics.orders_aborted)
+                .sum(),
+            link_drops,
+            link_dups,
             migration_downtime: self.downtime,
             mean_accepted: if rounds == 0 { 0.0 } else { acc as f64 / rounds as f64 },
             traces: self.instances.iter().map(|x| x.metrics.trace.clone()).collect(),
@@ -1264,6 +1743,118 @@ mod tests {
     }
 
     #[test]
+    fn faulty_link_run_conserves_samples() {
+        // Heavy skew + a hostile link (drop/dup/reorder on every class):
+        // the hardened protocol must neither lose nor duplicate samples.
+        use crate::coordinator::transport::FaultProfile;
+        let mut cfg = base_cfg(0, 4);
+        cfg.cooldown = 8;
+        cfg.transport =
+            TransportConfig::uniform(FaultProfile::uniform(0.3, 0.25, 0.5, 0.01));
+        let mut c = SimCluster::with_assignment(
+            cfg,
+            vec![vec![900; 24], vec![40; 4], vec![40; 4], vec![40; 4]],
+        );
+        let r = c.run();
+        assert!(r.migrations > 0, "skew must trigger migrations");
+        assert!(r.link_drops > 0, "a 30% drop link must drop something");
+        assert!(r.retransmits > 0, "drops must force retransmissions");
+        let mut ids: Vec<u64> = c
+            .instances
+            .iter()
+            .flat_map(|x| x.finished.iter().map(|s| s.id))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..36).collect::<Vec<u64>>());
+        // Every order was eventually confirmed: no sample left in limbo.
+        assert_eq!(c.instances.iter().map(|x| x.limbo_count()).sum::<usize>(), 0);
+        assert!(c.orders.is_empty(), "no in-flight order may survive the run");
+    }
+
+    #[test]
+    fn faulty_runs_replay_bit_for_bit() {
+        use crate::coordinator::transport::FaultProfile;
+        let mk = || {
+            let mut cfg = base_cfg(0, 4);
+            cfg.cooldown = 8;
+            cfg.seed = 11;
+            cfg.transport =
+                TransportConfig::uniform(FaultProfile::uniform(0.2, 0.2, 0.5, 0.005));
+            SimCluster::with_assignment(
+                cfg,
+                vec![vec![700; 20], vec![40; 4], vec![40; 4], vec![40; 4]],
+            )
+            .run()
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.total_tokens, b.total_tokens);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.retransmits, b.retransmits);
+        assert_eq!((a.link_drops, a.link_dups), (b.link_drops, b.link_dups));
+    }
+
+    #[test]
+    fn multi_dest_order_set_splits_one_source() {
+        // One overloaded source, three starved destinations: with
+        // multi_dest the batched planner must land victims on >= 3
+        // distinct destinations of the same decision epoch — the classic
+        // planner moves to exactly one destination per decision.
+        let mut cfg = base_cfg(0, 4);
+        cfg.cooldown = 8;
+        cfg.multi_dest = true;
+        let mut c = SimCluster::with_assignment(
+            cfg,
+            vec![vec![500; 30], vec![40; 1], vec![40; 1], vec![40; 1]],
+        );
+        let r = c.run();
+        assert!(r.migrations > 0);
+        let dests_fed = c.instances[1..]
+            .iter()
+            .filter(|x| x.metrics.samples_migrated_in > 0)
+            .count();
+        assert_eq!(dests_fed, 3, "batched order set must feed all 3 destinations");
+        assert!(
+            c.instances[0].metrics.samples_migrated_out >= 3,
+            "the loaded source must shed victims to several destinations"
+        );
+        let mut ids: Vec<u64> = c
+            .instances
+            .iter()
+            .flat_map(|x| x.finished.iter().map(|s| s.id))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..33).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn multi_dest_and_faults_compose() {
+        // Batched multi-destination orders over a lossy link: concurrent
+        // per-order handshakes + retransmission must still conserve.
+        use crate::coordinator::transport::FaultProfile;
+        let mut cfg = base_cfg(0, 4);
+        cfg.cooldown = 8;
+        cfg.multi_dest = true;
+        cfg.transport =
+            TransportConfig::uniform(FaultProfile::uniform(0.25, 0.2, 0.5, 0.01));
+        let mut c = SimCluster::with_assignment(
+            cfg,
+            vec![vec![600; 24], vec![40; 2], vec![40; 2], vec![40; 2]],
+        );
+        let r = c.run();
+        assert!(r.migrations > 0);
+        let mut ids: Vec<u64> = c
+            .instances
+            .iter()
+            .flat_map(|x| x.finished.iter().map(|s| s.id))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..30).collect::<Vec<u64>>());
+        assert_eq!(c.instances.iter().map(|x| x.limbo_count()).sum::<usize>(), 0);
+    }
+
+    #[test]
     fn event_queue_orders_by_time_then_kind_then_seq() {
         let mut q = EventQueue::new();
         q.push(2.0, EventKind::StepReady(0));
@@ -1314,6 +1905,11 @@ mod tests {
             migrations: 0,
             realloc_decisions: 0,
             refusals: 0,
+            orders_attempted: 0,
+            retransmits: 0,
+            handshake_aborts: 0,
+            link_drops: 0,
+            link_dups: 0,
             migration_downtime: 0.0,
             mean_accepted: 0.0,
             traces: Vec::new(),

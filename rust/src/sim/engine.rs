@@ -171,9 +171,9 @@ pub struct SimBackend {
     /// Virtual seconds elapsed on this instance.
     pub clock: f64,
     rng: Rng,
-    /// Stage-1 buffers keyed by source instance (ids only — simulated
+    /// Stage-1 buffers keyed by migration order (ids only — simulated
     /// KV carries no data).
-    stage1: BTreeMap<usize, Vec<u64>>,
+    stage1: BTreeMap<u64, Vec<u64>>,
 }
 
 impl DecodeBackend for SimBackend {
@@ -348,18 +348,19 @@ impl DecodeBackend for SimBackend {
         }
     }
 
-    fn stage1_store(&mut self, from: usize, kv: SimKv) -> Result<()> {
-        self.stage1.insert(from, kv.ids);
+    fn stage1_store(&mut self, order: u64, _from: usize, kv: SimKv) -> Result<()> {
+        self.stage1.insert(order, kv.ids);
         Ok(())
     }
 
     fn stage2_restore(
         &mut self,
-        from: usize,
+        order: u64,
+        _from: usize,
         _delta: SimKv,
         control: Vec<SimSample>,
     ) -> Result<Vec<SimSample>> {
-        self.stage1.remove(&from);
+        self.stage1.remove(&order);
         Ok(control)
     }
 }
@@ -578,7 +579,7 @@ mod tests {
         short.generated = 30; // short sequence
         i.live.push(long);
         i.live.push(short);
-        match i.begin_migration(1, 1) {
+        match i.begin_migration(1, 1, 1) {
             MigrateStart::AllocReq(req) => assert_eq!(req.sample_ids, vec![1]),
             _ => panic!("expected an alloc request for a live victim"),
         }

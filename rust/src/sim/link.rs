@@ -1,0 +1,178 @@
+//! The unreliable virtual link: seeded, schedulable fault injection for
+//! the §6.2 migration protocol.
+//!
+//! [`FaultyLink`] implements
+//! [`Transport`](crate::coordinator::transport::Transport) by drawing
+//! each message's fate — dropped, duplicated, delayed/reordered — from a
+//! **salted deterministic RNG stream** (`seed ^ LINK_SEED_SALT`, a
+//! [`crate::utils::rng::Rng`] private to the link). Plans are drawn in
+//! event-pop order, which the cluster's `(time, rank, seq)` heap makes
+//! deterministic, so a given `(seed, TransportConfig)` pair replays the
+//! exact same fault schedule bit-for-bit — the property the
+//! `tests/fault_link.rs` suite pins.
+//!
+//! Drop probabilities are clamped to [`MAX_DROP_PROB`]: the hardened
+//! endpoint retransmits committed Stage-1/Stage-2 traffic until it is
+//! acknowledged, so a class that drops *every* copy would livelock the
+//! run. At ≤ 90% drop, delivery is almost-surely eventual and the
+//! discrete-event run terminates.
+
+use crate::coordinator::transport::{FaultProfile, MsgClass, Transport, TransportConfig};
+use crate::utils::rng::Rng;
+
+/// Salt for the link RNG stream: keeps fault draws independent of the
+/// workload and arrival streams, so turning faults on never perturbs the
+/// generated samples themselves.
+pub const LINK_SEED_SALT: u64 = 0xFA17_11CC;
+
+/// Ceiling applied to every class's drop probability (see module docs).
+pub const MAX_DROP_PROB: f64 = 0.9;
+
+/// A virtual link that injects per-class faults from a seeded stream.
+#[derive(Clone, Debug)]
+pub struct FaultyLink {
+    cfg: TransportConfig,
+    rng: Rng,
+    drops: u64,
+    dups: u64,
+}
+
+impl FaultyLink {
+    /// Build a link for one cluster run. `seed` is the cluster's master
+    /// seed; the link salts it so fault draws live on their own stream.
+    pub fn new(cfg: TransportConfig, seed: u64) -> Self {
+        FaultyLink { cfg, rng: Rng::new(seed ^ LINK_SEED_SALT), drops: 0, dups: 0 }
+    }
+
+    fn profile(&self, class: MsgClass) -> FaultProfile {
+        self.cfg.profile(class)
+    }
+}
+
+impl Transport for FaultyLink {
+    fn plan(&mut self, class: MsgClass, _from: usize, _to: usize) -> Vec<f64> {
+        let p = self.profile(class);
+        let mut out = Vec::with_capacity(1);
+        if self.rng.chance(p.drop_prob.clamp(0.0, MAX_DROP_PROB)) {
+            self.drops += 1;
+        } else {
+            let delay = if p.reorder_prob > 0.0 && self.rng.chance(p.reorder_prob) {
+                self.rng.f64() * p.extra_delay_secs.max(0.0)
+            } else {
+                0.0
+            };
+            out.push(delay);
+        }
+        if p.dup_prob > 0.0 && self.rng.chance(p.dup_prob) {
+            self.dups += 1;
+            out.push(self.rng.f64() * p.extra_delay_secs.max(0.0));
+        }
+        out
+    }
+
+    fn is_perfect(&self) -> bool {
+        self.cfg.is_perfect()
+    }
+
+    fn stats(&self) -> (u64, u64) {
+        (self.drops, self.dups)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform(drop: f64, dup: f64, reorder: f64, delay: f64) -> TransportConfig {
+        TransportConfig::uniform(FaultProfile::uniform(drop, dup, reorder, delay))
+    }
+
+    #[test]
+    fn zero_prob_link_reports_perfect_and_never_faults() {
+        let mut link = FaultyLink::new(TransportConfig::default(), 7);
+        assert!(link.is_perfect());
+        for _ in 0..1000 {
+            assert_eq!(link.plan(MsgClass::Stage2, 0, 1), vec![0.0]);
+        }
+        assert_eq!(link.stats(), (0, 0));
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic_per_seed() {
+        let cfg = uniform(0.3, 0.2, 0.5, 0.01);
+        let mut a = FaultyLink::new(cfg.clone(), 42);
+        let mut b = FaultyLink::new(cfg.clone(), 42);
+        for i in 0..500 {
+            let class = [MsgClass::AllocReq, MsgClass::AllocAck, MsgClass::Stage1, MsgClass::Stage2]
+                [i % 4];
+            assert_eq!(a.plan(class, 0, 1), b.plan(class, 0, 1), "draw {i}");
+        }
+        assert_eq!(a.stats(), b.stats());
+        // A different seed gives a different schedule.
+        let mut c = FaultyLink::new(cfg, 43);
+        let plans_a: Vec<_> = (0..64).map(|_| a.plan(MsgClass::Stage2, 0, 1)).collect();
+        let plans_c: Vec<_> = (0..64).map(|_| c.plan(MsgClass::Stage2, 0, 1)).collect();
+        assert_ne!(plans_a, plans_c);
+    }
+
+    #[test]
+    fn drop_rate_tracks_probability() {
+        let mut link = FaultyLink::new(uniform(0.25, 0.0, 0.0, 0.0), 9);
+        let n = 20_000;
+        let mut dropped = 0;
+        for _ in 0..n {
+            if link.plan(MsgClass::AllocReq, 0, 1).is_empty() {
+                dropped += 1;
+            }
+        }
+        let rate = dropped as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.02, "observed drop rate {rate}");
+        assert_eq!(link.stats().0, dropped);
+    }
+
+    #[test]
+    fn duplicates_and_delays_within_bounds() {
+        let mut link = FaultyLink::new(uniform(0.0, 0.5, 1.0, 0.002), 11);
+        let mut dup_seen = false;
+        for _ in 0..2000 {
+            let plan = link.plan(MsgClass::Stage2, 2, 3);
+            assert!(!plan.is_empty(), "drop_prob 0 never loses the message");
+            assert!(plan.len() <= 2);
+            if plan.len() == 2 {
+                dup_seen = true;
+            }
+            for d in plan {
+                assert!((0.0..=0.002).contains(&d), "delay {d} out of bounds");
+            }
+        }
+        assert!(dup_seen, "dup_prob 0.5 must duplicate sometimes");
+        assert!(link.stats().1 > 0);
+    }
+
+    #[test]
+    fn drop_probability_is_clamped_below_livelock() {
+        // Even at a configured drop of 1.0, some copies must get through
+        // (the clamp guarantees eventual delivery for retransmitters).
+        let mut link = FaultyLink::new(uniform(1.0, 0.0, 0.0, 0.0), 13);
+        let delivered = (0..2000)
+            .filter(|_| !link.plan(MsgClass::Stage2, 0, 1).is_empty())
+            .count();
+        assert!(delivered > 0, "clamped drop must still deliver eventually");
+    }
+
+    #[test]
+    fn per_class_profiles_are_independent() {
+        let mut cfg = TransportConfig::default();
+        cfg.set("stage2.drop_prob", "0.9").unwrap();
+        let mut link = FaultyLink::new(cfg, 17);
+        // AllocReq never drops; Stage2 drops most of the time.
+        let req_dropped = (0..500)
+            .filter(|_| link.plan(MsgClass::AllocReq, 0, 1).is_empty())
+            .count();
+        let s2_dropped = (0..500)
+            .filter(|_| link.plan(MsgClass::Stage2, 0, 1).is_empty())
+            .count();
+        assert_eq!(req_dropped, 0);
+        assert!(s2_dropped > 300, "stage2 dropped only {s2_dropped}/500");
+    }
+}

@@ -38,7 +38,12 @@
 //! admission policy (least-loaded instance, bounded backlog, refusal
 //! accounting) and the result reports TTFT/TPOT/queueing-delay
 //! percentiles. [`e2e`] extends the model to full RLHF iterations
-//! (inference + training stage costs) for Figs 3 and 12.
+//! (inference + training stage costs) for Figs 3 and 12. [`link`] is the
+//! unreliable virtual link ([`link::FaultyLink`]): seeded per-class
+//! drop/duplicate/reorder/delay fault injection under the §6.2 protocol,
+//! against which the hardened endpoint (per-order seqnos, idempotent
+//! apply, retransmit + handshake timeout) is property-tested in
+//! `tests/fault_link.rs`.
 //!
 //! See `docs/ARCHITECTURE.md` for the event-flow diagram and the
 //! "where to add a new event kind" guide.
@@ -52,6 +57,7 @@ pub mod cluster;
 pub mod cost_model;
 pub mod e2e;
 pub mod engine;
+pub mod link;
 
 pub use cluster::{ClusterConfig, ClusterResult, FleetTier, SimCluster, TierStats};
 pub use cost_model::CostModel;

@@ -18,7 +18,8 @@
 //! * the endpoint handshake moves a sample intact between two instances
 //!   and handles refusal without losing work.
 
-use rlhfspec::coordinator::core::{AckOutcome, MigrateStart};
+use rlhfspec::coordinator::core::{AckOutcome, MigrateStart, Stage2Disposition};
+use rlhfspec::coordinator::transport::TransportConfig;
 use rlhfspec::sim::acceptance::AcceptanceModel;
 use rlhfspec::sim::cluster::{ClusterConfig, FleetTier, SimCluster};
 use rlhfspec::sim::cost_model::CostModel;
@@ -266,6 +267,174 @@ fn heterogeneous_fleet_fast_tiers_steal_work() {
 }
 
 #[test]
+fn golden_guard_perfect_transport_is_bit_identical() {
+    // The transport subsystem must be invisible at zero fault
+    // probability: a run with an explicitly-constructed all-zero
+    // `[transport]` section is bit-identical to the default config (and
+    // therefore to the retained pre-transport laggard scan, which the
+    // parity tests above pin). Covers Adaptive + AR and the
+    // migration-heavy skew.
+    let base = ClusterConfig {
+        instances: 8,
+        n_samples: 192,
+        max_tokens: 512,
+        cooldown: 24,
+        seed: 42,
+        ..Default::default()
+    };
+    let mut explicit = base.clone();
+    explicit.transport = TransportConfig::default();
+    assert!(explicit.transport.is_perfect());
+    for (a, b) in [
+        (
+            SimCluster::new(base.clone()).run(),
+            SimCluster::new(explicit.clone()).run(),
+        ),
+        (
+            SimCluster::new(ClusterConfig {
+                mode: rlhfspec::sim::SimMode::Ar,
+                ..base.clone()
+            })
+            .run(),
+            SimCluster::new(ClusterConfig {
+                mode: rlhfspec::sim::SimMode::Ar,
+                ..explicit.clone()
+            })
+            .run(),
+        ),
+    ] {
+        assert_eq!(a.total_tokens, b.total_tokens);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.migrations, b.migrations);
+        // The reliability machinery must not even engage.
+        assert_eq!(b.retransmits, 0);
+        assert_eq!(b.handshake_aborts, 0);
+        assert_eq!(b.link_drops, 0);
+        assert_eq!(b.link_dups, 0);
+    }
+    // Skewed, migration-heavy case against the laggard reference.
+    let mk = |transport: TransportConfig| {
+        let cfg = ClusterConfig {
+            instances: 4,
+            cooldown: 8,
+            n_samples: 0,
+            max_tokens: 1024,
+            seed: 3,
+            transport,
+            ..Default::default()
+        };
+        SimCluster::with_assignment(
+            cfg,
+            vec![vec![900; 24], vec![40; 4], vec![40; 4], vec![40; 4]],
+        )
+    };
+    let heap = mk(TransportConfig::default()).run();
+    let scan = mk(TransportConfig::default()).run_reference_laggard();
+    assert!(heap.migrations > 0);
+    assert_eq!(heap.total_tokens, scan.total_tokens);
+    assert_eq!(heap.makespan.to_bits(), scan.makespan.to_bits());
+    assert_eq!(heap.migrations, scan.migrations);
+}
+
+#[test]
+fn endpoint_dedups_duplicated_and_reordered_stages() {
+    // The hardened destination: a Stage-2 delta arriving before its
+    // Stage-1 bulk waits (AwaitingStage1), a retransmitted Stage-1 is
+    // ignored, a duplicated Stage-2 reports Duplicate and changes
+    // nothing — no double-parked sample, no double-counted metric.
+    let mk = |id| {
+        SimInstance::new(
+            id,
+            SimParams::default(),
+            CostModel::l40s_llama8b(),
+            AcceptanceModel::lmsys(),
+            id as u64,
+        )
+    };
+    let mut src = mk(0);
+    let mut dst = mk(1);
+    src.live.push(SimSample::new(7, 128, 400));
+    let req = match src.begin_migration(1, 1, 5) {
+        MigrateStart::AllocReq(req) => req,
+        _ => panic!("expected alloc handshake"),
+    };
+    assert!(dst.handle_alloc_req(&req));
+    let s1 = match src.handle_alloc_ack(5, true) {
+        AckOutcome::Stage1(s1) => s1,
+        _ => panic!("expected stage 1"),
+    };
+    let s2 = {
+        // Clone-able payloads let the carrier retransmit.
+        dst.handle_stage1(s1.clone()).unwrap();
+        src.poll_stage2().expect("stage 1 was sent")
+    };
+    // Reordering: pretend Stage-1 never arrived on a fresh destination.
+    let mut dst2 = mk(2);
+    assert_eq!(
+        dst2.handle_stage2(s2.clone()).unwrap(),
+        Stage2Disposition::AwaitingStage1,
+        "a KV delta without its bulk must wait"
+    );
+    assert_eq!(dst2.parked.len(), 0);
+    // Retransmit both stages: now it applies exactly once.
+    dst2.handle_stage1(s1.clone()).unwrap();
+    assert_eq!(dst2.handle_stage2(s2.clone()).unwrap(), Stage2Disposition::Applied);
+    assert_eq!(dst2.parked.len(), 1);
+    assert_eq!(dst2.metrics.samples_migrated_in, 1);
+    // Duplicates: neither a re-sent Stage-1 nor a re-sent Stage-2
+    // changes anything.
+    dst2.handle_stage1(s1).unwrap();
+    assert_eq!(dst2.handle_stage2(s2.clone()).unwrap(), Stage2Disposition::Duplicate);
+    assert_eq!(dst2.parked.len(), 1, "duplicate Stage-2 must not double-park");
+    assert_eq!(dst2.metrics.samples_migrated_in, 1, "nor double-count");
+    // The original destination applies its copy independently.
+    assert_eq!(dst.handle_stage2(s2).unwrap(), Stage2Disposition::Applied);
+    assert_eq!(dst.parked.len(), 1);
+}
+
+#[test]
+fn endpoint_abort_returns_victims_and_concurrent_orders_stay_disjoint() {
+    let mk = |id| {
+        SimInstance::new(
+            id,
+            SimParams::default(),
+            CostModel::l40s_llama8b(),
+            AcceptanceModel::lmsys(),
+            id as u64,
+        )
+    };
+    let mut src = mk(0);
+    for k in 0..4 {
+        src.live.push(SimSample::new(k, 128, 400));
+    }
+    src.add_task(SimSample::new(100, 128, 400));
+    // Two concurrent outbound orders must claim disjoint victims.
+    let req_a = match src.begin_migration(1, 2, 11) {
+        MigrateStart::AllocReq(r) => r,
+        _ => panic!("expected handshake"),
+    };
+    let req_b = match src.begin_migration(2, 2, 12) {
+        MigrateStart::AllocReq(r) => r,
+        _ => panic!("expected a second concurrent handshake"),
+    };
+    assert!(req_a.sample_ids.iter().all(|i| !req_b.sample_ids.contains(i)));
+    assert!(src.migration_pending());
+    // The waiting task went with order A (queue first), so aborting A
+    // must return it; order B stays pending.
+    assert!(src.abort_handshake(11));
+    assert_eq!(src.waiting.len(), 1, "aborted order returns its waiting task");
+    assert_eq!(src.live.len(), 4, "live victims never left the batch");
+    assert!(src.migration_pending(), "order B is still in flight");
+    assert!(!src.abort_handshake(11), "double abort is a no-op");
+    assert_eq!(src.metrics.orders_aborted, 1);
+    // A stale ack for the aborted order is ignored.
+    match src.handle_alloc_ack(11, true) {
+        AckOutcome::NoPending => {}
+        _ => panic!("aborted order must not ack"),
+    }
+}
+
+#[test]
 fn endpoint_handshake_moves_sample_intact() {
     let mk = |id| {
         SimInstance::new(
@@ -285,16 +454,17 @@ fn endpoint_handshake_moves_sample_intact() {
     src.live.push(s);
 
     // MigrateOut → AllocReq
-    let req = match src.begin_migration(1, 1) {
+    let req = match src.begin_migration(1, 1, 1) {
         MigrateStart::AllocReq(req) => req,
         _ => panic!("expected alloc handshake for a live victim"),
     };
     assert_eq!(req.sample_ids, vec![7]);
+    assert_eq!(req.order, 1, "the request carries its order id");
     assert!(req.bytes > 0, "alloc request must size the KV transfer");
     // AllocAck(ok) → Stage1
     let ok = dst.handle_alloc_req(&req);
     assert!(ok);
-    let s1 = match src.handle_alloc_ack(ok) {
+    let s1 = match src.handle_alloc_ack(1, ok) {
         AckOutcome::Stage1(s1) => s1,
         _ => panic!("expected stage 1 after a positive ack"),
     };
@@ -306,8 +476,12 @@ fn endpoint_handshake_moves_sample_intact() {
     let s2 = src.poll_stage2().expect("stage 1 was sent");
     assert_eq!(src.live.len(), 0);
     assert!(!src.migration_pending());
+    // … into the source's limbo until the order confirms …
+    assert_eq!(src.limbo_count(), 1);
     // … and resumes on the destination with state intact.
-    dst.handle_stage2(s2).unwrap();
+    assert_eq!(dst.handle_stage2(s2).unwrap(), Stage2Disposition::Applied);
+    src.confirm_order(1);
+    assert_eq!(src.limbo_count(), 0);
     assert_eq!(dst.parked.len(), 1);
     let moved = &dst.parked[0];
     assert_eq!(moved.id, 7);
@@ -338,7 +512,7 @@ fn endpoint_refusal_returns_work_to_source() {
     src.live.push(SimSample::new(1, 128, 400));
     src.add_task(SimSample::new(2, 128, 400));
 
-    let req = match src.begin_migration(1, 2) {
+    let req = match src.begin_migration(1, 2, 9) {
         MigrateStart::AllocReq(req) => req,
         _ => panic!("expected alloc handshake"),
     };
@@ -346,7 +520,7 @@ fn endpoint_refusal_returns_work_to_source() {
     assert!(src.waiting.is_empty());
     let ok = dst.handle_alloc_req(&req);
     assert!(!ok, "over-budget destination must refuse");
-    match src.handle_alloc_ack(ok) {
+    match src.handle_alloc_ack(9, ok) {
         AckOutcome::Refused => {}
         _ => panic!("expected refusal outcome"),
     }

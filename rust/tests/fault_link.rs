@@ -1,0 +1,240 @@
+//! Property suite for the unreliable-link transport plane: the §6.2
+//! migration protocol under injected drop/duplicate/reorder/delay
+//! faults ([`rlhfspec::sim::link::FaultyLink`]).
+//!
+//! The contract these tests pin (ISSUE 4 acceptance):
+//!
+//! * **Conservation** — under *any* seeded fault schedule, every sample
+//!   finishes exactly once (no loss, no duplication), every instance
+//!   drains, and no victim is left in a source's limbo buffer;
+//! * **Streaming conservation** — with arrivals + a bounded backlog,
+//!   `arrivals == completions + admission_refusals` still holds;
+//! * **Aborts are safe** — a handshake that cannot complete (ack-starved
+//!   link, tiny retransmit budget) aborts and its victims finish at the
+//!   source;
+//! * **Determinism** — a `(seed, TransportConfig)` pair replays
+//!   bit-for-bit, including the injected fault schedule.
+//!
+//! Cases are seeded through `testutil::check`, so CI smoke-runs a fixed
+//! deterministic schedule (`RLHFSPEC_PROP_SEED` overrides for
+//! exploration).
+
+use rlhfspec::coordinator::transport::{FaultProfile, TransportConfig};
+use rlhfspec::data::arrivals::ArrivalProcess;
+use rlhfspec::sim::cluster::{ClusterConfig, SimCluster};
+use rlhfspec::sim::ClusterResult;
+use rlhfspec::testutil;
+use rlhfspec::utils::rng::Rng;
+
+/// Every sample finished exactly once; nothing is still assigned,
+/// parked, queued, or sitting in a limbo buffer anywhere in the fleet.
+fn assert_conserved(c: &SimCluster, n: u64) {
+    let mut ids: Vec<u64> = c
+        .instances
+        .iter()
+        .flat_map(|x| x.finished.iter().map(|s| s.id))
+        .collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n).collect::<Vec<u64>>(), "sample ids not conserved");
+    for inst in &c.instances {
+        assert!(inst.is_idle(), "instance {} still holds samples", inst.id);
+        assert_eq!(
+            inst.limbo_count(),
+            0,
+            "instance {} holds unconfirmed limbo samples",
+            inst.id
+        );
+    }
+}
+
+/// A randomized fault schedule: per-class probabilities drawn from the
+/// case RNG, occasionally zeroing a class so partially-perfect configs
+/// are covered too.
+fn random_transport(rng: &mut Rng) -> TransportConfig {
+    let profile = |rng: &mut Rng| -> FaultProfile {
+        if rng.chance(0.2) {
+            return FaultProfile::perfect();
+        }
+        FaultProfile::uniform(
+            rng.f64() * 0.45,
+            rng.f64() * 0.3,
+            rng.f64(),
+            rng.f64() * 0.01,
+        )
+    };
+    let retransmit_secs = 0.01 + rng.f64() * 0.05;
+    TransportConfig {
+        alloc_req: profile(rng),
+        alloc_ack: profile(rng),
+        stage1: profile(rng),
+        stage2: profile(rng),
+        retransmit_secs,
+        retransmit_budget: 2 + rng.below(6),
+        handshake_timeout_secs: retransmit_secs * (2.0 + rng.f64() * 8.0),
+    }
+}
+
+#[test]
+fn property_fault_schedules_preserve_conservation_at_64_instances() {
+    // ~64 randomized fault schedules on a 64-instance skewed fleet:
+    // whatever the link drops, duplicates, or reorders, samples are
+    // conserved. Batched multi-destination orders toggle per case.
+    testutil::check("fault-conservation-64-instances", 64, |rng| {
+        let instances = 64usize;
+        let mut assignment: Vec<Vec<usize>> = Vec::new();
+        for i in 0..instances {
+            if i % 8 == 0 {
+                // heavy long-tail holders force migration traffic
+                let k = 6 + rng.below(5);
+                assignment.push((0..k).map(|_| 250 + rng.below(250)).collect());
+            } else {
+                let k = rng.below(3);
+                assignment.push((0..k).map(|_| 30 + rng.below(90)).collect());
+            }
+        }
+        let n: u64 = assignment.iter().map(|v| v.len() as u64).sum();
+        let cfg = ClusterConfig {
+            instances,
+            cooldown: (8 + rng.below(17)) as u64,
+            n_samples: 0,
+            max_tokens: 320,
+            seed: rng.below(1 << 30) as u64,
+            transport: random_transport(rng),
+            multi_dest: rng.chance(0.5),
+            ..Default::default()
+        };
+        let mut c = SimCluster::with_assignment(cfg, assignment);
+        let r = c.run();
+        assert_conserved(&c, n);
+        // Flow ledger still balances: every migrated-out sample arrived.
+        let out_total: u64 = r.tier_stats.iter().map(|t| t.migrated_out).sum();
+        let in_total: u64 = r.tier_stats.iter().map(|t| t.migrated_in).sum();
+        assert_eq!(out_total, in_total, "migration flow not conserved");
+    });
+}
+
+#[test]
+fn streaming_under_faults_conserves_arrivals() {
+    // Arrivals + bounded backlog + a hostile link: the admission ledger
+    // (`arrivals == completions + refusals`) and the migration plane
+    // must both stay conserved while interleaving.
+    testutil::check("fault-streaming-conservation", 12, |rng| {
+        let mut cfg = ClusterConfig {
+            instances: 8,
+            n_samples: 96,
+            max_tokens: 256,
+            cooldown: 8,
+            seed: rng.below(1 << 30) as u64,
+            transport: random_transport(rng),
+            multi_dest: rng.chance(0.5),
+            ..Default::default()
+        };
+        cfg.params.max_batch = 4;
+        cfg.pending_bound = 8;
+        let rate = if rng.chance(0.3) { f64::INFINITY } else { 8.0 + rng.f64() * 32.0 };
+        let mut c = SimCluster::streaming(cfg, &ArrivalProcess::poisson(rate))
+            .expect("valid streaming config");
+        let r = c.run();
+        assert_eq!(r.arrivals, 96);
+        assert_eq!(
+            r.arrivals,
+            r.n_samples as u64 + r.admission_refusals,
+            "conservation: arrivals = completions + refusals"
+        );
+        let mut ids: Vec<u64> = c
+            .instances
+            .iter()
+            .flat_map(|x| x.finished.iter().map(|s| s.id))
+            .collect();
+        ids.sort_unstable();
+        let before = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), before, "duplicated sample ids");
+        assert_eq!(ids.len(), r.n_samples);
+        for inst in &c.instances {
+            assert_eq!(inst.limbo_count(), 0);
+        }
+    });
+}
+
+#[test]
+fn aborted_orders_leave_victims_finishing_at_the_source() {
+    // An ack-starved handshake (90% AllocReq drop — the clamp ceiling —
+    // with a one-shot retransmit budget) must abort orders rather than
+    // strand victims: aborts happen, everything still finishes, and the
+    // per-tier flow ledger balances for the few orders that got through.
+    let transport = TransportConfig {
+        alloc_req: FaultProfile::uniform(1.0, 0.0, 0.0, 0.0), // clamped to 0.9
+        retransmit_budget: 1,
+        retransmit_secs: 0.005,
+        handshake_timeout_secs: 0.02,
+        ..TransportConfig::default()
+    };
+    let cfg = ClusterConfig {
+        instances: 4,
+        cooldown: 8,
+        n_samples: 0,
+        max_tokens: 768,
+        seed: 29,
+        transport,
+        ..Default::default()
+    };
+    let mut c = SimCluster::with_assignment(
+        cfg,
+        vec![vec![900; 24], vec![40; 4], vec![40; 4], vec![40; 4]],
+    );
+    let r = c.run();
+    assert!(
+        r.handshake_aborts > 0,
+        "a 90% request-drop link must abort some handshakes"
+    );
+    assert_conserved(&c, 36);
+    let out_total: u64 = r.tier_stats.iter().map(|t| t.migrated_out).sum();
+    let in_total: u64 = r.tier_stats.iter().map(|t| t.migrated_in).sum();
+    assert_eq!(out_total, in_total);
+    // Aborted victims finished *somewhere*, and the heavy source did the
+    // bulk of the work itself (most of its orders died in handshake).
+    assert!(
+        c.instances[0].finished.len() >= 24usize.saturating_sub(r.migrations as usize),
+        "source finished {} of its 24, {} migrated",
+        c.instances[0].finished.len(),
+        r.migrations
+    );
+}
+
+#[test]
+fn fault_runs_replay_bit_for_bit_at_scale() {
+    // Determinism of the full fault pipeline at 64 instances: the same
+    // (seed, TransportConfig) replays the run — schedule, retransmits,
+    // drops — bit-for-bit.
+    let mk = || {
+        let mut assignment: Vec<Vec<usize>> = Vec::new();
+        for i in 0..64 {
+            if i % 8 == 0 {
+                assignment.push(vec![400; 8]);
+            } else {
+                assignment.push(vec![50; 2]);
+            }
+        }
+        let cfg = ClusterConfig {
+            instances: 64,
+            cooldown: 16,
+            n_samples: 0,
+            max_tokens: 320,
+            seed: 31,
+            transport: TransportConfig::uniform(FaultProfile::uniform(0.25, 0.15, 0.5, 0.01)),
+            multi_dest: true,
+            ..Default::default()
+        };
+        SimCluster::with_assignment(cfg, assignment).run()
+    };
+    let a: ClusterResult = mk();
+    let b: ClusterResult = mk();
+    assert_eq!(a.total_tokens, b.total_tokens);
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    assert_eq!(a.migrations, b.migrations);
+    assert_eq!(a.retransmits, b.retransmits);
+    assert_eq!(a.handshake_aborts, b.handshake_aborts);
+    assert_eq!((a.link_drops, a.link_dups), (b.link_drops, b.link_dups));
+    assert!(a.link_drops > 0, "the schedule must actually fault");
+}

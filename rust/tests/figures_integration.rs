@@ -208,6 +208,22 @@ fn streaming_figure_shows_the_throughput_latency_trade() {
 }
 
 #[test]
+fn fault_figure_sweeps_drop_rate_on_the_hetero_fleet() {
+    // The drop-rate sweep must render every row, show a fault-free
+    // baseline (0% row with zero retransmissions shown as " 0") and
+    // engage the reliability machinery at non-zero drop.
+    let s = figures::fig_fault(SEED);
+    // Match the full right-aligned drop-rate cell ({:>5.0}%), so "0%"
+    // cannot be satisfied by the "40%"/"60%" rows.
+    for pct in ["    0%", "    5%", "   10%", "   20%", "   40%", "   60%"] {
+        assert!(s.contains(pct), "missing {:?} row:\n{s}", pct);
+    }
+    assert!(s.contains("retrans"), "{s}");
+    assert!(s.contains("success"), "{s}");
+    assert!(!s.contains("NaN"), "{s}");
+}
+
+#[test]
 fn all_figures_render() {
     for id in figures::ALL_FIGURES {
         let out = figures::run_figure(id, SEED).unwrap();

@@ -71,6 +71,43 @@ fn infinite_rate_streaming_is_bit_identical_to_batch_run() {
 }
 
 #[test]
+fn golden_guard_streaming_with_perfect_transport_is_bit_identical() {
+    // The `[transport]` golden guard on the streaming path: an explicit
+    // all-zero fault config must not perturb a single bit of the
+    // rate → ∞ parity runs (same RNG draws, same event order, no
+    // reliability machinery engaged).
+    use rlhfspec::coordinator::transport::TransportConfig;
+    for seed in [0u64, 42] {
+        let cfg = ClusterConfig {
+            instances: 8,
+            n_samples: 192,
+            max_tokens: 512,
+            cooldown: 24,
+            seed,
+            ..Default::default()
+        };
+        let mut with_transport = cfg.clone();
+        with_transport.transport = TransportConfig::default();
+        let base = SimCluster::streaming(cfg, &ArrivalProcess::burst())
+            .expect("valid streaming config")
+            .run();
+        let guarded = SimCluster::streaming(with_transport, &ArrivalProcess::burst())
+            .expect("valid streaming config")
+            .run();
+        assert_eq!(guarded.total_tokens, base.total_tokens, "seed {seed}");
+        assert_eq!(
+            guarded.makespan.to_bits(),
+            base.makespan.to_bits(),
+            "seed {seed}"
+        );
+        assert_eq!(guarded.migrations, base.migrations, "seed {seed}");
+        assert_eq!(guarded.retransmits, 0, "seed {seed}");
+        assert_eq!(guarded.handshake_aborts, 0, "seed {seed}");
+        assert_eq!((guarded.link_drops, guarded.link_dups), (0, 0), "seed {seed}");
+    }
+}
+
+#[test]
 fn streaming_conserves_arrivals_at_128_instances() {
     // 128 instances × 2 decode slots → admission budget 8 per instance
     // (4× capacity), fleet budget 1024. A burst of 1400 with a backlog

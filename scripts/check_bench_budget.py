@@ -9,11 +9,22 @@ schedules, at batch size 64 (the ROADMAP regression budget). Every
 carrying the modeled step duration, so the gate needs no knowledge of
 the cost model.
 
-Usage: check_bench_budget.py [BENCH_core.json] [--budget-pct 1.0]
+With `--baseline`, also compares each gated row's overhead percentage
+against the committed repo-root seed `BENCH_core.json` (the bench
+trajectory baseline): a row fails when it regresses by more than
+`--regress-factor` (default 3x, generous because the percentage still
+carries machine-speed noise in its wall-time numerator) AND its absolute
+overhead exceeds a quarter of the hard budget — so tiny-on-tiny noise
+never trips the gate, but a real scheduler regression does even while
+still under the hard 1% wall.
 
-Exit codes: 0 = within budget, 1 = over budget, 2 = malformed input
-(missing rows count as malformed — a silently skipped gate is worse
-than a failing one).
+Usage: check_bench_budget.py [BENCH_core.json] [--budget-pct 1.0]
+                             [--baseline BENCH_baseline.json]
+                             [--regress-factor 3.0]
+
+Exit codes: 0 = within budget, 1 = over budget/regressed, 2 = malformed
+input (missing rows count as malformed — a silently skipped gate is
+worse than a failing one).
 """
 
 import argparse
@@ -23,26 +34,46 @@ import sys
 GATED_BATCH = "b64"
 
 
+def load_rows(path):
+    """Parse a BENCH_*.json file into {name: mean_ns}; None on error."""
+    try:
+        with open(path) as f:
+            rows = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: cannot parse {path}: {e}", file=sys.stderr)
+        return None
+    by_name = {}
+    for row in rows:
+        if not isinstance(row, dict) or "name" not in row or "mean_ns" not in row:
+            print(f"error: malformed row {row!r} in {path}", file=sys.stderr)
+            return None
+        by_name[row["name"]] = float(row["mean_ns"])
+    return by_name
+
+
+def overhead_pct(by_name, name):
+    """Scheduler overhead %% of the paired modeled step; None if either
+    row is absent (e.g. a trimmed baseline) or the pairing is unusable."""
+    modeled = by_name.get(f"{name}/modeled-step")
+    if name not in by_name or modeled is None or modeled <= 0:
+        return None
+    return 100.0 * by_name[name] / modeled
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("path", nargs="?", default="BENCH_core.json")
     ap.add_argument("--budget-pct", type=float, default=1.0,
                     help="max scheduler overhead as %% of a modeled step")
+    ap.add_argument("--baseline", default=None,
+                    help="committed seed BENCH_core.json to compare against")
+    ap.add_argument("--regress-factor", type=float, default=3.0,
+                    help="max allowed overhead-%% growth vs the baseline")
     args = ap.parse_args()
 
-    try:
-        with open(args.path) as f:
-            rows = json.load(f)
-    except (OSError, json.JSONDecodeError) as e:
-        print(f"error: cannot parse {args.path}: {e}", file=sys.stderr)
+    by_name = load_rows(args.path)
+    if by_name is None:
         return 2
-
-    by_name = {}
-    for row in rows:
-        if not isinstance(row, dict) or "name" not in row or "mean_ns" not in row:
-            print(f"error: malformed row {row!r}", file=sys.stderr)
-            return 2
-        by_name[row["name"]] = float(row["mean_ns"])
 
     gated = sorted(
         name for name in by_name
@@ -54,34 +85,55 @@ def main() -> int:
               "the budget gate has nothing to check", file=sys.stderr)
         return 2
 
+    baseline = None
+    if args.baseline is not None:
+        baseline = load_rows(args.baseline)
+        if baseline is None:
+            return 2
+
     failures = []
     for name in gated:
-        modeled_name = f"{name}/modeled-step"
-        if modeled_name not in by_name:
-            print(f"error: {name} has no paired {modeled_name} row",
+        pct = overhead_pct(by_name, name)
+        if pct is None:
+            print(f"error: {name} has no usable {name}/modeled-step row",
                   file=sys.stderr)
             return 2
         sched_ns = by_name[name]
-        modeled_ns = by_name[modeled_name]
-        if modeled_ns <= 0:
-            print(f"error: non-positive modeled step for {name}",
-                  file=sys.stderr)
-            return 2
-        pct = 100.0 * sched_ns / modeled_ns
+        modeled_ns = by_name[f"{name}/modeled-step"]
         status = "OK" if pct <= args.budget_pct else "OVER BUDGET"
         print(f"{name}: scheduler {sched_ns / 1e3:.2f}µs vs modeled step "
               f"{modeled_ns / 1e6:.2f}ms = {pct:.4f}% "
               f"(budget {args.budget_pct}%) {status}")
         if pct > args.budget_pct:
             failures.append(name)
+            continue
+
+        if baseline is None:
+            continue
+        base_pct = overhead_pct(baseline, name)
+        if base_pct is None:
+            # A brand-new gated row has no trajectory yet: report, don't
+            # fail — the next seed refresh will pick it up.
+            print(f"  (no baseline row for {name}; trajectory starts here)")
+            continue
+        ratio = pct / base_pct if base_pct > 0 else float("inf")
+        regressed = (ratio > args.regress_factor
+                     and pct > args.budget_pct / 4.0)
+        trend = "REGRESSED" if regressed else "ok"
+        print(f"  vs committed baseline: {base_pct:.4f}% -> {pct:.4f}% "
+              f"({ratio:.2f}x, allowed {args.regress_factor}x) {trend}")
+        if regressed:
+            failures.append(f"{name} (baseline regression)")
 
     if failures:
         print(f"FAIL: {len(failures)} row(s) over the "
-              f"{args.budget_pct}% scheduler-overhead budget: "
+              f"{args.budget_pct}% scheduler-overhead budget "
+              f"or regressed vs the committed baseline: "
               f"{', '.join(failures)}", file=sys.stderr)
         return 1
+    against = " and the committed baseline" if baseline is not None else ""
     print(f"PASS: all {len(gated)} gated rows within the "
-          f"{args.budget_pct}% budget")
+          f"{args.budget_pct}% budget{against}")
     return 0
 
 
