@@ -11,6 +11,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::transport::TransportConfig;
+use crate::sim::crash::CrashConfig;
 
 /// Speculative generation knobs (paper §2.2, §5).
 #[derive(Clone, Debug)]
@@ -151,10 +152,16 @@ pub struct RunConfig {
     pub rlhf: RlhfConfig,
     /// `[transport]` — §6.2 message-transport fault model + reliability
     /// knobs (see [`TransportConfig`]). Fault-free by default. Honored
-    /// by the simulated link; the threaded driver's in-process channels
-    /// are reliable, so `GenerationService::start` *rejects* a
-    /// non-perfect section instead of silently ignoring it.
+    /// by the simulated link *and* (since the driver-channel fault port)
+    /// the threaded driver's monitor relay, which injects the same
+    /// per-class drop/duplicate schedules into its command channels.
     pub transport: TransportConfig,
+    /// `[crash]` — whole-instance crash/recovery fault model (see
+    /// [`CrashConfig`]). Crash-free by default. Honored by the simulated
+    /// cluster; the threaded driver cannot kill its own worker threads,
+    /// so `GenerationService::start` *rejects* a non-zero section
+    /// instead of silently ignoring it.
+    pub crash: CrashConfig,
     pub seed: u64,
 }
 
@@ -225,13 +232,15 @@ impl RunConfig {
             "rlhf.gamma" => self.rlhf.gamma = f(val)?,
             "rlhf.gae_lambda" => self.rlhf.gae_lambda = f(val)?,
             _ => {
-                // `[transport]` keys (fault profiles + reliability
-                // knobs) are parsed by TransportConfig itself — one
-                // config surface, even though only the simulated link
-                // can inject the faults (the driver rejects non-perfect
-                // sections at start).
+                // `[transport]` / `[crash]` keys are parsed by their own
+                // config types — one config surface for both planes
+                // (the driver rejects a non-zero `[crash]` section at
+                // start; crash injection is simulation-only).
                 if let Some(rest) = key.strip_prefix("transport.") {
                     return self.transport.set(rest, val);
+                }
+                if let Some(rest) = key.strip_prefix("crash.") {
+                    return self.crash.set(rest, val);
                 }
                 bail!("unknown config key")
             }
@@ -330,6 +339,31 @@ mod tests {
         // Defaults stay fault-free (today's behavior).
         assert!(RunConfig::default().transport.is_perfect());
         assert_eq!(RunConfig::default().realloc.period_secs, 0.0);
+    }
+
+    #[test]
+    fn crash_section_parses() {
+        let src = r#"
+            [crash]
+            rate_per_sec = 0.1
+            recover_secs = 2.5
+            max_crashes = 12
+            [transport]
+            stage1_ack = false
+        "#;
+        let mut kv = BTreeMap::new();
+        parse_toml_subset(src, &mut kv).unwrap();
+        let cfg = RunConfig::load(None, &kv).unwrap();
+        assert!(!cfg.crash.is_off());
+        assert_eq!(cfg.crash.rate_per_sec, 0.1);
+        assert_eq!(cfg.crash.recover_secs, 2.5);
+        assert_eq!(cfg.crash.max_crashes, 12);
+        assert!(!cfg.transport.stage1_ack);
+        // Defaults stay crash-free (today's behavior).
+        assert!(RunConfig::default().crash.is_off());
+        let mut bad = RunConfig::default();
+        assert!(bad.set("crash.nope", "1").is_err());
+        assert!(bad.set("crash.rate_per_sec", "abc").is_err());
     }
 
     #[test]

@@ -144,4 +144,8 @@ pub trait DecodeBackend {
         delta: Self::KvPayload,
         control: Vec<Self::Control>,
     ) -> Result<Vec<Self::Sample>>;
+    /// Destination: drop a stashed Stage-1 bulk whose order will never
+    /// complete here (the order was cancelled after a peer crash, or this
+    /// instance itself is being crash-drained). Default: nothing stashed.
+    fn stage1_discard(&mut self, _order: u64) {}
 }

@@ -38,7 +38,26 @@
 //! * a handshake that never completes is **aborted**
 //!   ([`InstanceCore::abort_handshake`]): waiting tasks return to the
 //!   queue and live victims — which never left the decode batch during
-//!   the handshake — simply keep decoding at the source.
+//!   the handshake — simply keep decoding at the source;
+//! * once the destination acknowledges the Stage-1 bulk, the source may
+//!   **release the bulk early** ([`InstanceCore::release_bulk`]): the
+//!   held KV bytes are freed (only the small Stage-2 delta remains the
+//!   source's responsibility) and [`InstanceCore::limbo_bytes`] shrinks
+//!   — the sample records themselves stay tracked until the order
+//!   confirms, so crash recovery can still requeue them.
+//!
+//! **Crash-tolerant.** A whole-instance loss is survivable: the carrier
+//! salvages everything the coordinator conceptually still knows about —
+//! resident samples, queued tasks and unconfirmed limbo entries — via
+//! [`InstanceCore::crash_drain`], requeues it onto survivors (drafting
+//! state and KV are lost; survivors re-prefill), and uses
+//! [`InstanceCore::order_applied`] / [`InstanceCore::cancel_inbound_order`]
+//! / [`InstanceCore::reclaim_limbo`] to reconcile in-flight orders with
+//! dead peers without losing or duplicating a sample. The order-dedup
+//! ledger (`applied_orders`) survives a crash: it is tiny
+//! coordinator-replicated metadata (order ids only), re-seeded on
+//! restart, which is what keeps stale in-flight Stage-2 copies from
+//! double-applying after a recovery.
 
 use std::collections::BTreeSet;
 
@@ -176,6 +195,35 @@ struct MigOutState<B: DecodeBackend> {
     stage1_sent: bool,
 }
 
+/// Victims shipped in one not-yet-confirmed Stage-2 packet, held on the
+/// source until [`InstanceCore::confirm_order`].
+struct LimboEntry<B: DecodeBackend> {
+    order: u64,
+    samples: Vec<B::Sample>,
+    /// The destination acknowledged the Stage-1 bulk: the source freed
+    /// the bulk KV bytes ([`InstanceCore::release_bulk`]) and can no
+    /// longer re-send it — only the sample records remain held, for
+    /// crash-recovery requeueing.
+    bulk_released: bool,
+}
+
+/// Everything a crashed instance's coordinator record salvages: the
+/// samples/tasks that must be requeued onto survivors. Returned by
+/// [`InstanceCore::crash_drain`].
+pub struct CrashSalvage<B: DecodeBackend> {
+    /// Live + parked samples. Their KV and drafting state died with the
+    /// instance; survivors must re-prefill them.
+    pub resident: Vec<B::Sample>,
+    /// Queued tasks (never prefilled — no device state to lose),
+    /// including tasks reserved by in-flight outbound handshakes.
+    pub waiting: Vec<B::Task>,
+    /// Unconfirmed limbo entries as `(order, shipped samples,
+    /// bulk_released)`. The carrier decides per order whether the
+    /// destination already applied the Stage-2 (samples live there) or
+    /// the samples must be requeued.
+    pub limbo: Vec<(u64, Vec<B::Sample>, bool)>,
+}
+
 /// One generation instance: the adaptive decode loop over any backend.
 pub struct InstanceCore<B: DecodeBackend> {
     /// Cluster-wide instance index.
@@ -213,7 +261,7 @@ pub struct InstanceCore<B: DecodeBackend> {
     /// Victims shipped in an unconfirmed Stage-2, keyed by order: held
     /// until [`InstanceCore::confirm_order`] so a lost packet can be
     /// retransmitted without losing the samples.
-    limbo: Vec<(u64, Vec<B::Sample>)>,
+    limbo: Vec<LimboEntry<B>>,
     /// Destination-side dedup: orders whose Stage-2 already applied.
     applied_orders: BTreeSet<u64>,
     /// Destination-side: orders whose Stage-1 bulk has been stored.
@@ -588,8 +636,11 @@ impl<B: DecodeBackend> InstanceCore<B> {
             (control.len() + state.waiting_tasks.len()) as u64;
         // Hold the shipped samples until the order is confirmed: a lost
         // Stage-2 is the carrier's to retransmit, not ours to lose.
-        self.limbo
-            .push((state.order, victims.into_iter().map(|(s, _)| s).collect()));
+        self.limbo.push(LimboEntry {
+            order: state.order,
+            samples: victims.into_iter().map(|(s, _)| s).collect(),
+            bulk_released: false,
+        });
         Some(Stage2Msg {
             order: state.order,
             from: self.id,
@@ -603,7 +654,90 @@ impl<B: DecodeBackend> InstanceCore<B> {
     /// Source: the destination confirmed `order` (its Stage-2 applied) —
     /// release the limbo copy of the shipped victims. Idempotent.
     pub fn confirm_order(&mut self, order: u64) {
-        self.limbo.retain(|(o, _)| *o != order);
+        self.limbo.retain(|e| e.order != order);
+    }
+
+    /// Source: the destination acknowledged the Stage-1 bulk of `order`
+    /// — release the held bulk KV early (the Stage-2 delta stays the
+    /// source's to retransmit; the sample records stay tracked until
+    /// [`Self::confirm_order`]). Returns false for an unknown order.
+    /// Idempotent.
+    pub fn release_bulk(&mut self, order: u64) -> bool {
+        match self.limbo.iter_mut().find(|e| e.order == order) {
+            Some(e) => {
+                e.bulk_released = true;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Source: take back the limbo entry of `order` (its destination
+    /// crashed before confirming). Returns the shipped samples and
+    /// whether the bulk had already been released — released bulks mean
+    /// the source freed the KV, so the samples need a re-prefill
+    /// wherever they land; unreleased bulks were retained for
+    /// retransmission and can resume at the source directly.
+    pub fn reclaim_limbo(&mut self, order: u64) -> Option<(Vec<B::Sample>, bool)> {
+        let pos = self.limbo.iter().position(|e| e.order == order)?;
+        let e = self.limbo.remove(pos);
+        Some((e.samples, e.bulk_released))
+    }
+
+    /// Coordinator record of a dying instance: drain everything that
+    /// must be requeued onto survivors — live + parked samples (KV
+    /// lost), queued tasks (including tasks reserved by in-flight
+    /// handshakes, which die with the instance) and unconfirmed limbo
+    /// entries. Inbound Stage-1 bulks stored here are discarded (they
+    /// died with the device memory); the destination-side dedup ledger
+    /// (`applied_orders`) survives — see the module docs.
+    pub fn crash_drain(&mut self) -> CrashSalvage<B> {
+        self.metrics.crashes += 1;
+        let mut resident: Vec<B::Sample> = self.live.drain(..).collect();
+        resident.extend(self.parked.drain(..));
+        let mut waiting: Vec<B::Task> = self.waiting.drain(..).collect();
+        for mut st in self.mig_out.drain(..) {
+            waiting.extend(st.waiting_tasks.drain(..));
+        }
+        let limbo = self
+            .limbo
+            .drain(..)
+            .map(|e| (e.order, e.samples, e.bulk_released))
+            .collect();
+        let stored: Vec<u64> = self.stage1_seen.iter().copied().collect();
+        for order in stored {
+            self.backend.stage1_discard(order);
+        }
+        self.stage1_seen.clear();
+        self.backend.on_batch_change();
+        CrashSalvage { resident, waiting, limbo }
+    }
+
+    /// Destination: has `order`'s Stage-2 already been applied here?
+    /// Carriers use this to decide whether a crashed source's limbo copy
+    /// is redundant (the samples live here) or must be requeued.
+    pub fn order_applied(&self, order: u64) -> bool {
+        self.applied_orders.contains(&order)
+    }
+
+    /// Destination: is `order`'s Stage-1 bulk currently stored (not yet
+    /// consumed by its Stage-2)? Carriers use this to predict an
+    /// [`Stage2Disposition::AwaitingStage1`] without consuming the
+    /// packet — e.g. to bounce a delivery whose bulk died in a crash.
+    pub fn stage1_stored(&self, order: u64) -> bool {
+        self.stage1_seen.contains(&order)
+    }
+
+    /// Destination: cancel an inbound order whose samples were requeued
+    /// elsewhere (its source crashed before the order confirmed, or this
+    /// instance crashed with the packet in flight). Any late-arriving
+    /// Stage-2 copy then reports [`Stage2Disposition::Duplicate`] and
+    /// changes nothing; a stored Stage-1 bulk is discarded. Idempotent.
+    pub fn cancel_inbound_order(&mut self, order: u64) {
+        self.applied_orders.insert(order);
+        if self.stage1_seen.remove(&order) {
+            self.backend.stage1_discard(order);
+        }
     }
 
     /// Source: abort a handshake that never completed (lost AllocReq/Ack
@@ -630,7 +764,20 @@ impl<B: DecodeBackend> InstanceCore<B> {
 
     /// Samples shipped in not-yet-confirmed Stage-2 packets (limbo).
     pub fn limbo_count(&self) -> usize {
-        self.limbo.iter().map(|(_, v)| v.len()).sum()
+        self.limbo.iter().map(|e| e.samples.len()).sum()
+    }
+
+    /// KV bytes still held for limbo retransmission: full snapshots for
+    /// unacked bulks, 0 for entries whose bulk was released early
+    /// ([`Self::release_bulk`]). This is the memory the Stage-1 ack
+    /// reclaims ahead of the Stage-2 confirmation.
+    pub fn limbo_bytes(&self) -> usize {
+        self.limbo
+            .iter()
+            .filter(|e| !e.bulk_released)
+            .flat_map(|e| e.samples.iter())
+            .map(|s| self.backend.kv_bytes(s, 0, B::committed_len(s)))
+            .sum()
     }
 
     // ------------------------------------------------------------------

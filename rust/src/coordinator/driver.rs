@@ -38,6 +38,27 @@
 //! between decode-step events, dispatching each task to the least-loaded
 //! instance — mirroring the virtual cluster's admission policy — and the
 //! report carries per-sample TTFT/TPOT/queueing-delay percentiles).
+//!
+//! **Fault injection on the relay.** The monitor *is* this plane's
+//! link: every §6.2 protocol event crosses the monitor's
+//! `relay_protocol_event` pump. A non-perfect
+//! `[transport]` section therefore injects faults right there — each
+//! relayed message is planned through the same seeded
+//! [`FaultyLink`](crate::sim::link::FaultyLink) the virtual cluster
+//! uses: an empty plan drops the relay, extra entries duplicate it
+//! (extra *delays* are meaningless at in-process channel speeds and are
+//! ignored; reordering still arises from worker-thread interleaving).
+//! The monitor then runs the same reliability layer as the sim carrier:
+//! held per-order message copies, wall-clock retransmit timers, a
+//! bounded handshake phase that aborts into `Cmd::AbortOrder`, and an
+//! unbounded committed phase that resends Stage-1/Stage-2 until the
+//! destination worker's `Stage2Applied` ack — planned on the reverse
+//! path — confirms the order and releases the source's limbo. So the
+//! hardened endpoint code paths (idempotent apply, limbo-until-confirm,
+//! abort-returns-victims) are exercised on real PJRT workers, not just
+//! the virtual clock. Instance-*crash* injection (`[crash]`) remains
+//! simulation-only: the driver cannot kill and restart its own worker
+//! threads, so `GenerationService::start` rejects a non-zero section.
 
 use std::collections::BTreeMap;
 use std::rc::Rc;
@@ -47,14 +68,18 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::config::RunConfig;
-use crate::coordinator::core::{AckOutcome, MigrateStart, Stage1Msg, Stage2Msg};
+use crate::coordinator::core::{
+    AckOutcome, MigrateStart, Stage1Msg, Stage2Disposition, Stage2Msg,
+};
 use crate::coordinator::instance::{
     DecodeMode, FinishedSample, GenerationInstance, PjrtBackend, SampleTask,
 };
 use crate::coordinator::metrics::{InstanceMetrics, LatencySummary};
 use crate::coordinator::migration::AllocRequest;
 use crate::coordinator::reallocator::Reallocator;
+use crate::coordinator::transport::{MsgClass, PerfectTransport, Transport, TransportConfig};
 use crate::runtime::{HostTensor, Manifest, ModelStore};
+use crate::sim::link::FaultyLink;
 use crate::utils::stats::Ema;
 
 // ---------------------------------------------------------------------------
@@ -68,10 +93,17 @@ enum Cmd {
     DeliverAllocReq(AllocRequest),
     DeliverStage1(Stage1Msg<PjrtBackend>),
     DeliverStage2(Stage2Msg<PjrtBackend>),
-    /// Source-side confirmation that `order`'s Stage-2 was relayed:
-    /// releases the endpoint's limbo copy. The monitor's channels are
-    /// reliable FIFO, so relay time is commit time on this plane.
+    /// Source-side confirmation of `order`: releases the endpoint's
+    /// limbo copy. On the perfect transport the monitor sends this at
+    /// Stage-2 relay time (the in-process channels are reliable FIFO, so
+    /// relay time is commit time); on a faulty transport only the
+    /// destination worker's `Stage2Applied` ack — itself subject to the
+    /// fault plan — triggers it.
     ConfirmOrder(u64),
+    /// Monitor-side handshake timeout/budget exhaustion on a faulty
+    /// transport: abort the outbound order, returning its waiting tasks
+    /// to the queue (live victims never left the batch).
+    AbortOrder(u64),
     /// Broadcast fresh actor/draft weights (next RLHF iteration).
     UpdateWeights(Vec<HostTensor>, Vec<HostTensor>),
     /// Emit a Done report for the current batch but keep running.
@@ -102,6 +134,15 @@ enum Event {
     Stage2 {
         to: usize,
         pkt: Stage2Msg<PjrtBackend>,
+    },
+    /// Destination worker applied (or deduplicated) `order`'s Stage-2:
+    /// the §6.2 confirmation. The monitor relays it as
+    /// `Cmd::ConfirmOrder` on faulty transports (after planning it on
+    /// the reverse fault path) and ignores it on the perfect one, where
+    /// confirmation already happened at relay time.
+    Stage2Applied {
+        to_source: usize,
+        order: u64,
     },
     MigrationRefused,
     Done {
@@ -151,6 +192,17 @@ pub struct GenerationReport {
     pub realloc_decisions: u64,
     /// Seconds the monitor spent inside reallocation decisions (§7.7 SRD).
     pub srd_secs: f64,
+    /// Relay retransmissions the monitor performed on a faulty
+    /// `[transport]` (handshake resends + committed Stage-1/2 resends).
+    /// 0 on the perfect transport.
+    pub retransmits: u64,
+    /// Orders the monitor aborted after the handshake timeout/budget on
+    /// a faulty `[transport]`. 0 on the perfect transport.
+    pub handshake_aborts: u64,
+    /// Protocol relays the fault plan dropped during this run.
+    pub link_drops: u64,
+    /// Protocol relays the fault plan duplicated during this run.
+    pub link_dups: u64,
     /// Total generated tokens across instances.
     pub total_tokens: u64,
     /// Per-sample serving-latency percentiles (queueing delay, TTFT,
@@ -317,9 +369,22 @@ impl Worker {
             }
             Cmd::DeliverStage1(pkt) => self.core.handle_stage1(pkt)?,
             Cmd::DeliverStage2(pkt) => {
-                self.core.handle_stage2(pkt)?;
+                let (order, src) = (pkt.order, pkt.from);
+                let disp = self.core.handle_stage2(pkt)?;
+                // Applied *and* duplicate deliveries re-ack (the previous
+                // ack relay may have been the dropped copy); a delta
+                // whose Stage-1 bulk has not arrived stays unacked — the
+                // monitor's retransmit timer resends both stages.
+                if disp != Stage2Disposition::AwaitingStage1 {
+                    let _ = self
+                        .events
+                        .send(Event::Stage2Applied { to_source: src, order });
+                }
             }
             Cmd::ConfirmOrder(order) => self.core.confirm_order(order),
+            Cmd::AbortOrder(order) => {
+                self.core.abort_handshake(order);
+            }
             Cmd::UpdateWeights(tw, dw) => {
                 self.core.backend.target.set_weights(&tw)?;
                 self.core.backend.draft.set_weights(&dw)?;
@@ -394,8 +459,51 @@ impl ReallocTicker {
     }
 }
 
+/// Monitor-side carrier state of one in-flight migration order on a
+/// faulty `[transport]` — the wall-clock mirror of the sim carrier's
+/// order state: held message copies feed the retransmit timer, and the
+/// handshake bookkeeping feeds the abort deadline. Never created on the
+/// perfect transport.
+struct HeldOrder {
+    from: usize,
+    to: usize,
+    /// The destination's affirmative allocation reply was relayed: stop
+    /// resending the request and wait for the worker's Stage-1/Stage-2
+    /// events (they arrive at its next step boundary).
+    acked: bool,
+    /// Stage-2 relayed: the order can no longer abort (the victims sit
+    /// in the source's limbo); resend until the `Stage2Applied` ack.
+    committed: bool,
+    /// Handshake retransmissions used (bounded by
+    /// [`TransportConfig::retransmit_budget`]).
+    resends: usize,
+    /// First AllocReq relay instant — anchor of the
+    /// [`TransportConfig::handshake_timeout_secs`] deadline.
+    started: Instant,
+    /// Last (re)send instant — anchor of the retransmit timer.
+    last_send: Instant,
+    /// Held handshake request (handshake resends).
+    req: Option<AllocRequest>,
+    /// Held Stage-1 bulk copy (committed resends; the worker dedups).
+    stage1: Option<Stage1Msg<PjrtBackend>>,
+    /// Held Stage-2 copy (committed resends; the worker dedups).
+    stage2: Option<Stage2Msg<PjrtBackend>>,
+    /// Committed-phase resend interval, doubled after every resend (up
+    /// to [`COMMITTED_BACKOFF_CAP_SECS`]). The channels themselves are
+    /// reliable — the usual reason an ack is missing is a *busy* worker
+    /// (a first decode step can compile for minutes), and resending the
+    /// full KV bulk every base period would flood its queue with
+    /// duplicate applies. Loss recovery stays unbounded, just sparser.
+    backoff_secs: f64,
+}
+
+/// Ceiling of the committed-phase resend backoff: after a long worker
+/// stall the order still settles within a second of the worker waking.
+const COMMITTED_BACKOFF_CAP_SECS: f64 = 1.0;
+
 /// Assemble the final [`GenerationReport`] from the monitor accumulators
 /// (shared by `run_batch` and `run_streaming`).
+#[allow(clippy::too_many_arguments)]
 fn assemble_report(
     all_finished: Vec<FinishedSample>,
     done_reports: BTreeMap<usize, InstanceReport>,
@@ -404,6 +512,9 @@ fn assemble_report(
     migration_refusals: u64,
     realloc_decisions: u64,
     srd_secs: f64,
+    retransmits: u64,
+    handshake_aborts: u64,
+    link_faults: (u64, u64),
 ) -> GenerationReport {
     let total_tokens = done_reports.values().map(|r| r.metrics.tokens_out).sum();
     let latencies: Vec<_> = all_finished.iter().filter_map(|f| f.latency).collect();
@@ -415,6 +526,10 @@ fn assemble_report(
         migration_refusals,
         realloc_decisions,
         srd_secs,
+        retransmits,
+        handshake_aborts,
+        link_drops: link_faults.0,
+        link_dups: link_faults.1,
         total_tokens,
         latency: LatencySummary::from_samples(&latencies),
     }
@@ -442,6 +557,21 @@ pub struct GenerationService {
     /// across batches, so a stale Stage-2 from a previous batch can
     /// never collide with a live order's dedup key.
     next_order: u64,
+    /// The §6.2 relay fault plan: [`PerfectTransport`] when the
+    /// `[transport]` section is fault-free (zero-overhead relays, PR-4
+    /// behavior), else a seeded [`FaultyLink`] shared with the sim plane.
+    /// `+ Send` keeps the service itself movable across threads, as it
+    /// was before the fault port.
+    link: Box<dyn Transport + Send>,
+    /// Cached `!link.is_perfect()`: engages the monitor's reliability
+    /// layer (held orders, retransmit pump, handshake aborts).
+    faulty: bool,
+    /// In-flight orders on the faulty relay, keyed by order id.
+    held: BTreeMap<u64, HeldOrder>,
+    /// Relay retransmissions performed this batch.
+    retransmits: u64,
+    /// Orders aborted by the monitor's handshake timeout this batch.
+    handshake_aborts: u64,
 }
 
 impl GenerationService {
@@ -454,19 +584,26 @@ impl GenerationService {
         target_weights: &[HostTensor],
         draft_weights: &[HostTensor],
     ) -> Result<GenerationService> {
-        // The real plane's carrier is in-process channels — reliable
-        // FIFO by construction, so a `[transport]` fault model cannot
-        // be honored here. Reject it loudly rather than silently
-        // ignoring the config (fault injection on the threaded driver
-        // is a ROADMAP follow-up; the simulated plane honors the same
-        // section via `ClusterConfig::transport`).
-        if !cfg.transport.is_perfect() {
+        // The monitor relay honors the `[transport]` fault model (see
+        // the module docs) — but whole-instance crash injection cannot
+        // be: the driver owns its worker threads and killing one would
+        // tear down the process state a real crash destroys for free.
+        // Reject a non-zero `[crash]` section loudly rather than
+        // silently ignoring it (the simulated plane honors it via
+        // `ClusterConfig::crash`).
+        if !cfg.crash.is_off() {
             return Err(anyhow!(
-                "[transport] fault probabilities are set, but the threaded driver's \
-                 in-process channels are reliable and cannot inject faults; use the \
-                 simulation plane (ClusterConfig::transport) for fault schedules"
+                "[crash] instance-crash injection is set, but the threaded driver \
+                 cannot kill and restart its own worker threads; use the simulation \
+                 plane (ClusterConfig::crash) for crash schedules"
             ));
         }
+        let link: Box<dyn Transport + Send> = if cfg.transport.is_perfect() {
+            Box::new(PerfectTransport)
+        } else {
+            Box::new(FaultyLink::new(cfg.transport.clone(), cfg.seed))
+        };
+        let faulty = !link.is_perfect();
         let n_inst = cfg.rlhf.instances.max(1);
         let manifest = Manifest::load(artifacts_dir)?;
         let (ev_tx, ev_rx) = channel::<Event>();
@@ -528,6 +665,11 @@ impl GenerationService {
             mode,
             arrival_queue: Vec::new(),
             next_order: 1,
+            link,
+            faulty,
+            held: BTreeMap::new(),
+            retransmits: 0,
+            handshake_aborts: 0,
         })
     }
 
@@ -596,31 +738,152 @@ impl GenerationService {
     }
 
     /// Relay a pure §6.2 protocol event between workers (AllocReq/Ack,
-    /// Stage 1/2, refusal accounting). Returns the event back when it is
-    /// not a relay (Progress/Done/Fatal) so the calling monitor loop can
-    /// apply its own bookkeeping — `run_batch` and `run_streaming` share
-    /// this pump so a protocol change cannot diverge between them.
+    /// Stage 1/2, confirmation, refusal accounting). Returns the event
+    /// back when it is not a relay (Progress/Done/Fatal) so the calling
+    /// monitor loop can apply its own bookkeeping — `run_batch` and
+    /// `run_streaming` share this pump so a protocol change cannot
+    /// diverge between them.
+    ///
+    /// On a faulty `[transport]` every relay is planned through the
+    /// seeded link first: an empty plan drops it (the retransmit pump
+    /// recovers), extra entries duplicate it (the endpoints dedup).
     fn relay_protocol_event(&mut self, ev: Event, refusals: &mut u64) -> Option<Event> {
         match ev {
             Event::AllocReq { to, req } => {
-                let _ = self.cmd_txs[to].send(Cmd::DeliverAllocReq(req));
+                if self.faulty {
+                    let (order, from) = (req.order, req.from_instance);
+                    let copies = self.link.plan(MsgClass::AllocReq, from, to).len();
+                    let now = Instant::now();
+                    let backoff_secs = self.retransmit_period();
+                    self.held.insert(
+                        order,
+                        HeldOrder {
+                            from,
+                            to,
+                            acked: false,
+                            committed: false,
+                            resends: 0,
+                            started: now,
+                            last_send: now,
+                            req: Some(req.clone()),
+                            stage1: None,
+                            stage2: None,
+                            backoff_secs,
+                        },
+                    );
+                    for _ in 0..copies {
+                        let _ = self.cmd_txs[to].send(Cmd::DeliverAllocReq(req.clone()));
+                    }
+                } else {
+                    let _ = self.cmd_txs[to].send(Cmd::DeliverAllocReq(req));
+                }
                 None
             }
             Event::AllocAck { to_source, order, ok } => {
-                let _ = self.cmd_txs[to_source].send(Cmd::AllocAck { order, ok });
+                if self.faulty {
+                    // Carrier dedup: only an unanswered handshake
+                    // consumes a reply (retransmitted requests re-ack).
+                    let from_dest = match self.held.get(&order) {
+                        Some(st) if !st.acked && !st.committed => st.to,
+                        _ => return None,
+                    };
+                    if self.link.plan(MsgClass::AllocAck, from_dest, to_source).is_empty() {
+                        return None; // ack lost: the request resend re-acks
+                    }
+                    if ok {
+                        if let Some(st) = self.held.get_mut(&order) {
+                            st.acked = true;
+                        }
+                    } else {
+                        self.held.remove(&order);
+                    }
+                    let _ = self.cmd_txs[to_source].send(Cmd::AllocAck { order, ok });
+                } else {
+                    let _ = self.cmd_txs[to_source].send(Cmd::AllocAck { order, ok });
+                }
                 None
             }
             Event::Stage1 { to, pkt } => {
-                let _ = self.cmd_txs[to].send(Cmd::DeliverStage1(pkt));
+                if self.faulty {
+                    let (order, from) = (pkt.order, pkt.from);
+                    let copies = self.link.plan(MsgClass::Stage1, from, to).len();
+                    if let Some(st) = self.held.get_mut(&order) {
+                        st.stage1 = Some(pkt.clone());
+                    }
+                    for _ in 0..copies {
+                        let _ = self.cmd_txs[to].send(Cmd::DeliverStage1(pkt.clone()));
+                    }
+                } else {
+                    let _ = self.cmd_txs[to].send(Cmd::DeliverStage1(pkt));
+                }
                 None
             }
             Event::Stage2 { to, pkt } => {
                 let (src, order) = (pkt.from, pkt.order);
-                let _ = self.cmd_txs[to].send(Cmd::DeliverStage2(pkt));
-                // In-process channels are reliable FIFO: once the Stage-2
-                // is relayed it *will* apply, so the source can release
-                // its limbo copy now.
-                let _ = self.cmd_txs[src].send(Cmd::ConfirmOrder(order));
+                if self.faulty {
+                    // The order commits here: hold the packet for
+                    // retransmission and wait for the destination
+                    // worker's Stage2Applied ack before confirming.
+                    let copies = self.link.plan(MsgClass::Stage2, src, to).len();
+                    let now = Instant::now();
+                    let backoff_secs = self.retransmit_period();
+                    match self.held.get_mut(&order) {
+                        Some(st) => {
+                            st.acked = true;
+                            st.committed = true;
+                            st.last_send = now;
+                            st.backoff_secs = backoff_secs;
+                            st.stage2 = Some(pkt.clone());
+                        }
+                        None => {
+                            // Queue-only order: no handshake preceded it
+                            // — the packet itself opens the order,
+                            // already committed.
+                            self.held.insert(
+                                order,
+                                HeldOrder {
+                                    from: src,
+                                    to,
+                                    acked: true,
+                                    committed: true,
+                                    resends: 0,
+                                    started: now,
+                                    last_send: now,
+                                    req: None,
+                                    stage1: None,
+                                    stage2: Some(pkt.clone()),
+                                    backoff_secs,
+                                },
+                            );
+                        }
+                    }
+                    for _ in 0..copies {
+                        let _ = self.cmd_txs[to].send(Cmd::DeliverStage2(pkt.clone()));
+                    }
+                } else {
+                    let _ = self.cmd_txs[to].send(Cmd::DeliverStage2(pkt));
+                    // In-process channels are reliable FIFO: once the
+                    // Stage-2 is relayed it *will* apply, so the source
+                    // can release its limbo copy now.
+                    let _ = self.cmd_txs[src].send(Cmd::ConfirmOrder(order));
+                }
+                None
+            }
+            Event::Stage2Applied { to_source, order } => {
+                if self.faulty {
+                    let from_dest = match self.held.get(&order) {
+                        Some(st) => st.to,
+                        None => return None, // already confirmed
+                    };
+                    if self.link.plan(MsgClass::AllocAck, from_dest, to_source).is_empty() {
+                        // Ack lost: the committed retransmit re-applies
+                        // at the worker (Duplicate) and re-acks.
+                        return None;
+                    }
+                    self.held.remove(&order);
+                    let _ = self.cmd_txs[to_source].send(Cmd::ConfirmOrder(order));
+                }
+                // Perfect path: confirmation happened at relay time.
                 None
             }
             Event::MigrationRefused => {
@@ -629,6 +892,124 @@ impl GenerationService {
                 None
             }
             other => Some(other),
+        }
+    }
+
+    /// Effective retransmit period on the wall clock: the configured
+    /// `[transport]` timer, floored at 1 ms so a zero/NaN config cannot
+    /// busy-spin the monitor.
+    fn retransmit_period(&self) -> f64 {
+        let p = self.cfg.transport.retransmit_secs;
+        if p.is_finite() && p > 0.0 {
+            p.max(1e-3)
+        } else {
+            TransportConfig::default().retransmit_secs
+        }
+    }
+
+    /// The batch completed: every expected sample finished somewhere, so
+    /// a still-held *committed* order's Stage-2 must have applied (its
+    /// victims could not have finished otherwise) — only the
+    /// confirmation ack was lost in the fault plan. Settle it so the
+    /// source worker releases its limbo copy instead of leaking held KV
+    /// across batches; a dangling handshake (nothing shipped — its
+    /// reserved tasks would have kept the batch from completing) is
+    /// aborted. No-op on the perfect transport.
+    fn settle_held_orders(&mut self) {
+        let orders: Vec<u64> = self.held.keys().copied().collect();
+        for order in orders {
+            let st = self.held.remove(&order).expect("collected above");
+            if st.committed {
+                let _ = self.cmd_txs[st.from].send(Cmd::ConfirmOrder(order));
+            } else {
+                let _ = self.cmd_txs[st.from].send(Cmd::AbortOrder(order));
+            }
+        }
+    }
+
+    /// Drive the faulty relay's reliability layer: resend held copies
+    /// whose timer elapsed; abort handshakes past the retransmit budget
+    /// or the hard timeout (`Cmd::AbortOrder` returns the waiting tasks
+    /// at the source). Committed orders resend unbounded — their victims
+    /// sit in the source's limbo until the destination's ack. No-op on
+    /// the perfect transport.
+    fn pump_retransmits(&mut self) {
+        if !self.faulty {
+            return;
+        }
+        let period = self.retransmit_period();
+        let budget = self.cfg.transport.retransmit_budget;
+        let deadline = self.cfg.transport.handshake_timeout_secs;
+        let now = Instant::now();
+        let due: Vec<u64> = self
+            .held
+            .iter()
+            .filter(|(_, st)| {
+                // Committed orders back off; the handshake phase keeps
+                // the fixed base period (it is bounded anyway).
+                let eff = if st.committed { st.backoff_secs } else { period };
+                now.duration_since(st.last_send).as_secs_f64() >= eff
+            })
+            .map(|(&o, _)| o)
+            .collect();
+        for order in due {
+            enum Act {
+                Wait,
+                Abort(usize),
+                Handshake(usize, AllocRequest),
+                Committed(usize, Option<Stage1Msg<PjrtBackend>>, Stage2Msg<PjrtBackend>),
+            }
+            let act = {
+                let st = self.held.get_mut(&order).expect("collected above");
+                st.last_send = now;
+                if st.committed {
+                    // Never below the configured base period, even when
+                    // that period exceeds the backoff ceiling.
+                    st.backoff_secs =
+                        (st.backoff_secs * 2.0).min(COMMITTED_BACKOFF_CAP_SECS.max(period));
+                    let pkt = st.stage2.clone().expect("committed orders hold Stage-2");
+                    Act::Committed(st.to, st.stage1.clone(), pkt)
+                } else if st.acked {
+                    // Waiting on the source worker's step boundary —
+                    // nothing for the carrier to resend.
+                    Act::Wait
+                } else if now.duration_since(st.started).as_secs_f64() >= deadline
+                    || st.resends >= budget
+                {
+                    Act::Abort(st.from)
+                } else {
+                    st.resends += 1;
+                    let req = st.req.clone().expect("handshake orders hold their request");
+                    Act::Handshake(st.to, req)
+                }
+            };
+            match act {
+                Act::Wait => {}
+                Act::Abort(from) => {
+                    self.held.remove(&order);
+                    self.handshake_aborts += 1;
+                    let _ = self.cmd_txs[from].send(Cmd::AbortOrder(order));
+                }
+                Act::Handshake(to, req) => {
+                    self.retransmits += 1;
+                    let copies = self.link.plan(MsgClass::AllocReq, req.from_instance, to);
+                    for _ in 0..copies.len() {
+                        let _ = self.cmd_txs[to].send(Cmd::DeliverAllocReq(req.clone()));
+                    }
+                }
+                Act::Committed(to, stage1, stage2) => {
+                    self.retransmits += 1;
+                    let from = stage2.from;
+                    if let Some(pkt) = stage1 {
+                        for _ in 0..self.link.plan(MsgClass::Stage1, from, to).len() {
+                            let _ = self.cmd_txs[to].send(Cmd::DeliverStage1(pkt.clone()));
+                        }
+                    }
+                    for _ in 0..self.link.plan(MsgClass::Stage2, from, to).len() {
+                        let _ = self.cmd_txs[to].send(Cmd::DeliverStage2(stage2.clone()));
+                    }
+                }
+            }
         }
     }
 
@@ -665,8 +1046,14 @@ impl GenerationService {
         // Batch-synchronous: no admission backlog can gate reallocation
         // (clears any stale gate from an aborted streaming run).
         self.realloc.note_backlog(0);
-        // Drain stale events from a previous batch.
+        // Drain stale events from a previous batch; reset the faulty
+        // relay's per-batch state (order ids stay monotone, so nothing
+        // stale can collide).
         while self.ev_rx.try_recv().is_ok() {}
+        self.held.clear();
+        self.retransmits = 0;
+        self.handshake_aborts = 0;
+        let faults_at_start = self.link.stats();
 
         // Sequential initial allocation (§4).
         let mut batches: Vec<Vec<SampleTask>> = vec![Vec::new(); n_inst];
@@ -689,20 +1076,33 @@ impl GenerationService {
         let mut refusals = 0u64;
         let mut ticker = ReallocTicker::new(self.cfg.realloc.period_secs);
 
+        // Generous stall timeout: a worker's FIRST step lazily compiles
+        // several XLA executables, which can take minutes on a small
+        // shared-CPU box. On a faulty relay the monitor wakes on the
+        // retransmit period instead, tracking the stall separately.
+        let stall = Duration::from_secs(900);
+        let mut last_event = Instant::now();
         loop {
-            // Generous stall timeout: a worker's FIRST step lazily
-            // compiles several XLA executables, which can take minutes on
-            // a small shared-CPU box.
-            let ev = match self.ev_rx.recv_timeout(Duration::from_secs(900)) {
+            self.pump_retransmits();
+            let timeout = if self.faulty {
+                Duration::from_secs_f64(self.retransmit_period())
+            } else {
+                stall
+            };
+            let ev = match self.ev_rx.recv_timeout(timeout) {
                 Ok(e) => e,
                 Err(_) => {
-                    return Err(anyhow!(
-                        "generation stalled: {} / {expected} finished after {:?}",
-                        finished_counts.iter().sum::<usize>(),
-                        t0.elapsed()
-                    ))
+                    if last_event.elapsed() >= stall {
+                        return Err(anyhow!(
+                            "generation stalled: {} / {expected} finished after {:?}",
+                            finished_counts.iter().sum::<usize>(),
+                            t0.elapsed()
+                        ));
+                    }
+                    continue;
                 }
             };
+            last_event = Instant::now();
             let Some(ev) = self.relay_protocol_event(ev, &mut refusals) else {
                 continue;
             };
@@ -758,6 +1158,8 @@ impl GenerationService {
             }
         }
 
+        self.settle_held_orders();
+        let faults = self.link.stats();
         Ok(assemble_report(
             all_finished,
             done_reports,
@@ -766,6 +1168,9 @@ impl GenerationService {
             refusals,
             self.realloc.decisions,
             srd_secs,
+            self.retransmits,
+            self.handshake_aborts,
+            (faults.0 - faults_at_start.0, faults.1 - faults_at_start.1),
         ))
     }
 
@@ -802,8 +1207,13 @@ impl GenerationService {
         // Consume front-to-back without cloning tasks at dispatch.
         let mut queue: std::collections::VecDeque<(f64, SampleTask)> = sorted.into();
         let expected = queue.len();
-        // Drain stale events from a previous batch.
+        // Drain stale events from a previous batch; reset the faulty
+        // relay's per-batch state.
         while self.ev_rx.try_recv().is_ok() {}
+        self.held.clear();
+        self.retransmits = 0;
+        self.handshake_aborts = 0;
+        let faults_at_start = self.link.stats();
 
         let t0 = Instant::now();
         let cap = self
@@ -835,10 +1245,16 @@ impl GenerationService {
                 0,
                 self.realloc.decisions,
                 0.0,
+                0,
+                0,
+                (0, 0),
             ));
         }
 
+        let stall = Duration::from_secs(900);
+        let mut last_event = Instant::now();
         loop {
+            self.pump_retransmits();
             // Dispatch every arrival that is due, stamping submission at
             // dispatch time. Least-loaded under the memory budget first;
             // when the whole fleet is at budget, still least-loaded (the
@@ -865,25 +1281,33 @@ impl GenerationService {
                 let _ = self.cmd_txs[dest].send(Cmd::Add(vec![task]));
             }
 
-            // Wake in time for the next arrival; otherwise the generous
+            // Wake in time for the next arrival — or the retransmit
+            // period on a faulty relay; otherwise the generous
             // first-step compile timeout applies (see run_batch).
-            let timeout = if let Some(&(due, _)) = queue.front() {
+            let mut timeout = if let Some(&(due, _)) = queue.front() {
                 let wait = due - t0.elapsed().as_secs_f64();
                 Duration::from_secs_f64(wait.clamp(0.001, 900.0))
             } else {
-                Duration::from_secs(900)
+                stall
             };
+            if self.faulty {
+                timeout = timeout.min(Duration::from_secs_f64(self.retransmit_period()));
+            }
             let ev = match self.ev_rx.recv_timeout(timeout) {
                 Ok(e) => e,
                 Err(_) if !queue.is_empty() => continue, // arrival due
                 Err(_) => {
-                    return Err(anyhow!(
-                        "streaming generation stalled: {} / {expected} finished after {:?}",
-                        finished_counts.iter().sum::<usize>(),
-                        t0.elapsed()
-                    ))
+                    if last_event.elapsed() >= stall {
+                        return Err(anyhow!(
+                            "streaming generation stalled: {} / {expected} finished after {:?}",
+                            finished_counts.iter().sum::<usize>(),
+                            t0.elapsed()
+                        ));
+                    }
+                    continue;
                 }
             };
+            last_event = Instant::now();
             let Some(ev) = self.relay_protocol_event(ev, &mut refusals) else {
                 continue;
             };
@@ -934,7 +1358,9 @@ impl GenerationService {
             }
         }
         self.realloc.note_backlog(0);
+        self.settle_held_orders();
 
+        let faults = self.link.stats();
         Ok(assemble_report(
             all_finished,
             done_reports,
@@ -943,6 +1369,9 @@ impl GenerationService {
             refusals,
             self.realloc.decisions,
             srd_secs,
+            self.retransmits,
+            self.handshake_aborts,
+            (faults.0 - faults_at_start.0, faults.1 - faults_at_start.1),
         ))
     }
 
@@ -996,6 +1425,10 @@ mod tests {
             migration_refusals: 0,
             realloc_decisions: 0,
             srd_secs: 0.0,
+            retransmits: 0,
+            handshake_aborts: 0,
+            link_drops: 0,
+            link_dups: 0,
             total_tokens: tokens,
             latency: LatencySummary::default(),
         }
@@ -1018,11 +1451,10 @@ mod tests {
     }
 
     #[test]
-    fn start_rejects_faulty_transport_on_the_real_plane() {
-        // The `[transport]` section is honored by the sim plane; the
-        // threaded driver's channels are reliable, so a fault schedule
-        // there must error loudly instead of silently doing nothing.
-        // (Checked before artifact loading, so this needs no PJRT.)
+    fn start_accepts_faulty_transport_but_rejects_crash_injection() {
+        // Since the relay fault port, a `[transport]` section is honored
+        // by the monitor itself — start() no longer rejects it (the
+        // error below comes from the missing artifacts, later in start).
         let mut cfg = RunConfig::default();
         cfg.set("transport.stage2.drop_prob", "0.5").unwrap();
         let err = GenerationService::start(
@@ -1033,9 +1465,27 @@ mod tests {
             &[],
         )
         .err()
-        .expect("faulty transport must be rejected");
+        .expect("nonexistent artifacts must still fail");
         let msg = format!("{err:#}");
-        assert!(msg.contains("transport"), "{msg}");
+        assert!(
+            !msg.contains("transport"),
+            "faulty transport must be accepted now: {msg}"
+        );
+        // Whole-instance crash injection stays simulation-only: a
+        // non-zero `[crash]` section errors loudly, before artifacts.
+        let mut cfg2 = RunConfig::default();
+        cfg2.set("crash.rate_per_sec", "0.5").unwrap();
+        let err2 = GenerationService::start(
+            std::path::Path::new("/nonexistent"),
+            &cfg2,
+            DecodeMode::Ar,
+            &[],
+            &[],
+        )
+        .err()
+        .expect("crash injection must be rejected");
+        let msg2 = format!("{err2:#}");
+        assert!(msg2.contains("crash"), "{msg2}");
     }
 
     #[test]
@@ -1066,5 +1516,33 @@ mod tests {
             assert!(!t.timed());
             assert!(!t.due(1e9));
         }
+    }
+
+    #[test]
+    fn realloc_ticker_tolerates_clock_jump_backwards() {
+        // A clock that jumps backwards (NTP step, suspend/resume skew)
+        // must not fire spurious ticks or wedge the schedule: earlier
+        // instants simply report not-due, and the original grid resumes
+        // once the clock passes the armed deadline again.
+        let mut t = ReallocTicker::new(1.0);
+        assert!(t.due(1.0), "first grid point");
+        assert!(!t.due(0.25), "backwards jump is not due");
+        assert!(!t.due(0.9), "still before the armed deadline");
+        assert!(t.due(2.0), "forward progress resumes the grid");
+        assert!(!t.due(1.5), "another backwards jump after a tick");
+        assert!(t.due(3.0));
+    }
+
+    #[test]
+    fn realloc_ticker_multi_period_catchup_is_one_tick_on_the_grid() {
+        // Sleeping through MANY periods (a minutes-long first compile)
+        // yields exactly one catch-up tick, and the next deadline is the
+        // next grid point — not `now + period` (no drift) and not a
+        // burst of replayed ticks.
+        let mut t = ReallocTicker::new(0.5);
+        assert!(t.due(10.26), "one catch-up tick after 20+ missed periods");
+        assert!(!t.due(10.26), "same instant: the tick was consumed");
+        assert!(!t.due(10.49), "not due before the next grid point");
+        assert!(t.due(10.5), "grid stays anchored at multiples of 0.5");
     }
 }

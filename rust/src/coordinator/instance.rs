@@ -876,6 +876,12 @@ impl DecodeBackend for PjrtBackend {
         Ok(())
     }
 
+    /// Drop a stashed Stage-1 bulk whose order was cancelled (peer crash
+    /// reconciliation) — frees the unpacked per-sample caches.
+    fn stage1_discard(&mut self, order: u64) {
+        self.mig_in.remove(&order);
+    }
+
     /// Merge the Stage-2 delta into the stashed caches and rebuild live
     /// samples from their control snapshots.
     fn stage2_restore(

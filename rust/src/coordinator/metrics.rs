@@ -47,6 +47,17 @@ pub struct InstanceMetrics {
     /// timeout on an unreliable transport (victims returned to the local
     /// batch; see `InstanceCore::abort_handshake`).
     pub orders_aborted: u64,
+    /// Whole-instance crashes this instance suffered (its resident
+    /// samples were salvaged and requeued onto survivors; see
+    /// `InstanceCore::crash_drain`).
+    pub crashes: u64,
+    /// Σ seconds between a crash and the instant each crash-requeued
+    /// sample became decodable again *on this instance* (queueing at
+    /// the survivor + the re-prefill), recorded at prefill time.
+    pub requeue_delay_secs: f64,
+    /// Crash-requeued samples re-admitted into this instance's decode
+    /// slots (the denominator of the recovery-latency mean).
+    pub requeues_admitted: u64,
     /// (wall_clock_secs, tokens_out cumulative, live samples) trace rows
     /// for throughput-over-time figures.
     pub trace: Vec<(f64, u64, usize)>,
@@ -220,10 +231,31 @@ mod tests {
 
     #[test]
     fn latency_summary_empty_is_zeroed() {
+        // The empty sample set must not divide, index, or NaN anything —
+        // a crashed-out or fully-refused run reports all-zero latencies.
         let s = LatencySummary::from_samples(&[]);
         assert_eq!(s, LatencySummary::default());
         assert_eq!(s.n, 0);
         assert_eq!(s.ttft_p99, 0.0);
+        assert_eq!(s.queue_p50, 0.0);
+        assert_eq!(s.tpot_p95, 0.0);
+    }
+
+    #[test]
+    fn latency_summary_single_sample_pins_every_percentile() {
+        // One sample: every percentile is that sample, exactly.
+        let one = SampleLatency { queue_secs: 0.5, ttft_secs: 1.25, tpot_secs: 0.02 };
+        let s = LatencySummary::from_samples(&[one]);
+        assert_eq!(s.n, 1);
+        for v in [s.queue_p50, s.queue_p95, s.queue_p99] {
+            assert_eq!(v, 0.5);
+        }
+        for v in [s.ttft_p50, s.ttft_p95, s.ttft_p99] {
+            assert_eq!(v, 1.25);
+        }
+        for v in [s.tpot_p50, s.tpot_p95, s.tpot_p99] {
+            assert_eq!(v, 0.02);
+        }
     }
 
     #[test]

@@ -354,6 +354,59 @@ impl Reallocator {
     pub fn observations(&self) -> usize {
         self.obs.iter().map(|o| o.len()).sum()
     }
+
+    /// Crash-recovery placement: distribute `n` requeued samples across
+    /// the fleet. Threshold deficits fill first (most-underloaded
+    /// instance first — the same ordering [`Reallocator::decide`] uses),
+    /// then the remainder spreads least-loaded-first up to each
+    /// instance's capacity. Instances with zero capacity (crashed peers)
+    /// never receive work. Returns `(instance, count)` assignments whose
+    /// sum is `min(n, total headroom)` — the caller backlogs or refuses
+    /// whatever could not be placed. Not a §6.1 decision: the cooldown
+    /// and decision counters are untouched.
+    pub fn plan_requeue(
+        &self,
+        counts: &[usize],
+        capacity: &[usize],
+        n: usize,
+    ) -> Vec<(usize, usize)> {
+        let mut counts = counts.to_vec();
+        let mut remaining = n;
+        let mut out: Vec<(usize, usize)> = Vec::new();
+        // Pass 1: fill roofline deficits, most-underloaded first.
+        let mut order: Vec<usize> = (0..counts.len()).collect();
+        order.sort_by_key(|&i| counts[i] as isize - self.threshold_of(i) as isize);
+        for &i in &order {
+            if remaining == 0 {
+                break;
+            }
+            let room = self
+                .threshold_of(i)
+                .saturating_sub(counts[i])
+                .min(capacity[i].saturating_sub(counts[i]));
+            let k = room.min(remaining);
+            if k > 0 {
+                out.push((i, k));
+                counts[i] += k;
+                remaining -= k;
+            }
+        }
+        // Pass 2: spread the rest least-loaded-first up to capacity.
+        let mut by_load: Vec<usize> = (0..counts.len()).collect();
+        by_load.sort_by_key(|&i| counts[i]);
+        for &i in &by_load {
+            if remaining == 0 {
+                break;
+            }
+            let k = capacity[i].saturating_sub(counts[i]).min(remaining);
+            if k > 0 {
+                out.push((i, k));
+                counts[i] += k;
+                remaining -= k;
+            }
+        }
+        out
+    }
 }
 
 /// Check the Eq-6 constraints for a plan (used by tests and the driver's
@@ -678,6 +731,83 @@ mod tests {
                 plan_satisfies_constraints_batched(&counts, &capacity, &vec![th; n], &plan),
                 "counts={counts:?} th={th} plan={plan:?}"
             );
+        });
+    }
+
+    #[test]
+    fn plan_requeue_fills_deficits_then_spreads() {
+        let r = Reallocator::new(8, 1);
+        // Instance 1 is 6 below threshold, instance 0 is 2 below.
+        let counts = [6, 2, 12];
+        let caps = [40, 40, 40];
+        let plan = r.plan_requeue(&counts, &caps, 10);
+        assert_eq!(plan.iter().map(|&(_, k)| k).sum::<usize>(), 10);
+        // Deficits first: instance 1 takes 6, instance 0 takes 2; the
+        // remaining 2 spread least-loaded-first (both now at 8 → index
+        // order).
+        assert_eq!(plan[0], (1, 6));
+        assert_eq!(plan[1], (0, 2));
+        // No instance ends above its capacity.
+        let mut next = counts;
+        for &(i, k) in &plan {
+            next[i] += k;
+        }
+        for (i, &c) in next.iter().enumerate() {
+            assert!(c <= caps[i], "instance {i} over capacity: {c}");
+        }
+    }
+
+    #[test]
+    fn plan_requeue_skips_zero_capacity_and_caps_total() {
+        let r = Reallocator::new(8, 1);
+        // Instance 0 crashed (capacity 0); fleet headroom is 5.
+        let counts = [0, 3, 7];
+        let caps = [0, 4, 11];
+        let plan = r.plan_requeue(&counts, &caps, 100);
+        assert!(plan.iter().all(|&(i, _)| i != 0), "crashed peer got work: {plan:?}");
+        assert_eq!(
+            plan.iter().map(|&(_, k)| k).sum::<usize>(),
+            (4 - 3) + (11 - 7),
+            "placement is bounded by fleet headroom"
+        );
+        // Nothing to place → empty plan.
+        assert!(r.plan_requeue(&counts, &caps, 0).is_empty());
+    }
+
+    #[test]
+    fn property_plan_requeue_never_overfills() {
+        testutil::check("plan-requeue-bounds", 200, |rng| {
+            let n = rng.range(1, 10);
+            let th = rng.range(1, 12);
+            let counts: Vec<usize> = (0..n).map(|_| rng.below(24)).collect();
+            // Some instances are "crashed": zero capacity.
+            let caps: Vec<usize> = counts
+                .iter()
+                .map(|&c| if rng.chance(0.25) { 0 } else { c + rng.below(16) })
+                .collect();
+            let k = rng.below(64);
+            let r = Reallocator::new(th, 1);
+            let plan = r.plan_requeue(&counts, &caps, k);
+            let mut next = counts.clone();
+            let mut placed = 0usize;
+            for &(i, m) in &plan {
+                assert!(m > 0, "empty assignment in {plan:?}");
+                next[i] += m;
+                placed += m;
+            }
+            let headroom: usize = counts
+                .iter()
+                .zip(&caps)
+                .map(|(&c, &cap)| cap.saturating_sub(c))
+                .sum();
+            assert_eq!(placed, k.min(headroom), "counts={counts:?} caps={caps:?} k={k}");
+            for (i, &c) in next.iter().enumerate() {
+                assert!(
+                    caps[i] >= c || counts[i] >= caps[i],
+                    "instance {i} overfilled: {c} > {}",
+                    caps[i]
+                );
+            }
         });
     }
 

@@ -29,15 +29,16 @@ use anyhow::{bail, Result};
 
 /// The §6.2 protocol message classes a transport can fault independently.
 ///
-/// Acknowledgements (`AllocAck` and the Stage-2 confirmation) share the
-/// [`MsgClass::AllocAck`] fault profile: both are small control replies
-/// riding the same reverse path.
+/// Acknowledgements (`AllocAck`, the Stage-1 bulk ack and the Stage-2
+/// confirmation) share the [`MsgClass::AllocAck`] fault profile: all are
+/// small control replies riding the same reverse path.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MsgClass {
     /// §6.2 phase-2 allocation request (source → destination).
     AllocReq,
-    /// Allocation reply and the Stage-2 confirmation (destination →
-    /// source).
+    /// Allocation reply, Stage-1 bulk acknowledgement
+    /// ([`TransportConfig::stage1_ack`]) and the Stage-2 confirmation
+    /// (destination → source).
     AllocAck,
     /// Stage-1 bulk KV snapshot (source → destination).
     Stage1,
@@ -114,6 +115,16 @@ pub struct TransportConfig {
     /// this many seconds after the first AllocReq, the order aborts even
     /// with retransmit budget left.
     pub handshake_timeout_secs: f64,
+    /// Acknowledge the Stage-1 bulk (dest → source, riding the
+    /// [`MsgClass::AllocAck`] profile): on the ack, the source stops
+    /// retransmitting the bulk and releases its held copy early (only
+    /// the small Stage-2 delta stays the source's responsibility —
+    /// `InstanceCore::release_bulk`), shrinking both retransmit traffic
+    /// and the limbo memory window. Only engages on unreliable links —
+    /// the perfect transport has no acks at all, so today's limbo
+    /// accounting is untouched (golden-guarded). Default on; set
+    /// `transport.stage1_ack = false` for the PR-4 wire behavior.
+    pub stage1_ack: bool,
 }
 
 impl Default for TransportConfig {
@@ -126,6 +137,7 @@ impl Default for TransportConfig {
             retransmit_secs: 0.02,
             retransmit_budget: 5,
             handshake_timeout_secs: 0.25,
+            stage1_ack: true,
         }
     }
 }
@@ -166,8 +178,8 @@ impl TransportConfig {
     /// Bare keys (`drop_prob`, `dup_prob`, `reorder_prob`,
     /// `extra_delay_secs`) apply to **all four** classes; class-scoped
     /// keys (`stage2.drop_prob`, `alloc_ack.dup_prob`, …) target one.
-    /// `retransmit_secs`, `retransmit_budget` and
-    /// `handshake_timeout_secs` set the reliability knobs.
+    /// `retransmit_secs`, `retransmit_budget`, `handshake_timeout_secs`
+    /// and `stage1_ack` set the reliability knobs.
     pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
         let f = |v: &str| -> Result<f64> {
             v.parse()
@@ -181,6 +193,11 @@ impl TransportConfig {
             "retransmit_secs" => self.retransmit_secs = f(val)?,
             "retransmit_budget" => self.retransmit_budget = u(val)?,
             "handshake_timeout_secs" => self.handshake_timeout_secs = f(val)?,
+            "stage1_ack" => {
+                self.stage1_ack = val
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("expected bool, got {val:?}"))?
+            }
             "drop_prob" => {
                 let x = f(val)?;
                 self.set_all(|p| p.drop_prob = x);
@@ -315,9 +332,16 @@ mod tests {
         cfg.set("retransmit_secs", "0.05").unwrap();
         cfg.set("retransmit_budget", "9").unwrap();
         cfg.set("handshake_timeout_secs", "1.5").unwrap();
+        cfg.set("stage1_ack", "false").unwrap();
         assert_eq!(cfg.retransmit_secs, 0.05);
         assert_eq!(cfg.retransmit_budget, 9);
         assert_eq!(cfg.handshake_timeout_secs, 1.5);
+        assert!(!cfg.stage1_ack);
+        // The ack is a reliability knob, not a fault: the config stays
+        // perfect either way.
+        assert!(cfg.is_perfect());
+        assert!(TransportConfig::default().stage1_ack, "ack on by default");
+        assert!(cfg.set("stage1_ack", "maybe").is_err());
     }
 
     #[test]

@@ -28,7 +28,20 @@
 //!   Stage 1/2 shipped (the victims sit in the source's limbo until the
 //!   destination's ack). With every probability at 0 the perfect
 //!   transport keeps today's synchronous handshake and fault-free runs
-//!   are bit-identical to the pre-transport scheduler.
+//!   are bit-identical to the pre-transport scheduler;
+//! * **crash / recover** — the whole-instance fault plane
+//!   ([`ClusterConfig::crash`], seeded [`CrashSchedule`]): at a crash
+//!   the instance's device state dies — the cluster salvages the
+//!   coordinator-side records (resident samples, queued tasks,
+//!   unconfirmed limbo entries), reconciles in-flight orders with the
+//!   dead peer (handshakes abort; committed orders return to the source
+//!   or are requeued; stale packet copies are cancelled so they dedup),
+//!   and requeues the salvage onto survivors through
+//!   [`Reallocator::plan_requeue`] — KV is re-prefilled at the new host
+//!   ([`crate::sim::cost_model::CostModel::t_prefill`]). A recovered
+//!   instance rejoins empty and is refilled by admission/reallocation.
+//!   With the default crash-free config no crash event is ever
+//!   scheduled and runs are bit-identical to the pre-crash scheduler.
 //!
 //! Each scheduling decision is an `O(log n)` heap pop instead of the old
 //! `O(n)` laggard scan plus `O(in-flight)` arrival walk, which is what
@@ -60,7 +73,7 @@
 //! * `Naive` (ablation) — stop-and-copy: downtime is the full KV
 //!   transfer.
 
-use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap, VecDeque};
 
 use anyhow::{bail, Result};
 
@@ -76,6 +89,7 @@ use crate::data::arrivals::ArrivalProcess;
 use crate::data::lengths::LengthModel;
 use crate::sim::acceptance::AcceptanceModel;
 use crate::sim::cost_model::CostModel;
+use crate::sim::crash::{CrashConfig, CrashSchedule};
 use crate::sim::engine::{SimBackend, SimInstance, SimMode, SimParams, SimSample};
 use crate::sim::link::FaultyLink;
 use crate::utils::rng::Rng;
@@ -178,6 +192,12 @@ pub struct ClusterConfig {
     /// concurrently. Off by default — the classic planner keeps the
     /// paper's `m(k) ≤ 1` pairing and the golden outputs.
     pub multi_dest: bool,
+    /// Whole-instance crash fault model (`[crash]`). The default is
+    /// crash-free, on which no crash event is ever scheduled and runs
+    /// are bit-identical to the pre-crash scheduler; any positive rate
+    /// injects seeded `Crash`/`Recover` events (see the module docs and
+    /// [`CrashSchedule`]).
+    pub crash: CrashConfig,
 }
 
 impl Default for ClusterConfig {
@@ -200,6 +220,7 @@ impl Default for ClusterConfig {
             params: SimParams::default(),
             transport: TransportConfig::default(),
             multi_dest: false,
+            crash: CrashConfig::default(),
         }
     }
 }
@@ -265,6 +286,27 @@ pub struct ClusterResult {
     pub link_drops: u64,
     /// Protocol messages the link duplicated (injected duplication).
     pub link_dups: u64,
+    /// Whole-instance crashes injected ([`ClusterConfig::crash`]).
+    pub crashes: u64,
+    /// Crashed instances that recovered and rejoined the fleet.
+    pub recoveries: u64,
+    /// Samples salvaged from crashed instances (resident, queued, and
+    /// unconfirmed limbo entries) and re-entered through the requeue
+    /// path. Each is eventually completed on a survivor or refused —
+    /// never lost or duplicated.
+    pub samples_requeued: u64,
+    /// Mean virtual seconds between a crash and the instant each
+    /// requeued sample became *decodable again* on a survivor — survivor
+    /// queueing plus the KV re-prefill (0 when nothing was requeued).
+    /// The crash figure's "recovery latency".
+    pub requeue_delay_mean: f64,
+    /// Stage-1 acknowledgements that released a source's held bulk early
+    /// ([`TransportConfig::stage1_ack`]; unreliable transports only).
+    pub stage1_acks: u64,
+    /// Stage-2 packets bounced off a dead destination: the order's
+    /// samples returned to their source (or were requeued) and stale
+    /// copies were cancelled.
+    pub bounced_orders: u64,
     /// Total sample downtime caused by migration (§7.7 SM).
     pub migration_downtime: f64,
     /// Mean accepted drafts per round across instances.
@@ -318,6 +360,10 @@ enum CtrlMsg {
     AllocReq { to: usize, req: AllocRequest },
     /// Allocation reply travelling destination → source.
     AllocAck { order: u64, to_source: usize, ok: bool },
+    /// Stage-1 bulk acknowledgement travelling destination → source
+    /// ([`TransportConfig::stage1_ack`]): the source stops retransmitting
+    /// the bulk and releases its held copy early.
+    Stage1Ack { order: u64, to_source: usize },
     /// Stage-2 confirmation travelling destination → source: releases
     /// the source's limbo copy and ends the order's retransmit chain.
     Stage2Ack { order: u64, to_source: usize },
@@ -334,10 +380,16 @@ enum EventKind {
     Stage1Arrival(Stage1Msg<SimBackend>),
     /// A Stage-2 migration packet completes its virtual transfer.
     Arrival(Stage2Msg<SimBackend>),
+    /// Instance `i` crashes: device state lost, coordinator records
+    /// salvaged and requeued (crash fault plane only).
+    Crash(usize),
     /// Instance `i` is ready to execute its next decode round.
     StepReady(usize),
     /// Fixed-period reallocation cadence (heterogeneous fleets).
     ReallocTick,
+    /// Instance `i` rejoins the fleet, empty, after its downtime
+    /// (crash fault plane only).
+    Recover(usize),
     /// Retransmit-timer pop for one in-flight migration order
     /// (unreliable transports only).
     Retransmit { order: u64 },
@@ -349,20 +401,26 @@ impl EventKind {
     /// batch-synchronous initial allocation before any step runs), then
     /// link deliveries — control, Stage 1, Stage 2 in protocol order —
     /// (the laggard scan delivered at the top of every scheduling
-    /// iteration, before picking an instance to step), then steps, then
-    /// ticks, then retransmit timers (a timer tied with its own ack must
-    /// lose, so the ack cancels the resend). The relative order of the
-    /// kinds a perfect-transport run schedules (arrival < Stage-2 < step
-    /// < tick) is unchanged from the pre-transport scheduler.
+    /// iteration, before picking an instance to step), then crashes (a
+    /// crash at time t wins the tie against the victim's own step at t —
+    /// dying at t means the round at t never ran — while a packet
+    /// landing exactly at t still made it onto the dying host), then steps,
+    /// then ticks, then recoveries, then retransmit timers (a timer tied
+    /// with its own ack must lose, so the ack cancels the resend). The
+    /// relative order of the kinds a perfect-transport, crash-free run
+    /// schedules (arrival < Stage-2 < step < tick) is unchanged from the
+    /// pre-transport scheduler.
     fn rank(&self) -> u8 {
         match self {
             EventKind::TaskArrival(_) => 0,
             EventKind::Ctrl(_) => 1,
             EventKind::Stage1Arrival(_) => 2,
             EventKind::Arrival(_) => 3,
-            EventKind::StepReady(_) => 4,
-            EventKind::ReallocTick => 5,
-            EventKind::Retransmit { .. } => 6,
+            EventKind::Crash(_) => 4,
+            EventKind::StepReady(_) => 5,
+            EventKind::ReallocTick => 6,
+            EventKind::Recover(_) => 7,
+            EventKind::Retransmit { .. } => 8,
         }
     }
 }
@@ -503,6 +561,36 @@ pub struct SimCluster {
     orders_attempted: u64,
     /// Carrier retransmissions performed (handshake + committed).
     retransmits: u64,
+    /// `alive[i]` ⇔ instance `i` currently holds its device state (not
+    /// crashed). All true without a crash schedule.
+    alive: Vec<bool>,
+    /// The seeded crash/recovery schedule; `None` keeps the crash plane
+    /// entirely inert (bit-identical to the pre-crash scheduler).
+    crash: Option<CrashSchedule>,
+    /// Orders reconciled after a crash: late in-flight copies of these
+    /// must not apply (their samples were requeued or returned).
+    cancelled: BTreeSet<u64>,
+    /// Cancelled orders whose queue-only tasks have been rescued. Live
+    /// victims live in the source's limbo, but a packet's waiting tasks
+    /// exist *only* in the packet on the perfect path — the first
+    /// dropped copy rescues them, exactly once.
+    salvaged_orders: BTreeSet<u64>,
+    /// Samples finished so far (incremental mirror of the per-instance
+    /// `finished` lists — only `InstanceCore::step` retires samples, so
+    /// the StepReady handler keeps this exact). Lets the crash plane's
+    /// completion check run in O(1) per event instead of scanning the
+    /// fleet.
+    completed: u64,
+    /// Crash events fired.
+    crashes: u64,
+    /// Recover events fired.
+    recoveries: u64,
+    /// Samples salvaged from crashes and re-entered via [`Self::requeue`].
+    samples_requeued: u64,
+    /// Stage-1 acks that released a held bulk early.
+    stage1_acks: u64,
+    /// Stage-2 packets bounced off a dead destination.
+    bounced_orders: u64,
 }
 
 impl SimCluster {
@@ -588,6 +676,12 @@ impl SimCluster {
             Box::new(FaultyLink::new(cfg.transport.clone(), cfg.seed))
         };
         let faulty = !link.is_perfect();
+        let crash = if cfg.crash.is_off() {
+            None
+        } else {
+            Some(CrashSchedule::new(cfg.crash.clone(), cfg.seed))
+        };
+        let n_instances = cfg.instances;
         SimCluster {
             realloc,
             cfg,
@@ -611,6 +705,16 @@ impl SimCluster {
             next_order: 1,
             orders_attempted: 0,
             retransmits: 0,
+            alive: vec![true; n_instances],
+            crash,
+            cancelled: BTreeSet::new(),
+            salvaged_orders: BTreeSet::new(),
+            completed: 0,
+            crashes: 0,
+            recoveries: 0,
+            samples_requeued: 0,
+            stage1_acks: 0,
+            bounced_orders: 0,
         }
     }
 
@@ -709,10 +813,23 @@ impl SimCluster {
                 scheduled[i] = true;
             }
         }
+        // Total samples this run will be offered — batch workload already
+        // counted in `arrivals`, streaming samples as their events pop.
+        // The crash plane's early-completion check needs it.
+        let offered = self.arrivals + self.arrival_schedule.len() as u64;
         // Streaming workload: one TaskArrival event per scheduled sample
         // (times are non-decreasing, so seq order preserves FIFO at ties).
         for (t, s) in self.arrival_schedule.drain(..) {
             q.push(t, EventKind::TaskArrival(s));
+        }
+        // Crash plane: one seeded first-crash event per instance (draws
+        // in instance order, so the schedule replays bit-for-bit).
+        if let Some(sched) = self.crash.as_mut() {
+            for i in 0..n {
+                if let Some(dt) = sched.next_crash_interval() {
+                    q.push(dt, EventKind::Crash(i));
+                }
+            }
         }
         // A non-positive (or NaN) period would re-arm the tick at its own
         // timestamp and spin forever; treat it as "no timed cadence".
@@ -726,15 +843,19 @@ impl SimCluster {
 
         while let Some(ev) = q.pop() {
             // Admission headroom (sample_count < 4×capacity) only grows
-            // when a step retires samples or a reallocation order moves
+            // when a step retires samples, a reallocation order moves
             // them off a source — synchronously inside a step/tick on
             // the perfect transport, at the AllocAck control message on
-            // a faulty one. Arrivals and Stage-2 deliveries only add.
-            // Gate the backlog re-drain accordingly so a saturated
-            // burst doesn't pay an O(fleet) scan per heap event.
+            // a faulty one — or a crashed instance rejoins the fleet.
+            // Arrivals and Stage-2 deliveries only add. Gate the backlog
+            // re-drain accordingly so a saturated burst doesn't pay an
+            // O(fleet) scan per heap event.
             let may_free_headroom = matches!(
                 ev.kind,
-                EventKind::StepReady(_) | EventKind::ReallocTick | EventKind::Ctrl(_)
+                EventKind::StepReady(_)
+                    | EventKind::ReallocTick
+                    | EventKind::Ctrl(_)
+                    | EventKind::Recover(_)
             );
             match ev.kind {
                 EventKind::TaskArrival(mut s) => {
@@ -744,10 +865,13 @@ impl SimCluster {
                 }
                 EventKind::StepReady(i) => {
                     scheduled[i] = false;
-                    if self.instances[i].is_idle() {
-                        continue; // stale: drained by a migration order
+                    if !self.alive[i] || self.instances[i].is_idle() {
+                        continue; // stale: crashed, or drained by an order
                     }
+                    let finished_before = self.instances[i].finished.len();
                     self.instances[i].step().expect("sim step");
+                    self.completed +=
+                        (self.instances[i].finished.len() - finished_before) as u64;
                     self.steps += 1;
                     if self.cfg.realloc_enabled
                         && tick_period.is_none()
@@ -765,12 +889,58 @@ impl SimCluster {
                 }
                 EventKind::Stage1Arrival(msg) => {
                     // Idempotent: retransmitted/duplicated bulk for an
-                    // order already stored (or applied) is ignored.
-                    let to = msg.to;
+                    // order already stored (or applied) is ignored. A
+                    // bulk for a crash-reconciled order — or a dead
+                    // destination — is dropped on the floor.
+                    let (from, to, order) = (msg.from, msg.to, msg.order);
+                    if self.cancelled.contains(&order) || !self.alive[to] {
+                        continue;
+                    }
                     self.instances[to].handle_stage1(msg).expect("sim stage1 delivery");
+                    if self.cfg.transport.stage1_ack {
+                        self.send_stage1_ack(order, to, from, ev.time, &mut q);
+                    }
                 }
                 EventKind::Arrival(msg) => {
                     let (src, dest, order) = (msg.from, msg.to, msg.order);
+                    if self.cancelled.contains(&order) {
+                        // The order was reconciled after a crash: its
+                        // live victims were requeued or returned from
+                        // the source's limbo already, so a late copy
+                        // must not apply. Its queue-only tasks, though,
+                        // exist *only* in the packet on the perfect path
+                        // — the first dropped copy rescues them. Clear
+                        // any stale Stage-1 bulk at a live destination.
+                        if self.alive[dest] {
+                            self.instances[dest].cancel_inbound_order(order);
+                        }
+                        if self.salvaged_orders.insert(order) {
+                            self.requeue(msg.waiting_tasks, ev.time, &mut q, &mut scheduled);
+                        }
+                        continue;
+                    }
+                    if !self.alive[dest] {
+                        self.bounce_stage2(msg, ev.time, &mut q, &mut scheduled);
+                        continue;
+                    }
+                    // Under the crash plane, a perfect-path destination
+                    // can have crashed (losing the stored Stage-1 bulk)
+                    // and recovered while the packet was in flight.
+                    // There is no retransmit buffer on this path —
+                    // bounce the order back to its source (applying
+                    // would report AwaitingStage1 and confirming would
+                    // leak the limbo copy). Predicted without consuming
+                    // the packet; impossible while the crash plane is
+                    // off (Stage 1 is stored synchronously).
+                    if !self.faulty
+                        && self.crash.is_some()
+                        && msg.kv_delta.is_some()
+                        && !self.instances[dest].order_applied(order)
+                        && !self.instances[dest].stage1_stored(order)
+                    {
+                        self.bounce_stage2(msg, ev.time, &mut q, &mut scheduled);
+                        continue;
+                    }
                     let inst = &mut self.instances[dest];
                     if inst.is_idle() && inst.backend.clock < ev.time {
                         inst.backend.clock = ev.time; // idle destination waits for the KV
@@ -787,6 +957,10 @@ impl SimCluster {
                     } else {
                         // The perfect link delivers exactly once: confirm
                         // synchronously, releasing the source's limbo.
+                        debug_assert!(
+                            disp != Stage2Disposition::AwaitingStage1,
+                            "perfect-path AwaitingStage1 must be bounced above"
+                        );
                         self.instances[src].confirm_order(order);
                     }
                     if disp == Stage2Disposition::Applied
@@ -796,6 +970,16 @@ impl SimCluster {
                         let at = self.instances[dest].backend.next_ready();
                         q.push(at, EventKind::StepReady(dest));
                         scheduled[dest] = true;
+                    }
+                }
+                EventKind::Crash(i) => {
+                    if self.alive[i] {
+                        self.crash_instance(i, ev.time, &mut q, &mut scheduled);
+                    }
+                }
+                EventKind::Recover(i) => {
+                    if !self.alive[i] {
+                        self.recover_instance(i, ev.time, &mut q);
                     }
                 }
                 EventKind::ReallocTick => {
@@ -818,6 +1002,23 @@ impl SimCluster {
             // have appeared. No-op for batch-synchronous runs.
             if may_free_headroom && !self.pending.is_empty() {
                 self.drain_pending(ev.time, &mut q, &mut scheduled);
+            }
+            // Crash-active runs can hold far-future Crash/Recover events:
+            // once every offered sample is accounted for and no order is
+            // in flight, the run is over — break instead of draining the
+            // remaining fault schedule. (Crash-free runs never take this
+            // path, preserving the pre-crash scheduler bit-for-bit.)
+            if self.crash.is_some()
+                && self.arrivals >= offered
+                && self.pending.is_empty()
+                && self.orders.is_empty()
+                && self.all_samples_accounted()
+            {
+                debug_assert!(
+                    self.instances.iter().all(|x| x.is_idle() && x.limbo_count() == 0),
+                    "sample accounting closed with residents still in the fleet"
+                );
+                break;
             }
         }
         // A backlog can only survive the heap draining on a fleet that
@@ -854,12 +1055,16 @@ impl SimCluster {
         }
     }
 
-    /// The least-loaded instance still under its admission budget
-    /// (4× decode slots — the same bound `handle_alloc_req` enforces for
-    /// migrations), lowest index on ties; None when the fleet is full.
+    /// The least-loaded *alive* instance still under its admission
+    /// budget (4× decode slots — the same bound `handle_alloc_req`
+    /// enforces for migrations), lowest index on ties; None when the
+    /// fleet is full (or entirely crashed).
     fn admission_dest(&self) -> Option<usize> {
         let mut best: Option<(usize, usize)> = None; // (count, index)
         for (i, inst) in self.instances.iter().enumerate() {
+            if !self.alive[i] {
+                continue;
+            }
             let c = inst.sample_count();
             if c >= inst.capacity() * 4 {
                 continue;
@@ -877,6 +1082,9 @@ impl SimCluster {
 
     /// Hand a sample to instance `i`, fast-forwarding an idle instance's
     /// clock to the admission instant (work cannot start in the past).
+    /// A crash-requeued sample keeps its `requeued_at` stamp until the
+    /// backend prefills it — the recovery-latency metric measures
+    /// crash → decodable, not crash → queued.
     fn admit_to(
         &mut self,
         i: usize,
@@ -906,13 +1114,15 @@ impl SimCluster {
     }
 
     /// Account one admission refusal, attributed to the least-loaded
-    /// tier (the closest candidate that still had no headroom).
+    /// alive tier (the closest candidate that still had no headroom);
+    /// tier 0 when the whole fleet is down.
     fn refuse_admission(&mut self) {
         self.admission_refusals += 1;
         let tier = self
             .instances
             .iter()
             .enumerate()
+            .filter(|(i, _)| self.alive[*i])
             .min_by_key(|(_, x)| x.sample_count())
             .map(|(i, _)| self.tier_of[i])
             .unwrap_or(0);
@@ -925,9 +1135,10 @@ impl SimCluster {
     /// walk), preserved verbatim as the golden reference: on homogeneous
     /// fleets with step-cadence reallocation it must produce bit-identical
     /// `total_tokens`/`makespan` to [`SimCluster::run`] under a fixed
-    /// seed. Quadratic in fleet size — tests only. Predates streaming:
-    /// it ignores any [`SimCluster::streaming`] arrival schedule (the
-    /// streaming-vs-batch parity anchor is `run()` itself).
+    /// seed. Quadratic in fleet size — tests only. Predates streaming
+    /// and the fault planes: it ignores any [`SimCluster::streaming`]
+    /// arrival schedule and any `[crash]` section (the streaming-vs-batch
+    /// and crash-free parity anchors are `run()` itself).
     #[doc(hidden)]
     pub fn run_reference_laggard(&mut self) -> ClusterResult {
         let mut in_flight: Vec<(f64, Stage2Msg<SimBackend>)> = Vec::new();
@@ -997,7 +1208,15 @@ impl SimCluster {
         // — the policy reports no inefficiency until it drains. Batch
         // runs never hold a backlog, so this is a no-op for them.
         self.realloc.note_backlog(self.pending.len());
-        let counts: Vec<usize> = self.instances.iter().map(|x| x.sample_count()).collect();
+        let mut counts: Vec<usize> = self.instances.iter().map(|x| x.sample_count()).collect();
+        // Crashed instances are neither sources (drained, count 0) nor
+        // destinations: present them at exactly their threshold so the
+        // inefficiency check and the planner both skip them.
+        for (i, c) in counts.iter_mut().enumerate() {
+            if !self.alive[i] {
+                *c = self.realloc.threshold_of(i);
+            }
+        }
         if !self.realloc.inefficiency(&counts) {
             return Vec::new();
         }
@@ -1012,8 +1231,14 @@ impl SimCluster {
         self.realloc.refit_threshold();
         // Per-instance capacity: 4× this instance's decode slots — the
         // same memory budget `handle_alloc_req` enforces, so mixed-batch
-        // tiers advertise their true headroom.
-        let caps: Vec<usize> = self.instances.iter().map(|x| x.capacity() * 4).collect();
+        // tiers advertise their true headroom. Crashed instances have
+        // none.
+        let caps: Vec<usize> = self
+            .instances
+            .iter()
+            .enumerate()
+            .map(|(i, x)| if self.alive[i] { x.capacity() * 4 } else { 0 })
+            .collect();
         if self.cfg.multi_dest {
             self.realloc.decide_batched(self.steps, &counts, &caps)
         } else {
@@ -1255,6 +1480,26 @@ impl SimCluster {
         }
     }
 
+    /// Ship a Stage-1 bulk acknowledgement back to the source (dest →
+    /// source, sharing the AllocAck fault profile) — the early-release
+    /// signal of [`TransportConfig::stage1_ack`].
+    fn send_stage1_ack(
+        &mut self,
+        order: u64,
+        from_dest: usize,
+        to_source: usize,
+        now: f64,
+        q: &mut EventQueue,
+    ) {
+        let (lat, _) = self.link_of(from_dest, to_source);
+        for extra in self.link.plan(MsgClass::AllocAck, from_dest, to_source) {
+            q.push(
+                now + lat + extra,
+                EventKind::Ctrl(CtrlMsg::Stage1Ack { order, to_source }),
+            );
+        }
+    }
+
     /// Ship a Stage-2 confirmation back to the source (dest → source,
     /// sharing the AllocAck fault profile).
     fn send_stage2_ack(
@@ -1277,9 +1522,10 @@ impl SimCluster {
     /// Re-arm instance `i`'s StepReady event after work returned to it
     /// (abort / refused handshake handing waiting tasks back). An
     /// instance that idled while the tasks were away has a stale clock:
-    /// fast-forward it to `now`, like admission does.
+    /// fast-forward it to `now`, like admission does. No-op for dead
+    /// instances (their work is salvaged at crash time).
     fn rearm_step(&mut self, i: usize, now: f64, q: &mut EventQueue, scheduled: &mut [bool]) {
-        if scheduled[i] || self.instances[i].is_idle() {
+        if !self.alive[i] || scheduled[i] || self.instances[i].is_idle() {
             return;
         }
         let inst = &mut self.instances[i];
@@ -1300,6 +1546,13 @@ impl SimCluster {
     ) {
         match msg {
             CtrlMsg::AllocReq { to, req } => {
+                // A request landing on a dead peer goes unanswered: the
+                // source's retransmit timer re-sends and eventually
+                // aborts the handshake (crash-time reconciliation aborts
+                // it immediately when the order is already open).
+                if !self.alive[to] {
+                    return;
+                }
                 // The capacity check is read-only, so duplicated or
                 // retransmitted requests are naturally idempotent; each
                 // delivery re-acks (the previous ack may have dropped).
@@ -1356,6 +1609,22 @@ impl SimCluster {
                 self.send_stage1(order, now, q);
                 self.send_stage2(order, now, q);
             }
+            CtrlMsg::Stage1Ack { order, to_source } => {
+                // The destination stored the Stage-1 bulk: stop
+                // retransmitting it and release the source's held copy
+                // early (the Stage-2 delta remains). Stale or duplicated
+                // acks fall through (the held bulk is already gone).
+                let Some(st) = self.orders.get_mut(&order) else {
+                    return;
+                };
+                if !st.committed {
+                    return;
+                }
+                if st.stage1.take().is_some() {
+                    self.stage1_acks += 1;
+                    self.instances[to_source].release_bulk(order);
+                }
+            }
             CtrlMsg::Stage2Ack { order, to_source } => {
                 // Confirmation: release the source's limbo copy and end
                 // the retransmit chain. Idempotent on duplicates.
@@ -1403,6 +1672,261 @@ impl SimCluster {
         self.retransmits += 1;
         self.send_alloc_req(order, now, q);
         q.push(now + retransmit_secs, EventKind::Retransmit { order });
+    }
+
+    // ------------------------------------------------------------------
+    // Crash fault plane: whole-instance loss & recovery
+    // ------------------------------------------------------------------
+
+    /// Instance `i` crashes at `now`: reconcile every in-flight order
+    /// that involves it, salvage its coordinator-side records (resident
+    /// samples, queued tasks, unconfirmed limbo entries), requeue the
+    /// salvage onto survivors, and schedule the recovery.
+    fn crash_instance(
+        &mut self,
+        i: usize,
+        now: f64,
+        q: &mut EventQueue,
+        scheduled: &mut [bool],
+    ) {
+        self.alive[i] = false;
+        self.crashes += 1;
+
+        // --- 1. Dead-peer reconciliation for in-flight orders (faulty
+        //     path; the perfect path keeps no order map — its limbo
+        //     entries are reconciled in step 2 and in-flight packets
+        //     bounce at delivery). ---
+        let involved: Vec<u64> = self
+            .orders
+            .iter()
+            .filter(|(_, st)| st.from == i || st.to == i)
+            .map(|(&o, _)| o)
+            .collect();
+        // Committed orders of the crashed *source* whose Stage-2 already
+        // applied: the samples live at the destination — the limbo
+        // copies salvaged below are redundant and must be dropped.
+        let mut applied_elsewhere: BTreeSet<u64> = BTreeSet::new();
+        // Queue-only tasks held in a dead source's retransmit buffer:
+        // they exist nowhere else and must be requeued.
+        let mut extra_tasks: Vec<SimSample> = Vec::new();
+        for order in involved {
+            let st = self.orders.remove(&order).expect("collected above");
+            if st.from == i {
+                // The source died. Handshake orders: victims never left
+                // the source (salvaged below) and reserved waiting tasks
+                // sit in mig_out (crash_drain salvages them). Committed
+                // orders: the retransmit buffer died with the source.
+                if st.committed {
+                    if self.instances[st.to].order_applied(order) {
+                        applied_elsewhere.insert(order);
+                    } else {
+                        if let Some(pkt) = st.stage2 {
+                            extra_tasks.extend(pkt.waiting_tasks);
+                        }
+                        self.cancelled.insert(order);
+                        self.salvaged_orders.insert(order); // tasks rescued above
+                        if self.alive[st.to] {
+                            self.instances[st.to].cancel_inbound_order(order);
+                        }
+                    }
+                }
+            } else {
+                // The destination died mid-order.
+                if st.committed && self.instances[i].order_applied(order) {
+                    // The Stage-2 already applied here — the samples are
+                    // *residents* of the dying instance and are salvaged
+                    // (and requeued) in step 2. Only the confirmation
+                    // ack was lost with the crash: release the source's
+                    // redundant limbo copy instead of reclaiming it,
+                    // which would duplicate every victim.
+                    self.instances[st.from].confirm_order(order);
+                } else if st.committed {
+                    let tasks = st.stage2.map(|pkt| pkt.waiting_tasks).unwrap_or_default();
+                    self.return_order_to_source(order, st.from, tasks, now, q, scheduled);
+                } else {
+                    // Handshake to a dead peer: abort immediately —
+                    // victims never left the source batch.
+                    self.instances[st.from].abort_handshake(order);
+                    self.rearm_step(st.from, now, q, scheduled);
+                }
+            }
+        }
+
+        // --- 2. Salvage the crashed instance's coordinator records. ---
+        let salvage = self.instances[i].crash_drain();
+        let mut salvaged: Vec<SimSample> = Vec::new();
+        for mut s in salvage.resident {
+            s.needs_reprefill = true; // device KV died with the instance
+            salvaged.push(s);
+        }
+        salvaged.extend(salvage.waiting); // never prefilled: nothing to redo
+        for (order, samples, _) in salvage.limbo {
+            if applied_elsewhere.contains(&order) {
+                continue; // the destination already holds them
+            }
+            // In flight on the perfect path (confirm is synchronous at
+            // delivery, so an unconfirmed order cannot have applied), or
+            // an unapplied committed order on the faulty path: requeue,
+            // and cancel so stale packet copies dedup at delivery.
+            self.cancelled.insert(order);
+            for mut s in samples {
+                s.needs_reprefill = true;
+                salvaged.push(s);
+            }
+        }
+        salvaged.extend(extra_tasks);
+        self.requeue(salvaged, now, q, scheduled);
+
+        // --- 3. Schedule the recovery (None = permanent loss). ---
+        if let Some(sched) = self.crash.as_mut() {
+            if let Some(dt) = sched.downtime() {
+                q.push(now + dt, EventKind::Recover(i));
+            }
+        }
+    }
+
+    /// Instance `i` rejoins the fleet, empty, at `now`. It is refilled
+    /// through ordinary admission (the post-event backlog drain sees its
+    /// restored headroom) and future reallocation decisions; the next
+    /// crash of this instance is drawn from the schedule.
+    fn recover_instance(&mut self, i: usize, now: f64, q: &mut EventQueue) {
+        self.alive[i] = true;
+        self.recoveries += 1;
+        let inst = &mut self.instances[i];
+        if inst.backend.clock < now {
+            inst.backend.clock = now; // the outage consumed virtual time
+        }
+        if let Some(sched) = self.crash.as_mut() {
+            if let Some(dt) = sched.next_crash_interval() {
+                q.push(now + dt, EventKind::Crash(i));
+            }
+        }
+    }
+
+    /// Requeue salvaged samples/tasks onto survivors: threshold deficits
+    /// first through [`Reallocator::plan_requeue`], then the admission
+    /// backlog, then refusal — so `arrivals == completions +
+    /// admission_refusals` survives any crash schedule. While a backlog
+    /// already pends, requeued samples join its tail (no overtaking).
+    fn requeue(
+        &mut self,
+        samples: Vec<SimSample>,
+        now: f64,
+        q: &mut EventQueue,
+        scheduled: &mut [bool],
+    ) {
+        if samples.is_empty() {
+            return;
+        }
+        self.samples_requeued += samples.len() as u64;
+        let mut it = samples.into_iter();
+        if self.pending.is_empty() {
+            let counts: Vec<usize> = self.instances.iter().map(|x| x.sample_count()).collect();
+            let caps: Vec<usize> = self
+                .instances
+                .iter()
+                .enumerate()
+                .map(|(k, x)| if self.alive[k] { x.capacity() * 4 } else { 0 })
+                .collect();
+            let plan = self.realloc.plan_requeue(&counts, &caps, it.len());
+            for (dest, k) in plan {
+                for _ in 0..k {
+                    let mut s = it.next().expect("plan_requeue never over-assigns");
+                    s.requeued_at.get_or_insert(now);
+                    self.admit_to(dest, s, now, q, scheduled);
+                }
+            }
+        }
+        for mut s in it {
+            s.requeued_at.get_or_insert(now);
+            if self.pending.len() < self.cfg.pending_bound {
+                self.pending.push_back(s);
+            } else {
+                self.refuse_admission();
+            }
+        }
+    }
+
+    /// A Stage-2 packet could not apply because its destination crashed
+    /// — it is dead at delivery, or (perfect path) it crashed *and
+    /// recovered* mid-flight, losing the stored Stage-1 bulk: return
+    /// the order to its source, or — the source gone too — requeue the
+    /// packet's contents onto survivors. Already-applied orders are
+    /// pure duplicates and are dropped.
+    fn bounce_stage2(
+        &mut self,
+        msg: Stage2Msg<SimBackend>,
+        now: f64,
+        q: &mut EventQueue,
+        scheduled: &mut [bool],
+    ) {
+        let (src, dest, order) = (msg.from, msg.to, msg.order);
+        if self.instances[dest].order_applied(order) {
+            return; // late duplicate of an already-applied order
+        }
+        if self.alive[src] {
+            self.return_order_to_source(order, src, msg.waiting_tasks, now, q, scheduled);
+        } else {
+            // Both endpoints are gone. Live victims were requeued when
+            // the source's limbo was salvaged (that order would be
+            // cancelled — unreachable here); what can still be lost is a
+            // queue-only packet, whose tasks exist only in this copy.
+            self.cancelled.insert(order);
+            self.salvaged_orders.insert(order);
+            self.bounced_orders += 1;
+            let mut salvaged: Vec<SimSample> = Vec::new();
+            for mut s in msg.control {
+                s.needs_reprefill = true;
+                salvaged.push(s);
+            }
+            salvaged.extend(msg.waiting_tasks);
+            self.requeue(salvaged, now, q, scheduled);
+        }
+    }
+
+    /// Return a committed-but-unapplied order to its (live) source: the
+    /// conservation-critical reclaim shared by crash-time dead-peer
+    /// reconciliation and the lazy Stage-2 bounce. Cancels the order so
+    /// stale copies dedup, reclaims the limbo victims — retained bulks
+    /// resume as parked samples (their KV was kept for retransmission),
+    /// early-released bulks lost the source KV and re-enter as
+    /// re-prefill tasks — gives the packet's queue-only `tasks` back to
+    /// the source's queue, and re-arms its step chain.
+    fn return_order_to_source(
+        &mut self,
+        order: u64,
+        src: usize,
+        tasks: Vec<SimSample>,
+        now: f64,
+        q: &mut EventQueue,
+        scheduled: &mut [bool],
+    ) {
+        self.cancelled.insert(order);
+        self.salvaged_orders.insert(order); // `tasks` are rescued below
+        self.bounced_orders += 1;
+        if let Some((samples, bulk_released)) = self.instances[src].reclaim_limbo(order) {
+            for mut s in samples {
+                if bulk_released {
+                    s.needs_reprefill = true;
+                    self.instances[src].waiting.push(s);
+                } else {
+                    self.instances[src].parked.push(s);
+                }
+            }
+        }
+        for t in tasks {
+            self.instances[src].waiting.push(t);
+        }
+        self.rearm_step(src, now, q, scheduled);
+    }
+
+    /// Every offered sample is finished or refused — the crash plane's
+    /// O(1) early-completion check (remaining heap events can only be
+    /// fault-schedule noise). Counter equality implies nothing is
+    /// resident, queued, or in limbo anywhere: each offered sample is in
+    /// exactly one state (the debug assertion at the break pins that).
+    fn all_samples_accounted(&self) -> bool {
+        self.completed + self.admission_refusals == self.arrivals
     }
 
     fn summarize(&self) -> ClusterResult {
@@ -1456,6 +1980,24 @@ impl SimCluster {
                 .sum(),
             link_drops,
             link_dups,
+            crashes: self.crashes,
+            recoveries: self.recoveries,
+            samples_requeued: self.samples_requeued,
+            requeue_delay_mean: {
+                let (sum, n) = self.instances.iter().fold((0.0f64, 0u64), |a, x| {
+                    (
+                        a.0 + x.metrics.requeue_delay_secs,
+                        a.1 + x.metrics.requeues_admitted,
+                    )
+                });
+                if n == 0 {
+                    0.0
+                } else {
+                    sum / n as f64
+                }
+            },
+            stage1_acks: self.stage1_acks,
+            bounced_orders: self.bounced_orders,
             migration_downtime: self.downtime,
             mean_accepted: if rounds == 0 { 0.0 } else { acc as f64 / rounds as f64 },
             traces: self.instances.iter().map(|x| x.metrics.trace.clone()).collect(),
@@ -1854,6 +2396,158 @@ mod tests {
         assert_eq!(c.instances.iter().map(|x| x.limbo_count()).sum::<usize>(), 0);
     }
 
+    /// The standard migration-heavy skew: one overloaded source, three
+    /// light destinations (36 samples total).
+    fn crash_skew() -> Vec<Vec<usize>> {
+        vec![vec![900; 24], vec![40; 4], vec![40; 4], vec![40; 4]]
+    }
+
+    fn finished_ids(c: &SimCluster) -> Vec<u64> {
+        let mut ids: Vec<u64> = c
+            .instances
+            .iter()
+            .flat_map(|x| x.finished.iter().map(|s| s.id))
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    #[test]
+    fn crash_requeues_and_conserves_on_perfect_transport() {
+        let mut cfg = base_cfg(0, 4);
+        cfg.cooldown = 8;
+        cfg.seed = 5;
+        cfg.crash = CrashConfig { rate_per_sec: 0.5, recover_secs: 1.0, max_crashes: 12 };
+        let mut c = SimCluster::with_assignment(cfg, crash_skew());
+        let r = c.run();
+        assert!(r.crashes > 0, "a 0.5/s hazard over a long skewed run must crash");
+        assert!(r.recoveries > 0, "1s mean downtime must let instances rejoin");
+        assert!(r.samples_requeued > 0, "crashes on a loaded fleet must requeue");
+        assert!(r.requeue_delay_mean >= 0.0 && r.requeue_delay_mean.is_finite());
+        // Requeued samples paid the re-prefill: the fleet logged prefill
+        // time it never logs on the crash-free path.
+        let prefill: f64 = c.instances.iter().map(|x| x.metrics.prefill_secs).sum();
+        assert!(prefill > 0.0, "re-admission must charge t_prefill");
+        // Conservation: every sample finished exactly once, nowhere limbo.
+        assert_eq!(finished_ids(&c), (0..36).collect::<Vec<u64>>());
+        assert_eq!(c.instances.iter().map(|x| x.limbo_count()).sum::<usize>(), 0);
+        assert!(c.orders.is_empty());
+    }
+
+    #[test]
+    fn crash_and_link_faults_compose() {
+        use crate::coordinator::transport::FaultProfile;
+        let mut cfg = base_cfg(0, 4);
+        cfg.cooldown = 8;
+        cfg.seed = 7;
+        cfg.transport =
+            TransportConfig::uniform(FaultProfile::uniform(0.25, 0.2, 0.5, 0.01));
+        cfg.crash = CrashConfig { rate_per_sec: 0.4, recover_secs: 1.0, max_crashes: 10 };
+        cfg.multi_dest = true;
+        let mut c = SimCluster::with_assignment(cfg, crash_skew());
+        let r = c.run();
+        assert!(r.crashes > 0);
+        assert!(r.link_drops > 0);
+        assert_eq!(finished_ids(&c), (0..36).collect::<Vec<u64>>());
+        assert_eq!(c.instances.iter().map(|x| x.limbo_count()).sum::<usize>(), 0);
+        assert!(c.orders.is_empty(), "no in-flight order may survive the run");
+    }
+
+    #[test]
+    fn crash_runs_replay_bit_for_bit() {
+        use crate::coordinator::transport::FaultProfile;
+        let mk = || {
+            let mut cfg = base_cfg(0, 4);
+            cfg.cooldown = 8;
+            cfg.seed = 11;
+            cfg.transport =
+                TransportConfig::uniform(FaultProfile::uniform(0.2, 0.1, 0.5, 0.005));
+            cfg.crash =
+                CrashConfig { rate_per_sec: 0.4, recover_secs: 1.0, max_crashes: 8 };
+            SimCluster::with_assignment(cfg, crash_skew()).run()
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.total_tokens, b.total_tokens);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.crashes, b.crashes);
+        assert_eq!(a.recoveries, b.recoveries);
+        assert_eq!(a.samples_requeued, b.samples_requeued);
+        assert_eq!(
+            a.requeue_delay_mean.to_bits(),
+            b.requeue_delay_mean.to_bits()
+        );
+        assert_eq!(a.stage1_acks, b.stage1_acks);
+        assert_eq!(a.bounced_orders, b.bounced_orders);
+    }
+
+    #[test]
+    fn zero_crash_section_is_bit_identical() {
+        let base = base_cfg(64, 4);
+        let mut explicit = base.clone();
+        explicit.crash =
+            CrashConfig { rate_per_sec: 0.0, recover_secs: 2.0, max_crashes: 128 };
+        assert!(explicit.crash.is_off());
+        let a = SimCluster::new(base).run();
+        let b = SimCluster::new(explicit).run();
+        assert_eq!(a.total_tokens, b.total_tokens);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(b.crashes, 0);
+        assert_eq!(b.samples_requeued, 0);
+    }
+
+    #[test]
+    fn permanent_fleet_loss_sheds_leftovers_as_refusals() {
+        // Both instances die almost immediately and never recover: the
+        // fleet cannot host the requeued samples, so the ledger closes
+        // with refusals instead of losing them.
+        let mut cfg = base_cfg(32, 2);
+        cfg.crash = CrashConfig { rate_per_sec: 50.0, recover_secs: 0.0, max_crashes: 2 };
+        let mut c = SimCluster::new(cfg);
+        let r = c.run();
+        assert_eq!(r.crashes, 2);
+        assert_eq!(r.recoveries, 0);
+        let finished: u64 = c.instances.iter().map(|x| x.finished.len() as u64).sum();
+        assert_eq!(finished + r.admission_refusals, r.arrivals, "ledger must close");
+        assert!(r.admission_refusals > 0, "a dead fleet must refuse the remainder");
+        for inst in &c.instances {
+            assert!(inst.is_idle(), "crash_drain must empty the instance");
+            assert_eq!(inst.limbo_count(), 0);
+        }
+    }
+
+    #[test]
+    fn stage1_ack_engages_only_on_faulty_links() {
+        use crate::coordinator::transport::FaultProfile;
+        // Perfect link: the knob is on by default but there are no acks
+        // at all — limbo accounting is untouched (golden guard).
+        let mut cfg = base_cfg(0, 4);
+        cfg.cooldown = 8;
+        let mut c = SimCluster::with_assignment(cfg, crash_skew());
+        let r = c.run();
+        assert!(r.migrations > 0);
+        assert_eq!(r.stage1_acks, 0);
+        // Lossy link: bulks get acked and their held copies released.
+        let mut cfg2 = base_cfg(0, 4);
+        cfg2.cooldown = 8;
+        cfg2.transport =
+            TransportConfig::uniform(FaultProfile::uniform(0.2, 0.1, 0.5, 0.01));
+        let mut c2 = SimCluster::with_assignment(cfg2, crash_skew());
+        let r2 = c2.run();
+        assert!(r2.migrations > 0);
+        assert!(r2.stage1_acks > 0, "a lossy link must ack some Stage-1 bulks");
+        assert_eq!(finished_ids(&c2), (0..36).collect::<Vec<u64>>());
+        // Knob off: PR-4 wire behavior (no Stage-1 acks drawn or sent).
+        let mut cfg3 = base_cfg(0, 4);
+        cfg3.cooldown = 8;
+        cfg3.transport =
+            TransportConfig::uniform(FaultProfile::uniform(0.2, 0.1, 0.5, 0.01));
+        cfg3.transport.stage1_ack = false;
+        let mut c3 = SimCluster::with_assignment(cfg3, crash_skew());
+        let r3 = c3.run();
+        assert_eq!(r3.stage1_acks, 0);
+        assert_eq!(finished_ids(&c3), (0..36).collect::<Vec<u64>>());
+    }
+
     #[test]
     fn event_queue_orders_by_time_then_kind_then_seq() {
         let mut q = EventQueue::new();
@@ -1910,6 +2604,12 @@ mod tests {
             handshake_aborts: 0,
             link_drops: 0,
             link_dups: 0,
+            crashes: 0,
+            recoveries: 0,
+            samples_requeued: 0,
+            requeue_delay_mean: 0.0,
+            stage1_acks: 0,
+            bounced_orders: 0,
             migration_downtime: 0.0,
             mean_accepted: 0.0,
             traces: Vec::new(),

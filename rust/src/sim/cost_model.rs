@@ -149,6 +149,15 @@ impl CostModel {
         self.link_latency + bytes as f64 / self.link_bandwidth
     }
 
+    /// One prefill pass over `tokens` prompt/committed tokens: a launch
+    /// floor plus compute ∝ tokens. Prefill is compute-bound (every
+    /// token runs the full FFN — no free latency shadow), which is what
+    /// makes crash recovery expensive: a requeued long-tail sample pays
+    /// this for its whole committed prefix.
+    pub fn t_prefill(&self, tokens: usize) -> f64 {
+        self.verify_base + self.verify_per_draft_token * tokens as f64
+    }
+
     /// KV bytes for `tokens` committed tokens of one sample.
     pub fn kv_bytes(&self, tokens: usize) -> usize {
         (self.kv_bytes_per_token * tokens as f64) as usize

@@ -1,0 +1,227 @@
+//! The instance-crash fault plane: a seeded, deterministic schedule of
+//! whole-instance losses and recoveries.
+//!
+//! Where [`crate::sim::link::FaultyLink`] faults individual §6.2
+//! *messages*, [`CrashSchedule`] kills whole *instances*: at a scheduled
+//! instant an instance loses its device state — resident samples, queued
+//! tasks, in-flight handshakes, stored Stage-1 bulks and unconfirmed
+//! limbo buffers — and (optionally) rejoins the fleet empty after a
+//! downtime. The carrier ([`crate::sim::cluster::SimCluster`]) salvages
+//! the coordinator-side records and requeues them onto survivors through
+//! the reallocator; KV is re-prefilled at the new host
+//! ([`crate::sim::cost_model::CostModel::t_prefill`]).
+//!
+//! Like the link's fault stream, every draw comes from a **salted
+//! deterministic RNG stream** (`seed ^ CRASH_SEED_SALT`), private to the
+//! schedule and consumed in event-pop order — so a given
+//! `(seed, CrashConfig)` pair replays the exact same crash schedule
+//! bit-for-bit (pinned by `tests/crash_recovery.rs`), and turning the
+//! crash plane on never perturbs the workload, arrival, or link streams.
+//!
+//! Inter-crash intervals are exponential with per-instance hazard
+//! [`CrashConfig::rate_per_sec`]; downtimes are exponential with mean
+//! [`CrashConfig::recover_secs`] (a non-positive mean means the instance
+//! never returns — permanent loss). [`CrashConfig::max_crashes`] bounds
+//! the total number of intervals drawn, so a schedule is always finite.
+
+use anyhow::{bail, Result};
+
+use crate::utils::rng::Rng;
+
+/// Salt for the crash RNG stream: keeps crash/recovery draws independent
+/// of the workload, arrival and link streams.
+pub const CRASH_SEED_SALT: u64 = 0xC7A5_4D1E;
+
+/// The `[crash]` configuration section: the instance-crash fault model.
+///
+/// The default is crash-free (`rate_per_sec = 0`), on which the crash
+/// plane is entirely inert and runs are bit-identical to a build without
+/// it (pinned by the zero-crash golden guards).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CrashConfig {
+    /// Per-instance crash hazard rate (crashes per virtual second,
+    /// exponential inter-arrivals). `<= 0` (or NaN) disables the plane.
+    pub rate_per_sec: f64,
+    /// Mean downtime before a crashed instance rejoins the fleet
+    /// (exponential). `<= 0` means crashed instances never recover.
+    pub recover_secs: f64,
+    /// Upper bound on inter-crash intervals drawn across the whole
+    /// fleet (initial per-instance draws included), so every schedule
+    /// is finite. 0 disables the plane.
+    pub max_crashes: usize,
+}
+
+impl Default for CrashConfig {
+    fn default() -> Self {
+        CrashConfig { rate_per_sec: 0.0, recover_secs: 1.0, max_crashes: 256 }
+    }
+}
+
+impl CrashConfig {
+    /// True when the plane can never fire: zero/negative/NaN rate or a
+    /// zero crash budget. Carriers then skip the crash machinery
+    /// entirely (zero-crash runs stay on the exact pre-crash code path).
+    pub fn is_off(&self) -> bool {
+        !(self.rate_per_sec > 0.0) || self.max_crashes == 0
+    }
+
+    /// Set one `[crash]` config key (the part after `crash.`):
+    /// `rate_per_sec`, `recover_secs`, `max_crashes`.
+    pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
+        let f = |v: &str| -> Result<f64> {
+            v.parse()
+                .map_err(|_| anyhow::anyhow!("expected float, got {v:?}"))
+        };
+        match key {
+            "rate_per_sec" => self.rate_per_sec = f(val)?,
+            "recover_secs" => self.recover_secs = f(val)?,
+            "max_crashes" => {
+                self.max_crashes = val
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("expected int, got {val:?}"))?
+            }
+            _ => bail!("unknown crash key {key:?}"),
+        }
+        Ok(())
+    }
+}
+
+/// A seeded generator of crash intervals and downtimes (see the module
+/// docs). Draws happen in carrier event order, which the cluster's
+/// deterministic heap makes replayable.
+#[derive(Clone, Debug)]
+pub struct CrashSchedule {
+    cfg: CrashConfig,
+    rng: Rng,
+    drawn: usize,
+}
+
+impl CrashSchedule {
+    /// Build a schedule for one run. `seed` is the cluster's master
+    /// seed; the schedule salts it so crash draws live on their own
+    /// stream.
+    pub fn new(cfg: CrashConfig, seed: u64) -> Self {
+        CrashSchedule { cfg, rng: Rng::new(seed ^ CRASH_SEED_SALT), drawn: 0 }
+    }
+
+    /// Draw the next inter-crash interval (seconds from "now": the run
+    /// start for an instance's first crash, the recovery instant after
+    /// that). `None` once the plane is off or the
+    /// [`CrashConfig::max_crashes`] budget is spent.
+    pub fn next_crash_interval(&mut self) -> Option<f64> {
+        if self.cfg.is_off() || self.drawn >= self.cfg.max_crashes {
+            return None;
+        }
+        self.drawn += 1;
+        Some(self.rng.exponential(self.cfg.rate_per_sec))
+    }
+
+    /// Draw the downtime of one crash (seconds until the instance
+    /// rejoins). `None` when recovery is disabled — the instance is
+    /// permanently lost.
+    pub fn downtime(&mut self) -> Option<f64> {
+        if self.cfg.recover_secs > 0.0 {
+            Some(self.rng.exponential(1.0 / self.cfg.recover_secs))
+        } else {
+            None
+        }
+    }
+
+    /// Inter-crash intervals drawn so far (bounded by
+    /// [`CrashConfig::max_crashes`]).
+    pub fn crashes_drawn(&self) -> usize {
+        self.drawn
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(rate: f64, recover: f64, max: usize) -> CrashConfig {
+        CrashConfig { rate_per_sec: rate, recover_secs: recover, max_crashes: max }
+    }
+
+    #[test]
+    fn default_is_off_and_inert() {
+        let c = CrashConfig::default();
+        assert!(c.is_off());
+        let mut s = CrashSchedule::new(c, 7);
+        assert!(s.next_crash_interval().is_none());
+        assert_eq!(s.crashes_drawn(), 0);
+    }
+
+    #[test]
+    fn nan_and_negative_rates_are_off() {
+        assert!(cfg(f64::NAN, 1.0, 8).is_off());
+        assert!(cfg(-0.5, 1.0, 8).is_off());
+        assert!(cfg(0.5, 1.0, 0).is_off(), "zero budget is off");
+        assert!(!cfg(0.5, 1.0, 8).is_off());
+    }
+
+    #[test]
+    fn schedule_replays_bit_for_bit_per_seed() {
+        let mk = || CrashSchedule::new(cfg(0.2, 1.5, 32), 42);
+        let (mut a, mut b) = (mk(), mk());
+        for i in 0..40 {
+            assert_eq!(
+                a.next_crash_interval().map(f64::to_bits),
+                b.next_crash_interval().map(f64::to_bits),
+                "interval draw {i}"
+            );
+            assert_eq!(
+                a.downtime().map(f64::to_bits),
+                b.downtime().map(f64::to_bits),
+                "downtime draw {i}"
+            );
+        }
+        // A different seed gives a different schedule.
+        let mut c = CrashSchedule::new(cfg(0.2, 1.5, 32), 43);
+        assert_ne!(
+            CrashSchedule::new(cfg(0.2, 1.5, 32), 42)
+                .next_crash_interval()
+                .map(f64::to_bits),
+            c.next_crash_interval().map(f64::to_bits)
+        );
+    }
+
+    #[test]
+    fn max_crashes_bounds_the_draws() {
+        let mut s = CrashSchedule::new(cfg(1.0, 1.0, 5), 9);
+        let drawn = (0..100).filter(|_| s.next_crash_interval().is_some()).count();
+        assert_eq!(drawn, 5);
+        assert_eq!(s.crashes_drawn(), 5);
+    }
+
+    #[test]
+    fn interval_mean_tracks_rate() {
+        let mut s = CrashSchedule::new(cfg(0.5, 2.0, usize::MAX), 11);
+        let n = 20_000;
+        let sum: f64 = (0..n).map(|_| s.next_crash_interval().unwrap()).sum();
+        let mean = sum / n as f64;
+        assert!((mean - 2.0).abs() < 0.1, "mean interval {mean} for rate 0.5");
+        let dsum: f64 = (0..n).map(|_| s.downtime().unwrap()).sum();
+        let dmean = dsum / n as f64;
+        assert!((dmean - 2.0).abs() < 0.1, "mean downtime {dmean}");
+    }
+
+    #[test]
+    fn zero_recover_means_permanent_loss() {
+        let mut s = CrashSchedule::new(cfg(1.0, 0.0, 8), 13);
+        assert!(s.downtime().is_none());
+    }
+
+    #[test]
+    fn config_keys_parse() {
+        let mut c = CrashConfig::default();
+        c.set("rate_per_sec", "0.25").unwrap();
+        c.set("recover_secs", "3.5").unwrap();
+        c.set("max_crashes", "17").unwrap();
+        assert_eq!(c.rate_per_sec, 0.25);
+        assert_eq!(c.recover_secs, 3.5);
+        assert_eq!(c.max_crashes, 17);
+        assert!(!c.is_off());
+        assert!(c.set("nope", "1").is_err());
+        assert!(c.set("rate_per_sec", "abc").is_err());
+    }
+}

@@ -60,6 +60,18 @@ pub struct SimSample {
     pub first_token_time: Option<f64>,
     /// Virtual instant the sample reached its target length.
     pub finish_time: Option<f64>,
+    /// The sample's KV died with a crashed instance (or an early-released
+    /// Stage-1 bulk): the next admission must re-prefill `seq_len()`
+    /// tokens, charged by the backend's prefill via
+    /// [`CostModel::t_prefill`]. Generated tokens themselves survive —
+    /// the coordinator streamed them out — only device state is rebuilt.
+    pub needs_reprefill: bool,
+    /// Virtual instant the sample was requeued after an instance crash
+    /// (None for samples that never crashed). Consumed by the survivor's
+    /// prefill, which records crash → decodable-again (queueing +
+    /// re-prefill) into `InstanceMetrics::requeue_delay_secs` — the
+    /// cluster's recovery-latency metric.
+    pub requeued_at: Option<f64>,
 }
 
 impl SimSample {
@@ -76,6 +88,8 @@ impl SimSample {
             admit_time: None,
             first_token_time: None,
             finish_time: None,
+            needs_reprefill: false,
+            requeued_at: None,
         }
     }
 
@@ -236,9 +250,24 @@ impl DecodeBackend for SimBackend {
         self.clock
     }
 
-    /// Admission is free in simulation: the task *is* the live sample.
-    /// Stamps the admission instant for the queueing-delay metric.
-    fn prefill(&mut self, mut task: SimSample, _metrics: &mut InstanceMetrics) -> Result<SimSample> {
+    /// Admission is free in simulation — the task *is* the live sample —
+    /// except for crash-requeued samples, whose lost KV is rebuilt here:
+    /// one re-prefill over `seq_len()` tokens, charged to the virtual
+    /// clock (the §6.2 crash-recovery cost model). Stamps the admission
+    /// instant for the queueing-delay metric.
+    fn prefill(&mut self, mut task: SimSample, metrics: &mut InstanceMetrics) -> Result<SimSample> {
+        if task.needs_reprefill {
+            task.needs_reprefill = false;
+            let dt = self.cost.t_prefill(task.seq_len());
+            self.clock += dt;
+            metrics.prefill_secs += dt;
+        }
+        // Recovery latency: crash instant → decodable again here, i.e.
+        // survivor queueing *plus* the re-prefill charged above.
+        if let Some(t0) = task.requeued_at.take() {
+            metrics.requeue_delay_secs += (self.clock - t0).max(0.0);
+            metrics.requeues_admitted += 1;
+        }
         if task.admit_time.is_none() {
             task.admit_time = Some(self.clock);
         }
@@ -362,6 +391,10 @@ impl DecodeBackend for SimBackend {
     ) -> Result<Vec<SimSample>> {
         self.stage1.remove(&order);
         Ok(control)
+    }
+
+    fn stage1_discard(&mut self, order: u64) {
+        self.stage1.remove(&order);
     }
 }
 

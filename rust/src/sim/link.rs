@@ -16,6 +16,12 @@
 //! acknowledged, so a class that drops *every* copy would livelock the
 //! run. At ≤ 90% drop, delivery is almost-surely eventual and the
 //! discrete-event run terminates.
+//!
+//! The link stream is independent of the instance-crash plane
+//! ([`crate::sim::crash::CrashSchedule`] draws from its own salt), so a
+//! crash×link-fault schedule composes deterministically: fixing the
+//! cluster seed fixes both fault streams at once, which is what lets
+//! `tests/crash_recovery.rs` replay combined schedules bit-for-bit.
 
 use crate::coordinator::transport::{FaultProfile, MsgClass, Transport, TransportConfig};
 use crate::utils::rng::Rng;

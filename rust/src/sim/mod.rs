@@ -43,7 +43,11 @@
 //! drop/duplicate/reorder/delay fault injection under the §6.2 protocol,
 //! against which the hardened endpoint (per-order seqnos, idempotent
 //! apply, retransmit + handshake timeout) is property-tested in
-//! `tests/fault_link.rs`.
+//! `tests/fault_link.rs`. [`crash`] is the whole-instance fault plane
+//! ([`crash::CrashSchedule`]): seeded crash/recovery schedules under
+//! which the cluster salvages a dead instance's samples, requeues them
+//! onto survivors (KV re-prefilled at the new host) and re-admits
+//! recovered instances — property-tested in `tests/crash_recovery.rs`.
 //!
 //! See `docs/ARCHITECTURE.md` for the event-flow diagram and the
 //! "where to add a new event kind" guide.
@@ -55,11 +59,13 @@
 pub mod acceptance;
 pub mod cluster;
 pub mod cost_model;
+pub mod crash;
 pub mod e2e;
 pub mod engine;
 pub mod link;
 
 pub use cluster::{ClusterConfig, ClusterResult, FleetTier, SimCluster, TierStats};
+pub use crash::{CrashConfig, CrashSchedule};
 pub use cost_model::CostModel;
 pub use engine::SimInstance;
 pub use engine::SimMode;

@@ -5,13 +5,33 @@
 //! `check_seed`. Coordinator invariants (reallocation constraints, selector
 //! optimality, tree connectivity, migration round-trips) are verified with
 //! this harness throughout `rust/tests/`.
+//!
+//! `PALLAS_PROP_CASES` multiplies every property's case count — the PR
+//! gate runs the fast default (unset = 1×), and CI's scheduled "deep"
+//! job re-runs the suites at 10× to sweep far more fault/crash
+//! schedules without slowing down pull requests.
 
 use crate::utils::rng::Rng;
 
 /// Default number of cases per property.
 pub const DEFAULT_CASES: usize = 200;
 
-/// Run `prop` over `cases` seeded RNGs; panic with the failing seed.
+/// Parse a `PALLAS_PROP_CASES` value into a case-count multiplier
+/// (unset/invalid/0 = 1). Pure, so it is testable without mutating the
+/// process environment (`set_var` races other test threads' `getenv`).
+fn parse_case_multiplier(v: Option<&str>) -> usize {
+    v.and_then(|s| s.parse::<usize>().ok())
+        .filter(|&m| m >= 1)
+        .unwrap_or(1)
+}
+
+/// Case-count multiplier from `PALLAS_PROP_CASES`.
+fn case_multiplier() -> usize {
+    parse_case_multiplier(std::env::var("PALLAS_PROP_CASES").ok().as_deref())
+}
+
+/// Run `prop` over `cases` seeded RNGs (scaled by `PALLAS_PROP_CASES`);
+/// panic with the failing seed.
 pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: usize, mut prop: F) {
     // Base seed is stable so CI is deterministic; override with
     // RLHFSPEC_PROP_SEED for exploration.
@@ -19,6 +39,7 @@ pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: usize, mut prop: F) {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(0xC0FFEE);
+    let cases = cases.saturating_mul(case_multiplier());
     for case in 0..cases {
         let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -73,6 +94,24 @@ mod tests {
             let x = rng.below(1000);
             assert_eq!(x + 0, x);
         });
+    }
+
+    #[test]
+    fn prop_cases_multiplier_parses_defensively() {
+        // The deep-CI knob: PALLAS_PROP_CASES scales every property's
+        // case count. Parsing is pure (no env mutation — set_var would
+        // race other test threads); unset/invalid/zero all mean 1×.
+        assert_eq!(parse_case_multiplier(None), 1);
+        assert_eq!(parse_case_multiplier(Some("")), 1);
+        assert_eq!(parse_case_multiplier(Some("abc")), 1);
+        assert_eq!(parse_case_multiplier(Some("0")), 1);
+        assert_eq!(parse_case_multiplier(Some("1")), 1);
+        assert_eq!(parse_case_multiplier(Some("10")), 10);
+        // And check() applies the multiplier (1× without the env set —
+        // the test harness never exports the knob).
+        let mut ran = 0usize;
+        check("multiplier-baseline", 10, |_rng| ran += 1);
+        assert_eq!(ran, 10 * case_multiplier());
     }
 
     #[test]

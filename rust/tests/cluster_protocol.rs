@@ -18,11 +18,14 @@
 //! * the endpoint handshake moves a sample intact between two instances
 //!   and handles refusal without losing work.
 
+mod common;
+
 use rlhfspec::coordinator::core::{AckOutcome, MigrateStart, Stage2Disposition};
 use rlhfspec::coordinator::transport::TransportConfig;
 use rlhfspec::sim::acceptance::AcceptanceModel;
-use rlhfspec::sim::cluster::{ClusterConfig, FleetTier, SimCluster};
+use rlhfspec::sim::cluster::{ClusterConfig, SimCluster};
 use rlhfspec::sim::cost_model::CostModel;
+use rlhfspec::sim::crash::CrashConfig;
 use rlhfspec::sim::engine::{SimInstance, SimParams, SimSample};
 use rlhfspec::testutil;
 
@@ -118,14 +121,7 @@ fn golden_parity_event_heap_matches_laggard_scan() {
     // order, same step order, same migration sequence. Covers both decode
     // modes and a migration-heavy skewed assignment.
     for seed in [0u64, 7, 42] {
-        let cfg = ClusterConfig {
-            instances: 8,
-            n_samples: 192,
-            max_tokens: 512,
-            cooldown: 24,
-            seed,
-            ..Default::default()
-        };
+        let cfg = common::golden8(seed);
         let heap = SimCluster::new(cfg.clone()).run();
         let scan = SimCluster::new(cfg).run_reference_laggard();
         assert_eq!(heap.total_tokens, scan.total_tokens, "seed {seed}");
@@ -142,14 +138,7 @@ fn golden_parity_event_heap_matches_laggard_scan() {
     // AR mode keeps many instance clocks exactly tied for long stretches
     // — the (time, kind, seq) tie-break must still replay the scan's
     // lowest-index-first order.
-    let ar_cfg = ClusterConfig {
-        instances: 8,
-        mode: rlhfspec::sim::SimMode::Ar,
-        n_samples: 128,
-        max_tokens: 256,
-        seed: 5,
-        ..Default::default()
-    };
+    let ar_cfg = common::golden8_ar();
     let heap = SimCluster::new(ar_cfg.clone()).run();
     let scan = SimCluster::new(ar_cfg).run_reference_laggard();
     assert_eq!(heap.total_tokens, scan.total_tokens);
@@ -160,20 +149,7 @@ fn golden_parity_event_heap_matches_laggard_scan() {
 fn golden_parity_under_skewed_migrations() {
     // Skew forces a dense migration schedule: Stage-2 arrival ordering on
     // the heap must replay the scan's delivery semantics exactly.
-    let mk = || {
-        let cfg = ClusterConfig {
-            instances: 4,
-            cooldown: 8,
-            n_samples: 0,
-            max_tokens: 1024,
-            seed: 3,
-            ..Default::default()
-        };
-        SimCluster::with_assignment(
-            cfg,
-            vec![vec![900; 24], vec![40; 4], vec![40; 4], vec![40; 4]],
-        )
-    };
+    let mk = || SimCluster::with_assignment(common::skew4(3, 1024), common::skew4_assignment());
     let heap = mk().run();
     let scan = mk().run_reference_laggard();
     assert!(heap.migrations > 0, "scenario must migrate");
@@ -216,18 +192,7 @@ fn heterogeneous_fleet_fast_tiers_steal_work() {
     // Mixed fleet through the real endpoint protocol: the overloaded slow
     // tier must shed its long tail to the fast tiers, and the per-tier
     // ledgers must balance.
-    let cfg = ClusterConfig {
-        fleet: vec![
-            FleetTier::preset("h100", 4).unwrap(),
-            FleetTier::preset("a100", 4).unwrap(),
-            FleetTier::preset("l40s", 8).unwrap(),
-        ],
-        cooldown: 16,
-        n_samples: 0,
-        max_tokens: 768,
-        seed: 23,
-        ..Default::default()
-    };
+    let cfg = common::hetero_fleet(23, 0, 768);
     let mut assignment: Vec<Vec<usize>> = Vec::new();
     for _ in 0..8 {
         assignment.push(vec![60; 2]); // fast tiers: drain quickly
@@ -274,14 +239,7 @@ fn golden_guard_perfect_transport_is_bit_identical() {
     // therefore to the retained pre-transport laggard scan, which the
     // parity tests above pin). Covers Adaptive + AR and the
     // migration-heavy skew.
-    let base = ClusterConfig {
-        instances: 8,
-        n_samples: 192,
-        max_tokens: 512,
-        cooldown: 24,
-        seed: 42,
-        ..Default::default()
-    };
+    let base = common::golden8(42);
     let mut explicit = base.clone();
     explicit.transport = TransportConfig::default();
     assert!(explicit.transport.is_perfect());
@@ -314,19 +272,9 @@ fn golden_guard_perfect_transport_is_bit_identical() {
     }
     // Skewed, migration-heavy case against the laggard reference.
     let mk = |transport: TransportConfig| {
-        let cfg = ClusterConfig {
-            instances: 4,
-            cooldown: 8,
-            n_samples: 0,
-            max_tokens: 1024,
-            seed: 3,
-            transport,
-            ..Default::default()
-        };
-        SimCluster::with_assignment(
-            cfg,
-            vec![vec![900; 24], vec![40; 4], vec![40; 4], vec![40; 4]],
-        )
+        let mut cfg = common::skew4(3, 1024);
+        cfg.transport = transport;
+        SimCluster::with_assignment(cfg, common::skew4_assignment())
     };
     let heap = mk(TransportConfig::default()).run();
     let scan = mk(TransportConfig::default()).run_reference_laggard();
@@ -334,6 +282,72 @@ fn golden_guard_perfect_transport_is_bit_identical() {
     assert_eq!(heap.total_tokens, scan.total_tokens);
     assert_eq!(heap.makespan.to_bits(), scan.makespan.to_bits());
     assert_eq!(heap.migrations, scan.migrations);
+}
+
+#[test]
+fn golden_guard_zero_crash_section_is_bit_identical() {
+    // The crash plane must be invisible at zero probability: a run with
+    // an explicitly-constructed zero-rate `[crash]` section is
+    // bit-identical to the default config — i.e. to the PR-4 output the
+    // parity tests above pin — on both the golden batch config and the
+    // migration-heavy skew.
+    let base = common::golden8(42);
+    let mut explicit = base.clone();
+    explicit.crash = CrashConfig { rate_per_sec: 0.0, recover_secs: 2.0, max_crashes: 64 };
+    assert!(explicit.crash.is_off());
+    let a = SimCluster::new(base).run();
+    let b = SimCluster::new(explicit).run();
+    assert_eq!(a.total_tokens, b.total_tokens);
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    assert_eq!(a.migrations, b.migrations);
+    assert_eq!(b.crashes, 0);
+    assert_eq!(b.recoveries, 0);
+    assert_eq!(b.samples_requeued, 0);
+    assert_eq!(b.bounced_orders, 0);
+    // Migration-heavy skew, against both the default and the laggard
+    // reference (which predates the crash plane entirely).
+    let mk = |crash: CrashConfig| {
+        let mut cfg = common::skew4(3, 1024);
+        cfg.crash = crash;
+        SimCluster::with_assignment(cfg, common::skew4_assignment())
+    };
+    let zero = CrashConfig { rate_per_sec: -1.0, recover_secs: 0.5, max_crashes: 16 };
+    assert!(zero.is_off());
+    let heap = mk(zero).run();
+    let scan = mk(CrashConfig::default()).run_reference_laggard();
+    assert!(heap.migrations > 0);
+    assert_eq!(heap.total_tokens, scan.total_tokens);
+    assert_eq!(heap.makespan.to_bits(), scan.makespan.to_bits());
+}
+
+#[test]
+fn golden_guard_stage1_ack_on_perfect_transport_preserves_limbo_accounting() {
+    // Stage-1 early release only engages on unreliable links (the ack is
+    // a link message). With a perfect transport, toggling the knob must
+    // change nothing: same bits, same limbo accounting trajectory
+    // (everything confirms synchronously; nothing is ever bulk-released).
+    let mk = |ack: bool| {
+        let mut cfg = common::skew4(3, 1024);
+        cfg.transport.stage1_ack = ack;
+        assert!(cfg.transport.is_perfect());
+        SimCluster::with_assignment(cfg, common::skew4_assignment())
+    };
+    let mut on = mk(true);
+    let mut off = mk(false);
+    let a = on.run();
+    let b = off.run();
+    assert!(a.migrations > 0, "scenario must migrate to be a guard");
+    assert_eq!(a.total_tokens, b.total_tokens);
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    assert_eq!(a.migrations, b.migrations);
+    assert_eq!(a.stage1_acks, 0, "no acks exist on a perfect link");
+    assert_eq!(b.stage1_acks, 0);
+    // Today's limbo accounting: every order confirmed, zero residue —
+    // in samples *and* in held KV bytes.
+    for c in [&on, &off] {
+        assert_eq!(c.instances.iter().map(|x| x.limbo_count()).sum::<usize>(), 0);
+        assert_eq!(c.instances.iter().map(|x| x.limbo_bytes()).sum::<usize>(), 0);
+    }
 }
 
 #[test]

@@ -1,0 +1,127 @@
+//! Shared cluster-config presets for the integration suites.
+//!
+//! The golden 8-instance batch config, the mixed-GPU (hetero) fleet and
+//! the skew/fault workload shapes used to be ~15 duplicated inline
+//! `ClusterConfig { .. }` literals spread across
+//! `cluster_protocol.rs`, `fault_link.rs`, `streaming_cluster.rs` and
+//! `crash_recovery.rs` — drifting one copy would silently weaken a
+//! golden guard. Every suite now builds from these presets; a config
+//! change lands once and every parity/conservation pin moves together.
+
+#![allow(dead_code)] // each test binary uses its own subset
+
+use rlhfspec::coordinator::transport::{FaultProfile, TransportConfig};
+use rlhfspec::sim::cluster::{ClusterConfig, FleetTier};
+use rlhfspec::sim::SimMode;
+use rlhfspec::utils::rng::Rng;
+
+/// The golden 8-instance adaptive batch config: the seed of every
+/// bit-for-bit parity pin (event-heap vs laggard scan, streaming-at-∞
+/// vs batch, perfect-transport guard, zero-crash guard).
+pub fn golden8(seed: u64) -> ClusterConfig {
+    ClusterConfig {
+        instances: 8,
+        n_samples: 192,
+        max_tokens: 512,
+        cooldown: 24,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// The AR-mode golden config: many instance clocks stay exactly tied,
+/// stressing the deterministic `(time, kind, seq)` tie-break.
+pub fn golden8_ar() -> ClusterConfig {
+    ClusterConfig {
+        instances: 8,
+        mode: SimMode::Ar,
+        n_samples: 128,
+        max_tokens: 256,
+        seed: 5,
+        ..Default::default()
+    }
+}
+
+/// Migration-heavy 4-instance skew config — pair with
+/// [`skew4_assignment`]. `max_tokens` varies per suite (parity pins use
+/// 1024, abort/fault scenarios shorter budgets).
+pub fn skew4(seed: u64, max_tokens: usize) -> ClusterConfig {
+    ClusterConfig {
+        instances: 4,
+        cooldown: 8,
+        n_samples: 0,
+        max_tokens,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// The standard skew workload for [`skew4`]: one overloaded long-tail
+/// source and three light destinations (36 samples, ids 0..36).
+pub fn skew4_assignment() -> Vec<Vec<usize>> {
+    vec![vec![900; 24], vec![40; 4], vec![40; 4], vec![40; 4]]
+}
+
+/// The mixed-GPU fleet preset (4×h100 + 4×a100 + 8×l40s, per-tier
+/// knees): the heterogeneous work-stealing scenario shared by the batch
+/// and streaming suites.
+pub fn hetero_fleet(seed: u64, n_samples: usize, max_tokens: usize) -> ClusterConfig {
+    ClusterConfig {
+        fleet: vec![
+            FleetTier::preset("h100", 4).expect("preset"),
+            FleetTier::preset("a100", 4).expect("preset"),
+            FleetTier::preset("l40s", 8).expect("preset"),
+        ],
+        cooldown: 16,
+        n_samples,
+        max_tokens,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// A randomized per-class fault schedule: probabilities drawn from the
+/// case RNG, occasionally zeroing a class so partially-perfect configs
+/// are covered too (shared by the link-fault and crash×link sweeps).
+pub fn random_transport(rng: &mut Rng) -> TransportConfig {
+    let profile = |rng: &mut Rng| -> FaultProfile {
+        if rng.chance(0.2) {
+            return FaultProfile::perfect();
+        }
+        FaultProfile::uniform(
+            rng.f64() * 0.45,
+            rng.f64() * 0.3,
+            rng.f64(),
+            rng.f64() * 0.01,
+        )
+    };
+    let retransmit_secs = 0.01 + rng.f64() * 0.05;
+    TransportConfig {
+        alloc_req: profile(rng),
+        alloc_ack: profile(rng),
+        stage1: profile(rng),
+        stage2: profile(rng),
+        retransmit_secs,
+        retransmit_budget: 2 + rng.below(6),
+        handshake_timeout_secs: retransmit_secs * (2.0 + rng.f64() * 8.0),
+        ..TransportConfig::default()
+    }
+}
+
+/// Randomized skewed assignment for a large fleet: every 8th instance
+/// holds a heavy long tail, the rest are lightly loaded. Returns the
+/// assignment and the total sample count.
+pub fn skewed_big_fleet(rng: &mut Rng, instances: usize) -> (Vec<Vec<usize>>, u64) {
+    let mut assignment: Vec<Vec<usize>> = Vec::new();
+    for i in 0..instances {
+        if i % 8 == 0 {
+            let k = 6 + rng.below(5);
+            assignment.push((0..k).map(|_| 250 + rng.below(250)).collect());
+        } else {
+            let k = rng.below(3);
+            assignment.push((0..k).map(|_| 30 + rng.below(90)).collect());
+        }
+    }
+    let n: u64 = assignment.iter().map(|v| v.len() as u64).sum();
+    (assignment, n)
+}

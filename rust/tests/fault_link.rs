@@ -19,12 +19,13 @@
 //! deterministic schedule (`RLHFSPEC_PROP_SEED` overrides for
 //! exploration).
 
+mod common;
+
 use rlhfspec::coordinator::transport::{FaultProfile, TransportConfig};
 use rlhfspec::data::arrivals::ArrivalProcess;
 use rlhfspec::sim::cluster::{ClusterConfig, SimCluster};
 use rlhfspec::sim::ClusterResult;
 use rlhfspec::testutil;
-use rlhfspec::utils::rng::Rng;
 
 /// Every sample finished exactly once; nothing is still assigned,
 /// parked, queued, or sitting in a limbo buffer anywhere in the fleet.
@@ -47,33 +48,6 @@ fn assert_conserved(c: &SimCluster, n: u64) {
     }
 }
 
-/// A randomized fault schedule: per-class probabilities drawn from the
-/// case RNG, occasionally zeroing a class so partially-perfect configs
-/// are covered too.
-fn random_transport(rng: &mut Rng) -> TransportConfig {
-    let profile = |rng: &mut Rng| -> FaultProfile {
-        if rng.chance(0.2) {
-            return FaultProfile::perfect();
-        }
-        FaultProfile::uniform(
-            rng.f64() * 0.45,
-            rng.f64() * 0.3,
-            rng.f64(),
-            rng.f64() * 0.01,
-        )
-    };
-    let retransmit_secs = 0.01 + rng.f64() * 0.05;
-    TransportConfig {
-        alloc_req: profile(rng),
-        alloc_ack: profile(rng),
-        stage1: profile(rng),
-        stage2: profile(rng),
-        retransmit_secs,
-        retransmit_budget: 2 + rng.below(6),
-        handshake_timeout_secs: retransmit_secs * (2.0 + rng.f64() * 8.0),
-    }
-}
-
 #[test]
 fn property_fault_schedules_preserve_conservation_at_64_instances() {
     // ~64 randomized fault schedules on a 64-instance skewed fleet:
@@ -81,25 +55,14 @@ fn property_fault_schedules_preserve_conservation_at_64_instances() {
     // conserved. Batched multi-destination orders toggle per case.
     testutil::check("fault-conservation-64-instances", 64, |rng| {
         let instances = 64usize;
-        let mut assignment: Vec<Vec<usize>> = Vec::new();
-        for i in 0..instances {
-            if i % 8 == 0 {
-                // heavy long-tail holders force migration traffic
-                let k = 6 + rng.below(5);
-                assignment.push((0..k).map(|_| 250 + rng.below(250)).collect());
-            } else {
-                let k = rng.below(3);
-                assignment.push((0..k).map(|_| 30 + rng.below(90)).collect());
-            }
-        }
-        let n: u64 = assignment.iter().map(|v| v.len() as u64).sum();
+        let (assignment, n) = common::skewed_big_fleet(rng, instances);
         let cfg = ClusterConfig {
             instances,
             cooldown: (8 + rng.below(17)) as u64,
             n_samples: 0,
             max_tokens: 320,
             seed: rng.below(1 << 30) as u64,
-            transport: random_transport(rng),
+            transport: common::random_transport(rng),
             multi_dest: rng.chance(0.5),
             ..Default::default()
         };
@@ -125,7 +88,7 @@ fn streaming_under_faults_conserves_arrivals() {
             max_tokens: 256,
             cooldown: 8,
             seed: rng.below(1 << 30) as u64,
-            transport: random_transport(rng),
+            transport: common::random_transport(rng),
             multi_dest: rng.chance(0.5),
             ..Default::default()
         };
@@ -170,19 +133,9 @@ fn aborted_orders_leave_victims_finishing_at_the_source() {
         handshake_timeout_secs: 0.02,
         ..TransportConfig::default()
     };
-    let cfg = ClusterConfig {
-        instances: 4,
-        cooldown: 8,
-        n_samples: 0,
-        max_tokens: 768,
-        seed: 29,
-        transport,
-        ..Default::default()
-    };
-    let mut c = SimCluster::with_assignment(
-        cfg,
-        vec![vec![900; 24], vec![40; 4], vec![40; 4], vec![40; 4]],
-    );
+    let mut cfg = common::skew4(29, 768);
+    cfg.transport = transport;
+    let mut c = SimCluster::with_assignment(cfg, common::skew4_assignment());
     let r = c.run();
     assert!(
         r.handshake_aborts > 0,

@@ -224,6 +224,47 @@ fn fault_figure_sweeps_drop_rate_on_the_hetero_fleet() {
 }
 
 #[test]
+fn crash_figure_sweeps_crash_rate_on_the_hetero_fleet() {
+    // The crash-rate sweep must render a crash-free baseline row (zero
+    // crashes, zero requeues) and actually kill instances at the higher
+    // rates — while the completion column stays conserved on every row
+    // (56 offered samples, completions + refusals == 56).
+    let s = figures::fig_crash(SEED);
+    assert!(s.contains("recov-lat"), "{s}");
+    let rows: Vec<&str> = s
+        .lines()
+        .filter(|l| l.trim_start().starts_with("0.") && l.contains('s'))
+        .collect();
+    assert_eq!(rows.len(), 5, "five sweep rows expected:\n{s}");
+    for row in &rows {
+        let cols: Vec<f64> = row
+            .split_whitespace()
+            .map(|t| t.trim_end_matches('s').parse::<f64>().unwrap_or(f64::NAN))
+            .collect();
+        assert_eq!(cols.len(), 9, "bad row {row:?}");
+        let (crashes, requeued, refused, done) = (cols[3], cols[5], cols[7], cols[8]);
+        assert_eq!(done + refused, 56.0, "ledger must close in row {row:?}");
+        assert!(requeued >= 0.0 && crashes >= 0.0);
+    }
+    // Baseline row: zero rate, zero crashes, zero requeues.
+    let base: Vec<f64> = rows[0]
+        .split_whitespace()
+        .map(|t| t.trim_end_matches('s').parse::<f64>().unwrap_or(f64::NAN))
+        .collect();
+    assert_eq!(base[0], 0.0);
+    assert_eq!(base[3], 0.0, "crash-free baseline must not crash");
+    assert_eq!(base[5], 0.0);
+    // The hottest row must actually lose instances and requeue work.
+    let hot: Vec<f64> = rows[4]
+        .split_whitespace()
+        .map(|t| t.trim_end_matches('s').parse::<f64>().unwrap_or(f64::NAN))
+        .collect();
+    assert!(hot[3] > 0.0, "0.4/s per-instance hazard must crash:\n{s}");
+    assert!(hot[5] > 0.0, "crashes on a loaded fleet must requeue:\n{s}");
+    assert!(!s.contains("NaN"), "{s}");
+}
+
+#[test]
 fn all_figures_render() {
     for id in figures::ALL_FIGURES {
         let out = figures::run_figure(id, SEED).unwrap();

@@ -7,8 +7,10 @@ use rlhfspec::config::{RunConfig, SelectorConfig};
 use rlhfspec::coordinator::migration::{pack_hierarchical, unpack_hierarchical};
 use rlhfspec::coordinator::predictor::{AcceptancePredictor, TsdPredictor};
 use rlhfspec::coordinator::selector::select_strategy;
+use rlhfspec::coordinator::reallocator::Reallocator;
 use rlhfspec::rlhf::gae::{gae, normalize_advantages};
 use rlhfspec::runtime::HostTensor;
+use rlhfspec::sim::crash::{CrashConfig, CrashSchedule};
 use rlhfspec::spec::kvcache::KvCache;
 use rlhfspec::spec::sampler;
 use rlhfspec::spec::tree::CandidateTree;
@@ -265,6 +267,89 @@ fn gae_normalization_is_idempotent_scale() {
         assert!(mean.abs() < 1e-4, "{mean}");
         let var: f32 = adv.iter().map(|a| a * a).sum::<f32>() / n as f32;
         assert!((var - 1.0).abs() < 1e-2, "{var}");
+    });
+}
+
+#[test]
+fn crash_schedule_replays_and_respects_budget() {
+    // Any (seed, CrashConfig) pair replays its draw sequence bit-for-bit
+    // and never draws more inter-crash intervals than max_crashes.
+    check("crash-schedule-replay", 100, |rng| {
+        let cfg = CrashConfig {
+            rate_per_sec: 0.05 + rng.f64(),
+            recover_secs: if rng.chance(0.3) { 0.0 } else { rng.f64() * 3.0 },
+            max_crashes: rng.below(48),
+        };
+        let seed = rng.below(1 << 30) as u64;
+        let mut a = CrashSchedule::new(cfg.clone(), seed);
+        let mut b = CrashSchedule::new(cfg.clone(), seed);
+        let mut drawn = 0usize;
+        loop {
+            let (x, y) = (a.next_crash_interval(), b.next_crash_interval());
+            assert_eq!(x.map(f64::to_bits), y.map(f64::to_bits), "interval {drawn}");
+            assert_eq!(
+                a.downtime().map(f64::to_bits),
+                b.downtime().map(f64::to_bits),
+                "downtime {drawn}"
+            );
+            match x {
+                Some(dt) => {
+                    assert!(dt >= 0.0 && dt.is_finite(), "interval {dt}");
+                    drawn += 1;
+                    assert!(drawn <= cfg.max_crashes, "budget exceeded");
+                }
+                None => break,
+            }
+        }
+        assert_eq!(drawn, cfg.max_crashes, "budget fully drawable");
+        assert_eq!(a.crashes_drawn(), drawn);
+    });
+}
+
+#[test]
+fn requeue_placement_respects_thresholds_and_capacity() {
+    // The crash-recovery placement plan: deficits fill first, nothing is
+    // placed on a zero-capacity (crashed) instance, totals are bounded
+    // by fleet headroom, and the plan is independent of decision state
+    // (no cooldown consumed).
+    check("plan-requeue-invariants", 150, |rng| {
+        let n = rng.range(2, 12);
+        let th = rng.range(1, 10);
+        let counts: Vec<usize> = (0..n).map(|_| rng.below(20)).collect();
+        let caps: Vec<usize> = counts
+            .iter()
+            .map(|&c| if rng.chance(0.3) { 0 } else { c + rng.below(12) })
+            .collect();
+        let k = rng.below(48);
+        let r = Reallocator::new(th, 7);
+        let plan = r.plan_requeue(&counts, &caps, k);
+        let mut next = counts.clone();
+        for &(i, m) in &plan {
+            assert!(m > 0);
+            assert!(caps[i] > 0, "crashed instance received work");
+            next[i] += m;
+            assert!(next[i] <= caps[i], "instance {i} over capacity");
+        }
+        let placed: usize = plan.iter().map(|&(_, m)| m).sum();
+        let headroom: usize = counts
+            .iter()
+            .zip(&caps)
+            .map(|(&c, &cap)| cap.saturating_sub(c))
+            .sum();
+        assert_eq!(placed, k.min(headroom));
+        // Deficit priority: if anything was placed while some instance
+        // sat below threshold with capacity headroom, the first
+        // assignment goes to a below-threshold instance.
+        if let Some(&(first, _)) = plan.first() {
+            let any_deficit = (0..n)
+                .any(|i| counts[i] < th && caps[i] > counts[i]);
+            if any_deficit {
+                assert!(
+                    counts[first] < th,
+                    "first placement skipped a fillable deficit"
+                );
+            }
+        }
     });
 }
 

@@ -13,9 +13,11 @@
 //! * **Latency sanity** — queueing delay under an overloaded burst
 //!   dwarfs the near-zero delay of a trickle arrival process.
 
+mod common;
+
 use rlhfspec::data::arrivals::ArrivalProcess;
-use rlhfspec::sim::cluster::{ClusterConfig, FleetTier, SimCluster};
-use rlhfspec::sim::SimMode;
+use rlhfspec::sim::cluster::{ClusterConfig, SimCluster};
+use rlhfspec::sim::crash::CrashConfig;
 
 #[test]
 fn infinite_rate_streaming_is_bit_identical_to_batch_run() {
@@ -23,14 +25,7 @@ fn infinite_rate_streaming_is_bit_identical_to_batch_run() {
     // pins, now pinning streaming-vs-batch: adaptive decode, migrations
     // live, three seeds.
     for seed in [0u64, 7, 42] {
-        let cfg = ClusterConfig {
-            instances: 8,
-            n_samples: 192,
-            max_tokens: 512,
-            cooldown: 24,
-            seed,
-            ..Default::default()
-        };
+        let cfg = common::golden8(seed);
         let batch = SimCluster::new(cfg.clone()).run();
         let mut streaming = SimCluster::streaming(cfg, &ArrivalProcess::burst())
             .expect("valid streaming config");
@@ -54,14 +49,7 @@ fn infinite_rate_streaming_is_bit_identical_to_batch_run() {
     }
     // AR mode keeps many instance clocks exactly tied — the burst's
     // admission order must still replay the round-robin allocation.
-    let ar_cfg = ClusterConfig {
-        instances: 8,
-        mode: SimMode::Ar,
-        n_samples: 128,
-        max_tokens: 256,
-        seed: 5,
-        ..Default::default()
-    };
+    let ar_cfg = common::golden8_ar();
     let batch = SimCluster::new(ar_cfg.clone()).run();
     let stream = SimCluster::streaming(ar_cfg, &ArrivalProcess::poisson(f64::INFINITY))
         .expect("valid streaming config")
@@ -78,14 +66,7 @@ fn golden_guard_streaming_with_perfect_transport_is_bit_identical() {
     // reliability machinery engaged).
     use rlhfspec::coordinator::transport::TransportConfig;
     for seed in [0u64, 42] {
-        let cfg = ClusterConfig {
-            instances: 8,
-            n_samples: 192,
-            max_tokens: 512,
-            cooldown: 24,
-            seed,
-            ..Default::default()
-        };
+        let cfg = common::golden8(seed);
         let mut with_transport = cfg.clone();
         with_transport.transport = TransportConfig::default();
         let base = SimCluster::streaming(cfg, &ArrivalProcess::burst())
@@ -104,6 +85,37 @@ fn golden_guard_streaming_with_perfect_transport_is_bit_identical() {
         assert_eq!(guarded.retransmits, 0, "seed {seed}");
         assert_eq!(guarded.handshake_aborts, 0, "seed {seed}");
         assert_eq!((guarded.link_drops, guarded.link_dups), (0, 0), "seed {seed}");
+    }
+}
+
+#[test]
+fn golden_guard_streaming_zero_crash_section_is_bit_identical() {
+    // The crash plane's golden guard on the streaming path: an explicit
+    // zero-rate `[crash]` section must not perturb a single bit of the
+    // rate → ∞ parity runs (no crash events scheduled, no early-break
+    // path taken, no requeue machinery engaged).
+    for seed in [0u64, 42] {
+        let cfg = common::golden8(seed);
+        let mut with_crash = cfg.clone();
+        with_crash.crash =
+            CrashConfig { rate_per_sec: 0.0, recover_secs: 1.5, max_crashes: 32 };
+        assert!(with_crash.crash.is_off());
+        let base = SimCluster::streaming(cfg, &ArrivalProcess::burst())
+            .expect("valid streaming config")
+            .run();
+        let guarded = SimCluster::streaming(with_crash, &ArrivalProcess::burst())
+            .expect("valid streaming config")
+            .run();
+        assert_eq!(guarded.total_tokens, base.total_tokens, "seed {seed}");
+        assert_eq!(
+            guarded.makespan.to_bits(),
+            base.makespan.to_bits(),
+            "seed {seed}"
+        );
+        assert_eq!(guarded.migrations, base.migrations, "seed {seed}");
+        assert_eq!(guarded.crashes, 0, "seed {seed}");
+        assert_eq!(guarded.samples_requeued, 0, "seed {seed}");
+        assert_eq!(guarded.requeue_delay_mean, 0.0, "seed {seed}");
     }
 }
 
@@ -158,18 +170,7 @@ fn streaming_conservation_on_hetero_fleet_with_finite_rate() {
     // under a finite-rate Poisson stream: conservation and the per-tier
     // migration ledger must both hold while arrivals and the long tail
     // overlap.
-    let mut cfg = ClusterConfig {
-        fleet: vec![
-            FleetTier::preset("h100", 4).unwrap(),
-            FleetTier::preset("a100", 4).unwrap(),
-            FleetTier::preset("l40s", 8).unwrap(),
-        ],
-        n_samples: 256,
-        max_tokens: 512,
-        cooldown: 16,
-        seed: 23,
-        ..Default::default()
-    };
+    let mut cfg = common::hetero_fleet(23, 256, 512);
     cfg.params.selector.refit_on_occupancy_change = true;
     let mut c = SimCluster::streaming(cfg, &ArrivalProcess::poisson(32.0))
         .expect("valid streaming config");
