@@ -101,10 +101,27 @@ fn main() {
 
     // ---- event-heap cluster at fleet scale ---------------------------
     // Full mode: 512 instances / 8192 samples (the acceptance budget is
-    // < 30 s wall); smoke mode: 32 / 512.
+    // < 30 s wall); smoke mode: 32 / 512. The threadsN rows rerun the
+    // identical fleet on the parallel beat engine; the budget gate
+    // (`check_bench_budget.py --min-parallel-speedup`) holds threads8 to
+    // a committed speedup floor over the sequential row whenever the
+    // bench host has the cores for it — which is what the meta/host-cpus
+    // row records.
+    let host_cpus = std::thread::available_parallelism().map_or(1, |n| n.get());
+    results.push(BenchResult {
+        name: "meta/host-cpus".into(),
+        iters: 1,
+        mean_ns: host_cpus as f64,
+        p50_ns: host_cpus as f64,
+        p99_ns: host_cpus as f64,
+        min_ns: host_cpus as f64,
+    });
     let (per_tier, n_samples) = if smoke { (8, 512) } else { (128, 8192) };
-    let r = bench("core/cluster/hetero-event-heap", 0, 1, || {
-        let mut cluster = SimCluster::new(hetero_cfg(per_tier, n_samples));
+    let cluster_iters = if smoke { 1 } else { 3 };
+    let run_fleet = |threads: usize| {
+        let mut cfg = hetero_cfg(per_tier, n_samples);
+        cfg.threads = threads;
+        let mut cluster = SimCluster::new(cfg);
         let res = cluster.run();
         assert_eq!(
             cluster.instances.iter().map(|x| x.finished.len()).sum::<usize>(),
@@ -112,8 +129,31 @@ fn main() {
             "fleet must drain completely"
         );
         black_box(res.total_tokens);
+        res
+    };
+    let mut seq_sig = (0u64, 0u64);
+    let r = bench("core/cluster/hetero-event-heap", 0, cluster_iters, || {
+        let res = run_fleet(1);
+        seq_sig = (res.total_tokens, res.makespan.to_bits());
     });
     results.push(r);
+    for threads in [2usize, 4, 8] {
+        let r = bench(
+            &format!("core/cluster/hetero-event-heap/threads{threads}"),
+            0,
+            cluster_iters,
+            || {
+                let res = run_fleet(threads);
+                // Determinism contract, cross-checked on every bench run.
+                assert_eq!(
+                    (res.total_tokens, res.makespan.to_bits()),
+                    seq_sig,
+                    "threads={threads} diverged from the sequential engine"
+                );
+            },
+        );
+        results.push(r);
+    }
 
     // Virtual-vs-wall ratio for the same fleet, reported for context.
     let t0 = Instant::now();

@@ -143,6 +143,37 @@ impl Default for RlhfConfig {
     }
 }
 
+/// Discrete-event engine knobs (`[engine]` section).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Worker threads for the cluster simulator's event loop. `1` (the
+    /// default) runs the sequential loop unchanged; `> 1` enables the
+    /// conservative-time-window parallel engine, which is bit-identical
+    /// to the sequential loop at any thread count (see
+    /// `docs/ARCHITECTURE.md` § Parallel engine). When unset in the
+    /// config file, the `PALLAS_ENGINE_THREADS` environment variable
+    /// provides the default — that is how the CI thread-matrix leg runs
+    /// every existing suite under the parallel engine without touching
+    /// each test.
+    pub threads: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { threads: default_engine_threads() }
+    }
+}
+
+/// Engine thread count from `PALLAS_ENGINE_THREADS`, clamped to ≥ 1;
+/// `1` (the sequential loop) when unset or unparseable.
+pub fn default_engine_threads() -> usize {
+    std::env::var("PALLAS_ENGINE_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or(1)
+}
+
 /// Top-level run config.
 #[derive(Clone, Debug, Default)]
 pub struct RunConfig {
@@ -162,6 +193,8 @@ pub struct RunConfig {
     /// so `GenerationService::start` *rejects* a non-zero section
     /// instead of silently ignoring it.
     pub crash: CrashConfig,
+    /// `[engine]` — event-engine execution knobs (worker threads).
+    pub engine: EngineConfig,
     pub seed: u64,
 }
 
@@ -231,6 +264,7 @@ impl RunConfig {
             "rlhf.ent_coef" => self.rlhf.ent_coef = f(val)?,
             "rlhf.gamma" => self.rlhf.gamma = f(val)?,
             "rlhf.gae_lambda" => self.rlhf.gae_lambda = f(val)?,
+            "engine.threads" => self.engine.threads = u(val)?.max(1),
             _ => {
                 // `[transport]` / `[crash]` keys are parsed by their own
                 // config types — one config surface for both planes
@@ -364,6 +398,24 @@ mod tests {
         let mut bad = RunConfig::default();
         assert!(bad.set("crash.nope", "1").is_err());
         assert!(bad.set("crash.rate_per_sec", "abc").is_err());
+    }
+
+    #[test]
+    fn engine_section_parses_and_clamps() {
+        let src = r#"
+            [engine]
+            threads = 4
+        "#;
+        let mut kv = BTreeMap::new();
+        parse_toml_subset(src, &mut kv).unwrap();
+        let cfg = RunConfig::load(None, &kv).unwrap();
+        assert_eq!(cfg.engine.threads, 4);
+        // 0 would mean "no workers" — clamp to the sequential loop.
+        let mut c = RunConfig::default();
+        c.set("engine.threads", "0").unwrap();
+        assert_eq!(c.engine.threads, 1);
+        assert!(c.set("engine.threads", "abc").is_err());
+        assert!(c.set("engine.nope", "1").is_err());
     }
 
     #[test]

@@ -161,13 +161,18 @@ pub struct LatencySummary {
 
 impl LatencySummary {
     /// Summarize a batch of per-sample latencies (zeroed when empty).
+    ///
+    /// Non-finite components (a NaN/inf smuggled in by a degenerate
+    /// sample) are squashed to 0 before ranking so one bad record cannot
+    /// poison every percentile above its rank.
     pub fn from_samples(lat: &[SampleLatency]) -> Self {
         if lat.is_empty() {
             return LatencySummary::default();
         }
-        let queue: Vec<f64> = lat.iter().map(|l| l.queue_secs).collect();
-        let ttft: Vec<f64> = lat.iter().map(|l| l.ttft_secs).collect();
-        let tpot: Vec<f64> = lat.iter().map(|l| l.tpot_secs).collect();
+        let clean = |v: f64| if v.is_finite() { v } else { 0.0 };
+        let queue: Vec<f64> = lat.iter().map(|l| clean(l.queue_secs)).collect();
+        let ttft: Vec<f64> = lat.iter().map(|l| clean(l.ttft_secs)).collect();
+        let tpot: Vec<f64> = lat.iter().map(|l| clean(l.tpot_secs)).collect();
         LatencySummary {
             n: lat.len(),
             queue_p50: stats::percentile(&queue, 50.0),
@@ -274,6 +279,30 @@ mod tests {
         assert!((s.queue_p50 - 49.5).abs() < 1e-9);
         // TTFT includes the queueing delay by construction here.
         assert!(s.ttft_p50 > s.queue_p50);
+    }
+
+    #[test]
+    fn latency_summary_squashes_non_finite_components() {
+        // A degenerate record (e.g. a NaN TPOT from an upstream bug) must
+        // not poison the percentiles of the healthy samples around it.
+        let lat = vec![
+            SampleLatency { queue_secs: 0.1, ttft_secs: 0.2, tpot_secs: 0.01 },
+            SampleLatency {
+                queue_secs: f64::NAN,
+                ttft_secs: f64::INFINITY,
+                tpot_secs: f64::NAN,
+            },
+            SampleLatency { queue_secs: 0.3, ttft_secs: 0.4, tpot_secs: 0.02 },
+        ];
+        let s = LatencySummary::from_samples(&lat);
+        assert_eq!(s.n, 3);
+        for v in [
+            s.queue_p50, s.queue_p95, s.queue_p99, s.ttft_p50, s.ttft_p95,
+            s.ttft_p99, s.tpot_p50, s.tpot_p95, s.tpot_p99,
+        ] {
+            assert!(v.is_finite(), "{v}");
+        }
+        assert!(s.queue_p99 <= 0.3 && s.ttft_p99 <= 0.4 && s.tpot_p99 <= 0.02);
     }
 
     #[test]

@@ -209,6 +209,15 @@ impl Reallocator {
         step >= self.last_decision + self.cooldown
     }
 
+    /// First step at which [`Reallocator::due`] will report `true`
+    /// again. The parallel engine uses this to size event beats: any run
+    /// of steps that stays strictly below this boundary provably never
+    /// triggers a cooldown-gated decision, so the per-step `due` checks
+    /// inside the beat are no-ops.
+    pub fn next_due_step(&self) -> u64 {
+        self.last_decision + self.cooldown
+    }
+
     /// Is there detectable inefficiency: some instance below its tier
     /// threshold while another sits above its own? Always `false` while
     /// an admission backlog is pending (see [`Reallocator::note_backlog`]).

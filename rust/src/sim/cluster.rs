@@ -88,11 +88,19 @@ use crate::coordinator::transport::{MsgClass, PerfectTransport, Transport, Trans
 use crate::data::arrivals::ArrivalProcess;
 use crate::data::lengths::LengthModel;
 use crate::sim::acceptance::AcceptanceModel;
+use crate::sim::arena::Slab;
 use crate::sim::cost_model::CostModel;
 use crate::sim::crash::{CrashConfig, CrashSchedule};
 use crate::sim::engine::{SimBackend, SimInstance, SimMode, SimParams, SimSample};
 use crate::sim::link::FaultyLink;
+use crate::sim::pool::{SendPtr, WorkerPool};
+use crate::sim::timers::{key_time, time_key, TimerRail};
 use crate::utils::rng::Rng;
+
+// The parallel engine moves `&mut SimInstance` accesses across worker
+// threads; keep that requirement checked at compile time.
+trait AssertInstanceSend: Send {}
+impl AssertInstanceSend for SimInstance {}
 
 /// Salt for the arrival-time RNG stream: keeps Poisson draws independent
 /// of the workload-generation stream, so a streaming run draws the same
@@ -198,6 +206,14 @@ pub struct ClusterConfig {
     /// injects seeded `Crash`/`Recover` events (see the module docs and
     /// [`CrashSchedule`]).
     pub crash: CrashConfig,
+    /// Worker threads for the event loop (`[engine] threads`). `1` runs
+    /// the sequential loop; `> 1` the conservative-time-window parallel
+    /// engine, bit-identical to `threads = 1` at any count (see
+    /// `docs/ARCHITECTURE.md` § Parallel engine). Defaults from the
+    /// `PALLAS_ENGINE_THREADS` environment variable (1 when unset) so
+    /// existing suites can be driven onto the parallel engine by CI
+    /// without per-test plumbing.
+    pub threads: usize,
 }
 
 impl Default for ClusterConfig {
@@ -221,6 +237,7 @@ impl Default for ClusterConfig {
             transport: TransportConfig::default(),
             multi_dest: false,
             crash: CrashConfig::default(),
+            threads: crate::config::default_engine_threads(),
         }
     }
 }
@@ -425,29 +442,57 @@ impl EventKind {
     }
 }
 
+/// A popped event, reconstructed with its full payload.
 struct Event {
+    time: f64,
+    kind: EventKind,
+}
+
+/// Heap-resident compact record: large payloads are parked in the
+/// queue's slab ([`Slab`]) so `BinaryHeap` sift operations move 32-byte
+/// records instead of whole migration messages.
+struct HeapEvent {
     time: f64,
     rank: u8,
     /// Monotone push counter: deterministic FIFO among exact ties.
     seq: u64,
-    kind: EventKind,
+    kind: CompactKind,
 }
 
-impl PartialEq for Event {
+/// Payload-free event representation for the heap.
+#[derive(Clone, Copy)]
+enum CompactKind {
+    /// Payload-carrying kinds (task arrivals, control messages, Stage-1
+    /// bulk, Stage-2 packets): the full [`EventKind`] lives in the slab.
+    Payload(u32),
+    Crash(usize),
+    StepReady(usize),
+}
+
+/// Rail-resident timer payload ([`TimerRail`]): the far-future,
+/// often-stale event kinds (ranks 6–8).
+#[derive(Clone, Copy)]
+enum TimerKind {
+    Tick,
+    Recover(usize),
+    Retransmit(u64),
+}
+
+impl PartialEq for HeapEvent {
     fn eq(&self, other: &Self) -> bool {
         self.cmp(other) == std::cmp::Ordering::Equal
     }
 }
 
-impl Eq for Event {}
+impl Eq for HeapEvent {}
 
-impl PartialOrd for Event {
+impl PartialOrd for HeapEvent {
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
         Some(self.cmp(other))
     }
 }
 
-impl Ord for Event {
+impl Ord for HeapEvent {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         // `BinaryHeap` is a max-heap: invert so the earliest (time, rank,
         // seq) pops first. `total_cmp` keeps the order total even if a
@@ -460,29 +505,103 @@ impl Ord for Event {
     }
 }
 
-/// Time-ordered event heap with a deterministic total order.
+/// Time-ordered event queue with a deterministic total order.
+///
+/// Internally three structures share one `(time, rank, seq)` order and
+/// one seq counter: the binary heap (decode/arrival/crash traffic, as
+/// compact records), a payload [`Slab`] (bulky event bodies, referenced
+/// by slot id from the heap) and a two-level [`TimerRail`] (retransmit/
+/// recover/tick timers, which are pushed far ahead and would otherwise
+/// sit in every heap sift's way). `pop` merges heap and rail under the
+/// exact total order, so the pop sequence is bit-identical to the
+/// original single-heap queue — pinned by this module's queue tests and
+/// every golden suite.
 struct EventQueue {
-    heap: BinaryHeap<Event>,
+    heap: BinaryHeap<HeapEvent>,
+    payloads: Slab<EventKind>,
+    rail: TimerRail<TimerKind>,
     seq: u64,
 }
 
 impl EventQueue {
     fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+        EventQueue {
+            heap: BinaryHeap::new(),
+            payloads: Slab::new(),
+            rail: TimerRail::new(),
+            seq: 0,
+        }
     }
 
     fn push(&mut self, time: f64, kind: EventKind) {
         let rank = kind.rank();
-        self.heap.push(Event { time, rank, seq: self.seq, kind });
+        let seq = self.seq;
         self.seq += 1;
+        let compact = match kind {
+            EventKind::StepReady(i) => CompactKind::StepReady(i),
+            EventKind::Crash(i) => CompactKind::Crash(i),
+            EventKind::ReallocTick => {
+                self.rail.push((time_key(time), rank, seq), TimerKind::Tick);
+                return;
+            }
+            EventKind::Recover(i) => {
+                self.rail.push((time_key(time), rank, seq), TimerKind::Recover(i));
+                return;
+            }
+            EventKind::Retransmit { order } => {
+                self.rail
+                    .push((time_key(time), rank, seq), TimerKind::Retransmit(order));
+                return;
+            }
+            other => CompactKind::Payload(self.payloads.insert(other)),
+        };
+        self.heap.push(HeapEvent { time, rank, seq, kind: compact });
     }
 
     fn pop(&mut self) -> Option<Event> {
-        self.heap.pop()
+        let take_rail = match (self.heap.peek(), self.rail.peek()) {
+            (None, None) => return None,
+            (None, Some(_)) => true,
+            (Some(_), None) => false,
+            // Seqs are unique, so the keys never tie.
+            (Some(h), Some(r)) => r < (time_key(h.time), h.rank, h.seq),
+        };
+        if take_rail {
+            let ((tk, _, _), timer) = self.rail.pop().expect("peeked rail entry");
+            let kind = match timer {
+                TimerKind::Tick => EventKind::ReallocTick,
+                TimerKind::Recover(i) => EventKind::Recover(i),
+                TimerKind::Retransmit(order) => EventKind::Retransmit { order },
+            };
+            return Some(Event { time: key_time(tk), kind });
+        }
+        let h = self.heap.pop().expect("peeked heap entry");
+        let kind = match h.kind {
+            CompactKind::StepReady(i) => EventKind::StepReady(i),
+            CompactKind::Crash(i) => EventKind::Crash(i),
+            CompactKind::Payload(id) => self.payloads.take(id),
+        };
+        Some(Event { time: h.time, kind })
+    }
+
+    /// If the globally next event is a `StepReady`, its `(time,
+    /// instance)` — the parallel engine's beat selection peeks before it
+    /// pops, and only step events are ever batched.
+    fn peek_step(&mut self) -> Option<(f64, usize)> {
+        let h = self.heap.peek()?;
+        let CompactKind::StepReady(i) = h.kind else {
+            return None;
+        };
+        if let Some(r) = self.rail.peek() {
+            if r < (time_key(h.time), h.rank, h.seq) {
+                return None;
+            }
+        }
+        Some((h.time, i))
     }
 
     fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.heap.is_empty() && self.rail.is_empty()
     }
 }
 
@@ -619,24 +738,46 @@ impl SimCluster {
 
         let accept = AcceptanceModel::by_name(&cfg.dataset);
         cfg.params.mode = cfg.mode; // ClusterConfig.mode is authoritative
-        let mut instances: Vec<SimInstance> = (0..cfg.instances)
-            .map(|i| {
-                let tier = &tiers[tier_of[i]];
-                let mut params = cfg.params.clone();
-                if let Some(mb) = tier.max_batch {
-                    params.max_batch = mb;
-                }
-                let mut inst = SimInstance::new(
-                    i,
-                    params,
-                    tier.cost.clone(),
-                    accept,
-                    cfg.seed ^ ((i as u64 + 1) * 0x9E37),
-                );
-                inst.profile_offline();
-                inst
+        // Per-instance construction is self-contained (salted private
+        // RNG stream, offline profiling against the instance's own cost
+        // model), so large fleets build across `threads` scoped workers
+        // with bit-identical results in any chunking.
+        let build = |i: usize| {
+            let tier = &tiers[tier_of[i]];
+            let mut params = cfg.params.clone();
+            if let Some(mb) = tier.max_batch {
+                params.max_batch = mb;
+            }
+            let mut inst = SimInstance::new(
+                i,
+                params,
+                tier.cost.clone(),
+                accept,
+                cfg.seed ^ ((i as u64 + 1) * 0x9E37),
+            );
+            inst.profile_offline();
+            inst
+        };
+        let builders = cfg.threads.max(1).min(cfg.instances.max(1));
+        let mut instances: Vec<SimInstance> = if builders > 1 {
+            let chunk = cfg.instances.div_ceil(builders);
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..builders)
+                    .map(|w| {
+                        let build = &build;
+                        let lo = w * chunk;
+                        let hi = (lo + chunk).min(cfg.instances);
+                        s.spawn(move || (lo..hi).map(build).collect::<Vec<_>>())
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("instance builder"))
+                    .collect()
             })
-            .collect();
+        } else {
+            (0..cfg.instances).map(build).collect()
+        };
 
         // Workload: long-tail target lengths, sequentially allocated (§4).
         let lens = match cfg.dataset.as_str() {
@@ -841,185 +982,11 @@ impl SimCluster {
             q.push(p, EventKind::ReallocTick);
         }
 
-        while let Some(ev) = q.pop() {
-            // Admission headroom (sample_count < 4×capacity) only grows
-            // when a step retires samples, a reallocation order moves
-            // them off a source — synchronously inside a step/tick on
-            // the perfect transport, at the AllocAck control message on
-            // a faulty one — or a crashed instance rejoins the fleet.
-            // Arrivals and Stage-2 deliveries only add. Gate the backlog
-            // re-drain accordingly so a saturated burst doesn't pay an
-            // O(fleet) scan per heap event.
-            let may_free_headroom = matches!(
-                ev.kind,
-                EventKind::StepReady(_)
-                    | EventKind::ReallocTick
-                    | EventKind::Ctrl(_)
-                    | EventKind::Recover(_)
-            );
-            match ev.kind {
-                EventKind::TaskArrival(mut s) => {
-                    self.arrivals += 1;
-                    s.arrival_time = ev.time;
-                    self.try_admit(s, ev.time, &mut q, &mut scheduled);
-                }
-                EventKind::StepReady(i) => {
-                    scheduled[i] = false;
-                    if !self.alive[i] || self.instances[i].is_idle() {
-                        continue; // stale: crashed, or drained by an order
-                    }
-                    let finished_before = self.instances[i].finished.len();
-                    self.instances[i].step().expect("sim step");
-                    self.completed +=
-                        (self.instances[i].finished.len() - finished_before) as u64;
-                    self.steps += 1;
-                    if self.cfg.realloc_enabled
-                        && tick_period.is_none()
-                        && self.realloc.due(self.steps)
-                    {
-                        self.realloc_round(&mut q);
-                    }
-                    if !self.instances[i].is_idle() {
-                        q.push(self.instances[i].backend.next_ready(), EventKind::StepReady(i));
-                        scheduled[i] = true;
-                    }
-                }
-                EventKind::Ctrl(msg) => {
-                    self.handle_ctrl(msg, ev.time, &mut q, &mut scheduled);
-                }
-                EventKind::Stage1Arrival(msg) => {
-                    // Idempotent: retransmitted/duplicated bulk for an
-                    // order already stored (or applied) is ignored. A
-                    // bulk for a crash-reconciled order — or a dead
-                    // destination — is dropped on the floor.
-                    let (from, to, order) = (msg.from, msg.to, msg.order);
-                    if self.cancelled.contains(&order) || !self.alive[to] {
-                        continue;
-                    }
-                    self.instances[to].handle_stage1(msg).expect("sim stage1 delivery");
-                    if self.cfg.transport.stage1_ack {
-                        self.send_stage1_ack(order, to, from, ev.time, &mut q);
-                    }
-                }
-                EventKind::Arrival(msg) => {
-                    let (src, dest, order) = (msg.from, msg.to, msg.order);
-                    if self.cancelled.contains(&order) {
-                        // The order was reconciled after a crash: its
-                        // live victims were requeued or returned from
-                        // the source's limbo already, so a late copy
-                        // must not apply. Its queue-only tasks, though,
-                        // exist *only* in the packet on the perfect path
-                        // — the first dropped copy rescues them. Clear
-                        // any stale Stage-1 bulk at a live destination.
-                        if self.alive[dest] {
-                            self.instances[dest].cancel_inbound_order(order);
-                        }
-                        if self.salvaged_orders.insert(order) {
-                            self.requeue(msg.waiting_tasks, ev.time, &mut q, &mut scheduled);
-                        }
-                        continue;
-                    }
-                    if !self.alive[dest] {
-                        self.bounce_stage2(msg, ev.time, &mut q, &mut scheduled);
-                        continue;
-                    }
-                    // Under the crash plane, a perfect-path destination
-                    // can have crashed (losing the stored Stage-1 bulk)
-                    // and recovered while the packet was in flight.
-                    // There is no retransmit buffer on this path —
-                    // bounce the order back to its source (applying
-                    // would report AwaitingStage1 and confirming would
-                    // leak the limbo copy). Predicted without consuming
-                    // the packet; impossible while the crash plane is
-                    // off (Stage 1 is stored synchronously).
-                    if !self.faulty
-                        && self.crash.is_some()
-                        && msg.kv_delta.is_some()
-                        && !self.instances[dest].order_applied(order)
-                        && !self.instances[dest].stage1_stored(order)
-                    {
-                        self.bounce_stage2(msg, ev.time, &mut q, &mut scheduled);
-                        continue;
-                    }
-                    let inst = &mut self.instances[dest];
-                    if inst.is_idle() && inst.backend.clock < ev.time {
-                        inst.backend.clock = ev.time; // idle destination waits for the KV
-                    }
-                    let disp = inst.handle_stage2(msg).expect("sim stage2 delivery");
-                    if self.faulty {
-                        // Applied *and* duplicate deliveries re-ack — the
-                        // previous ack may have been the lost copy. A
-                        // delta without its Stage-1 bulk stays unacked:
-                        // the source's timer resends both stages.
-                        if disp != Stage2Disposition::AwaitingStage1 {
-                            self.send_stage2_ack(order, dest, src, ev.time, &mut q);
-                        }
-                    } else {
-                        // The perfect link delivers exactly once: confirm
-                        // synchronously, releasing the source's limbo.
-                        debug_assert!(
-                            disp != Stage2Disposition::AwaitingStage1,
-                            "perfect-path AwaitingStage1 must be bounced above"
-                        );
-                        self.instances[src].confirm_order(order);
-                    }
-                    if disp == Stage2Disposition::Applied
-                        && !scheduled[dest]
-                        && !self.instances[dest].is_idle()
-                    {
-                        let at = self.instances[dest].backend.next_ready();
-                        q.push(at, EventKind::StepReady(dest));
-                        scheduled[dest] = true;
-                    }
-                }
-                EventKind::Crash(i) => {
-                    if self.alive[i] {
-                        self.crash_instance(i, ev.time, &mut q, &mut scheduled);
-                    }
-                }
-                EventKind::Recover(i) => {
-                    if !self.alive[i] {
-                        self.recover_instance(i, ev.time, &mut q);
-                    }
-                }
-                EventKind::ReallocTick => {
-                    self.realloc_round(&mut q);
-                    // Re-arm only while the fleet still has live events:
-                    // an empty heap means every instance is idle and no
-                    // packet is in flight, i.e. the run is over.
-                    match tick_period {
-                        Some(p) if !q.is_empty() => {
-                            q.push(ev.time + p, EventKind::ReallocTick)
-                        }
-                        _ => {}
-                    }
-                }
-                EventKind::Retransmit { order } => {
-                    self.handle_retransmit(order, ev.time, &mut q, &mut scheduled);
-                }
-            }
-            // Streaming backlog: re-attempt admission once headroom can
-            // have appeared. No-op for batch-synchronous runs.
-            if may_free_headroom && !self.pending.is_empty() {
-                self.drain_pending(ev.time, &mut q, &mut scheduled);
-            }
-            // Crash-active runs can hold far-future Crash/Recover events:
-            // once every offered sample is accounted for and no order is
-            // in flight, the run is over — break instead of draining the
-            // remaining fault schedule. (Crash-free runs never take this
-            // path, preserving the pre-crash scheduler bit-for-bit.)
-            if self.crash.is_some()
-                && self.arrivals >= offered
-                && self.pending.is_empty()
-                && self.orders.is_empty()
-                && self.all_samples_accounted()
-            {
-                debug_assert!(
-                    self.instances.iter().all(|x| x.is_idle() && x.limbo_count() == 0),
-                    "sample accounting closed with residents still in the fleet"
-                );
-                break;
-            }
+        let threads = self.cfg.threads.max(1);
+        if threads > 1 {
+            self.event_loop_parallel(&mut q, &mut scheduled, offered, tick_period, threads);
+        } else {
+            self.event_loop(&mut q, &mut scheduled, offered, tick_period);
         }
         // A backlog can only survive the heap draining on a fleet that
         // can never admit (zero instances / zero capacity): shed it as
@@ -1028,6 +995,438 @@ impl SimCluster {
             self.refuse_admission();
         }
         self.summarize()
+    }
+
+    /// The sequential event loop (`threads = 1`): pop, process, re-drain
+    /// the admission backlog, check crash-plane completion — identical
+    /// semantics to the original single-threaded engine (golden-guarded).
+    fn event_loop(
+        &mut self,
+        q: &mut EventQueue,
+        scheduled: &mut [bool],
+        offered: u64,
+        tick_period: Option<f64>,
+    ) {
+        while let Some(ev) = q.pop() {
+            let now = ev.time;
+            let Some(may_free_headroom) = self.process_event(ev, q, scheduled, tick_period)
+            else {
+                continue;
+            };
+            // Streaming backlog: re-attempt admission once headroom can
+            // have appeared. No-op for batch-synchronous runs.
+            if may_free_headroom && !self.pending.is_empty() {
+                self.drain_pending(now, q, scheduled);
+            }
+            if self.run_is_complete(offered) {
+                break;
+            }
+        }
+    }
+
+    /// The parallel event loop (`threads > 1`): batch provably
+    /// independent `StepReady` events into *beats* under a conservative
+    /// time window, execute each beat across the worker pool, and fall
+    /// back to the sequential path for every other event. Bit-identical
+    /// to [`Self::event_loop`] at any thread count — the selection rules
+    /// and the full argument live in `docs/ARCHITECTURE.md` § Parallel
+    /// engine.
+    fn event_loop_parallel(
+        &mut self,
+        q: &mut EventQueue,
+        scheduled: &mut [bool],
+        offered: u64,
+        tick_period: Option<f64>,
+        threads: usize,
+    ) {
+        let pool = WorkerPool::new(threads);
+        let mut beat: Vec<(f64, usize)> = Vec::new();
+        let mut deltas: Vec<u64> = Vec::new();
+        loop {
+            self.select_beat(q, scheduled, tick_period, &mut beat);
+            if beat.is_empty() {
+                // The next event is not a batchable step: sequential path.
+                let Some(ev) = q.pop() else { break };
+                let now = ev.time;
+                let Some(may_free_headroom) =
+                    self.process_event(ev, q, scheduled, tick_period)
+                else {
+                    continue;
+                };
+                if may_free_headroom && !self.pending.is_empty() {
+                    self.drain_pending(now, q, scheduled);
+                }
+            } else {
+                self.execute_beat(&beat, &pool, &mut deltas);
+                // Commit in selection order: the push sequence (each
+                // successor step, then any boundary reallocation's
+                // packets) replays the sequential loop's seq assignment
+                // stream exactly.
+                for (k, &(_, i)) in beat.iter().enumerate() {
+                    self.commit_step(i, deltas[k], q, scheduled, tick_period);
+                }
+                // The admission backlog is empty across a beat
+                // (selection precondition; steps add nothing to it), so
+                // there is no drain to run here, and the completion
+                // check cannot become true before the last commit.
+            }
+            if self.run_is_complete(offered) {
+                break;
+            }
+        }
+    }
+
+    /// Select the next *beat*: a maximal batch of `StepReady` events, in
+    /// exact pop order, that provably executes independently:
+    ///
+    /// * only contiguous step events qualify — any earlier-ordered
+    ///   arrival, delivery, crash or timer event ends the beat (those
+    ///   interact across instances and keep sequential semantics);
+    /// * each accepted event's time must not exceed the *conservative
+    ///   horizon* `min(tᵢ + dt_min(i))` over the steps already selected,
+    ///   where `dt_min` is [`CostModel::min_round_secs`] — so no selected
+    ///   step could schedule anything (its own successor is the earliest
+    ///   effect it can have) at or before a later selected step;
+    /// * the beat is bounded so that every cooldown-gated reallocation
+    ///   check inside it is provably the exact no-op the sequential loop
+    ///   would have executed (see the regime analysis below).
+    ///
+    /// Stale step events (crashed or drained instances) are popped and
+    /// dropped during selection, exactly as the sequential loop does.
+    fn select_beat(
+        &mut self,
+        q: &mut EventQueue,
+        scheduled: &mut [bool],
+        tick_period: Option<f64>,
+        beat: &mut Vec<(f64, usize)>,
+    ) {
+        beat.clear();
+        if !self.pending.is_empty() {
+            return; // streaming backlog pending: stay on the sequential path
+        }
+        // Reallocation-regime analysis (step cadence only; timed ticks
+        // arrive as rail events and end beats naturally).
+        let step_cadence = self.cfg.realloc_enabled && tick_period.is_none();
+        let mut budget = u64::MAX;
+        let mut hazard = false;
+        if step_cadence {
+            let due_at = self.realloc.next_due_step();
+            if self.steps + 1 < due_at {
+                // No decision can fire before step `due_at`: cap the
+                // beat exactly on the boundary. A full beat's final
+                // commit then runs the due check with complete post-beat
+                // state, precisely as the sequential loop would.
+                budget = due_at - self.steps;
+            } else {
+                // The cooldown is over: a decision could fire at every
+                // commit. Evaluate the policy predicate on pre-beat
+                // state (this mirrors `realloc_plan`'s own gating).
+                self.realloc.note_backlog(self.pending.len());
+                let counts = self.policy_counts();
+                if self.realloc.inefficiency(&counts) {
+                    return; // the very next step decides: sequential path
+                }
+                if counts
+                    .iter()
+                    .enumerate()
+                    .any(|(i, &c)| c > self.realloc.threshold_of(i))
+                {
+                    // A source exists but no destination. Steps only
+                    // retire samples, so the only way a mid-beat check
+                    // stops being a no-op is an instance dropping below
+                    // its threshold — exclude any step that could
+                    // ([`Self::could_flip`]) and batch the rest.
+                    hazard = true;
+                }
+                // Else: no source, and retiring samples cannot create
+                // one — every mid-beat check is a no-op at any length.
+            }
+        }
+        let mut horizon = f64::INFINITY;
+        while (beat.len() as u64) < budget {
+            let Some((t, i)) = q.peek_step() else { return };
+            if !t.is_finite() || t > horizon {
+                return;
+            }
+            let live = self.alive[i] && !self.instances[i].is_idle();
+            if live && hazard && self.could_flip(i) {
+                return; // may mint a destination: leave it to the sequential path
+            }
+            q.pop();
+            scheduled[i] = false;
+            if !live {
+                continue; // stale: dropped exactly as the sequential loop does
+            }
+            horizon = horizon.min(t + self.instances[i].backend.cost.min_round_secs());
+            beat.push((t, i));
+        }
+    }
+
+    /// Could one step of instance `i` drop its resident-sample count
+    /// below its reallocation threshold? Conservative over-approximation:
+    /// counts every resident sample close enough to its target to finish
+    /// this round (a speculative round commits at most `depth + 1`
+    /// tokens per sample; an AR step 1 ≤ that bound).
+    fn could_flip(&self, i: usize) -> bool {
+        let inst = &self.instances[i];
+        let threshold = self.realloc.threshold_of(i);
+        let count = inst.sample_count();
+        if count < threshold {
+            return true; // already a destination (unreachable in hazard mode)
+        }
+        let gain = self.cfg.params.depth + 1;
+        let finishable = inst
+            .live
+            .iter()
+            .chain(inst.parked.iter())
+            .chain(inst.waiting.iter())
+            .filter(|s| s.target_len.saturating_sub(s.generated) <= gain)
+            .count();
+        count - finishable < threshold
+    }
+
+    /// Execute every step in the beat, collecting per-step finished
+    /// deltas. A step touches only its own instance (pairwise distinct
+    /// by construction — `scheduled` guarantees at most one in-heap
+    /// `StepReady` per instance), so the steps commute; the commit loop
+    /// then applies all shared-state effects in selection order.
+    fn execute_beat(
+        &mut self,
+        beat: &[(f64, usize)],
+        pool: &WorkerPool,
+        deltas: &mut Vec<u64>,
+    ) {
+        deltas.clear();
+        deltas.resize(beat.len(), 0);
+        debug_assert!(
+            {
+                let mut seen = BTreeSet::new();
+                beat.iter().all(|&(_, i)| seen.insert(i))
+            },
+            "beat instances must be pairwise distinct"
+        );
+        let instances = SendPtr(self.instances.as_mut_ptr());
+        let out = SendPtr(deltas.as_mut_ptr());
+        pool.dispatch(beat.len(), &|k| {
+            // SAFETY: beat entries name pairwise-distinct instances
+            // (asserted above) and the pool visits every `k` exactly
+            // once, so each `SimInstance` and each output slot is
+            // touched by exactly one thread; the dispatch barrier
+            // sequences these writes before the commit loop's reads.
+            unsafe {
+                let inst = &mut *instances.0.add(beat[k].1);
+                let before = inst.finished.len();
+                inst.step().expect("sim step");
+                *out.0.add(k) = (inst.finished.len() - before) as u64;
+            }
+        });
+    }
+
+    /// Post-step bookkeeping shared by the sequential loop and the
+    /// parallel engine's beat commits: retire accounting, the global
+    /// step counter, the cooldown-gated reallocation check (run exactly
+    /// where the sequential loop ran it — before the successor step is
+    /// scheduled) and the `StepReady` re-arm.
+    fn commit_step(
+        &mut self,
+        i: usize,
+        finished_delta: u64,
+        q: &mut EventQueue,
+        scheduled: &mut [bool],
+        tick_period: Option<f64>,
+    ) {
+        self.completed += finished_delta;
+        self.steps += 1;
+        if self.cfg.realloc_enabled && tick_period.is_none() && self.realloc.due(self.steps) {
+            self.realloc_round(q);
+        }
+        if !self.instances[i].is_idle() {
+            q.push(self.instances[i].backend.next_ready(), EventKind::StepReady(i));
+            scheduled[i] = true;
+        }
+    }
+
+    /// Crash-plane early completion: crash-active runs can hold
+    /// far-future Crash/Recover events; once every offered sample is
+    /// accounted for and no order is in flight, the run is over — stop
+    /// instead of draining the remaining fault schedule. (Crash-free
+    /// runs never take this path, preserving the pre-crash scheduler
+    /// bit-for-bit.)
+    fn run_is_complete(&self, offered: u64) -> bool {
+        let done = self.crash.is_some()
+            && self.arrivals >= offered
+            && self.pending.is_empty()
+            && self.orders.is_empty()
+            && self.all_samples_accounted();
+        if done {
+            debug_assert!(
+                self.instances.iter().all(|x| x.is_idle() && x.limbo_count() == 0),
+                "sample accounting closed with residents still in the fleet"
+            );
+        }
+        done
+    }
+
+    /// Process one popped event — the shared core of both loops.
+    /// Returns `None` when the event was consumed early (a stale or
+    /// cancelled delivery: the original loop `continue`d, skipping the
+    /// backlog re-drain and the completion check), else
+    /// `Some(may_free_headroom)`.
+    ///
+    /// Admission headroom (sample_count < 4×capacity) only grows when a
+    /// step retires samples, a reallocation order moves them off a
+    /// source — synchronously inside a step/tick on the perfect
+    /// transport, at the AllocAck control message on a faulty one — or a
+    /// crashed instance rejoins the fleet. Arrivals and Stage-2
+    /// deliveries only add. `may_free_headroom` gates the backlog
+    /// re-drain accordingly so a saturated burst doesn't pay an O(fleet)
+    /// scan per heap event.
+    fn process_event(
+        &mut self,
+        ev: Event,
+        q: &mut EventQueue,
+        scheduled: &mut [bool],
+        tick_period: Option<f64>,
+    ) -> Option<bool> {
+        let may_free_headroom = matches!(
+            ev.kind,
+            EventKind::StepReady(_)
+                | EventKind::ReallocTick
+                | EventKind::Ctrl(_)
+                | EventKind::Recover(_)
+        );
+        match ev.kind {
+            EventKind::TaskArrival(mut s) => {
+                self.arrivals += 1;
+                s.arrival_time = ev.time;
+                self.try_admit(s, ev.time, q, scheduled);
+            }
+            EventKind::StepReady(i) => {
+                scheduled[i] = false;
+                if !self.alive[i] || self.instances[i].is_idle() {
+                    return None; // stale: crashed, or drained by an order
+                }
+                let finished_before = self.instances[i].finished.len();
+                self.instances[i].step().expect("sim step");
+                let delta =
+                    (self.instances[i].finished.len() - finished_before) as u64;
+                self.commit_step(i, delta, q, scheduled, tick_period);
+            }
+            EventKind::Ctrl(msg) => {
+                self.handle_ctrl(msg, ev.time, q, scheduled);
+            }
+            EventKind::Stage1Arrival(msg) => {
+                // Idempotent: retransmitted/duplicated bulk for an
+                // order already stored (or applied) is ignored. A
+                // bulk for a crash-reconciled order — or a dead
+                // destination — is dropped on the floor.
+                let (from, to, order) = (msg.from, msg.to, msg.order);
+                if self.cancelled.contains(&order) || !self.alive[to] {
+                    return None;
+                }
+                self.instances[to].handle_stage1(msg).expect("sim stage1 delivery");
+                if self.cfg.transport.stage1_ack {
+                    self.send_stage1_ack(order, to, from, ev.time, q);
+                }
+            }
+            EventKind::Arrival(msg) => {
+                let (src, dest, order) = (msg.from, msg.to, msg.order);
+                if self.cancelled.contains(&order) {
+                    // The order was reconciled after a crash: its
+                    // live victims were requeued or returned from
+                    // the source's limbo already, so a late copy
+                    // must not apply. Its queue-only tasks, though,
+                    // exist *only* in the packet on the perfect path
+                    // — the first dropped copy rescues them. Clear
+                    // any stale Stage-1 bulk at a live destination.
+                    if self.alive[dest] {
+                        self.instances[dest].cancel_inbound_order(order);
+                    }
+                    if self.salvaged_orders.insert(order) {
+                        self.requeue(msg.waiting_tasks, ev.time, q, scheduled);
+                    }
+                    return None;
+                }
+                if !self.alive[dest] {
+                    self.bounce_stage2(msg, ev.time, q, scheduled);
+                    return None;
+                }
+                // Under the crash plane, a perfect-path destination
+                // can have crashed (losing the stored Stage-1 bulk)
+                // and recovered while the packet was in flight.
+                // There is no retransmit buffer on this path —
+                // bounce the order back to its source (applying
+                // would report AwaitingStage1 and confirming would
+                // leak the limbo copy). Predicted without consuming
+                // the packet; impossible while the crash plane is
+                // off (Stage 1 is stored synchronously).
+                if !self.faulty
+                    && self.crash.is_some()
+                    && msg.kv_delta.is_some()
+                    && !self.instances[dest].order_applied(order)
+                    && !self.instances[dest].stage1_stored(order)
+                {
+                    self.bounce_stage2(msg, ev.time, q, scheduled);
+                    return None;
+                }
+                let inst = &mut self.instances[dest];
+                if inst.is_idle() && inst.backend.clock < ev.time {
+                    inst.backend.clock = ev.time; // idle destination waits for the KV
+                }
+                let disp = inst.handle_stage2(msg).expect("sim stage2 delivery");
+                if self.faulty {
+                    // Applied *and* duplicate deliveries re-ack — the
+                    // previous ack may have been the lost copy. A
+                    // delta without its Stage-1 bulk stays unacked:
+                    // the source's timer resends both stages.
+                    if disp != Stage2Disposition::AwaitingStage1 {
+                        self.send_stage2_ack(order, dest, src, ev.time, q);
+                    }
+                } else {
+                    // The perfect link delivers exactly once: confirm
+                    // synchronously, releasing the source's limbo.
+                    debug_assert!(
+                        disp != Stage2Disposition::AwaitingStage1,
+                        "perfect-path AwaitingStage1 must be bounced above"
+                    );
+                    self.instances[src].confirm_order(order);
+                }
+                if disp == Stage2Disposition::Applied
+                    && !scheduled[dest]
+                    && !self.instances[dest].is_idle()
+                {
+                    let at = self.instances[dest].backend.next_ready();
+                    q.push(at, EventKind::StepReady(dest));
+                    scheduled[dest] = true;
+                }
+            }
+            EventKind::Crash(i) => {
+                if self.alive[i] {
+                    self.crash_instance(i, ev.time, q, scheduled);
+                }
+            }
+            EventKind::Recover(i) => {
+                if !self.alive[i] {
+                    self.recover_instance(i, ev.time, q);
+                }
+            }
+            EventKind::ReallocTick => {
+                self.realloc_round(q);
+                // Re-arm only while the fleet still has live events:
+                // an empty heap means every instance is idle and no
+                // packet is in flight, i.e. the run is over.
+                match tick_period {
+                    Some(p) if !q.is_empty() => {
+                        q.push(ev.time + p, EventKind::ReallocTick)
+                    }
+                    _ => {}
+                }
+            }
+            EventKind::Retransmit { order } => {
+                self.handle_retransmit(order, ev.time, q, scheduled);
+            }
+        }
+        Some(may_free_headroom)
     }
 
     /// Admit an arriving sample: least-loaded instance with headroom
@@ -1197,6 +1596,23 @@ impl SimCluster {
         self.summarize()
     }
 
+    /// Per-instance sample counts exactly as the reallocation policy
+    /// sees them. Crashed instances are neither sources (drained, count
+    /// 0) nor destinations: they are presented at exactly their
+    /// threshold so the inefficiency check and the planner both skip
+    /// them. Shared by [`Self::realloc_plan`] and the parallel engine's
+    /// beat-regime analysis ([`Self::select_beat`]).
+    fn policy_counts(&self) -> Vec<usize> {
+        let mut counts: Vec<usize> =
+            self.instances.iter().map(|x| x.sample_count()).collect();
+        for (i, c) in counts.iter_mut().enumerate() {
+            if !self.alive[i] {
+                *c = self.realloc.threshold_of(i);
+            }
+        }
+        counts
+    }
+
     /// One reallocation decision: gather counts, bail if the fleet is
     /// balanced, feed operating points + refit the per-tier knees, and
     /// plan the migration orders — the classic single-destination
@@ -1208,15 +1624,7 @@ impl SimCluster {
         // — the policy reports no inefficiency until it drains. Batch
         // runs never hold a backlog, so this is a no-op for them.
         self.realloc.note_backlog(self.pending.len());
-        let mut counts: Vec<usize> = self.instances.iter().map(|x| x.sample_count()).collect();
-        // Crashed instances are neither sources (drained, count 0) nor
-        // destinations: present them at exactly their threshold so the
-        // inefficiency check and the planner both skip them.
-        for (i, c) in counts.iter_mut().enumerate() {
-            if !self.alive[i] {
-                *c = self.realloc.threshold_of(i);
-            }
-        }
+        let counts = self.policy_counts();
         if !self.realloc.inefficiency(&counts) {
             return Vec::new();
         }

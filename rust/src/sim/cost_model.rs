@@ -144,6 +144,47 @@ impl CostModel {
         self.ar_base + self.verify_per_seq_token * n_seq as f64 + self.draft_compute(b)
     }
 
+    /// Batched speculative-round evaluation over per-instance slices:
+    /// `out[k] = t_spec_round(depth, n_seq[k], n_draft[k])`, computed
+    /// with exactly the scalar formula (bit-identical results) but one
+    /// pass over contiguous slices so the hot profiling/planning grids
+    /// evaluate without per-call overhead. Panics if slice lengths
+    /// disagree.
+    pub fn t_spec_round_batch(
+        &self,
+        depth: usize,
+        n_seq: &[usize],
+        n_draft: &[usize],
+        out: &mut [f64],
+    ) {
+        assert_eq!(n_seq.len(), n_draft.len());
+        assert_eq!(n_seq.len(), out.len());
+        let draft = self.t_draft(depth);
+        for ((o, &s), &n) in out.iter_mut().zip(n_seq).zip(n_draft) {
+            *o = draft + self.t_verify(s, n);
+        }
+    }
+
+    /// Batched autoregressive-step evaluation over per-instance slices:
+    /// `out[k] = t_ar_step(n_seq[k], b[k])`, same scalar math in one
+    /// pass. Panics if slice lengths disagree.
+    pub fn t_ar_step_batch(&self, n_seq: &[usize], b: &[usize], out: &mut [f64]) {
+        assert_eq!(n_seq.len(), b.len());
+        assert_eq!(n_seq.len(), out.len());
+        for ((o, &s), &bb) in out.iter_mut().zip(n_seq).zip(b) {
+            *o = self.t_ar_step(s, bb);
+        }
+    }
+
+    /// Lower bound on the wall-time any non-idle instance step can take
+    /// under this model: AR steps cost at least `ar_base`, speculative
+    /// rounds at least `draft_base + verify_base`, and prefill only adds
+    /// on top. The parallel engine's conservative lookahead horizon is
+    /// derived from this — see `docs/ARCHITECTURE.md` § Parallel engine.
+    pub fn min_round_secs(&self) -> f64 {
+        self.ar_base.min(self.draft_base + self.verify_base)
+    }
+
     /// Transfer time for `bytes` over the instance interconnect.
     pub fn t_transfer(&self, bytes: usize) -> f64 {
         self.link_latency + bytes as f64 / self.link_bandwidth
@@ -278,6 +319,45 @@ mod tests {
         assert!(CostModel::by_name("tpu-v5").is_none());
         let named = CostModel::by_name("h100").unwrap();
         assert_eq!(named.verify_base, CostModel::h100_llama8b().verify_base);
+    }
+
+    #[test]
+    fn batch_paths_match_scalar_bit_for_bit() {
+        for m in [
+            CostModel::l40s_llama8b(),
+            CostModel::a100_llama8b(),
+            CostModel::h100_llama8b(),
+        ] {
+            let n_seq: Vec<usize> = (0..64).map(|k| 37 * k + 5).collect();
+            let n_draft: Vec<usize> = (0..64).map(|k| 3 * k).collect();
+            let mut spec = vec![0.0; 64];
+            m.t_spec_round_batch(5, &n_seq, &n_draft, &mut spec);
+            let mut ar = vec![0.0; 64];
+            m.t_ar_step_batch(&n_seq, &n_draft, &mut ar);
+            for k in 0..64 {
+                assert_eq!(
+                    spec[k].to_bits(),
+                    m.t_spec_round(5, n_seq[k], n_draft[k]).to_bits()
+                );
+                assert_eq!(ar[k].to_bits(), m.t_ar_step(n_seq[k], n_draft[k]).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn min_round_secs_bounds_every_step_shape() {
+        for m in [
+            CostModel::l40s_llama8b(),
+            CostModel::a100_llama8b(),
+            CostModel::h100_llama8b(),
+        ] {
+            let floor = m.min_round_secs();
+            assert!(floor > 0.0);
+            // The cheapest possible shapes of every step kind dominate it.
+            assert!(m.t_ar_step(0, 0) >= floor);
+            assert!(m.t_spec_round(0, 0, 0) >= floor);
+            assert!(m.t_prefill(0) + m.t_ar_step(0, 0) >= floor);
+        }
     }
 
     #[test]

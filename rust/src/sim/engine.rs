@@ -114,10 +114,20 @@ impl SimSample {
 
     /// Serving latencies of a finished sample, if every timestamp was
     /// stamped (None for samples still decoding or never admitted).
+    ///
+    /// A sample can finish with `generated == 0` (a refused-then-salvaged
+    /// sample whose target was already met, or a zero-length target) and
+    /// therefore never stamp `first_token_time`; such samples report
+    /// TTFT = time-to-finish and TPOT = 0 rather than dropping out of the
+    /// percentile summaries or propagating NaN into them.
     pub fn latency(&self) -> Option<SampleLatency> {
         let admit = self.admit_time?;
-        let first = self.first_token_time?;
         let finish = self.finish_time?;
+        let first = match self.first_token_time {
+            Some(t) => t,
+            None if self.generated == 0 => finish,
+            None => return None,
+        };
         let tpot = if self.generated > 1 {
             (finish - first) / (self.generated - 1) as f64
         } else {
@@ -455,14 +465,26 @@ impl InstanceCore<SimBackend> {
     /// from profiling rounds against the ground-truth acceptance process.
     pub fn profile_offline(&mut self) {
         let b = &mut self.backend;
+        // Build the whole (N_seq, N_draft) profiling grid, cost it in one
+        // vectorized sweep ([`CostModel::t_spec_round_batch`]), then draw
+        // measurement noise in the original grid order — the RNG stream,
+        // and therefore every observed point, is bit-identical to the
+        // scalar loop this replaces.
+        let mut n_seq: Vec<usize> = Vec::with_capacity(7 * 4 * 7);
+        let mut n_draft: Vec<usize> = Vec::with_capacity(7 * 4 * 7);
         for &bsz in &[1usize, 2, 4, 8, 16, 32, 64] {
             for &seq in &[128usize, 512, 1024, 1536] {
                 for &n in &[2usize, 4, 8, 16, 24, 32, 48] {
-                    let t = b.cost.t_spec_round(b.params.depth, bsz * seq, bsz * n);
-                    let noisy = t * (1.0 + 0.03 * (b.rng.f64() * 2.0 - 1.0));
-                    self.tsd_pred.observe(bsz * seq, bsz * n, noisy);
+                    n_seq.push(bsz * seq);
+                    n_draft.push(bsz * n);
                 }
             }
+        }
+        let mut grid = vec![0.0f64; n_seq.len()];
+        b.cost.t_spec_round_batch(b.params.depth, &n_seq, &n_draft, &mut grid);
+        for ((&s, &n), &t) in n_seq.iter().zip(&n_draft).zip(&grid) {
+            let noisy = t * (1.0 + 0.03 * (b.rng.f64() * 2.0 - 1.0));
+            self.tsd_pred.observe(s, n, noisy);
         }
         self.tsd_pred.refit();
         // Acceptance-fit profiling rounds (full trees so deep/low-dl bins
@@ -510,6 +532,27 @@ mod tests {
         for k in 0..n {
             i.add(SimSample::new(k as u64, 100, len));
         }
+    }
+
+    #[test]
+    fn zero_generated_finished_sample_reports_zero_tpot() {
+        // A refused-then-salvaged sample can finish without ever stamping
+        // first_token_time. It must still report a latency — TTFT equal
+        // to its time-to-finish and TPOT pinned at 0, never NaN.
+        let mut s = SimSample::new(7, 100, 0);
+        s.arrival_time = 1.0;
+        s.admit_time = Some(2.0);
+        s.finish_time = Some(3.5);
+        let lat = s.latency().expect("zero-generated sample has a latency");
+        assert_eq!(lat.queue_secs, 1.0);
+        assert_eq!(lat.ttft_secs, 2.5);
+        assert_eq!(lat.tpot_secs, 0.0);
+        assert!(lat.tpot_secs.is_finite());
+        // Still-decoding samples (generated > 0, no first-token stamp
+        // would be a bug upstream — but no finish stamp) stay None.
+        let mut mid = SimSample::new(8, 100, 10);
+        mid.admit_time = Some(1.0);
+        assert!(mid.latency().is_none());
     }
 
     #[test]

@@ -57,12 +57,15 @@
 #![warn(missing_docs)]
 
 pub mod acceptance;
+pub mod arena;
 pub mod cluster;
 pub mod cost_model;
 pub mod crash;
 pub mod e2e;
 pub mod engine;
 pub mod link;
+pub mod pool;
+pub mod timers;
 
 pub use cluster::{ClusterConfig, ClusterResult, FleetTier, SimCluster, TierStats};
 pub use crash::{CrashConfig, CrashSchedule};

@@ -1,0 +1,204 @@
+//! Two-level timer rail for the event queue's timer-like events.
+//!
+//! Retransmit timers, crash recoveries and realloc ticks behave unlike
+//! decode traffic: they are pushed far ahead of the current virtual
+//! instant (a retransmit period, a whole downtime) and most retransmit
+//! timers are *logically cancelled* long before they pop (the ack
+//! arrived; the pop is a stale no-op). Keeping them in the main binary
+//! heap makes every decode-step push/pop sift past a layer of
+//! far-future timers.
+//!
+//! The rail is a classic two-level structure: a **near** level (ordered
+//! `BTreeMap`, holding everything up to a promotion boundary) that
+//! serves `peek`/`pop`, and a **far** level (unsorted `Vec`, O(1) push)
+//! for everything beyond the boundary. When the near level drains, the
+//! smallest ~1/8 of the far level is promoted in one batch
+//! (`select_nth_unstable` partition + sweep), amortizing the sort cost.
+//!
+//! **Exact-order contract.** The rail orders entries by the same
+//! `(time, rank, seq)` total order as the main event heap, with the
+//! time compared through an order-isomorphic bit transform of
+//! [`f64::total_cmp`] (see [`time_key`]). The event queue merges
+//! `rail.peek()` against `heap.peek()` on every pop, so the global pop
+//! sequence — and therefore every golden output — is bit-identical to
+//! the single-heap queue. Sequence numbers keep coming from the queue's
+//! one shared counter.
+
+use std::collections::BTreeMap;
+
+/// Sign-bit flip making `u64` integer order match [`f64::total_cmp`]:
+/// positive floats map above the sign bit in magnitude order, negative
+/// floats below it, reversed. Exact and bijective — [`key_time`] is the
+/// inverse.
+pub fn time_key(t: f64) -> u64 {
+    let b = t.to_bits() as i64;
+    if b < 0 {
+        !(b as u64)
+    } else {
+        (b as u64) | 0x8000_0000_0000_0000
+    }
+}
+
+/// Inverse of [`time_key`].
+pub fn key_time(k: u64) -> f64 {
+    if k & 0x8000_0000_0000_0000 != 0 {
+        f64::from_bits(k & !0x8000_0000_0000_0000)
+    } else {
+        f64::from_bits(!k)
+    }
+}
+
+/// Full ordering key of one rail entry: `(time_key, rank, seq)`.
+pub type RailKey = (u64, u8, u64);
+
+/// The two-level rail. `P` is the (small, `Copy`) timer payload.
+pub struct TimerRail<P> {
+    near: BTreeMap<RailKey, P>,
+    far: Vec<(RailKey, P)>,
+    /// Every near key's time component is ≤ this; every far key's is >.
+    boundary: u64,
+}
+
+impl<P: Copy> Default for TimerRail<P> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<P: Copy> TimerRail<P> {
+    /// An empty rail.
+    pub fn new() -> Self {
+        TimerRail { near: BTreeMap::new(), far: Vec::new(), boundary: 0 }
+    }
+
+    /// Insert an entry. `key.2` (the queue's sequence number) makes keys
+    /// unique, so this never overwrites.
+    pub fn push(&mut self, key: RailKey, payload: P) {
+        if key.0 <= self.boundary {
+            let prev = self.near.insert(key, payload);
+            debug_assert!(prev.is_none(), "duplicate rail key");
+        } else {
+            self.far.push((key, payload));
+        }
+    }
+
+    /// Smallest key currently on the rail, promoting a far batch if the
+    /// near level has drained.
+    pub fn peek(&mut self) -> Option<RailKey> {
+        if self.near.is_empty() {
+            self.promote();
+        }
+        self.near.keys().next().copied()
+    }
+
+    /// Remove and return the smallest entry.
+    pub fn pop(&mut self) -> Option<(RailKey, P)> {
+        let key = self.peek()?;
+        let payload = self.near.remove(&key).expect("peeked rail key");
+        Some((key, payload))
+    }
+
+    /// True when both levels are empty.
+    pub fn is_empty(&self) -> bool {
+        self.near.is_empty() && self.far.is_empty()
+    }
+
+    /// Entries across both levels.
+    pub fn len(&self) -> usize {
+        self.near.len() + self.far.len()
+    }
+
+    /// Move the smallest ~1/8 of the far level (and every tie on their
+    /// time boundary) into the near level.
+    fn promote(&mut self) {
+        if self.far.is_empty() {
+            return;
+        }
+        let pivot = (self.far.len() / 8).min(self.far.len() - 1);
+        let (_, &mut (pk, _), _) =
+            self.far.select_nth_unstable_by(pivot, |a, b| a.0.cmp(&b.0));
+        // The boundary is the pivot's *time* component: sweeping on it
+        // (not the full key) keeps the far level strictly beyond the
+        // boundary, so later same-time pushes cannot strand a smaller
+        // full key behind larger near entries.
+        let boundary = pk.0;
+        let mut i = 0;
+        while i < self.far.len() {
+            if self.far[i].0 .0 <= boundary {
+                let (k, p) = self.far.swap_remove(i);
+                let prev = self.near.insert(k, p);
+                debug_assert!(prev.is_none(), "duplicate rail key");
+            } else {
+                i += 1;
+            }
+        }
+        self.boundary = boundary;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_key_roundtrips_and_orders_like_total_cmp() {
+        let times = [
+            0.0, -0.0, 1.0, -1.0, 1e-300, -1e-300, 1e300, f64::INFINITY,
+            f64::NEG_INFINITY, 0.014, 0.009, 123.456,
+        ];
+        for &a in &times {
+            assert_eq!(key_time(time_key(a)).to_bits(), a.to_bits());
+            for &b in &times {
+                assert_eq!(
+                    time_key(a).cmp(&time_key(b)),
+                    a.total_cmp(&b),
+                    "{a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rail_pops_in_total_key_order() {
+        let mut rail: TimerRail<u32> = TimerRail::new();
+        // A deterministic scramble of (time, rank, seq) keys.
+        let mut keys: Vec<RailKey> = Vec::new();
+        let mut x = 0x2545_F491_4F6C_DD1Du64;
+        for seq in 0..500u64 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let t = (x % 1000) as f64 * 0.01;
+            let rank = (6 + (x % 3)) as u8;
+            keys.push((time_key(t), rank, seq));
+        }
+        for (i, &k) in keys.iter().enumerate() {
+            rail.push(k, i as u32);
+        }
+        assert_eq!(rail.len(), keys.len());
+        let mut sorted = keys.clone();
+        sorted.sort();
+        for want in sorted {
+            let (got, payload) = rail.pop().expect("entry");
+            assert_eq!(got, want);
+            assert_eq!(keys[payload as usize], want);
+        }
+        assert!(rail.is_empty());
+        assert!(rail.pop().is_none());
+    }
+
+    #[test]
+    fn interleaved_push_pop_keeps_global_min() {
+        // Pushes below the promotion boundary after a batch has been
+        // promoted must surface before older far entries.
+        let mut rail: TimerRail<()> = TimerRail::new();
+        for seq in 0..64u64 {
+            rail.push((time_key(100.0 + seq as f64), 8, seq), ());
+        }
+        assert_eq!(rail.peek(), Some((time_key(100.0), 8, 0)));
+        // A near-term timer arriving later still wins.
+        rail.push((time_key(1.0), 8, 64), ());
+        assert_eq!(rail.pop().map(|(k, _)| k), Some((time_key(1.0), 8, 64)));
+        assert_eq!(rail.pop().map(|(k, _)| k), Some((time_key(100.0), 8, 0)));
+    }
+}

@@ -1,0 +1,191 @@
+//! Cross-thread-count golden parity suite for the parallel event engine.
+//!
+//! The `[engine] threads = N` knob must be *bit-inert*: the beat-based
+//! parallel loop batches only provably independent `StepReady` events
+//! (conservative lookahead horizon from [`CostModel::min_round_secs`],
+//! commits replayed in exact pop order — see `docs/ARCHITECTURE.md`
+//! § Parallel engine), so every preset in `tests/common` must produce a
+//! bit-identical [`ClusterResult`] — token totals, makespan bits, every
+//! protocol/fault counter, and the per-instance finished-id placement —
+//! at threads ∈ {1, 2, 4, 8}. threads = 1 additionally pins the refactor
+//! itself (the extracted `process_event`/`commit_step` path is the
+//! pre-parallel engine, golden-guarded by the other suites).
+//!
+//! [`CostModel::min_round_secs`]: rlhfspec::sim::cost_model::CostModel::min_round_secs
+
+mod common;
+
+use rlhfspec::coordinator::transport::TransportConfig;
+use rlhfspec::data::arrivals::ArrivalProcess;
+use rlhfspec::sim::cluster::{ClusterConfig, SimCluster};
+use rlhfspec::sim::crash::CrashConfig;
+use rlhfspec::sim::ClusterResult;
+use rlhfspec::utils::rng::Rng;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+/// Full bit-level signature of a run: every counter of the result plus
+/// the per-instance finished-sample placement (ids in finish order), so
+/// a divergence in *where* a sample completed fails even when totals
+/// happen to agree.
+fn signature(c: &SimCluster, r: &ClusterResult) -> Vec<u64> {
+    let mut sig = vec![
+        r.total_tokens,
+        r.makespan.to_bits(),
+        r.n_samples as u64,
+        r.arrivals,
+        r.admission_refusals,
+        r.migrations,
+        r.realloc_decisions,
+        r.refusals,
+        r.orders_attempted,
+        r.retransmits,
+        r.handshake_aborts,
+        r.link_drops,
+        r.link_dups,
+        r.crashes,
+        r.recoveries,
+        r.samples_requeued,
+        r.requeue_delay_mean.to_bits(),
+        r.stage1_acks,
+        r.bounced_orders,
+        r.migration_downtime.to_bits(),
+        r.mean_accepted.to_bits(),
+    ];
+    for inst in &c.instances {
+        sig.push(u64::MAX); // per-instance delimiter
+        sig.extend(inst.finished.iter().map(|s| s.id));
+    }
+    sig
+}
+
+/// Run `build(cfg-with-threads)` across [`THREADS`] and assert every
+/// signature matches the sequential (threads = 1) run bit-for-bit.
+fn assert_thread_parity(name: &str, build: impl Fn(usize) -> SimCluster) {
+    let mut base: Option<Vec<u64>> = None;
+    for &threads in &THREADS {
+        let mut cluster = build(threads);
+        let result = cluster.run();
+        let sig = signature(&cluster, &result);
+        match &base {
+            None => base = Some(sig),
+            Some(b) => assert_eq!(
+                b, &sig,
+                "{name}: threads={threads} diverged from the sequential engine"
+            ),
+        }
+    }
+}
+
+fn with_threads(mut cfg: ClusterConfig, threads: usize) -> ClusterConfig {
+    cfg.threads = threads;
+    cfg
+}
+
+#[test]
+fn golden8_batch_is_thread_inert() {
+    assert_thread_parity("golden8", |t| {
+        SimCluster::new(with_threads(common::golden8(3), t))
+    });
+}
+
+#[test]
+fn golden8_ar_is_thread_inert() {
+    // AR mode keeps many instance clocks exactly tied — the hardest case
+    // for the deterministic (time, kind, seq) merge order.
+    assert_thread_parity("golden8_ar", |t| {
+        SimCluster::new(with_threads(common::golden8_ar(), t))
+    });
+}
+
+#[test]
+fn skew4_migrations_are_thread_inert() {
+    // Migration-heavy: reallocation decisions fire between beats.
+    assert_thread_parity("skew4", |t| {
+        SimCluster::with_assignment(
+            with_threads(common::skew4(7, 1024), t),
+            common::skew4_assignment(),
+        )
+    });
+}
+
+#[test]
+fn hetero_fleet_is_thread_inert() {
+    // Mixed per-tier cost models: the lookahead horizon must use each
+    // instance's own min_round_secs, not a fleet-wide constant.
+    assert_thread_parity("hetero_fleet", |t| {
+        SimCluster::new(with_threads(common::hetero_fleet(11, 256, 384), t))
+    });
+}
+
+#[test]
+fn faulty_transport_is_thread_inert() {
+    // Randomized link faults: retransmit timers and handshake control
+    // messages interleave with the beats.
+    let transport = common::random_transport(&mut Rng::new(21));
+    assert_thread_parity("random_transport", |t| {
+        let mut cfg = with_threads(common::skew4(13, 512), t);
+        cfg.transport = transport.clone();
+        SimCluster::with_assignment(cfg, common::skew4_assignment())
+    });
+}
+
+#[test]
+fn crash_link_big_fleet_is_thread_inert() {
+    // The composed fault pipeline on a 64-instance skewed fleet: crashes,
+    // recoveries, salvage requeues and link faults all replay through the
+    // sequential fallback path, beats filling the gaps between them.
+    let (assignment, _) = common::skewed_big_fleet(&mut Rng::new(99), 64);
+    assert_thread_parity("skewed_big_fleet", |t| {
+        let mut cfg = with_threads(
+            ClusterConfig {
+                instances: 64,
+                cooldown: 16,
+                n_samples: 0,
+                max_tokens: 320,
+                seed: 37,
+                ..Default::default()
+            },
+            t,
+        );
+        cfg.transport = common::random_transport(&mut Rng::new(4));
+        cfg.crash = CrashConfig {
+            rate_per_sec: 0.3,
+            recover_secs: 1.0,
+            max_crashes: 24,
+        };
+        cfg.multi_dest = true;
+        SimCluster::with_assignment(cfg, assignment.clone())
+    });
+}
+
+#[test]
+fn streaming_poisson_is_thread_inert() {
+    // Streaming exercises the beat precondition (no beat may form while
+    // the admission backlog is non-empty) and the TaskArrival fallback.
+    assert_thread_parity("streaming-poisson", |t| {
+        let mut cfg = with_threads(common::hetero_fleet(17, 384, 256), t);
+        cfg.pending_bound = 64;
+        SimCluster::streaming(cfg, &ArrivalProcess::poisson(48.0))
+            .expect("streaming config")
+    });
+}
+
+#[test]
+fn timed_tick_cadence_is_thread_inert() {
+    // The wall-clock reallocation cadence: ticks ride the timer rail and
+    // terminate beats as ordinary events.
+    assert_thread_parity("timed-tick", |t| {
+        let mut cfg = with_threads(common::golden8(29), t);
+        cfg.realloc_period_secs = Some(0.25);
+        SimCluster::new(cfg)
+    });
+}
+
+#[test]
+fn perfect_transport_default_is_untouched() {
+    // Belt-and-braces for the refactor itself: the default config (which
+    // every other golden suite pins) still reports a TransportConfig that
+    // is perfect, so the sequential path is the golden path.
+    assert!(TransportConfig::default().is_perfect());
+}

@@ -1,6 +1,8 @@
 //! Property-based suite over coordinator/spec invariants (testutil::check
 //! is the in-repo mini-proptest; failures print a replayable seed).
 
+mod common;
+
 use std::collections::BTreeMap;
 
 use rlhfspec::config::{RunConfig, SelectorConfig};
@@ -303,6 +305,58 @@ fn crash_schedule_replays_and_respects_budget() {
         }
         assert_eq!(drawn, cfg.max_crashes, "budget fully drawable");
         assert_eq!(a.crashes_drawn(), drawn);
+    });
+}
+
+#[test]
+fn cluster_replay_is_bit_stable_at_any_thread_count() {
+    // Any (seed, CrashSchedule, TransportConfig, threads) tuple replays
+    // bit-for-bit: re-running the same tuple reproduces the run, and the
+    // parallel beat engine at the drawn thread count matches the
+    // sequential (threads = 1) engine exactly.
+    use rlhfspec::sim::cluster::{ClusterConfig, SimCluster};
+
+    check("cluster-replay-threads", 8, |rng| {
+        let instances = 16 + rng.below(17); // 16..=32
+        let (assignment, _) = common::skewed_big_fleet(rng, instances);
+        let cfg = ClusterConfig {
+            instances,
+            cooldown: (8 + rng.below(17)) as u64,
+            n_samples: 0,
+            max_tokens: 256,
+            seed: rng.below(1 << 30) as u64,
+            transport: common::random_transport(rng),
+            crash: CrashConfig {
+                rate_per_sec: 0.05 + rng.f64() * 0.4,
+                recover_secs: if rng.chance(0.2) { 0.0 } else { 0.3 + rng.f64() * 2.0 },
+                max_crashes: 4 + rng.below(21),
+            },
+            multi_dest: rng.chance(0.5),
+            ..Default::default()
+        };
+        let threads = [2usize, 4, 8][rng.below(3)];
+        let run = |threads: usize| {
+            let mut cfg = cfg.clone();
+            cfg.threads = threads;
+            let r = SimCluster::with_assignment(cfg, assignment.clone()).run();
+            (
+                r.total_tokens,
+                r.makespan.to_bits(),
+                r.arrivals,
+                r.admission_refusals,
+                r.migrations,
+                r.crashes,
+                r.recoveries,
+                r.samples_requeued,
+                r.requeue_delay_mean.to_bits(),
+                r.retransmits,
+                r.handshake_aborts,
+            )
+        };
+        let sequential = run(1);
+        let parallel = run(threads);
+        assert_eq!(parallel, run(threads), "replay at threads={threads} unstable");
+        assert_eq!(parallel, sequential, "threads={threads} diverged from sequential");
     });
 }
 

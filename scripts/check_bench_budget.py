@@ -18,9 +18,23 @@ overhead exceeds a quarter of the hard budget — so tiny-on-tiny noise
 never trips the gate, but a real scheduler regression does even while
 still under the hard 1% wall.
 
+With `--min-parallel-speedup`, also gates the parallel event engine:
+each `core/cluster/<name>/threadsN` row is compared against its
+sequential `core/cluster/<name>` row, and the largest-N row must reach
+the floor (sequential mean_ns / threadsN mean_ns >= floor). The gate is
+*core-aware*: the bench records the machine it ran on in a
+`meta/host-cpus` row, and a threadsN row is only enforced when that
+host had >= N CPUs — a speedup "regression" measured on a 1-core
+container is a fact about the container, not the engine. Rows measured
+on a capable host are enforced unconditionally; absent rows are
+reported (the bench hasn't been regenerated since the rows were added)
+rather than failed, so the floor binds from the first multicore
+regeneration onward.
+
 Usage: check_bench_budget.py [BENCH_core.json] [--budget-pct 1.0]
                              [--baseline BENCH_baseline.json]
                              [--regress-factor 3.0]
+                             [--min-parallel-speedup 4.0]
 
 Exit codes: 0 = within budget, 1 = over budget/regressed, 2 = malformed
 input (missing rows count as malformed — a silently skipped gate is
@@ -60,6 +74,52 @@ def overhead_pct(by_name, name):
     return 100.0 * by_name[name] / modeled
 
 
+def check_parallel_speedup(by_name, floor):
+    """Gate `core/cluster/<name>/threadsN` rows against the sequential
+    row. Returns a list of failure strings (empty = pass/skip)."""
+    host_cpus = by_name.get("meta/host-cpus")
+    parallel = {}
+    for name in by_name:
+        base, sep, tail = name.rpartition("/threads")
+        if not sep or not tail.isdigit() or not base.startswith("core/cluster/"):
+            continue
+        parallel.setdefault(base, []).append(int(tail))
+    if not parallel:
+        print("parallel-speedup gate: no core/cluster/*/threadsN rows yet "
+              "(bench not regenerated since the parallel engine landed) — "
+              "skipping")
+        return []
+
+    failures = []
+    for base, thread_counts in sorted(parallel.items()):
+        seq_ns = by_name.get(base)
+        if seq_ns is None or seq_ns <= 0:
+            failures.append(f"{base} (threadsN rows without a sequential row)")
+            continue
+        # The floor binds on the widest row; narrower rows are reported
+        # for the trend line only.
+        gated_n = max(thread_counts)
+        for n in sorted(thread_counts):
+            par_ns = by_name[f"{base}/threads{n}"]
+            speedup = seq_ns / par_ns if par_ns > 0 else float("inf")
+            if host_cpus is None:
+                verdict = "unenforced (no meta/host-cpus row in this artifact)"
+            elif host_cpus < n:
+                verdict = (f"unenforced (bench host had {host_cpus:.0f} CPUs "
+                           f"< {n} threads)")
+            elif n != gated_n:
+                verdict = "reported (floor binds on the widest row)"
+            elif speedup >= floor:
+                verdict = f"OK (floor {floor}x)"
+            else:
+                verdict = f"BELOW FLOOR {floor}x"
+                failures.append(f"{base}/threads{n} "
+                                f"({speedup:.2f}x < {floor}x)")
+            print(f"{base}/threads{n}: {seq_ns / 1e6:.1f}ms -> "
+                  f"{par_ns / 1e6:.1f}ms = {speedup:.2f}x speedup — {verdict}")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("path", nargs="?", default="BENCH_core.json")
@@ -69,6 +129,11 @@ def main() -> int:
                     help="committed seed BENCH_core.json to compare against")
     ap.add_argument("--regress-factor", type=float, default=3.0,
                     help="max allowed overhead-%% growth vs the baseline")
+    ap.add_argument("--min-parallel-speedup", type=float, default=None,
+                    help="fail when the widest core/cluster/*/threadsN row "
+                         "falls below this speedup over its sequential row "
+                         "(enforced only for rows benched on a host with "
+                         ">= N CPUs, per the meta/host-cpus row)")
     args = ap.parse_args()
 
     by_name = load_rows(args.path)
@@ -124,6 +189,10 @@ def main() -> int:
               f"({ratio:.2f}x, allowed {args.regress_factor}x) {trend}")
         if regressed:
             failures.append(f"{name} (baseline regression)")
+
+    if args.min_parallel_speedup is not None:
+        failures.extend(
+            check_parallel_speedup(by_name, args.min_parallel_speedup))
 
     if failures:
         print(f"FAIL: {len(failures)} row(s) over the "
