@@ -11,7 +11,12 @@
 //!   discrete-event scheduler, including the acceptance criterion run:
 //!   a 512-instance heterogeneous fleet (l40s/a100/h100 tiers) driving
 //!   8192 samples end to end, which must complete in seconds — both
-//!   batch-synchronous and as a streaming (Poisson-arrival) workload.
+//!   batch-synchronous and as a streaming (Poisson-arrival) workload —
+//!   and the sharded-control-plane headline: a 100k-instance fleet
+//!   (64 coordinator shards) streaming 1M samples (ROADMAP row);
+//! * `core/admission/*` — the admission microbench: the deterministic
+//!   power-of-two-choices pick against the O(fleet) least-loaded scan
+//!   it replaced, gated by `--min-admission-speedup`.
 //!
 //! Every `core/step/<mode>/b<batch>` row is paired with a
 //! `.../modeled-step` row whose `mean_ns` is the *modeled* decode-step
@@ -209,6 +214,67 @@ fn main() {
         sres.latency.queue_p95,
         sres.latency.tpot_p50 * 1e3,
     );
+
+    // ---- sharded control plane at 100k instances ----------------------
+    // The ROADMAP 100k-instance / 1M-sample streaming row: 64 coordinator
+    // shards, power-of-two-choices admission, digest federation on the
+    // timed ReallocTick cadence. AR mode with short generations keeps the
+    // virtual work proportional to the *scheduler* cost being measured.
+    // Smoke mode scales the fleet down but walks the identical code path.
+    let (shard_per_tier, shard_samples, shard_count) =
+        if smoke { (512, 20_480, 16) } else { (25_000, 1_000_000, 64) };
+    let sharded_cfg = || {
+        let mut cfg = hetero_cfg(shard_per_tier, shard_samples);
+        cfg.mode = SimMode::Ar;
+        cfg.prompt_len = 32;
+        cfg.max_tokens = 24;
+        cfg.shards = shard_count;
+        cfg.realloc_period_secs = Some(0.5); // rail ticks, not per-step scans
+        cfg.pending_bound = 8 * shard_count;
+        cfg
+    };
+    let r = bench("core/cluster/sharded-100k", 0, 1, || {
+        let rate = shard_samples as f64 / 20.0;
+        let mut cluster = SimCluster::streaming(sharded_cfg(), &ArrivalProcess::poisson(rate))
+            .expect("streaming config");
+        let res = cluster.run();
+        assert_eq!(res.arrivals, shard_samples as u64, "all samples must arrive");
+        assert_eq!(
+            res.arrivals,
+            res.n_samples as u64 + res.admission_refusals,
+            "conservation across shard boundaries"
+        );
+        println!(
+            "  sharded fleet: {} instances / {} shards: {} done, {} refused, \
+             {} cross-shard orders",
+            4 * shard_per_tier,
+            shard_count,
+            res.n_samples,
+            res.admission_refusals,
+            res.cross_shard_orders,
+        );
+        black_box(res.total_tokens);
+    });
+    results.push(r);
+
+    // ---- admission microbench: p2c pick vs full fleet scan ------------
+    // Timed on one constructed sharded fleet at steady occupancy; the
+    // budget gate (`--min-admission-speedup`) holds the p2c pick to a
+    // committed speedup floor over the scan it replaced.
+    let mut adm = {
+        let mut cfg = sharded_cfg();
+        cfg.n_samples = 4 * shard_per_tier * 2; // pre-assigned occupancy
+        SimCluster::new(cfg)
+    };
+    let (aw, ai) = if smoke { (1, 20) } else { (3, 200) };
+    let r = bench("core/admission/full-scan", aw, ai, || {
+        black_box(adm.bench_admission_full_scan());
+    });
+    results.push(r);
+    let r = bench("core/admission/p2c", aw, ai, || {
+        black_box(adm.bench_admission_pick());
+    });
+    results.push(r);
 
     // Anchor the artifact at the *workspace* root: cargo runs bench
     // binaries with cwd = the package root (rust/), but the committed

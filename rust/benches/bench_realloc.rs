@@ -1,7 +1,11 @@
-//! Bench: reallocation policy (§6.1) — the SRD overhead of §7.7.
+//! Bench: reallocation policy (§6.1) — the SRD overhead of §7.7 —
+//! plus the sharded control plane's admission microbench
+//! (power-of-two-choices pick vs the O(fleet) least-loaded scan).
 
 use rlhfspec::benchutil::{bench, black_box};
 use rlhfspec::coordinator::reallocator::Reallocator;
+use rlhfspec::sim::cluster::{ClusterConfig, SimCluster};
+use rlhfspec::sim::SimMode;
 use rlhfspec::utils::rng::Rng;
 
 fn main() {
@@ -14,6 +18,27 @@ fn main() {
         bench(&format!("realloc/decide/{n}-instances"), 10, 500, || {
             step += 1;
             black_box(re.decide(step, &counts, &caps));
+        });
+    }
+
+    // Admission: the p2c pick is O(1) in fleet size; the scan it
+    // replaced is O(n). Sweep the fleet to make the crossover visible.
+    for n in [1_000usize, 10_000, 100_000] {
+        let cfg = ClusterConfig {
+            instances: n,
+            n_samples: 2 * n,
+            mode: SimMode::Ar,
+            max_tokens: 16,
+            shards: 64.min(n),
+            seed: 3,
+            ..Default::default()
+        };
+        let mut c = SimCluster::new(cfg);
+        bench(&format!("realloc/admission-scan/{n}"), 3, 100, || {
+            black_box(c.bench_admission_full_scan());
+        });
+        bench(&format!("realloc/admission-p2c/{n}"), 3, 100, || {
+            black_box(c.bench_admission_pick());
         });
     }
 

@@ -164,6 +164,70 @@ impl Default for EngineConfig {
     }
 }
 
+/// Sharded-control-plane knobs (`[shard]` section).
+///
+/// `count = 1` (the default) keeps the single fleet-global coordinator
+/// and is bit-inert: admission stays the least-loaded scan, no admission
+/// RNG stream is created, and no federation round runs. `count > 1`
+/// partitions the fleet into contiguous shards, each with its own
+/// admission queue, refusal ledger and `Reallocator`, switches the
+/// arrival fast path to power-of-two-choices sampling on the
+/// `seed ^ ADMIT_SEED_SALT` stream, and runs the
+/// [`federation`](crate::coordinator::federation) digest exchange on the
+/// reallocation cadence. Cross-shard migration orders travel the same
+/// simulated links, degraded by the two factor knobs below.
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    /// Coordinator shard count K; clamped to `1 ..= instances`.
+    pub count: usize,
+    /// Multiplier on link latency when source and destination live in
+    /// different shards (inter-shard hops cross a slower fabric).
+    /// Clamped to ≥ 1 (never *better* than the intra-shard link).
+    pub link_latency_factor: f64,
+    /// Divisor on link bandwidth for cross-shard transfers; clamped to
+    /// ≥ 1 likewise.
+    pub link_bandwidth_factor: f64,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig { count: 1, link_latency_factor: 4.0, link_bandwidth_factor: 4.0 }
+    }
+}
+
+impl ShardConfig {
+    /// Set one `[shard]` key (already stripped of the section prefix).
+    pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
+        let u = |v: &str| -> Result<usize> {
+            v.parse().map_err(|_| anyhow!("expected int, got {v:?}"))
+        };
+        let f64_ = |v: &str| -> Result<f64> {
+            v.parse().map_err(|_| anyhow!("expected float, got {v:?}"))
+        };
+        match key {
+            "count" => self.count = u(val)?.max(1),
+            "link_latency_factor" => self.link_latency_factor = f64_(val)?,
+            "link_bandwidth_factor" => self.link_bandwidth_factor = f64_(val)?,
+            _ => bail!("unknown config key"),
+        }
+        Ok(())
+    }
+
+    /// The latency multiplier with the ≥ 1 / finite clamp applied.
+    pub fn latency_factor(&self) -> f64 {
+        if self.link_latency_factor.is_finite() { self.link_latency_factor.max(1.0) } else { 1.0 }
+    }
+
+    /// The bandwidth divisor with the ≥ 1 / finite clamp applied.
+    pub fn bandwidth_factor(&self) -> f64 {
+        if self.link_bandwidth_factor.is_finite() {
+            self.link_bandwidth_factor.max(1.0)
+        } else {
+            1.0
+        }
+    }
+}
+
 /// Engine thread count from `PALLAS_ENGINE_THREADS`, clamped to ≥ 1;
 /// `1` (the sequential loop) when unset or unparseable.
 pub fn default_engine_threads() -> usize {
@@ -195,6 +259,10 @@ pub struct RunConfig {
     pub crash: CrashConfig,
     /// `[engine]` — event-engine execution knobs (worker threads).
     pub engine: EngineConfig,
+    /// `[shard]` — sharded coordinator control plane (see
+    /// [`ShardConfig`]). `count = 1` by default: one fleet-global
+    /// coordinator, bit-identical to the pre-shard engine.
+    pub shard: ShardConfig,
     pub seed: u64,
 }
 
@@ -275,6 +343,9 @@ impl RunConfig {
                 }
                 if let Some(rest) = key.strip_prefix("crash.") {
                     return self.crash.set(rest, val);
+                }
+                if let Some(rest) = key.strip_prefix("shard.") {
+                    return self.shard.set(rest, val);
                 }
                 bail!("unknown config key")
             }
@@ -416,6 +487,32 @@ mod tests {
         assert_eq!(c.engine.threads, 1);
         assert!(c.set("engine.threads", "abc").is_err());
         assert!(c.set("engine.nope", "1").is_err());
+    }
+
+    #[test]
+    fn shard_section_parses_and_clamps() {
+        let src = r#"
+            [shard]
+            count = 8
+            link_latency_factor = 6.0
+            link_bandwidth_factor = 2.0
+        "#;
+        let mut kv = BTreeMap::new();
+        parse_toml_subset(src, &mut kv).unwrap();
+        let cfg = RunConfig::load(None, &kv).unwrap();
+        assert_eq!(cfg.shard.count, 8);
+        assert_eq!(cfg.shard.latency_factor(), 6.0);
+        assert_eq!(cfg.shard.bandwidth_factor(), 2.0);
+        // Defaults keep the single fleet-global coordinator.
+        assert_eq!(RunConfig::default().shard.count, 1);
+        let mut c = RunConfig::default();
+        c.set("shard.count", "0").unwrap(); // clamp, not error
+        assert_eq!(c.shard.count, 1);
+        // Sub-1 factors would make cross-shard links *better* — clamped.
+        c.set("shard.link_latency_factor", "0.25").unwrap();
+        assert_eq!(c.shard.latency_factor(), 1.0);
+        assert!(c.set("shard.count", "abc").is_err());
+        assert!(c.set("shard.nope", "1").is_err());
     }
 
     #[test]

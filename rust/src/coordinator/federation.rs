@@ -1,0 +1,185 @@
+//! Federated cross-shard reallocation (the sharded coordinator's thin
+//! top layer).
+//!
+//! A sharded control plane partitions the fleet across K coordinator
+//! shards; each shard runs the full §6.1 policy over its own members
+//! and never looks at another shard's instances. What crosses the shard
+//! boundary is a fixed-size **load digest** per shard
+//! ([`ShardDigest`]): aggregate surplus/deficit against the roofline
+//! thresholds plus one designated export and one designated import
+//! endpoint. [`plan_federation`] pairs digests greedily — largest net
+//! surplus against largest net deficit, the same extreme-pairing scheme
+//! [`Reallocator::decide`] uses per instance — and emits at most one
+//! cross-shard [`MigrationOrder`] per shard per round (the paper's
+//! `m(k) ≤ 1` participation limit, lifted from instances to shards).
+//!
+//! The orders themselves are ordinary §6.2 migration orders: they ride
+//! the existing `Transport` abstraction (cross-shard links are just
+//! *worse* links — higher latency, lower bandwidth), so the seqno /
+//! limbo / retransmit machinery and the crash reconciliation apply
+//! unchanged. No federation state survives between rounds: the digest
+//! exchange is stateless, deterministic, and O(K) per round.
+//!
+//! In-flight orders make a digest's surplus stale for a round or two;
+//! that is fine — the migration endpoint's victim pick is the
+//! authority, and an over-claimed source refuses the order exactly as
+//! it does for intra-shard plans today.
+//!
+//! [`Reallocator::decide`]: crate::coordinator::reallocator::Reallocator::decide
+
+use std::cmp::Reverse;
+
+use crate::coordinator::reallocator::MigrationOrder;
+
+/// Fixed-size per-shard load summary exchanged on the reallocation
+/// cadence. All instance ids are *global* (fleet-wide) ids; thresholds
+/// and capacities were already applied by the owning shard when the
+/// digest was built, so the planner needs no per-instance knowledge.
+#[derive(Clone, Debug, Default)]
+pub struct ShardDigest {
+    /// The shard this digest describes.
+    pub shard: usize,
+    /// Σ max(count − threshold, 0) over the shard's live members.
+    pub surplus: usize,
+    /// Σ min(threshold − count, capacity headroom) over live members
+    /// below their threshold.
+    pub deficit: usize,
+    /// Most-overloaded live member `(global id, its surplus)` — the
+    /// shard's designated export endpoint (lowest id on ties).
+    pub top_src: Option<(usize, usize)>,
+    /// Most-underloaded live member with admission headroom
+    /// `(global id, its deficit)` — the designated import endpoint
+    /// (lowest id on ties).
+    pub top_dst: Option<(usize, usize)>,
+    /// The shard's admission-backlog length. A shard with queued
+    /// arrivals imports nothing: its deficits will be topped up by
+    /// admission, which costs no link bandwidth (the same reasoning
+    /// `Reallocator::note_backlog` applies intra-shard).
+    pub backlog: usize,
+}
+
+impl ShardDigest {
+    /// Samples this shard wants to export (0 when balanced/deficient).
+    pub fn net_surplus(&self) -> usize {
+        self.surplus.saturating_sub(self.deficit)
+    }
+
+    /// Samples this shard can absorb (0 when balanced/overloaded, or
+    /// while its admission backlog pends).
+    pub fn net_deficit(&self) -> usize {
+        if self.backlog > 0 {
+            0
+        } else {
+            self.deficit.saturating_sub(self.surplus)
+        }
+    }
+}
+
+/// Pair shard digests into cross-shard migration orders: exporters
+/// (net surplus, descending) against importers (net deficit,
+/// descending), one order per pair, moving
+/// `min(exporter.top_src surplus, importer.top_dst deficit)` samples
+/// between the two designated endpoints. Deterministic: ties break on
+/// the lower shard id, and the digest slice's order never matters.
+pub fn plan_federation(digests: &[ShardDigest]) -> Vec<MigrationOrder> {
+    let mut exporters: Vec<&ShardDigest> = digests
+        .iter()
+        .filter(|d| d.net_surplus() > 0 && d.top_src.is_some())
+        .collect();
+    let mut importers: Vec<&ShardDigest> = digests
+        .iter()
+        .filter(|d| d.net_deficit() > 0 && d.top_dst.is_some())
+        .collect();
+    exporters.sort_by_key(|d| (Reverse(d.net_surplus()), d.shard));
+    importers.sort_by_key(|d| (Reverse(d.net_deficit()), d.shard));
+    exporters
+        .iter()
+        .zip(importers.iter())
+        .filter_map(|(e, i)| {
+            debug_assert_ne!(e.shard, i.shard, "a shard cannot both export and import");
+            let (from, s_surplus) = e.top_src?;
+            let (to, d_deficit) = i.top_dst?;
+            let count = s_surplus.min(d_deficit);
+            (count > 0).then_some(MigrationOrder { from, to, count })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn digest(
+        shard: usize,
+        surplus: usize,
+        deficit: usize,
+        top_src: Option<(usize, usize)>,
+        top_dst: Option<(usize, usize)>,
+        backlog: usize,
+    ) -> ShardDigest {
+        ShardDigest { shard, surplus, deficit, top_src, top_dst, backlog }
+    }
+
+    #[test]
+    fn balanced_shards_plan_nothing() {
+        let d = vec![
+            digest(0, 5, 5, Some((0, 5)), Some((1, 5)), 0),
+            digest(1, 0, 0, None, None, 0),
+        ];
+        assert!(plan_federation(&d).is_empty());
+    }
+
+    #[test]
+    fn extremes_pair_first() {
+        // Shard 2 (surplus 20) must pair with shard 0 (deficit 12),
+        // shard 3 (surplus 4) with shard 1 (deficit 6).
+        let d = vec![
+            digest(0, 0, 12, None, Some((1, 7)), 0),
+            digest(1, 0, 6, None, Some((9, 3)), 0),
+            digest(2, 20, 0, Some((17, 11)), None, 0),
+            digest(3, 4, 0, Some((25, 4)), None, 0),
+        ];
+        let plan = plan_federation(&d);
+        assert_eq!(
+            plan,
+            vec![
+                MigrationOrder { from: 17, to: 1, count: 7 },
+                MigrationOrder { from: 25, to: 9, count: 3 },
+            ]
+        );
+    }
+
+    #[test]
+    fn backlogged_shard_never_imports() {
+        let d = vec![
+            digest(0, 0, 12, None, Some((1, 7)), 3),
+            digest(1, 20, 0, Some((17, 11)), None, 0),
+        ];
+        assert!(plan_federation(&d).is_empty());
+    }
+
+    #[test]
+    fn each_shard_participates_at_most_once() {
+        // Two exporters, one importer: only the larger exporter fires.
+        let d = vec![
+            digest(0, 9, 0, Some((2, 6)), None, 0),
+            digest(1, 30, 0, Some((8, 14)), None, 0),
+            digest(2, 0, 10, None, Some((20, 5)), 0),
+        ];
+        let plan = plan_federation(&d);
+        assert_eq!(plan, vec![MigrationOrder { from: 8, to: 20, count: 5 }]);
+    }
+
+    #[test]
+    fn plan_is_order_independent() {
+        let mut d = vec![
+            digest(0, 0, 12, None, Some((1, 7)), 0),
+            digest(1, 0, 6, None, Some((9, 3)), 0),
+            digest(2, 20, 0, Some((17, 11)), None, 0),
+            digest(3, 4, 0, Some((25, 4)), None, 0),
+        ];
+        let a = plan_federation(&d);
+        d.reverse();
+        assert_eq!(a, plan_federation(&d));
+    }
+}

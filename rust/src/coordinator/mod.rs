@@ -24,6 +24,11 @@
 //! * [`reallocator`] — sample-reallocation policy (§6.1): roofline
 //!   threshold, greedy source/destination pairing under the Eq-6
 //!   constraints, cooldown.
+//! * [`federation`] — the sharded control plane's cross-shard layer:
+//!   per-shard load digests exchanged on the reallocation cadence and
+//!   the greedy digest-pairing planner that emits at most one
+//!   cross-shard migration order per shard per round (`[shard]` config
+//!   section; K = 1 keeps the single fleet-global coordinator).
 //! * [`migration`] — two-stage KV migration payloads (§6.2): hierarchical
 //!   packing, allocation handshake types, compute/transfer overlap.
 //! * [`transport`] — the message-transport abstraction under the §6.2
@@ -50,6 +55,7 @@
 pub mod backend;
 pub mod core;
 pub mod driver;
+pub mod federation;
 pub mod instance;
 pub mod metrics;
 pub mod migration;

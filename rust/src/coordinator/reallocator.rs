@@ -246,6 +246,12 @@ impl Reallocator {
     ///
     /// `counts[i]` = sample count of instance i. `capacity[i]` caps what a
     /// destination may hold (alloc-handshake pre-check).
+    ///
+    /// Candidate selection is the bounded-select formulation
+    /// ([`Reallocator::extreme_candidates`]): O(n + m log m) per decision
+    /// instead of re-sorting the full occupancy vector, bit-identical to
+    /// the historical full sort (pinned by tests against
+    /// [`Reallocator::plan_full_sort`]).
     pub fn decide(
         &mut self,
         step: u64,
@@ -254,27 +260,70 @@ impl Reallocator {
     ) -> Vec<MigrationOrder> {
         self.last_decision = step;
         self.decisions += 1;
+        let (dests, srcs) = self.extreme_candidates(counts);
+        self.pair_extremes(counts, capacity, dests, srcs)
+    }
 
-        // Sort ascending by the signed offset from each instance's own
-        // threshold (paper: "sort the instances based on the sample count
-        // in ascending order … pair largest difference" — with per-tier
-        // knees the *difference* is count − threshold, so a slow tier's
-        // heavy overload outranks a fast tier's higher raw count). For a
-        // uniform threshold this is the same order as sorting by count.
-        let mut order: Vec<usize> = (0..counts.len()).collect();
-        order.sort_by_key(|&i| counts[i] as isize - self.threshold_of(i) as isize);
+    /// Partition instances into destination/source candidate sets,
+    /// keeping only the extremes that can participate in one decision,
+    /// each sorted ascending by `(count − threshold, index)`.
+    ///
+    /// The historical formulation stably sorted all n instances by the
+    /// signed offset from their own threshold (paper: "sort the
+    /// instances based on the sample count in ascending order … pair
+    /// largest difference" — with per-tier knees the *difference* is
+    /// count − threshold, so a slow tier's heavy overload outranks a
+    /// fast tier's higher raw count) and paired from the two ends. That
+    /// loop consumes exactly one destination (front) and one source
+    /// (back) per iteration, so at most `m = min(|D|, |S|)` of each ever
+    /// take part. A stable sort by offset is equivalent to sorting by
+    /// `(offset, original index)`; selecting the m smallest destinations
+    /// and m largest sources under that composite key (O(n) via
+    /// `select_nth_unstable_by_key`) and sorting just those m reproduces
+    /// the full sort's prefix and suffix bit-for-bit. At 100k instances
+    /// per shardless tick this replaces the O(n log n) sort with
+    /// O(n + m log m).
+    fn extreme_candidates(&self, counts: &[usize]) -> (Vec<usize>, Vec<usize>) {
+        let key = |i: usize| (counts[i] as isize - self.threshold_of(i) as isize, i);
+        let mut dests: Vec<usize> = Vec::new();
+        let mut srcs: Vec<usize> = Vec::new();
+        for i in 0..counts.len() {
+            let th = self.threshold_of(i);
+            if counts[i] < th {
+                dests.push(i);
+            } else if counts[i] > th {
+                srcs.push(i);
+            }
+        }
+        let m = dests.len().min(srcs.len());
+        if m == 0 {
+            return (Vec::new(), Vec::new());
+        }
+        if dests.len() > m {
+            dests.select_nth_unstable_by_key(m - 1, |&i| key(i));
+            dests.truncate(m);
+        }
+        if srcs.len() > m {
+            let cut = srcs.len() - m;
+            srcs.select_nth_unstable_by_key(cut, |&i| key(i));
+            srcs.drain(..cut);
+        }
+        dests.sort_unstable_by_key(|&i| key(i));
+        srcs.sort_unstable_by_key(|&i| key(i));
+        (dests, srcs)
+    }
 
-        let mut dests: Vec<usize> = order
-            .iter()
-            .copied()
-            .filter(|&i| counts[i] < self.threshold_of(i))
-            .collect();
-        let mut srcs: Vec<usize> = order
-            .iter()
-            .copied()
-            .filter(|&i| counts[i] > self.threshold_of(i))
-            .collect();
-        // srcs ascending; we take from the back (largest surplus).
+    /// The greedy extreme-pairing loop shared by [`Reallocator::decide`]
+    /// and the [`Reallocator::plan_full_sort`] oracle: one destination
+    /// (smallest offset, front) against one source (largest offset,
+    /// back) per iteration, `m(k) ≤ 1`.
+    fn pair_extremes(
+        &self,
+        counts: &[usize],
+        capacity: &[usize],
+        mut dests: Vec<usize>,
+        mut srcs: Vec<usize>,
+    ) -> Vec<MigrationOrder> {
         let mut out = Vec::new();
         while let (Some(&d), Some(&s)) = (dests.first(), srcs.last()) {
             let surplus = counts[s] - self.threshold_of(s);
@@ -289,6 +338,27 @@ impl Reallocator {
             out.push(MigrationOrder { from: s, to: d, count: k });
         }
         out
+    }
+
+    /// The original full-sort candidate selection, retained as the
+    /// bit-parity oracle for [`Reallocator::decide`]'s bounded select
+    /// (tests assert plan equality on random fleets and the golden
+    /// presets). Pure: decision counters and the cooldown are untouched.
+    #[doc(hidden)]
+    pub fn plan_full_sort(&self, counts: &[usize], capacity: &[usize]) -> Vec<MigrationOrder> {
+        let mut order: Vec<usize> = (0..counts.len()).collect();
+        order.sort_by_key(|&i| counts[i] as isize - self.threshold_of(i) as isize);
+        let dests: Vec<usize> = order
+            .iter()
+            .copied()
+            .filter(|&i| counts[i] < self.threshold_of(i))
+            .collect();
+        let srcs: Vec<usize> = order
+            .iter()
+            .copied()
+            .filter(|&i| counts[i] > self.threshold_of(i))
+            .collect();
+        self.pair_extremes(counts, capacity, dests, srcs)
     }
 
     /// Batched multi-destination pairing: like [`Reallocator::decide`],
@@ -818,6 +888,40 @@ mod tests {
                 );
             }
         });
+    }
+
+    #[test]
+    fn property_bounded_select_matches_full_sort() {
+        // decide()'s O(n + m log m) extreme selection must reproduce the
+        // historical full-sort plan bit-for-bit, including on tiered
+        // fleets where the composite (offset, index) key does the
+        // stable-sort tie-breaking.
+        testutil::check("bounded-select-parity", 400, |rng| {
+            let n = rng.range(2, 64);
+            let tiers = rng.range(1, 4);
+            let ths: Vec<usize> = (0..tiers).map(|_| rng.range(2, 14)).collect();
+            let tier_of: Vec<usize> = (0..n).map(|_| rng.below(tiers)).collect();
+            let counts: Vec<usize> = (0..n).map(|_| rng.below(24)).collect();
+            let capacity: Vec<usize> =
+                counts.iter().map(|&c| c + rng.below(24)).collect();
+            let mut r = Reallocator::with_tiers(ths, tier_of, 1);
+            let oracle = r.plan_full_sort(&counts, &capacity);
+            let fast = r.decide(1, &counts, &capacity);
+            assert_eq!(oracle, fast, "counts={counts:?}");
+        });
+    }
+
+    #[test]
+    fn bounded_select_matches_full_sort_with_ties() {
+        // Many instances share the same offset: the stable sort's
+        // original-index tie-break is exactly what the composite key
+        // must reproduce.
+        let counts = [1, 1, 1, 20, 20, 20, 8, 8];
+        let caps = caps(8);
+        let mut r = Reallocator::new(8, 1);
+        let oracle = r.plan_full_sort(&counts, &caps);
+        assert_eq!(oracle, r.decide(1, &counts, &caps));
+        assert_eq!(oracle[0], MigrationOrder { from: 5, to: 0, count: 12 });
     }
 
     #[test]

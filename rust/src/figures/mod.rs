@@ -843,6 +843,77 @@ pub fn fig_crash(seed: u64) -> String {
     out
 }
 
+// ---------------------------------------------------------------------------
+// Shard plane — sharded control plane: p2c admission + digest federation
+// ---------------------------------------------------------------------------
+
+pub fn fig_shard(seed: u64) -> String {
+    let mut out = header(
+        "Shard plane",
+        "shard-count sweep on the hetero fleet: throughput + p99 admission queueing under the sharded control plane",
+        seed,
+    );
+    let fleet = vec![
+        FleetTier::preset("l40s", 16).expect("preset"),
+        FleetTier::preset("a100", 8).expect("preset"),
+        FleetTier::preset("h100", 8).expect("preset"),
+    ];
+    let n_samples = 768usize;
+    // Offered over ~8 virtual seconds: brisk enough that admission
+    // queueing is visible, slow enough that the fleet can drain it.
+    let rate = n_samples as f64 / 8.0;
+    let _ = writeln!(
+        out,
+        "{:>7} {:>6} {:>8} {:>9} {:>10} {:>10} {:>7} {:>7}",
+        "shards", "done", "refused", "tok/s", "queue-p50", "queue-p99", "x-shard", "migr"
+    );
+    for shards in [1usize, 2, 4, 8] {
+        let mut cfg = ClusterConfig {
+            fleet: fleet.clone(),
+            n_samples,
+            max_tokens: 256,
+            cooldown: 24,
+            seed,
+            shards,
+            ..Default::default()
+        };
+        // Timed ReallocTick cadence: shard-local reallocation and the
+        // federation exchange both ride the same rail (ISSUE cadence).
+        cfg.realloc_period_secs = Some(0.25);
+        cfg.pending_bound = 64;
+        cfg.params.max_batch = 8;
+        cfg.params.selector.refit_on_occupancy_change = true;
+        let r = SimCluster::streaming(cfg, &ArrivalProcess::poisson(rate))
+            .expect("streaming config is valid")
+            .run();
+        assert_eq!(
+            r.arrivals,
+            r.n_samples as u64 + r.admission_refusals,
+            "conservation must hold at every shard count"
+        );
+        let _ = writeln!(
+            out,
+            "{:>7} {:>6} {:>8} {:>9.0} {:>10.3} {:>10.3} {:>7} {:>7}",
+            shards,
+            r.n_samples,
+            r.admission_refusals,
+            r.tokens_per_sec(),
+            r.latency.queue_p50,
+            r.latency.queue_p99,
+            r.cross_shard_orders,
+            r.migrations,
+        );
+    }
+    let _ = writeln!(
+        out,
+        "shards=1 is the bit-identical pre-shard control plane (pinned by \
+         tests/shard_federation.rs); higher shard counts trade the O(fleet) admission scan \
+         for two salted-RNG probes and route locally-unfixable skew over cross-shard links \
+         — conservation (arrivals = completions + refusals) holds at every point"
+    );
+    out
+}
+
 /// Dispatch by figure id.
 pub fn run_figure(id: &str, seed: u64) -> Option<String> {
     Some(match id {
@@ -862,12 +933,13 @@ pub fn run_figure(id: &str, seed: u64) -> Option<String> {
         "streaming" | "continuous-batching" => fig_streaming(seed),
         "fault" | "unreliable-link" => fig_fault(seed),
         "crash" | "instance-crash" => fig_crash(seed),
+        "shard" | "sharded-control-plane" => fig_shard(seed),
         _ => return None,
     })
 }
 
 /// Every figure id `run_figure` accepts (the `fig all` order).
-pub const ALL_FIGURES: [&str; 16] = [
+pub const ALL_FIGURES: [&str; 17] = [
     "2", "3", "4", "5", "7", "9", "11", "12", "13", "14", "table1", "overhead", "hetero",
-    "streaming", "fault", "crash",
+    "streaming", "fault", "crash", "shard",
 ];

@@ -8,8 +8,9 @@
 //!
 //! * **task arrival** — a streaming sample reaches the cluster
 //!   ([`SimCluster::streaming`]) and goes through admission:
-//!   least-loaded instance with memory-budget headroom, else a bounded
-//!   FIFO backlog, else refusal;
+//!   least-loaded instance with memory-budget headroom (a deterministic
+//!   power-of-two-choices draw on sharded control planes, see below),
+//!   else a bounded FIFO backlog, else refusal;
 //! * **step-ready** — instance `i` can execute its next decode round at
 //!   its reported [`DecodeBackend::next_ready`] instant;
 //! * **Stage-2 arrival** — a migration packet lands on the virtual link
@@ -72,6 +73,23 @@
 //!   tokens) plus the handshake latency;
 //! * `Naive` (ablation) — stop-and-copy: downtime is the full KV
 //!   transfer.
+//!
+//! **Sharded control plane.** [`ClusterConfig::shards`] (the `[shard]`
+//! config section) partitions the fleet across K coordinator shards,
+//! each owning a contiguous instance range with its own admission
+//! backlog, refusal ledger and [`Reallocator`]. Admission becomes a
+//! deterministic power-of-two-choices draw on a salted RNG stream
+//! (`seed ^ ADMIT_SEED_SALT`, replayable like the link/crash streams);
+//! intra-shard reallocation keeps today's fast path, and the
+//! [`crate::coordinator::federation`] layer exchanges per-shard load
+//! digests on the reallocation cadence, issuing cross-shard migration
+//! orders through the very same §6.2 endpoint protocol — cross-shard
+//! links are just *worse* links ([`ShardConfig`]'s latency/bandwidth
+//! factors). The default K = 1 keeps the single fleet-global
+//! coordinator, bit-identical to the pre-shard scheduler
+//! (golden-guarded).
+//!
+//! [`ShardConfig`]: crate::config::ShardConfig
 
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap, VecDeque};
 
@@ -81,6 +99,7 @@ use crate::coordinator::backend::DecodeBackend;
 use crate::coordinator::core::{
     AckOutcome, MigrateStart, Stage1Msg, Stage2Disposition, Stage2Msg,
 };
+use crate::coordinator::federation::{plan_federation, ShardDigest};
 use crate::coordinator::metrics::LatencySummary;
 use crate::coordinator::migration::AllocRequest;
 use crate::coordinator::reallocator::{MigrationOrder, Reallocator};
@@ -106,6 +125,13 @@ impl AssertInstanceSend for SimInstance {}
 /// of the workload-generation stream, so a streaming run draws the same
 /// sample lengths as the batch-synchronous constructor.
 const ARRIVAL_SEED_SALT: u64 = 0xA441_5EED;
+
+/// Salt for the power-of-two-choices admission stream of sharded
+/// control planes ([`ClusterConfig::shards`] > 1): exactly two draws
+/// per `TaskArrival`, independent of every other stream, so a
+/// `(seed, config)` pair replays admission bit-for-bit. Single-shard
+/// fleets keep the full least-loaded scan and draw nothing.
+const ADMIT_SEED_SALT: u64 = 0xADA7_5EED;
 
 /// How migration downtime is modeled (§6.2 vs the naive ablation).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -214,6 +240,23 @@ pub struct ClusterConfig {
     /// existing suites can be driven onto the parallel engine by CI
     /// without per-test plumbing.
     pub threads: usize,
+    /// Coordinator shard count K (`[shard] count`). Instances are
+    /// partitioned into K contiguous ranges, each owning its own
+    /// admission backlog, refusal ledger and [`Reallocator`]; admission
+    /// becomes a power-of-two-choices draw and the federation layer
+    /// pairs per-shard load digests into cross-shard orders. Clamped to
+    /// `1..=instances`; the default 1 keeps the single fleet-global
+    /// control plane bit-for-bit (see the module docs).
+    pub shards: usize,
+    /// Cross-shard link latency multiplier (`[shard] link_latency_factor`,
+    /// clamped ≥ 1): a migration between instances owned by different
+    /// shards pays this factor on the endpoint link latency — shard
+    /// links are just worse links, the §6.2 protocol is unchanged.
+    pub shard_link_latency_factor: f64,
+    /// Cross-shard link bandwidth divisor (`[shard]
+    /// link_bandwidth_factor`, clamped ≥ 1), applied like
+    /// [`ClusterConfig::shard_link_latency_factor`].
+    pub shard_link_bandwidth_factor: f64,
 }
 
 impl Default for ClusterConfig {
@@ -238,6 +281,9 @@ impl Default for ClusterConfig {
             multi_dest: false,
             crash: CrashConfig::default(),
             threads: crate::config::default_engine_threads(),
+            shards: 1,
+            shard_link_latency_factor: 4.0,
+            shard_link_bandwidth_factor: 4.0,
         }
     }
 }
@@ -281,8 +327,12 @@ pub struct ClusterResult {
     pub admission_refusals: u64,
     /// Samples moved through the §6.2 protocol.
     pub migrations: u64,
-    /// Reallocation decisions taken.
+    /// Reallocation decisions taken (summed over coordinator shards).
     pub realloc_decisions: u64,
+    /// Cross-shard migration orders issued by the federation layer
+    /// ([`crate::coordinator::federation`]). Always 0 on single-shard
+    /// control planes ([`ClusterConfig::shards`] = 1).
+    pub cross_shard_orders: u64,
     /// Migration orders that ended in refusal: destination alloc
     /// failure, or a source with nothing left to move (every candidate
     /// victim already claimed by an in-flight order). Handshake-timeout
@@ -638,13 +688,49 @@ struct OrderState {
     stage2_dur: f64,
 }
 
+/// One coordinator shard of the sharded control plane: a contiguous
+/// slice of the fleet with its own admission backlog, refusal
+/// attribution and §6.1 [`Reallocator`]. A single-shard plane
+/// (`ClusterConfig::shards = 1`, the default) owns the whole fleet and
+/// reproduces the fleet-global coordinator bit-for-bit.
+struct ShardState {
+    /// First owned instance (global id).
+    lo: usize,
+    /// One past the last owned instance (global id).
+    hi: usize,
+    /// The shard's §6.1 policy, over *local* indices `0..hi-lo`.
+    realloc: Reallocator,
+    /// Shard-local admission backlog (streaming runs): arrivals that
+    /// found every owned instance at its memory budget, FIFO.
+    pending: VecDeque<SimSample>,
+    /// Backlog bound of this shard ([`ClusterConfig::pending_bound`],
+    /// split evenly across shards; the whole bound at K = 1).
+    pending_bound: usize,
+    /// Most recent admission candidate without headroom — the p2c loser
+    /// (or the shard scan's least-loaded alive member): O(1) refusal
+    /// attribution, replacing the old per-refusal fleet re-scan.
+    refusal_candidate: Option<usize>,
+}
+
 /// The discrete-event virtual cluster (see the module docs).
 pub struct SimCluster {
     /// Effective configuration (fleet sizes resolved).
     pub cfg: ClusterConfig,
     /// The simulated instances, each a full [`SimInstance`] endpoint.
     pub instances: Vec<SimInstance>,
-    realloc: Reallocator,
+    /// Coordinator shards (always ≥ 1), contiguous ownership ranges.
+    shards: Vec<ShardState>,
+    /// Instance → owning shard (all zeros at K = 1).
+    shard_of: Vec<usize>,
+    /// Total backlogged samples across all shards (O(1) emptiness
+    /// checks in the hot loops).
+    pending_total: usize,
+    /// The salted power-of-two-choices admission stream
+    /// (`seed ^ ADMIT_SEED_SALT`). `None` at K = 1, where admission
+    /// keeps the full least-loaded scan and draws nothing.
+    admit_rng: Option<Rng>,
+    /// Cross-shard migration orders issued by the federation layer.
+    cross_shard_orders: u64,
     /// Instance → tier index (all zeros for homogeneous fleets).
     tier_of: Vec<usize>,
     tier_names: Vec<String>,
@@ -655,9 +741,6 @@ pub struct SimCluster {
     /// Streaming workload: (arrival time, sample) pairs injected as
     /// `TaskArrival` events when `run` starts. Empty for batch runs.
     arrival_schedule: Vec<(f64, SimSample)>,
-    /// Cluster-level admission backlog (streaming runs): arrivals that
-    /// found every instance at its memory budget, FIFO.
-    pending: VecDeque<SimSample>,
     /// Samples offered so far (configured workload or popped arrivals).
     arrivals: u64,
     /// Arrivals refused at admission (pending queue at its bound).
@@ -793,8 +876,8 @@ impl SimCluster {
         // Uniform fleets keep the configured threshold (and the exact
         // legacy reallocator behavior); mixed fleets seed each tier's
         // knee from its cost model's roofline.
-        let realloc = if cfg.fleet.is_empty() {
-            Reallocator::new(cfg.threshold, cfg.cooldown)
+        let tier_ths: Option<Vec<usize>> = if cfg.fleet.is_empty() {
+            None
         } else {
             // Seed each tier's knee at the *configured* operating point —
             // a mid-generation sequence (prompt + half the target budget)
@@ -802,12 +885,46 @@ impl SimCluster {
             // point; online refit then tracks the observed workload.
             let knee_seq = cfg.prompt_len + cfg.max_tokens / 2;
             let knee_n = (cfg.params.max_draft / 4).max(1);
-            let ths: Vec<usize> = tiers
-                .iter()
-                .map(|t| t.cost.knee(knee_seq, knee_n).round().max(1.0) as usize)
-                .collect();
-            Reallocator::with_tiers(ths, tier_of.clone(), cfg.cooldown)
+            Some(
+                tiers
+                    .iter()
+                    .map(|t| t.cost.knee(knee_seq, knee_n).round().max(1.0) as usize)
+                    .collect(),
+            )
         };
+
+        // Sharded control plane: K contiguous ownership ranges, one
+        // Reallocator (over local indices) and one admission backlog
+        // each. K = 1 reproduces the fleet-global coordinator exactly.
+        cfg.shards = cfg.shards.max(1).min(cfg.instances.max(1));
+        let clamp_factor = |f: f64| if f.is_finite() { f.max(1.0) } else { 1.0 };
+        cfg.shard_link_latency_factor = clamp_factor(cfg.shard_link_latency_factor);
+        cfg.shard_link_bandwidth_factor = clamp_factor(cfg.shard_link_bandwidth_factor);
+        let n_shards = cfg.shards;
+        let mut shard_of = vec![0usize; cfg.instances];
+        let mut shards: Vec<ShardState> = Vec::with_capacity(n_shards);
+        for s in 0..n_shards {
+            let lo = s * cfg.instances / n_shards;
+            let hi = (s + 1) * cfg.instances / n_shards;
+            for o in shard_of[lo..hi].iter_mut() {
+                *o = s;
+            }
+            let realloc = match &tier_ths {
+                None => Reallocator::new(cfg.threshold, cfg.cooldown),
+                Some(ths) => {
+                    Reallocator::with_tiers(ths.clone(), tier_of[lo..hi].to_vec(), cfg.cooldown)
+                }
+            };
+            shards.push(ShardState {
+                lo,
+                hi,
+                realloc,
+                pending: VecDeque::new(),
+                pending_bound: cfg.pending_bound.div_ceil(n_shards),
+                refusal_candidate: None,
+            });
+        }
+        let admit_rng = (n_shards > 1).then(|| Rng::new(cfg.seed ^ ADMIT_SEED_SALT));
 
         let n_tiers = tiers.len();
         let arrivals = cfg.n_samples as u64;
@@ -824,9 +941,13 @@ impl SimCluster {
         };
         let n_instances = cfg.instances;
         SimCluster {
-            realloc,
             cfg,
             instances,
+            shards,
+            shard_of,
+            pending_total: 0,
+            admit_rng,
+            cross_shard_orders: 0,
             tier_names: tiers.into_iter().map(|t| t.name).collect(),
             tier_of,
             tier_out: vec![0; n_tiers],
@@ -834,7 +955,6 @@ impl SimCluster {
             tier_refusals: vec![0; n_tiers],
             tier_adm_refusals: vec![0; n_tiers],
             arrival_schedule: Vec::new(),
-            pending: VecDeque::new(),
             arrivals,
             admission_refusals: 0,
             migrations: 0,
@@ -991,8 +1111,11 @@ impl SimCluster {
         // A backlog can only survive the heap draining on a fleet that
         // can never admit (zero instances / zero capacity): shed it as
         // refusals so `arrivals == completed + admission_refusals` holds.
-        while self.pending.pop_front().is_some() {
-            self.refuse_admission();
+        for s in 0..self.shards.len() {
+            while self.shards[s].pending.pop_front().is_some() {
+                self.pending_total -= 1;
+                self.refuse_admission(s);
+            }
         }
         self.summarize()
     }
@@ -1015,7 +1138,7 @@ impl SimCluster {
             };
             // Streaming backlog: re-attempt admission once headroom can
             // have appeared. No-op for batch-synchronous runs.
-            if may_free_headroom && !self.pending.is_empty() {
+            if may_free_headroom && self.pending_total > 0 {
                 self.drain_pending(now, q, scheduled);
             }
             if self.run_is_complete(offered) {
@@ -1053,7 +1176,7 @@ impl SimCluster {
                 else {
                     continue;
                 };
-                if may_free_headroom && !self.pending.is_empty() {
+                if may_free_headroom && self.pending_total > 0 {
                     self.drain_pending(now, q, scheduled);
                 }
             } else {
@@ -1101,40 +1224,71 @@ impl SimCluster {
         beat: &mut Vec<(f64, usize)>,
     ) {
         beat.clear();
-        if !self.pending.is_empty() {
+        if self.pending_total > 0 {
             return; // streaming backlog pending: stay on the sequential path
         }
         // Reallocation-regime analysis (step cadence only; timed ticks
-        // arrive as rail events and end beats naturally).
+        // arrive as rail events and end beats naturally). With K shards
+        // each shard has its own cooldown clock; a beat must make every
+        // due shard's mid-beat check a provable no-op.
         let step_cadence = self.cfg.realloc_enabled && tick_period.is_none();
         let mut budget = u64::MAX;
         let mut hazard = false;
         if step_cadence {
-            let due_at = self.realloc.next_due_step();
-            if self.steps + 1 < due_at {
-                // No decision can fire before step `due_at`: cap the
-                // beat exactly on the boundary. A full beat's final
-                // commit then runs the due check with complete post-beat
-                // state, precisely as the sequential loop would.
-                budget = due_at - self.steps;
-            } else {
-                // The cooldown is over: a decision could fire at every
-                // commit. Evaluate the policy predicate on pre-beat
-                // state (this mirrors `realloc_plan`'s own gating).
-                self.realloc.note_backlog(self.pending.len());
-                let counts = self.policy_counts();
-                if self.realloc.inefficiency(&counts) {
-                    return; // the very next step decides: sequential path
+            let mut due_now = false;
+            for s in 0..self.shards.len() {
+                let due_at = self.shards[s].realloc.next_due_step();
+                if self.steps + 1 < due_at {
+                    // No decision can fire on this shard before step
+                    // `due_at`: cap the beat exactly on the earliest
+                    // boundary. A full beat's final commit then runs the
+                    // due check with complete post-beat state, precisely
+                    // as the sequential loop would.
+                    budget = budget.min(due_at - self.steps);
+                } else {
+                    due_now = true;
                 }
-                if counts
-                    .iter()
-                    .enumerate()
-                    .any(|(i, &c)| c > self.realloc.threshold_of(i))
-                {
-                    // A source exists but no destination. Steps only
-                    // retire samples, so the only way a mid-beat check
-                    // stops being a no-op is an instance dropping below
-                    // its threshold — exclude any step that could
+            }
+            if due_now {
+                // Some shard's cooldown is over: a decision could fire
+                // at every commit. Evaluate the policy predicate on
+                // pre-beat state (mirroring `realloc_plan_shard`'s own
+                // gating) and classify the fleet-wide load shape.
+                let mut have_src = false;
+                let mut have_dst = false;
+                for s in 0..self.shards.len() {
+                    let counts = self.policy_counts_shard(s);
+                    if self.steps + 1 >= self.shards[s].realloc.next_due_step() {
+                        let backlog = self.shards[s].pending.len();
+                        self.shards[s].realloc.note_backlog(backlog);
+                        if self.shards[s].realloc.inefficiency(&counts) {
+                            return; // the very next step decides: sequential path
+                        }
+                    }
+                    for (k, &c) in counts.iter().enumerate() {
+                        let th = self.shards[s].realloc.threshold_of(k);
+                        if c > th {
+                            have_src = true;
+                        }
+                        if c < th {
+                            have_dst = true;
+                        }
+                    }
+                }
+                if have_src {
+                    if self.shards.len() > 1 && have_dst {
+                        // A source in one shard and a destination in
+                        // another: the federation layer could pair them
+                        // at any mid-beat round even though each shard
+                        // is locally quiescent. Sequential path.
+                        return;
+                    }
+                    // A source exists but no destination anywhere (or a
+                    // single shard, whose src∧dst case already returned
+                    // via the inefficiency predicate). Steps only retire
+                    // samples, so the only way a mid-beat check stops
+                    // being a no-op is an instance dropping below its
+                    // threshold — exclude any step that could
                     // ([`Self::could_flip`]) and batch the rest.
                     hazard = true;
                 }
@@ -1169,7 +1323,7 @@ impl SimCluster {
     /// tokens per sample; an AR step 1 ≤ that bound).
     fn could_flip(&self, i: usize) -> bool {
         let inst = &self.instances[i];
-        let threshold = self.realloc.threshold_of(i);
+        let threshold = self.realloc_threshold_of(i);
         let count = inst.sample_count();
         if count < threshold {
             return true; // already a destination (unreachable in hazard mode)
@@ -1183,6 +1337,14 @@ impl SimCluster {
             .filter(|s| s.target_len.saturating_sub(s.generated) <= gain)
             .count();
         count - finishable < threshold
+    }
+
+    /// The reallocation threshold instance `i` is judged against —
+    /// looked up in its owning shard's [`Reallocator`] (per-shard
+    /// reallocators index members by shard-local offset).
+    fn realloc_threshold_of(&self, i: usize) -> usize {
+        let sh = &self.shards[self.shard_of[i]];
+        sh.realloc.threshold_of(i - sh.lo)
     }
 
     /// Execute every step in the beat, collecting per-step finished
@@ -1237,8 +1399,11 @@ impl SimCluster {
     ) {
         self.completed += finished_delta;
         self.steps += 1;
-        if self.cfg.realloc_enabled && tick_period.is_none() && self.realloc.due(self.steps) {
-            self.realloc_round(q);
+        if self.cfg.realloc_enabled
+            && tick_period.is_none()
+            && self.shards.iter().any(|sh| sh.realloc.due(self.steps))
+        {
+            self.realloc_round(q, true);
         }
         if !self.instances[i].is_idle() {
             q.push(self.instances[i].backend.next_ready(), EventKind::StepReady(i));
@@ -1255,7 +1420,7 @@ impl SimCluster {
     fn run_is_complete(&self, offered: u64) -> bool {
         let done = self.crash.is_some()
             && self.arrivals >= offered
-            && self.pending.is_empty()
+            && self.pending_total == 0
             && self.orders.is_empty()
             && self.all_samples_accounted();
         if done {
@@ -1343,7 +1508,8 @@ impl SimCluster {
                         self.instances[dest].cancel_inbound_order(order);
                     }
                     if self.salvaged_orders.insert(order) {
-                        self.requeue(msg.waiting_tasks, ev.time, q, scheduled);
+                        let home = self.shard_of[src];
+                        self.requeue(home, msg.waiting_tasks, ev.time, q, scheduled);
                     }
                     return None;
                 }
@@ -1411,7 +1577,7 @@ impl SimCluster {
                 }
             }
             EventKind::ReallocTick => {
-                self.realloc_round(q);
+                self.realloc_round(q, false);
                 // Re-arm only while the fleet still has live events:
                 // an empty heap means every instance is idle and no
                 // packet is in flight, i.e. the run is over.
@@ -1429,11 +1595,15 @@ impl SimCluster {
         Some(may_free_headroom)
     }
 
-    /// Admit an arriving sample: least-loaded instance with headroom
-    /// under the 4×-capacity memory budget (lowest index on ties — a
-    /// t = 0 burst therefore replays §4's round-robin initial
-    /// allocation), else the FIFO backlog, else refusal. New arrivals
-    /// never overtake a non-empty backlog.
+    /// Admit an arriving sample. On the single-shard plane (K = 1) the
+    /// destination is the least-loaded instance with headroom under the
+    /// 4×-capacity memory budget (lowest index on ties — a t = 0 burst
+    /// therefore replays §4's round-robin initial allocation), else the
+    /// FIFO backlog, else refusal. On a sharded plane (K > 1) the
+    /// destination is a deterministic power-of-two-choices draw on the
+    /// salted admission stream ([`ADMIT_SEED_SALT`]) and the sample
+    /// lands in the winner's shard (backlog and refusal alike). New
+    /// arrivals never overtake their shard's non-empty backlog.
     fn try_admit(
         &mut self,
         s: SimSample,
@@ -1441,42 +1611,110 @@ impl SimCluster {
         q: &mut EventQueue,
         scheduled: &mut [bool],
     ) {
-        if self.pending.is_empty() {
-            if let Some(i) = self.admission_dest() {
+        if self.admit_rng.is_none() && !self.shards[0].pending.is_empty() {
+            // K = 1 fast path: a non-empty backlog means the fleet had
+            // no headroom; skip the scan entirely (original behavior).
+            self.backlog_or_refuse(0, s);
+            return;
+        }
+        let (dest, shard) = self.admission_pick();
+        if let Some(i) = dest {
+            if self.shards[shard].pending.is_empty() {
                 self.admit_to(i, s, now, q, scheduled);
                 return;
             }
         }
-        if self.pending.len() < self.cfg.pending_bound {
-            self.pending.push_back(s);
+        self.backlog_or_refuse(shard, s);
+    }
+
+    /// Pick an admission destination and its owning shard.
+    ///
+    /// K = 1: the full least-loaded scan over the fleet (bit-identical
+    /// to the pre-shard engine). K > 1: exactly two draws from the
+    /// salted admission stream — the stream position is a pure function
+    /// of the arrival count, so replay is bit-for-bit at any thread
+    /// count — and the less-loaded candidate (lower `(count, index)`)
+    /// wins; the loser (or the winner, when both are full) is recorded
+    /// as the shard's refusal-attribution candidate, making refusal
+    /// accounting O(1) instead of an O(fleet) re-scan.
+    fn admission_pick(&mut self) -> (Option<usize>, usize) {
+        let draws = match self.admit_rng.as_mut() {
+            None => None,
+            Some(rng) => {
+                let n = self.instances.len();
+                Some((rng.below(n), rng.below(n)))
+            }
+        };
+        let Some((a, b)) = draws else {
+            let (dest, closest) = self.admission_scan(0);
+            self.shards[0].refusal_candidate = closest;
+            return (dest, 0);
+        };
+        let score = |i: usize| (self.instances[i].sample_count(), i);
+        let (win, lose) = if score(a) <= score(b) { (a, b) } else { (b, a) };
+        let admissible = |cl: &Self, i: usize| {
+            cl.alive[i]
+                && cl.instances[i].sample_count() < cl.instances[i].capacity() * 4
+        };
+        let dest = if admissible(self, win) {
+            Some(win)
+        } else if admissible(self, lose) {
+            Some(lose)
         } else {
-            self.refuse_admission();
+            None
+        };
+        match dest {
+            Some(i) => {
+                let shard = self.shard_of[i];
+                let other = if i == win { lose } else { win };
+                self.shards[shard].refusal_candidate = Some(other);
+                (Some(i), shard)
+            }
+            None => {
+                let shard = self.shard_of[win];
+                self.shards[shard].refusal_candidate = Some(win);
+                (None, shard)
+            }
         }
     }
 
-    /// The least-loaded *alive* instance still under its admission
-    /// budget (4× decode slots — the same bound `handle_alloc_req`
-    /// enforces for migrations), lowest index on ties; None when the
-    /// fleet is full (or entirely crashed).
-    fn admission_dest(&self) -> Option<usize> {
-        let mut best: Option<(usize, usize)> = None; // (count, index)
-        for (i, inst) in self.instances.iter().enumerate() {
+    /// The least-loaded *alive* member of shard `s` still under its
+    /// admission budget (4× decode slots — the same bound
+    /// `handle_alloc_req` enforces for migrations), lowest index on
+    /// ties; `None` when the shard is full (or entirely crashed). Also
+    /// returns the least-loaded alive member regardless of headroom —
+    /// the refusal-attribution candidate.
+    fn admission_scan(&self, s: usize) -> (Option<usize>, Option<usize>) {
+        let sh = &self.shards[s];
+        let mut best: Option<(usize, usize)> = None; // (count, index), headroom only
+        let mut closest: Option<(usize, usize)> = None; // (count, index), any alive
+        for i in sh.lo..sh.hi {
             if !self.alive[i] {
                 continue;
             }
-            let c = inst.sample_count();
-            if c >= inst.capacity() * 4 {
+            let c = self.instances[i].sample_count();
+            if closest.map_or(true, |(bc, _)| c < bc) {
+                closest = Some((c, i));
+            }
+            if c >= self.instances[i].capacity() * 4 {
                 continue;
             }
-            let better = match best {
-                None => true,
-                Some((bc, _)) => c < bc,
-            };
-            if better {
+            if best.map_or(true, |(bc, _)| c < bc) {
                 best = Some((c, i));
             }
         }
-        best.map(|(_, i)| i)
+        (best.map(|(_, i)| i), closest.map(|(_, i)| i))
+    }
+
+    /// Queue `s` on shard `shard`'s FIFO backlog if it has room, else
+    /// refuse it (attributed to that shard).
+    fn backlog_or_refuse(&mut self, shard: usize, s: SimSample) {
+        if self.shards[shard].pending.len() < self.shards[shard].pending_bound {
+            self.shards[shard].pending.push_back(s);
+            self.pending_total += 1;
+        } else {
+            self.refuse_admission(shard);
+        }
     }
 
     /// Hand a sample to instance `i`, fast-forwarding an idle instance's
@@ -1503,31 +1741,67 @@ impl SimCluster {
         }
     }
 
-    /// Move backlog samples into freed admission headroom, FIFO.
+    /// Move backlog samples into freed admission headroom, FIFO per
+    /// shard. The drain uses the shard-local least-loaded scan (not
+    /// p2c): a backlog means the shard was recently full, so the scan's
+    /// exactness matters more than its cost here, and it refreshes the
+    /// shard's refusal-attribution candidate as a side effect.
     fn drain_pending(&mut self, now: f64, q: &mut EventQueue, scheduled: &mut [bool]) {
-        while !self.pending.is_empty() {
-            let Some(i) = self.admission_dest() else { break };
-            let s = self.pending.pop_front().expect("non-empty backlog");
-            self.admit_to(i, s, now, q, scheduled);
+        for s in 0..self.shards.len() {
+            while !self.shards[s].pending.is_empty() {
+                let (dest, closest) = self.admission_scan(s);
+                self.shards[s].refusal_candidate = closest;
+                let Some(i) = dest else { break };
+                let smp =
+                    self.shards[s].pending.pop_front().expect("non-empty backlog");
+                self.pending_total -= 1;
+                self.admit_to(i, smp, now, q, scheduled);
+            }
         }
     }
 
-    /// Account one admission refusal, attributed to the least-loaded
-    /// alive tier (the closest candidate that still had no headroom);
-    /// tier 0 when the whole fleet is down.
-    fn refuse_admission(&mut self) {
+    /// Account one admission refusal against shard `shard`, attributed
+    /// to its cached candidate's tier in O(1): the p2c loser (K > 1) or
+    /// the least-loaded alive member recorded by the last scan (K = 1).
+    /// Tier 0 when the shard never had a live candidate.
+    fn refuse_admission(&mut self, shard: usize) {
         self.admission_refusals += 1;
-        let tier = self
-            .instances
-            .iter()
-            .enumerate()
-            .filter(|(i, _)| self.alive[*i])
-            .min_by_key(|(_, x)| x.sample_count())
-            .map(|(i, _)| self.tier_of[i])
+        let tier = self.shards[shard]
+            .refusal_candidate
+            .map(|i| self.tier_of[i])
             .unwrap_or(0);
         if let Some(t) = self.tier_adm_refusals.get_mut(tier) {
             *t += 1;
         }
+    }
+
+    /// Bench-only: the pre-shard O(fleet) least-loaded admission scan,
+    /// preserved verbatim so the admission microbenchmark can compare
+    /// the power-of-two-choices pick against the exact code it replaced
+    /// on the same constructed fleet.
+    #[doc(hidden)]
+    pub fn bench_admission_full_scan(&self) -> Option<usize> {
+        let mut best: Option<(usize, usize)> = None; // (count, index)
+        for (i, inst) in self.instances.iter().enumerate() {
+            if !self.alive[i] {
+                continue;
+            }
+            let c = inst.sample_count();
+            if c >= inst.capacity() * 4 {
+                continue;
+            }
+            if best.map_or(true, |(bc, _)| c < bc) {
+                best = Some((c, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Bench-only: one deterministic admission pick (the p2c draw on a
+    /// sharded plane, the full scan at K = 1).
+    #[doc(hidden)]
+    pub fn bench_admission_pick(&mut self) -> Option<usize> {
+        self.admission_pick().0
     }
 
     /// The pre-event-heap scheduler (O(n) laggard scan + linear in-flight
@@ -1589,77 +1863,109 @@ impl SimCluster {
             self.instances[i].step().expect("sim step");
             self.steps += 1;
 
-            if self.cfg.realloc_enabled && self.realloc.due(self.steps) {
+            if self.cfg.realloc_enabled
+                && self.shards.iter().any(|sh| sh.realloc.due(self.steps))
+            {
                 in_flight.extend(self.realloc_decide());
             }
         }
         self.summarize()
     }
 
-    /// Per-instance sample counts exactly as the reallocation policy
-    /// sees them. Crashed instances are neither sources (drained, count
-    /// 0) nor destinations: they are presented at exactly their
-    /// threshold so the inefficiency check and the planner both skip
-    /// them. Shared by [`Self::realloc_plan`] and the parallel engine's
+    /// Shard `s`'s member sample counts exactly as the reallocation
+    /// policy sees them (indexed by shard-local offset). Crashed
+    /// instances are neither sources (drained, count 0) nor
+    /// destinations: they are presented at exactly their threshold so
+    /// the inefficiency check and the planner both skip them. Shared by
+    /// [`Self::realloc_plan_shard`] and the parallel engine's
     /// beat-regime analysis ([`Self::select_beat`]).
-    fn policy_counts(&self) -> Vec<usize> {
-        let mut counts: Vec<usize> =
-            self.instances.iter().map(|x| x.sample_count()).collect();
-        for (i, c) in counts.iter_mut().enumerate() {
-            if !self.alive[i] {
-                *c = self.realloc.threshold_of(i);
-            }
-        }
-        counts
+    fn policy_counts_shard(&self, s: usize) -> Vec<usize> {
+        let sh = &self.shards[s];
+        (sh.lo..sh.hi)
+            .map(|i| {
+                if self.alive[i] {
+                    self.instances[i].sample_count()
+                } else {
+                    sh.realloc.threshold_of(i - sh.lo)
+                }
+            })
+            .collect()
     }
 
-    /// One reallocation decision: gather counts, bail if the fleet is
-    /// balanced, feed operating points + refit the per-tier knees, and
-    /// plan the migration orders — the classic single-destination
-    /// pairing, or the batched multi-destination order set when
-    /// [`ClusterConfig::multi_dest`] is on.
-    fn realloc_plan(&mut self) -> Vec<MigrationOrder> {
-        // Streaming: while an admission backlog exists, under-threshold
-        // instances will be topped up by admission (free), not migration
-        // — the policy reports no inefficiency until it drains. Batch
-        // runs never hold a backlog, so this is a no-op for them.
-        self.realloc.note_backlog(self.pending.len());
-        let counts = self.policy_counts();
-        if !self.realloc.inefficiency(&counts) {
+    /// One shard-local reallocation decision: gather the shard's
+    /// counts, bail if it is balanced, feed operating points + refit
+    /// the per-tier knees, and plan the migration orders — the classic
+    /// single-destination pairing, or the batched multi-destination
+    /// order set when [`ClusterConfig::multi_dest`] is on. Returned
+    /// orders carry *global* instance ids.
+    fn realloc_plan_shard(&mut self, s: usize) -> Vec<MigrationOrder> {
+        // Streaming: while this shard's admission backlog exists,
+        // under-threshold members will be topped up by admission (free),
+        // not migration — the policy reports no inefficiency until it
+        // drains. Batch runs never hold a backlog, so this is a no-op
+        // for them.
+        let backlog = self.shards[s].pending.len();
+        self.shards[s].realloc.note_backlog(backlog);
+        let counts = self.policy_counts_shard(s);
+        if !self.shards[s].realloc.inefficiency(&counts) {
             return Vec::new();
         }
         // Feed recent operating points and refresh the knee(s).
-        for (i, inst) in self.instances.iter().enumerate() {
-            if let Some(&(t, tok, live)) = inst.metrics.trace.last() {
+        let lo = self.shards[s].lo;
+        let hi = self.shards[s].hi;
+        for i in lo..hi {
+            if let Some(&(t, tok, live)) = self.instances[i].metrics.trace.last() {
                 if t > 0.0 && live > 0 {
-                    self.realloc.observe_on(i, live, tok as f64 / t);
+                    self.shards[s].realloc.observe_on(i - lo, live, tok as f64 / t);
                 }
             }
         }
-        self.realloc.refit_threshold();
+        self.shards[s].realloc.refit_threshold();
         // Per-instance capacity: 4× this instance's decode slots — the
         // same memory budget `handle_alloc_req` enforces, so mixed-batch
         // tiers advertise their true headroom. Crashed instances have
         // none.
-        let caps: Vec<usize> = self
-            .instances
-            .iter()
-            .enumerate()
-            .map(|(i, x)| if self.alive[i] { x.capacity() * 4 } else { 0 })
+        let caps: Vec<usize> = (lo..hi)
+            .map(|i| if self.alive[i] { self.instances[i].capacity() * 4 } else { 0 })
             .collect();
-        if self.cfg.multi_dest {
-            self.realloc.decide_batched(self.steps, &counts, &caps)
+        let steps = self.steps;
+        let plan = if self.cfg.multi_dest {
+            self.shards[s].realloc.decide_batched(steps, &counts, &caps)
         } else {
-            self.realloc.decide(self.steps, &counts, &caps)
+            self.shards[s].realloc.decide(steps, &counts, &caps)
+        };
+        plan.into_iter()
+            .map(|m| MigrationOrder { from: m.from + lo, to: m.to + lo, count: m.count })
+            .collect()
+    }
+
+    /// One reallocation round inside the event loop: every due shard
+    /// plans and executes its local orders, then (K > 1) the federation
+    /// layer pairs the shards' load digests into at most one cross-shard
+    /// order per shard. `step_gated` applies each shard's own cooldown
+    /// clock (step cadence); timed ticks (`step_gated = false`) run
+    /// every shard, as the single ReallocTick event always did.
+    fn realloc_round(&mut self, q: &mut EventQueue, step_gated: bool) {
+        for s in 0..self.shards.len() {
+            if step_gated && !self.shards[s].realloc.due(self.steps) {
+                continue;
+            }
+            let plan = self.realloc_plan_shard(s);
+            self.execute_orders(plan, q);
+        }
+        if self.shards.len() > 1 {
+            let plan = self.plan_federation_round();
+            self.cross_shard_orders += plan.len() as u64;
+            self.execute_orders(plan, q);
         }
     }
 
-    /// One reallocation round inside the event loop: plan, then execute
-    /// each order — synchronously on the perfect transport (Stage-2
-    /// packets scheduled straight onto the heap, today's behavior), or
-    /// as an event-driven reliable handshake on a faulty link.
-    fn realloc_round(&mut self, q: &mut EventQueue) {
-        for m in self.realloc_plan() {
+    /// Execute planned orders — synchronously on the perfect transport
+    /// (Stage-2 packets scheduled straight onto the heap, today's
+    /// behavior), or as an event-driven reliable handshake on a faulty
+    /// link.
+    fn execute_orders(&mut self, plan: Vec<MigrationOrder>, q: &mut EventQueue) {
+        for m in plan {
             if self.faulty {
                 self.start_order(m.from, m.to, m.count, q);
             } else if let Some((at, pkt)) = self.pump_migration(m.from, m.to, m.count) {
@@ -1668,31 +1974,90 @@ impl SimCluster {
         }
     }
 
+    /// Build every shard's load digest and pair them into cross-shard
+    /// migration orders ([`plan_federation`]). O(fleet) digest build +
+    /// O(K log K) pairing per round.
+    fn plan_federation_round(&self) -> Vec<MigrationOrder> {
+        let digests: Vec<ShardDigest> =
+            (0..self.shards.len()).map(|s| self.shard_digest(s)).collect();
+        plan_federation(&digests)
+    }
+
+    /// Shard `s`'s fixed-size load digest: aggregate surplus/deficit of
+    /// its live members against their thresholds, the designated export
+    /// and import endpoints (most extreme member, lowest id on ties),
+    /// and the shard's admission-backlog length.
+    fn shard_digest(&self, s: usize) -> ShardDigest {
+        let sh = &self.shards[s];
+        let mut d = ShardDigest { shard: s, ..ShardDigest::default() };
+        for i in sh.lo..sh.hi {
+            if !self.alive[i] {
+                continue;
+            }
+            let c = self.instances[i].sample_count();
+            let th = sh.realloc.threshold_of(i - sh.lo);
+            if c > th {
+                let surplus = c - th;
+                d.surplus += surplus;
+                if d.top_src.map_or(true, |(_, best)| surplus > best) {
+                    d.top_src = Some((i, surplus));
+                }
+            } else if c < th {
+                let headroom = (self.instances[i].capacity() * 4).saturating_sub(c);
+                let deficit = (th - c).min(headroom);
+                if deficit == 0 {
+                    continue;
+                }
+                d.deficit += deficit;
+                if d.top_dst.map_or(true, |(_, best)| deficit > best) {
+                    d.top_dst = Some((i, deficit));
+                }
+            }
+        }
+        d.backlog = sh.pending.len();
+        d
+    }
+
     /// The perfect-path reallocation round of the pre-heap reference
-    /// scheduler: plan + pump synchronously, returning timed Stage-2
-    /// packets. Ignores the transport fault model (the golden reference
-    /// predates the transport plane).
+    /// scheduler: every due shard plans + pumps synchronously, returning
+    /// timed Stage-2 packets. Ignores the transport fault model (the
+    /// golden reference predates the transport plane) and the federation
+    /// layer (the reference runs single-shard fleets only).
     fn realloc_decide(&mut self) -> Vec<(f64, Stage2Msg<SimBackend>)> {
-        let plan = self.realloc_plan();
         let mut packets = Vec::new();
-        for m in plan {
-            if let Some(p) = self.pump_migration(m.from, m.to, m.count) {
-                packets.push(p);
+        for s in 0..self.shards.len() {
+            if !self.shards[s].realloc.due(self.steps) {
+                continue;
+            }
+            let plan = self.realloc_plan_shard(s);
+            for m in plan {
+                if let Some(p) = self.pump_migration(m.from, m.to, m.count) {
+                    packets.push(p);
+                }
             }
         }
         packets
     }
 
     /// Effective link between two instances: the bottleneck of the two
-    /// endpoints' interconnects (latency adds at the slower NIC).
+    /// endpoints' interconnects (latency adds at the slower NIC). A
+    /// cross-shard link is just a *worse* link — latency multiplied and
+    /// bandwidth divided by the `[shard]` penalty factors — so the §6.2
+    /// seqno/limbo/retransmit machinery applies unchanged.
     fn link_of(&self, from: usize, to: usize) -> (f64, f64) {
         let a = &self.instances[from].backend.cost;
         let b = &self.instances[to].backend.cost;
-        (a.link_latency.max(b.link_latency), a.link_bandwidth.min(b.link_bandwidth))
+        let mut lat = a.link_latency.max(b.link_latency);
+        let mut bw = a.link_bandwidth.min(b.link_bandwidth);
+        if self.shard_of[from] != self.shard_of[to] {
+            lat *= self.cfg.shard_link_latency_factor;
+            bw /= self.cfg.shard_link_bandwidth_factor;
+        }
+        (lat, bw)
     }
 
     fn report_refusal(&mut self, from: usize) {
-        self.realloc.report_refusal();
+        self.shards[self.shard_of[from]].realloc.report_refusal();
         self.tier_refusals[self.tier_of[from]] += 1;
     }
 
@@ -2183,7 +2548,7 @@ impl SimCluster {
             }
         }
         salvaged.extend(extra_tasks);
-        self.requeue(salvaged, now, q, scheduled);
+        self.requeue(self.shard_of[i], salvaged, now, q, scheduled);
 
         // --- 3. Schedule the recovery (None = permanent loss). ---
         if let Some(sched) = self.crash.as_mut() {
@@ -2211,13 +2576,17 @@ impl SimCluster {
         }
     }
 
-    /// Requeue salvaged samples/tasks onto survivors: threshold deficits
-    /// first through [`Reallocator::plan_requeue`], then the admission
-    /// backlog, then refusal — so `arrivals == completions +
-    /// admission_refusals` survives any crash schedule. While a backlog
-    /// already pends, requeued samples join its tail (no overtaking).
+    /// Requeue salvaged samples/tasks onto the home shard's survivors:
+    /// threshold deficits first through [`Reallocator::plan_requeue`],
+    /// then the shard's admission backlog, then refusal — so
+    /// `arrivals == completions + admission_refusals` survives any crash
+    /// schedule. While a backlog already pends, requeued samples join
+    /// its tail (no overtaking). Salvage never crosses a shard boundary
+    /// synchronously: a lopsided post-crash shard is rebalanced by the
+    /// next federation round, over the modeled cross-shard link.
     fn requeue(
         &mut self,
+        home: usize,
         samples: Vec<SimSample>,
         now: f64,
         q: &mut EventQueue,
@@ -2228,30 +2597,26 @@ impl SimCluster {
         }
         self.samples_requeued += samples.len() as u64;
         let mut it = samples.into_iter();
-        if self.pending.is_empty() {
-            let counts: Vec<usize> = self.instances.iter().map(|x| x.sample_count()).collect();
-            let caps: Vec<usize> = self
-                .instances
-                .iter()
-                .enumerate()
-                .map(|(k, x)| if self.alive[k] { x.capacity() * 4 } else { 0 })
+        if self.shards[home].pending.is_empty() {
+            let lo = self.shards[home].lo;
+            let hi = self.shards[home].hi;
+            let counts: Vec<usize> =
+                (lo..hi).map(|k| self.instances[k].sample_count()).collect();
+            let caps: Vec<usize> = (lo..hi)
+                .map(|k| if self.alive[k] { self.instances[k].capacity() * 4 } else { 0 })
                 .collect();
-            let plan = self.realloc.plan_requeue(&counts, &caps, it.len());
+            let plan = self.shards[home].realloc.plan_requeue(&counts, &caps, it.len());
             for (dest, k) in plan {
                 for _ in 0..k {
                     let mut s = it.next().expect("plan_requeue never over-assigns");
                     s.requeued_at.get_or_insert(now);
-                    self.admit_to(dest, s, now, q, scheduled);
+                    self.admit_to(dest + lo, s, now, q, scheduled);
                 }
             }
         }
         for mut s in it {
             s.requeued_at.get_or_insert(now);
-            if self.pending.len() < self.cfg.pending_bound {
-                self.pending.push_back(s);
-            } else {
-                self.refuse_admission();
-            }
+            self.backlog_or_refuse(home, s);
         }
     }
 
@@ -2288,7 +2653,7 @@ impl SimCluster {
                 salvaged.push(s);
             }
             salvaged.extend(msg.waiting_tasks);
-            self.requeue(salvaged, now, q, scheduled);
+            self.requeue(self.shard_of[src], salvaged, now, q, scheduled);
         }
     }
 
@@ -2377,8 +2742,9 @@ impl SimCluster {
             arrivals: self.arrivals,
             admission_refusals: self.admission_refusals,
             migrations: self.migrations,
-            realloc_decisions: self.realloc.decisions,
-            refusals: self.realloc.refusals,
+            realloc_decisions: self.shards.iter().map(|sh| sh.realloc.decisions).sum(),
+            refusals: self.shards.iter().map(|sh| sh.realloc.refusals).sum(),
+            cross_shard_orders: self.cross_shard_orders,
             orders_attempted: self.orders_attempted,
             retransmits: self.retransmits,
             handshake_aborts: self
@@ -3007,6 +3373,7 @@ mod tests {
             migrations: 0,
             realloc_decisions: 0,
             refusals: 0,
+            cross_shard_orders: 0,
             orders_attempted: 0,
             retransmits: 0,
             handshake_aborts: 0,
@@ -3028,5 +3395,108 @@ mod tests {
         };
         assert_eq!(r.tokens_per_sec(), 0.0);
         assert_eq!(r.samples_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn shard_count_clamps_and_partitions_the_fleet() {
+        let mut cfg = base_cfg(16, 4);
+        cfg.shards = 64; // more shards than instances: clamp to 4
+        let c = SimCluster::new(cfg);
+        assert_eq!(c.shards.len(), 4);
+        // Ownership is an exact partition: every instance belongs to
+        // one shard whose [lo, hi) range contains it, ranges tile 0..n.
+        for (i, &s) in c.shard_of.iter().enumerate() {
+            assert!(c.shards[s].lo <= i && i < c.shards[s].hi);
+        }
+        let mut edge = 0;
+        for sh in &c.shards {
+            assert_eq!(sh.lo, edge);
+            assert!(sh.hi > sh.lo, "no empty shards after clamping");
+            edge = sh.hi;
+        }
+        assert_eq!(edge, 4);
+        // shards = 0 clamps up to 1 (the fleet-global coordinator).
+        let mut cfg = base_cfg(16, 4);
+        cfg.shards = 0;
+        let c = SimCluster::new(cfg);
+        assert_eq!(c.shards.len(), 1);
+        assert!(c.admit_rng.is_none(), "K = 1 must not open the p2c stream");
+    }
+
+    #[test]
+    fn per_shard_pending_bound_splits_evenly() {
+        let mut cfg = base_cfg(16, 4);
+        cfg.pending_bound = 10;
+        cfg.shards = 4;
+        let c = SimCluster::new(cfg);
+        // div_ceil: 10 across 4 shards → 3 each (never starves a shard).
+        assert!(c.shards.iter().all(|sh| sh.pending_bound == 3));
+        // K = 1 keeps the exact configured bound — including 0.
+        let mut cfg = base_cfg(16, 4);
+        cfg.pending_bound = 0;
+        let c = SimCluster::new(cfg);
+        assert_eq!(c.shards[0].pending_bound, 0);
+    }
+
+    #[test]
+    fn refusal_attribution_is_o1_from_the_cached_candidate() {
+        // Two tiers of two instances each; pin the O(1) attribution
+        // path: a refusal charges the cached candidate's tier without
+        // re-scanning the fleet.
+        let mut cfg = base_cfg(0, 0);
+        cfg.fleet = vec![
+            FleetTier::preset("h100", 2).unwrap(),
+            FleetTier::preset("l40s", 2).unwrap(),
+        ];
+        let mut c = SimCluster::with_assignment(cfg, vec![vec![], vec![], vec![], vec![]]);
+        c.shards[0].refusal_candidate = Some(2); // an l40s member
+        c.refuse_admission(0);
+        assert_eq!(c.admission_refusals, 1);
+        assert_eq!(c.tier_adm_refusals, vec![0, 1]);
+        // No candidate recorded yet (fleet never scanned): tier 0.
+        c.shards[0].refusal_candidate = None;
+        c.refuse_admission(0);
+        assert_eq!(c.tier_adm_refusals, vec![1, 1]);
+    }
+
+    #[test]
+    fn p2c_admission_stream_is_deterministic() {
+        let build = || {
+            let mut cfg = base_cfg(64, 8);
+            cfg.shards = 4;
+            cfg.seed = 11;
+            SimCluster::new(cfg)
+        };
+        let (mut a, mut b) = (build(), build());
+        assert!(a.admit_rng.is_some(), "K > 1 must open the salted stream");
+        let picks_a: Vec<_> = (0..32).map(|_| a.bench_admission_pick()).collect();
+        let picks_b: Vec<_> = (0..32).map(|_| b.bench_admission_pick()).collect();
+        assert_eq!(picks_a, picks_b, "same seed → same admission stream");
+        // Every pick lands in the winner's shard and is admissible.
+        for p in picks_a.into_iter().flatten() {
+            assert!(a.alive[p]);
+            assert!(p < a.instances.len());
+        }
+    }
+
+    #[test]
+    fn sharded_batch_run_conserves_and_counts_cross_shard_orders() {
+        // A skewed assignment across 4 shards of 2: local pairing cannot
+        // fix a shard whose both members are overloaded — the federation
+        // layer must move work over the (worse) cross-shard links.
+        let mut cfg = base_cfg(0, 8);
+        cfg.cooldown = 8;
+        cfg.shards = 4;
+        let mut assignment = vec![vec![600usize; 24], vec![600; 24]];
+        assignment.extend((0..6).map(|_| vec![60usize; 4]));
+        let mut c = SimCluster::with_assignment(cfg, assignment);
+        let r = c.run();
+        let done: usize = c.instances.iter().map(|x| x.finished.len()).sum();
+        assert_eq!(done, 2 * 24 + 6 * 4, "every sample finishes exactly once");
+        assert!(
+            r.cross_shard_orders > 0,
+            "an intra-shard-unfixable skew must federate"
+        );
+        assert!(r.migrations > 0);
     }
 }

@@ -38,6 +38,7 @@ fn signature(c: &SimCluster, r: &ClusterResult) -> Vec<u64> {
         r.migrations,
         r.realloc_decisions,
         r.refusals,
+        r.cross_shard_orders,
         r.orders_attempted,
         r.retransmits,
         r.handshake_aborts,

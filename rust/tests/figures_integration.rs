@@ -265,6 +265,39 @@ fn crash_figure_sweeps_crash_rate_on_the_hetero_fleet() {
 }
 
 #[test]
+fn shard_figure_sweeps_shard_count_on_the_hetero_fleet() {
+    // The shard-count sweep must render all four rows (1, 2, 4, 8), keep
+    // the ledger closed on every one (768 offered samples, completions +
+    // refusals == 768), order its queue percentiles, and report zero
+    // cross-shard federation orders on the unsharded baseline row (K = 1
+    // has no federation layer to issue them).
+    let s = figures::fig_shard(SEED);
+    assert!(s.contains("queue-p99"), "{s}");
+    let rows: Vec<Vec<f64>> = s
+        .lines()
+        .filter_map(|l| {
+            let cols: Vec<f64> = l
+                .split_whitespace()
+                .map(|t| t.parse::<f64>())
+                .collect::<Result<_, _>>()
+                .ok()?;
+            (cols.len() == 8).then_some(cols)
+        })
+        .collect();
+    assert_eq!(rows.len(), 4, "four sweep rows expected:\n{s}");
+    for (row, want_shards) in rows.iter().zip([1.0, 2.0, 4.0, 8.0]) {
+        let (shards, done, refused) = (row[0], row[1], row[2]);
+        let (p50, p99, x_shard) = (row[4], row[5], row[6]);
+        assert_eq!(shards, want_shards, "row order:\n{s}");
+        assert_eq!(done + refused, 768.0, "ledger must close in row {row:?}");
+        assert!(p50 >= 0.0 && p99 >= p50, "queue percentiles in row {row:?}");
+        assert!(x_shard >= 0.0);
+    }
+    assert_eq!(rows[0][6], 0.0, "shards=1 must issue no cross-shard orders:\n{s}");
+    assert!(!s.contains("NaN"), "{s}");
+}
+
+#[test]
 fn all_figures_render() {
     for id in figures::ALL_FIGURES {
         let out = figures::run_figure(id, SEED).unwrap();

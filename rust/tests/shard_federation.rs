@@ -1,0 +1,264 @@
+//! Golden + property suite for the sharded coordinator control plane
+//! (`ClusterConfig::shards`, the `[shard]` config section).
+//!
+//! The contract these tests pin (ISSUE 7 acceptance):
+//!
+//! * **K = 1 is bit-inert** — `shards = 1` (the default) reproduces the
+//!   fleet-global coordinator bit-for-bit on every `tests/common`
+//!   preset: same token totals, same makespan bits, same protocol and
+//!   fault counters, same per-instance finished-id placement;
+//! * **Sharded runs are deterministic** — shards ∈ {2, 4, 8} replay
+//!   bit-for-bit under a fixed seed, at threads ∈ {1, 4} (the parallel
+//!   engine's beat selection understands the per-shard cooldown clocks
+//!   and the federation layer's mid-beat hazard);
+//! * **Conservation crosses shard boundaries** — a 64-seed crash×link
+//!   sweep with cross-shard migration orders in flight still closes the
+//!   ledger: `arrivals == completions + admission_refusals`, no sample
+//!   lost or duplicated, nothing stranded in limbo;
+//! * **Federation moves work** — a skew confined to one shard (locally
+//!   unfixable: every member overloaded) is drained over the modeled
+//!   cross-shard links.
+
+mod common;
+
+use rlhfspec::data::arrivals::ArrivalProcess;
+use rlhfspec::sim::cluster::{ClusterConfig, SimCluster};
+use rlhfspec::sim::crash::CrashConfig;
+use rlhfspec::sim::ClusterResult;
+use rlhfspec::testutil;
+use rlhfspec::utils::rng::Rng;
+
+/// Full bit-level signature of a run (the `engine_parity` signature
+/// plus the federation counter): every result counter and the
+/// per-instance finished-sample placement in finish order.
+fn signature(c: &SimCluster, r: &ClusterResult) -> Vec<u64> {
+    let mut sig = vec![
+        r.total_tokens,
+        r.makespan.to_bits(),
+        r.n_samples as u64,
+        r.arrivals,
+        r.admission_refusals,
+        r.migrations,
+        r.realloc_decisions,
+        r.refusals,
+        r.cross_shard_orders,
+        r.orders_attempted,
+        r.retransmits,
+        r.handshake_aborts,
+        r.link_drops,
+        r.link_dups,
+        r.crashes,
+        r.recoveries,
+        r.samples_requeued,
+        r.requeue_delay_mean.to_bits(),
+        r.stage1_acks,
+        r.bounced_orders,
+        r.migration_downtime.to_bits(),
+        r.mean_accepted.to_bits(),
+    ];
+    for inst in &c.instances {
+        sig.push(u64::MAX); // per-instance delimiter
+        sig.extend(inst.finished.iter().map(|s| s.id));
+    }
+    sig
+}
+
+fn run_sig(mut c: SimCluster) -> Vec<u64> {
+    let r = c.run();
+    signature(&c, &r)
+}
+
+/// Every `tests/common` preset, batch and streaming, as named builders
+/// taking the (shards, threads) plane coordinates.
+fn presets() -> Vec<(&'static str, Box<dyn Fn(usize, usize) -> SimCluster>)> {
+    fn shaped(mut cfg: ClusterConfig, shards: usize, threads: usize) -> ClusterConfig {
+        cfg.shards = shards;
+        cfg.threads = threads;
+        cfg
+    }
+    vec![
+        (
+            "golden8",
+            Box::new(|s, t| SimCluster::new(shaped(common::golden8(3), s, t))),
+        ),
+        (
+            "golden8_ar",
+            Box::new(|s, t| SimCluster::new(shaped(common::golden8_ar(), s, t))),
+        ),
+        (
+            "skew4",
+            Box::new(|s, t| {
+                SimCluster::with_assignment(
+                    shaped(common::skew4(7, 1024), s, t),
+                    common::skew4_assignment(),
+                )
+            }),
+        ),
+        (
+            "hetero_fleet",
+            Box::new(|s, t| {
+                SimCluster::new(shaped(common::hetero_fleet(11, 256, 384), s, t))
+            }),
+        ),
+        (
+            "streaming-poisson",
+            Box::new(|s, t| {
+                let mut cfg = shaped(common::hetero_fleet(17, 384, 256), s, t);
+                cfg.pending_bound = 64;
+                SimCluster::streaming(cfg, &ArrivalProcess::poisson(48.0))
+                    .expect("streaming config")
+            }),
+        ),
+    ]
+}
+
+#[test]
+fn shards_1_is_bit_inert_on_every_preset() {
+    // `shards = 1` must be indistinguishable from the pre-shard engine.
+    // The default config *is* shards = 1 (pinned by every other golden
+    // suite); asserting explicit-1 == default keeps that anchor honest
+    // if the default ever moves.
+    for (name, build) in presets() {
+        let default_sig = run_sig(build(ClusterConfig::default().shards, 1));
+        let explicit_sig = run_sig(build(1, 1));
+        assert_eq!(default_sig, explicit_sig, "{name}: shards=1 diverged");
+    }
+}
+
+#[test]
+fn sharded_runs_replay_bit_for_bit_across_threads() {
+    // shards ∈ {2, 4, 8} × threads ∈ {1, 4}: a fixed seed replays the
+    // sharded plane bit-for-bit, and the parallel engine stays inert —
+    // the beat-safety analysis must treat a cross-shard (source,
+    // destination) pair as a hazard even when each shard is locally
+    // quiescent.
+    for (name, build) in presets() {
+        for shards in [2usize, 4, 8] {
+            let base = run_sig(build(shards, 1));
+            let replay = run_sig(build(shards, 1));
+            assert_eq!(base, replay, "{name}: shards={shards} replay diverged");
+            let parallel = run_sig(build(shards, 4));
+            assert_eq!(
+                base, parallel,
+                "{name}: shards={shards} threads=4 diverged from sequential"
+            );
+        }
+    }
+}
+
+#[test]
+fn federation_drains_a_locally_unfixable_skew() {
+    // Both members of shard 0 are overloaded, so intra-shard pairing
+    // can never fire (no local destination); the work must cross shard
+    // boundaries through the federation layer's digest pairing.
+    let mut cfg = ClusterConfig {
+        instances: 8,
+        cooldown: 8,
+        n_samples: 0,
+        max_tokens: 512,
+        seed: 23,
+        ..Default::default()
+    };
+    cfg.shards = 4;
+    let mut assignment = vec![vec![600usize; 24], vec![600; 24]];
+    assignment.extend((0..6).map(|_| vec![60usize; 4]));
+    let mut c = SimCluster::with_assignment(cfg, assignment);
+    let r = c.run();
+    let done: usize = c.instances.iter().map(|x| x.finished.len()).sum();
+    assert_eq!(done, 2 * 24 + 6 * 4, "every sample finishes exactly once");
+    assert!(r.cross_shard_orders > 0, "federation must issue cross-shard orders");
+    assert!(r.migrations > 0, "cross-shard orders must complete as migrations");
+}
+
+#[test]
+fn property_sharded_crash_link_sweep_conserves() {
+    // The headline sweep: 64 seeded crash×link schedules on a sharded
+    // 64-instance skewed fleet with cross-shard orders in flight.
+    // Whatever the schedule kills — an exporting shard's designated
+    // source, an importing shard's destination with limbo in flight, a
+    // whole shard — every sample completes once or is refused.
+    testutil::check("shard-federation-conservation-64", 64, |rng| {
+        let instances = 64usize;
+        let (assignment, n) = common::skewed_big_fleet(rng, instances);
+        let mut cfg = ClusterConfig {
+            instances,
+            cooldown: (8 + rng.below(17)) as u64,
+            n_samples: 0,
+            max_tokens: 320,
+            seed: rng.below(1 << 30) as u64,
+            transport: common::random_transport(rng),
+            crash: CrashConfig {
+                rate_per_sec: 0.05 + rng.f64() * 0.4,
+                recover_secs: if rng.chance(0.2) { 0.0 } else { 0.3 + rng.f64() * 2.0 },
+                max_crashes: 4 + rng.below(29),
+            },
+            multi_dest: rng.chance(0.5),
+            ..Default::default()
+        };
+        cfg.shards = [2, 4, 8][rng.below(3)];
+        cfg.threads = if rng.chance(0.5) { 1 } else { 4 };
+        let mut c = SimCluster::with_assignment(cfg, assignment);
+        let r = c.run();
+        // Full conservation: unique finished ids, closed ledger,
+        // nothing resident or in limbo anywhere in the fleet.
+        assert_eq!(r.arrivals, n, "offered-sample count");
+        let mut ids: Vec<u64> = c
+            .instances
+            .iter()
+            .flat_map(|x| x.finished.iter().map(|s| s.id))
+            .collect();
+        ids.sort_unstable();
+        let total = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), total, "duplicated finished ids");
+        assert!(ids.iter().all(|&id| id < n), "unknown finished id");
+        assert_eq!(
+            total as u64 + r.admission_refusals,
+            n,
+            "ledger must close: completions + refusals == arrivals"
+        );
+        assert_eq!(total, r.n_samples, "result counts completed samples");
+        for inst in &c.instances {
+            assert!(inst.is_idle(), "instance {} still holds samples", inst.id);
+            assert_eq!(
+                inst.limbo_count(),
+                0,
+                "instance {} holds unconfirmed limbo samples",
+                inst.id
+            );
+        }
+    });
+}
+
+#[test]
+fn cross_shard_links_are_worse_links() {
+    // The same federated skew, run with a harsher `[shard]` link
+    // penalty, must not finish earlier: cross-shard Stage-2 packets pay
+    // the modeled latency/bandwidth factors.
+    let build = |lat: f64, bw: f64| {
+        let mut cfg = ClusterConfig {
+            instances: 8,
+            cooldown: 8,
+            n_samples: 0,
+            max_tokens: 512,
+            seed: 23,
+            ..Default::default()
+        };
+        cfg.shards = 4;
+        cfg.shard_link_latency_factor = lat;
+        cfg.shard_link_bandwidth_factor = bw;
+        let mut assignment = vec![vec![600usize; 24], vec![600; 24]];
+        assignment.extend((0..6).map(|_| vec![60usize; 4]));
+        let mut c = SimCluster::with_assignment(cfg, assignment);
+        c.run()
+    };
+    let mild = build(1.0, 1.0);
+    let harsh = build(64.0, 64.0);
+    assert!(mild.cross_shard_orders > 0 && harsh.cross_shard_orders > 0);
+    assert!(
+        harsh.makespan >= mild.makespan,
+        "worse cross-shard links cannot speed the run up (mild {} harsh {})",
+        mild.makespan,
+        harsh.makespan
+    );
+}

@@ -20,21 +20,29 @@ still under the hard 1% wall.
 
 With `--min-parallel-speedup`, also gates the parallel event engine:
 each `core/cluster/<name>/threadsN` row is compared against its
-sequential `core/cluster/<name>` row, and the largest-N row must reach
-the floor (sequential mean_ns / threadsN mean_ns >= floor). The gate is
-*core-aware*: the bench records the machine it ran on in a
-`meta/host-cpus` row, and a threadsN row is only enforced when that
-host had >= N CPUs — a speedup "regression" measured on a 1-core
-container is a fact about the container, not the engine. Rows measured
-on a capable host are enforced unconditionally; absent rows are
-reported (the bench hasn't been regenerated since the rows were added)
-rather than failed, so the floor binds from the first multicore
-regeneration onward.
+sequential `core/cluster/<name>` row. The gate is *core-aware*: the
+bench records the machine it ran on in a `meta/host-cpus` row, and the
+floor binds on the widest threadsN row the host could actually run
+(largest N with host CPUs >= N), with the floor scaled proportionally
+(`floor * N / widest_N`) so a 4-core host enforces a 4-thread floor
+instead of report-and-skipping the 8-thread row it cannot measure.
+Rows wider than the host are reported only; absent rows are reported
+(the bench hasn't been regenerated since the rows were added) rather
+than failed, so the floor binds from the first multicore regeneration
+onward.
+
+With `--min-admission-speedup`, also gates the sharded admission path:
+the `core/admission/p2c` row (power-of-two-choices pick) must beat the
+`core/admission/full-scan` row (the O(fleet) least-loaded scan it
+replaced) by at least the floor (scan mean_ns / p2c mean_ns >= floor).
+Absent rows are reported, not failed, so the gate binds from the first
+regeneration that carries them.
 
 Usage: check_bench_budget.py [BENCH_core.json] [--budget-pct 1.0]
                              [--baseline BENCH_baseline.json]
                              [--regress-factor 3.0]
                              [--min-parallel-speedup 4.0]
+                             [--min-admission-speedup 10.0]
 
 Exit codes: 0 = within budget, 1 = over budget/regressed, 2 = malformed
 input (missing rows count as malformed — a silently skipped gate is
@@ -96,28 +104,54 @@ def check_parallel_speedup(by_name, floor):
         if seq_ns is None or seq_ns <= 0:
             failures.append(f"{base} (threadsN rows without a sequential row)")
             continue
-        # The floor binds on the widest row; narrower rows are reported
-        # for the trend line only.
-        gated_n = max(thread_counts)
+        widest_n = max(thread_counts)
+        # The floor binds on the widest row the bench host could
+        # actually run, scaled to what that width can deliver — a
+        # 4-core host enforces `floor * 4 / widest` on threads4 instead
+        # of report-and-skipping the threads8 row it cannot measure.
+        supported = [n for n in thread_counts
+                     if host_cpus is not None and host_cpus >= n]
+        gated_n = max(supported) if supported else None
         for n in sorted(thread_counts):
             par_ns = by_name[f"{base}/threads{n}"]
             speedup = seq_ns / par_ns if par_ns > 0 else float("inf")
+            eff_floor = floor * n / widest_n
             if host_cpus is None:
                 verdict = "unenforced (no meta/host-cpus row in this artifact)"
             elif host_cpus < n:
                 verdict = (f"unenforced (bench host had {host_cpus:.0f} CPUs "
                            f"< {n} threads)")
             elif n != gated_n:
-                verdict = "reported (floor binds on the widest row)"
-            elif speedup >= floor:
-                verdict = f"OK (floor {floor}x)"
+                verdict = "reported (floor binds on the widest supported row)"
+            elif speedup >= eff_floor:
+                verdict = f"OK (floor {eff_floor:.2f}x at {n}/{widest_n} threads)"
             else:
-                verdict = f"BELOW FLOOR {floor}x"
+                verdict = f"BELOW FLOOR {eff_floor:.2f}x"
                 failures.append(f"{base}/threads{n} "
-                                f"({speedup:.2f}x < {floor}x)")
+                                f"({speedup:.2f}x < {eff_floor:.2f}x)")
             print(f"{base}/threads{n}: {seq_ns / 1e6:.1f}ms -> "
                   f"{par_ns / 1e6:.1f}ms = {speedup:.2f}x speedup — {verdict}")
     return failures
+
+
+def check_admission_speedup(by_name, floor):
+    """Gate the power-of-two-choices admission pick against the full
+    least-loaded fleet scan it replaced. Returns failure strings."""
+    scan_ns = by_name.get("core/admission/full-scan")
+    p2c_ns = by_name.get("core/admission/p2c")
+    if scan_ns is None or p2c_ns is None:
+        print("admission-speedup gate: core/admission/{full-scan,p2c} rows "
+              "absent (bench not regenerated since the sharded control "
+              "plane landed) — skipping")
+        return []
+    speedup = scan_ns / p2c_ns if p2c_ns > 0 else float("inf")
+    verdict = f"OK (floor {floor}x)" if speedup >= floor \
+        else f"BELOW FLOOR {floor}x"
+    print(f"core/admission: full-scan {scan_ns / 1e3:.2f}µs vs p2c "
+          f"{p2c_ns / 1e3:.3f}µs = {speedup:.1f}x speedup — {verdict}")
+    if speedup < floor:
+        return [f"core/admission/p2c ({speedup:.2f}x < {floor}x)"]
+    return []
 
 
 def main() -> int:
@@ -130,10 +164,13 @@ def main() -> int:
     ap.add_argument("--regress-factor", type=float, default=3.0,
                     help="max allowed overhead-%% growth vs the baseline")
     ap.add_argument("--min-parallel-speedup", type=float, default=None,
-                    help="fail when the widest core/cluster/*/threadsN row "
-                         "falls below this speedup over its sequential row "
-                         "(enforced only for rows benched on a host with "
-                         ">= N CPUs, per the meta/host-cpus row)")
+                    help="fail when the widest host-supported "
+                         "core/cluster/*/threadsN row falls below this "
+                         "speedup (scaled by N/widest-N) over its "
+                         "sequential row, per the meta/host-cpus row")
+    ap.add_argument("--min-admission-speedup", type=float, default=None,
+                    help="fail when core/admission/p2c is not at least this "
+                         "many times faster than core/admission/full-scan")
     args = ap.parse_args()
 
     by_name = load_rows(args.path)
@@ -193,6 +230,10 @@ def main() -> int:
     if args.min_parallel_speedup is not None:
         failures.extend(
             check_parallel_speedup(by_name, args.min_parallel_speedup))
+
+    if args.min_admission_speedup is not None:
+        failures.extend(
+            check_admission_speedup(by_name, args.min_admission_speedup))
 
     if failures:
         print(f"FAIL: {len(failures)} row(s) over the "
