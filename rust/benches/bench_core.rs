@@ -35,6 +35,7 @@ use rlhfspec::sim::acceptance::AcceptanceModel;
 use rlhfspec::sim::cluster::{ClusterConfig, FleetTier, SimCluster};
 use rlhfspec::sim::cost_model::CostModel;
 use rlhfspec::sim::engine::{SimInstance, SimMode, SimParams, SimSample};
+use rlhfspec::sim::rlhf_loop::{run_loop, LoopMode, Placement};
 
 fn hetero_cfg(instances_per_tier: usize, n_samples: usize) -> ClusterConfig {
     ClusterConfig {
@@ -254,6 +255,47 @@ fn main() {
             res.cross_shard_orders,
         );
         black_box(res.total_tokens);
+    });
+    results.push(r);
+
+    // ---- RLHF loop plane: multi-iteration async training loop ---------
+    // The event-driven loop (TrainStart/TrainEnd barriers, colocated
+    // preemption, drafter staleness) rides the same event heap; this row
+    // records its whole-loop wall time and cross-checks the loop ledger
+    // on every bench run. Smoke mode scales the fleet down but walks the
+    // identical code path.
+    let (loop_per_tier, loop_samples, loop_iters) =
+        if smoke { (4, 256, 4) } else { (32, 4096, 16) };
+    let r = bench("core/rlhf/e2e-loop", 0, 1, || {
+        let mut cfg = hetero_cfg(loop_per_tier, loop_samples);
+        cfg.rlhf_loop.iters = loop_iters;
+        cfg.rlhf_loop.samples_per_iter = loop_samples / (2 * loop_iters);
+        cfg.rlhf_loop.mode = LoopMode::Async;
+        cfg.rlhf_loop.placement = Placement::Colocated;
+        cfg.rlhf_loop.accept_decay = 0.95;
+        cfg.rlhf_loop.refresh_every = 4;
+        cfg.rlhf_loop.refresh_secs = 0.25;
+        let out = run_loop(&cfg);
+        assert_eq!(
+            out.iterations_done, loop_iters as u64,
+            "every configured training step must run"
+        );
+        let res = out.cluster.as_ref().expect("async outcome carries the cluster result");
+        assert_eq!(
+            out.trained_samples + out.staleness_refusals + out.pool_leftover,
+            res.n_samples as u64,
+            "loop ledger must close"
+        );
+        println!(
+            "  rlhf loop: {} iterations, {} trained, {} preemptions, \
+             {} refreshes over {:.1} virtual s",
+            out.iterations_done,
+            out.trained_samples,
+            out.preemptions,
+            out.drafter_refreshes,
+            out.total_secs,
+        );
+        black_box(out.total_secs);
     });
     results.push(r);
 

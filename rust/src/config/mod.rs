@@ -12,6 +12,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::transport::TransportConfig;
 use crate::sim::crash::CrashConfig;
+use crate::sim::rlhf_loop::RlhfLoopConfig;
 
 /// Speculative generation knobs (paper §2.2, §5).
 #[derive(Clone, Debug)]
@@ -263,6 +264,11 @@ pub struct RunConfig {
     /// [`ShardConfig`]). `count = 1` by default: one fleet-global
     /// coordinator, bit-identical to the pre-shard engine.
     pub shard: ShardConfig,
+    /// `[rlhf_sim]` — event-driven multi-iteration RLHF loop on the
+    /// simulated cluster (see [`RlhfLoopConfig`]). `iters = 0` by
+    /// default: the loop plane never arms and every run is bit-identical
+    /// to a plain generation run.
+    pub rlhf_sim: RlhfLoopConfig,
     pub seed: u64,
 }
 
@@ -346,6 +352,9 @@ impl RunConfig {
                 }
                 if let Some(rest) = key.strip_prefix("shard.") {
                     return self.shard.set(rest, val);
+                }
+                if let Some(rest) = key.strip_prefix("rlhf_sim.") {
+                    return self.rlhf_sim.set(rest, val);
                 }
                 bail!("unknown config key")
             }
@@ -513,6 +522,44 @@ mod tests {
         assert_eq!(c.shard.latency_factor(), 1.0);
         assert!(c.set("shard.count", "abc").is_err());
         assert!(c.set("shard.nope", "1").is_err());
+    }
+
+    #[test]
+    fn rlhf_sim_section_parses() {
+        use crate::sim::rlhf_loop::{LoopMode, Placement};
+        let src = r#"
+            [rlhf_sim]
+            iters = 4
+            samples_per_iter = 32
+            mode = "async"
+            placement = "disaggregated"
+            train_instances = 2
+            train_tier = "h100"
+            staleness_bound = 1
+            accept_decay = 0.9
+            refresh_every = 2
+            refresh_secs = 0.5
+        "#;
+        let mut kv = BTreeMap::new();
+        parse_toml_subset(src, &mut kv).unwrap();
+        let cfg = RunConfig::load(None, &kv).unwrap();
+        assert!(!cfg.rlhf_sim.is_off());
+        assert_eq!(cfg.rlhf_sim.iters, 4);
+        assert_eq!(cfg.rlhf_sim.samples_per_iter, 32);
+        assert_eq!(cfg.rlhf_sim.mode, LoopMode::Async);
+        assert_eq!(cfg.rlhf_sim.placement, Placement::Disaggregated);
+        assert_eq!(cfg.rlhf_sim.train_instances, 2);
+        assert_eq!(cfg.rlhf_sim.train_tier, "h100");
+        assert_eq!(cfg.rlhf_sim.staleness_bound, 1);
+        assert_eq!(cfg.rlhf_sim.accept_decay, 0.9);
+        assert_eq!(cfg.rlhf_sim.refresh_every, 2);
+        assert_eq!(cfg.rlhf_sim.refresh_secs, 0.5);
+        // Defaults keep the loop plane disarmed (today's behavior).
+        assert!(RunConfig::default().rlhf_sim.is_off());
+        let mut bad = RunConfig::default();
+        assert!(bad.set("rlhf_sim.nope", "1").is_err());
+        assert!(bad.set("rlhf_sim.iters", "abc").is_err());
+        assert!(bad.set("rlhf_sim.mode", "sideways").is_err());
     }
 
     #[test]

@@ -51,6 +51,11 @@ pub struct InstanceMetrics {
     /// samples were salvaged and requeued onto survivors; see
     /// `InstanceCore::crash_drain`).
     pub crashes: u64,
+    /// Times this instance was parked by the RLHF loop plane so its slot
+    /// could run a colocated training step (samples salvaged/requeued via
+    /// the same `crash_drain` machinery as a crash, but no recovery draw —
+    /// the instance revives deterministically at the weight barrier).
+    pub preemptions: u64,
     /// Σ seconds between a crash and the instant each crash-requeued
     /// sample became decodable again *on this instance* (queueing at
     /// the survivor + the re-prefill), recorded at prefill time.

@@ -12,7 +12,8 @@ use crate::data::arrivals::ArrivalProcess;
 use crate::data::lengths::LengthModel;
 use crate::sim::cluster::{ClusterConfig, FleetTier, SimCluster};
 use crate::sim::cost_model::CostModel;
-use crate::sim::e2e::{run_system, StageModel, SystemKind};
+use crate::sim::e2e::{run_loop_scenario, run_system, StageModel, SystemKind};
+use crate::sim::rlhf_loop::{LoopMode, Placement};
 use crate::sim::engine::{SimInstance, SimMode, SimParams, SimSample};
 use crate::sim::acceptance::AcceptanceModel;
 use crate::utils::rng::Rng;
@@ -914,6 +915,73 @@ pub fn fig_shard(seed: u64) -> String {
     out
 }
 
+// ---------------------------------------------------------------------------
+// Loop plane — event-driven multi-iteration RLHF loop (ROADMAP item 3)
+// ---------------------------------------------------------------------------
+
+pub fn fig_e2e_loop(seed: u64) -> String {
+    let mut out = header(
+        "Loop plane",
+        "multi-iteration RLHF loop: iteration time + time-to-reward, sync vs async, colocated vs disaggregated",
+        seed,
+    );
+    let _ = writeln!(
+        out,
+        "{:<22} {:>6} {:>10} {:>10} {:>8} {:>7} {:>7} {:>7} {:>7}",
+        "scenario", "iters", "iter-secs", "reward-s", "trained", "stale", "barr", "refr", "preempt"
+    );
+    for (mode, placement) in [
+        (LoopMode::Sync, Placement::Colocated),
+        (LoopMode::Sync, Placement::Disaggregated),
+        (LoopMode::Async, Placement::Colocated),
+        (LoopMode::Async, Placement::Disaggregated),
+    ] {
+        let r = run_loop_scenario(mode, placement, seed);
+        let label = format!(
+            "{}/{}",
+            match mode {
+                LoopMode::Sync => "sync",
+                LoopMode::Async => "async",
+            },
+            match placement {
+                Placement::Colocated => "colocated",
+                Placement::Disaggregated => "disaggregated",
+            }
+        );
+        // Every completed sample must be accounted for: trained, refused
+        // stale, or still pooled when the loop hit its iteration budget.
+        if let Some(c) = &r.cluster {
+            assert_eq!(
+                r.trained_samples + r.staleness_refusals + r.pool_leftover,
+                c.n_samples as u64,
+                "loop ledger must close at {label}"
+            );
+        }
+        let _ = writeln!(
+            out,
+            "{:<22} {:>6} {:>10.2} {:>10.2} {:>8} {:>7} {:>7} {:>7} {:>7}",
+            label,
+            r.iterations_done,
+            r.mean_iteration_secs(),
+            r.total_secs,
+            r.trained_samples,
+            r.staleness_refusals,
+            r.barriers,
+            r.drafter_refreshes,
+            r.preemptions,
+        );
+    }
+    let _ = writeln!(
+        out,
+        "sync = on-policy barriers (each iteration an independent cluster run — the \
+         staleness-off case is bit-identical to N plain runs, pinned by tests/rlhf_loop.rs); \
+         async = off-policy TrainStart/TrainEnd events riding the cluster heap, with \
+         colocated training parking instances through the crash-plane salvage path and \
+         disaggregated training running on its own modeled tier"
+    );
+    out
+}
+
 /// Dispatch by figure id.
 pub fn run_figure(id: &str, seed: u64) -> Option<String> {
     Some(match id {
@@ -934,12 +1002,13 @@ pub fn run_figure(id: &str, seed: u64) -> Option<String> {
         "fault" | "unreliable-link" => fig_fault(seed),
         "crash" | "instance-crash" => fig_crash(seed),
         "shard" | "sharded-control-plane" => fig_shard(seed),
+        "e2e-loop" | "rlhf-loop" => fig_e2e_loop(seed),
         _ => return None,
     })
 }
 
 /// Every figure id `run_figure` accepts (the `fig all` order).
-pub const ALL_FIGURES: [&str; 17] = [
+pub const ALL_FIGURES: [&str; 18] = [
     "2", "3", "4", "5", "7", "9", "11", "12", "13", "14", "table1", "overhead", "hetero",
-    "streaming", "fault", "crash", "shard",
+    "streaming", "fault", "crash", "shard", "e2e-loop",
 ];

@@ -128,6 +128,22 @@ mod tests {
         let r = to_row(&sample(vec![1; 4], vec![2; 10]), 8);
         assert_eq!(r.resp_len, 4);
         assert_eq!(r.tokens.len(), 8);
+        // Truncation fills the row exactly: no pad survives, the mask
+        // covers precisely the kept response tokens.
+        assert!(r.tokens.iter().all(|&t| t != tokenizer::PAD));
+        assert_eq!(r.mask.iter().filter(|&&m| m == 1.0).count(), 4);
+        assert_eq!(r.last_pos(), 7);
+    }
+
+    #[test]
+    fn row_truncates_oversized_prompt_keeping_a_response_slot() {
+        // A prompt at/over train_seq is clamped to seq-1 so at least one
+        // response token survives (the loss needs a response position).
+        let r = to_row(&sample((0..10).collect(), vec![42, 43]), 8);
+        assert_eq!(r.prompt_len, 7);
+        assert_eq!(r.resp_len, 1);
+        assert_eq!(r.tokens[7], 42);
+        assert_eq!(r.mask, vec![0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0]);
     }
 
     #[test]
@@ -141,6 +157,25 @@ mod tests {
         // filler rows must be fully masked out
         assert!(batches[1][2].mask.iter().all(|&m| m == 0.0));
         assert!(batches[1][3].mask.iter().all(|&m| m == 0.0));
+        // ... and contribute no response tokens to any loss term.
+        assert_eq!(batches[1][2].resp_len, 0);
+        assert_eq!(batches[1][3].resp_len, 0);
+        // the real remainder row is untouched
+        assert_eq!(batches[1][0].sample_id, rows[4].sample_id);
+        assert!(batches[1][0].mask.iter().any(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn batching_exact_multiple_adds_no_filler() {
+        let rows: Vec<Row> = (0..8)
+            .map(|i| to_row(&sample(vec![i as i32], vec![1]), 4))
+            .collect();
+        let batches = batch_rows(&rows, 4);
+        assert_eq!(batches.len(), 2);
+        for b in &batches {
+            assert_eq!(b.len(), 4);
+            assert!(b.iter().all(|r| r.mask.iter().any(|&m| m == 1.0)));
+        }
     }
 
     #[test]
@@ -160,6 +195,23 @@ mod tests {
     fn empty_response_yields_no_mask() {
         let r = to_row(&sample(vec![1, 2, 3], vec![]), 6);
         let (rw, m) = shaped_rewards(&r, 1.0, &[0.0; 5], &[0.0; 5], 0.1);
+        assert!(m.iter().all(|&x| x == 0.0));
+        assert!(rw.iter().all(|&x| x == 0.0));
+        // ... and the terminal reward is dropped with it, not misplaced
+        // onto a prompt row.
+        assert_eq!(r.resp_len, 0);
+        assert_eq!(r.last_pos(), 2);
+    }
+
+    #[test]
+    fn empty_prompt_yields_no_rewards() {
+        // prompt_len == 0 has no "row predicting the first response
+        // token" (row -1); the shaper must return all-zero rather than
+        // underflow the first-response-row index.
+        let r = to_row(&sample(vec![], vec![4, 5]), 6);
+        assert_eq!(r.prompt_len, 0);
+        assert_eq!(r.resp_len, 2);
+        let (rw, m) = shaped_rewards(&r, 3.0, &[-1.0; 5], &[-2.0; 5], 0.1);
         assert!(m.iter().all(|&x| x == 0.0));
         assert!(rw.iter().all(|&x| x == 0.0));
     }

@@ -38,6 +38,11 @@ pub fn gae(
 
 /// Normalize advantages to zero mean / unit variance over masked rows
 /// (standard PPO stabilization).
+///
+/// Degenerate rows are a no-op, never a NaN: with zero masked rows the
+/// mean would be `0/0`, and with one the variance is identically zero,
+/// so both fall through the `n < 2` guard and the advantages (filler
+/// rows included) are left exactly as [`gae`] produced them.
 pub fn normalize_advantages(adv: &mut [f32], mask: &[f32]) {
     let mut n = 0f64;
     let mut sum = 0f64;
@@ -47,6 +52,9 @@ pub fn normalize_advantages(adv: &mut [f32], mask: &[f32]) {
             n += 1.0;
         }
     }
+    // All-masked (n = 0) and single-row (n = 1) inputs have no defined
+    // normalization; bail before dividing by n (pinned by the
+    // degenerate-row tests below).
     if n < 2.0 {
         return;
     }
@@ -124,5 +132,27 @@ mod tests {
         assert_eq!(adv[3], 0.0);
         let var = (adv[0].powi(2) + adv[1].powi(2) + adv[2].powi(2)) / 3.0;
         assert!((var - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn all_masked_row_is_a_no_op_not_a_nan() {
+        // A fully-padded filler row (batch_rows zeroes its mask) must
+        // pass through normalization untouched — no 0/0 mean.
+        let mut adv = vec![0.5, -0.25, 3.0];
+        let mask = vec![0.0, 0.0, 0.0];
+        normalize_advantages(&mut adv, &mask);
+        assert_eq!(adv, vec![0.5, -0.25, 3.0]);
+        assert!(adv.iter().all(|a| a.is_finite()));
+    }
+
+    #[test]
+    fn single_masked_row_is_a_no_op_not_a_blowup() {
+        // One masked row has zero variance; dividing by the epsilon
+        // floor would inflate it ~1e6× — the guard must skip instead.
+        let mut adv = vec![0.0, 0.7, 0.0];
+        let mask = vec![0.0, 1.0, 0.0];
+        normalize_advantages(&mut adv, &mask);
+        assert_eq!(adv[1], 0.7);
+        assert!(adv.iter().all(|a| a.is_finite()));
     }
 }

@@ -26,18 +26,26 @@ pub struct AcceptanceModel {
     pub decay: f64,
     /// Confidence jitter.
     pub noise: f64,
+    /// Fleet-wide multiplicative acceptance scale (drafter staleness).
+    ///
+    /// `1.0` = fresh drafter. The RLHF loop plane lowers this at each
+    /// weight-update barrier to model acceptance decay as the target
+    /// model drifts away from the drafter; a drafter refresh restores
+    /// it. `scale == 1.0` is exactly bit-inert: `p * 1.0 == p` in IEEE
+    /// and the fast path skips the clamp entirely.
+    pub scale: f64,
 }
 
 impl AcceptanceModel {
     /// Open-chat workload (LMSYS-like): steeper curve, lower confidence.
     pub fn lmsys() -> Self {
-        AcceptanceModel { gamma: 0.45, top1: 0.66, decay: 0.30, noise: 0.10 }
+        AcceptanceModel { gamma: 0.45, top1: 0.66, decay: 0.30, noise: 0.10, scale: 1.0 }
     }
 
     /// Math workload (GSM8K-like).
     pub fn gsm8k() -> Self {
         // More predictable continuations: higher confidence, flatter curve.
-        AcceptanceModel { gamma: 0.40, top1: 0.72, decay: 0.28, noise: 0.08 }
+        AcceptanceModel { gamma: 0.40, top1: 0.72, decay: 0.28, noise: 0.08, scale: 1.0 }
     }
 
     /// Look up a dataset's acceptance model by id.
@@ -58,7 +66,10 @@ impl AcceptanceModel {
 
     /// Ground-truth acceptance probability for a draft logit.
     pub fn p_accept(&self, dl: f32) -> f64 {
-        (dl.max(1e-6) as f64).powf(self.gamma)
+        let p = (dl.max(1e-6) as f64).powf(self.gamma);
+        // Exact fast path: a fresh drafter must not perturb a single bit
+        // of the acceptance stream (golden-preset inertness contract).
+        if self.scale == 1.0 { p } else { (p * self.scale).clamp(0.0, 1.0) }
     }
 
     /// Build one sample's candidate tree (synthetic drafting): `branch`
@@ -222,6 +233,33 @@ mod tests {
         let l = count(AcceptanceModel::lmsys(), &mut rng);
         let g = count(AcceptanceModel::gsm8k(), &mut rng);
         assert!(g > l, "gsm8k {g} vs lmsys {l}");
+    }
+
+    #[test]
+    fn unit_scale_is_bit_inert_and_decay_lowers_acceptance() {
+        let fresh = AcceptanceModel::lmsys();
+        let explicit = AcceptanceModel { scale: 1.0, ..AcceptanceModel::lmsys() };
+        for i in 1..=20 {
+            let dl = i as f32 / 20.0;
+            assert_eq!(
+                fresh.p_accept(dl).to_bits(),
+                explicit.p_accept(dl).to_bits(),
+                "scale=1.0 perturbed p_accept({dl})"
+            );
+        }
+        let stale = AcceptanceModel { scale: 0.6, ..AcceptanceModel::lmsys() };
+        for i in 1..=20 {
+            let dl = i as f32 / 20.0;
+            let (f, s) = (fresh.p_accept(dl), stale.p_accept(dl));
+            assert!(s < f, "stale {s} !< fresh {f} at dl={dl}");
+            assert!((0.0..=1.0).contains(&s));
+            assert!((s - f * 0.6).abs() < 1e-12);
+        }
+        // Degenerate scales stay inside the unit interval.
+        let wild = AcceptanceModel { scale: 3.0, ..AcceptanceModel::lmsys() };
+        assert!(wild.p_accept(0.9) <= 1.0);
+        let dead = AcceptanceModel { scale: 0.0, ..AcceptanceModel::lmsys() };
+        assert_eq!(dead.p_accept(0.9), 0.0);
     }
 
     #[test]

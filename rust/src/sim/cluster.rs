@@ -113,6 +113,7 @@ use crate::sim::crash::{CrashConfig, CrashSchedule};
 use crate::sim::engine::{SimBackend, SimInstance, SimMode, SimParams, SimSample};
 use crate::sim::link::FaultyLink;
 use crate::sim::pool::{SendPtr, WorkerPool};
+use crate::sim::rlhf_loop::{LoopMode, Placement, RlhfLoopConfig};
 use crate::sim::timers::{key_time, time_key, TimerRail};
 use crate::utils::rng::Rng;
 
@@ -257,6 +258,13 @@ pub struct ClusterConfig {
     /// link_bandwidth_factor`, clamped ≥ 1), applied like
     /// [`ClusterConfig::shard_link_latency_factor`].
     pub shard_link_bandwidth_factor: f64,
+    /// The RLHF training-loop plane (`[rlhf_sim]`). The default is
+    /// loop-off (`iters = 0`), on which no loop event is ever scheduled
+    /// and runs are bit-identical to the pre-loop scheduler; an async
+    /// section arms `TrainStart`/`TrainEnd` events on this heap (see
+    /// [`crate::sim::rlhf_loop`] and `docs/ARCHITECTURE.md` § Closing
+    /// the loop).
+    pub rlhf_loop: RlhfLoopConfig,
 }
 
 impl Default for ClusterConfig {
@@ -284,6 +292,7 @@ impl Default for ClusterConfig {
             shards: 1,
             shard_link_latency_factor: 4.0,
             shard_link_bandwidth_factor: 4.0,
+            rlhf_loop: RlhfLoopConfig::default(),
         }
     }
 }
@@ -392,6 +401,33 @@ pub struct ClusterResult {
     /// TPOT). Meaningful for streaming runs; batch-synchronous runs
     /// measure every sample from t = 0.
     pub latency: LatencySummary,
+    /// RLHF training steps executed by the async loop plane
+    /// ([`ClusterConfig::rlhf_loop`]). 0 with the loop off.
+    pub loop_iterations: u64,
+    /// Weight-update barriers executed (== loop iterations; a separate
+    /// counter so the parity signature pins the barrier path itself).
+    pub loop_barriers: u64,
+    /// Generation instances preempted for colocated training steps.
+    pub preemptions: u64,
+    /// Pooled samples purged by the loop's staleness bound
+    /// ([`RlhfLoopConfig::staleness_bound`]): completed, but too stale
+    /// for any training step to consume. Loop ledger:
+    /// `trained_samples + staleness_refusals + loop_pool_leftover`
+    /// equals the completed-sample count.
+    pub staleness_refusals: u64,
+    /// Scheduled drafter refreshes executed at barriers.
+    pub drafter_refreshes: u64,
+    /// Samples consumed by the loop's training steps.
+    pub trained_samples: u64,
+    /// Completed samples still pooled (untrained, unrefused) when the
+    /// run ended — generated after the last training step filled.
+    pub loop_pool_leftover: u64,
+    /// Virtual instant of the last weight update (0 with the loop off).
+    pub loop_end_secs: f64,
+    /// Modeled training-stage seconds across the loop's training steps.
+    pub loop_train_secs: f64,
+    /// Modeled inference-stage seconds across the loop's training steps.
+    pub loop_infer_secs: f64,
 }
 
 impl ClusterResult {
@@ -460,6 +496,15 @@ enum EventKind {
     /// Retransmit-timer pop for one in-flight migration order
     /// (unreliable transports only).
     Retransmit { order: u64 },
+    /// The async RLHF loop plane starts a training step: a pooled batch
+    /// is consumed and (colocated placement) generation instances are
+    /// preempted (loop plane only — never scheduled with `[rlhf_sim]`
+    /// off).
+    TrainStart,
+    /// The training step finishes — the weight-update barrier: model
+    /// version bump, fleet-wide drafter invalidation (acceptance-decay
+    /// staleness), parked instances rejoin (loop plane only).
+    TrainEnd,
 }
 
 impl EventKind {
@@ -488,6 +533,15 @@ impl EventKind {
             EventKind::ReallocTick => 6,
             EventKind::Recover(_) => 7,
             EventKind::Retransmit { .. } => 8,
+            // Loop events rank after everything pre-existing: a
+            // TrainStart scheduled *at* a completion's timestamp must let
+            // every same-instant step/delivery land first (so the pool
+            // snapshot it consumes is the sequential loop's), and a
+            // TrainEnd tied with a step belongs after it for the same
+            // reason. Never scheduled with `[rlhf_sim]` off, so the
+            // pre-loop relative order is untouched.
+            EventKind::TrainStart => 9,
+            EventKind::TrainEnd => 10,
         }
     }
 }
@@ -712,6 +766,79 @@ struct ShardState {
     refusal_candidate: Option<usize>,
 }
 
+/// Live state of the async RLHF loop plane ([`ClusterConfig::rlhf_loop`]
+/// with `mode = async`; see [`crate::sim::rlhf_loop`] for the driver and
+/// `docs/ARCHITECTURE.md` § Closing the loop for the state machine).
+/// `None` whenever the plane is off or sync-driven — the loop-off run is
+/// bit-identical to the pre-loop scheduler.
+struct LoopState {
+    /// The `[rlhf_sim]` section this run was armed with.
+    cfg: RlhfLoopConfig,
+    /// Samples per training step ([`RlhfLoopConfig::batch`], resolved
+    /// against the configured workload at construction).
+    batch: usize,
+    /// Current target-model version (bumped at every TrainEnd barrier).
+    model_version: u64,
+    /// Training steps completed so far.
+    iters_done: usize,
+    /// Completed-but-untrained samples, FIFO: (model version at
+    /// completion, prompt + generated tokens).
+    pool: VecDeque<(u64, u64)>,
+    /// Pooled samples purged by the staleness bound.
+    staleness_refusals: u64,
+    /// A training step is in flight (TrainEnd pending on the heap).
+    training: bool,
+    /// A TrainStart is scheduled but not yet popped (dedup guard: pool
+    /// growth between schedule and pop must not double-schedule).
+    start_scheduled: bool,
+    /// Weight-update barriers executed.
+    barriers: u64,
+    /// Generation instances preempted for colocated training steps.
+    preemptions: u64,
+    /// Scheduled drafter refreshes executed.
+    drafter_refreshes: u64,
+    /// Samples consumed by training steps.
+    trained_samples: u64,
+    /// Instances parked for the in-flight colocated training step; they
+    /// rejoin (alive again) at its TrainEnd barrier.
+    parked: Vec<usize>,
+    /// Current fleet-wide acceptance scale (decays at barriers).
+    scale: f64,
+    /// Virtual instant of the last TrainEnd.
+    end_time: f64,
+    /// Accumulated modeled training-stage seconds.
+    train_secs: f64,
+    /// Accumulated modeled inference-stage seconds.
+    infer_secs: f64,
+    /// Cached [`RlhfLoopConfig::train_tier_factor`].
+    tier_factor: f64,
+}
+
+impl LoopState {
+    fn new(cfg: &ClusterConfig) -> Self {
+        LoopState {
+            batch: cfg.rlhf_loop.batch(cfg.n_samples),
+            model_version: 0,
+            iters_done: 0,
+            pool: VecDeque::new(),
+            staleness_refusals: 0,
+            training: false,
+            start_scheduled: false,
+            barriers: 0,
+            preemptions: 0,
+            drafter_refreshes: 0,
+            trained_samples: 0,
+            parked: Vec::new(),
+            scale: cfg.rlhf_loop.drafter_scale,
+            end_time: 0.0,
+            train_secs: 0.0,
+            infer_secs: 0.0,
+            tier_factor: cfg.rlhf_loop.train_tier_factor(),
+            cfg: cfg.rlhf_loop.clone(),
+        }
+    }
+}
+
 /// The discrete-event virtual cluster (see the module docs).
 pub struct SimCluster {
     /// Effective configuration (fleet sizes resolved).
@@ -793,6 +920,11 @@ pub struct SimCluster {
     stage1_acks: u64,
     /// Stage-2 packets bounced off a dead destination.
     bounced_orders: u64,
+    /// The async RLHF loop plane; `None` keeps every loop hook inert
+    /// (bit-identical to the pre-loop scheduler). Sync-mode loops are
+    /// driven *outside* the cluster ([`crate::sim::rlhf_loop::run_sync`])
+    /// and also leave this `None`.
+    rlhf: Option<LoopState>,
 }
 
 impl SimCluster {
@@ -819,7 +951,10 @@ impl SimCluster {
             tier_of.resize(tier_of.len() + tier.count, t);
         }
 
-        let accept = AcceptanceModel::by_name(&cfg.dataset);
+        let mut accept = AcceptanceModel::by_name(&cfg.dataset);
+        // The loop plane's drafter-staleness carrier: 1.0 (the default)
+        // takes p_accept's exact fast path, so it is bit-inert.
+        accept.scale = cfg.rlhf_loop.drafter_scale;
         cfg.params.mode = cfg.mode; // ClusterConfig.mode is authoritative
         // Per-instance construction is self-contained (salted private
         // RNG stream, offline profiling against the instance's own cost
@@ -940,6 +1075,10 @@ impl SimCluster {
             Some(CrashSchedule::new(cfg.crash.clone(), cfg.seed))
         };
         let n_instances = cfg.instances;
+        // Only an *async* loop section arms the in-cluster plane; sync
+        // loops decompose into independent runs outside the cluster.
+        let rlhf = (!cfg.rlhf_loop.is_off() && cfg.rlhf_loop.mode == LoopMode::Async)
+            .then(|| LoopState::new(&cfg));
         SimCluster {
             cfg,
             instances,
@@ -976,6 +1115,7 @@ impl SimCluster {
             samples_requeued: 0,
             stage1_acks: 0,
             bounced_orders: 0,
+            rlhf,
         }
     }
 
@@ -991,6 +1131,11 @@ impl SimCluster {
                 c.cfg.n_samples += 1;
                 c.arrivals += 1;
             }
+        }
+        // The loop batch derives from the workload size, which the base
+        // constructor saw as 0: re-resolve it against the real count.
+        if let Some(lp) = c.rlhf.as_mut() {
+            lp.batch = c.cfg.rlhf_loop.batch(c.cfg.n_samples);
         }
         c
     }
@@ -1048,6 +1193,11 @@ impl SimCluster {
         }
         c.arrival_schedule = schedule;
         c.arrivals = 0; // counted as arrival events pop
+        // Re-resolve the loop batch against the streaming workload size
+        // (the base constructor saw n_samples = 0).
+        if let Some(lp) = c.rlhf.as_mut() {
+            lp.batch = c.cfg.rlhf_loop.batch(n);
+        }
         Ok(c)
     }
 
@@ -1224,8 +1374,13 @@ impl SimCluster {
         beat: &mut Vec<(f64, usize)>,
     ) {
         beat.clear();
-        if self.pending_total > 0 {
-            return; // streaming backlog pending: stay on the sequential path
+        if self.pending_total > 0 || self.rlhf.is_some() {
+            // Streaming backlog pending — or the async loop plane is
+            // armed: a mid-beat completion could fill a training batch
+            // and must schedule its TrainStart before any later beat
+            // step runs, so loop runs keep the (trivially bit-identical)
+            // sequential path at every thread count.
+            return;
         }
         // Reallocation-regime analysis (step cadence only; timed ticks
         // arrive as rail events and end beats naturally). With K shards
@@ -1398,6 +1553,9 @@ impl SimCluster {
         tick_period: Option<f64>,
     ) {
         self.completed += finished_delta;
+        if finished_delta > 0 && self.rlhf.is_some() {
+            self.loop_note_completions(i, finished_delta, q);
+        }
         self.steps += 1;
         if self.cfg.realloc_enabled
             && tick_period.is_none()
@@ -1422,7 +1580,11 @@ impl SimCluster {
             && self.arrivals >= offered
             && self.pending_total == 0
             && self.orders.is_empty()
-            && self.all_samples_accounted();
+            && self.all_samples_accounted()
+            // A pending training step still owes its weight-update
+            // barrier (and must revive its parked instances) even after
+            // every sample is accounted for.
+            && self.rlhf.as_ref().map_or(true, |lp| !lp.training && !lp.start_scheduled);
         if done {
             debug_assert!(
                 self.instances.iter().all(|x| x.is_idle() && x.limbo_count() == 0),
@@ -1459,6 +1621,9 @@ impl SimCluster {
                 | EventKind::ReallocTick
                 | EventKind::Ctrl(_)
                 | EventKind::Recover(_)
+                // The barrier revives parked instances: their restored
+                // headroom must re-drain the backlog.
+                | EventKind::TrainEnd
         );
         match ev.kind {
             EventKind::TaskArrival(mut s) => {
@@ -1590,6 +1755,12 @@ impl SimCluster {
             }
             EventKind::Retransmit { order } => {
                 self.handle_retransmit(order, ev.time, q, scheduled);
+            }
+            EventKind::TrainStart => {
+                self.loop_train_start(ev.time, q, scheduled);
+            }
+            EventKind::TrainEnd => {
+                self.loop_train_end(ev.time, q);
             }
         }
         Some(may_free_headroom)
@@ -2454,7 +2625,12 @@ impl SimCluster {
     /// Instance `i` crashes at `now`: reconcile every in-flight order
     /// that involves it, salvage its coordinator-side records (resident
     /// samples, queued tasks, unconfirmed limbo entries), requeue the
-    /// salvage onto survivors, and schedule the recovery.
+    /// salvage onto survivors, and schedule the recovery. A crash event
+    /// landing on an already-parked instance (the loop plane preempted
+    /// it first) is dropped by the caller — the device is not running
+    /// generation, so there is nothing left to kill; that instance's
+    /// crash chain ends there (deterministically) since the next crash
+    /// is only drawn at recovery.
     fn crash_instance(
         &mut self,
         i: usize,
@@ -2464,7 +2640,29 @@ impl SimCluster {
     ) {
         self.alive[i] = false;
         self.crashes += 1;
+        self.quiesce_instance(i, now, q, scheduled);
 
+        // --- Schedule the recovery (None = permanent loss). ---
+        if let Some(sched) = self.crash.as_mut() {
+            if let Some(dt) = sched.downtime() {
+                q.push(now + dt, EventKind::Recover(i));
+            }
+        }
+    }
+
+    /// Take instance `i` out of the generation fleet (its `alive` flag
+    /// is already false): reconcile in-flight orders with the dead peer
+    /// and salvage + requeue its coordinator-side records. Shared by the
+    /// crash plane (followed by a recovery draw) and the loop plane's
+    /// colocated training preemption ([`Self::preempt_instance`], which
+    /// instead revives the instance at the weight-update barrier).
+    fn quiesce_instance(
+        &mut self,
+        i: usize,
+        now: f64,
+        q: &mut EventQueue,
+        scheduled: &mut [bool],
+    ) {
         // --- 1. Dead-peer reconciliation for in-flight orders (faulty
         //     path; the perfect path keeps no order map — its limbo
         //     entries are reconciled in step 2 and in-flight packets
@@ -2549,13 +2747,157 @@ impl SimCluster {
         }
         salvaged.extend(extra_tasks);
         self.requeue(self.shard_of[i], salvaged, now, q, scheduled);
+    }
 
-        // --- 3. Schedule the recovery (None = permanent loss). ---
-        if let Some(sched) = self.crash.as_mut() {
-            if let Some(dt) = sched.downtime() {
-                q.push(now + dt, EventKind::Recover(i));
+    /// Park instance `i` for a colocated training step: the device is
+    /// handed to training, so its coordinator records are salvaged and
+    /// requeued onto the remaining generation fleet through the exact
+    /// crash-plane machinery ([`Self::quiesce_instance`] →
+    /// [`Reallocator::plan_requeue`] — no new KV-loss semantics). Unlike
+    /// a crash, no downtime is drawn from the crash schedule: the
+    /// instance rejoins deterministically at the step's TrainEnd
+    /// barrier.
+    fn preempt_instance(
+        &mut self,
+        i: usize,
+        now: f64,
+        q: &mut EventQueue,
+        scheduled: &mut [bool],
+    ) {
+        self.alive[i] = false;
+        self.instances[i].metrics.preemptions += 1;
+        if let Some(lp) = self.rlhf.as_mut() {
+            lp.preemptions += 1;
+            lp.parked.push(i);
+        }
+        self.quiesce_instance(i, now, q, scheduled);
+    }
+
+    // ------------------------------------------------------------------
+    // Async RLHF loop plane: pool, training steps, weight-update barrier
+    // ------------------------------------------------------------------
+
+    /// Instance `i` just retired `delta` samples (loop plane armed):
+    /// pool them, stamped with the *current* model version, and start a
+    /// training step if a batch is now ready. Called from
+    /// [`Self::commit_step`], so the pool order is the deterministic
+    /// completion order of the sequential event loop.
+    fn loop_note_completions(&mut self, i: usize, delta: u64, q: &mut EventQueue) {
+        let now = self.instances[i].backend.clock;
+        let lp = self.rlhf.as_mut().expect("caller checked the plane is armed");
+        let version = lp.model_version;
+        let fin = &self.instances[i].finished;
+        let lo = fin.len() - delta as usize;
+        for s in &fin[lo..] {
+            lp.pool.push_back((version, (s.prompt_len + s.generated) as u64));
+        }
+        self.loop_maybe_start_training(now, q);
+    }
+
+    /// Purge over-stale pool entries and schedule a `TrainStart` if a
+    /// full batch is ready (and no step is in flight and iterations
+    /// remain). The purge runs against the *current* version — entries
+    /// are only refused once a training step could actually observe
+    /// them as too stale.
+    fn loop_maybe_start_training(&mut self, now: f64, q: &mut EventQueue) {
+        let Some(lp) = self.rlhf.as_mut() else { return };
+        if lp.training || lp.start_scheduled || lp.iters_done >= lp.cfg.iters {
+            return;
+        }
+        let version = lp.model_version;
+        let bound = lp.cfg.staleness_bound;
+        let before = lp.pool.len();
+        lp.pool.retain(|&(v, _)| version.saturating_sub(v) <= bound);
+        lp.staleness_refusals += (before - lp.pool.len()) as u64;
+        if lp.pool.len() >= lp.batch.max(1) {
+            lp.start_scheduled = true;
+            q.push(now, EventKind::TrainStart);
+        }
+    }
+
+    /// A `TrainStart` popped: consume one batch from the pool (FIFO),
+    /// model the step's inference + training cost, and — colocated
+    /// placement — preempt the training instances out of the generation
+    /// fleet. The step's `TrainEnd` barrier is scheduled at its modeled
+    /// completion instant.
+    fn loop_train_start(&mut self, now: f64, q: &mut EventQueue, scheduled: &mut [bool]) {
+        let Some(lp) = self.rlhf.as_mut() else { return };
+        lp.start_scheduled = false;
+        if lp.training || lp.iters_done >= lp.cfg.iters {
+            return;
+        }
+        let batch = lp.batch.max(1);
+        if lp.pool.len() < batch {
+            return; // raced a barrier purge between schedule and pop
+        }
+        let mut tokens = 0u64;
+        for _ in 0..batch {
+            tokens += lp.pool.pop_front().expect("length checked above").1;
+        }
+        lp.trained_samples += batch as u64;
+        lp.training = true;
+        let div = lp.cfg.train_instances.max(1) as f64;
+        let infer = lp.cfg.inference_per_token * tokens as f64 / div;
+        let train = lp.cfg.training_per_token * tokens as f64 * lp.tier_factor / div;
+        lp.infer_secs += infer;
+        lp.train_secs += train;
+        let colocated = lp.cfg.placement == Placement::Colocated;
+        let steal = lp.cfg.train_instances.max(1).min(self.instances.len());
+        q.push(now + (infer + train).max(0.0), EventKind::TrainEnd);
+        if colocated {
+            // Steal the lowest-id alive instances; their live samples
+            // are salvaged onto the survivors (or the backlog) exactly
+            // like a crash, minus the recovery draw.
+            let victims: Vec<usize> =
+                (0..self.instances.len()).filter(|&k| self.alive[k]).take(steal).collect();
+            for k in victims {
+                self.preempt_instance(k, now, q, scheduled);
             }
         }
+    }
+
+    /// A `TrainEnd` popped — the weight-update barrier: bump the model
+    /// version, decay the fleet-wide acceptance scale (drafter
+    /// staleness), run the scheduled drafter refresh (restoring the
+    /// scale at a fleet-downtime cost), revive the parked instances, and
+    /// start the next step if another batch is already pooled.
+    fn loop_train_end(&mut self, now: f64, q: &mut EventQueue) {
+        let Some(lp) = self.rlhf.as_mut() else { return };
+        debug_assert!(lp.training, "TrainEnd without a training step in flight");
+        lp.training = false;
+        lp.iters_done += 1;
+        lp.model_version += 1;
+        lp.barriers += 1;
+        lp.end_time = now;
+        lp.scale *= lp.cfg.accept_decay;
+        let mut refresh_downtime = 0.0;
+        if lp.cfg.refresh_every > 0 && lp.model_version % lp.cfg.refresh_every as u64 == 0 {
+            lp.scale = lp.cfg.drafter_scale;
+            lp.drafter_refreshes += 1;
+            refresh_downtime = lp.cfg.refresh_secs.max(0.0);
+        }
+        let scale = lp.scale;
+        let parked = std::mem::take(&mut lp.parked);
+        // Revive the parked instances first (empty — admission and the
+        // next reallocation round refill them), so the refresh downtime
+        // below charges the *whole* fleet.
+        for i in parked {
+            self.alive[i] = true;
+            let inst = &mut self.instances[i];
+            if inst.backend.clock < now {
+                inst.backend.clock = now; // the training step consumed the time
+            }
+        }
+        // The barrier invalidates drafter state fleet-wide: every
+        // instance's acceptance scale moves in lockstep, and a refresh
+        // stalls every live clock for the re-distillation window.
+        for (i, inst) in self.instances.iter_mut().enumerate() {
+            inst.backend.accept_model.scale = scale;
+            if refresh_downtime > 0.0 && self.alive[i] {
+                inst.backend.clock = inst.backend.clock.max(now) + refresh_downtime;
+            }
+        }
+        self.loop_maybe_start_training(now + refresh_downtime, q);
     }
 
     /// Instance `i` rejoins the fleet, empty, at `now`. It is refilled
@@ -2787,6 +3129,16 @@ impl SimCluster {
                 .map(|x| x.accept_pred.correlation())
                 .unwrap_or(0.0),
             latency: LatencySummary::from_samples(&latencies),
+            loop_iterations: self.rlhf.as_ref().map_or(0, |l| l.iters_done as u64),
+            loop_barriers: self.rlhf.as_ref().map_or(0, |l| l.barriers),
+            preemptions: self.rlhf.as_ref().map_or(0, |l| l.preemptions),
+            staleness_refusals: self.rlhf.as_ref().map_or(0, |l| l.staleness_refusals),
+            drafter_refreshes: self.rlhf.as_ref().map_or(0, |l| l.drafter_refreshes),
+            trained_samples: self.rlhf.as_ref().map_or(0, |l| l.trained_samples),
+            loop_pool_leftover: self.rlhf.as_ref().map_or(0, |l| l.pool.len() as u64),
+            loop_end_secs: self.rlhf.as_ref().map_or(0.0, |l| l.end_time),
+            loop_train_secs: self.rlhf.as_ref().map_or(0.0, |l| l.train_secs),
+            loop_infer_secs: self.rlhf.as_ref().map_or(0.0, |l| l.infer_secs),
         }
     }
 }
@@ -3270,6 +3622,97 @@ mod tests {
     }
 
     #[test]
+    fn zero_loop_section_is_bit_identical() {
+        // `[rlhf_sim]` with iters = 0 must be bit-inert no matter how
+        // wild every other loop knob is set — the plane only arms when
+        // iters > 0, and a fresh drafter (scale 1.0) never perturbs the
+        // acceptance stream.
+        let base = base_cfg(64, 4);
+        let mut explicit = base.clone();
+        explicit.rlhf_loop = RlhfLoopConfig {
+            iters: 0,
+            samples_per_iter: 7,
+            mode: LoopMode::Async,
+            placement: Placement::Disaggregated,
+            train_instances: 3,
+            train_tier: "h100".into(),
+            inference_per_token: 9.9,
+            training_per_token: 9.9,
+            staleness_bound: 0,
+            accept_decay: 0.1,
+            refresh_every: 1,
+            refresh_secs: 99.0,
+            drafter_scale: 1.0,
+        };
+        assert!(explicit.rlhf_loop.is_off());
+        let a = SimCluster::new(base).run();
+        let b = SimCluster::new(explicit).run();
+        assert_eq!(a.total_tokens, b.total_tokens);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(b.loop_iterations, 0);
+        assert_eq!(b.loop_barriers, 0);
+        assert_eq!(b.preemptions, 0);
+        assert_eq!(b.staleness_refusals, 0);
+        assert_eq!(b.trained_samples, 0);
+        assert_eq!(b.loop_pool_leftover, 0);
+    }
+
+    #[test]
+    fn async_loop_trains_and_closes_the_ledger() {
+        // Disaggregated async loop on a batch workload: training runs
+        // off-fleet, so generation is never preempted; every completed
+        // sample is either trained, refused stale, or left in the pool.
+        let mut cfg = base_cfg(48, 4);
+        cfg.rlhf_loop.iters = 3;
+        cfg.rlhf_loop.samples_per_iter = 8;
+        cfg.rlhf_loop.mode = LoopMode::Async;
+        cfg.rlhf_loop.placement = Placement::Disaggregated;
+        let mut c = SimCluster::new(cfg);
+        let r = c.run();
+        assert_eq!(r.n_samples, 48);
+        assert_eq!(r.loop_iterations, 3);
+        assert_eq!(r.loop_barriers, 3);
+        assert_eq!(r.trained_samples, 24);
+        assert_eq!(r.preemptions, 0, "disaggregated training must not park");
+        assert_eq!(
+            r.trained_samples + r.staleness_refusals + r.loop_pool_leftover,
+            48,
+            "loop ledger must close over completions"
+        );
+        assert!(r.loop_end_secs > 0.0);
+        assert!(r.loop_train_secs > 0.0 && r.loop_infer_secs > 0.0);
+        for inst in &c.instances {
+            assert!(inst.is_idle());
+        }
+    }
+
+    #[test]
+    fn colocated_async_loop_preempts_and_recovers() {
+        // Colocated training steals an instance per step: the victims are
+        // parked through the crash-plane salvage path (no KV loss — the
+        // samples requeue onto survivors) and revive at the barrier.
+        let mut cfg = base_cfg(48, 4);
+        cfg.rlhf_loop.iters = 2;
+        cfg.rlhf_loop.samples_per_iter = 8;
+        cfg.rlhf_loop.mode = LoopMode::Async;
+        cfg.rlhf_loop.placement = Placement::Colocated;
+        let mut c = SimCluster::new(cfg);
+        let r = c.run();
+        assert_eq!(r.loop_iterations, 2);
+        assert_eq!(r.preemptions, 2, "one instance parked per training step");
+        assert_eq!(r.n_samples, 48, "preemption must not lose samples");
+        assert_eq!(
+            r.trained_samples + r.staleness_refusals + r.loop_pool_leftover,
+            48
+        );
+        assert_eq!(r.crashes, 0, "preemption is not a crash");
+        for (i, inst) in c.instances.iter().enumerate() {
+            assert!(c.alive[i], "every parked instance must revive");
+            assert!(inst.is_idle());
+        }
+    }
+
+    #[test]
     fn permanent_fleet_loss_sheds_leftovers_as_refusals() {
         // Both instances die almost immediately and never recover: the
         // fleet cannot host the requeued samples, so the ledger closes
@@ -3392,6 +3835,16 @@ mod tests {
             fig7_curve: Vec::new(),
             accept_corr: 0.0,
             latency: LatencySummary::default(),
+            loop_iterations: 0,
+            loop_barriers: 0,
+            preemptions: 0,
+            staleness_refusals: 0,
+            drafter_refreshes: 0,
+            trained_samples: 0,
+            loop_pool_leftover: 0,
+            loop_end_secs: 0.0,
+            loop_train_secs: 0.0,
+            loop_infer_secs: 0.0,
         };
         assert_eq!(r.tokens_per_sec(), 0.0);
         assert_eq!(r.samples_per_sec(), 0.0);

@@ -13,9 +13,17 @@
 //! iteration in generation, matching Fig 3's ">68.4%" measurement, and an
 //! OpenRLHF-like system pays a training-stage multiplier for the missing
 //! parameter offloading (§7.3 explains its low throughput that way).
+//!
+//! This single-iteration model is kept as the Figs 3/12/13 substrate; the
+//! *multi-iteration* loop — weight-update barriers, drafter staleness,
+//! colocated preemption, async off-policy training — lives in
+//! [`crate::sim::rlhf_loop`] and is exposed here through
+//! [`run_loop_scenario`], the canonical small-fleet scenario the
+//! `e2e-loop` figure and the loop bench row both run.
 
 use crate::sim::cluster::{ClusterConfig, ClusterResult, SimCluster};
 use crate::sim::engine::SimMode;
+use crate::sim::rlhf_loop::{run_loop, LoopMode, LoopOutcome, Placement};
 
 /// Which end-to-end system to model.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -172,6 +180,32 @@ pub fn run_system(
     }
 }
 
+/// The canonical multi-iteration loop scenario: a 4-instance LMSYS fleet
+/// running 4 RLHF iterations of 24 samples each, with the Fig-3 stage
+/// constants, a mild per-barrier acceptance decay and a drafter refresh
+/// every other weight update. `mode`/`placement` select the quadrant
+/// (sync vs async × colocated vs disaggregated) the `e2e-loop` figure
+/// sweeps; `seed` keeps rows independently replayable.
+pub fn run_loop_scenario(mode: LoopMode, placement: Placement, seed: u64) -> LoopOutcome {
+    let mut cfg = ClusterConfig {
+        instances: 4,
+        n_samples: 96,
+        max_tokens: 256,
+        cooldown: 32,
+        dataset: "lmsys".to_string(),
+        seed,
+        ..Default::default()
+    };
+    cfg.rlhf_loop.iters = 4;
+    cfg.rlhf_loop.samples_per_iter = 24;
+    cfg.rlhf_loop.mode = mode;
+    cfg.rlhf_loop.placement = placement;
+    cfg.rlhf_loop.accept_decay = 0.95;
+    cfg.rlhf_loop.refresh_every = 2;
+    cfg.rlhf_loop.refresh_secs = 0.25;
+    run_loop(&cfg)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -226,5 +260,38 @@ mod tests {
         let or = quick(SystemKind::OpenRlhf, 5);
         let vl = quick(SystemKind::Verl, 5);
         assert!(or.train_secs > vl.train_secs * 2.0);
+    }
+
+    #[test]
+    fn loop_scenario_runs_every_quadrant() {
+        for (mode, placement) in [
+            (LoopMode::Sync, Placement::Colocated),
+            (LoopMode::Sync, Placement::Disaggregated),
+            (LoopMode::Async, Placement::Colocated),
+            (LoopMode::Async, Placement::Disaggregated),
+        ] {
+            let out = run_loop_scenario(mode, placement, 6);
+            assert_eq!(out.iterations_done, 4, "{mode:?}/{placement:?}");
+            assert_eq!(out.barriers, 4);
+            assert_eq!(out.drafter_refreshes, 2, "refresh every 2nd of 4 barriers");
+            assert_eq!(out.trained_samples, 96);
+            assert!(out.total_secs > 0.0 && out.total_secs.is_finite());
+            assert!(out.mean_iteration_secs() > 0.0);
+            match mode {
+                LoopMode::Sync => {
+                    assert_eq!(out.iterations.len(), 4);
+                    assert!(out.cluster.is_none());
+                    assert_eq!(out.preemptions, 0, "sync generation already stopped");
+                }
+                LoopMode::Async => {
+                    assert!(out.cluster.is_some());
+                    if placement == Placement::Colocated {
+                        assert!(out.preemptions > 0, "colocated async must park");
+                    } else {
+                        assert_eq!(out.preemptions, 0);
+                    }
+                }
+            }
+        }
     }
 }

@@ -48,6 +48,11 @@
 //! which the cluster salvages a dead instance's samples, requeues them
 //! onto survivors (KV re-prefilled at the new host) and re-admits
 //! recovered instances — property-tested in `tests/crash_recovery.rs`.
+//! [`rlhf_loop`] closes the RLHF loop (`[rlhf_sim]` section): an
+//! event-driven multi-iteration generation → inference → training →
+//! weight-sync simulation with sync/async modes, colocated vs
+//! disaggregated training placement, and an acceptance-decay drafter
+//! staleness model — property-tested in `tests/rlhf_loop.rs`.
 //!
 //! See `docs/ARCHITECTURE.md` for the event-flow diagram and the
 //! "where to add a new event kind" guide.
@@ -65,10 +70,12 @@ pub mod e2e;
 pub mod engine;
 pub mod link;
 pub mod pool;
+pub mod rlhf_loop;
 pub mod timers;
 
 pub use cluster::{ClusterConfig, ClusterResult, FleetTier, SimCluster, TierStats};
 pub use crash::{CrashConfig, CrashSchedule};
+pub use rlhf_loop::{LoopMode, LoopOutcome, Placement, RlhfLoopConfig};
 pub use cost_model::CostModel;
 pub use engine::SimInstance;
 pub use engine::SimMode;

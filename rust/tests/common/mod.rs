@@ -10,10 +10,34 @@
 
 #![allow(dead_code)] // each test binary uses its own subset
 
+use std::path::PathBuf;
+
 use rlhfspec::coordinator::transport::{FaultProfile, TransportConfig};
 use rlhfspec::sim::cluster::{ClusterConfig, FleetTier};
 use rlhfspec::sim::SimMode;
 use rlhfspec::utils::rng::Rng;
+
+/// Root of the tiny AOT artifact set (`make artifacts`), shared by every
+/// artifact-gated integration suite.
+pub fn tiny_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+}
+
+/// The artifact gate: true when the tiny artifacts exist. On a miss it
+/// prints one structured, greppable skip record naming the *test* and
+/// the missing path — `SKIP <test>: ...` — so a CI log shows exactly
+/// which coverage was lost, instead of a silently green binary.
+pub fn artifacts_present(test: &str) -> bool {
+    let manifest = tiny_dir().join("manifest.json");
+    if manifest.exists() {
+        return true;
+    }
+    eprintln!(
+        "SKIP {test}: missing artifact {} (generate with `make artifacts`)",
+        manifest.display()
+    );
+    false
+}
 
 /// The golden 8-instance adaptive batch config: the seed of every
 /// bit-for-bit parity pin (event-heap vs laggard scan, streaming-at-∞

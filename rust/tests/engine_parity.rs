@@ -52,6 +52,15 @@ fn signature(c: &SimCluster, r: &ClusterResult) -> Vec<u64> {
         r.bounced_orders,
         r.migration_downtime.to_bits(),
         r.mean_accepted.to_bits(),
+        // RLHF loop-plane counters: zero on every preset here (the loop is
+        // default-off), but pinned so a thread count can never leak into
+        // the loop state machine once a suite turns it on.
+        r.loop_iterations,
+        r.loop_barriers,
+        r.preemptions,
+        r.staleness_refusals,
+        r.drafter_refreshes,
+        r.trained_samples,
     ];
     for inst in &c.instances {
         sig.push(u64::MAX); // per-instance delimiter

@@ -298,6 +298,45 @@ fn shard_figure_sweeps_shard_count_on_the_hetero_fleet() {
 }
 
 #[test]
+fn loop_figure_sweeps_every_quadrant() {
+    // All four mode × placement quadrants must render, each running the
+    // full 4-iteration scenario (96 samples trained), with preemptions
+    // only on the async/colocated row and positive time-to-reward
+    // everywhere.
+    let s = figures::fig_e2e_loop(SEED);
+    assert!(s.contains("reward-s"), "{s}");
+    let labels = [
+        "sync/colocated",
+        "sync/disaggregated",
+        "async/colocated",
+        "async/disaggregated",
+    ];
+    for label in labels {
+        let row = s
+            .lines()
+            .find(|l| l.trim_start().starts_with(label))
+            .unwrap_or_else(|| panic!("missing {label} row:\n{s}"));
+        let cols: Vec<f64> = row
+            .split_whitespace()
+            .skip(1)
+            .map(|t| t.parse::<f64>().unwrap_or(f64::NAN))
+            .collect();
+        assert_eq!(cols.len(), 8, "bad row {row:?}");
+        let (iters, iter_secs, reward_secs) = (cols[0], cols[1], cols[2]);
+        let (trained, preempt) = (cols[3], cols[7]);
+        assert_eq!(iters, 4.0, "row {row:?}");
+        assert!(iter_secs > 0.0 && reward_secs >= iter_secs, "row {row:?}");
+        assert_eq!(trained, 96.0, "row {row:?}");
+        if label == "async/colocated" {
+            assert!(preempt > 0.0, "colocated async must preempt:\n{s}");
+        } else {
+            assert_eq!(preempt, 0.0, "row {row:?}");
+        }
+    }
+    assert!(!s.contains("NaN"), "{s}");
+}
+
+#[test]
 fn all_figures_render() {
     for id in figures::ALL_FIGURES {
         let out = figures::run_figure(id, SEED).unwrap();

@@ -7,7 +7,8 @@
 //! through draft trees, the Pallas-verified tree forward, acceptance and
 //! host-side KV commits.
 
-use std::path::PathBuf;
+mod common;
+
 use std::rc::Rc;
 
 use rlhfspec::config::RunConfig;
@@ -16,16 +17,19 @@ use rlhfspec::coordinator::instance::{DecodeMode, GenerationInstance, SampleTask
 use rlhfspec::runtime::{Manifest, ModelStore};
 use rlhfspec::utils::rng::Rng;
 
-fn tiny_dir() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
-}
+use common::tiny_dir;
 
-/// `None` (→ tests skip) when the AOT artifacts were not generated.
+/// `None` (→ tests skip) when the AOT artifacts were not generated; the
+/// miss prints the shared structured `SKIP` record via
+/// [`common::artifacts_present`].
 fn tiny_manifest() -> Option<Rc<Manifest>> {
+    if !common::artifacts_present("generation_integration") {
+        return None;
+    }
     match Manifest::load(&tiny_dir()) {
         Ok(m) => Some(Rc::new(m)),
-        Err(_) => {
-            eprintln!("skipping: artifacts/tiny not present (run `make artifacts`)");
+        Err(e) => {
+            eprintln!("SKIP generation_integration: manifest present but unloadable: {e}");
             None
         }
     }

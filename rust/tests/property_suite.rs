@@ -361,6 +361,87 @@ fn cluster_replay_is_bit_stable_at_any_thread_count() {
 }
 
 #[test]
+fn rlhf_loop_replay_is_bit_stable_across_threads_and_shards() {
+    // Any (seed, iters, threads, shards, CrashSchedule) tuple replays the
+    // async RLHF loop bit-for-bit — training events, preemptions, barrier
+    // decay, staleness purges and crash/link faults composed — and the
+    // loop ledger (trained + stale + leftover == completed) closes.
+    use rlhfspec::sim::cluster::{ClusterConfig, SimCluster};
+    use rlhfspec::sim::rlhf_loop::{LoopMode, Placement};
+
+    check("rlhf-loop-replay", 8, |rng| {
+        let instances = 8 + rng.below(9); // 8..=16
+        let (assignment, n) = common::skewed_big_fleet(rng, instances);
+        let mut cfg = ClusterConfig {
+            instances,
+            cooldown: (8 + rng.below(17)) as u64,
+            n_samples: 0,
+            max_tokens: 256,
+            seed: rng.below(1 << 30) as u64,
+            transport: if rng.chance(0.5) {
+                common::random_transport(rng)
+            } else {
+                Default::default()
+            },
+            crash: CrashConfig {
+                rate_per_sec: 0.05 + rng.f64() * 0.3,
+                recover_secs: if rng.chance(0.2) { 0.0 } else { 0.3 + rng.f64() * 2.0 },
+                max_crashes: 2 + rng.below(9),
+            },
+            shards: [1usize, 4][rng.below(2)],
+            ..Default::default()
+        };
+        cfg.rlhf_loop.iters = 1 + rng.below(4);
+        cfg.rlhf_loop.samples_per_iter = 2 + rng.below(7);
+        cfg.rlhf_loop.mode = LoopMode::Async;
+        cfg.rlhf_loop.placement = if rng.chance(0.5) {
+            Placement::Colocated
+        } else {
+            Placement::Disaggregated
+        };
+        cfg.rlhf_loop.staleness_bound = if rng.chance(0.3) { rng.below(3) as u64 } else { u64::MAX };
+        cfg.rlhf_loop.accept_decay = if rng.chance(0.5) { 0.8 + rng.f64() * 0.2 } else { 1.0 };
+        let threads = [1usize, 4][rng.below(2)];
+        let run = |threads: usize| {
+            let mut cfg = cfg.clone();
+            cfg.threads = threads;
+            let mut c = SimCluster::with_assignment(cfg, assignment.clone());
+            let r = c.run();
+            assert_eq!(r.arrivals, n);
+            assert_eq!(
+                r.n_samples as u64 + r.admission_refusals,
+                n,
+                "cluster ledger must close under the loop"
+            );
+            assert_eq!(
+                r.trained_samples + r.staleness_refusals + r.loop_pool_leftover,
+                r.n_samples as u64,
+                "loop ledger must close over completions"
+            );
+            for (i, inst) in c.instances.iter().enumerate() {
+                assert!(inst.is_idle(), "instance {i} still holds samples");
+            }
+            (
+                r.total_tokens,
+                r.makespan.to_bits(),
+                r.loop_iterations,
+                r.loop_barriers,
+                r.preemptions,
+                r.staleness_refusals,
+                r.trained_samples,
+                r.loop_pool_leftover,
+                r.loop_end_secs.to_bits(),
+                r.crashes,
+                r.samples_requeued,
+            )
+        };
+        let a = run(threads);
+        assert_eq!(a, run(threads), "loop replay at threads={threads} unstable");
+        assert_eq!(a, run(1), "threads={threads} diverged from sequential under the loop");
+    });
+}
+
+#[test]
 fn requeue_placement_respects_thresholds_and_capacity() {
     // The crash-recovery placement plan: deficits fill first, nothing is
     // placed on a zero-capacity (crashed) instance, totals are bounded

@@ -6,25 +6,13 @@
 //! reward-model training, and generation → inference → training
 //! iterations with weight broadcast back to the fleet.
 
-use std::path::PathBuf;
+mod common;
 
 use rlhfspec::config::RunConfig;
 use rlhfspec::coordinator::instance::DecodeMode;
 use rlhfspec::rlhf::RlhfPipeline;
 
-fn tiny_dir() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
-}
-
-/// Tests skip when the AOT artifacts were not generated (CI without the
-/// python AOT step / real PJRT bindings).
-fn artifacts_present() -> bool {
-    let ok = tiny_dir().join("manifest.json").exists();
-    if !ok {
-        eprintln!("skipping: artifacts/tiny not present (run `make artifacts`)");
-    }
-    ok
-}
+use common::{artifacts_present, tiny_dir};
 
 fn cfg() -> RunConfig {
     let mut c = RunConfig::default();
@@ -44,7 +32,7 @@ fn cfg() -> RunConfig {
 
 #[test]
 fn full_rlhf_loop_runs_and_drafts_get_accepted() {
-    if !artifacts_present() {
+    if !artifacts_present("full_rlhf_loop_runs_and_drafts_get_accepted") {
         return;
     }
     let mut p = RlhfPipeline::new(&tiny_dir(), cfg(), "gsm8k", 7).unwrap();
@@ -89,7 +77,7 @@ fn full_rlhf_loop_runs_and_drafts_get_accepted() {
 
 #[test]
 fn rlhf_iteration_stats_are_consistent() {
-    if !artifacts_present() {
+    if !artifacts_present("rlhf_iteration_stats_are_consistent") {
         return;
     }
     let mut c = cfg();
@@ -116,7 +104,7 @@ fn rlhf_iteration_stats_are_consistent() {
 
 #[test]
 fn ar_baseline_pipeline_also_works() {
-    if !artifacts_present() {
+    if !artifacts_present("ar_baseline_pipeline_also_works") {
         return;
     }
     let mut c = cfg();

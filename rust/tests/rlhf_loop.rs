@@ -1,0 +1,517 @@
+//! The RLHF loop-plane suite (ROADMAP item 3): the event-driven
+//! multi-iteration training loop in `sim::rlhf_loop` + `sim::cluster`,
+//! proven by cross-iteration invariants. Three contracts anchor it:
+//!
+//! 1. **Sync ≡ batch golden guard** — a staleness-off sync loop is a
+//!    pure driver decomposition: its per-iteration stats must be
+//!    bit-identical to N independent [`SimCluster::run`] calls over
+//!    [`iteration_config`].
+//! 2. **Off-section bit-inertness** — `[rlhf_sim]` with `iters = 0`
+//!    (and the 1.0 `drafter_scale` default) must leave every golden
+//!    preset in `tests/common` bit-for-bit untouched, wild knob values
+//!    and all.
+//! 3. **Cross-iteration conservation** — under a seeded crash × link ×
+//!    {threads, shards} sweep, the cluster ledger
+//!    (`arrivals == completions + admission_refusals`) and the loop
+//!    ledger (`trained + staleness_refusals + pool_leftover ==
+//!    completions`) both close, and every instance drains.
+//!
+//! Plus behavioral pins for the plane itself: colocated preemption and
+//! deterministic revival, the staleness bound purging over-stale pooled
+//! samples, and barrier acceptance-decay/drafter-refresh effects on
+//! generation time. All cases run artifact-free in tier-1.
+
+mod common;
+
+use rlhfspec::data::arrivals::ArrivalProcess;
+use rlhfspec::sim::cluster::{ClusterConfig, SimCluster};
+use rlhfspec::sim::crash::CrashConfig;
+use rlhfspec::sim::rlhf_loop::{iteration_config, run_sync, LoopMode, Placement, RlhfLoopConfig};
+use rlhfspec::sim::ClusterResult;
+use rlhfspec::testutil;
+use rlhfspec::utils::rng::Rng;
+
+/// Full bit-level signature of a run (the `engine_parity` signature,
+/// loop counters included): every result counter plus the per-instance
+/// finished-sample placement.
+fn signature(c: &SimCluster, r: &ClusterResult) -> Vec<u64> {
+    let mut sig = vec![
+        r.total_tokens,
+        r.makespan.to_bits(),
+        r.n_samples as u64,
+        r.arrivals,
+        r.admission_refusals,
+        r.migrations,
+        r.realloc_decisions,
+        r.refusals,
+        r.cross_shard_orders,
+        r.orders_attempted,
+        r.retransmits,
+        r.handshake_aborts,
+        r.link_drops,
+        r.link_dups,
+        r.crashes,
+        r.recoveries,
+        r.samples_requeued,
+        r.requeue_delay_mean.to_bits(),
+        r.stage1_acks,
+        r.bounced_orders,
+        r.migration_downtime.to_bits(),
+        r.mean_accepted.to_bits(),
+        r.loop_iterations,
+        r.loop_barriers,
+        r.preemptions,
+        r.staleness_refusals,
+        r.drafter_refreshes,
+        r.trained_samples,
+        r.loop_pool_leftover,
+        r.loop_end_secs.to_bits(),
+    ];
+    for inst in &c.instances {
+        sig.push(u64::MAX); // per-instance delimiter
+        sig.extend(inst.finished.iter().map(|s| s.id));
+    }
+    sig
+}
+
+/// An `[rlhf_sim]` section with every knob set to an aggressive
+/// non-default value — except the two live gates: `iters = 0` keeps the
+/// plane off, `drafter_scale = 1.0` keeps the acceptance fast path.
+/// The off-section contract says this must be indistinguishable from
+/// [`RlhfLoopConfig::default`] on any run.
+fn wild_off_section() -> RlhfLoopConfig {
+    RlhfLoopConfig {
+        iters: 0,
+        drafter_scale: 1.0,
+        samples_per_iter: 5,
+        mode: LoopMode::Async,
+        placement: Placement::Disaggregated,
+        train_instances: 3,
+        train_tier: "a100".into(),
+        inference_per_token: 9.9e-3,
+        training_per_token: 1.1e-2,
+        staleness_bound: 0,
+        accept_decay: 0.25,
+        refresh_every: 1,
+        refresh_secs: 42.0,
+    }
+}
+
+/// Every loop counter of a loop-off run must be zero.
+fn assert_loop_counters_zero(name: &str, r: &ClusterResult) {
+    assert_eq!(r.loop_iterations, 0, "{name}: loop_iterations");
+    assert_eq!(r.loop_barriers, 0, "{name}: loop_barriers");
+    assert_eq!(r.preemptions, 0, "{name}: preemptions");
+    assert_eq!(r.staleness_refusals, 0, "{name}: staleness_refusals");
+    assert_eq!(r.drafter_refreshes, 0, "{name}: drafter_refreshes");
+    assert_eq!(r.trained_samples, 0, "{name}: trained_samples");
+    assert_eq!(r.loop_pool_leftover, 0, "{name}: loop_pool_leftover");
+    assert_eq!(r.loop_end_secs, 0.0, "{name}: loop_end_secs");
+}
+
+/// The cluster-side conservation ledger (the `crash_recovery` idiom):
+/// unique finished ids, completions + refusals == arrivals, every
+/// instance drained.
+fn assert_cluster_conserved(c: &SimCluster, r: &ClusterResult, n: u64) {
+    assert_eq!(r.arrivals, n, "offered-sample count");
+    let mut ids: Vec<u64> = c
+        .instances
+        .iter()
+        .flat_map(|x| x.finished.iter().map(|s| s.id))
+        .collect();
+    ids.sort_unstable();
+    let total = ids.len();
+    ids.dedup();
+    assert_eq!(ids.len(), total, "duplicated finished ids");
+    assert!(ids.iter().all(|&id| id < n), "unknown finished id");
+    assert_eq!(
+        total as u64 + r.admission_refusals,
+        n,
+        "ledger must close: completions + refusals == arrivals"
+    );
+    assert_eq!(total, r.n_samples, "result counts completed samples");
+    for inst in &c.instances {
+        assert!(inst.is_idle(), "instance {} still holds samples", inst.id);
+        assert_eq!(
+            inst.limbo_count(),
+            0,
+            "instance {} holds unconfirmed limbo samples",
+            inst.id
+        );
+    }
+}
+
+/// The loop-side conservation ledger: every completed sample is pooled
+/// exactly once, and leaves the pool only into a training step or the
+/// staleness purge — whatever survives at run end is the leftover.
+fn assert_loop_ledger(r: &ClusterResult) {
+    assert_eq!(
+        r.trained_samples + r.staleness_refusals + r.loop_pool_leftover,
+        r.n_samples as u64,
+        "loop ledger must close: trained + stale + leftover == completed"
+    );
+    assert_eq!(r.loop_iterations, r.loop_barriers, "one barrier per training step");
+}
+
+/// Build-and-run a preset twice — default `[rlhf_sim]` vs the wild
+/// off-section — and require bit-identical signatures.
+fn assert_off_section_inert(name: &str, build: impl Fn(RlhfLoopConfig) -> SimCluster) {
+    let mut a = build(RlhfLoopConfig::default());
+    let ra = a.run();
+    let mut b = build(wild_off_section());
+    let rb = b.run();
+    assert_eq!(
+        signature(&a, &ra),
+        signature(&b, &rb),
+        "{name}: an off `[rlhf_sim]` section must be bit-inert"
+    );
+    assert_loop_counters_zero(name, &ra);
+    assert_loop_counters_zero(name, &rb);
+}
+
+#[test]
+fn sync_loop_is_bit_identical_to_independent_cluster_runs() {
+    // The sync ≡ batch golden guard: with staleness off (accept_decay
+    // and drafter_scale at their 1.0 defaults), every iteration of the
+    // sync loop IS an independent cluster run over iteration_config —
+    // makespan bits, token totals, completions, the admission ledger.
+    let mut base = ClusterConfig {
+        instances: 4,
+        n_samples: 96,
+        max_tokens: 256,
+        cooldown: 32,
+        seed: 17,
+        ..Default::default()
+    };
+    base.rlhf_loop.iters = 3;
+    let out = run_sync(&base);
+    assert_eq!(out.iterations_done, 3);
+    assert_eq!(out.barriers, 3);
+    assert_eq!(out.iterations.len(), 3);
+    assert_eq!(out.drafter_refreshes, 0);
+    assert_eq!(out.preemptions, 0, "sync generation is already stopped");
+    let mut gen_secs = 0.0;
+    let mut trained = 0u64;
+    for (it, stats) in out.iterations.iter().enumerate() {
+        let cfg = iteration_config(&base, it, 1.0);
+        assert_eq!(cfg.n_samples, 32, "96 samples split across 3 iterations");
+        let mut c = SimCluster::new(cfg);
+        let r = c.run();
+        assert_eq!(
+            stats.gen_makespan.to_bits(),
+            r.makespan.to_bits(),
+            "iteration {it}: generation makespan must be bit-identical"
+        );
+        assert_eq!(stats.total_tokens, r.total_tokens, "iteration {it}");
+        assert_eq!(stats.completed, r.n_samples, "iteration {it}");
+        assert_eq!(stats.arrivals, r.arrivals, "iteration {it}");
+        assert_eq!(stats.refusals, r.admission_refusals, "iteration {it}");
+        assert_loop_counters_zero("independent iteration run", &r);
+        gen_secs += r.makespan;
+        trained += r.n_samples as u64;
+    }
+    assert_eq!(
+        out.gen_secs.to_bits(),
+        gen_secs.to_bits(),
+        "loop generation seconds are the exact sum of the independent runs"
+    );
+    assert_eq!(out.trained_samples, trained);
+    assert!(
+        out.total_secs > out.gen_secs,
+        "the inference/training barriers must cost time"
+    );
+}
+
+#[test]
+fn disabled_section_is_bit_inert_on_every_golden_preset() {
+    // Contract 2: `iters = 0` (+ the 1.0 drafter_scale fast path) must
+    // leave every pre-loop preset untouched — batch, AR, skew +
+    // migration, hetero fleet, streaming admission, and the composed
+    // crash × link fault pipeline.
+    assert_off_section_inert("golden8", |lp| {
+        let mut cfg = common::golden8(3);
+        cfg.rlhf_loop = lp;
+        SimCluster::new(cfg)
+    });
+    assert_off_section_inert("golden8_ar", |lp| {
+        let mut cfg = common::golden8_ar();
+        cfg.rlhf_loop = lp;
+        SimCluster::new(cfg)
+    });
+    assert_off_section_inert("skew4", |lp| {
+        let mut cfg = common::skew4(7, 1024);
+        cfg.rlhf_loop = lp;
+        SimCluster::with_assignment(cfg, common::skew4_assignment())
+    });
+    assert_off_section_inert("hetero_fleet", |lp| {
+        let mut cfg = common::hetero_fleet(11, 256, 384);
+        cfg.rlhf_loop = lp;
+        SimCluster::new(cfg)
+    });
+    assert_off_section_inert("streaming-poisson", |lp| {
+        let mut cfg = common::hetero_fleet(17, 384, 256);
+        cfg.pending_bound = 64;
+        cfg.rlhf_loop = lp;
+        SimCluster::streaming(cfg, &ArrivalProcess::poisson(48.0)).expect("streaming config")
+    });
+    assert_off_section_inert("crash-link", |lp| {
+        let mut cfg = common::skew4(13, 512);
+        cfg.transport = common::random_transport(&mut Rng::new(21));
+        cfg.crash = CrashConfig {
+            rate_per_sec: 0.3,
+            recover_secs: 1.0,
+            max_crashes: 8,
+        };
+        cfg.rlhf_loop = lp;
+        SimCluster::with_assignment(cfg, common::skew4_assignment())
+    });
+}
+
+#[test]
+fn property_async_loop_conserves_under_crash_link_schedules() {
+    // Contract 3: the 32-seed crash × link × {threads, shards} sweep.
+    // Whatever the schedule kills or the loop preempts, both ledgers
+    // close and the fleet drains — and the run replays bit-for-bit at
+    // any thread count (the loop plane always takes the sequential
+    // engine path).
+    testutil::check("rlhf-loop-conservation", 32, |rng| {
+        let instances = 8 + rng.below(9);
+        let (assignment, n) = common::skewed_big_fleet(rng, instances);
+        let mut cfg = ClusterConfig {
+            instances,
+            cooldown: 8 + rng.below(17) as u64,
+            n_samples: 0,
+            max_tokens: 256,
+            seed: rng.below(1 << 30) as u64,
+            shards: [1, 4][rng.below(2)],
+            threads: [1, 4][rng.below(2)],
+            ..Default::default()
+        };
+        if rng.chance(0.7) {
+            cfg.transport = common::random_transport(rng);
+        }
+        if rng.chance(0.7) {
+            cfg.crash = CrashConfig {
+                rate_per_sec: 0.05 + rng.f64() * 0.4,
+                recover_secs: if rng.chance(0.2) { 0.0 } else { 0.3 + rng.f64() * 2.0 },
+                max_crashes: 4 + rng.below(29),
+            };
+        }
+        cfg.rlhf_loop.iters = 1 + rng.below(4);
+        cfg.rlhf_loop.samples_per_iter = 2 + rng.below(7);
+        cfg.rlhf_loop.mode = LoopMode::Async;
+        cfg.rlhf_loop.placement = if rng.chance(0.5) {
+            Placement::Colocated
+        } else {
+            Placement::Disaggregated
+        };
+        cfg.rlhf_loop.train_instances = 1 + rng.below(2);
+        cfg.rlhf_loop.staleness_bound =
+            if rng.chance(0.3) { rng.below(3) as u64 } else { u64::MAX };
+        cfg.rlhf_loop.accept_decay =
+            if rng.chance(0.5) { 0.8 + rng.f64() * 0.2 } else { 1.0 };
+        let mut c = SimCluster::with_assignment(cfg.clone(), assignment.clone());
+        let r = c.run();
+        assert_cluster_conserved(&c, &r, n);
+        assert_loop_ledger(&r);
+        assert!(
+            r.loop_iterations <= cfg.rlhf_loop.iters as u64,
+            "never more training steps than configured"
+        );
+        // Replay: the same schedule must reproduce the same bits.
+        let mut c2 = SimCluster::with_assignment(cfg, assignment);
+        let r2 = c2.run();
+        assert_eq!(
+            signature(&c, &r),
+            signature(&c2, &r2),
+            "loop run must replay bit-for-bit"
+        );
+    });
+}
+
+#[test]
+fn async_loop_is_thread_inert_per_shard_count() {
+    // The loop plane forces the sequential engine path (no beat may
+    // form while it is armed), so `[engine] threads` must stay
+    // bit-inert with the loop on, at one shard and at four.
+    for &shards in &[1usize, 4] {
+        let mut sigs: Vec<Vec<u64>> = Vec::new();
+        for &threads in &[1usize, 2, 4, 8] {
+            let mut cfg = ClusterConfig {
+                instances: 8,
+                n_samples: 96,
+                max_tokens: 256,
+                cooldown: 24,
+                seed: 31,
+                shards,
+                threads,
+                ..Default::default()
+            };
+            cfg.rlhf_loop.iters = 3;
+            cfg.rlhf_loop.samples_per_iter = 8;
+            cfg.rlhf_loop.mode = LoopMode::Async;
+            cfg.rlhf_loop.placement = Placement::Colocated;
+            let mut c = SimCluster::new(cfg);
+            let r = c.run();
+            assert_loop_ledger(&r);
+            assert_eq!(r.loop_iterations, 3, "shards={shards} threads={threads}");
+            sigs.push(signature(&c, &r));
+        }
+        for sig in &sigs[1..] {
+            assert_eq!(
+                &sigs[0], sig,
+                "shards={shards}: threads must not perturb the loop plane"
+            );
+        }
+    }
+}
+
+#[test]
+fn colocated_training_preempts_and_revives() {
+    // Colocated steps steal train_instances generation instances
+    // through the crash-plane quiesce machinery (no recovery draw, no
+    // crash counted) and revive them at the weight barrier; the whole
+    // workload still completes and both ledgers close.
+    let build = |placement: Placement| {
+        let mut cfg = ClusterConfig {
+            instances: 4,
+            n_samples: 48,
+            max_tokens: 256,
+            cooldown: 32,
+            seed: 29,
+            ..Default::default()
+        };
+        cfg.rlhf_loop.iters = 2;
+        cfg.rlhf_loop.samples_per_iter = 8;
+        cfg.rlhf_loop.mode = LoopMode::Async;
+        cfg.rlhf_loop.placement = placement;
+        cfg.rlhf_loop.train_instances = 2;
+        cfg
+    };
+    let mut colo = SimCluster::new(build(Placement::Colocated));
+    let rc = colo.run();
+    assert_eq!(rc.loop_iterations, 2);
+    assert_eq!(
+        rc.preemptions, 4,
+        "2 stolen instances × 2 training steps"
+    );
+    assert_eq!(rc.crashes, 0, "preemption is not a crash");
+    assert_eq!(rc.recoveries, 0, "revival is not a crash recovery");
+    let per_instance: u64 = colo.instances.iter().map(|i| i.metrics.preemptions).sum();
+    assert_eq!(per_instance, rc.preemptions, "per-instance attribution");
+    assert_eq!(rc.n_samples, 48, "preempted work is salvaged, not lost");
+    assert_cluster_conserved(&colo, &rc, 48);
+    assert_loop_ledger(&rc);
+
+    let mut dis = SimCluster::new(build(Placement::Disaggregated));
+    let rd = dis.run();
+    assert_eq!(rd.preemptions, 0, "a dedicated tier steals nothing");
+    assert_eq!(rd.n_samples, 48);
+    assert_loop_ledger(&rd);
+    // Stealing generation capacity (and training on the slower
+    // generation tier) can't beat a dedicated faster tier.
+    let colo_total = rc.makespan.max(rc.loop_end_secs);
+    let dis_total = rd.makespan.max(rd.loop_end_secs);
+    assert!(
+        colo_total >= dis_total,
+        "colocated {colo_total} must not beat disaggregated {dis_total}"
+    );
+}
+
+#[test]
+fn staleness_bound_purges_pooled_samples() {
+    // Bound 0: only samples completed at the *current* model version
+    // may train; everything pooled during a training window goes stale
+    // at its barrier and must be purged (counted, ledger still closed).
+    // Bound u64::MAX (the default) never refuses.
+    let build = |bound: u64| {
+        let mut cfg = ClusterConfig {
+            instances: 4,
+            n_samples: 64,
+            max_tokens: 256,
+            cooldown: 32,
+            seed: 23,
+            ..Default::default()
+        };
+        cfg.rlhf_loop.iters = 4;
+        cfg.rlhf_loop.samples_per_iter = 8;
+        cfg.rlhf_loop.mode = LoopMode::Async;
+        cfg.rlhf_loop.placement = Placement::Disaggregated;
+        cfg.rlhf_loop.staleness_bound = bound;
+        cfg
+    };
+    let mut lax = SimCluster::new(build(u64::MAX));
+    let rl = lax.run();
+    assert_eq!(rl.staleness_refusals, 0, "unbounded staleness never refuses");
+    assert_eq!(rl.loop_iterations, 4, "64 completions feed 4 steps of 8");
+    assert_eq!(rl.trained_samples, 32);
+    assert_loop_ledger(&rl);
+
+    let mut strict = SimCluster::new(build(0));
+    let rs = strict.run();
+    assert!(
+        rs.staleness_refusals > 0,
+        "bound 0 must purge the samples pooled during training windows"
+    );
+    assert_eq!(rs.n_samples, 64, "staleness refuses training, not generation");
+    assert_loop_ledger(&rs);
+}
+
+#[test]
+fn barrier_decay_slows_generation_and_refresh_restores() {
+    // The weight-update barrier invalidates drafter state: with
+    // accept_decay < 1 every barrier lowers the fleet acceptance scale,
+    // so generation takes longer than a staleness-free run. A scheduled
+    // refresh (refresh_every = 1) restores the scale — and its downtime
+    // knob charges the fleet when > 0.
+    let build = |decay: f64, refresh_every: usize, refresh_secs: f64| {
+        let mut cfg = ClusterConfig {
+            instances: 4,
+            n_samples: 96,
+            max_tokens: 256,
+            cooldown: 32,
+            seed: 41,
+            ..Default::default()
+        };
+        cfg.rlhf_loop.iters = 4;
+        cfg.rlhf_loop.samples_per_iter = 12;
+        cfg.rlhf_loop.mode = LoopMode::Async;
+        cfg.rlhf_loop.placement = Placement::Disaggregated;
+        cfg.rlhf_loop.accept_decay = decay;
+        cfg.rlhf_loop.refresh_every = refresh_every;
+        cfg.rlhf_loop.refresh_secs = refresh_secs;
+        cfg
+    };
+    let fresh = SimCluster::new(build(1.0, 0, 0.0)).run();
+    let stale = SimCluster::new(build(0.5, 0, 0.0)).run();
+    assert_eq!(stale.drafter_refreshes, 0);
+    assert!(
+        stale.makespan > fresh.makespan,
+        "a decaying drafter must slow generation: {} vs {}",
+        stale.makespan,
+        fresh.makespan
+    );
+    let refreshed = SimCluster::new(build(0.5, 1, 0.0)).run();
+    assert_eq!(
+        refreshed.drafter_refreshes, refreshed.loop_barriers,
+        "refresh_every = 1 refreshes at every barrier"
+    );
+    assert!(
+        refreshed.makespan < stale.makespan,
+        "a refreshed drafter must beat a decayed one: {} vs {}",
+        refreshed.makespan,
+        stale.makespan
+    );
+    let downtime = SimCluster::new(build(0.5, 1, 5.0)).run();
+    assert!(downtime.drafter_refreshes > 0);
+    assert!(
+        downtime.makespan > refreshed.makespan,
+        "refresh downtime must cost fleet time: {} vs {}",
+        downtime.makespan,
+        refreshed.makespan
+    );
+    for r in [&fresh, &stale, &refreshed, &downtime] {
+        assert_loop_ledger(r);
+        assert_eq!(r.n_samples, 96);
+    }
+}

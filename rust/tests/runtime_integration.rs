@@ -7,18 +7,24 @@
 //! loading, PJRT execution, tuple decomposition and train-step state
 //! threading.
 
+mod common;
+
 use std::collections::BTreeMap;
-use std::path::PathBuf;
 use std::rc::Rc;
 
 use rlhfspec::runtime::{Engine, HostTensor, Manifest, ModelStore};
 
+/// `None` (→ tests skip) when the AOT artifacts were not generated; the
+/// miss prints the shared structured `SKIP` record via
+/// [`common::artifacts_present`].
 fn tiny() -> Option<Rc<Manifest>> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
-    match Manifest::load(&dir) {
+    if !common::artifacts_present("runtime_integration") {
+        return None;
+    }
+    match Manifest::load(&common::tiny_dir()) {
         Ok(m) => Some(Rc::new(m)),
-        Err(_) => {
-            eprintln!("skipping: artifacts/tiny not present (run `make artifacts`)");
+        Err(e) => {
+            eprintln!("SKIP runtime_integration: manifest present but unloadable: {e}");
             None
         }
     }
