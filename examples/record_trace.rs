@@ -1,0 +1,83 @@
+//! Record a Perfetto-loadable trace of a simulated cluster run.
+//!
+//! Runs the mixed-GPU (hetero) fleet — 4×h100 + 4×a100 + 8×l40s with
+//! per-tier reallocation knees — as a streaming workload with the
+//! `[trace]` plane enabled, then points at the two files it wrote:
+//!
+//! * `trace.json` — Chrome trace-event timeline: open it at
+//!   <https://ui.perfetto.dev> (or `chrome://tracing`) to see one lane
+//!   per instance (decode rounds, migration legs, downtime) plus the
+//!   control-plane / engine lanes;
+//! * `trace_metrics.json` — counters, histograms and the per-instance
+//!   stage-seconds breakdown; summarize with
+//!   `python3 scripts/trace_summary.py trace.json`.
+//!
+//! ```bash
+//! cargo run --release --example record_trace -- --out trace.json
+//! python3 scripts/trace_summary.py trace.json
+//! ```
+//!
+//! The run is also executed with tracing *off* first and the two
+//! results are compared — a live demonstration of the bit-inertness
+//! contract the `[trace]` plane guarantees (see docs/ARCHITECTURE.md
+//! § Observability).
+
+use rlhfspec::data::arrivals::ArrivalProcess;
+use rlhfspec::sim::cluster::{ClusterConfig, FleetTier, SimCluster};
+use rlhfspec::sim::TraceConfig;
+use rlhfspec::utils::cli::Args;
+
+fn cfg(seed: u64, n_samples: usize, trace: TraceConfig) -> ClusterConfig {
+    ClusterConfig {
+        fleet: vec![
+            FleetTier::preset("h100", 4).expect("preset"),
+            FleetTier::preset("a100", 4).expect("preset"),
+            FleetTier::preset("l40s", 8).expect("preset"),
+        ],
+        cooldown: 16,
+        n_samples,
+        max_tokens: 384,
+        pending_bound: 64,
+        seed,
+        trace,
+        ..Default::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let out = args.get_or("out", "trace.json");
+    let seed = args.u64_or("seed", 17);
+    let n_samples = args.usize_or("samples", 384);
+    let rate = args.f64_or("rate", 48.0);
+
+    // Baseline: the identical run, untraced.
+    let mut base = SimCluster::streaming(
+        cfg(seed, n_samples, TraceConfig::off()),
+        &ArrivalProcess::poisson(rate),
+    )?;
+    let base_res = base.run();
+
+    // Traced run.
+    let trace = TraceConfig::to_path(&out);
+    let metrics_out = trace.metrics_out.clone();
+    let mut traced =
+        SimCluster::streaming(cfg(seed, n_samples, trace), &ArrivalProcess::poisson(rate))?;
+    let res = traced.run();
+
+    assert_eq!(
+        (base_res.total_tokens, base_res.makespan.to_bits()),
+        (res.total_tokens, res.makespan.to_bits()),
+        "tracing must be bit-inert"
+    );
+    println!(
+        "{} instances, {} samples over {:.1} virtual s: {} tokens, \
+         {} migrations, {} realloc decisions (bit-identical to the \
+         untraced run)",
+        16, res.n_samples, res.makespan, res.total_tokens, res.migrations, res.realloc_decisions,
+    );
+    println!("wrote {out} — open at https://ui.perfetto.dev");
+    println!("wrote {metrics_out}");
+    println!("summarize: python3 scripts/trace_summary.py {out}");
+    Ok(())
+}

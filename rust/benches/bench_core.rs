@@ -36,6 +36,7 @@ use rlhfspec::sim::cluster::{ClusterConfig, FleetTier, SimCluster};
 use rlhfspec::sim::cost_model::CostModel;
 use rlhfspec::sim::engine::{SimInstance, SimMode, SimParams, SimSample};
 use rlhfspec::sim::rlhf_loop::{run_loop, LoopMode, Placement};
+use rlhfspec::sim::TraceConfig;
 
 fn hetero_cfg(instances_per_tier: usize, n_samples: usize) -> ClusterConfig {
     ClusterConfig {
@@ -160,6 +161,39 @@ fn main() {
         );
         results.push(r);
     }
+
+    // ---- trace-plane overhead on the same fleet -----------------------
+    // `core/trace/off` reruns the identical hetero fleet with an
+    // explicitly disabled `[trace]` section — the off path costs one
+    // Option null check, so this row is the event-heap baseline.
+    // `core/trace/on` records a full Chrome trace + metrics export (to
+    // the temp dir); the budget gate (`check_bench_budget.py
+    // --max-trace-overhead`) holds its mean against the off row. Both
+    // rows cross-check the bit-inertness contract on every bench run.
+    let run_traced = |tc: TraceConfig| {
+        let mut cfg = hetero_cfg(per_tier, n_samples);
+        cfg.trace = tc;
+        let mut cluster = SimCluster::new(cfg);
+        let res = cluster.run();
+        black_box(res.total_tokens);
+        (res.total_tokens, res.makespan.to_bits())
+    };
+    let r = bench("core/trace/off", 0, cluster_iters, || {
+        assert_eq!(run_traced(TraceConfig::off()), seq_sig, "trace-off diverged from baseline");
+    });
+    results.push(r);
+    let trace_out = std::env::temp_dir().join("rlhfspec_bench_trace.json");
+    let trace_cfg = TraceConfig::to_path(trace_out.to_str().expect("utf-8 temp path"));
+    let r = bench("core/trace/on", 0, cluster_iters, || {
+        assert_eq!(
+            run_traced(trace_cfg.clone()),
+            seq_sig,
+            "trace-on diverged from baseline (bit-inertness violated)"
+        );
+    });
+    results.push(r);
+    let _ = std::fs::remove_file(&trace_cfg.out);
+    let _ = std::fs::remove_file(&trace_cfg.metrics_out);
 
     // Virtual-vs-wall ratio for the same fleet, reported for context.
     let t0 = Instant::now();

@@ -13,6 +13,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::transport::TransportConfig;
 use crate::sim::crash::CrashConfig;
 use crate::sim::rlhf_loop::RlhfLoopConfig;
+use crate::sim::trace::{default_trace_config, TraceConfig};
 
 /// Speculative generation knobs (paper §2.2, §5).
 #[derive(Clone, Debug)]
@@ -269,6 +270,12 @@ pub struct RunConfig {
     /// default: the loop plane never arms and every run is bit-identical
     /// to a plain generation run.
     pub rlhf_sim: RlhfLoopConfig,
+    /// `[trace]` — structured trace & metrics plane (see
+    /// [`TraceConfig`]). Disabled by default: with tracing off the
+    /// cluster constructs no sink and replays bit-for-bit. The
+    /// `PALLAS_TRACE` env var overrides the *default*; an explicit
+    /// `[trace]` section or `--trace.*` override still wins.
+    pub trace: TraceConfig,
     pub seed: u64,
 }
 
@@ -284,7 +291,9 @@ impl RunConfig {
         for (k, v) in overrides {
             kv.insert(k.clone(), v.clone());
         }
-        let mut cfg = RunConfig::default();
+        // `PALLAS_TRACE` seeds the *default* trace config; explicit
+        // `[trace]` keys (file or CLI) below still override it.
+        let mut cfg = RunConfig { trace: default_trace_config(), ..RunConfig::default() };
         for (k, v) in &kv {
             cfg.set(k, v).with_context(|| format!("config key {k:?}"))?;
         }
@@ -355,6 +364,9 @@ impl RunConfig {
                 }
                 if let Some(rest) = key.strip_prefix("rlhf_sim.") {
                     return self.rlhf_sim.set(rest, val);
+                }
+                if let Some(rest) = key.strip_prefix("trace.") {
+                    return self.trace.set(rest, val);
                 }
                 bail!("unknown config key")
             }

@@ -74,7 +74,7 @@ use crate::coordinator::core::{
 use crate::coordinator::instance::{
     DecodeMode, FinishedSample, GenerationInstance, PjrtBackend, SampleTask,
 };
-use crate::coordinator::metrics::{InstanceMetrics, LatencySummary};
+use crate::coordinator::metrics::{InstanceMetrics, LatencySummary, ProtocolCounters};
 use crate::coordinator::migration::AllocRequest;
 use crate::coordinator::reallocator::Reallocator;
 use crate::coordinator::transport::{MsgClass, PerfectTransport, Transport, TransportConfig};
@@ -192,17 +192,11 @@ pub struct GenerationReport {
     pub realloc_decisions: u64,
     /// Seconds the monitor spent inside reallocation decisions (§7.7 SRD).
     pub srd_secs: f64,
-    /// Relay retransmissions the monitor performed on a faulty
-    /// `[transport]` (handshake resends + committed Stage-1/2 resends).
-    /// 0 on the perfect transport.
-    pub retransmits: u64,
-    /// Orders the monitor aborted after the handshake timeout/budget on
-    /// a faulty `[transport]`. 0 on the perfect transport.
-    pub handshake_aborts: u64,
-    /// Protocol relays the fault plan dropped during this run.
-    pub link_drops: u64,
-    /// Protocol relays the fault plan duplicated during this run.
-    pub link_dups: u64,
+    /// Transport-protocol fault/recovery counters (monitor relay
+    /// retransmissions, handshake aborts, fault-plan drops/dups) — the
+    /// [`ProtocolCounters`] shape shared with the simulation plane's
+    /// `ClusterResult`. All-zero on the perfect transport.
+    pub protocol: ProtocolCounters,
     /// Total generated tokens across instances.
     pub total_tokens: u64,
     /// Per-sample serving-latency percentiles (queueing delay, TTFT,
@@ -526,10 +520,12 @@ fn assemble_report(
         migration_refusals,
         realloc_decisions,
         srd_secs,
-        retransmits,
-        handshake_aborts,
-        link_drops: link_faults.0,
-        link_dups: link_faults.1,
+        protocol: ProtocolCounters {
+            retransmits,
+            handshake_aborts,
+            link_drops: link_faults.0,
+            link_dups: link_faults.1,
+        },
         total_tokens,
         latency: LatencySummary::from_samples(&latencies),
     }
@@ -1425,10 +1421,7 @@ mod tests {
             migration_refusals: 0,
             realloc_decisions: 0,
             srd_secs: 0.0,
-            retransmits: 0,
-            handshake_aborts: 0,
-            link_drops: 0,
-            link_dups: 0,
+            protocol: ProtocolCounters::default(),
             total_tokens: tokens,
             latency: LatencySummary::default(),
         }

@@ -118,6 +118,40 @@ impl InstanceMetrics {
             self.tokens_out as f64 / t
         }
     }
+
+    /// The per-stage wall-times as named `(stage, seconds)` pairs in
+    /// canonical order — the §7.7 / Fig 3 stage decomposition consumed
+    /// by the trace plane's metrics export and `trace_summary.py`.
+    pub fn stage_breakdown(&self) -> [(&'static str, f64); 7] {
+        [
+            ("prefill", self.prefill_secs),
+            ("draft", self.draft_secs),
+            ("select", self.select_secs),
+            ("verify", self.verify_secs),
+            ("accept", self.accept_secs),
+            ("commit", self.commit_secs),
+            ("migration", self.migration_secs),
+        ]
+    }
+}
+
+/// Transport-protocol fault and recovery counters, shared by both
+/// decode planes: `ClusterResult` (simulation) and `GenerationReport`
+/// (threaded PJRT driver) embed this one type instead of duplicating
+/// the four fields, so the trace plane and every consumer read the
+/// same shape regardless of plane.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProtocolCounters {
+    /// Stage-2 carrier retransmissions fired (unacked payload resent
+    /// after the per-order retransmit timer).
+    pub retransmits: u64,
+    /// Migration orders aborted after a handshake timeout on an
+    /// unreliable transport (victims returned to the source batch).
+    pub handshake_aborts: u64,
+    /// Messages the (virtual or real) link dropped.
+    pub link_drops: u64,
+    /// Messages the link duplicated.
+    pub link_dups: u64,
 }
 
 /// One finished sample's serving latencies (streaming workloads).
@@ -140,6 +174,12 @@ pub struct SampleLatency {
 /// records. All fields are 0 when no sample carried latency data (e.g.
 /// batch-synchronous runs, where every sample arrives at t = 0 and
 /// queueing delay is not meaningful).
+///
+/// Percentiles inherit [`crate::utils::stats::percentile`]'s pinned
+/// interpolation rule — `rank = (p / 100) · (len − 1)`, linear between
+/// the two nearest order statistics — so a single sample pins every
+/// percentile to that sample exactly and no value is invented outside
+/// the data range.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct LatencySummary {
     /// Number of samples summarized.

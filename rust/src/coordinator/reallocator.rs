@@ -50,6 +50,19 @@ pub struct MigrationOrder {
     pub count: usize,
 }
 
+/// Render a migration plan compactly for trace instants: `"3->5:2,7->1:1"`
+/// (one `from->to:count` triple per order, comma-joined; empty plan → `""`).
+pub fn plan_summary(plan: &[MigrationOrder]) -> String {
+    let mut out = String::new();
+    for (k, o) in plan.iter().enumerate() {
+        if k > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("{}->{}:{}", o.from, o.to, o.count));
+    }
+    out
+}
+
 /// The §6.1 sample-reallocation policy.
 #[derive(Clone, Debug)]
 pub struct Reallocator {

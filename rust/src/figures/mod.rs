@@ -744,7 +744,7 @@ pub fn fig_fault(seed: u64) -> String {
         let r = SimCluster::with_assignment(cfg, assignment(&mut rng)).run();
         // An attempted order fails by destination refusal or handshake
         // abort; everything else commits and (eventually) confirms.
-        let failed = r.refusals + r.handshake_aborts;
+        let failed = r.refusals + r.protocol.handshake_aborts;
         let success =
             100.0 * (r.orders_attempted.saturating_sub(failed)) as f64
                 / r.orders_attempted.max(1) as f64;
@@ -755,10 +755,10 @@ pub fn fig_fault(seed: u64) -> String {
             r.tokens_per_sec(),
             r.makespan,
             r.migrations,
-            r.handshake_aborts,
-            r.retransmits,
-            r.link_drops,
-            r.link_dups,
+            r.protocol.handshake_aborts,
+            r.protocol.retransmits,
+            r.protocol.link_drops,
+            r.protocol.link_dups,
             success,
         );
     }

@@ -44,6 +44,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod figures;
+pub mod obs;
 pub mod rlhf;
 pub mod runtime;
 pub mod sim;

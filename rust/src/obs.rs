@@ -1,0 +1,19 @@
+//! Observability facade: the stable import path for the trace &
+//! metrics plane.
+//!
+//! The implementation lives in [`crate::sim::trace`] (it instruments
+//! the simulation cluster's commit points), but the types are
+//! plane-agnostic — the threaded PJRT driver records wall-clock
+//! instants through the same [`TraceSink`] trait. Downstream code
+//! should import from here (`rlhfspec::obs::*`) so the trace plane can
+//! move without breaking callers.
+//!
+//! See `docs/ARCHITECTURE.md` § "Observability" for the event
+//! taxonomy, the add-a-span guide, and the bit-inertness contract
+//! tracing must honor.
+
+pub use crate::coordinator::metrics::ProtocolCounters;
+pub use crate::sim::trace::{
+    default_trace_config, ArgVal, ChromeTraceSink, ClusterTrace, Histogram, MetricsRegistry,
+    NullSink, Track, TraceConfig, TraceSink,
+};

@@ -100,9 +100,9 @@ use crate::coordinator::core::{
     AckOutcome, MigrateStart, Stage1Msg, Stage2Disposition, Stage2Msg,
 };
 use crate::coordinator::federation::{plan_federation, ShardDigest};
-use crate::coordinator::metrics::LatencySummary;
+use crate::coordinator::metrics::{LatencySummary, ProtocolCounters};
 use crate::coordinator::migration::AllocRequest;
-use crate::coordinator::reallocator::{MigrationOrder, Reallocator};
+use crate::coordinator::reallocator::{plan_summary, MigrationOrder, Reallocator};
 use crate::coordinator::transport::{MsgClass, PerfectTransport, Transport, TransportConfig};
 use crate::data::arrivals::ArrivalProcess;
 use crate::data::lengths::LengthModel;
@@ -115,6 +115,7 @@ use crate::sim::link::FaultyLink;
 use crate::sim::pool::{SendPtr, WorkerPool};
 use crate::sim::rlhf_loop::{LoopMode, Placement, RlhfLoopConfig};
 use crate::sim::timers::{key_time, time_key, TimerRail};
+use crate::sim::trace::{ClusterTrace, TraceConfig};
 use crate::utils::rng::Rng;
 
 // The parallel engine moves `&mut SimInstance` accesses across worker
@@ -265,6 +266,14 @@ pub struct ClusterConfig {
     /// [`crate::sim::rlhf_loop`] and `docs/ARCHITECTURE.md` § Closing
     /// the loop).
     pub rlhf_loop: RlhfLoopConfig,
+    /// The trace & metrics plane (`[trace]`). Default-off and bit-inert
+    /// when off: no tracer is constructed, the hot paths pay one
+    /// `Option` null check, and results are bit-identical to an
+    /// untraced run (pinned by `tests/trace_inert.rs`). Defaults from
+    /// the `PALLAS_TRACE` environment variable (off when unset) so CI
+    /// and ad-hoc runs can record Perfetto timelines without config
+    /// plumbing; see [`crate::sim::trace`].
+    pub trace: TraceConfig,
 }
 
 impl Default for ClusterConfig {
@@ -293,6 +302,7 @@ impl Default for ClusterConfig {
             shard_link_latency_factor: 4.0,
             shard_link_bandwidth_factor: 4.0,
             rlhf_loop: RlhfLoopConfig::default(),
+            trace: crate::sim::trace::default_trace_config(),
         }
     }
 }
@@ -351,17 +361,11 @@ pub struct ClusterResult {
     /// Migration orders attempted (victim pick ran; includes orders the
     /// destination refused and orders the handshake timeout aborted).
     pub orders_attempted: u64,
-    /// Link-layer retransmissions (handshake resends + committed
-    /// Stage-1/Stage-2 resends) on an unreliable transport. 0 on the
-    /// perfect transport.
-    pub retransmits: u64,
-    /// Migration orders aborted by the handshake timeout (victims
-    /// returned to the source batch). 0 on the perfect transport.
-    pub handshake_aborts: u64,
-    /// Protocol messages the link dropped (injected loss).
-    pub link_drops: u64,
-    /// Protocol messages the link duplicated (injected duplication).
-    pub link_dups: u64,
+    /// Transport-protocol fault/recovery counters (retransmits,
+    /// handshake aborts, link drops/dups) — the
+    /// [`ProtocolCounters`] shape shared with the threaded driver's
+    /// `GenerationReport`. All-zero on the perfect transport.
+    pub protocol: ProtocolCounters,
     /// Whole-instance crashes injected ([`ClusterConfig::crash`]).
     pub crashes: u64,
     /// Crashed instances that recovered and rejoined the fleet.
@@ -925,6 +929,10 @@ pub struct SimCluster {
     /// driven *outside* the cluster ([`crate::sim::rlhf_loop::run_sync`])
     /// and also leave this `None`.
     rlhf: Option<LoopState>,
+    /// The trace & metrics plane ([`ClusterConfig::trace`]); `None`
+    /// (the default) keeps every hook inert — one null check per
+    /// commit point, bit-identical results (`tests/trace_inert.rs`).
+    tracer: Option<ClusterTrace>,
 }
 
 impl SimCluster {
@@ -1079,6 +1087,12 @@ impl SimCluster {
         // loops decompose into independent runs outside the cluster.
         let rlhf = (!cfg.rlhf_loop.is_off() && cfg.rlhf_loop.mode == LoopMode::Async)
             .then(|| LoopState::new(&cfg));
+        // The tracer is a pure observer: constructed last, never
+        // consulted by any scheduling decision, draws from no RNG.
+        let tracer = cfg
+            .trace
+            .enabled
+            .then(|| ClusterTrace::new(&cfg.trace, n_instances, cfg.threads));
         SimCluster {
             cfg,
             instances,
@@ -1116,6 +1130,7 @@ impl SimCluster {
             stage1_acks: 0,
             bounced_orders: 0,
             rlhf,
+            tracer,
         }
     }
 
@@ -1267,6 +1282,13 @@ impl SimCluster {
                 self.refuse_admission(s);
             }
         }
+        // Flush the trace plane last: a write failure loses the trace,
+        // never the run (results are already committed).
+        if let Some(mut tr) = self.tracer.take() {
+            if let Err(e) = tr.finish(&self.instances) {
+                eprintln!("trace: failed to write {}: {e}", self.cfg.trace.out);
+            }
+        }
         self.summarize()
     }
 
@@ -1331,12 +1353,15 @@ impl SimCluster {
                 }
             } else {
                 self.execute_beat(&beat, &pool, &mut deltas);
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.on_beat(beat.len(), beat[0].0);
+                }
                 // Commit in selection order: the push sequence (each
                 // successor step, then any boundary reallocation's
                 // packets) replays the sequential loop's seq assignment
                 // stream exactly.
-                for (k, &(_, i)) in beat.iter().enumerate() {
-                    self.commit_step(i, deltas[k], q, scheduled, tick_period);
+                for (k, &(t, i)) in beat.iter().enumerate() {
+                    self.commit_step(t, i, deltas[k], q, scheduled, tick_period);
                 }
                 // The admission backlog is empty across a beat
                 // (selection precondition; steps add nothing to it), so
@@ -1380,6 +1405,9 @@ impl SimCluster {
             // and must schedule its TrainStart before any later beat
             // step runs, so loop runs keep the (trivially bit-identical)
             // sequential path at every thread count.
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.on_fallback("backlog-or-loop");
+            }
             return;
         }
         // Reallocation-regime analysis (step cadence only; timed ticks
@@ -1417,7 +1445,11 @@ impl SimCluster {
                         let backlog = self.shards[s].pending.len();
                         self.shards[s].realloc.note_backlog(backlog);
                         if self.shards[s].realloc.inefficiency(&counts) {
-                            return; // the very next step decides: sequential path
+                            // The very next step decides: sequential path.
+                            if let Some(tr) = self.tracer.as_mut() {
+                                tr.on_fallback("realloc-due");
+                            }
+                            return;
                         }
                     }
                     for (k, &c) in counts.iter().enumerate() {
@@ -1436,6 +1468,9 @@ impl SimCluster {
                         // another: the federation layer could pair them
                         // at any mid-beat round even though each shard
                         // is locally quiescent. Sequential path.
+                        if let Some(tr) = self.tracer.as_mut() {
+                            tr.on_fallback("cross-shard-pairing");
+                        }
                         return;
                     }
                     // A source exists but no destination anywhere (or a
@@ -1453,13 +1488,26 @@ impl SimCluster {
         }
         let mut horizon = f64::INFINITY;
         while (beat.len() as u64) < budget {
-            let Some((t, i)) = q.peek_step() else { return };
+            let Some((t, i)) = q.peek_step() else {
+                if beat.is_empty() {
+                    if let Some(tr) = self.tracer.as_mut() {
+                        tr.on_fallback("non-step-event");
+                    }
+                }
+                return;
+            };
             if !t.is_finite() || t > horizon {
                 return;
             }
             let live = self.alive[i] && !self.instances[i].is_idle();
             if live && hazard && self.could_flip(i) {
-                return; // may mint a destination: leave it to the sequential path
+                // May mint a destination: leave it to the sequential path.
+                if beat.is_empty() {
+                    if let Some(tr) = self.tracer.as_mut() {
+                        tr.on_fallback("could-flip-hazard");
+                    }
+                }
+                return;
             }
             q.pop();
             scheduled[i] = false;
@@ -1546,6 +1594,7 @@ impl SimCluster {
     /// scheduled) and the `StepReady` re-arm.
     fn commit_step(
         &mut self,
+        at: f64,
         i: usize,
         finished_delta: u64,
         q: &mut EventQueue,
@@ -1553,6 +1602,18 @@ impl SimCluster {
         tick_period: Option<f64>,
     ) {
         self.completed += finished_delta;
+        // Trace hooks observe the committed round (and any samples it
+        // retired) strictly after the instance stepped — pure
+        // observation, no scheduling effect.
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.on_round(i, at, &self.instances[i]);
+            if finished_delta > 0 {
+                let fin = &self.instances[i].finished;
+                for s in &fin[fin.len() - finished_delta as usize..] {
+                    tr.on_sample_finished(i, s);
+                }
+            }
+        }
         if finished_delta > 0 && self.rlhf.is_some() {
             self.loop_note_completions(i, finished_delta, q);
         }
@@ -1561,7 +1622,7 @@ impl SimCluster {
             && tick_period.is_none()
             && self.shards.iter().any(|sh| sh.realloc.due(self.steps))
         {
-            self.realloc_round(q, true);
+            self.realloc_round(q, true, at);
         }
         if !self.instances[i].is_idle() {
             q.push(self.instances[i].backend.next_ready(), EventKind::StepReady(i));
@@ -1629,6 +1690,9 @@ impl SimCluster {
             EventKind::TaskArrival(mut s) => {
                 self.arrivals += 1;
                 s.arrival_time = ev.time;
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.on_arrival(s.id, ev.time);
+                }
                 self.try_admit(s, ev.time, q, scheduled);
             }
             EventKind::StepReady(i) => {
@@ -1640,7 +1704,7 @@ impl SimCluster {
                 self.instances[i].step().expect("sim step");
                 let delta =
                     (self.instances[i].finished.len() - finished_before) as u64;
-                self.commit_step(i, delta, q, scheduled, tick_period);
+                self.commit_step(ev.time, i, delta, q, scheduled, tick_period);
             }
             EventKind::Ctrl(msg) => {
                 self.handle_ctrl(msg, ev.time, q, scheduled);
@@ -1722,6 +1786,11 @@ impl SimCluster {
                     );
                     self.instances[src].confirm_order(order);
                 }
+                if disp == Stage2Disposition::Applied {
+                    if let Some(tr) = self.tracer.as_mut() {
+                        tr.on_stage2_applied(order, ev.time);
+                    }
+                }
                 if disp == Stage2Disposition::Applied
                     && !scheduled[dest]
                     && !self.instances[dest].is_idle()
@@ -1742,7 +1811,7 @@ impl SimCluster {
                 }
             }
             EventKind::ReallocTick => {
-                self.realloc_round(q, false);
+                self.realloc_round(q, false, ev.time);
                 // Re-arm only while the fleet still has live events:
                 // an empty heap means every instance is idle and no
                 // packet is in flight, i.e. the run is over.
@@ -1901,6 +1970,9 @@ impl SimCluster {
         q: &mut EventQueue,
         scheduled: &mut [bool],
     ) {
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.on_admit(s.id, i, now);
+        }
         let inst = &mut self.instances[i];
         if inst.is_idle() && inst.backend.clock < now {
             inst.backend.clock = now;
@@ -1937,6 +2009,9 @@ impl SimCluster {
     /// Tier 0 when the shard never had a live candidate.
     fn refuse_admission(&mut self, shard: usize) {
         self.admission_refusals += 1;
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.on_refusal(shard);
+        }
         let tier = self.shards[shard]
             .refusal_candidate
             .map(|i| self.tier_of[i])
@@ -2116,17 +2191,27 @@ impl SimCluster {
     /// order per shard. `step_gated` applies each shard's own cooldown
     /// clock (step cadence); timed ticks (`step_gated = false`) run
     /// every shard, as the single ReallocTick event always did.
-    fn realloc_round(&mut self, q: &mut EventQueue, step_gated: bool) {
+    fn realloc_round(&mut self, q: &mut EventQueue, step_gated: bool, now: f64) {
         for s in 0..self.shards.len() {
             if step_gated && !self.shards[s].realloc.due(self.steps) {
                 continue;
             }
             let plan = self.realloc_plan_shard(s);
+            if !plan.is_empty() {
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.on_realloc(s, plan.len(), plan_summary(&plan), now);
+                }
+            }
             self.execute_orders(plan, q);
         }
         if self.shards.len() > 1 {
             let plan = self.plan_federation_round();
             self.cross_shard_orders += plan.len() as u64;
+            if !plan.is_empty() {
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.on_federation(plan.len(), plan_summary(&plan), now);
+                }
+            }
             self.execute_orders(plan, q);
         }
     }
@@ -2250,6 +2335,10 @@ impl SimCluster {
         let stage2 = match self.instances[from].begin_migration(to, count, order) {
             MigrateStart::Refused => {
                 self.report_refusal(from);
+                if let Some(tr) = self.tracer.as_mut() {
+                    let at = self.instances[from].backend.clock;
+                    tr.on_order_refused(from, at);
+                }
                 return None;
             }
             MigrateStart::QueueOnly(pkt) => pkt,
@@ -2267,13 +2356,23 @@ impl SimCluster {
                     }
                     _ => {
                         self.report_refusal(from);
+                        if let Some(tr) = self.tracer.as_mut() {
+                            let at = self.instances[from].backend.clock;
+                            tr.on_order_refused(from, at);
+                        }
                         return None;
                     }
                 }
             }
         };
         let now = self.instances[from].backend.clock;
+        let moved = stage2.control.len() + stage2.waiting_tasks.len();
         let dur = self.account_stage2(&stage2);
+        // The perfect link delivers exactly once, so the whole Stage-2
+        // leg span is known synchronously.
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.on_order_perfect(order, from, to, moved, now, now + dur);
+        }
         Some((now + dur, stage2))
     }
 
@@ -2341,10 +2440,19 @@ impl SimCluster {
         let now = self.instances[from].backend.clock;
         let retransmit_secs = self.retransmit_period();
         match self.instances[from].begin_migration(to, count, order) {
-            MigrateStart::Refused => self.report_refusal(from),
+            MigrateStart::Refused => {
+                self.report_refusal(from);
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.on_order_refused(from, now);
+                }
+            }
             MigrateStart::QueueOnly(pkt) => {
                 // The tasks already left the source queue — the order is
                 // born committed; the held copy retransmits until acked.
+                let moved = pkt.control.len() + pkt.waiting_tasks.len();
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.on_order_start(order, from, to, moved, now);
+                }
                 let dur = self.account_stage2(&pkt);
                 self.orders.insert(
                     order,
@@ -2364,6 +2472,9 @@ impl SimCluster {
                 q.push(now + retransmit_secs, EventKind::Retransmit { order });
             }
             MigrateStart::AllocReq(req) => {
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.on_order_start(order, from, to, count, now);
+                }
                 self.orders.insert(
                     order,
                     OrderState {
@@ -2597,6 +2708,9 @@ impl SimCluster {
         };
         if st.committed {
             self.retransmits += 1;
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.on_retransmit(order, now);
+            }
             self.send_stage1(order, now, q);
             self.send_stage2(order, now, q);
             q.push(now + retransmit_secs, EventKind::Retransmit { order });
@@ -2608,12 +2722,18 @@ impl SimCluster {
             // decode batch.
             let from = st.from;
             self.orders.remove(&order);
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.on_order_ended(order, now, "aborted");
+            }
             self.instances[from].abort_handshake(order);
             self.rearm_step(from, now, q, scheduled);
             return;
         }
         st.resends += 1;
         self.retransmits += 1;
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.on_retransmit(order, now);
+        }
         self.send_alloc_req(order, now, q);
         q.push(now + retransmit_secs, EventKind::Retransmit { order });
     }
@@ -2640,6 +2760,9 @@ impl SimCluster {
     ) {
         self.alive[i] = false;
         self.crashes += 1;
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.on_crash(i, now);
+        }
         self.quiesce_instance(i, now, q, scheduled);
 
         // --- Schedule the recovery (None = permanent loss). ---
@@ -2699,7 +2822,12 @@ impl SimCluster {
                         if self.alive[st.to] {
                             self.instances[st.to].cancel_inbound_order(order);
                         }
+                        if let Some(tr) = self.tracer.as_mut() {
+                            tr.on_order_ended(order, now, "cancelled");
+                        }
                     }
+                } else if let Some(tr) = self.tracer.as_mut() {
+                    tr.on_order_ended(order, now, "cancelled");
                 }
             } else {
                 // The destination died mid-order.
@@ -2717,6 +2845,9 @@ impl SimCluster {
                 } else {
                     // Handshake to a dead peer: abort immediately —
                     // victims never left the source batch.
+                    if let Some(tr) = self.tracer.as_mut() {
+                        tr.on_order_ended(order, now, "aborted");
+                    }
                     self.instances[st.from].abort_handshake(order);
                     self.rearm_step(st.from, now, q, scheduled);
                 }
@@ -2766,6 +2897,9 @@ impl SimCluster {
     ) {
         self.alive[i] = false;
         self.instances[i].metrics.preemptions += 1;
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.on_preempt(i, now);
+        }
         if let Some(lp) = self.rlhf.as_mut() {
             lp.preemptions += 1;
             lp.parked.push(i);
@@ -2844,6 +2978,9 @@ impl SimCluster {
         let colocated = lp.cfg.placement == Placement::Colocated;
         let steal = lp.cfg.train_instances.max(1).min(self.instances.len());
         q.push(now + (infer + train).max(0.0), EventKind::TrainEnd);
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.on_train_start(now, batch as u64, tokens);
+        }
         if colocated {
             // Steal the lowest-id alive instances; their live samples
             // are salvaged onto the survivors (or the backlog) exactly
@@ -2877,12 +3014,20 @@ impl SimCluster {
             refresh_downtime = lp.cfg.refresh_secs.max(0.0);
         }
         let scale = lp.scale;
+        let version = lp.model_version;
+        let refreshed = refresh_downtime > 0.0;
         let parked = std::mem::take(&mut lp.parked);
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.on_train_end(now, version, refreshed);
+        }
         // Revive the parked instances first (empty — admission and the
         // next reallocation round refill them), so the refresh downtime
         // below charges the *whole* fleet.
         for i in parked {
             self.alive[i] = true;
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.on_rejoin(i, now, "training");
+            }
             let inst = &mut self.instances[i];
             if inst.backend.clock < now {
                 inst.backend.clock = now; // the training step consumed the time
@@ -2907,6 +3052,9 @@ impl SimCluster {
     fn recover_instance(&mut self, i: usize, now: f64, q: &mut EventQueue) {
         self.alive[i] = true;
         self.recoveries += 1;
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.on_rejoin(i, now, "crashed");
+        }
         let inst = &mut self.instances[i];
         if inst.backend.clock < now {
             inst.backend.clock = now; // the outage consumed virtual time
@@ -2938,6 +3086,9 @@ impl SimCluster {
             return;
         }
         self.samples_requeued += samples.len() as u64;
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.on_requeue(home, samples.len(), now);
+        }
         let mut it = samples.into_iter();
         if self.shards[home].pending.is_empty() {
             let lo = self.shards[home].lo;
@@ -3019,6 +3170,9 @@ impl SimCluster {
         self.cancelled.insert(order);
         self.salvaged_orders.insert(order); // `tasks` are rescued below
         self.bounced_orders += 1;
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.on_order_ended(order, now, "bounced");
+        }
         if let Some((samples, bulk_released)) = self.instances[src].reclaim_limbo(order) {
             for mut s in samples {
                 if bulk_released {
@@ -3088,14 +3242,16 @@ impl SimCluster {
             refusals: self.shards.iter().map(|sh| sh.realloc.refusals).sum(),
             cross_shard_orders: self.cross_shard_orders,
             orders_attempted: self.orders_attempted,
-            retransmits: self.retransmits,
-            handshake_aborts: self
-                .instances
-                .iter()
-                .map(|x| x.metrics.orders_aborted)
-                .sum(),
-            link_drops,
-            link_dups,
+            protocol: ProtocolCounters {
+                retransmits: self.retransmits,
+                handshake_aborts: self
+                    .instances
+                    .iter()
+                    .map(|x| x.metrics.orders_aborted)
+                    .sum(),
+                link_drops,
+                link_dups,
+            },
             crashes: self.crashes,
             recoveries: self.recoveries,
             samples_requeued: self.samples_requeued,
@@ -3425,8 +3581,8 @@ mod tests {
         );
         let r = c.run();
         assert!(r.migrations > 0, "skew must trigger migrations");
-        assert!(r.link_drops > 0, "a 30% drop link must drop something");
-        assert!(r.retransmits > 0, "drops must force retransmissions");
+        assert!(r.protocol.link_drops > 0, "a 30% drop link must drop something");
+        assert!(r.protocol.retransmits > 0, "drops must force retransmissions");
         let mut ids: Vec<u64> = c
             .instances
             .iter()
@@ -3459,8 +3615,8 @@ mod tests {
         assert_eq!(a.total_tokens, b.total_tokens);
         assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
         assert_eq!(a.migrations, b.migrations);
-        assert_eq!(a.retransmits, b.retransmits);
-        assert_eq!((a.link_drops, a.link_dups), (b.link_drops, b.link_dups));
+        assert_eq!(a.protocol.retransmits, b.protocol.retransmits);
+        assert_eq!((a.protocol.link_drops, a.protocol.link_dups), (b.protocol.link_drops, b.protocol.link_dups));
     }
 
     #[test]
@@ -3573,7 +3729,7 @@ mod tests {
         let mut c = SimCluster::with_assignment(cfg, crash_skew());
         let r = c.run();
         assert!(r.crashes > 0);
-        assert!(r.link_drops > 0);
+        assert!(r.protocol.link_drops > 0);
         assert_eq!(finished_ids(&c), (0..36).collect::<Vec<u64>>());
         assert_eq!(c.instances.iter().map(|x| x.limbo_count()).sum::<usize>(), 0);
         assert!(c.orders.is_empty(), "no in-flight order may survive the run");
@@ -3818,10 +3974,7 @@ mod tests {
             refusals: 0,
             cross_shard_orders: 0,
             orders_attempted: 0,
-            retransmits: 0,
-            handshake_aborts: 0,
-            link_drops: 0,
-            link_dups: 0,
+            protocol: ProtocolCounters::default(),
             crashes: 0,
             recoveries: 0,
             samples_requeued: 0,

@@ -72,8 +72,10 @@ pub mod link;
 pub mod pool;
 pub mod rlhf_loop;
 pub mod timers;
+pub mod trace;
 
 pub use cluster::{ClusterConfig, ClusterResult, FleetTier, SimCluster, TierStats};
+pub use trace::{ChromeTraceSink, ClusterTrace, MetricsRegistry, NullSink, TraceConfig, TraceSink};
 pub use crash::{CrashConfig, CrashSchedule};
 pub use rlhf_loop::{LoopMode, LoopOutcome, Placement, RlhfLoopConfig};
 pub use cost_model::CostModel;

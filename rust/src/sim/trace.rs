@@ -1,0 +1,947 @@
+//! Structured trace & metrics plane: per-sample lifecycle spans,
+//! Perfetto-loadable timelines, and an engine self-profiler.
+//!
+//! Every subsystem in the simulator reports end-of-run aggregates
+//! ([`crate::sim::cluster::ClusterResult`]); this module adds the
+//! *timeline* view needed to diagnose **why** a run is slow — straggler
+//! samples, idle gaps around weight barriers, federation ping-pong,
+//! sequential-fallback beats — without ad-hoc printlns:
+//!
+//! * [`TraceSink`] — the event consumer trait. [`NullSink`] discards
+//!   everything; [`ChromeTraceSink`] buffers Chrome trace-event records
+//!   and writes a `{"traceEvents": [...]}` JSON file loadable in
+//!   Perfetto / `chrome://tracing` (one track per instance plus
+//!   control-plane / RLHF-loop / engine tracks, timestamps on the
+//!   cluster's virtual clock in microseconds).
+//! * [`MetricsRegistry`] — named monotonic counters plus log-linear
+//!   [`Histogram`]s (per-stage seconds, round sizes, accept lengths,
+//!   queueing delays), exported as a JSON document next to the trace.
+//! * [`ClusterTrace`] — the cluster-side instrumentation state machine:
+//!   [`crate::sim::cluster::SimCluster`] holds an
+//!   `Option<ClusterTrace>` (default `None` — the hot paths pay one
+//!   pointer-null check) and calls its `on_*` hooks at commit points.
+//!
+//! **Bit-inertness contract.** Tracing must never change results. The
+//! hooks observe events strictly *after* the cluster committed them,
+//! never draw from any RNG stream, and never touch cluster state — the
+//! tracer owns only its own buffers. `tests/trace_inert.rs` pins this:
+//! every shared preset (streaming, crash×link, shards×threads) runs
+//! with tracing on and off and must produce bit-identical
+//! `engine_parity` signatures.
+//!
+//! Enable via the `[trace]` config section ([`TraceConfig`]) or the
+//! `PALLAS_TRACE` environment variable (`PALLAS_TRACE=1` for the
+//! default `trace.json`, `PALLAS_TRACE=path.json` to choose the path).
+//! Analyze with `scripts/trace_summary.py` (stage breakdown, top-k
+//! stragglers, per-instance idle gaps) or load the file in Perfetto.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::sim::engine::{SimInstance, SimSample};
+
+/// `[trace]` config section: the observability plane's switch and
+/// output paths. Default-off (and bit-inert when off — see the module
+/// docs); the default honors the `PALLAS_TRACE` environment variable so
+/// CI and ad-hoc runs can record traces without touching any config
+/// file, mirroring `PALLAS_ENGINE_THREADS`.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Record a trace for this run.
+    pub enabled: bool,
+    /// Chrome trace-event JSON output path (Perfetto-loadable).
+    pub out: String,
+    /// Metrics-registry JSON output path (counters + histograms +
+    /// per-instance stage breakdown).
+    pub metrics_out: String,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        default_trace_config()
+    }
+}
+
+impl TraceConfig {
+    /// An explicitly disabled section (ignores `PALLAS_TRACE`) — what
+    /// benches and golden tests use to pin the untraced baseline.
+    pub fn off() -> Self {
+        TraceConfig {
+            enabled: false,
+            out: "trace.json".into(),
+            metrics_out: "trace_metrics.json".into(),
+        }
+    }
+
+    /// An enabled section writing to `out` (metrics path derived by
+    /// [`TraceConfig::derive_metrics_path`]).
+    pub fn to_path(out: &str) -> Self {
+        TraceConfig {
+            enabled: true,
+            out: out.to_string(),
+            metrics_out: Self::derive_metrics_path(out),
+        }
+    }
+
+    /// The metrics-file path paired with a trace path: `x.json` →
+    /// `x_metrics.json`, anything else gets `.metrics.json` appended.
+    pub fn derive_metrics_path(out: &str) -> String {
+        match out.strip_suffix(".json") {
+            Some(stem) => format!("{stem}_metrics.json"),
+            None => format!("{out}.metrics.json"),
+        }
+    }
+
+    /// Set one `[trace]` key (already stripped of the section prefix).
+    pub fn set(&mut self, key: &str, val: &str) -> anyhow::Result<()> {
+        match key {
+            "enabled" => {
+                self.enabled = val
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("expected bool, got {val:?}"))?
+            }
+            "out" => {
+                val.clone_into(&mut self.out);
+                self.metrics_out = Self::derive_metrics_path(val);
+            }
+            "metrics_out" => val.clone_into(&mut self.metrics_out),
+            _ => anyhow::bail!("unknown config key"),
+        }
+        Ok(())
+    }
+}
+
+/// The `PALLAS_TRACE`-driven default: unset / empty / `0` / `false`
+/// disables tracing; `1` / `true` enables it at the default paths; any
+/// other value enables it with that value as the trace path.
+pub fn default_trace_config() -> TraceConfig {
+    match std::env::var("PALLAS_TRACE") {
+        Err(_) => TraceConfig::off(),
+        Ok(v) => {
+            let v = v.trim();
+            match v {
+                "" | "0" | "false" => TraceConfig::off(),
+                "1" | "true" => TraceConfig { enabled: true, ..TraceConfig::off() },
+                path => TraceConfig::to_path(path),
+            }
+        }
+    }
+}
+
+/// A trace track — one horizontal lane in the Perfetto timeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Track {
+    /// Control-plane lane: arrivals, admission, realloc / federation
+    /// decisions, crash / recover instants, order handshakes.
+    Control,
+    /// Engine self-profiler lane: beat sizes and worker occupancy of
+    /// the parallel event engine.
+    Engine,
+    /// RLHF-loop lane: training-step spans and weight-update barriers.
+    Loop,
+    /// Instance `i`'s lane: decode rounds, migration legs, downtime.
+    Instance(usize),
+}
+
+impl Track {
+    /// Stable Chrome-trace thread id for this track (`tid` field).
+    pub fn tid(self) -> u64 {
+        match self {
+            Track::Control => 0,
+            Track::Engine => 1,
+            Track::Loop => 2,
+            Track::Instance(i) => 3 + i as u64,
+        }
+    }
+
+    /// Human-readable lane name shown by the viewer.
+    pub fn name(self) -> String {
+        match self {
+            Track::Control => "control-plane".into(),
+            Track::Engine => "engine".into(),
+            Track::Loop => "rlhf-loop".into(),
+            Track::Instance(i) => format!("instance {i}"),
+        }
+    }
+}
+
+/// One event argument value (shown in the viewer's detail pane).
+#[derive(Clone, Debug)]
+pub enum ArgVal {
+    /// Unsigned counter-like argument.
+    U(u64),
+    /// Floating-point argument (seconds, rates).
+    F(f64),
+    /// Free-form string argument (plan summaries, reasons).
+    S(String),
+}
+
+/// Consumer of trace events. Implementations must not mutate anything
+/// the simulation reads — the bit-inertness contract (module docs).
+pub trait TraceSink: Send {
+    /// A completed span `[start, end]` (virtual seconds) on `track`.
+    fn span(&mut self, track: Track, name: &str, start: f64, end: f64, args: &[(&str, ArgVal)]);
+    /// A zero-duration instant at `ts` on `track`.
+    fn instant(&mut self, track: Track, name: &str, ts: f64, args: &[(&str, ArgVal)]);
+    /// A sampled counter value at `ts` on `track` (rendered as a graph).
+    fn counter(&mut self, track: Track, name: &str, ts: f64, value: f64);
+    /// Flush buffered events. `tracks` names the lanes that were used.
+    fn finish(&mut self, tracks: &[Track]) -> std::io::Result<()>;
+}
+
+/// The zero-cost default sink: discards every event.
+#[derive(Debug, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn span(&mut self, _: Track, _: &str, _: f64, _: f64, _: &[(&str, ArgVal)]) {}
+    fn instant(&mut self, _: Track, _: &str, _: f64, _: &[(&str, ArgVal)]) {}
+    fn counter(&mut self, _: Track, _: &str, _: f64, _: f64) {}
+    fn finish(&mut self, _: &[Track]) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// One buffered Chrome trace-event record (timestamps in microseconds).
+struct ChromeEvent {
+    /// Chrome phase: `X` complete span, `i` instant, `C` counter.
+    ph: char,
+    name: String,
+    tid: u64,
+    ts_us: f64,
+    dur_us: f64,
+    /// Pre-serialized `"args"` JSON object body (no braces), possibly
+    /// empty.
+    args: String,
+}
+
+/// Buffers events and writes Chrome trace-event JSON on
+/// [`TraceSink::finish`] — the format Perfetto and `chrome://tracing`
+/// load directly. Events are sorted by `(ts, tid)` before writing so
+/// per-track timestamps are monotone in file order (pinned by the
+/// schema test in `tests/trace_inert.rs`).
+pub struct ChromeTraceSink {
+    path: String,
+    events: Vec<ChromeEvent>,
+}
+
+impl ChromeTraceSink {
+    /// A sink that will write to `path` on finish.
+    pub fn new(path: &str) -> Self {
+        ChromeTraceSink { path: path.to_string(), events: Vec::new() }
+    }
+
+    /// Buffered event count (tests / diagnostics).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when nothing was recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    fn push(&mut self, ph: char, track: Track, name: &str, ts: f64, dur: f64, args: String) {
+        self.events.push(ChromeEvent {
+            ph,
+            name: name.to_string(),
+            tid: track.tid(),
+            ts_us: ts * 1e6,
+            dur_us: dur * 1e6,
+            args,
+        });
+    }
+}
+
+/// Serialize `args` into a JSON object body (no surrounding braces).
+fn args_json(args: &[(&str, ArgVal)]) -> String {
+    let mut out = String::new();
+    for (k, v) in args {
+        if !out.is_empty() {
+            out.push(',');
+        }
+        let _ = write!(out, "{}:", json_str(k));
+        match v {
+            ArgVal::U(u) => {
+                let _ = write!(out, "{u}");
+            }
+            ArgVal::F(f) => {
+                let _ = write!(out, "{}", json_num(*f));
+            }
+            ArgVal::S(s) => out.push_str(&json_str(s)),
+        }
+    }
+    out
+}
+
+/// Minimal JSON string escaping (quotes, backslash, control chars).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// A JSON-safe float rendering (`NaN`/`±inf` are not valid JSON —
+/// clamp them to 0, they only ever arise from degenerate virtual
+/// clocks).
+fn json_num(f: f64) -> String {
+    if f.is_finite() {
+        format!("{f}")
+    } else {
+        "0".into()
+    }
+}
+
+impl TraceSink for ChromeTraceSink {
+    fn span(&mut self, track: Track, name: &str, start: f64, end: f64, args: &[(&str, ArgVal)]) {
+        let dur = (end - start).max(0.0);
+        self.push('X', track, name, start, dur, args_json(args));
+    }
+
+    fn instant(&mut self, track: Track, name: &str, ts: f64, args: &[(&str, ArgVal)]) {
+        self.push('i', track, name, ts, 0.0, args_json(args));
+    }
+
+    fn counter(&mut self, track: Track, name: &str, ts: f64, value: f64) {
+        self.push('C', track, name, ts, 0.0, format!("\"value\":{}", json_num(value)));
+    }
+
+    fn finish(&mut self, tracks: &[Track]) -> std::io::Result<()> {
+        // Monotone per-track timestamps in file order: stable sort by
+        // (ts, tid) — emit order breaks remaining ties
+        // deterministically.
+        self.events
+            .sort_by(|a, b| a.ts_us.total_cmp(&b.ts_us).then(a.tid.cmp(&b.tid)));
+        let mut out = String::with_capacity(64 + self.events.len() * 96);
+        out.push_str("{\"traceEvents\":[");
+        let mut first = true;
+        // Thread-name metadata first: Perfetto labels each lane.
+        for t in tracks {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            let _ = write!(
+                out,
+                "{{\"ph\":\"M\",\"pid\":0,\"tid\":{},\"name\":\"thread_name\",\
+                 \"args\":{{\"name\":{}}}}}",
+                t.tid(),
+                json_str(&t.name()),
+            );
+        }
+        for e in &self.events {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            let _ = write!(
+                out,
+                "{{\"ph\":\"{}\",\"pid\":0,\"tid\":{},\"name\":{},\"ts\":{}",
+                e.ph,
+                e.tid,
+                json_str(&e.name),
+                json_num(e.ts_us),
+            );
+            if e.ph == 'X' {
+                let _ = write!(out, ",\"dur\":{}", json_num(e.dur_us));
+            }
+            if e.args.is_empty() {
+                out.push_str(",\"args\":{}}");
+            } else {
+                let _ = write!(out, ",\"args\":{{{}}}}}", e.args);
+            }
+        }
+        out.push_str("]}");
+        std::fs::write(&self.path, out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metrics registry
+// ---------------------------------------------------------------------------
+
+/// Sub-buckets per power of two in [`Histogram`] — resolution ≈ 19%
+/// per bucket, constant memory per decade.
+const HIST_SUBBUCKETS: f64 = 4.0;
+
+/// A log-linear histogram: values land in buckets of geometrically
+/// growing width (4 per power of two), so one structure covers
+/// microseconds to hours with bounded error and bounded memory.
+/// Non-positive and non-finite observations are counted in a separate
+/// underflow bucket.
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    /// Total observations (including underflow).
+    pub count: u64,
+    /// Sum of all finite observations.
+    pub sum: f64,
+    /// Smallest observation (0 when empty).
+    pub min: f64,
+    /// Largest observation (0 when empty).
+    pub max: f64,
+    /// Observations that were ≤ 0 or non-finite.
+    pub underflow: u64,
+    /// Bucket index → count; the index encodes
+    /// `floor(log2(v) * HIST_SUBBUCKETS)`.
+    pub buckets: BTreeMap<i32, u64>,
+}
+
+impl Histogram {
+    /// Record one observation.
+    pub fn observe(&mut self, v: f64) {
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        if !v.is_finite() || v <= 0.0 {
+            self.underflow += 1;
+            return;
+        }
+        self.sum += v;
+        let idx = (v.log2() * HIST_SUBBUCKETS).floor() as i32;
+        *self.buckets.entry(idx).or_insert(0) += 1;
+    }
+
+    /// Arithmetic mean of the finite positive observations.
+    pub fn mean(&self) -> f64 {
+        let n = self.count - self.underflow;
+        if n == 0 {
+            0.0
+        } else {
+            self.sum / n as f64
+        }
+    }
+
+    /// Lower bound of bucket `idx` in value space.
+    pub fn bucket_lo(idx: i32) -> f64 {
+        (idx as f64 / HIST_SUBBUCKETS).exp2()
+    }
+
+    /// Approximate quantile (`q` in [0, 1]) from bucket lower bounds —
+    /// within one bucket width (≈ 19%) of the true value.
+    pub fn approx_quantile(&self, q: f64) -> f64 {
+        let n = self.count - self.underflow;
+        if n == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * n as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (&idx, &c) in &self.buckets {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_lo(idx);
+            }
+        }
+        self.max
+    }
+
+    fn to_json(&self) -> String {
+        let mut b = String::new();
+        for (&idx, &c) in &self.buckets {
+            if !b.is_empty() {
+                b.push(',');
+            }
+            let _ = write!(b, "[{},{}]", json_num(Self::bucket_lo(idx)), c);
+        }
+        format!(
+            "{{\"count\":{},\"sum\":{},\"min\":{},\"max\":{},\"underflow\":{},\
+             \"mean\":{},\"buckets\":[{}]}}",
+            self.count,
+            json_num(self.sum),
+            json_num(self.min),
+            json_num(self.max),
+            self.underflow,
+            json_num(self.mean()),
+            b,
+        )
+    }
+}
+
+/// Named monotonic counters + log-linear histograms, exported as one
+/// JSON document. Deterministic iteration (BTreeMap) keeps the export
+/// byte-stable for a given run.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    /// Add `by` to counter `name` (created at 0).
+    pub fn inc(&mut self, name: &str, by: u64) {
+        match self.counters.get_mut(name) {
+            Some(c) => *c += by,
+            None => {
+                self.counters.insert(name.to_string(), by);
+            }
+        }
+    }
+
+    /// Record one observation in histogram `name` (created empty).
+    pub fn observe(&mut self, name: &str, v: f64) {
+        match self.hists.get_mut(name) {
+            Some(h) => h.observe(v),
+            None => {
+                let mut h = Histogram::default();
+                h.observe(v);
+                self.hists.insert(name.to_string(), h);
+            }
+        }
+    }
+
+    /// Current value of counter `name` (0 when never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Histogram `name`, if any observation was recorded.
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    /// Serialize as a JSON object body: `"counters": {...},
+    /// "histograms": {...}` (no surrounding braces, so callers can
+    /// splice extra sections in).
+    pub fn to_json_body(&self) -> String {
+        let mut out = String::from("\"counters\":{");
+        let mut first = true;
+        for (k, v) in &self.counters {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            let _ = write!(out, "{}:{}", json_str(k), v);
+        }
+        out.push_str("},\"histograms\":{");
+        first = true;
+        for (k, h) in &self.hists {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            let _ = write!(out, "{}:{}", json_str(k), h.to_json());
+        }
+        out.push('}');
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cluster instrumentation
+// ---------------------------------------------------------------------------
+
+/// An in-flight migration order being traced (faulty-transport path —
+/// the perfect path emits its leg span synchronously).
+struct OrderTrace {
+    from: usize,
+    to: usize,
+    moved: usize,
+    start: f64,
+}
+
+/// The cluster-side instrumentation state machine: owns the sink and
+/// registry, plus the small amount of tracer-private state needed to
+/// turn commit-order hook calls into spans (open migration legs, open
+/// downtime windows, per-instance token cursors). Every method is a
+/// pure observer — see the module-level bit-inertness contract.
+pub struct ClusterTrace {
+    sink: Box<dyn TraceSink>,
+    /// The metrics registry exported to [`TraceConfig::metrics_out`].
+    pub metrics: MetricsRegistry,
+    cfg: TraceConfig,
+    /// Per-instance cumulative-token cursor (round-span deltas).
+    prev_tokens: Vec<u64>,
+    /// Per-instance open downtime window (crash or training preempt).
+    down_since: Vec<Option<f64>>,
+    /// Open migration-leg spans by order id (faulty path).
+    orders: BTreeMap<u64, OrderTrace>,
+    /// Open training-step span start.
+    train_since: Option<f64>,
+    /// Worker threads of the engine (occupancy denominator; 1 for the
+    /// sequential loop).
+    threads: usize,
+}
+
+impl ClusterTrace {
+    /// Tracer for an `n_instances`-wide fleet running on `threads`
+    /// engine workers, writing to `cfg`'s paths.
+    pub fn new(cfg: &TraceConfig, n_instances: usize, threads: usize) -> Self {
+        ClusterTrace {
+            sink: Box::new(ChromeTraceSink::new(&cfg.out)),
+            metrics: MetricsRegistry::default(),
+            cfg: cfg.clone(),
+            prev_tokens: vec![0; n_instances],
+            down_since: vec![None; n_instances],
+            orders: BTreeMap::new(),
+            train_since: None,
+            threads: threads.max(1),
+        }
+    }
+
+    /// A streaming sample reached the cluster.
+    pub fn on_arrival(&mut self, id: u64, t: f64) {
+        self.metrics.inc("cluster/arrivals", 1);
+        self.sink.instant(Track::Control, "arrival", t, &[("sample", ArgVal::U(id))]);
+    }
+
+    /// A sample entered instance `i`'s decode plane.
+    pub fn on_admit(&mut self, id: u64, i: usize, t: f64) {
+        self.metrics.inc("cluster/admissions", 1);
+        self.sink.instant(Track::Instance(i), "admit", t, &[("sample", ArgVal::U(id))]);
+    }
+
+    /// An arrival was refused (backlog at its bound). No virtual
+    /// timestamp is available at the refusal sites; counted only.
+    pub fn on_refusal(&mut self, shard: usize) {
+        self.metrics.inc("cluster/admission_refusals", 1);
+        self.metrics.inc(&format!("cluster/admission_refusals/shard{shard}"), 1);
+    }
+
+    /// Instance `i` committed one decode round that started at `t0`:
+    /// emit the round span and feed the round-size histograms.
+    pub fn on_round(&mut self, i: usize, t0: f64, inst: &SimInstance) {
+        let t1 = inst.backend.clock;
+        let tokens = inst.metrics.tokens_out - self.prev_tokens[i];
+        self.prev_tokens[i] = inst.metrics.tokens_out;
+        let batch = inst.sample_count() as u64;
+        self.metrics.inc("cluster/rounds", 1);
+        self.metrics.observe("round/secs", t1 - t0);
+        self.metrics.observe("round/tokens", tokens as f64);
+        self.metrics.observe("round/batch", batch as f64);
+        self.sink.span(
+            Track::Instance(i),
+            "round",
+            t0,
+            t1,
+            &[("tokens", ArgVal::U(tokens)), ("batch", ArgVal::U(batch))],
+        );
+    }
+
+    /// Sample `s` finished on instance `i`: emit its lifecycle spans
+    /// (queue → prefill → decode) from the stamps the engine kept, and
+    /// feed the latency histograms. Crash-salvaged samples carry a
+    /// `requeued_at` stamp, surfaced as an argument.
+    pub fn on_sample_finished(&mut self, i: usize, s: &SimSample) {
+        self.metrics.inc("cluster/completions", 1);
+        self.metrics.observe("sample/accept_len", s.accepted as f64 / s.rounds.max(1) as f64);
+        let Some(admit) = s.admit_time else { return };
+        let Some(finish) = s.finish_time else { return };
+        if admit > s.arrival_time {
+            self.metrics.observe("sample/queue_secs", admit - s.arrival_time);
+            self.sink.span(
+                Track::Control,
+                "queued",
+                s.arrival_time,
+                admit,
+                &[("sample", ArgVal::U(s.id))],
+            );
+        }
+        let first = s.first_token_time.unwrap_or(finish);
+        self.metrics.observe("sample/ttft_secs", first - s.arrival_time);
+        self.metrics.observe("sample/total_secs", finish - s.arrival_time);
+        let mut args = vec![
+            ("sample", ArgVal::U(s.id)),
+            ("tokens", ArgVal::U(s.generated as u64)),
+            ("rounds", ArgVal::U(s.rounds as u64)),
+        ];
+        if let Some(rq) = s.requeued_at {
+            args.push(("requeued_at", ArgVal::F(rq)));
+        }
+        self.sink.span(Track::Instance(i), "prefill", admit, first, &args[..1]);
+        self.sink.span(Track::Instance(i), "decode", first, finish, &args);
+    }
+
+    /// A perfect-path migration order shipped: its Stage-2 leg span is
+    /// known synchronously (`[start, land]` on the destination lane).
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_order_perfect(
+        &mut self,
+        order: u64,
+        from: usize,
+        to: usize,
+        moved: usize,
+        start: f64,
+        land: f64,
+    ) {
+        self.metrics.inc("migration/orders", 1);
+        self.metrics.observe("migration/leg_secs", land - start);
+        self.metrics.observe("migration/moved", moved as f64);
+        let args = [
+            ("order", ArgVal::U(order)),
+            ("from", ArgVal::U(from as u64)),
+            ("moved", ArgVal::U(moved as u64)),
+        ];
+        self.sink.span(Track::Instance(to), "migration", start, land, &args);
+    }
+
+    /// A faulty-path order opened its handshake (or shipped
+    /// queue-only): the leg span stays open until applied / aborted.
+    pub fn on_order_start(&mut self, order: u64, from: usize, to: usize, moved: usize, t: f64) {
+        self.metrics.inc("migration/orders", 1);
+        self.orders.insert(order, OrderTrace { from, to, moved, start: t });
+        let args = [
+            ("order", ArgVal::U(order)),
+            ("from", ArgVal::U(from as u64)),
+            ("to", ArgVal::U(to as u64)),
+        ];
+        self.sink.instant(Track::Control, "order-start", t, &args);
+    }
+
+    /// A migration order was refused at planning / handshake time.
+    pub fn on_order_refused(&mut self, from: usize, t: f64) {
+        self.metrics.inc("migration/refusals", 1);
+        self.sink.instant(Track::Control, "order-refused", t, &[("from", ArgVal::U(from as u64))]);
+    }
+
+    /// A Stage-2 packet applied at its destination: close the order's
+    /// open leg span (first delivery only — duplicates fall through).
+    pub fn on_stage2_applied(&mut self, order: u64, t: f64) {
+        let Some(o) = self.orders.remove(&order) else { return };
+        self.metrics.observe("migration/leg_secs", t - o.start);
+        self.metrics.observe("migration/moved", o.moved as f64);
+        let args = [
+            ("order", ArgVal::U(order)),
+            ("from", ArgVal::U(o.from as u64)),
+            ("moved", ArgVal::U(o.moved as u64)),
+        ];
+        self.sink.span(Track::Instance(o.to), "migration", o.start, t, &args);
+    }
+
+    /// An order ended without applying (handshake abort, crash
+    /// reconciliation, Stage-2 bounce): close its span as `reason`.
+    pub fn on_order_ended(&mut self, order: u64, t: f64, reason: &str) {
+        let Some(o) = self.orders.remove(&order) else { return };
+        self.metrics.inc(&format!("migration/{reason}"), 1);
+        let args = [("order", ArgVal::U(order)), ("reason", ArgVal::S(reason.to_string()))];
+        self.sink.span(Track::Instance(o.to), "migration (failed)", o.start, t, &args);
+    }
+
+    /// A carrier retransmission fired for `order`.
+    pub fn on_retransmit(&mut self, order: u64, t: f64) {
+        self.metrics.inc("migration/retransmits", 1);
+        self.sink.instant(Track::Control, "retransmit", t, &[("order", ArgVal::U(order))]);
+    }
+
+    /// Instance `i` crashed: open its downtime window.
+    pub fn on_crash(&mut self, i: usize, t: f64) {
+        self.metrics.inc("crash/crashes", 1);
+        self.down_since[i] = Some(t);
+        self.sink.instant(Track::Control, "crash", t, &[("instance", ArgVal::U(i as u64))]);
+    }
+
+    /// Instance `i` was preempted for a colocated training step.
+    pub fn on_preempt(&mut self, i: usize, t: f64) {
+        self.metrics.inc("loop/preemptions", 1);
+        self.down_since[i] = Some(t);
+        self.sink.instant(Track::Control, "preempt", t, &[("instance", ArgVal::U(i as u64))]);
+    }
+
+    /// Instance `i` rejoined the fleet: close its downtime window as a
+    /// span on its own lane (`reason` is `"crashed"` or `"training"`).
+    pub fn on_rejoin(&mut self, i: usize, t: f64, reason: &str) {
+        self.metrics.inc("crash/rejoins", 1);
+        if let Some(since) = self.down_since[i].take() {
+            self.metrics.observe("crash/downtime_secs", t - since);
+            let args = [("reason", ArgVal::S(reason.to_string()))];
+            self.sink.span(Track::Instance(i), "down", since, t, &args);
+        }
+        self.sink.instant(Track::Control, "recover", t, &[("instance", ArgVal::U(i as u64))]);
+    }
+
+    /// `n` salvaged samples re-entered through the requeue path.
+    pub fn on_requeue(&mut self, shard: usize, n: usize, t: f64) {
+        self.metrics.inc("crash/samples_requeued", n as u64);
+        let args = [("shard", ArgVal::U(shard as u64)), ("samples", ArgVal::U(n as u64))];
+        self.sink.instant(Track::Control, "requeue", t, &args);
+    }
+
+    /// A shard's reallocation decision produced `plan` (non-empty).
+    /// `plan` is pre-rendered by the caller (e.g.
+    /// [`crate::coordinator::reallocator::plan_summary`]) so the hook
+    /// stays decoupled from planner types.
+    pub fn on_realloc(&mut self, shard: usize, orders: usize, plan: String, t: f64) {
+        self.metrics.inc("realloc/decisions", 1);
+        self.metrics.observe("realloc/orders_per_decision", orders as f64);
+        let args = [
+            ("shard", ArgVal::U(shard as u64)),
+            ("orders", ArgVal::U(orders as u64)),
+            ("plan", ArgVal::S(plan)),
+        ];
+        self.sink.instant(Track::Control, "realloc", t, &args);
+    }
+
+    /// The federation layer paired shards into `orders` cross-shard
+    /// orders this round.
+    pub fn on_federation(&mut self, orders: usize, plan: String, t: f64) {
+        self.metrics.inc("federation/orders", orders as u64);
+        let args = [("orders", ArgVal::U(orders as u64)), ("plan", ArgVal::S(plan))];
+        self.sink.instant(Track::Control, "federation", t, &args);
+    }
+
+    /// A training step started: `batch` pooled samples, `tokens` total.
+    pub fn on_train_start(&mut self, t: f64, batch: u64, tokens: u64) {
+        self.metrics.inc("loop/train_steps", 1);
+        self.train_since = Some(t);
+        let args = [("batch", ArgVal::U(batch)), ("tokens", ArgVal::U(tokens))];
+        self.sink.instant(Track::Loop, "train-start", t, &args);
+    }
+
+    /// The weight-update barrier executed: close the training span.
+    pub fn on_train_end(&mut self, t: f64, version: u64, refreshed: bool) {
+        self.metrics.inc("loop/barriers", 1);
+        if let Some(since) = self.train_since.take() {
+            self.metrics.observe("loop/train_secs", t - since);
+            let args = [
+                ("version", ArgVal::U(version)),
+                ("drafter_refresh", ArgVal::U(refreshed as u64)),
+            ];
+            self.sink.span(Track::Loop, "train", since, t, &args);
+        }
+        self.sink.instant(Track::Loop, "barrier", t, &[("version", ArgVal::U(version))]);
+    }
+
+    /// The parallel engine committed a beat of `len` steps at `t`
+    /// (engine self-profiler).
+    pub fn on_beat(&mut self, len: usize, t: f64) {
+        self.metrics.inc("engine/beats", 1);
+        self.metrics.inc("engine/beat_steps", len as u64);
+        self.metrics.observe("engine/beat_size", len as f64);
+        let occupancy = len.min(self.threads) as f64 / self.threads as f64;
+        self.metrics.observe("engine/occupancy", occupancy);
+        self.sink.counter(Track::Engine, "beat_size", t, len as f64);
+    }
+
+    /// The parallel engine fell back to the sequential path for
+    /// `reason` (engine self-profiler; one count per fallback event).
+    pub fn on_fallback(&mut self, reason: &'static str) {
+        self.metrics.inc("engine/fallbacks", 1);
+        self.metrics.inc(&format!("engine/fallback/{reason}"), 1);
+    }
+
+    /// End of run: feed the per-instance §7.7 stage breakdown into the
+    /// registry, flush the sink to [`TraceConfig::out`] and write the
+    /// registry to [`TraceConfig::metrics_out`].
+    pub fn finish(&mut self, instances: &[SimInstance]) -> std::io::Result<()> {
+        let mut tracks = vec![Track::Control, Track::Engine, Track::Loop];
+        let mut per_inst = String::new();
+        for (i, inst) in instances.iter().enumerate() {
+            tracks.push(Track::Instance(i));
+            let m = &inst.metrics;
+            for (name, secs) in m.stage_breakdown() {
+                self.metrics.observe(&format!("stage/{name}_secs"), secs);
+            }
+            if !per_inst.is_empty() {
+                per_inst.push(',');
+            }
+            let _ = write!(
+                per_inst,
+                "{{\"instance\":{i},\"rounds\":{},\"tokens_out\":{},\
+                 \"samples_finished\":{},\"stages\":{{",
+                m.rounds, m.tokens_out, m.samples_finished,
+            );
+            let mut first = true;
+            for (name, secs) in m.stage_breakdown() {
+                if !first {
+                    per_inst.push(',');
+                }
+                first = false;
+                let _ = write!(per_inst, "{}:{}", json_str(name), json_num(secs));
+            }
+            per_inst.push_str("}}");
+        }
+        let metrics_doc =
+            format!("{{{},\"instances\":[{}]}}", self.metrics.to_json_body(), per_inst);
+        std::fs::write(&self.cfg.metrics_out, metrics_doc)?;
+        self.sink.finish(&tracks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let mut h = Histogram::default();
+        for v in [0.001, 0.01, 0.1, 1.0, 10.0, 100.0] {
+            h.observe(v);
+        }
+        h.observe(0.0); // underflow
+        h.observe(f64::NAN); // underflow
+        assert_eq!(h.count, 8);
+        assert_eq!(h.underflow, 2);
+        assert!((h.mean() - (111.111 / 6.0)).abs() < 1e-2);
+        // Bucket resolution: the approximate quantile is within one
+        // bucket width (2^(1/4) ≈ 1.19x) below the true value.
+        let q = h.approx_quantile(1.0);
+        assert!(q <= 100.0 && q >= 100.0 / 2f64.powf(0.25) - 1e-9, "{q}");
+        assert_eq!(h.approx_quantile(1e-9), Histogram::bucket_lo((0.001f64.log2() * 4.0).floor() as i32));
+    }
+
+    #[test]
+    fn registry_roundtrip_json() {
+        let mut m = MetricsRegistry::default();
+        m.inc("a/b", 2);
+        m.inc("a/b", 3);
+        m.observe("h", 1.5);
+        assert_eq!(m.counter("a/b"), 5);
+        assert_eq!(m.histogram("h").unwrap().count, 1);
+        let body = format!("{{{}}}", m.to_json_body());
+        let doc = crate::utils::json::Json::parse(&body).expect("valid json");
+        assert_eq!(doc.get("counters").and_then(|c| c.get("a/b")).and_then(|v| v.as_f64()), Some(5.0));
+    }
+
+    #[test]
+    fn chrome_sink_emits_valid_sorted_json() {
+        let path = std::env::temp_dir().join("rlhfspec_trace_sink_test.json");
+        let mut sink = ChromeTraceSink::new(path.to_str().unwrap());
+        sink.span(Track::Instance(0), "b", 2.0, 3.0, &[("k", ArgVal::S("v\"x".into()))]);
+        sink.instant(Track::Control, "a", 1.0, &[]);
+        sink.counter(Track::Engine, "c", 0.5, 4.0);
+        sink.finish(&[Track::Control, Track::Engine, Track::Instance(0)]).unwrap();
+        let src = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::utils::json::Json::parse(&src).expect("valid json");
+        let evs = doc.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents");
+        // 3 metadata + 3 events, sorted by ts after the metadata.
+        assert_eq!(evs.len(), 6);
+        let ts: Vec<f64> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) != Some("M"))
+            .map(|e| e.get("ts").and_then(|t| t.as_f64()).unwrap())
+            .collect();
+        assert_eq!(ts, vec![0.5e6, 1.0e6, 2.0e6]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn pallas_trace_paths_derive() {
+        assert_eq!(TraceConfig::derive_metrics_path("x.json"), "x_metrics.json");
+        assert_eq!(TraceConfig::derive_metrics_path("x.out"), "x.out.metrics.json");
+        let c = TraceConfig::to_path("run.json");
+        assert!(c.enabled);
+        assert_eq!(c.metrics_out, "run_metrics.json");
+        let mut d = TraceConfig::off();
+        d.set("enabled", "true").unwrap();
+        d.set("out", "t.json").unwrap();
+        assert_eq!(d.metrics_out, "t_metrics.json");
+        assert!(d.set("nope", "1").is_err());
+    }
+}

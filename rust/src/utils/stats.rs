@@ -25,12 +25,26 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// Percentile with linear interpolation; `p` in [0, 100].
+///
+/// Pinned edge behavior (relied on by
+/// [`crate::coordinator::metrics::LatencySummary`] and the figure
+/// harness):
+///
+/// * empty input → `0.0` (never panics);
+/// * single element → that element for every `p`;
+/// * the interpolation rule is `rank = (p / 100) · (len − 1)`, linear
+///   between the two nearest order statistics — so `p = 0` is the min,
+///   `p = 100` the max, with no value invented outside the data range;
+/// * NaN input no longer panics: ordering is [`f64::total_cmp`], under
+///   which the usual positive NaN sorts *after* every real value — NaNs
+///   occupy the top ranks and low/mid percentiles of a mostly-clean
+///   sample stay finite instead of poisoning the whole summary.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -42,6 +56,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// `percentile(xs, 50.0)` — inherits its pinned edge behavior.
 pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
@@ -195,6 +210,47 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert!((percentile(&xs, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_empty_is_zero() {
+        assert_eq!(percentile(&[], 0.0), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[], 100.0), 0.0);
+        assert_eq!(median(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_single_element_for_every_p() {
+        for p in [0.0, 13.7, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[42.5], p), 42.5);
+        }
+        assert_eq!(median(&[42.5]), 42.5);
+    }
+
+    #[test]
+    fn percentile_interpolation_rule() {
+        // rank = (p / 100) · (len − 1), linear between order statistics.
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+        assert!((percentile(&xs, 75.0) - 32.5).abs() < 1e-12);
+        // Unsorted input is sorted internally.
+        let shuffled = [30.0, 10.0, 40.0, 20.0];
+        assert!((percentile(&shuffled, 75.0) - 32.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_nan_sorts_last_and_does_not_panic() {
+        // Positive NaN ranks above every real value under total_cmp:
+        // low/mid percentiles of a mostly-clean sample stay finite.
+        let xs = [1.0, f64::NAN, 2.0, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        assert!(percentile(&xs, 100.0).is_nan());
+        // All-NaN input: still no panic, the result is NaN.
+        assert!(median(&[f64::NAN, f64::NAN]).is_nan());
     }
 
     #[test]

@@ -265,10 +265,10 @@ fn golden_guard_perfect_transport_is_bit_identical() {
         assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
         assert_eq!(a.migrations, b.migrations);
         // The reliability machinery must not even engage.
-        assert_eq!(b.retransmits, 0);
-        assert_eq!(b.handshake_aborts, 0);
-        assert_eq!(b.link_drops, 0);
-        assert_eq!(b.link_dups, 0);
+        assert_eq!(b.protocol.retransmits, 0);
+        assert_eq!(b.protocol.handshake_aborts, 0);
+        assert_eq!(b.protocol.link_drops, 0);
+        assert_eq!(b.protocol.link_dups, 0);
     }
     // Skewed, migration-heavy case against the laggard reference.
     let mk = |transport: TransportConfig| {

@@ -13,9 +13,58 @@
 use std::path::PathBuf;
 
 use rlhfspec::coordinator::transport::{FaultProfile, TransportConfig};
-use rlhfspec::sim::cluster::{ClusterConfig, FleetTier};
-use rlhfspec::sim::SimMode;
+use rlhfspec::sim::cluster::{ClusterConfig, FleetTier, SimCluster};
+use rlhfspec::sim::{ClusterResult, SimMode};
 use rlhfspec::utils::rng::Rng;
+
+/// Full bit-level signature of a run: every counter of the result plus
+/// the per-instance finished-sample placement (ids in finish order), so
+/// a divergence in *where* a sample completed fails even when totals
+/// happen to agree. Shared by the thread-parity suite
+/// (`engine_parity.rs`) and the trace bit-inertness suite
+/// (`trace_inert.rs`) — both pin against the exact same bits.
+pub fn signature(c: &SimCluster, r: &ClusterResult) -> Vec<u64> {
+    let mut sig = vec![
+        r.total_tokens,
+        r.makespan.to_bits(),
+        r.n_samples as u64,
+        r.arrivals,
+        r.admission_refusals,
+        r.migrations,
+        r.realloc_decisions,
+        r.refusals,
+        r.cross_shard_orders,
+        r.orders_attempted,
+        r.protocol.retransmits,
+        r.protocol.handshake_aborts,
+        r.protocol.link_drops,
+        r.protocol.link_dups,
+        r.crashes,
+        r.recoveries,
+        r.samples_requeued,
+        r.requeue_delay_mean.to_bits(),
+        r.stage1_acks,
+        r.bounced_orders,
+        r.migration_downtime.to_bits(),
+        r.mean_accepted.to_bits(),
+        // RLHF loop-plane counters: zero on every preset here (the loop is
+        // default-off), but pinned so a thread count can never leak into
+        // the loop state machine once a suite turns it on.
+        r.loop_iterations,
+        r.loop_barriers,
+        r.preemptions,
+        r.staleness_refusals,
+        r.drafter_refreshes,
+        r.trained_samples,
+        r.loop_pool_leftover,
+        r.loop_end_secs.to_bits(),
+    ];
+    for inst in &c.instances {
+        sig.push(u64::MAX); // per-instance delimiter
+        sig.extend(inst.finished.iter().map(|s| s.id));
+    }
+    sig
+}
 
 /// Root of the tiny AOT artifact set (`make artifacts`), shared by every
 /// artifact-gated integration suite.

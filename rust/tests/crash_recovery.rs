@@ -134,11 +134,11 @@ fn crash_and_link_schedules_replay_bit_for_bit() {
     assert_eq!(a.recoveries, b.recoveries);
     assert_eq!(a.samples_requeued, b.samples_requeued);
     assert_eq!(a.requeue_delay_mean.to_bits(), b.requeue_delay_mean.to_bits());
-    assert_eq!(a.retransmits, b.retransmits);
-    assert_eq!(a.handshake_aborts, b.handshake_aborts);
+    assert_eq!(a.protocol.retransmits, b.protocol.retransmits);
+    assert_eq!(a.protocol.handshake_aborts, b.protocol.handshake_aborts);
     assert_eq!(a.stage1_acks, b.stage1_acks);
     assert_eq!(a.bounced_orders, b.bounced_orders);
-    assert_eq!((a.link_drops, a.link_dups), (b.link_drops, b.link_dups));
+    assert_eq!((a.protocol.link_drops, a.protocol.link_dups), (b.protocol.link_drops, b.protocol.link_dups));
 }
 
 #[test]

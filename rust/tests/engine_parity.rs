@@ -15,59 +15,14 @@
 
 mod common;
 
+use common::signature;
 use rlhfspec::coordinator::transport::TransportConfig;
 use rlhfspec::data::arrivals::ArrivalProcess;
 use rlhfspec::sim::cluster::{ClusterConfig, SimCluster};
 use rlhfspec::sim::crash::CrashConfig;
-use rlhfspec::sim::ClusterResult;
 use rlhfspec::utils::rng::Rng;
 
 const THREADS: [usize; 4] = [1, 2, 4, 8];
-
-/// Full bit-level signature of a run: every counter of the result plus
-/// the per-instance finished-sample placement (ids in finish order), so
-/// a divergence in *where* a sample completed fails even when totals
-/// happen to agree.
-fn signature(c: &SimCluster, r: &ClusterResult) -> Vec<u64> {
-    let mut sig = vec![
-        r.total_tokens,
-        r.makespan.to_bits(),
-        r.n_samples as u64,
-        r.arrivals,
-        r.admission_refusals,
-        r.migrations,
-        r.realloc_decisions,
-        r.refusals,
-        r.cross_shard_orders,
-        r.orders_attempted,
-        r.retransmits,
-        r.handshake_aborts,
-        r.link_drops,
-        r.link_dups,
-        r.crashes,
-        r.recoveries,
-        r.samples_requeued,
-        r.requeue_delay_mean.to_bits(),
-        r.stage1_acks,
-        r.bounced_orders,
-        r.migration_downtime.to_bits(),
-        r.mean_accepted.to_bits(),
-        // RLHF loop-plane counters: zero on every preset here (the loop is
-        // default-off), but pinned so a thread count can never leak into
-        // the loop state machine once a suite turns it on.
-        r.loop_iterations,
-        r.loop_barriers,
-        r.preemptions,
-        r.staleness_refusals,
-        r.drafter_refreshes,
-        r.trained_samples,
-    ];
-    for inst in &c.instances {
-        sig.push(u64::MAX); // per-instance delimiter
-        sig.extend(inst.finished.iter().map(|s| s.id));
-    }
-    sig
-}
 
 /// Run `build(cfg-with-threads)` across [`THREADS`] and assert every
 /// signature matches the sequential (threads = 1) run bit-for-bit.

@@ -138,7 +138,7 @@ fn aborted_orders_leave_victims_finishing_at_the_source() {
     let mut c = SimCluster::with_assignment(cfg, common::skew4_assignment());
     let r = c.run();
     assert!(
-        r.handshake_aborts > 0,
+        r.protocol.handshake_aborts > 0,
         "a 90% request-drop link must abort some handshakes"
     );
     assert_conserved(&c, 36);
@@ -186,8 +186,8 @@ fn fault_runs_replay_bit_for_bit_at_scale() {
     assert_eq!(a.total_tokens, b.total_tokens);
     assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
     assert_eq!(a.migrations, b.migrations);
-    assert_eq!(a.retransmits, b.retransmits);
-    assert_eq!(a.handshake_aborts, b.handshake_aborts);
-    assert_eq!((a.link_drops, a.link_dups), (b.link_drops, b.link_dups));
-    assert!(a.link_drops > 0, "the schedule must actually fault");
+    assert_eq!(a.protocol.retransmits, b.protocol.retransmits);
+    assert_eq!(a.protocol.handshake_aborts, b.protocol.handshake_aborts);
+    assert_eq!((a.protocol.link_drops, a.protocol.link_dups), (b.protocol.link_drops, b.protocol.link_dups));
+    assert!(a.protocol.link_drops > 0, "the schedule must actually fault");
 }

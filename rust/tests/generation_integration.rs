@@ -266,7 +266,7 @@ fn driver_faulty_relay_retransmits_until_conserved() {
     // observed when the reallocator actually issued orders.
     if report.migrations > 0 {
         assert!(
-            report.link_drops + report.link_dups > 0,
+            report.protocol.link_drops + report.protocol.link_dups > 0,
             "a 30%-drop/20%-dup plan must fault some relays once orders flow"
         );
     }

@@ -349,8 +349,8 @@ fn cluster_replay_is_bit_stable_at_any_thread_count() {
                 r.recoveries,
                 r.samples_requeued,
                 r.requeue_delay_mean.to_bits(),
-                r.retransmits,
-                r.handshake_aborts,
+                r.protocol.retransmits,
+                r.protocol.handshake_aborts,
             )
         };
         let sequential = run(1);

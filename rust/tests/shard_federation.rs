@@ -24,44 +24,10 @@ mod common;
 use rlhfspec::data::arrivals::ArrivalProcess;
 use rlhfspec::sim::cluster::{ClusterConfig, SimCluster};
 use rlhfspec::sim::crash::CrashConfig;
-use rlhfspec::sim::ClusterResult;
 use rlhfspec::testutil;
 use rlhfspec::utils::rng::Rng;
 
-/// Full bit-level signature of a run (the `engine_parity` signature
-/// plus the federation counter): every result counter and the
-/// per-instance finished-sample placement in finish order.
-fn signature(c: &SimCluster, r: &ClusterResult) -> Vec<u64> {
-    let mut sig = vec![
-        r.total_tokens,
-        r.makespan.to_bits(),
-        r.n_samples as u64,
-        r.arrivals,
-        r.admission_refusals,
-        r.migrations,
-        r.realloc_decisions,
-        r.refusals,
-        r.cross_shard_orders,
-        r.orders_attempted,
-        r.retransmits,
-        r.handshake_aborts,
-        r.link_drops,
-        r.link_dups,
-        r.crashes,
-        r.recoveries,
-        r.samples_requeued,
-        r.requeue_delay_mean.to_bits(),
-        r.stage1_acks,
-        r.bounced_orders,
-        r.migration_downtime.to_bits(),
-        r.mean_accepted.to_bits(),
-    ];
-    for inst in &c.instances {
-        sig.push(u64::MAX); // per-instance delimiter
-        sig.extend(inst.finished.iter().map(|s| s.id));
-    }
-    sig
-}
+use common::signature;
 
 fn run_sig(mut c: SimCluster) -> Vec<u64> {
     let r = c.run();

@@ -82,9 +82,9 @@ fn golden_guard_streaming_with_perfect_transport_is_bit_identical() {
             "seed {seed}"
         );
         assert_eq!(guarded.migrations, base.migrations, "seed {seed}");
-        assert_eq!(guarded.retransmits, 0, "seed {seed}");
-        assert_eq!(guarded.handshake_aborts, 0, "seed {seed}");
-        assert_eq!((guarded.link_drops, guarded.link_dups), (0, 0), "seed {seed}");
+        assert_eq!(guarded.protocol.retransmits, 0, "seed {seed}");
+        assert_eq!(guarded.protocol.handshake_aborts, 0, "seed {seed}");
+        assert_eq!((guarded.protocol.link_drops, guarded.protocol.link_dups), (0, 0), "seed {seed}");
     }
 }
 

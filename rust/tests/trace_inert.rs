@@ -1,0 +1,217 @@
+//! Bit-inertness pins for the trace & metrics plane.
+//!
+//! `[trace] enabled = true` must be a pure observer: the tracer hooks
+//! fire strictly after the cluster committed each event, never draw
+//! from any RNG stream and never touch cluster state — so every shared
+//! preset (batch, AR, migration-heavy skew, hetero fleets, link faults,
+//! crash×link, streaming, shards×threads, the RLHF loop) must produce a
+//! bit-identical `engine_parity` signature with tracing on and off.
+//! Each traced run additionally has its emitted Chrome trace checked
+//! for schema health: valid JSON, the `traceEvents` array, required
+//! keys per record, and per-track timestamps monotone in file order.
+
+mod common;
+
+use std::path::{Path, PathBuf};
+
+use rlhfspec::data::arrivals::ArrivalProcess;
+use rlhfspec::sim::cluster::{ClusterConfig, SimCluster};
+use rlhfspec::sim::crash::CrashConfig;
+use rlhfspec::sim::rlhf_loop::{LoopMode, Placement};
+use rlhfspec::sim::TraceConfig;
+use rlhfspec::utils::json::Json;
+use rlhfspec::utils::rng::Rng;
+
+/// Unique per-preset output paths under the system temp dir (tests run
+/// concurrently inside one binary; the pid isolates concurrent CI
+/// shards).
+fn trace_paths(name: &str) -> (PathBuf, PathBuf) {
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    (
+        dir.join(format!("rlhfspec_{name}_{pid}.json")),
+        dir.join(format!("rlhfspec_{name}_{pid}_metrics.json")),
+    )
+}
+
+/// Run `build` twice — tracing off, then on — assert bit-identical
+/// signatures, then schema-check the emitted trace and clean up.
+fn assert_trace_inert(name: &str, build: impl Fn(TraceConfig) -> SimCluster) {
+    let mut off = build(TraceConfig::off());
+    let r_off = off.run();
+    let sig_off = common::signature(&off, &r_off);
+
+    let (trace_path, metrics_path) = trace_paths(name);
+    let mut on_cfg = TraceConfig::to_path(trace_path.to_str().unwrap());
+    on_cfg.metrics_out = metrics_path.to_str().unwrap().to_string();
+    let mut on = build(on_cfg);
+    let r_on = on.run();
+    let sig_on = common::signature(&on, &r_on);
+
+    assert_eq!(sig_off, sig_on, "{name}: tracing changed the simulation");
+    check_trace_schema(name, &trace_path);
+    assert!(
+        std::fs::read_to_string(&metrics_path)
+            .ok()
+            .and_then(|s| Json::parse(&s).ok())
+            .and_then(|d| d.get("counters").cloned())
+            .is_some(),
+        "{name}: metrics JSON missing or malformed"
+    );
+    let _ = std::fs::remove_file(&trace_path);
+    let _ = std::fs::remove_file(&metrics_path);
+}
+
+/// The Chrome-trace schema pin: well-formed JSON, a `traceEvents`
+/// array, required keys on every record, and — for the non-metadata
+/// records — timestamps monotone per `tid` in file order (what keeps
+/// Perfetto's per-track layout sane).
+fn check_trace_schema(name: &str, path: &Path) {
+    let src = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("{name}: trace file {} unreadable: {e}", path.display()));
+    let doc = Json::parse(&src).unwrap_or_else(|e| panic!("{name}: invalid trace JSON: {e:?}"));
+    let evs = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .unwrap_or_else(|| panic!("{name}: missing traceEvents array"));
+    assert!(!evs.is_empty(), "{name}: empty trace");
+    let mut last_ts: std::collections::BTreeMap<u64, f64> = std::collections::BTreeMap::new();
+    let mut spans = 0usize;
+    for e in evs {
+        let ph = e
+            .get("ph")
+            .and_then(|p| p.as_str())
+            .unwrap_or_else(|| panic!("{name}: record without ph"));
+        assert!(e.get("name").and_then(|n| n.as_str()).is_some(), "{name}: record without name");
+        let tid = e.get("tid").and_then(|t| t.as_f64()).expect("tid") as u64;
+        if ph == "M" {
+            continue; // thread_name metadata carries no ts
+        }
+        let ts = e.get("ts").and_then(|t| t.as_f64()).expect("ts");
+        if let Some(&prev) = last_ts.get(&tid) {
+            assert!(
+                ts >= prev,
+                "{name}: track {tid} timestamps regress in file order ({prev} -> {ts})"
+            );
+        }
+        last_ts.insert(tid, ts);
+        if ph == "X" {
+            spans += 1;
+            let dur = e.get("dur").and_then(|d| d.as_f64()).expect("dur");
+            assert!(dur >= 0.0, "{name}: negative span duration");
+        }
+    }
+    assert!(spans > 0, "{name}: no spans recorded");
+}
+
+fn with_trace(mut cfg: ClusterConfig, tc: TraceConfig) -> ClusterConfig {
+    cfg.trace = tc;
+    cfg
+}
+
+#[test]
+fn golden8_batch_is_trace_inert() {
+    assert_trace_inert("golden8_trace", |tc| {
+        SimCluster::new(with_trace(common::golden8(3), tc))
+    });
+}
+
+#[test]
+fn golden8_ar_is_trace_inert() {
+    assert_trace_inert("golden8_ar_trace", |tc| {
+        SimCluster::new(with_trace(common::golden8_ar(), tc))
+    });
+}
+
+#[test]
+fn skew4_migrations_are_trace_inert() {
+    // Migration-heavy: exercises the perfect-path leg spans.
+    assert_trace_inert("skew4_trace", |tc| {
+        SimCluster::with_assignment(
+            with_trace(common::skew4(7, 1024), tc),
+            common::skew4_assignment(),
+        )
+    });
+}
+
+#[test]
+fn hetero_fleet_is_trace_inert() {
+    assert_trace_inert("hetero_trace", |tc| {
+        SimCluster::new(with_trace(common::hetero_fleet(11, 256, 384), tc))
+    });
+}
+
+#[test]
+fn faulty_transport_is_trace_inert() {
+    // Link faults: open/close leg spans via Stage-2 applies, aborts and
+    // retransmit instants.
+    let transport = common::random_transport(&mut Rng::new(21));
+    assert_trace_inert("fault_trace", |tc| {
+        let mut cfg = with_trace(common::skew4(13, 512), tc);
+        cfg.transport = transport.clone();
+        SimCluster::with_assignment(cfg, common::skew4_assignment())
+    });
+}
+
+#[test]
+fn crash_link_fleet_is_trace_inert() {
+    // The composed fault pipeline: crash / recover instants, downtime
+    // spans, salvage requeues and link faults, on the parallel engine.
+    let (assignment, _) = common::skewed_big_fleet(&mut Rng::new(99), 32);
+    assert_trace_inert("crash_link_trace", |tc| {
+        let mut cfg = with_trace(
+            ClusterConfig {
+                instances: 32,
+                cooldown: 16,
+                n_samples: 0,
+                max_tokens: 320,
+                seed: 37,
+                threads: 4,
+                ..Default::default()
+            },
+            tc,
+        );
+        cfg.transport = common::random_transport(&mut Rng::new(4));
+        cfg.crash = CrashConfig { rate_per_sec: 0.3, recover_secs: 1.0, max_crashes: 12 };
+        cfg.multi_dest = true;
+        SimCluster::with_assignment(cfg, assignment.clone())
+    });
+}
+
+#[test]
+fn streaming_poisson_is_trace_inert() {
+    // Streaming: arrival instants, queue spans and admission refusals.
+    assert_trace_inert("streaming_trace", |tc| {
+        let mut cfg = with_trace(common::hetero_fleet(17, 384, 256), tc);
+        cfg.pending_bound = 64;
+        SimCluster::streaming(cfg, &ArrivalProcess::poisson(48.0)).expect("streaming config")
+    });
+}
+
+#[test]
+fn shards_threads_is_trace_inert() {
+    // Sharded control plane on the parallel engine: per-shard realloc
+    // instants and federation orders must replay identically.
+    assert_trace_inert("shards_threads_trace", |tc| {
+        let mut cfg = with_trace(common::hetero_fleet(23, 256, 320), tc);
+        cfg.shards = 4;
+        cfg.threads = 4;
+        SimCluster::new(cfg)
+    });
+}
+
+#[test]
+fn rlhf_loop_is_trace_inert() {
+    // The loop plane: train-start/barrier instants, training spans and
+    // training-preempt downtime windows.
+    assert_trace_inert("rlhf_loop_trace", |tc| {
+        let mut cfg = with_trace(common::golden8(31), tc);
+        cfg.n_samples = 96;
+        cfg.max_tokens = 256;
+        cfg.rlhf_loop.iters = 3;
+        cfg.rlhf_loop.samples_per_iter = 8;
+        cfg.rlhf_loop.mode = LoopMode::Async;
+        cfg.rlhf_loop.placement = Placement::Colocated;
+        SimCluster::new(cfg)
+    });
+}

@@ -31,6 +31,14 @@ Rows wider than the host are reported only; absent rows are reported
 than failed, so the floor binds from the first multicore regeneration
 onward.
 
+With `--max-trace-overhead`, also gates the trace & metrics plane: the
+`core/trace/on` row (full Chrome trace + metrics export on the hetero
+event-heap fleet) must stay within the given percentage of the
+`core/trace/off` row (the explicitly untraced baseline). Unlike the
+speedup gates, absent rows are *malformed* (exit 2): the flag is only
+passed by CI legs that just regenerated the bench, so a missing row
+means the instrumentation was dropped, not that the bench predates it.
+
 With `--min-admission-speedup`, also gates the sharded admission path:
 the `core/admission/p2c` row (power-of-two-choices pick) must beat the
 `core/admission/full-scan` row (the O(fleet) least-loaded scan it
@@ -43,6 +51,7 @@ Usage: check_bench_budget.py [BENCH_core.json] [--budget-pct 1.0]
                              [--regress-factor 3.0]
                              [--min-parallel-speedup 4.0]
                              [--min-admission-speedup 10.0]
+                             [--max-trace-overhead 5.0]
 
 Exit codes: 0 = within budget, 1 = over budget/regressed, 2 = malformed
 input (missing rows count as malformed — a silently skipped gate is
@@ -154,6 +163,26 @@ def check_admission_speedup(by_name, floor):
     return []
 
 
+def check_trace_overhead(by_name, max_pct):
+    """Gate the trace plane: `core/trace/on` must stay within `max_pct`
+    percent of `core/trace/off`. Returns (failures, malformed)."""
+    off_ns = by_name.get("core/trace/off")
+    on_ns = by_name.get("core/trace/on")
+    if off_ns is None or on_ns is None or off_ns <= 0:
+        print("error: core/trace/{off,on} rows absent or unusable — the "
+              "trace-overhead gate was requested but the bench carries no "
+              "trace rows", file=sys.stderr)
+        return [], True
+    pct = 100.0 * (on_ns - off_ns) / off_ns
+    verdict = f"OK (ceiling {max_pct}%)" if pct <= max_pct \
+        else f"OVER CEILING {max_pct}%"
+    print(f"core/trace: off {off_ns / 1e6:.1f}ms vs on {on_ns / 1e6:.1f}ms "
+          f"= {pct:+.2f}% overhead — {verdict}")
+    if pct > max_pct:
+        return [f"core/trace/on ({pct:+.2f}% > {max_pct}%)"], False
+    return [], False
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("path", nargs="?", default="BENCH_core.json")
@@ -171,6 +200,10 @@ def main() -> int:
     ap.add_argument("--min-admission-speedup", type=float, default=None,
                     help="fail when core/admission/p2c is not at least this "
                          "many times faster than core/admission/full-scan")
+    ap.add_argument("--max-trace-overhead", type=float, default=None,
+                    help="fail when core/trace/on exceeds core/trace/off by "
+                         "more than this percentage (absent rows are "
+                         "malformed input, exit 2)")
     args = ap.parse_args()
 
     by_name = load_rows(args.path)
@@ -234,6 +267,13 @@ def main() -> int:
     if args.min_admission_speedup is not None:
         failures.extend(
             check_admission_speedup(by_name, args.min_admission_speedup))
+
+    if args.max_trace_overhead is not None:
+        trace_failures, malformed = check_trace_overhead(
+            by_name, args.max_trace_overhead)
+        if malformed:
+            return 2
+        failures.extend(trace_failures)
 
     if failures:
         print(f"FAIL: {len(failures)} row(s) over the "

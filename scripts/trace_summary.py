@@ -1,0 +1,197 @@
+#!/usr/bin/env python3
+"""Analyze a recorded trace: stage breakdown, stragglers, idle gaps.
+
+Consumes the two files the `[trace]` plane writes (see
+`rust/src/sim/trace.rs` and docs/ARCHITECTURE.md § Observability):
+
+* the Chrome trace-event JSON (`trace.json`) — per-sample lifecycle
+  spans, migration legs, crash/recover instants, engine beat counters —
+  the same file Perfetto loads;
+* the metrics JSON next to it (`trace_metrics.json`) — counters,
+  log-linear histograms and the per-instance stage-seconds breakdown.
+
+Three reports:
+
+1. **Stage breakdown** (the paper's §7.7 view): fleet-total seconds per
+   pipeline stage (prefill / draft / select / verify / accept / commit /
+   migration) with percentages — where the virtual time actually went.
+2. **Top-k stragglers**: the longest `decode` spans with their sample
+   id, instance and queueing delay — the samples that held the batch.
+3. **Idle gaps**: per-instance gaps between consecutive `round` spans
+   longer than `--idle-gap` seconds (weight barriers, crash downtime,
+   drained queues), plus each instance's busy fraction of the makespan.
+
+Usage: trace_summary.py trace.json [--metrics trace_metrics.json]
+                                   [--top 5] [--idle-gap 0.25]
+
+The metrics path defaults to the trace path's `_metrics.json` sibling
+(the same rule the recorder uses). Exit codes: 0 = ok, 2 = unreadable
+or malformed input.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_json(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: cannot parse {path}: {e}", file=sys.stderr)
+        return None
+
+
+def derive_metrics_path(trace_path):
+    """Mirror TraceConfig::derive_metrics_path in rust/src/sim/trace.rs."""
+    if trace_path.endswith(".json"):
+        return trace_path[: -len(".json")] + "_metrics.json"
+    return trace_path + ".metrics.json"
+
+
+def stage_breakdown(metrics):
+    """Fleet-total seconds per pipeline stage from the per-instance
+    breakdown the recorder exports at finish()."""
+    instances = metrics.get("instances", [])
+    totals = {}
+    for inst in instances:
+        for stage, secs in inst.get("stages", {}).items():
+            totals[stage] = totals.get(stage, 0.0) + float(secs)
+    return totals, len(instances)
+
+
+def print_stage_table(totals, n_instances):
+    print(f"== Stage breakdown ({n_instances} instances) ==")
+    grand = sum(totals.values())
+    if grand <= 0:
+        print("  (no stage time recorded)")
+        return
+    width = max(len(s) for s in totals)
+    for stage, secs in sorted(totals.items(), key=lambda kv: -kv[1]):
+        pct = 100.0 * secs / grand
+        bar = "#" * int(round(pct / 2))
+        print(f"  {stage:<{width}}  {secs:10.3f}s  {pct:5.1f}%  {bar}")
+    print(f"  {'total':<{width}}  {grand:10.3f}s")
+
+
+def spans(events, name=None):
+    """All complete spans (ph == X), optionally filtered by name, as
+    (start_s, dur_s, tid, args) tuples in seconds."""
+    out = []
+    for e in events:
+        if e.get("ph") != "X":
+            continue
+        if name is not None and e.get("name") != name:
+            continue
+        out.append((e.get("ts", 0.0) / 1e6, e.get("dur", 0.0) / 1e6,
+                    e.get("tid", 0), e.get("args", {})))
+    return out
+
+
+def print_stragglers(events, top):
+    decode = spans(events, "decode")
+    queued = {}
+    for start, dur, _tid, args in spans(events, "queued"):
+        sid = args.get("sample")
+        if sid is not None:
+            queued[sid] = dur
+    print(f"== Top {top} straggler samples (longest decode spans) ==")
+    if not decode:
+        print("  (no decode spans in trace)")
+        return
+    decode.sort(key=lambda s: -s[1])
+    for start, dur, tid, args in decode[:top]:
+        sid = args.get("sample", "?")
+        inst = tid - 3  # Track::Instance(i) <-> tid i+3
+        q = queued.get(sid, 0.0)
+        extra = f", queued {q:.3f}s" if q > 0 else ""
+        print(f"  sample {sid}: {dur:.3f}s decode on instance {inst} "
+              f"(tokens {args.get('tokens', '?')}, "
+              f"rounds {args.get('rounds', '?')}{extra})")
+
+
+def print_idle_gaps(events, threshold):
+    rounds = {}
+    for start, dur, tid, _args in spans(events, "round"):
+        if tid >= 3:
+            rounds.setdefault(tid - 3, []).append((start, start + dur))
+    print(f"== Idle gaps > {threshold}s between decode rounds ==")
+    if not rounds:
+        print("  (no round spans in trace)")
+        return
+    makespan = max(end for spanlist in rounds.values() for _s, end in spanlist)
+    total_gaps = 0
+    for inst in sorted(rounds):
+        spanlist = sorted(rounds[inst])
+        busy = sum(end - start for start, end in spanlist)
+        gaps = []
+        prev_end = spanlist[0][0]
+        for start, end in spanlist:
+            if start - prev_end > threshold:
+                gaps.append((prev_end, start - prev_end))
+            prev_end = max(prev_end, end)
+        total_gaps += len(gaps)
+        frac = 100.0 * busy / makespan if makespan > 0 else 0.0
+        worst = f", worst {max(g for _t, g in gaps):.3f}s at " \
+                f"t={max(gaps, key=lambda g: g[1])[0]:.3f}s" if gaps else ""
+        print(f"  instance {inst}: busy {frac:5.1f}% of makespan, "
+              f"{len(gaps)} gap(s){worst}")
+    print(f"  total: {total_gaps} gap(s) across {len(rounds)} instances, "
+          f"makespan {makespan:.3f}s")
+
+
+def print_counters(metrics):
+    counters = metrics.get("counters", {})
+    if not counters:
+        return
+    print("== Selected counters ==")
+    keys = ["cluster/arrivals", "cluster/admissions", "cluster/completions",
+            "cluster/rounds", "migration/orders", "migration/retransmits",
+            "crash/crashes", "crash/samples_requeued", "realloc/decisions",
+            "federation/orders", "loop/train_steps", "engine/beats",
+            "engine/fallbacks"]
+    for k in keys:
+        if k in counters:
+            print(f"  {k}: {counters[k]}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="Chrome trace-event JSON from [trace]")
+    ap.add_argument("--metrics", default=None,
+                    help="metrics JSON (default: derived from the trace "
+                         "path, x.json -> x_metrics.json)")
+    ap.add_argument("--top", type=int, default=5,
+                    help="straggler samples to list")
+    ap.add_argument("--idle-gap", type=float, default=0.25,
+                    help="minimum idle gap (virtual seconds) to report")
+    args = ap.parse_args()
+
+    doc = load_json(args.trace)
+    if doc is None:
+        return 2
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        print(f"error: {args.trace} carries no traceEvents array",
+              file=sys.stderr)
+        return 2
+
+    metrics_path = args.metrics or derive_metrics_path(args.trace)
+    metrics = load_json(metrics_path)
+    if metrics is None:
+        return 2
+
+    totals, n_instances = stage_breakdown(metrics)
+    print_stage_table(totals, n_instances)
+    print()
+    print_stragglers(events, args.top)
+    print()
+    print_idle_gaps(events, args.idle_gap)
+    print()
+    print_counters(metrics)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
