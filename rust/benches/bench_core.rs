@@ -30,6 +30,9 @@
 use std::time::Instant;
 
 use rlhfspec::benchutil::{bench, black_box, write_json, BenchResult};
+use rlhfspec::config::SelectorConfig;
+use rlhfspec::coordinator::policy::{DraftPolicy, PolicyConfig, PolicyCtx, PolicyKind, SelectArgs};
+use rlhfspec::coordinator::predictor::TsdPredictor;
 use rlhfspec::data::arrivals::ArrivalProcess;
 use rlhfspec::sim::acceptance::AcceptanceModel;
 use rlhfspec::sim::cluster::{ClusterConfig, FleetTier, SimCluster};
@@ -37,6 +40,8 @@ use rlhfspec::sim::cost_model::CostModel;
 use rlhfspec::sim::engine::{SimInstance, SimMode, SimParams, SimSample};
 use rlhfspec::sim::rlhf_loop::{run_loop, LoopMode, Placement};
 use rlhfspec::sim::TraceConfig;
+use rlhfspec::spec::tree::CandidateTree;
+use rlhfspec::utils::rng::Rng;
 
 fn hetero_cfg(instances_per_tier: usize, n_samples: usize) -> ClusterConfig {
     ClusterConfig {
@@ -351,6 +356,61 @@ fn main() {
         black_box(adm.bench_admission_pick());
     });
     results.push(r);
+
+    // ---- drafting control plane: per-decision policy overhead ---------
+    // `core/policy/static` and `core/policy/bandit` time one full
+    // choose + feedback cycle at the paper's b = 24 operating point (the
+    // same fitted predictor and candidate trees as the §7.7 WDS figure);
+    // `core/policy/modeled-step` records the modeled decode step that
+    // amortizes each decision, and the budget gate
+    // (`check_bench_budget.py --max-policy-overhead`) holds the bandit's
+    // decision overhead to a small share of it.
+    let accept = AcceptanceModel::lmsys();
+    let mut prng = Rng::new(11);
+    let mut tsd = TsdPredictor::new(256, 4);
+    for s in 0..40 {
+        for d in 1..40 {
+            tsd.observe(s * 64, d, 0.02 + 1e-6 * (s * 64) as f64 + 1.5e-4 * d as f64);
+        }
+    }
+    tsd.refit();
+    let trees: Vec<CandidateTree> = (0..24)
+        .map(|_| {
+            let mut t = accept.make_tree(0, 5, 2, 4, 96, &mut prng);
+            for n in t.nodes.iter_mut() {
+                n.w = n.dl;
+            }
+            t
+        })
+        .collect();
+    let refs: Vec<&CandidateTree> = trees.iter().collect();
+    let sel_cfg = SelectorConfig::default();
+    let pctx = PolicyCtx { batch: 24, n_seq: 24_000, tier: 0, backlog: 8, model_version: 0 };
+    let (pw, pi) = if smoke { (1, 50) } else { (5, 2000) };
+    for kind in [PolicyKind::Static, PolicyKind::Bandit] {
+        let pcfg = PolicyConfig { kind, ..PolicyConfig::default() };
+        let mut policy = pcfg.build(11, 0);
+        let name = policy.name();
+        let r = bench(&format!("core/policy/{name}"), pw, pi, || {
+            let choice = policy.choose(
+                &pctx,
+                SelectArgs { cfg: &sel_cfg, tsd: &mut tsd, trees: &refs, n_seq: 24_000, max_n: 48 },
+            );
+            policy.feedback(&pctx, choice.n.min(6), 0.024);
+            black_box(choice.n);
+        });
+        println!("  policy {name}: {:.2}µs/decision", r.mean_ns / 1e3);
+        results.push(r);
+    }
+    let policy_step_ns = CostModel::l40s_llama8b().t_spec_round(5, 24_000, 192) * 1e9;
+    results.push(BenchResult {
+        name: "core/policy/modeled-step".into(),
+        iters: 1,
+        mean_ns: policy_step_ns,
+        p50_ns: policy_step_ns,
+        p99_ns: policy_step_ns,
+        min_ns: policy_step_ns,
+    });
 
     // Anchor the artifact at the *workspace* root: cargo runs bench
     // binaries with cwd = the package root (rust/), but the committed

@@ -10,6 +10,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::coordinator::policy::PolicyConfig;
 use crate::coordinator::transport::TransportConfig;
 use crate::sim::crash::CrashConfig;
 use crate::sim::rlhf_loop::RlhfLoopConfig;
@@ -276,6 +277,10 @@ pub struct RunConfig {
     /// `PALLAS_TRACE` env var overrides the *default*; an explicit
     /// `[trace]` section or `--trace.*` override still wins.
     pub trace: TraceConfig,
+    /// `[policy]` — the drafting control plane (see [`PolicyConfig`]).
+    /// `kind = "static"` by default: every decision delegates to the §5
+    /// selector and runs are bit-identical to the pre-policy scheduler.
+    pub policy: PolicyConfig,
     pub seed: u64,
 }
 
@@ -367,6 +372,9 @@ impl RunConfig {
                 }
                 if let Some(rest) = key.strip_prefix("trace.") {
                     return self.trace.set(rest, val);
+                }
+                if let Some(rest) = key.strip_prefix("policy.") {
+                    return self.policy.set(rest, val);
                 }
                 bail!("unknown config key")
             }
@@ -572,6 +580,38 @@ mod tests {
         assert!(bad.set("rlhf_sim.nope", "1").is_err());
         assert!(bad.set("rlhf_sim.iters", "abc").is_err());
         assert!(bad.set("rlhf_sim.mode", "sideways").is_err());
+    }
+
+    #[test]
+    fn policy_section_parses() {
+        use crate::coordinator::policy::PolicyKind;
+        let src = r#"
+            [policy]
+            kind = "bandit"
+            bandit_c = 0.8
+            forget = 0.5
+            window = 128
+            self_draft_frac = 0.25
+            self_accept_penalty = 0.9
+            selfspec_tiers = "l40s,a100"
+        "#;
+        let mut kv = BTreeMap::new();
+        parse_toml_subset(src, &mut kv).unwrap();
+        let cfg = RunConfig::load(None, &kv).unwrap();
+        assert_eq!(cfg.policy.kind, PolicyKind::Bandit);
+        assert!(!cfg.policy.is_static());
+        assert_eq!(cfg.policy.bandit_c, 0.8);
+        assert_eq!(cfg.policy.forget, 0.5);
+        assert_eq!(cfg.policy.window, 128.0);
+        assert_eq!(cfg.policy.self_draft_frac, 0.25);
+        assert_eq!(cfg.policy.self_accept_penalty, 0.9);
+        assert_eq!(cfg.policy.selfspec_tiers, "l40s,a100");
+        // Defaults keep the bit-inert static selector (today's behavior).
+        assert!(RunConfig::default().policy.is_static());
+        let mut bad = RunConfig::default();
+        assert!(bad.set("policy.nope", "1").is_err());
+        assert!(bad.set("policy.kind", "sideways").is_err());
+        assert!(bad.set("policy.window", "abc").is_err());
     }
 
     #[test]

@@ -67,8 +67,10 @@ use crate::config::SelectorConfig;
 use crate::coordinator::backend::DecodeBackend;
 use crate::coordinator::metrics::{InstanceMetrics, Stopwatch};
 use crate::coordinator::migration::{migration_score, AllocRequest};
+use crate::coordinator::policy::{
+    DraftPolicy, PolicyCtx, PolicyDecision, SelectArgs, StaticSelector,
+};
 use crate::coordinator::predictor::{AcceptancePredictor, TsdPredictor};
-use crate::coordinator::selector;
 use crate::spec::tree::{CandidateTree, Selection};
 
 /// How an instance decodes (baselines + ablations share the substrate).
@@ -250,6 +252,20 @@ pub struct InstanceCore<B: DecodeBackend> {
     pub metrics: InstanceMetrics,
     /// Scheduler steps executed.
     pub steps: usize,
+    /// Hardware tier index on heterogeneous fleets (0 otherwise) — a
+    /// context feature for learned drafting policies.
+    pub tier: usize,
+    /// RLHF target-model version last synced here. Bumped by the loop
+    /// plane's weight-update barrier; learned policies forget on a bump.
+    pub model_version: u64,
+    /// The drafting control plane (see [`crate::coordinator::policy`]).
+    /// Default [`StaticSelector`]: every adaptive decision delegates to
+    /// [`crate::coordinator::selector::select_strategy`] untouched.
+    pub policy: Box<dyn DraftPolicy>,
+    /// Most recent learned-policy decision, buffered for the trace
+    /// plane (taken and emitted only when tracing is on; `None` for the
+    /// static selector).
+    pub last_decision: Option<PolicyDecision>,
     steps_since_refit: usize,
     /// Live-batch occupancy at the previous step, for the streaming
     /// occupancy-change refit trigger.
@@ -284,6 +300,10 @@ impl<B: DecodeBackend> InstanceCore<B> {
             finished: Vec::new(),
             metrics: InstanceMetrics::default(),
             steps: 0,
+            tier: 0,
+            model_version: 0,
+            policy: Box::new(StaticSelector),
+            last_decision: None,
             steps_since_refit: 0,
             last_occupancy: 0,
             mig_out: Vec::new(),
@@ -392,21 +412,34 @@ impl<B: DecodeBackend> InstanceCore<B> {
             }
         }
 
-        // ---- 3. strategy selection (§5.3) -----------------------------
+        // ---- 3. strategy selection (§5.3 / policy plane) --------------
         let n_seq: usize = self.live.iter().map(B::committed_len).sum();
         let max_n = self.backend.max_draft().max(1);
+        // Pure arithmetic over instance state — no RNG, no side effects —
+        // so building it unconditionally keeps every mode bit-inert.
+        let pctx = PolicyCtx {
+            batch: trees.len(),
+            n_seq,
+            tier: self.tier,
+            backlog: self.parked.len() + self.waiting.len(),
+            model_version: self.model_version,
+        };
         let n = match self.mode {
             DecodeMode::StaticSpec(n) => n.clamp(1, max_n),
             DecodeMode::Adaptive => {
                 let mut sw = Stopwatch::start();
                 let refs: Vec<&CandidateTree> = trees.iter().collect();
-                let choice = selector::select_strategy(
-                    &self.selector,
-                    &mut self.tsd_pred,
-                    &refs,
-                    n_seq,
-                    max_n,
+                let choice = self.policy.choose(
+                    &pctx,
+                    SelectArgs {
+                        cfg: &self.selector,
+                        tsd: &mut self.tsd_pred,
+                        trees: &refs,
+                        n_seq,
+                        max_n,
+                    },
                 );
+                self.last_decision = self.policy.decision();
                 self.metrics.select_secs += sw.lap();
                 choice.n
             }
@@ -426,6 +459,12 @@ impl<B: DecodeBackend> InstanceCore<B> {
         self.tsd_pred.observe(n_seq, round.n_draft_total, round.tsd_secs);
         for &(dl, ok) in &round.observations {
             self.accept_pred.observe(dl, ok);
+        }
+        // Learned policies see the realized outcome of the budget they
+        // chose (the static default is a no-op, keeping it bit-inert).
+        if matches!(self.mode, DecodeMode::Adaptive) {
+            let accepted = round.observations.iter().filter(|&&(_, ok)| ok).count();
+            self.policy.feedback(&pctx, accepted, round.tsd_secs);
         }
         Ok(())
     }

@@ -21,6 +21,11 @@
 //!   and the bucket-based prediction cache.
 //! * [`selector`] — workload-aware drafting-strategy selection (§5.3):
 //!   layer-level incremental search with sugar-water-inequality pruning.
+//! * [`policy`] — the pluggable drafting control plane above the
+//!   selector (`[policy]` config section): the `DraftPolicy` trait with
+//!   the bit-inert static default, a contextual-UCB bandit learning
+//!   per-step from acceptance feedback (with forgetting at RLHF
+//!   weight-update barriers), and the skip-layer self-speculative mode.
 //! * [`reallocator`] — sample-reallocation policy (§6.1): roofline
 //!   threshold, greedy source/destination pairing under the Eq-6
 //!   constraints, cooldown.
@@ -59,6 +64,7 @@ pub mod federation;
 pub mod instance;
 pub mod metrics;
 pub mod migration;
+pub mod policy;
 pub mod predictor;
 pub mod reallocator;
 pub mod selector;

@@ -1,0 +1,693 @@
+//! Pluggable drafting control plane: the [`DraftPolicy`] trait and its
+//! three shipped implementations.
+//!
+//! The paper's §5 selector ([`crate::coordinator::selector`]) picks a
+//! draft budget from *current* workload stats with a fixed predictor.
+//! The related work goes further — "Learning to Draft" adapts the
+//! speculative configuration online from acceptance feedback, and
+//! EfficientRollout adds a system-aware *self*-speculative mode that
+//! needs no separate draft model. This module makes the strategy
+//! selection a policy slot on [`crate::coordinator::core::InstanceCore`]:
+//!
+//! * [`StaticSelector`] — the default: delegates every decision to
+//!   [`selector::select_strategy`], bit-for-bit identical to the
+//!   pre-policy behavior (pinned by `tests/policy_suite.rs`).
+//! * [`BanditPolicy`] — a contextual UCB bandit over discretized
+//!   workload buckets × candidate budget arms, learning per-step from
+//!   realized accepted tokens and step seconds. Arm 0 *delegates to the
+//!   §5 selector*, so the learned policy's floor is the static
+//!   behavior; the fixed-`n` arms let it react to drafter-staleness
+//!   shifts faster than the selector's refit cadence. Forgetting at
+//!   every RLHF weight-update barrier ([`PolicyCtx::model_version`]
+//!   bump) re-opens exploration so it re-converges after the PR-8
+//!   acceptance decay.
+//! * [`SelfSpecStrategy`] — skip-layer self-speculative drafting: the
+//!   budget search is unchanged, but instances on the configured tiers
+//!   swap their backend to [`crate::sim::cost_model::CostModel::self_spec`]
+//!   (draft levels run a configured fraction of the target's layers —
+//!   no separate draft model) with the matching
+//!   [`crate::sim::acceptance::AcceptanceModel::self_draft`] profile.
+//!
+//! **Determinism contract.** A policy must be a pure function of its
+//! construction seed and the sequence of `choose`/`feedback` calls it
+//! has seen: no wall clock, no global RNG, no shared state. The bandit
+//! draws only from its private stream seeded
+//! `seed ^ POLICY_SEED_SALT`, forked per instance — so runs replay
+//! bit-for-bit at any engine thread count and shard count
+//! (`tests/policy_suite.rs` pins replay plus the [`DraftPolicy::digest`]
+//! state fingerprint). Policies must also be `Send`: instances step on
+//! the parallel engine's worker threads.
+//!
+//! **Adding a policy**: implement [`DraftPolicy`] (only `choose` and
+//! `name` are required), add a [`PolicyKind`] variant + `[policy] kind`
+//! spelling, and construct it in [`PolicyConfig::build`]. Keep the
+//! three contracts: (1) deterministic per the paragraph above; (2) if
+//! your policy is not the configured default it must not perturb
+//! `kind = "static"` runs at all; (3) report decisions through
+//! [`DraftPolicy::decision`] rather than printing — the trace plane
+//! turns them into per-instance instants.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::SelectorConfig;
+use crate::coordinator::predictor::TsdPredictor;
+use crate::coordinator::selector::{self, StrategyChoice};
+use crate::spec::tree::CandidateTree;
+use crate::utils::rng::Rng;
+
+/// Salt for the policy plane's private RNG stream
+/// (`seed ^ POLICY_SEED_SALT`, forked per instance) — disjoint from the
+/// workload, admission and loop streams by construction.
+pub const POLICY_SEED_SALT: u64 = 0x00BA_4D17_5EED;
+
+/// Workload context carried into every policy decision. Pure
+/// arithmetic over instance state — constructing it draws no RNG, so
+/// the static path stays bit-inert.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyCtx {
+    /// Live samples in this round's batch (= candidate trees).
+    pub batch: usize,
+    /// Batch cumulative committed sequence length (KV-load feature).
+    pub n_seq: usize,
+    /// Hardware tier index of the instance (0 on homogeneous fleets).
+    pub tier: usize,
+    /// Parked + queued samples behind the batch (pressure signal).
+    pub backlog: usize,
+    /// RLHF target-model version last synced to this instance. A bump
+    /// means a weight-update barrier ran: acceptance decayed and
+    /// learned policies should forget toward re-exploration.
+    pub model_version: u64,
+}
+
+/// Borrowed inputs a policy needs to run (or delegate to) the §5
+/// budget search for one speculative round.
+pub struct SelectArgs<'a> {
+    /// Selector knobs (patience, refit cadence).
+    pub cfg: &'a SelectorConfig,
+    /// The instance's online `t_sd` regression (bucket-cached predict).
+    pub tsd: &'a mut TsdPredictor,
+    /// One candidate tree per live sample, node weights already set.
+    pub trees: &'a [&'a CandidateTree],
+    /// Batch cumulative committed sequence length.
+    pub n_seq: usize,
+    /// Largest per-sample budget the backend supports.
+    pub max_n: usize,
+}
+
+/// Compact summary of one learned decision, buffered on the instance
+/// and emitted by the trace plane as a per-instance instant.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyDecision {
+    /// Chosen per-sample draft budget.
+    pub n: usize,
+    /// Chosen arm (0 = delegated to the §5 selector).
+    pub arm: usize,
+    /// Discretized context bucket the decision was scored in.
+    pub bucket: usize,
+    /// Posterior mean reward of the chosen arm before this pull
+    /// (tokens/sec; 0 for a never-pulled arm).
+    pub mean: f64,
+    /// The arm was picked for exploration (unpulled in this bucket).
+    pub explore: bool,
+}
+
+/// A pluggable drafting-strategy policy (see the module docs for the
+/// determinism contract). `Send` because instances step on the
+/// parallel engine's worker threads.
+pub trait DraftPolicy: Send {
+    /// Pick the per-sample draft budget for one speculative round.
+    fn choose(&mut self, ctx: &PolicyCtx, args: SelectArgs<'_>) -> StrategyChoice;
+
+    /// Observe the realized outcome of the round `choose` configured:
+    /// `accepted` draft tokens landed in `step_secs` virtual seconds.
+    /// Default: no learning.
+    fn feedback(&mut self, _ctx: &PolicyCtx, _accepted: usize, _step_secs: f64) {}
+
+    /// Summary of the most recent decision for the trace plane. `None`
+    /// (the default) emits nothing — the static selector stays silent
+    /// so traced `kind = "static"` runs keep the pre-policy schema.
+    fn decision(&self) -> Option<PolicyDecision> {
+        None
+    }
+
+    /// Deterministic fingerprint of the learned state — equal digests
+    /// after equal `(seed, call sequence)` histories. `0` for
+    /// stateless policies.
+    fn digest(&self) -> u64 {
+        0
+    }
+
+    /// Short policy id for reports and traces.
+    fn name(&self) -> &'static str;
+}
+
+/// The default policy: every decision delegates to
+/// [`selector::select_strategy`] with untouched arguments —
+/// bit-for-bit the pre-policy behavior.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StaticSelector;
+
+impl DraftPolicy for StaticSelector {
+    fn choose(&mut self, _ctx: &PolicyCtx, args: SelectArgs<'_>) -> StrategyChoice {
+        selector::select_strategy(args.cfg, args.tsd, args.trees, args.n_seq, args.max_n)
+    }
+
+    fn name(&self) -> &'static str {
+        "static"
+    }
+}
+
+/// Skip-layer self-speculative mode. The *decision* side is the plain
+/// §5 search (the swapped cost/acceptance models flow in through the
+/// instance's own online predictors); the *execution* side is the
+/// per-tier backend swap applied at cluster construction — see
+/// [`PolicyConfig::selfspec_tier`] and
+/// [`crate::sim::cost_model::CostModel::self_spec`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SelfSpecStrategy;
+
+impl DraftPolicy for SelfSpecStrategy {
+    fn choose(&mut self, _ctx: &PolicyCtx, args: SelectArgs<'_>) -> StrategyChoice {
+        selector::select_strategy(args.cfg, args.tsd, args.trees, args.n_seq, args.max_n)
+    }
+
+    fn name(&self) -> &'static str {
+        "selfspec"
+    }
+}
+
+/// Fixed per-sample budgets backing arms `1..`; arm 0 delegates to the
+/// §5 selector. Entries above the backend's `max_n` are masked out per
+/// decision.
+const ARM_GRID: [usize; 10] = [1, 2, 4, 6, 8, 12, 16, 24, 32, 48];
+/// Arms per context bucket: delegate + the grid.
+const N_ARMS: usize = 1 + ARM_GRID.len();
+/// `floor(log2(batch))` buckets, clamped to 0..=6 (batch ≥ 64 shares
+/// the top bucket).
+const BATCH_BUCKETS: usize = 7;
+/// Per-sample committed-length buckets of 512 tokens, clamped to 0..=3.
+const LEN_BUCKETS: usize = 4;
+/// Total context buckets.
+const N_BUCKETS: usize = BATCH_BUCKETS * LEN_BUCKETS;
+
+/// Discretize a decision context into its bucket index.
+fn context_bucket(ctx: &PolicyCtx) -> usize {
+    let b = ctx.batch.max(1);
+    let batch_bucket = ((usize::BITS - 1 - b.leading_zeros()) as usize).min(BATCH_BUCKETS - 1);
+    let len_bucket = (ctx.n_seq / b / 512).min(LEN_BUCKETS - 1);
+    batch_bucket * LEN_BUCKETS + len_bucket
+}
+
+/// Decayed pull statistics of one `(bucket, arm)` cell.
+#[derive(Clone, Copy, Debug, Default)]
+struct ArmStats {
+    /// Effective pull count (decayed by the window cap and forgetting).
+    count: f64,
+    /// Decayed reward sum (tokens/sec).
+    sum: f64,
+}
+
+/// One FNV-1a mixing step (digest helper).
+fn fnv(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
+}
+
+/// Contextual UCB bandit over workload buckets × budget arms (module
+/// docs). Learned state is per-instance; the only randomness is a tiny
+/// deterministic tie-break jitter from the private salted stream.
+pub struct BanditPolicy {
+    /// UCB exploration coefficient.
+    c: f64,
+    /// Multiplier applied to every statistic at a model-version bump.
+    forget: f64,
+    /// Effective-sample cap per cell (sliding-window forgetting).
+    window: f64,
+    /// Private tie-break stream (`seed ^ POLICY_SEED_SALT`, forked per
+    /// instance).
+    rng: Rng,
+    /// Flat `[bucket * N_ARMS + arm]` statistics.
+    stats: Vec<ArmStats>,
+    /// Decayed total pulls (the UCB `ln T` term).
+    total: f64,
+    /// Decayed global reward count (exploration-width scale).
+    gcount: f64,
+    /// Decayed global reward sum.
+    gsum: f64,
+    /// Last model version seen (forgetting trigger).
+    last_version: u64,
+    /// `(bucket, arm)` of the decision awaiting feedback.
+    pending: Option<(usize, usize)>,
+    /// Most recent decision summary (trace plane).
+    last: Option<PolicyDecision>,
+}
+
+impl BanditPolicy {
+    /// Bandit for instance `instance` of a run seeded `seed`, with the
+    /// `[policy]` knobs of `cfg` (non-finite knobs fall back to the
+    /// defaults; see [`PolicyConfig`]).
+    pub fn new(cfg: &PolicyConfig, seed: u64, instance: usize) -> Self {
+        let mut root = Rng::new(seed ^ POLICY_SEED_SALT);
+        let rng = root.fork(instance as u64 + 1);
+        let d = PolicyConfig::default();
+        BanditPolicy {
+            c: if cfg.bandit_c.is_finite() { cfg.bandit_c.max(0.0) } else { d.bandit_c },
+            forget: if cfg.forget.is_finite() { cfg.forget.clamp(0.0, 1.0) } else { d.forget },
+            window: if cfg.window.is_finite() { cfg.window.max(1.0) } else { d.window },
+            rng,
+            stats: vec![ArmStats::default(); N_BUCKETS * N_ARMS],
+            total: 0.0,
+            gcount: 0.0,
+            gsum: 0.0,
+            last_version: 0,
+            pending: None,
+            last: None,
+        }
+    }
+
+    /// Mean reward of `(bucket, arm)` (0 for a never-pulled cell).
+    fn mean(&self, bucket: usize, arm: usize) -> f64 {
+        let s = &self.stats[bucket * N_ARMS + arm];
+        if s.count > 0.0 {
+            s.sum / s.count
+        } else {
+            0.0
+        }
+    }
+}
+
+impl DraftPolicy for BanditPolicy {
+    fn choose(&mut self, ctx: &PolicyCtx, args: SelectArgs<'_>) -> StrategyChoice {
+        // A weight-update barrier ran since the last decision: decay
+        // everything toward re-exploration (the acceptance process the
+        // statistics were learned on no longer exists).
+        if ctx.model_version != self.last_version {
+            self.last_version = ctx.model_version;
+            let f = self.forget;
+            for s in self.stats.iter_mut() {
+                s.count *= f;
+                s.sum *= f;
+            }
+            self.total *= f;
+            self.gcount *= f;
+            self.gsum *= f;
+        }
+        let bucket = context_bucket(ctx);
+        let max_n = args.max_n.max(1);
+        let scale = if self.gcount > 0.0 { (self.gsum / self.gcount).abs().max(1e-9) } else { 1.0 };
+        let lnt = (self.total + 1.0).ln();
+        let mut best_arm = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        let mut explore = false;
+        for arm in 0..N_ARMS {
+            if arm > 0 && ARM_GRID[arm - 1] > max_n {
+                continue; // budget arm the backend cannot honor
+            }
+            let s = &self.stats[bucket * N_ARMS + arm];
+            // Deterministic sub-resolution jitter: breaks exact score
+            // ties without ever outweighing a real reward difference.
+            let jitter = self.rng.f64() * 1e-9 * scale;
+            let (score, exploring) = if s.count < 1.0 {
+                // Unpulled (or forgotten-below-one) cell: explore
+                // first, lowest arm index first.
+                (f64::MAX / 2.0 - arm as f64, true)
+            } else {
+                (s.sum / s.count + self.c * scale * (lnt / s.count).sqrt() + jitter, false)
+            };
+            if score > best_score {
+                best_score = score;
+                best_arm = arm;
+                explore = exploring;
+            }
+        }
+        let mean = self.mean(bucket, best_arm);
+        self.pending = Some((bucket, best_arm));
+        let choice = if best_arm == 0 {
+            selector::select_strategy(args.cfg, args.tsd, args.trees, args.n_seq, args.max_n)
+        } else {
+            let n = ARM_GRID[best_arm - 1].min(max_n);
+            StrategyChoice { n, predicted_al: 0.0, predicted_tsd: 1.0, evaluated: 0 }
+        };
+        self.last = Some(PolicyDecision { n: choice.n, arm: best_arm, bucket, mean, explore });
+        choice
+    }
+
+    fn feedback(&mut self, _ctx: &PolicyCtx, accepted: usize, step_secs: f64) {
+        let Some((bucket, arm)) = self.pending.take() else { return };
+        let r = accepted as f64 / step_secs.max(1e-9);
+        let s = &mut self.stats[bucket * N_ARMS + arm];
+        s.count += 1.0;
+        s.sum += r;
+        if s.count > self.window {
+            // Sliding-window cap: keeps the cell adaptive to slow
+            // drift between barriers.
+            let k = self.window / s.count;
+            s.count *= k;
+            s.sum *= k;
+        }
+        self.total += 1.0;
+        self.gcount += 1.0;
+        self.gsum += r;
+        let gcap = 4.0 * self.window;
+        if self.gcount > gcap {
+            let k = gcap / self.gcount;
+            self.gcount *= k;
+            self.gsum *= k;
+        }
+    }
+
+    fn decision(&self) -> Option<PolicyDecision> {
+        self.last
+    }
+
+    fn digest(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for s in &self.stats {
+            h = fnv(h, s.count.to_bits());
+            h = fnv(h, s.sum.to_bits());
+        }
+        h = fnv(h, self.total.to_bits());
+        h = fnv(h, self.last_version);
+        h
+    }
+
+    fn name(&self) -> &'static str {
+        "bandit"
+    }
+}
+
+/// Which [`DraftPolicy`] the `[policy]` section selects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// [`StaticSelector`] — the default, bit-inert.
+    Static,
+    /// [`BanditPolicy`] — contextual UCB learning per step.
+    Bandit,
+    /// [`SelfSpecStrategy`] — skip-layer self-drafting backend swap.
+    SelfSpec,
+}
+
+/// `[policy]` config section: the drafting control plane's knobs.
+/// `kind = "static"` (the default) replays bit-identical to the
+/// pre-policy scheduler on every golden preset — the other knobs are
+/// then never read.
+#[derive(Clone, Debug)]
+pub struct PolicyConfig {
+    /// Which policy every instance runs.
+    pub kind: PolicyKind,
+    /// Bandit: UCB exploration coefficient (× the running mean reward).
+    pub bandit_c: f64,
+    /// Bandit: statistic multiplier at each weight-update barrier
+    /// (0 = full reset, 1 = never forget).
+    pub forget: f64,
+    /// Bandit: effective-sample cap per (bucket, arm) cell.
+    pub window: f64,
+    /// Self-spec: fraction of the target's layers each draft level
+    /// runs (sets the draft cost — see
+    /// [`crate::sim::cost_model::CostModel::self_spec`]).
+    pub self_draft_frac: f64,
+    /// Self-spec: draft-confidence penalty of skip-layer drafting vs a
+    /// distilled head (see
+    /// [`crate::sim::acceptance::AcceptanceModel::self_draft`]).
+    pub self_accept_penalty: f64,
+    /// Self-spec: comma-separated tier names that swap to the
+    /// self-drafting backend; empty = every tier (hetero fleets can
+    /// mix self-drafting and classic-SSM tiers).
+    pub selfspec_tiers: String,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        PolicyConfig {
+            kind: PolicyKind::Static,
+            bandit_c: 0.4,
+            forget: 0.25,
+            window: 256.0,
+            self_draft_frac: 0.35,
+            self_accept_penalty: 0.85,
+            selfspec_tiers: String::new(),
+        }
+    }
+}
+
+impl PolicyConfig {
+    /// Set one `[policy]` key (already stripped of the section prefix).
+    pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
+        let f64_ = |v: &str| -> Result<f64> {
+            v.parse().map_err(|_| anyhow!("expected float, got {v:?}"))
+        };
+        match key {
+            "kind" => {
+                self.kind = match val {
+                    "static" => PolicyKind::Static,
+                    "bandit" => PolicyKind::Bandit,
+                    "selfspec" | "self-spec" | "self_spec" => PolicyKind::SelfSpec,
+                    other => bail!("unknown policy kind {other:?}"),
+                }
+            }
+            "bandit_c" => self.bandit_c = f64_(val)?,
+            "forget" => self.forget = f64_(val)?,
+            "window" => self.window = f64_(val)?,
+            "self_draft_frac" => self.self_draft_frac = f64_(val)?,
+            "self_accept_penalty" => self.self_accept_penalty = f64_(val)?,
+            "selfspec_tiers" => self.selfspec_tiers = val.to_string(),
+            _ => bail!("unknown config key"),
+        }
+        Ok(())
+    }
+
+    /// True for the default bit-inert configuration path.
+    pub fn is_static(&self) -> bool {
+        self.kind == PolicyKind::Static
+    }
+
+    /// Does tier `name` run the skip-layer self-drafting backend swap?
+    /// Only `kind = "selfspec"` swaps anything; an empty tier list
+    /// means every tier.
+    pub fn selfspec_tier(&self, name: &str) -> bool {
+        if self.kind != PolicyKind::SelfSpec {
+            return false;
+        }
+        let list = self.selfspec_tiers.trim();
+        list.is_empty() || list.split(',').any(|t| t.trim() == name)
+    }
+
+    /// Construct the policy object for instance `instance` of a run
+    /// seeded `seed`.
+    pub fn build(&self, seed: u64, instance: usize) -> Box<dyn DraftPolicy> {
+        match self.kind {
+            PolicyKind::Static => Box::new(StaticSelector),
+            PolicyKind::Bandit => Box::new(BanditPolicy::new(self, seed, instance)),
+            PolicyKind::SelfSpec => Box::new(SelfSpecStrategy),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fitted_tsd(c1: f64, c2: f64) -> TsdPredictor {
+        let mut t = TsdPredictor::new(1, 1);
+        for s in 0..30 {
+            for d in 1..30 {
+                t.observe(s * 64, d, 0.003 + c1 * (s * 64) as f64 + c2 * d as f64);
+            }
+        }
+        t.refit();
+        t
+    }
+
+    fn tree(rng: &mut Rng, size: usize) -> CandidateTree {
+        let mut t = CandidateTree::new(0);
+        for _ in 1..size {
+            let parent = rng.below(t.len());
+            let o = 0.2 + 0.8 * rng.f32();
+            t.add_child(parent, rng.below(64) as i32, o);
+        }
+        for n in &mut t.nodes {
+            n.w = n.dl;
+        }
+        t
+    }
+
+    fn ctx(batch: usize, n_seq: usize, version: u64) -> PolicyCtx {
+        PolicyCtx { batch, n_seq, tier: 0, backlog: 0, model_version: version }
+    }
+
+    /// Drive `policy` once with a standard argument set; returns the
+    /// chosen budget.
+    fn drive(policy: &mut dyn DraftPolicy, c: &PolicyCtx, trees: &[&CandidateTree]) -> usize {
+        let cfg = SelectorConfig::default();
+        let mut tsd = fitted_tsd(1e-7, 5e-5);
+        let choice = policy.choose(
+            c,
+            SelectArgs { cfg: &cfg, tsd: &mut tsd, trees, n_seq: c.n_seq, max_n: 24 },
+        );
+        choice.n
+    }
+
+    #[test]
+    fn default_config_is_static_and_builds_static() {
+        let cfg = PolicyConfig::default();
+        assert!(cfg.is_static());
+        let mut p = cfg.build(7, 0);
+        assert_eq!(p.name(), "static");
+        assert_eq!(p.digest(), 0);
+        assert!(p.decision().is_none());
+        // Static delegates: same choice as calling the selector directly.
+        let mut rng = Rng::new(3);
+        let t = tree(&mut rng, 24);
+        let refs = [&t];
+        let sel_cfg = SelectorConfig::default();
+        let mut tsd_a = fitted_tsd(1e-7, 5e-5);
+        let mut tsd_b = fitted_tsd(1e-7, 5e-5);
+        let c = ctx(1, 256, 0);
+        let a = p.choose(
+            &c,
+            SelectArgs { cfg: &sel_cfg, tsd: &mut tsd_a, trees: &refs, n_seq: 256, max_n: 24 },
+        );
+        let b = selector::select_strategy(&sel_cfg, &mut tsd_b, &refs, 256, 24);
+        assert_eq!(a.n, b.n);
+        assert_eq!(a.predicted_al.to_bits(), b.predicted_al.to_bits());
+    }
+
+    #[test]
+    fn policy_section_parses_and_rejects() {
+        let mut cfg = PolicyConfig::default();
+        cfg.set("kind", "bandit").unwrap();
+        assert_eq!(cfg.kind, PolicyKind::Bandit);
+        cfg.set("kind", "selfspec").unwrap();
+        assert_eq!(cfg.kind, PolicyKind::SelfSpec);
+        cfg.set("kind", "static").unwrap();
+        assert!(cfg.is_static());
+        cfg.set("bandit_c", "0.9").unwrap();
+        assert_eq!(cfg.bandit_c, 0.9);
+        cfg.set("forget", "0.5").unwrap();
+        cfg.set("window", "64").unwrap();
+        cfg.set("self_draft_frac", "0.2").unwrap();
+        cfg.set("self_accept_penalty", "0.7").unwrap();
+        cfg.set("selfspec_tiers", "l40s, a100").unwrap();
+        assert!(cfg.set("kind", "sideways").is_err());
+        assert!(cfg.set("nope", "1").is_err());
+        assert!(cfg.set("bandit_c", "abc").is_err());
+    }
+
+    #[test]
+    fn selfspec_tier_filter() {
+        let mut cfg = PolicyConfig { kind: PolicyKind::SelfSpec, ..PolicyConfig::default() };
+        // Empty list: every tier swaps.
+        assert!(cfg.selfspec_tier("l40s"));
+        assert!(cfg.selfspec_tier("h100"));
+        cfg.selfspec_tiers = "l40s, a100".into();
+        assert!(cfg.selfspec_tier("l40s"));
+        assert!(cfg.selfspec_tier("a100"));
+        assert!(!cfg.selfspec_tier("h100"));
+        // Non-selfspec kinds never swap, whatever the list says.
+        cfg.kind = PolicyKind::Bandit;
+        assert!(!cfg.selfspec_tier("l40s"));
+    }
+
+    #[test]
+    fn bandit_replays_bit_identically() {
+        let cfg = PolicyConfig { kind: PolicyKind::Bandit, ..PolicyConfig::default() };
+        let run = || {
+            let mut p = BanditPolicy::new(&cfg, 42, 3);
+            let mut rng = Rng::new(9);
+            let trees: Vec<CandidateTree> = (0..4).map(|_| tree(&mut rng, 24)).collect();
+            let refs: Vec<&CandidateTree> = trees.iter().collect();
+            let mut ns = Vec::new();
+            for step in 0..200u64 {
+                let c = ctx(4, 1024, step / 80); // two version bumps
+                let n = drive(&mut p, &c, &refs);
+                ns.push(n);
+                p.feedback(&c, (n.min(6) * 2).max(1), 0.02);
+            }
+            (ns, p.digest())
+        };
+        let (ns_a, dig_a) = run();
+        let (ns_b, dig_b) = run();
+        assert_eq!(ns_a, ns_b);
+        assert_eq!(dig_a, dig_b);
+        // A different instance id gets an unrelated stream/state.
+        let mut other = BanditPolicy::new(&cfg, 42, 4);
+        let mut rng = Rng::new(9);
+        let t = tree(&mut rng, 24);
+        let c = ctx(4, 1024, 0);
+        drive(&mut other, &c, &[&t]);
+        assert_ne!(other.digest(), dig_a);
+    }
+
+    #[test]
+    fn bandit_converges_to_better_arm() {
+        // Reward n=8 heavily, everything else weakly: after warmup the
+        // bandit should pick the n=8 arm most of the time.
+        let cfg = PolicyConfig { kind: PolicyKind::Bandit, ..PolicyConfig::default() };
+        let mut p = BanditPolicy::new(&cfg, 1, 0);
+        let mut rng = Rng::new(5);
+        let trees: Vec<CandidateTree> = (0..4).map(|_| tree(&mut rng, 24)).collect();
+        let refs: Vec<&CandidateTree> = trees.iter().collect();
+        let c = ctx(4, 1024, 0);
+        let mut tail_hits = 0usize;
+        for step in 0..400 {
+            let n = drive(&mut p, &c, &refs);
+            let reward = if n == 8 { 400.0 } else { 50.0 };
+            p.feedback(&c, reward as usize, 1.0);
+            if step >= 300 && n == 8 {
+                tail_hits += 1;
+            }
+        }
+        assert!(tail_hits >= 80, "bandit stuck off the best arm: {tail_hits}/100");
+    }
+
+    #[test]
+    fn forgetting_reopens_exploration_after_barrier() {
+        let cfg = PolicyConfig { kind: PolicyKind::Bandit, forget: 0.0, ..PolicyConfig::default() };
+        let mut p = BanditPolicy::new(&cfg, 2, 0);
+        let mut rng = Rng::new(6);
+        let t = tree(&mut rng, 24);
+        let refs = [&t];
+        let c0 = ctx(1, 256, 0);
+        for _ in 0..40 {
+            let n = drive(&mut p, &c0, &refs);
+            p.feedback(&c0, n, 0.02);
+        }
+        assert!(p.total > 10.0);
+        // Version bump with forget = 0: statistics reset entirely, and
+        // the next decision is an exploration pull again.
+        let c1 = ctx(1, 256, 1);
+        drive(&mut p, &c1, &refs);
+        let d = p.decision().expect("bandit records decisions");
+        assert!(d.explore, "no re-exploration after barrier: {d:?}");
+        assert!(p.total <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn arms_respect_max_n() {
+        let cfg = PolicyConfig { kind: PolicyKind::Bandit, ..PolicyConfig::default() };
+        let mut p = BanditPolicy::new(&cfg, 3, 0);
+        let sel_cfg = SelectorConfig::default();
+        let mut rng = Rng::new(7);
+        let t = tree(&mut rng, 30);
+        let refs = [&t];
+        let c = ctx(1, 128, 0);
+        for _ in 0..60 {
+            let mut tsd = fitted_tsd(1e-7, 5e-5);
+            let choice = p.choose(
+                &c,
+                SelectArgs { cfg: &sel_cfg, tsd: &mut tsd, trees: &refs, n_seq: 128, max_n: 6 },
+            );
+            assert!(choice.n >= 1 && choice.n <= 6, "budget {} escaped max_n", choice.n);
+            p.feedback(&c, choice.n, 0.02);
+        }
+    }
+
+    #[test]
+    fn context_buckets_cover_and_separate() {
+        for (batch, n_seq) in [(1, 0), (1, 100_000), (64, 0), (128, 1 << 20), (7, 3000)] {
+            let b = context_bucket(&ctx(batch, n_seq, 0));
+            assert!(b < N_BUCKETS, "bucket {b} out of range");
+        }
+        assert_ne!(context_bucket(&ctx(1, 0, 0)), context_bucket(&ctx(64, 0, 0)));
+        assert_ne!(context_bucket(&ctx(8, 256, 0)), context_bucket(&ctx(8, 100_000, 0)));
+    }
+}

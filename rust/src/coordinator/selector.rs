@@ -13,6 +13,30 @@
 //! weight) and early-stops via the sugar-water inequality (Eq. 3): once
 //! `Δal/Δt_sd < al(n)/t_sd(n)` the objective can only fall, so after
 //! `patience` consecutive decreases the search terminates.
+//!
+//! **Pinned edge-case behavior** (guarded by the unit tests below —
+//! drafting policies above this search rely on every line of it):
+//!
+//! * **Empty `trees` slice**: `batch` clamps to 1, every Δal is 0, and
+//!   the search returns `n = 1` with `predicted_al = 0.0` — never a
+//!   panic, never NaN.
+//! * **`max_n == 0`**: silently clamped to 1; the search always
+//!   evaluates at least `n = 1` and `1 ≤ choice.n ≤ max(max_n, 1)`.
+//! * **`patience = 0`**: legal — the search stops after the *second*
+//!   consecutive decrease (`decreases > patience` with the counter
+//!   incremented first), having still evaluated every n up to that
+//!   point; the returned choice is unaffected on unimodal objectives.
+//! * **NaN-poisoned `TsdPredictor`** (NaN observations → NaN
+//!   regression coefficients): `TsdPredictor::eval` ends in
+//!   `.max(1e-6)`, and IEEE `max` discards a NaN operand — so every
+//!   prediction clamps to the 1e-6 floor, the search sees a flat
+//!   (minimal) step time and returns the largest-`al` budget with
+//!   finite objectives. Callers never see a NaN budget, prediction or
+//!   objective, and nothing panics (the normal-equations solver treats
+//!   NaN pivots as non-candidates). Were an objective ever NaN anyway,
+//!   the `obj > best_obj` comparison is false for NaN, so the finite
+//!   `{n: 1, predicted_al: 0.0, predicted_tsd: 1.0}` default would come
+//!   back — NaN cannot escape this module either way.
 
 use crate::config::SelectorConfig;
 use crate::spec::tree::CandidateTree;
@@ -237,5 +261,74 @@ mod tests {
         let cfg = SelectorConfig::default();
         let c = select_strategy(&cfg, &mut tsd, &[&tree], 0, 16);
         assert_eq!(c.n, 1);
+    }
+
+    #[test]
+    fn empty_trees_slice_returns_default() {
+        // An idle-batch call must not panic: batch clamps to 1, al stays
+        // 0, and the n=1 default comes back with finite predictions.
+        let mut tsd = fitted_tsd(1e-7, 5e-5);
+        let cfg = SelectorConfig::default();
+        let c = select_strategy(&cfg, &mut tsd, &[], 0, 16);
+        assert_eq!(c.n, 1);
+        assert_eq!(c.predicted_al, 0.0);
+        assert!(c.predicted_tsd.is_finite());
+        assert!(c.evaluated >= 1);
+    }
+
+    #[test]
+    fn max_n_zero_is_clamped_to_one() {
+        let mut rng = Rng::new(5);
+        let tree = random_tree(&mut rng, 16);
+        let mut tsd = fitted_tsd(1e-7, 5e-5);
+        let cfg = SelectorConfig::default();
+        let c = select_strategy(&cfg, &mut tsd, &[&tree], 128, 0);
+        assert_eq!(c.n, 1, "max_n = 0 must clamp to a single-token budget");
+        assert_eq!(c.evaluated, 1);
+        assert!(c.predicted_al > 0.0);
+    }
+
+    #[test]
+    fn zero_patience_still_finds_unimodal_optimum() {
+        // patience = 0 stops after the second consecutive decrease; on
+        // the unimodal Eq-2 objective that cannot skip the argmax.
+        let mut rng = Rng::new(6);
+        let tree = random_tree(&mut rng, 32);
+        let cfg0 = SelectorConfig { patience: 0, ..Default::default() };
+        let mut tsd_a = fitted_tsd(1e-7, 2e-4);
+        let a = select_strategy(&cfg0, &mut tsd_a, &[&tree], 512, 32);
+        let mut tsd_b = fitted_tsd(1e-7, 2e-4);
+        let b = select_exhaustive(&mut tsd_b, &[&tree], 512, 32);
+        assert_eq!(a.n, b.n, "patience=0 missed the optimum");
+        assert!(a.evaluated <= 32);
+    }
+
+    #[test]
+    fn nan_predictor_yields_finite_choice() {
+        // NaN observations poison the regression coefficients, but
+        // eval's `.max(1e-6)` floor discards the NaN (IEEE max), so the
+        // search sees a flat minimal step time, never panics, and
+        // returns the largest-al budget with finite predictions.
+        let mut tsd = TsdPredictor::new(1, 1);
+        for s in 0..10 {
+            for d in 1..10 {
+                tsd.observe(s * 64, d, f64::NAN);
+            }
+        }
+        tsd.refit();
+        assert!(tsd.coefficients().iter().all(|c| c.is_nan()));
+        assert_eq!(tsd.predict_exact(256, 8), 1e-6, "floor must absorb the NaN");
+        let mut rng = Rng::new(7);
+        let tree = random_tree(&mut rng, 16);
+        let cfg = SelectorConfig::default();
+        let c = select_strategy(&cfg, &mut tsd, &[&tree], 256, 16);
+        assert!(c.n >= 1 && c.n <= 16);
+        assert!(!c.predicted_al.is_nan());
+        assert!(c.predicted_tsd == 1e-6 && !c.predicted_tsd.is_nan());
+        // Flat t_sd ⇒ the objective grows with al ⇒ the full budget wins.
+        assert_eq!(c.n, 16);
+        let o = select_exhaustive(&mut tsd, &[&tree], 256, 16);
+        assert_eq!(o.n, c.n);
+        assert!(!o.predicted_tsd.is_nan());
     }
 }

@@ -48,6 +48,25 @@ impl AcceptanceModel {
         AcceptanceModel { gamma: 0.40, top1: 0.72, decay: 0.28, noise: 0.08, scale: 1.0 }
     }
 
+    /// Skip-layer **self-draft** profile of `base`
+    /// (`[policy] kind = "selfspec"`): the truncated target proposes
+    /// its own continuations, so draft *confidence* drops (`top1` is
+    /// multiplied by `penalty`) and the acceptance curve steepens
+    /// (`gamma / penalty` > γ bends the curve back toward the
+    /// diagonal — a skip-layer head is *not* better than its own
+    /// confidence suggests the way a distilled SSM is). Decay, noise
+    /// and the staleness scale are untouched, so the RLHF barrier
+    /// machinery composes unchanged. `penalty` is clamped to a sane
+    /// (0, 1] band; non-finite input falls back to 0.85.
+    pub fn self_draft(base: AcceptanceModel, penalty: f64) -> Self {
+        let penalty = if penalty.is_finite() { penalty.clamp(0.3, 1.0) } else { 0.85 };
+        AcceptanceModel {
+            gamma: (base.gamma / penalty).min(1.0),
+            top1: (base.top1 * penalty).clamp(0.01, 0.98),
+            ..base
+        }
+    }
+
     /// Look up a dataset's acceptance model by id.
     pub fn by_name(name: &str) -> Self {
         match name {
@@ -260,6 +279,35 @@ mod tests {
         assert!(wild.p_accept(0.9) <= 1.0);
         let dead = AcceptanceModel { scale: 0.0, ..AcceptanceModel::lmsys() };
         assert_eq!(dead.p_accept(0.9), 0.0);
+    }
+
+    #[test]
+    fn self_draft_is_strictly_weaker() {
+        let base = AcceptanceModel::lmsys();
+        let sd = AcceptanceModel::self_draft(base, 0.85);
+        // Steeper curve: lower acceptance at every interior logit.
+        for i in 1..20 {
+            let dl = i as f32 / 20.0;
+            assert!(
+                sd.p_accept(dl) < base.p_accept(dl),
+                "self-draft not weaker at dl={dl}"
+            );
+        }
+        // Lower draft confidence for every child rank (noise off).
+        let quiet = AcceptanceModel { noise: 0.0, ..base };
+        let quiet_sd = AcceptanceModel { noise: 0.0, ..sd };
+        let mut ra = Rng::new(11);
+        let mut rb = Rng::new(11);
+        for rank in 0..4 {
+            assert!(quiet_sd.child_o(rank, &mut rb) < quiet.child_o(rank, &mut ra));
+        }
+        // Staleness machinery untouched; degenerate penalties clamped.
+        assert_eq!(sd.scale, base.scale);
+        assert_eq!(sd.decay, base.decay);
+        assert!(AcceptanceModel::self_draft(base, 1.0).gamma <= 1.0);
+        let wild = AcceptanceModel::self_draft(base, f64::NAN);
+        assert!(wild.gamma.is_finite() && wild.top1 > 0.0);
+        assert!(AcceptanceModel::self_draft(base, 0.0).top1 > 0.0);
     }
 
     #[test]

@@ -102,6 +102,7 @@ use crate::coordinator::core::{
 use crate::coordinator::federation::{plan_federation, ShardDigest};
 use crate::coordinator::metrics::{LatencySummary, ProtocolCounters};
 use crate::coordinator::migration::AllocRequest;
+use crate::coordinator::policy::PolicyConfig;
 use crate::coordinator::reallocator::{plan_summary, MigrationOrder, Reallocator};
 use crate::coordinator::transport::{MsgClass, PerfectTransport, Transport, TransportConfig};
 use crate::data::arrivals::ArrivalProcess;
@@ -274,6 +275,13 @@ pub struct ClusterConfig {
     /// and ad-hoc runs can record Perfetto timelines without config
     /// plumbing; see [`crate::sim::trace`].
     pub trace: TraceConfig,
+    /// The drafting control plane (`[policy]`). `kind = "static"` (the
+    /// default) delegates every adaptive decision to the §5 selector
+    /// and is bit-inert on every golden preset; `"bandit"` installs the
+    /// per-instance contextual-UCB learner; `"selfspec"` additionally
+    /// swaps the configured tiers onto the skip-layer self-drafting
+    /// cost/acceptance models (see [`crate::coordinator::policy`]).
+    pub policy: PolicyConfig,
 }
 
 impl Default for ClusterConfig {
@@ -303,6 +311,7 @@ impl Default for ClusterConfig {
             shard_link_bandwidth_factor: 4.0,
             rlhf_loop: RlhfLoopConfig::default(),
             trace: crate::sim::trace::default_trace_config(),
+            policy: PolicyConfig::default(),
         }
     }
 }
@@ -974,13 +983,27 @@ impl SimCluster {
             if let Some(mb) = tier.max_batch {
                 params.max_batch = mb;
             }
+            // Self-speculative tiers swap cost + acceptance *before*
+            // construction so offline profiling and the online
+            // predictors see the skip-layer drafting process from the
+            // first round. Other policy kinds leave both untouched.
+            let (cost, accept) = if cfg.policy.selfspec_tier(&tier.name) {
+                (
+                    CostModel::self_spec(&tier.cost, cfg.policy.self_draft_frac),
+                    AcceptanceModel::self_draft(accept, cfg.policy.self_accept_penalty),
+                )
+            } else {
+                (tier.cost.clone(), accept)
+            };
             let mut inst = SimInstance::new(
                 i,
                 params,
-                tier.cost.clone(),
+                cost,
                 accept,
                 cfg.seed ^ ((i as u64 + 1) * 0x9E37),
             );
+            inst.tier = tier_of[i];
+            inst.policy = cfg.policy.build(cfg.seed, i);
             inst.profile_offline();
             inst
         };
@@ -1607,6 +1630,13 @@ impl SimCluster {
         // observation, no scheduling effect.
         if let Some(tr) = self.tracer.as_mut() {
             tr.on_round(i, at, &self.instances[i]);
+            // Learned-policy decisions are buffered on the instance and
+            // drained only here: with tracing off (or under the static
+            // policy, which buffers nothing) this is dead state outside
+            // every signature, so the hot path stays bit-inert.
+            if let Some(d) = self.instances[i].last_decision.take() {
+                tr.on_policy_decision(i, at, &d);
+            }
             if finished_delta > 0 {
                 let fin = &self.instances[i].finished;
                 for s in &fin[fin.len() - finished_delta as usize..] {
@@ -3035,9 +3065,12 @@ impl SimCluster {
         }
         // The barrier invalidates drafter state fleet-wide: every
         // instance's acceptance scale moves in lockstep, and a refresh
-        // stalls every live clock for the re-distillation window.
+        // stalls every live clock for the re-distillation window. The
+        // version sync is what triggers learned-policy forgetting (a
+        // plain field write: bit-inert for the static policy).
         for (i, inst) in self.instances.iter_mut().enumerate() {
             inst.backend.accept_model.scale = scale;
+            inst.model_version = version;
             if refresh_downtime > 0.0 && self.alive[i] {
                 inst.backend.clock = inst.backend.clock.max(now) + refresh_downtime;
             }

@@ -107,6 +107,25 @@ impl CostModel {
         }
     }
 
+    /// Skip-layer **self-speculative** variant of `base`
+    /// (`[policy] kind = "selfspec"`): no separate draft model — each
+    /// draft tree level runs the *target* with `frac` of its layers, so
+    /// the draft launch floor disappears (`draft_base = 0`: it is the
+    /// same resident executable, no SSM dispatch) and the per-level
+    /// cost becomes `frac × verify_base`. Verify, AR, link and KV
+    /// parameters are untouched, so `min_round_secs()` stays positive
+    /// (`verify_base > 0`) and the parallel engine's lookahead horizon
+    /// remains valid. `frac` is clamped to a sane (0, 1] band;
+    /// non-finite input falls back to 0.35.
+    pub fn self_spec(base: &CostModel, frac: f64) -> Self {
+        let frac = if frac.is_finite() { frac.clamp(0.05, 1.0) } else { 0.35 };
+        CostModel {
+            draft_base: 0.0,
+            draft_per_level: base.verify_base * frac,
+            ..base.clone()
+        }
+    }
+
     /// Named preset lookup for mixed-fleet configs (`FleetTier`).
     pub fn by_name(name: &str) -> Option<Self> {
         match name {
@@ -358,6 +377,30 @@ mod tests {
             assert!(m.t_spec_round(0, 0, 0) >= floor);
             assert!(m.t_prefill(0) + m.t_ar_step(0, 0) >= floor);
         }
+    }
+
+    #[test]
+    fn self_spec_scales_draft_cost_only() {
+        let base = CostModel::l40s_llama8b();
+        let s35 = CostModel::self_spec(&base, 0.35);
+        let s70 = CostModel::self_spec(&base, 0.70);
+        // Draft: no launch floor, per-level cost ∝ frac × verify_base.
+        assert_eq!(s35.draft_base, 0.0);
+        assert_eq!(s35.draft_per_level, base.verify_base * 0.35);
+        assert!(s70.t_draft(5) > s35.t_draft(5) * 1.9);
+        // Verify/AR paths are bit-identical to the base tier.
+        assert_eq!(
+            s35.t_verify(24_000, 192).to_bits(),
+            base.t_verify(24_000, 192).to_bits()
+        );
+        assert_eq!(s35.t_ar_step(1000, 8).to_bits(), base.t_ar_step(1000, 8).to_bits());
+        // The engine's lookahead floor stays positive and consistent.
+        assert!(s35.min_round_secs() > 0.0);
+        assert!(s35.t_spec_round(0, 0, 0) >= s35.min_round_secs());
+        // Degenerate fracs are clamped / defaulted, never zero or NaN.
+        assert!(CostModel::self_spec(&base, 0.0).draft_per_level > 0.0);
+        assert!(CostModel::self_spec(&base, f64::NAN).draft_per_level > 0.0);
+        assert!(CostModel::self_spec(&base, 9.0).draft_per_level <= base.verify_base);
     }
 
     #[test]

@@ -38,6 +38,7 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+use crate::coordinator::policy::PolicyDecision;
 use crate::sim::engine::{SimInstance, SimSample};
 
 /// `[trace]` config section: the observability plane's switch and
@@ -632,6 +633,32 @@ impl ClusterTrace {
             t0,
             t1,
             &[("tokens", ArgVal::U(tokens)), ("batch", ArgVal::U(batch))],
+        );
+    }
+
+    /// Instance `i`'s learned drafting policy made a decision at `t`:
+    /// emit a per-instance instant carrying the chosen arm, budget and
+    /// posterior summary. Only non-static policies buffer decisions, so
+    /// traced `kind = "static"` runs keep the pre-policy trace schema.
+    pub fn on_policy_decision(&mut self, i: usize, t: f64, d: &PolicyDecision) {
+        self.metrics.inc("policy/decisions", 1);
+        if d.arm == 0 {
+            self.metrics.inc("policy/delegated", 1);
+        }
+        if d.explore {
+            self.metrics.inc("policy/explored", 1);
+        }
+        self.metrics.observe("policy/n", d.n as f64);
+        self.sink.instant(
+            Track::Instance(i),
+            "policy",
+            t,
+            &[
+                ("arm", ArgVal::U(d.arm as u64)),
+                ("n", ArgVal::U(d.n as u64)),
+                ("bucket", ArgVal::U(d.bucket as u64)),
+                ("mean", ArgVal::F(d.mean)),
+            ],
         );
     }
 

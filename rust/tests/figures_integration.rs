@@ -337,6 +337,39 @@ fn loop_figure_sweeps_every_quadrant() {
 }
 
 #[test]
+fn policy_figure_compares_learned_and_static_across_the_shift() {
+    // Both control planes must render a full row (all 288 offered
+    // samples complete — pending_bound 1024 cannot refuse), the
+    // post-shift throughput ratio line must parse, and the learned
+    // plane must hold at least ~parity with the static selector after
+    // the arrival burst + acceptance-decay barriers (the conservative
+    // floor of the ISSUE's "bandit >= static post-shift" claim).
+    let s = figures::fig_policy(SEED);
+    for label in ["static", "bandit"] {
+        let row = s
+            .lines()
+            .find(|l| l.starts_with(label))
+            .unwrap_or_else(|| panic!("missing {label} row:\n{s}"));
+        let cols: Vec<f64> = row
+            .split_whitespace()
+            .skip(1)
+            .map(|t| t.trim_end_matches('s').parse::<f64>().unwrap_or(f64::NAN))
+            .collect();
+        assert_eq!(cols.len(), 6, "bad row {row:?}");
+        let (done, makespan, post, barriers) = (cols[0], cols[1], cols[3], cols[4]);
+        assert_eq!(done, 288.0, "row {row:?}");
+        assert!(makespan > 0.0 && post > 0.0, "row {row:?}");
+        assert_eq!(barriers, 3.0, "acceptance-decay barriers must run in row {row:?}");
+    }
+    let ratio = num_after(&s, "learned/static post-shift throughput:");
+    assert!(
+        ratio >= 0.9,
+        "bandit fell to {ratio}x of the static selector post-shift:\n{s}"
+    );
+    assert!(!s.contains("NaN"), "{s}");
+}
+
+#[test]
 fn all_figures_render() {
     for id in figures::ALL_FIGURES {
         let out = figures::run_figure(id, SEED).unwrap();

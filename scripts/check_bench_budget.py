@@ -46,12 +46,21 @@ replaced) by at least the floor (scan mean_ns / p2c mean_ns >= floor).
 Absent rows are reported, not failed, so the gate binds from the first
 regeneration that carries them.
 
+With `--max-policy-overhead`, also gates the drafting control plane:
+the `core/policy/bandit` row (one contextual-bandit choose + feedback
+cycle) must stay within the given percentage of the
+`core/policy/modeled-step` row (the decode step each decision
+amortizes against); the `core/policy/static` row is reported for
+context. Like the trace gate, absent rows are *malformed* (exit 2) —
+the flag is only passed by CI legs that just regenerated the bench.
+
 Usage: check_bench_budget.py [BENCH_core.json] [--budget-pct 1.0]
                              [--baseline BENCH_baseline.json]
                              [--regress-factor 3.0]
                              [--min-parallel-speedup 4.0]
                              [--min-admission-speedup 10.0]
                              [--max-trace-overhead 5.0]
+                             [--max-policy-overhead 2.0]
 
 Exit codes: 0 = within budget, 1 = over budget/regressed, 2 = malformed
 input (missing rows count as malformed — a silently skipped gate is
@@ -183,6 +192,33 @@ def check_trace_overhead(by_name, max_pct):
     return [], False
 
 
+def check_policy_overhead(by_name, max_pct):
+    """Gate the drafting control plane: the `core/policy/bandit`
+    decision (choose + feedback) must stay within `max_pct` percent of
+    the `core/policy/modeled-step` row it amortizes against. The static
+    row is reported alongside for context. Returns (failures,
+    malformed)."""
+    step_ns = by_name.get("core/policy/modeled-step")
+    bandit_ns = by_name.get("core/policy/bandit")
+    static_ns = by_name.get("core/policy/static")
+    if step_ns is None or bandit_ns is None or static_ns is None \
+            or step_ns <= 0:
+        print("error: core/policy/{static,bandit,modeled-step} rows absent "
+              "or unusable — the policy-overhead gate was requested but the "
+              "bench carries no policy rows", file=sys.stderr)
+        return [], True
+    pct = 100.0 * bandit_ns / step_ns
+    static_pct = 100.0 * static_ns / step_ns
+    verdict = f"OK (ceiling {max_pct}%)" if pct <= max_pct \
+        else f"OVER CEILING {max_pct}%"
+    print(f"core/policy: static {static_ns / 1e3:.2f}µs "
+          f"({static_pct:.3f}%), bandit {bandit_ns / 1e3:.2f}µs of a "
+          f"{step_ns / 1e6:.1f}ms modeled step = {pct:.3f}% — {verdict}")
+    if pct > max_pct:
+        return [f"core/policy/bandit ({pct:.3f}% > {max_pct}%)"], False
+    return [], False
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("path", nargs="?", default="BENCH_core.json")
@@ -204,6 +240,10 @@ def main() -> int:
                     help="fail when core/trace/on exceeds core/trace/off by "
                          "more than this percentage (absent rows are "
                          "malformed input, exit 2)")
+    ap.add_argument("--max-policy-overhead", type=float, default=None,
+                    help="fail when the core/policy/bandit decision exceeds "
+                         "this percentage of core/policy/modeled-step "
+                         "(absent rows are malformed input, exit 2)")
     args = ap.parse_args()
 
     by_name = load_rows(args.path)
@@ -274,6 +314,13 @@ def main() -> int:
         if malformed:
             return 2
         failures.extend(trace_failures)
+
+    if args.max_policy_overhead is not None:
+        policy_failures, malformed = check_policy_overhead(
+            by_name, args.max_policy_overhead)
+        if malformed:
+            return 2
+        failures.extend(policy_failures)
 
     if failures:
         print(f"FAIL: {len(failures)} row(s) over the "
